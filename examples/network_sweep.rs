@@ -1,0 +1,50 @@
+//! Network sweep: architecture exploration through the config system.
+//!
+//! ```sh
+//! cargo run --release --example network_sweep
+//! ```
+//!
+//! The §3.3 case study in miniature: sweep the wide on-chip network data
+//! width via *config-file overrides* (no recompilation of the platform) and
+//! watch DMA, compute, and total cycles respond — including the paper's
+//! counter-intuitive result that a wider network can make the application
+//! slower when the TCDM interconnect is not co-designed. Also demonstrates
+//! multi-cluster (Cyclone-style) and 1..16-core cluster scaling.
+
+use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::config::{self, parse};
+use herov2::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 3;
+    let w = workloads::darknet::build(96); // 2D-tiled: sensitive to the sweep
+    println!("darknet N=96, handwritten 2D tiling, 8 threads\n");
+    println!("{:<28} {:>10} {:>10} {:>10}", "config", "dma (cy)", "comp (cy)", "total");
+    for width in [32u32, 64, 128] {
+        let cfg = parse::parse_str(&format!(
+            "preset = aurora\nnoc.dma_width_bits = {width}\n"
+        ))
+        .map_err(anyhow::Error::msg)?;
+        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 10_000_000_000)?;
+        verify(&w, &out, seed)?;
+        println!(
+            "{:<28} {:>10} {:>10} {:>10}",
+            format!("aurora / {width}-bit NoC"),
+            out.dma_cycles(),
+            out.compute_cycles(),
+            out.cycles()
+        );
+    }
+
+    println!("\ncluster scaling (gemm N=64, handwritten):");
+    for cores in [1usize, 2, 4, 8, 16] {
+        let mut cfg = config::aurora();
+        cfg.accel.cores_per_cluster = cores;
+        let w = workloads::gemm::build(64);
+        let out =
+            run_workload(&cfg, &w, Variant::Handwritten, cores as u32, seed, 10_000_000_000)?;
+        verify(&w, &out, seed)?;
+        println!("  {cores:>2} cores: {:>9} cycles", out.cycles());
+    }
+    Ok(())
+}

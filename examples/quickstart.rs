@@ -1,0 +1,53 @@
+//! Quickstart: offload one kernel through the full HEROv2 stack.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole platform once: build the Aurora configuration, compile
+//! the gemm OpenMP kernel with the heterogeneous compiler, allocate shared
+//! buffers in the host process, offload, and verify the simulated
+//! accelerator's numerics against (a) the host golden model and (b) the
+//! AOT-compiled JAX/Pallas artifact executed via PJRT.
+
+use herov2::bench_harness::{run_workload, verify, verify_pjrt, Variant};
+use herov2::config::aurora;
+use herov2::runtime::pjrt::PjrtRuntime;
+use herov2::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = aurora();
+    println!("platform: {} ({} x {} cores, {} KiB L1 TCDM, {} MHz)",
+        cfg.name,
+        cfg.accel.n_clusters,
+        cfg.accel.cores_per_cluster,
+        cfg.accel.l1_bytes / 1024,
+        cfg.accel.freq_mhz);
+
+    let w = workloads::gemm::build(128); // matches the gemm_128 AOT artifact
+    println!("kernel: {} N={} ({} map-clause arrays)", w.name, w.size, w.arrays.len());
+
+    let seed = 1;
+    for variant in [Variant::Unmodified, Variant::AutoDma, Variant::Handwritten] {
+        let out = run_workload(&cfg, &w, variant, 8, seed, 10_000_000_000)?;
+        verify(&w, &out, seed)?;
+        println!(
+            "{:<12}: {:>9} device cycles ({:>6.2} ms wall at {} MHz), numerics OK",
+            variant.label(),
+            out.cycles(),
+            out.cycles() as f64 / (cfg.accel.freq_mhz as f64 * 1e3),
+            cfg.accel.freq_mhz
+        );
+    }
+
+    // Three-layer check: simulated RV32 accelerator vs XLA-executed HLO.
+    let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 10_000_000_000)?;
+    match PjrtRuntime::new(PjrtRuntime::default_dir()) {
+        Ok(mut rt) => match verify_pjrt(&mut rt, &w, &out, seed)? {
+            true => println!("PJRT (JAX/Pallas artifact {}) check: OK", w.pjrt.name),
+            false => println!("PJRT artifact not built — run `make artifacts` first"),
+        },
+        Err(e) => println!("PJRT unavailable in this environment: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,85 @@
+"""AOT compilation: lower every Layer-2 kernel graph to HLO text.
+
+HLO *text* — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--tiny-only]
+
+Python runs exactly once, here; the Rust binary only ever touches the
+emitted `artifacts/*.hlo.txt`.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(name, fn, shapes, out_dir):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}: {len(text)} chars -> {path}")
+    return path
+
+
+def smoke_fn(x, y):
+    # The round-trip smoke artifact checked by the Rust test suite.
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+# Tiny problem sizes matching rust/src/workloads/mod.rs::all_tiny().
+TINY_SIZES = {
+    "gemm": 12,
+    "mm2": 12,
+    "mm3": 10,
+    "atax": 24,
+    "bicg": 24,
+    "conv2d": 18,
+    "covar": 12,
+    "darknet": 14,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiny-only", action="store_true",
+                    help="emit only the tiny test-size artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    emit("smoke_matmul2", smoke_fn, [(2, 2), (2, 2)], args.out_dir)
+    sets = [model.artifacts(TINY_SIZES)]
+    if not args.tiny_only:
+        sets.insert(0, model.artifacts())
+    for arts in sets:
+        for name, (fn, shapes) in arts.items():
+            emit(name, fn, shapes, args.out_dir)
+    # Stamp completeness so `make` can skip rebuilds.
+    with open(os.path.join(args.out_dir, ".complete"), "w") as f:
+        f.write("ok\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

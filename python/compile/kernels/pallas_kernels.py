@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernels.
+
+The paper's accelerator is an SPM-based PULP cluster — architecturally much
+closer to a TPU than to a GPU: the TCDM is a software-managed scratchpad
+(VMEM), the cluster DMA engine overlaps HBM<->SPM transfers with compute
+(Pallas's implicit grid pipelining), and the FPU MAC path is the compute
+primitive (MXU). The kernels below therefore express the paper's tiling
+directly as `BlockSpec`s:
+
+* the matmul kernel tiles (M, N, K) into VMEM-resident blocks and
+  accumulates over the K grid dimension — the Pallas analogue of the
+  handwritten strip/2D tiling (tile side `S = floor((L/N)^(1/D))`, §3.1);
+* the stencil kernel processes row blocks with a halo, like the
+  handwritten conv2d strips;
+* matvec kernels (atax/bicg) tile the row dimension.
+
+All kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is both the correctness path and
+what the AOT artifacts embed (see /opt/xla-example/README.md). Real-TPU
+performance is *estimated* from the block shapes in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (block sides must tile evenly)."""
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# --- tiled matmul: out = alpha * x @ y (+ beta * c) -------------------------
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, alpha, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += alpha * jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x, y, alpha=1.0, bm=32, bn=32, bk=32):
+    """alpha * x @ y with (bm, bn, bk) VMEM blocks."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, alpha=alpha, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def gemm(a, b, c, alpha, beta):
+    """C' = beta*C + alpha*A@B — Layer-2 entry calling the Layer-1 kernel."""
+    return beta * c + matmul(a, b, alpha=alpha)
+
+
+# --- tiled matvec: out = x @ v ----------------------------------------------
+
+
+def _matvec_kernel(x_ref, v_ref, o_ref):
+    o_ref[...] = x_ref[...] @ v_ref[...]
+
+
+def matvec(x, v, bm=64):
+    """x @ v with row blocks (the handwritten atax/bicg strip tiling)."""
+    m, n = x.shape
+    bm = _block(m, bm)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x, v)
+
+
+# --- 3x3 stencil over row strips ---------------------------------------------
+
+
+def _conv2d_kernel(a_ref, o_ref, *, taps, br, m):
+    # The whole image stays visible; each grid step computes one `br`-row
+    # strip, reading its strip + 2-row halo — the Pallas analogue of the
+    # handwritten HERO strip (the strip, not the image, would live in VMEM
+    # on a real TPU via a halo-aware BlockSpec).
+    i = pl.program_id(0)
+    a = a_ref[...]
+    acc = jnp.zeros((br, m), dtype=jnp.float32)
+    for k in range(3):
+        for l in range(3):
+            win = jax.lax.dynamic_slice(a, (i * br + k, l), (br, m))
+            acc = acc + taps[k][l] * win
+    o_ref[...] = acc
+
+
+def conv2d(a, taps, br=32):
+    """Valid 3x3 stencil; row strips of `br` output rows with 2-row halo,
+    exactly like the handwritten HERO strips (workloads/conv2d.rs)."""
+    n = a.shape[0]
+    m = n - 2
+    br = _block(m, br)
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, taps=taps, br=br, m=m),
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=True,
+    )(a)

@@ -1,0 +1,69 @@
+"""Pure-jnp reference implementations of the Table 2 kernels.
+
+This is the correctness oracle for the Pallas kernels (Layer 1): pytest
+checks every Pallas kernel against these with `assert_allclose`, and the
+AOT artifacts (Layer 2) are built from functions that call the Pallas
+kernels, so the whole chain is anchored here.
+
+Float parameters (alpha/beta) are baked into the artifacts as compile-time
+constants, mirroring the Rust workloads' `fargs` (see
+rust/src/workloads/*.rs).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm(a, b, c, alpha, beta):
+    """C = beta*C + alpha*A@B."""
+    return beta * c + alpha * (a @ b)
+
+
+def mm2(a, b, alpha):
+    """2mm (Table 2): C = alpha*A@B."""
+    return alpha * (a @ b)
+
+
+def mm3(a, b, c, d, alpha):
+    """3mm: E = alpha*A@B; F = alpha*C@D; G = alpha*E@F."""
+    e = alpha * (a @ b)
+    f = alpha * (c @ d)
+    g = alpha * (e @ f)
+    return e, f, g
+
+
+def atax(a, x):
+    """B = A@x; Y_i = sum_j A[j,i] * B[j] (A^T @ B)."""
+    b = a @ x
+    y = a.T @ b
+    return b, y
+
+
+def bicg(a, p, r):
+    """Q = A@p; S_j = sum_i R_i A[i,j]."""
+    q = a @ p
+    s = r @ a
+    return q, s
+
+
+def conv2d(a, taps):
+    """3x3 stencil over the valid region: B[i,j] = sum c[k,l] A[i+k,j+l]."""
+    n = a.shape[0]
+    m = n - 2
+    out = jnp.zeros((m, m), dtype=a.dtype)
+    for k in range(3):
+        for l in range(3):
+            out = out + taps[k][l] * a[k:k + m, l:l + m]
+    return out
+
+
+def covar(d, alpha):
+    """E_j = alpha*sum_i D[i,j]; D -= E; S = D^T @ D (full square)."""
+    e = alpha * jnp.sum(d, axis=0)
+    d2 = d - e[None, :]
+    s = d2.T @ d2
+    return d2, e, s
+
+
+def darknet(a, b, alpha):
+    """One darknet conv layer as matmul: C = alpha*A@B."""
+    return alpha * (a @ b)

@@ -1,0 +1,105 @@
+"""Layer 2: the kernel compute graphs, one per AOT artifact.
+
+Each entry of `ARTIFACTS` is a jax function (calling the Layer-1 Pallas
+kernels) plus its input shapes. Float parameters are baked as compile-time
+constants matching the Rust workloads' `fargs`
+(rust/src/workloads/*.rs::build) — the artifact names encode the problem
+size, e.g. `gemm_128`.
+
+Everything here runs only at build time (`make artifacts`); the Rust
+runtime loads the lowered HLO text via PJRT.
+"""
+
+from .kernels import pallas_kernels as pk
+from .kernels import ref
+
+# Tap constants must match rust/src/workloads/conv2d.rs::TAPS.
+TAPS = ((0.2, 0.5, -0.8), (-0.3, 0.6, -0.9), (0.4, 0.7, 0.10))
+
+# fargs must match the Rust workload registry.
+GEMM_ALPHA, GEMM_BETA = 1.5, 1.2
+MM2_ALPHA = 1.5
+MM3_ALPHA = 1.25
+DARKNET_ALPHA = 1.0
+
+
+def gemm_fn(a, b, c):
+    return (pk.gemm(a, b, c, GEMM_ALPHA, GEMM_BETA),)
+
+
+def mm2_fn(a, b):
+    return (pk.matmul(a, b, alpha=MM2_ALPHA),)
+
+
+def mm3_fn(a, b, c, d):
+    e = pk.matmul(a, b, alpha=MM3_ALPHA)
+    f = pk.matmul(c, d, alpha=MM3_ALPHA)
+    g = pk.matmul(e, f, alpha=MM3_ALPHA)
+    return (e, f, g)
+
+
+def atax_fn(a, x):
+    b = pk.matvec(a, x)
+    y = pk.matvec(a.T, b)
+    return (b, y)
+
+
+def bicg_fn(a, p, r):
+    q = pk.matvec(a, p)
+    s = pk.matvec(a.T, r)
+    return (q, s)
+
+
+def conv2d_fn(a):
+    return (pk.conv2d(a, TAPS),)
+
+
+def covar_fn(d):
+    n = d.shape[0]
+    alpha = 1.0 / n
+    d2, e, s = ref.covar(d, alpha)  # mean/subtract in jnp...
+    # ...but the O(N^3) hot spot goes through the Pallas matmul.
+    s = pk.matmul(d2.T, d2, alpha=1.0)
+    return (d2, e, s)
+
+
+def darknet_fn(a, b):
+    return (pk.matmul(a, b, alpha=DARKNET_ALPHA),)
+
+
+def _sq(n):
+    return (n, n)
+
+
+def artifacts(sizes=None):
+    """name -> (fn, [input shapes]). `sizes` maps workload name -> N."""
+    sz = {
+        "gemm": 128,
+        "mm2": 128,
+        "mm3": 96,
+        "atax": 512,
+        "bicg": 512,
+        "conv2d": 256,
+        "covar": 128,
+        "darknet": 192,
+    }
+    if sizes:
+        sz.update(sizes)
+    out = {}
+    n = sz["gemm"]
+    out[f"gemm_{n}"] = (gemm_fn, [_sq(n), _sq(n), _sq(n)])
+    n = sz["mm2"]
+    out[f"mm2_{n}"] = (mm2_fn, [_sq(n), _sq(n)])
+    n = sz["mm3"]
+    out[f"mm3_{n}"] = (mm3_fn, [_sq(n)] * 4)
+    n = sz["atax"]
+    out[f"atax_{n}"] = (atax_fn, [_sq(n), (n,)])
+    n = sz["bicg"]
+    out[f"bicg_{n}"] = (bicg_fn, [_sq(n), (n,), (n,)])
+    n = sz["conv2d"]
+    out[f"conv2d_{n}"] = (conv2d_fn, [_sq(n)])
+    n = sz["covar"]
+    out[f"covar_{n}"] = (covar_fn, [_sq(n)])
+    n = sz["darknet"]
+    out[f"darknet_{n}"] = (darknet_fn, [_sq(n), _sq(n)])
+    return out

@@ -1,0 +1,113 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; every kernel must match `ref.py` to fp32
+tolerance. This is the build-time correctness gate of the three-layer
+stack (the run-time gates are the Rust golden model and the PJRT-executed
+artifacts).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+from compile import model
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(*shape):
+    return RNG.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+dims = st.sampled_from([4, 8, 12, 16, 24, 32, 48, 64])
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims, alpha=st.sampled_from([1.0, 1.5, -0.5]))
+def test_matmul_matches_ref(m, k, n, alpha):
+    x, y = rand(m, k), rand(k, n)
+    got = pk.matmul(x, y, alpha=alpha)
+    np.testing.assert_allclose(got, ref.mm2(x, y, alpha), rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=dims)
+def test_gemm_matches_ref(n):
+    a, b, c = rand(n, n), rand(n, n), rand(n, n)
+    got = pk.gemm(a, b, c, 1.5, 1.2)
+    np.testing.assert_allclose(got, ref.gemm(a, b, c, 1.5, 1.2), rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=dims, n=dims)
+def test_matvec_matches_ref(m, n):
+    x, v = rand(m, n), rand(n)
+    np.testing.assert_allclose(pk.matvec(x, v), x @ v, rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.sampled_from([6, 10, 18, 34, 66]))
+def test_conv2d_matches_ref(n):
+    a = rand(n, n)
+    got = pk.conv2d(a, model.TAPS)
+    want = ref.conv2d(a, model.TAPS)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+def test_atax_composition():
+    a, x = rand(24, 24), rand(24)
+    b, y = model.atax_fn(a, x)
+    rb, ry = ref.atax(a, x)
+    np.testing.assert_allclose(b, rb, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(y, ry, rtol=2e-5, atol=1e-6)
+
+
+def test_bicg_composition():
+    a, p, r = rand(24, 24), rand(24), rand(24)
+    q, s = model.bicg_fn(a, p, r)
+    rq, rs = ref.bicg(a, p, r)
+    np.testing.assert_allclose(q, rq, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(s, rs, rtol=2e-5, atol=1e-6)
+
+
+def test_covar_composition():
+    d = rand(12, 12)
+    d2, e, s = model.covar_fn(d)
+    rd2, re_, rs = ref.covar(d, 1.0 / 12)
+    np.testing.assert_allclose(d2, rd2, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(e, re_, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-5)
+
+
+def test_mm3_chains():
+    n = 10
+    a, b, c, d = rand(n, n), rand(n, n), rand(n, n), rand(n, n)
+    e, f, g = model.mm3_fn(a, b, c, d)
+    re_, rf, rg = ref.mm3(a, b, c, d, model.MM3_ALPHA)
+    np.testing.assert_allclose(e, re_, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(f, rf, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-5)
+
+
+def test_artifact_registry_shapes():
+    arts = model.artifacts()
+    assert len(arts) == 8
+    for name, (fn, shapes) in arts.items():
+        assert all(isinstance(s, tuple) for s in shapes), name
+
+
+def test_block_divisor():
+    assert pk._block(128, 32) == 32
+    assert pk._block(97, 32) == 1  # prime: falls back to one block
+    assert pk._block(12, 32) == 12
+
+
+@pytest.mark.parametrize("n", [12, 16])
+def test_matmul_odd_blocks(n):
+    # Non-multiple-of-32 sizes exercise the divisor fallback.
+    x, y = rand(n, n), rand(n, n)
+    np.testing.assert_allclose(
+        pk.matmul(x, y, alpha=2.0), 2.0 * (x @ y), rtol=2e-5, atol=1e-6
+    )

@@ -1,0 +1,72 @@
+//! Ablations over the platform's design parameters — the §3.3-style
+//! exploration the platform exists to enable, applied to our own design
+//! choices: TCDM banking factor, IOMMU TLB capacity, DMA burst overhead,
+//! and the AutoDMA tile-side formula.
+
+use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::config::aurora;
+use herov2::trace::Event;
+use herov2::workloads;
+
+fn main() {
+    let seed = 13;
+    let w = workloads::gemm::build(96);
+
+    println!("TCDM banking factor (gemm-96, handwritten, 8 threads):");
+    for bf in [1usize, 2, 4] {
+        let mut cfg = aurora();
+        cfg.accel.banking_factor = bf;
+        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 1e10 as u64).unwrap();
+        verify(&w, &out, seed).unwrap();
+        println!(
+            "  factor {bf} ({:2} banks): {:>8} cycles, {:>8} conflicts",
+            bf * 8,
+            out.cycles(),
+            out.result.perf.get(Event::TcdmConflict)
+        );
+    }
+
+    println!("\nIOMMU TLB capacity (atax-256 unmodified, 8 threads — column walks):");
+    let wa = workloads::atax::build(256);
+    for tlb in [8usize, 32, 128, 1024] {
+        let mut cfg = aurora();
+        cfg.iommu.tlb_entries = tlb;
+        let out = run_workload(&cfg, &wa, Variant::Unmodified, 8, seed, 1e10 as u64).unwrap();
+        verify(&wa, &out, seed).unwrap();
+        println!(
+            "  {tlb:>4} entries: {:>9} cycles, {:>6} misses",
+            out.cycles(),
+            out.result.perf.get(Event::TlbMiss)
+        );
+    }
+
+    println!("\nDMA burst issue overhead (darknet-96 2D tiling, 8 threads):");
+    let wd = workloads::darknet::build(96);
+    for oh in [0u64, 10, 20, 40] {
+        let mut cfg = aurora();
+        cfg.dma.burst_overhead = oh;
+        let out = run_workload(&cfg, &wd, Variant::Handwritten, 8, seed, 1e10 as u64).unwrap();
+        verify(&wd, &out, seed).unwrap();
+        println!(
+            "  {oh:>2} cycles/burst: {:>8} total cycles, {:>8} dma cycles",
+            out.cycles(),
+            out.dma_cycles()
+        );
+    }
+
+    println!("\nAutoDMA L1 budget sensitivity (gemm-96, autodma, 8 threads):");
+    for frac in [4u32, 2, 1] {
+        let mut cfg = aurora();
+        // Shrink the usable TCDM by the factor (smaller tiles, more phases).
+        cfg.accel.l1_bytes = 128 * 1024 / frac as usize;
+        let out = run_workload(&cfg, &w, Variant::AutoDma, 8, seed, 1e10 as u64).unwrap();
+        verify(&w, &out, seed).unwrap();
+        let tiles = out.report.as_ref().and_then(|r| r.tile_sides.first().copied()).flatten();
+        println!(
+            "  L1 {:>3} KiB: {:>8} cycles (tile side {:?})",
+            128 / frac,
+            out.cycles(),
+            tiles
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Fig 5: speed-up of 8-thread over 1-thread execution (handwritten DMA).
+//!
+//! Paper: computation-only 6.5–7.1x (avg 6.9x); overall 5.9–7.1x (avg
+//! 6.7x); DMA share grows with the speed-up (covar: 10.3 % at 8 threads).
+
+use herov2::bench_harness::figures;
+use herov2::bench_harness::geomean;
+use herov2::config::aurora;
+
+fn main() {
+    let rows = figures::fig5(&aurora()).expect("fig5");
+    println!("Fig 5 — parallelization speed-up (8 vs 1 accelerator threads)");
+    println!("{:<10} {:>10} {:>10} {:>10}", "kernel", "comp-only", "overall", "dma-share");
+    let (mut cs, mut os) = (Vec::new(), Vec::new());
+    for r in &rows {
+        println!(
+            "{:<10} {:>9.2}x {:>9.2}x {:>9.2}%",
+            r.name, r.comp_speedup, r.overall_speedup, r.dma_share_pct
+        );
+        cs.push(r.comp_speedup);
+        os.push(r.overall_speedup);
+    }
+    println!(
+        "geomean: comp {:.2}x (paper 6.9x), overall {:.2}x (paper 6.7x)",
+        geomean(&cs),
+        geomean(&os)
+    );
+}

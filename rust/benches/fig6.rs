@@ -1,0 +1,38 @@
+//! Fig 6: code complexity of handwritten tiling + DMA vs unmodified code
+//! (CCCC lines-of-code and McCabe cyclomatic complexity).
+//!
+//! Paper: 1D-tiled kernels 1.7–2.5x LoC / 1.3–1.5x cyclomatic; darknet
+//! (2D) 3.4x / 3.7x; covar (two 2D passes) 6.3x / 4.0x; averages 2.6x LoC,
+//! 1.8x cyclomatic.
+
+use herov2::bench_harness::figures;
+use herov2::bench_harness::geomean;
+
+fn main() {
+    let rows = figures::fig6();
+    println!("Fig 6 — handwritten tiling code-complexity overhead");
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "kernel", "LoC", "LoC'", "ratio", "cyclo", "cyclo'", "ratio"
+    );
+    let (mut ls, mut cs) = (Vec::new(), Vec::new());
+    for r in &rows {
+        println!(
+            "{:<10} {:>8} {:>8} {:>7.2}x {:>8} {:>8} {:>7.2}x",
+            r.name,
+            r.loc_unmodified,
+            r.loc_handwritten,
+            r.loc_ratio(),
+            r.cyc_unmodified,
+            r.cyc_handwritten,
+            r.cyc_ratio()
+        );
+        ls.push(r.loc_ratio());
+        cs.push(r.cyc_ratio());
+    }
+    println!(
+        "geomean: LoC {:.2}x (paper 2.6x), cyclomatic {:.2}x (paper 1.8x)",
+        geomean(&ls),
+        geomean(&cs)
+    );
+}

@@ -1,0 +1,33 @@
+//! Fig 8: accelerator on-chip network data width sweep (32 and 128 bit vs
+//! the 64-bit default): DMA cycles, computation cycles, total cycles.
+//!
+//! Paper: halving the width halves DMA speed (0.5x) and doubling doubles
+//! it (2x) for 1D-transfer kernels; darknet/covar (2D transfers of short
+//! bursts) see only 0.6x / 1.5x. At 32 bit the instruction-fetch bandwidth
+//! costs computation cycles; at 128 bit the rearranged TCDM interconnect
+//! adds ~15 % contention, costing ~10 % total on average.
+
+use herov2::bench_harness::figures;
+use herov2::bench_harness::geomean;
+use herov2::config::aurora;
+
+fn main() {
+    let rows = figures::fig8(&aurora()).expect("fig8");
+    println!("Fig 8 — on-chip network data-width sweep (speedup vs 64-bit)");
+    println!("{:<10} {:>6} {:>8} {:>8} {:>8}", "kernel", "width", "dma", "comp", "total");
+    let mut tot128 = Vec::new();
+    for r in &rows {
+        println!(
+            "{:<10} {:>5}b {:>7.2}x {:>7.2}x {:>7.2}x",
+            r.name, r.width_bits, r.dma_ratio, r.comp_ratio, r.total_ratio
+        );
+        if r.width_bits == 128 {
+            tot128.push(r.total_ratio);
+        }
+    }
+    println!(
+        "128-bit total geomean: {:.2}x   (paper: ~0.90x — wider is slower without \
+         cluster co-design)",
+        geomean(&tot128)
+    );
+}

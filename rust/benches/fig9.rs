@@ -1,0 +1,39 @@
+//! Fig 9: speed-up of the Xpulpv2 ISA extension over standard RV32IMAFC
+//! (handwritten DMA, 8 threads). Bars: compiler-generated Xpulpv2; + manual
+//! register promotion; + expert inline assembly (modeled comparator).
+//!
+//! Paper: 1.5x average from Xpulpv2 alone; gemm 2.5x (inner loop 10 -> 5
+//! instructions, two hardware loops; promotion: 5 -> 4); conv2d/atax/bicg
+//! only 1.1–1.5x; covar needs manual promotion to get its hardware loop;
+//! final range 1.1–3.5x, average 2.1x.
+
+use herov2::bench_harness::figures;
+use herov2::bench_harness::geomean;
+use herov2::config::aurora;
+
+fn main() {
+    let rows = figures::fig9(&aurora()).expect("fig9");
+    println!("Fig 9 — Xpulpv2 vs RV32IMAFC (handwritten DMA, 8 threads)");
+    println!(
+        "{:<10} {:>8} {:>9} {:>8} | {:>5} {:>6} {:>5}",
+        "kernel", "xpulpv2", "promoted", "expert", "inner", "xpulp", "prom"
+    );
+    let mut xs = Vec::new();
+    for r in &rows {
+        println!(
+            "{:<10} {:>7.2}x {:>8.2}x {:>7.2}x | {:>5} {:>6} {:>5}",
+            r.name,
+            r.xpulp_speedup,
+            r.promoted_speedup,
+            r.expert_speedup,
+            r.inner_base,
+            r.inner_xpulp,
+            r.inner_promoted
+        );
+        xs.push(r.promoted_speedup);
+    }
+    println!(
+        "geomean (promoted): {:.2}x   (paper: 2.1x average, range 1.1–3.5x)",
+        geomean(&xs)
+    );
+}

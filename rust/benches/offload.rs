@@ -1,0 +1,41 @@
+//! E10 (§2.3): offload overhead and TLB miss-handling microbenchmarks.
+//!
+//! The paper's offloading model is coarse-grained: kernels of at least a
+//! few ten thousand cycles amortize the mailbox/driver overhead. A TLB hit
+//! adds 3 cycles to a remote access; misses are handled in software by the
+//! faulting core or a dedicated core (configurable per offload).
+
+use herov2::bench_harness::{run_workload, Variant};
+use herov2::config::{aurora, MissMode};
+use herov2::host::Mailbox;
+use herov2::trace::Event;
+use herov2::workloads;
+
+fn main() {
+    let cfg = aurora();
+    println!("Offload overhead (mailbox + driver): {} cycles", Mailbox::round_trip_cycles(&cfg));
+    println!("\nkernel-size sweep (gemm, handwritten, 8 threads): overhead share");
+    for n in [8usize, 12, 16, 24, 32, 48] {
+        let w = workloads::gemm::build(n);
+        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, 1, 10_000_000_000).unwrap();
+        let dev = out.result.device_cycles;
+        let tot = out.result.total_cycles;
+        println!(
+            "  N={n:3}: device {dev:>9} cy, end-to-end {tot:>9} cy, overhead {:.2}%",
+            100.0 * (tot - dev) as f64 / tot as f64
+        );
+    }
+    println!("\nTLB miss handling (atax unmodified, 8 threads — pointer-heavy):");
+    for mode in [MissMode::SelfService, MissMode::DedicatedCore] {
+        let mut cfg = aurora();
+        cfg.iommu.miss_mode = mode;
+        cfg.iommu.tlb_entries = 16; // pressure the TLB to expose the modes
+        let w = workloads::atax::build(256);
+        let out = run_workload(&cfg, &w, Variant::Unmodified, 8, 1, 10_000_000_000).unwrap();
+        println!(
+            "  {mode:?}: {} cycles, {} TLB misses",
+            out.cycles(),
+            out.result.perf.get(Event::TlbMiss)
+        );
+    }
+}

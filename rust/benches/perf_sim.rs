@@ -1,0 +1,32 @@
+//! §Perf: simulator hot-path throughput (simulated core-cycles per second).
+//!
+//! This is the L3 optimization target of EXPERIMENTS.md §Perf: the gemm
+//! compute loop must simulate fast enough that every figure bench runs in
+//! seconds. Reports simulated cycles/sec over repeated runs.
+
+use herov2::bench_harness::stats;
+use herov2::bench_harness::{run_workload, Variant};
+use herov2::config::aurora;
+use herov2::workloads;
+
+fn main() {
+    let cfg = aurora();
+    for (label, w, v, threads) in [
+        ("gemm-96-hand-8t", workloads::gemm::build(96), Variant::Handwritten, 8u32),
+        ("gemm-96-unmod-1t", workloads::gemm::build(96), Variant::Unmodified, 1),
+        ("darknet-96-hand-8t", workloads::darknet::build(96), Variant::Handwritten, 8),
+    ] {
+        let mut cycles = 0u64;
+        let secs = stats::time_runs(3, || {
+            let out = run_workload(&cfg, &w, v, threads, 1, 10_000_000_000).unwrap();
+            cycles = out.cycles();
+        });
+        let s = stats::summarize(&secs);
+        println!(
+            "{label:<20} {:>10} sim-cycles  median {:.3}s  {:>6.1} M simulated cycles/s",
+            cycles,
+            s.median,
+            cycles as f64 / s.median / 1e6
+        );
+    }
+}

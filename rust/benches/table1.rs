@@ -1,0 +1,7 @@
+//! Table 1: current target platforms and configurations of HEROv2, plus the
+//! E9 FPGA resource-model check against the paper's reported utilization.
+use herov2::bench_harness::figures;
+
+fn main() {
+    println!("{}", figures::table1());
+}

@@ -1,0 +1,6 @@
+//! Table 2: evaluated kernels and applications.
+use herov2::bench_harness::figures;
+
+fn main() {
+    println!("{}", figures::table2());
+}

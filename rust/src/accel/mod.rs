@@ -1,0 +1,1221 @@
+//! The accelerator (PMCA) model: clusters + L2 SPM + IOMMU + DRAM port,
+//! and the cycle-stepped instruction interpreter.
+//!
+//! Execution model (§2.1): single-issue in-order cores, 1 instruction per
+//! cycle unless stalled by TCDM bank conflicts, icache refills, remote
+//! accesses, DMA programming/waiting, or barriers. The interpreter is
+//! instruction-accurate (it computes the real data values — the simulated
+//! kernel's numerics are later checked against the PJRT-executed HLO
+//! artifact) and cycle-approximate with the cost model of DESIGN.md §5.
+
+use crate::cluster::{Cluster, CoreState, HwLoopState};
+use crate::config::HeroConfig;
+use crate::dma::Descriptor;
+use crate::iommu::{Iommu, PageTable};
+use crate::isa::{AluOp, AmoOp, Cond, Csr, DmaDir, FpOp, Inst, Program};
+use crate::mem::{map, Dram, WordMem};
+use crate::trace::Event;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Fixed-size fetch group refilled into the prefetch buffer on a taken
+/// control transfer that misses the L0 window (bytes).
+const FETCH_GROUP_BYTES: u64 = 8;
+
+/// Wake-up latency of a sleeping core on `Fork` (event-unit trigger).
+const FORK_WAKE_CYCLES: u64 = 5;
+
+/// The accelerator: everything on the device side of the mailbox.
+pub struct Accel {
+    pub cfg: HeroConfig,
+    pub clusters: Vec<Cluster>,
+    /// Shared L2 SPM.
+    pub l2: WordMem,
+    /// Shared main memory (physical).
+    pub dram: Dram,
+    /// Hybrid IOMMU shared by all clusters.
+    pub iommu: Iommu,
+    /// Host-managed application page table (read-only for the accelerator).
+    pub pt: PageTable,
+    /// Current cycle.
+    pub now: u64,
+    /// Clusters participating in the current offload.
+    active_clusters: usize,
+    /// Precomputed per-step constants (hot-loop; see EXPERIMENTS.md §Perf).
+    kc: StepConsts,
+}
+
+/// Constants the interpreter needs on every step, hoisted out of the hot
+/// loop (reading them from `HeroConfig` per step cost ~25 % throughput).
+#[derive(Debug, Clone, Copy)]
+struct StepConsts {
+    l0_insts: u32,
+    line_insts: u32,
+    icache_refill: u64,
+    ifetch: u64,
+    fetch_pen: u64,
+    branch_cost: u64,
+    l1_bytes: u32,
+}
+
+impl Accel {
+    /// Build an accelerator with `dram_bytes` of backing main memory (the
+    /// configured capacity is typically 4 GiB; the simulator allocates only
+    /// what experiments need).
+    pub fn new(cfg: HeroConfig, dram_bytes: usize) -> Self {
+        cfg.validate().map_err(|e| anyhow::anyhow!(e)).expect("invalid config");
+        let clusters = (0..cfg.accel.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
+        let kc = StepConsts {
+            l0_insts: cfg.accel.l0_insts as u32,
+            line_insts: cfg.accel.icache_line_insts as u32,
+            icache_refill: cfg.timing.icache_refill,
+            ifetch: cfg.ifetch_bytes_per_cycle().max(1),
+            fetch_pen: FETCH_GROUP_BYTES / cfg.ifetch_bytes_per_cycle().max(1),
+            branch_cost: cfg.timing.branch_taken,
+            l1_bytes: cfg.accel.l1_bytes as u32,
+        };
+        Accel {
+            kc,
+            l2: WordMem::new(cfg.accel.l2_bytes),
+            dram: Dram::new(dram_bytes),
+            iommu: Iommu::new(cfg.iommu),
+            pt: PageTable::new(cfg.iommu.page_bytes),
+            clusters,
+            cfg,
+            now: 0,
+            active_clusters: 0,
+        }
+    }
+
+    /// Load `program` into the instruction memory of the first `n_clusters`
+    /// clusters and reset their cores (the offload runtime's "load device
+    /// ELF" step).
+    pub fn load_program(&mut self, program: Arc<Program>, n_clusters: usize) -> Result<()> {
+        program.validate().map_err(|e| anyhow::anyhow!("program invalid: {e}"))?;
+        if n_clusters == 0 || n_clusters > self.clusters.len() {
+            bail!("n_clusters {n_clusters} out of range 1..={}", self.clusters.len());
+        }
+        for cl in &mut self.clusters[..n_clusters] {
+            cl.load_program(program.clone());
+        }
+        self.active_clusters = n_clusters;
+        Ok(())
+    }
+
+    /// Pass kernel arguments to core 0 of every active cluster: integer
+    /// arguments in x10.., float arguments in f10.. .
+    pub fn set_args(&mut self, args: &[u32], fargs: &[f32]) -> Result<()> {
+        if args.len() > 16 || fargs.len() > 8 {
+            bail!("too many kernel arguments ({} int, {} float)", args.len(), fargs.len());
+        }
+        for cl in &mut self.clusters[..self.active_clusters] {
+            let core0 = &mut cl.cores[0];
+            for (i, a) in args.iter().enumerate() {
+                core0.regs[10 + i] = *a;
+            }
+            for (i, f) in fargs.iter().enumerate() {
+                core0.fregs[10 + i] = *f;
+            }
+        }
+        Ok(())
+    }
+
+    /// True when the current offload has finished (core 0 of every active
+    /// cluster halted).
+    pub fn offload_done(&self) -> bool {
+        self.clusters[..self.active_clusters]
+            .iter()
+            .all(|cl| cl.cores[0].state == CoreState::Halted)
+    }
+
+    /// Run until the offload completes or `max_cycles` elapse. Returns the
+    /// number of cycles executed.
+    pub fn run(&mut self, max_cycles: u64) -> Result<u64> {
+        let start = self.now;
+        while !self.offload_done() {
+            if self.now - start >= max_cycles {
+                bail!(
+                    "offload did not complete within {max_cycles} cycles \
+                     (pc of cluster 0 core 0: {})",
+                    self.clusters[0].cores[0].pc
+                );
+            }
+            self.step_cycle();
+        }
+        Ok(self.now - start)
+    }
+
+    /// Advance the whole accelerator by one cycle.
+    pub fn step_cycle(&mut self) {
+        let now = self.now;
+        let n_active = self.active_clusters;
+        for cl_idx in 0..n_active {
+            // Barrier release is evaluated at cycle start so that the last
+            // arriving core's arrival cycle is the release reference.
+            if self.clusters[cl_idx].barrier_waiters > 0 && self.clusters[cl_idx].barrier_ready()
+            {
+                let cost = self.cfg.timing.barrier;
+                self.clusters[cl_idx].release_barrier(now, cost);
+            }
+            let n_cores = self.clusters[cl_idx].cores.len();
+            // Rotating arbitration priority for fairness.
+            let rot = (now as usize) % n_cores;
+            for k in 0..n_cores {
+                let c = (k + rot) % n_cores;
+                self.step_core(cl_idx, c);
+            }
+            self.clusters[cl_idx].dma.retire(now.saturating_sub(1_000));
+        }
+        self.now += 1;
+    }
+
+    /// Aggregate perf counters across all clusters and cores.
+    pub fn perf_aggregate(&self) -> crate::trace::PerfCounters {
+        let mut agg = crate::trace::PerfCounters::new();
+        for cl in &self.clusters {
+            agg.merge(&cl.perf_aggregate());
+        }
+        agg
+    }
+
+    // --- interpreter -----------------------------------------------------
+
+    /// Fast path: handles the common case — a running, unstalled core
+    /// executing a cluster-local instruction — with a single split borrow
+    /// of the cluster (no repeated deep indexing). Everything else falls
+    /// back to [`Accel::step_core_slow`]. The fast path performs no state
+    /// mutation before deciding it can complete, so the fallback re-executes
+    /// from scratch safely.
+    #[inline]
+    fn step_core(&mut self, cl_idx: usize, c_idx: usize) {
+        let now = self.now;
+        let StepConsts {
+            l0_insts,
+            line_insts,
+            icache_refill,
+            ifetch,
+            fetch_pen,
+            branch_cost: branch_taken_cost,
+            l1_bytes,
+        } = self.kc;
+        let tcdm_base = map::tcdm_base(cl_idx);
+        {
+            let cluster = &mut self.clusters[cl_idx];
+            let Cluster {
+                cores,
+                tcdm,
+                bank_claim,
+                icache_tags,
+                refill_port,
+                program,
+                extra_conflict_ppm,
+                fast_mask,
+                ..
+            } = cluster;
+            let n_cores = cores.len() as u32;
+            let core = &mut cores[c_idx];
+            match core.state {
+                CoreState::Running => {}
+                CoreState::Sleeping | CoreState::Halted | CoreState::WaitBarrier { .. } => {
+                    return
+                }
+                CoreState::WaitDma { .. } => return self.step_core_slow(cl_idx, c_idx),
+            }
+            if core.stall_until > now {
+                return;
+            }
+            let pc = core.pc;
+            if !cluster_fast_mask_get(fast_mask, pc) {
+                return self.step_core_slow(cl_idx, c_idx);
+            }
+            // --- fetch (full model, fast borrows) ---
+            if pc < core.l0_base || pc >= core.l0_base + l0_insts {
+                let line = pc / line_insts;
+                let slot = (line as usize) % icache_tags.len();
+                if icache_tags[slot] != line {
+                    let dur = icache_refill + (line_insts as u64 * 4) / ifetch;
+                    let (_, end) = refill_port.acquire(now, dur);
+                    icache_tags[slot] = line;
+                    core.stall_until = end;
+                    core.perf.bump(Event::IcacheMiss);
+                    core.perf.add(Event::IFetchStall, end - now);
+                    return;
+                }
+            } else {
+                core.perf.bump(Event::L0Hit);
+            }
+            let inst = program.insts[pc as usize];
+            // TCDM access helper: Some(offset) when the address is in this
+            // cluster's TCDM and the bank is free this cycle; Err = conflict.
+            macro_rules! tcdm_claim_fast {
+                ($addr:expr) => {{
+                    let off = $addr.wrapping_sub(tcdm_base);
+                    if off >= l1_bytes {
+                        None // not local: slow path
+                    } else {
+                        let bank = ((off / 4) as usize) % bank_claim.len();
+                        let skew = *extra_conflict_ppm > 0 && {
+                            let h = (now ^ (off as u64 ^ ((c_idx as u64) << 17)))
+                                .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                            (h >> 40) % 1_000_000 < *extra_conflict_ppm
+                        };
+                        if bank_claim[bank] == now || skew {
+                            core.perf.bump(Event::TcdmConflict);
+                            return; // retry next cycle
+                        }
+                        bank_claim[bank] = now;
+                        core.perf.bump(Event::TcdmAccess);
+                        Some(off)
+                    }
+                }};
+            }
+            let mut extra: u64 = 0;
+            let mut branch_to: Option<u32> = None;
+            match inst {
+                Inst::Li { rd, imm } => core.set_reg(rd, imm as u32),
+                Inst::AluImm { op, rd, rs1, imm } => {
+                    let v = alu(op, core.reg(rs1), imm as u32);
+                    core.set_reg(rd, v);
+                }
+                Inst::Alu { op, rd, rs1, rs2 } => {
+                    let v = alu(op, core.reg(rs1), core.reg(rs2));
+                    core.set_reg(rd, v);
+                }
+                Inst::Branch { cond, rs1, rs2, target } => {
+                    if branch_taken(cond, core.reg(rs1), core.reg(rs2)) {
+                        branch_to = Some(target);
+                        extra += branch_taken_cost;
+                        core.perf.bump(Event::BranchTaken);
+                    }
+                }
+                Inst::Jal { rd, target } => {
+                    core.set_reg(rd, pc + 1);
+                    branch_to = Some(target);
+                }
+                Inst::Fp { op, fd, fs1, fs2 } => {
+                    let (a, b) = (core.fregs[fs1 as usize], core.fregs[fs2 as usize]);
+                    core.fregs[fd as usize] = match op {
+                        FpOp::Add => a + b,
+                        FpOp::Sub => a - b,
+                        FpOp::Mul => a * b,
+                        FpOp::Div => a / b,
+                        FpOp::Min => a.min(b),
+                        FpOp::Max => a.max(b),
+                    };
+                }
+                Inst::Fmadd { fd, fs1, fs2, fs3 } => {
+                    core.fregs[fd as usize] = core.fregs[fs1 as usize]
+                        * core.fregs[fs2 as usize]
+                        + core.fregs[fs3 as usize];
+                }
+                Inst::Fmac { fd, fs1, fs2 } => {
+                    let v = core.fregs[fs1 as usize] * core.fregs[fs2 as usize];
+                    core.fregs[fd as usize] += v;
+                }
+                Inst::Mac { rd, rs1, rs2 } => {
+                    let v = core.reg(rs1).wrapping_mul(core.reg(rs2));
+                    let acc = core.reg(rd).wrapping_add(v);
+                    core.set_reg(rd, acc);
+                }
+                Inst::FcvtSW { fd, rs1 } => {
+                    core.fregs[fd as usize] = core.reg(rs1) as i32 as f32;
+                }
+                Inst::FcvtWS { rd, fs1 } => {
+                    let v = core.fregs[fs1 as usize] as i32 as u32;
+                    core.set_reg(rd, v);
+                }
+                Inst::FmvWX { fd, rs1 } => {
+                    core.fregs[fd as usize] = f32::from_bits(core.reg(rs1));
+                }
+                Inst::FmvXW { rd, fs1 } => {
+                    let v = core.fregs[fs1 as usize].to_bits();
+                    core.set_reg(rd, v);
+                }
+                Inst::Fcmp { cond, rd, fs1, fs2 } => {
+                    let (a, b) = (core.fregs[fs1 as usize], core.fregs[fs2 as usize]);
+                    let t = match cond {
+                        Cond::Eq => a == b,
+                        Cond::Lt => a < b,
+                        _ => a >= b,
+                    };
+                    core.set_reg(rd, t as u32);
+                }
+                Inst::CsrR { rd, csr } => {
+                    let v = match csr {
+                        Csr::MHartId => c_idx as u32,
+                        Csr::MClusterId => cl_idx as u32,
+                        Csr::MNumCores => n_cores,
+                        Csr::ExtAddr => core.ext_addr,
+                        Csr::MCycle => now as u32,
+                    };
+                    core.set_reg(rd, v);
+                }
+                Inst::HwLoop { l, count, start, end } => {
+                    let n = core.reg(count);
+                    if n == 0 {
+                        finish_step(core, pc, None, end, extra, l0_insts, fetch_pen, now);
+                        return;
+                    }
+                    core.hwloop[l as usize] = HwLoopState { start, end, count: n };
+                }
+                Inst::Nop => {}
+                // Cluster-local memory (falls back when not own-TCDM).
+                Inst::Lw { rd, rs1, offset } | Inst::LwPost { rd, rs1, imm: offset } => {
+                    let post = matches!(inst, Inst::LwPost { .. });
+                    let base = core.reg(rs1);
+                    let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                    match tcdm_claim_fast!(addr) {
+                        Some(off) => {
+                            let v = tcdm.mem.load(off);
+                            core.set_reg(rd, v);
+                            if post {
+                                core.set_reg(rs1, base.wrapping_add(offset as u32));
+                            }
+                        }
+                        None => return self.step_core_slow(cl_idx, c_idx),
+                    }
+                }
+                Inst::Flw { fd, rs1, offset } | Inst::FlwPost { fd, rs1, imm: offset } => {
+                    let post = matches!(inst, Inst::FlwPost { .. });
+                    let base = core.reg(rs1);
+                    let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                    match tcdm_claim_fast!(addr) {
+                        Some(off) => {
+                            core.fregs[fd as usize] = f32::from_bits(tcdm.mem.load(off));
+                            if post {
+                                core.set_reg(rs1, base.wrapping_add(offset as u32));
+                            }
+                        }
+                        None => return self.step_core_slow(cl_idx, c_idx),
+                    }
+                }
+                Inst::Sw { rs2, rs1, offset } | Inst::SwPost { rs2, rs1, imm: offset } => {
+                    let post = matches!(inst, Inst::SwPost { .. });
+                    let base = core.reg(rs1);
+                    let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                    match tcdm_claim_fast!(addr) {
+                        Some(off) => {
+                            tcdm.mem.store(off, core.reg(rs2));
+                            if post {
+                                core.set_reg(rs1, base.wrapping_add(offset as u32));
+                            }
+                        }
+                        None => return self.step_core_slow(cl_idx, c_idx),
+                    }
+                }
+                Inst::Fsw { fs2, rs1, offset } | Inst::FswPost { fs2, rs1, imm: offset } => {
+                    let post = matches!(inst, Inst::FswPost { .. });
+                    let base = core.reg(rs1);
+                    let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                    match tcdm_claim_fast!(addr) {
+                        Some(off) => {
+                            tcdm.mem.store(off, core.fregs[fs2 as usize].to_bits());
+                            if post {
+                                core.set_reg(rs1, base.wrapping_add(offset as u32));
+                            }
+                        }
+                        None => return self.step_core_slow(cl_idx, c_idx),
+                    }
+                }
+                // Everything else (remote, DMA, fork/join, CSR writes, AMO,
+                // Jalr, Halt, PerfCtl): slow path.
+                _ => return self.step_core_slow(cl_idx, c_idx),
+            }
+            finish_step(core, pc, branch_to, pc + 1, extra, l0_insts, fetch_pen, now);
+        }
+    }
+
+    fn step_core_slow(&mut self, cl_idx: usize, c_idx: usize) {
+        let now = self.now;
+        // Resolve wait states first.
+        match self.clusters[cl_idx].cores[c_idx].state {
+            CoreState::Sleeping | CoreState::Halted | CoreState::WaitBarrier { .. } => return,
+            CoreState::WaitDma { id } => {
+                let done = self.clusters[cl_idx].dma.completion(id).unwrap_or(0);
+                if done <= now {
+                    let core = &mut self.clusters[cl_idx].cores[c_idx];
+                    core.state = CoreState::Running;
+                } else {
+                    let core = &mut self.clusters[cl_idx].cores[c_idx];
+                    core.perf.bump(Event::DmaWaitCycles);
+                    return;
+                }
+            }
+            CoreState::Running => {}
+        }
+        if self.clusters[cl_idx].cores[c_idx].stall_until > now {
+            return;
+        }
+
+        let pc = self.clusters[cl_idx].cores[c_idx].pc;
+        // --- fetch ---
+        let l0_insts = self.cfg.accel.l0_insts as u32;
+        let in_l0 = {
+            let base = self.clusters[cl_idx].cores[c_idx].l0_base;
+            pc >= base && pc < base + l0_insts
+        };
+        if !in_l0 {
+            // Fetch from the shared icache.
+            let line_insts = self.cfg.accel.icache_line_insts as u32;
+            let line = pc / line_insts;
+            let n_lines = self.clusters[cl_idx].icache_tags.len();
+            let slot = (line as usize) % n_lines;
+            if self.clusters[cl_idx].icache_tags[slot] != line {
+                // Miss: refill through the fetch port.
+                let line_bytes = (line_insts as u64) * 4;
+                let dur = self.cfg.timing.icache_refill
+                    + line_bytes / self.cfg.ifetch_bytes_per_cycle().max(1);
+                let (_, end) = self.clusters[cl_idx].refill_port.acquire(now, dur);
+                self.clusters[cl_idx].icache_tags[slot] = line;
+                let core = &mut self.clusters[cl_idx].cores[c_idx];
+                core.stall_until = end;
+                core.perf.bump(Event::IcacheMiss);
+                core.perf.add(Event::IFetchStall, end - now);
+                return;
+            }
+        } else {
+            self.clusters[cl_idx].cores[c_idx].perf.bump(Event::L0Hit);
+        }
+
+        let inst = self.clusters[cl_idx].program.insts[pc as usize];
+
+        // --- execute ---
+        // `extra` = stall cycles beyond the base 1-cycle issue.
+        let mut extra: u64 = 0;
+        let mut next_pc = pc + 1;
+        let mut taken_branch_to: Option<u32> = None;
+
+        macro_rules! core {
+            () => {
+                self.clusters[cl_idx].cores[c_idx]
+            };
+        }
+
+        match inst {
+            Inst::Li { rd, imm } => core!().set_reg(rd, imm as u32),
+            Inst::AluImm { op, rd, rs1, imm } => {
+                let a = core!().reg(rs1);
+                core!().set_reg(rd, alu(op, a, imm as u32));
+            }
+            Inst::Alu { op, rd, rs1, rs2 } => {
+                let (a, b) = (core!().reg(rs1), core!().reg(rs2));
+                core!().set_reg(rd, alu(op, a, b));
+            }
+            Inst::Lw { rd, rs1, offset } | Inst::LwPost { rd, rs1, imm: offset } => {
+                let post = matches!(inst, Inst::LwPost { .. });
+                let base = core!().reg(rs1);
+                let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                match self.native_load(cl_idx, c_idx, addr) {
+                    NativeAccess::Retry => return,
+                    NativeAccess::Done { value, extra: e } => {
+                        core!().set_reg(rd, value);
+                        if post {
+                            core!().set_reg(rs1, base.wrapping_add(offset as u32));
+                        }
+                        extra += e;
+                    }
+                }
+            }
+            Inst::Flw { fd, rs1, offset } | Inst::FlwPost { fd, rs1, imm: offset } => {
+                let post = matches!(inst, Inst::FlwPost { .. });
+                let base = core!().reg(rs1);
+                let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                match self.native_load(cl_idx, c_idx, addr) {
+                    NativeAccess::Retry => return,
+                    NativeAccess::Done { value, extra: e } => {
+                        core!().fregs[fd as usize] = f32::from_bits(value);
+                        if post {
+                            core!().set_reg(rs1, base.wrapping_add(offset as u32));
+                        }
+                        extra += e;
+                    }
+                }
+            }
+            Inst::Sw { rs2, rs1, offset } | Inst::SwPost { rs2, rs1, imm: offset } => {
+                let post = matches!(inst, Inst::SwPost { .. });
+                let base = core!().reg(rs1);
+                let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                let val = core!().reg(rs2);
+                match self.native_store(cl_idx, c_idx, addr, val) {
+                    NativeAccess::Retry => return,
+                    NativeAccess::Done { extra: e, .. } => {
+                        if post {
+                            core!().set_reg(rs1, base.wrapping_add(offset as u32));
+                        }
+                        extra += e;
+                    }
+                }
+            }
+            Inst::Fsw { fs2, rs1, offset } | Inst::FswPost { fs2, rs1, imm: offset } => {
+                let post = matches!(inst, Inst::FswPost { .. });
+                let base = core!().reg(rs1);
+                let addr = if post { base } else { base.wrapping_add(offset as u32) };
+                let val = core!().fregs[fs2 as usize].to_bits();
+                match self.native_store(cl_idx, c_idx, addr, val) {
+                    NativeAccess::Retry => return,
+                    NativeAccess::Done { extra: e, .. } => {
+                        if post {
+                            core!().set_reg(rs1, base.wrapping_add(offset as u32));
+                        }
+                        extra += e;
+                    }
+                }
+            }
+            Inst::Amo { op, rd, rs1, rs2 } => {
+                let addr = core!().reg(rs1);
+                let b = core!().reg(rs2);
+                match self.native_load(cl_idx, c_idx, addr) {
+                    NativeAccess::Retry => return,
+                    NativeAccess::Done { value, extra: e } => {
+                        let new = match op {
+                            AmoOp::Swap => b,
+                            AmoOp::Add => value.wrapping_add(b),
+                            AmoOp::And => value & b,
+                            AmoOp::Or => value | b,
+                            AmoOp::Max => (value as i32).max(b as i32) as u32,
+                            AmoOp::Min => (value as i32).min(b as i32) as u32,
+                        };
+                        self.store_native_nofail(cl_idx, addr, new);
+                        core!().set_reg(rd, value);
+                        extra += e + 1;
+                    }
+                }
+            }
+            Inst::Branch { cond, rs1, rs2, target } => {
+                let (a, b) = (core!().reg(rs1), core!().reg(rs2));
+                if branch_taken(cond, a, b) {
+                    taken_branch_to = Some(target);
+                    extra += self.cfg.timing.branch_taken;
+                    core!().perf.bump(Event::BranchTaken);
+                }
+            }
+            Inst::Jal { rd, target } => {
+                core!().set_reg(rd, pc + 1);
+                taken_branch_to = Some(target);
+            }
+            Inst::Jalr { rd, rs1, offset } => {
+                let t = core!().reg(rs1).wrapping_add(offset as u32);
+                core!().set_reg(rd, pc + 1);
+                taken_branch_to = Some(t);
+            }
+            Inst::CsrR { rd, csr } => {
+                let v = match csr {
+                    Csr::MHartId => c_idx as u32,
+                    Csr::MClusterId => cl_idx as u32,
+                    Csr::MNumCores => self.clusters[cl_idx].cores.len() as u32,
+                    Csr::ExtAddr => core!().ext_addr,
+                    Csr::MCycle => now as u32,
+                };
+                core!().set_reg(rd, v);
+            }
+            Inst::CsrW { csr, rs1 } => {
+                let v = core!().reg(rs1);
+                if csr == Csr::ExtAddr {
+                    core!().ext_addr = v;
+                }
+            }
+            Inst::Fp { op, fd, fs1, fs2 } => {
+                let (a, b) = (core!().fregs[fs1 as usize], core!().fregs[fs2 as usize]);
+                core!().fregs[fd as usize] = match op {
+                    FpOp::Add => a + b,
+                    FpOp::Sub => a - b,
+                    FpOp::Mul => a * b,
+                    FpOp::Div => a / b,
+                    FpOp::Min => a.min(b),
+                    FpOp::Max => a.max(b),
+                };
+            }
+            Inst::Fmadd { fd, fs1, fs2, fs3 } => {
+                let v = core!().fregs[fs1 as usize] * core!().fregs[fs2 as usize]
+                    + core!().fregs[fs3 as usize];
+                core!().fregs[fd as usize] = v;
+            }
+            Inst::Fmac { fd, fs1, fs2 } => {
+                let v = core!().fregs[fs1 as usize] * core!().fregs[fs2 as usize];
+                core!().fregs[fd as usize] += v;
+            }
+            Inst::Mac { rd, rs1, rs2 } => {
+                let v = core!().reg(rs1).wrapping_mul(core!().reg(rs2));
+                let acc = core!().reg(rd).wrapping_add(v);
+                core!().set_reg(rd, acc);
+            }
+            Inst::FcvtSW { fd, rs1 } => {
+                core!().fregs[fd as usize] = core!().reg(rs1) as i32 as f32;
+            }
+            Inst::FcvtWS { rd, fs1 } => {
+                let v = core!().fregs[fs1 as usize] as i32 as u32;
+                core!().set_reg(rd, v);
+            }
+            Inst::FmvWX { fd, rs1 } => {
+                core!().fregs[fd as usize] = f32::from_bits(core!().reg(rs1));
+            }
+            Inst::FmvXW { rd, fs1 } => {
+                let v = core!().fregs[fs1 as usize].to_bits();
+                core!().set_reg(rd, v);
+            }
+            Inst::Fcmp { cond, rd, fs1, fs2 } => {
+                let (a, b) = (core!().fregs[fs1 as usize], core!().fregs[fs2 as usize]);
+                let t = match cond {
+                    Cond::Eq => a == b,
+                    Cond::Lt => a < b,
+                    _ => a >= b,
+                };
+                core!().set_reg(rd, t as u32);
+            }
+            Inst::LwExt { rd, rs1, offset } => {
+                let lo = core!().reg(rs1).wrapping_add(offset as u32);
+                let (value, e) = self.remote_load(cl_idx, c_idx, lo);
+                core!().set_reg(rd, value);
+                extra += e;
+            }
+            Inst::FlwExt { fd, rs1, offset } => {
+                let lo = core!().reg(rs1).wrapping_add(offset as u32);
+                let (value, e) = self.remote_load(cl_idx, c_idx, lo);
+                core!().fregs[fd as usize] = f32::from_bits(value);
+                extra += e;
+            }
+            Inst::SwExt { rs2, rs1, offset } => {
+                let lo = core!().reg(rs1).wrapping_add(offset as u32);
+                let val = core!().reg(rs2);
+                extra += self.remote_store(cl_idx, c_idx, lo, val);
+            }
+            Inst::FswExt { fs2, rs1, offset } => {
+                let lo = core!().reg(rs1).wrapping_add(offset as u32);
+                let val = core!().fregs[fs2 as usize].to_bits();
+                extra += self.remote_store(cl_idx, c_idx, lo, val);
+            }
+            Inst::HwLoop { l, count, start, end } => {
+                let n = core!().reg(count);
+                if n == 0 {
+                    next_pc = end;
+                } else {
+                    core!().hwloop[l as usize] = HwLoopState { start, end, count: n };
+                }
+            }
+            Inst::DmaStart1D { rd, dir, dev, host_lo, host_hi, bytes } => {
+                let d = Descriptor {
+                    dir,
+                    dev_addr: core!().reg(dev),
+                    host_va: ((core!().reg(host_hi) as u64) << 32) | core!().reg(host_lo) as u64,
+                    row_bytes: core!().reg(bytes),
+                    rows: 1,
+                    dev_stride: 0,
+                    host_stride: 0,
+                    merged: true,
+                };
+                let (id, e) = self.dma_submit(cl_idx, c_idx, &d);
+                core!().set_reg(rd, id);
+                extra += e;
+            }
+            Inst::DmaStart2D {
+                rd,
+                dir,
+                dev,
+                host_lo,
+                host_hi,
+                bytes,
+                count,
+                dev_stride,
+                host_stride,
+            } => {
+                let d = Descriptor {
+                    dir,
+                    dev_addr: core!().reg(dev),
+                    host_va: ((core!().reg(host_hi) as u64) << 32) | core!().reg(host_lo) as u64,
+                    row_bytes: core!().reg(bytes),
+                    rows: core!().reg(count),
+                    dev_stride: core!().reg(dev_stride),
+                    host_stride: core!().reg(host_stride),
+                    merged: false,
+                };
+                let (id, e) = self.dma_submit(cl_idx, c_idx, &d);
+                core!().set_reg(rd, id);
+                extra += e;
+            }
+            Inst::DmaWait { rs1 } => {
+                let id = core!().reg(rs1);
+                let done = self.clusters[cl_idx].dma.completion(id);
+                match done {
+                    Some(t) if t > now => {
+                        // Block; cycles spent blocked are counted per cycle.
+                        core!().state = CoreState::WaitDma { id };
+                        core!().pc = pc + 1;
+                        core!().perf.bump(Event::Instructions);
+                        return;
+                    }
+                    _ => {} // already complete (or unknown/retired): proceed
+                }
+            }
+            Inst::Fork { target } => {
+                self.clusters[cl_idx].fork_master = c_idx;
+                let (master_regs, master_fregs, master_ext) = {
+                    let m = &self.clusters[cl_idx].cores[c_idx];
+                    (m.regs, m.fregs, m.ext_addr)
+                };
+                for w in &mut self.clusters[cl_idx].cores {
+                    if w.state == CoreState::Sleeping {
+                        w.state = CoreState::Running;
+                        w.pc = target;
+                        w.l0_base = target;
+                        w.regs = master_regs;
+                        w.fregs = master_fregs;
+                        w.ext_addr = master_ext;
+                        w.hwloop = [HwLoopState::default(); 2];
+                        w.stall_until = now + FORK_WAKE_CYCLES;
+                    }
+                }
+                taken_branch_to = Some(target);
+                extra += 2; // event-unit trigger
+            }
+            Inst::Join => {
+                core!().state = CoreState::WaitBarrier { join: true };
+                core!().pc = pc + 1;
+                core!().perf.bump(Event::Instructions);
+                self.clusters[cl_idx].barrier_waiters += 1;
+                return;
+            }
+            Inst::Barrier => {
+                core!().state = CoreState::WaitBarrier { join: false };
+                core!().pc = pc + 1;
+                core!().perf.bump(Event::Instructions);
+                self.clusters[cl_idx].barrier_waiters += 1;
+                return;
+            }
+            Inst::PerfCtl { resume } => {
+                for core in &mut self.clusters[cl_idx].cores {
+                    core.perf.running = resume;
+                }
+                // The control write itself is visible regardless of state.
+                if resume {
+                    self.clusters[cl_idx].cores[c_idx].perf.running = true;
+                }
+            }
+            Inst::Halt => {
+                core!().state = CoreState::Halted;
+                core!().perf.bump(Event::Instructions);
+                return;
+            }
+            Inst::Nop => {}
+        }
+
+        // --- control transfer & hardware loops ---
+        if let Some(t) = taken_branch_to {
+            next_pc = t;
+        }
+        // Hardware-loop back-edges (inner loop first).
+        if taken_branch_to.is_none() {
+            // Inner loop (l0) first; when an inner loop *finishes*, the same
+            // address may also be the outer loop's end — keep checking so
+            // nested loops with a shared end behave like CV32E40P.
+            for l in 0..2 {
+                let hl = self.clusters[cl_idx].cores[c_idx].hwloop[l];
+                if hl.count > 0 && next_pc == hl.end {
+                    let core = &mut self.clusters[cl_idx].cores[c_idx];
+                    if hl.count > 1 {
+                        core.hwloop[l].count -= 1;
+                        next_pc = hl.start;
+                        core.perf.bump(Event::HwLoop);
+                        // Zero-overhead if the body fits the L0 buffer.
+                        if hl.end - hl.start > l0_insts {
+                            extra += FETCH_GROUP_BYTES / self.cfg.ifetch_bytes_per_cycle().max(1);
+                        }
+                        break;
+                    }
+                    // Loop finished: deactivate and fall through to the
+                    // enclosing level (if its end coincides).
+                    core.hwloop[l].count = 0;
+                }
+            }
+        }
+        // L0 window update & taken-transfer fetch penalty.
+        {
+            let core = &mut self.clusters[cl_idx].cores[c_idx];
+            if next_pc == pc + 1 {
+                // Sequential: the window trails execution.
+                let min_base = (pc + 1).saturating_sub(l0_insts - 1);
+                if core.l0_base < min_base {
+                    core.l0_base = min_base;
+                }
+            } else if taken_branch_to.is_some() {
+                let in_window = next_pc >= core.l0_base && next_pc < core.l0_base + l0_insts;
+                if !in_window {
+                    core.l0_base = next_pc;
+                    extra += FETCH_GROUP_BYTES / self.cfg.ifetch_bytes_per_cycle().max(1);
+                }
+            } else if next_pc < core.l0_base || next_pc >= core.l0_base + l0_insts {
+                // Hardware-loop back-edge out of window: move it.
+                core.l0_base = next_pc;
+            }
+            core.pc = next_pc;
+            core.perf.bump(Event::Instructions);
+            if extra > 0 {
+                core.stall_until = now + extra;
+            }
+        }
+    }
+
+    // --- memory helpers ---------------------------------------------------
+
+    fn native_load(&mut self, cl_idx: usize, c_idx: usize, addr: u32) -> NativeAccess {
+        match self.decode_native(addr) {
+            map::Region::Tcdm(cl, off) if cl == cl_idx => {
+                if !self.tcdm_claim(cl_idx, c_idx, off) {
+                    return NativeAccess::Retry;
+                }
+                let v = self.clusters[cl_idx].tcdm.mem.load(off);
+                self.clusters[cl_idx].cores[c_idx].perf.bump(Event::TcdmAccess);
+                NativeAccess::Done { value: v, extra: 0 }
+            }
+            map::Region::Tcdm(cl, off) => {
+                // Cross-cluster access over the narrow NoC.
+                let v = self.clusters[cl].tcdm.mem.load(off);
+                let e = self.cfg.timing.l2_access;
+                let core = &mut self.clusters[cl_idx].cores[c_idx];
+                core.perf.add(Event::LoadStall, e);
+                NativeAccess::Done { value: v, extra: e }
+            }
+            map::Region::L2(off) => {
+                let v = self.l2.load(off);
+                let e = self.cfg.timing.l2_access - 1;
+                let core = &mut self.clusters[cl_idx].cores[c_idx];
+                core.perf.bump(Event::L2Access);
+                core.perf.add(Event::LoadStall, e);
+                NativeAccess::Done { value: v, extra: e }
+            }
+            map::Region::Unmapped => {
+                panic!("core {cl_idx}.{c_idx}: load from unmapped native address {addr:#010x}")
+            }
+        }
+    }
+
+    fn native_store(&mut self, cl_idx: usize, c_idx: usize, addr: u32, val: u32) -> NativeAccess {
+        match self.decode_native(addr) {
+            map::Region::Tcdm(cl, off) if cl == cl_idx => {
+                if !self.tcdm_claim(cl_idx, c_idx, off) {
+                    return NativeAccess::Retry;
+                }
+                self.clusters[cl_idx].tcdm.mem.store(off, val);
+                self.clusters[cl_idx].cores[c_idx].perf.bump(Event::TcdmAccess);
+                NativeAccess::Done { value: 0, extra: 0 }
+            }
+            map::Region::Tcdm(cl, off) => {
+                self.clusters[cl].tcdm.mem.store(off, val);
+                NativeAccess::Done { value: 0, extra: 1 } // posted
+            }
+            map::Region::L2(off) => {
+                self.l2.store(off, val);
+                self.clusters[cl_idx].cores[c_idx].perf.bump(Event::L2Access);
+                NativeAccess::Done { value: 0, extra: 1 } // posted write
+            }
+            map::Region::Unmapped => {
+                panic!("core {cl_idx}.{c_idx}: store to unmapped native address {addr:#010x}")
+            }
+        }
+    }
+
+    /// Store without conflict modelling (AMO second half; the bank is
+    /// already claimed by the AMO's read).
+    fn store_native_nofail(&mut self, _cl_idx: usize, addr: u32, val: u32) {
+        match self.decode_native(addr) {
+            map::Region::Tcdm(cl, off) => self.clusters[cl].tcdm.mem.store(off, val),
+            map::Region::L2(off) => self.l2.store(off, val),
+            map::Region::Unmapped => panic!("AMO store to unmapped address {addr:#010x}"),
+        }
+    }
+
+    #[inline]
+    fn decode_native(&self, addr: u32) -> map::Region {
+        map::decode(
+            addr,
+            self.clusters.len(),
+            self.cfg.accel.l1_bytes as u32,
+            self.cfg.accel.l2_bytes as u32,
+        )
+    }
+
+    /// Try to claim the TCDM bank for `off` this cycle. On conflict, records
+    /// the stall and returns false (the core retries next cycle).
+    fn tcdm_claim(&mut self, cl_idx: usize, c_idx: usize, off: u32) -> bool {
+        let now = self.now;
+        let cluster = &mut self.clusters[cl_idx];
+        let bank = cluster.tcdm.bank_of(off);
+        let skew_conflict = cluster.extra_conflict_ppm > 0 && {
+            // Deterministic pseudo-random arbitration skew (§3.3, 128-bit).
+            let h = (now ^ (off as u64 ^ ((c_idx as u64) << 17)))
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            (h >> 40) % 1_000_000 < cluster.extra_conflict_ppm
+        };
+        if cluster.bank_claim[bank] == now || skew_conflict {
+            let core = &mut cluster.cores[c_idx];
+            core.perf.bump(Event::TcdmConflict);
+            core.stall_until = now; // retry next cycle
+            false
+        } else {
+            cluster.bank_claim[bank] = now;
+            true
+        }
+    }
+
+    /// Remote load through the ext-address CSR, the narrow NoC and the
+    /// IOMMU. Returns (value, extra cycles).
+    fn remote_load(&mut self, cl_idx: usize, c_idx: usize, lo: u32) -> (u32, u64) {
+        let ext = self.clusters[cl_idx].cores[c_idx].ext_addr;
+        let va = ((ext as u64) << 32) | lo as u64;
+        let now = self.now;
+        let t = self
+            .iommu
+            .translate(va, &self.pt, now)
+            .unwrap_or_else(|| panic!("remote load from unmapped VA {va:#x}"));
+        {
+            let core = &mut self.clusters[cl_idx].cores[c_idx];
+            core.perf.bump(Event::RemoteAccess);
+            core.perf.bump(if t.hit { Event::TlbHit } else { Event::TlbMiss });
+        }
+        let (start, _) = self.clusters[cl_idx]
+            .narrow_port
+            .acquire(now + t.cost, self.cfg.timing.remote_service);
+        let done = start + self.cfg.timing.remote_word;
+        let extra = (done - now) + self.cfg.timing.ext_addr_overhead;
+        let value = self.dram.mem.load(t.pa as u32);
+        let core = &mut self.clusters[cl_idx].cores[c_idx];
+        core.perf.add(Event::LoadStall, extra);
+        (value, extra)
+    }
+
+    /// Remote store (posted write): the core only pays issue cost.
+    fn remote_store(&mut self, cl_idx: usize, c_idx: usize, lo: u32, val: u32) -> u64 {
+        let ext = self.clusters[cl_idx].cores[c_idx].ext_addr;
+        let va = ((ext as u64) << 32) | lo as u64;
+        let now = self.now;
+        let t = self
+            .iommu
+            .translate(va, &self.pt, now)
+            .unwrap_or_else(|| panic!("remote store to unmapped VA {va:#x}"));
+        {
+            let core = &mut self.clusters[cl_idx].cores[c_idx];
+            core.perf.bump(Event::RemoteAccess);
+            core.perf.bump(if t.hit { Event::TlbHit } else { Event::TlbMiss });
+        }
+        let (start, _) = self.clusters[cl_idx]
+            .narrow_port
+            .acquire(now + t.cost, self.cfg.timing.remote_service);
+        self.dram.mem.store(t.pa as u32, val);
+        let extra = (start - now) + self.cfg.timing.ext_addr_overhead + 1;
+        let core = &mut self.clusters[cl_idx].cores[c_idx];
+        core.perf.add(Event::LoadStall, extra);
+        extra
+    }
+
+    /// Submit a DMA descriptor from outside the simulated cores (host-side
+    /// HERO API, tests): data moves and timing is booked on the engine, but
+    /// no core pays setup stalls.
+    pub fn dma_submit_external(&mut self, cl_idx: usize, d: &Descriptor) -> Result<u32> {
+        if cl_idx >= self.clusters.len() {
+            bail!("no such cluster {cl_idx}");
+        }
+        let translate_cost = self.dma_move_data(d);
+        let now = self.now;
+        let setup = self.clusters[cl_idx].dma.setup_cycles();
+        let (id, _) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
+        Ok(id)
+    }
+
+    /// Submit a DMA descriptor: move the data functionally, compute timing,
+    /// and charge the programming core `setup_cycles`.
+    fn dma_submit(&mut self, cl_idx: usize, c_idx: usize, d: &Descriptor) -> (u32, u64) {
+        let translate_cost = self.dma_move_data(d);
+        let now = self.now;
+        let setup = self.clusters[cl_idx].dma.setup_cycles();
+        let (id, _done_at) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
+        let core = &mut self.clusters[cl_idx].cores[c_idx];
+        core.perf.bump(Event::DmaTransfers);
+        core.perf.add(Event::DmaBursts, d.bursts());
+        core.perf.add(Event::DmaBytes, d.total_bytes());
+        (id, setup)
+    }
+
+    /// Functional data movement + IOMMU cost accumulation for a descriptor.
+    fn dma_move_data(&mut self, d: &Descriptor) -> u64 {
+        assert!(d.row_bytes % 4 == 0 && d.dev_addr % 4 == 0 && d.host_va % 4 == 0,
+            "DMA requires word alignment (dev {:#x}, host {:#x}, {} B rows)",
+            d.dev_addr, d.host_va, d.row_bytes);
+        let now = self.now;
+        let mut translate_cost = 0u64;
+        let page = self.cfg.iommu.page_bytes as u64;
+        let mut buf: Vec<u32> = Vec::new();
+        for row in 0..d.rows as u64 {
+            let dev = d.dev_addr as u64 + row * d.dev_stride as u64;
+            let host = d.host_va + row * d.host_stride as u64;
+            let mut done = 0u64;
+            while done < d.row_bytes as u64 {
+                let chunk = (page - (host + done) % page).min(d.row_bytes as u64 - done);
+                let t = self
+                    .iommu
+                    .translate(host + done, &self.pt, now)
+                    .unwrap_or_else(|| panic!("DMA touches unmapped VA {:#x}", host + done));
+                translate_cost += t.cost;
+                let words = (chunk / 4) as usize;
+                buf.resize(words, 0);
+                match d.dir {
+                    DmaDir::HostToDev => {
+                        self.dram.mem.read_words(t.pa as u32, &mut buf);
+                        self.write_dev_words((dev + done) as u32, &buf);
+                    }
+                    DmaDir::DevToHost => {
+                        self.read_dev_words((dev + done) as u32, &mut buf);
+                        self.dram.mem.write_words(t.pa as u32, &buf);
+                    }
+                }
+                done += chunk;
+            }
+        }
+        translate_cost
+    }
+
+    fn write_dev_words(&mut self, addr: u32, data: &[u32]) {
+        match self.decode_native(addr) {
+            map::Region::Tcdm(cl, off) => self.clusters[cl].tcdm.mem.write_words(off, data),
+            map::Region::L2(off) => self.l2.write_words(off, data),
+            map::Region::Unmapped => panic!("DMA to unmapped device address {addr:#010x}"),
+        }
+    }
+
+    fn read_dev_words(&mut self, addr: u32, out: &mut [u32]) {
+        match self.decode_native(addr) {
+            map::Region::Tcdm(cl, off) => self.clusters[cl].tcdm.mem.read_words(off, out),
+            map::Region::L2(off) => self.l2.read_words(off, out),
+            map::Region::Unmapped => panic!("DMA from unmapped device address {addr:#010x}"),
+        }
+    }
+}
+
+enum NativeAccess {
+    /// Bank conflict: retry next cycle without executing.
+    Retry,
+    Done {
+        value: u32,
+        extra: u64,
+    },
+}
+
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulhu => ((a as u64 * b as u64) >> 32) as u32,
+        AluOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                ((a as i32).wrapping_div(b as i32)) as u32
+            }
+        }
+        AluOp::Rem => {
+            if b == 0 {
+                a
+            } else {
+                ((a as i32).wrapping_rem(b as i32)) as u32
+            }
+        }
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Min => ((a as i32).min(b as i32)) as u32,
+        AluOp::Max => ((a as i32).max(b as i32)) as u32,
+    }
+}
+
+#[inline(always)]
+fn cluster_fast_mask_get(mask: &[bool], pc: u32) -> bool {
+    mask.get(pc as usize).copied().unwrap_or(false)
+}
+
+/// Shared step epilogue: hardware-loop back-edges, L0 window maintenance,
+/// fetch penalties on taken control transfers, pc/stall/instruction-count
+/// update. Exactly mirrors the slow path's inline epilogue.
+#[inline]
+fn finish_step(
+    core: &mut crate::cluster::Core,
+    pc: u32,
+    branch_to: Option<u32>,
+    initial_next: u32,
+    mut extra: u64,
+    l0_insts: u32,
+    fetch_pen: u64,
+    now: u64,
+) {
+    let mut next_pc = initial_next;
+    if let Some(t) = branch_to {
+        next_pc = t;
+    } else {
+        for l in 0..2 {
+            let hl = core.hwloop[l];
+            if hl.count > 0 && next_pc == hl.end {
+                if hl.count > 1 {
+                    core.hwloop[l].count -= 1;
+                    next_pc = hl.start;
+                    core.perf.bump(Event::HwLoop);
+                    if hl.end - hl.start > l0_insts {
+                        extra += fetch_pen;
+                    }
+                    break;
+                }
+                core.hwloop[l].count = 0;
+            }
+        }
+    }
+    if next_pc == pc + 1 {
+        let min_base = (pc + 1).saturating_sub(l0_insts - 1);
+        if core.l0_base < min_base {
+            core.l0_base = min_base;
+        }
+    } else if branch_to.is_some() {
+        let in_window = next_pc >= core.l0_base && next_pc < core.l0_base + l0_insts;
+        if !in_window {
+            core.l0_base = next_pc;
+            extra += fetch_pen;
+        }
+    } else if next_pc < core.l0_base || next_pc >= core.l0_base + l0_insts {
+        core.l0_base = next_pc;
+    }
+    core.pc = next_pc;
+    core.perf.bump(Event::Instructions);
+    if extra > 0 {
+        core.stall_until = now + extra;
+    }
+}
+
+fn branch_taken(cond: Cond, a: u32, b: u32) -> bool {
+    match cond {
+        Cond::Eq => a == b,
+        Cond::Ne => a != b,
+        Cond::Lt => (a as i32) < (b as i32),
+        Cond::Ge => (a as i32) >= (b as i32),
+        Cond::Ltu => a < b,
+        Cond::Geu => a >= b,
+    }
+}
+
+/// Convenience: build an Aurora-config accelerator with `dram_bytes`.
+pub fn aurora_accel(dram_bytes: usize) -> Accel {
+    Accel::new(crate::config::aurora(), dram_bytes)
+}
+
+// Re-export for integration tests.
+pub use crate::cluster::CoreState as AccelCoreState;
+
+#[allow(unused)]
+fn _context_helper() -> Result<()> {
+    // Keep `Context` imported for future use without a warning.
+    Option::<()>::Some(()).context("ok")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,474 @@
+//! Interpreter unit tests: ISA semantics, timing behaviours, fork/join,
+//! DMA data movement, remote accesses.
+
+use super::*;
+use crate::config::aurora;
+use crate::isa::Inst as I;
+use crate::mem::map::TCDM_BASE;
+
+const HOST_BASE: u64 = 0x40_0000_0000;
+
+fn accel() -> Accel {
+    let mut a = Accel::new(aurora(), 1 << 20);
+    // Identity-ish mapping: host VA window onto DRAM PA 0..1 MiB.
+    a.pt.map_range(HOST_BASE, 0, 1 << 20);
+    a
+}
+
+fn run(a: &mut Accel, insts: Vec<I>, args: &[u32]) -> u64 {
+    a.load_program(Arc::new(Program::new(insts)), 1).unwrap();
+    a.set_args(args, &[]).unwrap();
+    a.run(1_000_000).unwrap()
+}
+
+fn reg(a: &Accel, r: u8) -> u32 {
+    a.clusters[0].cores[0].regs[r as usize]
+}
+
+#[test]
+fn arithmetic_loop_counts_down() {
+    let mut a = accel();
+    // x1 = 10; loop { x2 += x1; x1 -= 1 } while x1 != 0
+    run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: 10 },
+            I::Alu { op: AluOp::Add, rd: 2, rs1: 2, rs2: 1 },
+            I::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 1 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 2), 55);
+}
+
+#[test]
+fn tcdm_load_store_roundtrip() {
+    let mut a = accel();
+    run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: TCDM_BASE as i32 },
+            I::Li { rd: 2, imm: 1234 },
+            I::Sw { rs2: 2, rs1: 1, offset: 8 },
+            I::Lw { rd: 3, rs1: 1, offset: 8 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 3), 1234);
+    assert_eq!(a.clusters[0].tcdm.mem.load(8), 1234);
+}
+
+#[test]
+fn float_mac_path() {
+    let mut a = accel();
+    // f1 = 2.0, f2 = 3.0, f3 = 10.0; f3 += f1*f2 -> 16.0
+    let p = vec![
+        I::Li { rd: 1, imm: 2.0f32.to_bits() as i32 },
+        I::FmvWX { fd: 1, rs1: 1 },
+        I::Li { rd: 2, imm: 3.0f32.to_bits() as i32 },
+        I::FmvWX { fd: 2, rs1: 2 },
+        I::Li { rd: 3, imm: 10.0f32.to_bits() as i32 },
+        I::FmvWX { fd: 3, rs1: 3 },
+        I::Fmac { fd: 3, fs1: 1, fs2: 2 },
+        I::Halt,
+    ];
+    run(&mut a, p, &[]);
+    assert_eq!(a.clusters[0].cores[0].fregs[3], 16.0);
+}
+
+#[test]
+fn hwloop_executes_n_times_with_zero_overhead() {
+    let mut a = accel();
+    // lp.setup l0, x1(=100), body = [2,4): x2 += 1; x3 += 2
+    let cycles = run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: 100 },
+            I::HwLoop { l: 0, count: 1, start: 2, end: 4 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 },
+            I::AluImm { op: AluOp::Add, rd: 3, rs1: 3, imm: 2 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 2), 100);
+    assert_eq!(reg(&a, 3), 200);
+    // 2 setup insts + 200 body executions + halt + icache compulsory misses;
+    // zero loop overhead means cycles ≈ 203 + fetch.
+    assert!(cycles < 230, "hwloop not zero-overhead: {cycles} cycles");
+}
+
+#[test]
+fn hwloop_zero_count_skips_body() {
+    let mut a = accel();
+    run(
+        &mut a,
+        vec![
+            I::HwLoop { l: 0, count: 1, start: 1, end: 3 }, // x1 = 0
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 2), 0);
+}
+
+#[test]
+fn nested_hwloops() {
+    let mut a = accel();
+    // outer(l1) 5 times { inner(l0) 4 times { x3 += 1 } }
+    run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: 5 },
+            I::Li { rd: 2, imm: 4 },
+            I::HwLoop { l: 1, count: 1, start: 3, end: 5 },
+            I::HwLoop { l: 0, count: 2, start: 4, end: 5 },
+            I::AluImm { op: AluOp::Add, rd: 3, rs1: 3, imm: 1 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 3), 20);
+}
+
+#[test]
+fn branch_costs_more_than_hwloop() {
+    // The same 100-iteration loop with a branch back-edge must be slower
+    // than with a hardware loop (Fig 9 mechanism).
+    let mut a1 = accel();
+    let c_branch = run(
+        &mut a1,
+        vec![
+            I::Li { rd: 1, imm: 100 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 },
+            I::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 1 },
+            I::Halt,
+        ],
+        &[],
+    );
+    let mut a2 = accel();
+    let c_hw = run(
+        &mut a2,
+        vec![
+            I::Li { rd: 1, imm: 100 },
+            I::HwLoop { l: 0, count: 1, start: 2, end: 4 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: 1 },
+            I::Nop,
+            I::Halt,
+        ],
+        &[],
+    );
+    assert!(c_branch > c_hw + 80, "branch {c_branch} vs hwloop {c_hw}");
+}
+
+#[test]
+fn remote_load_sees_host_data_and_pays_latency() {
+    let mut a = accel();
+    a.dram.mem.store(0x100, 77);
+    let hi = (HOST_BASE >> 32) as i32;
+    let lo = (HOST_BASE & 0xffff_ffff) as i32 + 0x100;
+    let cycles = run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: hi },
+            I::CsrW { csr: Csr::ExtAddr, rs1: 1 },
+            I::Li { rd: 2, imm: lo },
+            I::LwExt { rd: 3, rs1: 2, offset: 0 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 3), 77);
+    let t = aurora().timing;
+    // First access: TLB miss -> walk; plus remote latency + ext overhead.
+    assert!(
+        cycles >= aurora().iommu.walk_cycles + t.remote_word + t.ext_addr_overhead,
+        "remote load too cheap: {cycles}"
+    );
+    let perf = a.clusters[0].cores[0].perf.clone();
+    assert_eq!(perf.get(Event::TlbMiss), 1);
+    assert_eq!(perf.get(Event::RemoteAccess), 1);
+}
+
+#[test]
+fn second_remote_access_hits_tlb() {
+    let mut a = accel();
+    a.dram.mem.store(0x104, 5);
+    let hi = (HOST_BASE >> 32) as i32;
+    let lo = (HOST_BASE & 0xffff_ffff) as i32;
+    run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: hi },
+            I::CsrW { csr: Csr::ExtAddr, rs1: 1 },
+            I::Li { rd: 2, imm: lo },
+            I::LwExt { rd: 3, rs1: 2, offset: 0x100 },
+            I::LwExt { rd: 4, rs1: 2, offset: 0x104 },
+            I::Halt,
+        ],
+        &[],
+    );
+    let perf = a.clusters[0].cores[0].perf.clone();
+    assert_eq!(perf.get(Event::TlbMiss), 1);
+    assert_eq!(perf.get(Event::TlbHit), 1);
+    assert_eq!(reg(&a, 4), 5);
+}
+
+#[test]
+fn remote_store_is_posted() {
+    let mut a = accel();
+    let hi = (HOST_BASE >> 32) as i32;
+    let lo = (HOST_BASE & 0xffff_ffff) as i32;
+    // Prime the TLB with a load, then measure store cost: it must be far
+    // cheaper than a load (posted write).
+    run(
+        &mut a,
+        vec![
+            I::Li { rd: 1, imm: hi },
+            I::CsrW { csr: Csr::ExtAddr, rs1: 1 },
+            I::Li { rd: 2, imm: lo },
+            I::LwExt { rd: 3, rs1: 2, offset: 0 },
+            I::Li { rd: 4, imm: 99 },
+            I::SwExt { rs2: 4, rs1: 2, offset: 8 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(a.dram.mem.load(8), 99);
+}
+
+#[test]
+fn dma_1d_roundtrip_moves_data() {
+    let mut a = accel();
+    for i in 0..64u32 {
+        a.dram.mem.store(i * 4, i + 1000);
+    }
+    let hi = (HOST_BASE >> 32) as u32;
+    let lo = HOST_BASE as u32;
+    // args: x10 = dev, x11 = host_lo, x12 = host_hi, x13 = bytes
+    run(
+        &mut a,
+        vec![
+            I::DmaStart1D { rd: 5, dir: DmaDir::HostToDev, dev: 10, host_lo: 11, host_hi: 12, bytes: 13 },
+            I::DmaWait { rs1: 5 },
+            I::Halt,
+        ],
+        &[TCDM_BASE, lo, hi, 256],
+    );
+    for i in 0..64u32 {
+        assert_eq!(a.clusters[0].tcdm.mem.load(i * 4), i + 1000);
+    }
+    let perf = a.clusters[0].cores[0].perf.clone();
+    assert_eq!(perf.get(Event::DmaBytes), 256);
+    assert_eq!(perf.get(Event::DmaTransfers), 1);
+    assert!(perf.get(Event::DmaWaitCycles) > 0, "core must block on dma.wait");
+}
+
+#[test]
+fn dma_2d_gathers_rows() {
+    let mut a = accel();
+    // Host matrix: 8 rows x 16 words, gather a 4x4 tile at (2,3).
+    for r in 0..8u32 {
+        for c in 0..16u32 {
+            a.dram.mem.store((r * 16 + c) * 4, r * 100 + c);
+        }
+    }
+    let tile_va = HOST_BASE + ((2 * 16 + 3) * 4) as u64;
+    run(
+        &mut a,
+        vec![
+            I::DmaStart2D {
+                rd: 5,
+                dir: DmaDir::HostToDev,
+                dev: 10,
+                host_lo: 11,
+                host_hi: 12,
+                bytes: 13,
+                count: 14,
+                dev_stride: 15,
+                host_stride: 16,
+            },
+            I::DmaWait { rs1: 5 },
+            I::Halt,
+        ],
+        &[
+            TCDM_BASE,
+            tile_va as u32,
+            (tile_va >> 32) as u32,
+            16, // 4 words per row
+            4,  // 4 rows
+            16, // dense dev stride
+            64, // host stride = full row of 16 words
+        ],
+    );
+    for r in 0..4u32 {
+        for c in 0..4u32 {
+            let got = a.clusters[0].tcdm.mem.load((r * 4 + c) * 4);
+            assert_eq!(got, (r + 2) * 100 + (c + 3), "tile ({r},{c})");
+        }
+    }
+    // 2D transfer = one burst per row.
+    assert_eq!(a.clusters[0].cores[0].perf.get(Event::DmaBursts), 4);
+}
+
+#[test]
+fn fork_join_parallel_sum() {
+    let mut a = accel();
+    // Master: x1 = TCDM base. Fork: every core writes its hartid to
+    // TCDM[hartid], then Join; master sums afterwards.
+    let base = TCDM_BASE as i32;
+    run(
+        &mut a,
+        vec![
+            // 0: entry
+            I::Fork { target: 1 },
+            // 1: parallel region (all 8 cores)
+            I::CsrR { rd: 2, csr: Csr::MHartId },
+            I::Li { rd: 1, imm: base },
+            I::AluImm { op: AluOp::Sll, rd: 3, rs1: 2, imm: 2 },
+            I::Alu { op: AluOp::Add, rd: 3, rs1: 1, rs2: 3 },
+            I::Sw { rs2: 2, rs1: 3, offset: 0 },
+            I::Join,
+            // 7: master-only continuation: sum TCDM[0..8]
+            I::Li { rd: 1, imm: base },
+            I::Li { rd: 4, imm: 8 },
+            I::Li { rd: 5, imm: 0 },
+            I::LwPost { rd: 6, rs1: 1, imm: 4 },
+            I::Alu { op: AluOp::Add, rd: 5, rs1: 5, rs2: 6 },
+            I::AluImm { op: AluOp::Add, rd: 4, rs1: 4, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 4, rs2: 0, target: 10 },
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(reg(&a, 5), 0 + 1 + 2 + 3 + 4 + 5 + 6 + 7);
+    // Workers must be asleep again after Join.
+    for c in 1..8 {
+        assert_eq!(a.clusters[0].cores[c].state, CoreState::Sleeping, "core {c}");
+    }
+}
+
+#[test]
+fn parallel_speedup_is_near_linear_for_independent_work() {
+    // 8 cores each spinning on independent ALU work must be ~8x faster than one core
+    // doing all of it serially.
+    let work_per_core = 2_000;
+    let mut a1 = accel();
+    let serial = run(
+        &mut a1,
+        vec![
+            I::Li { rd: 1, imm: 8 * work_per_core },
+            I::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 1 },
+            I::Halt,
+        ],
+        &[],
+    );
+    let mut a8 = accel();
+    let parallel = run(
+        &mut a8,
+        vec![
+            I::Fork { target: 1 },
+            I::Li { rd: 1, imm: work_per_core },
+            I::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 2 },
+            I::Join,
+            I::Halt,
+        ],
+        &[],
+    );
+    let speedup = serial as f64 / parallel as f64;
+    assert!((6.5..8.5).contains(&speedup), "speedup {speedup} (serial {serial}, par {parallel})");
+}
+
+#[test]
+fn tcdm_bank_conflicts_are_counted() {
+    let mut a = accel();
+    // All 8 cores hammer the SAME TCDM word -> same bank every cycle.
+    run(
+        &mut a,
+        vec![
+            I::Fork { target: 1 },
+            I::Li { rd: 1, imm: TCDM_BASE as i32 },
+            I::Li { rd: 2, imm: 500 },
+            I::Lw { rd: 3, rs1: 1, offset: 0 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 2, rs2: 0, target: 3 },
+            I::Join,
+            I::Halt,
+        ],
+        &[],
+    );
+    let agg = a.perf_aggregate();
+    assert!(
+        agg.get(Event::TcdmConflict) > 1000,
+        "expected heavy conflicts, got {}",
+        agg.get(Event::TcdmConflict)
+    );
+}
+
+#[test]
+fn amo_add_is_atomic_across_cores() {
+    let mut a = accel();
+    // Each core does 100 amoadd(+1) on the same counter.
+    run(
+        &mut a,
+        vec![
+            I::Fork { target: 1 },
+            I::Li { rd: 1, imm: TCDM_BASE as i32 },
+            I::Li { rd: 2, imm: 100 },
+            I::Li { rd: 3, imm: 1 },
+            I::Amo { op: AmoOp::Add, rd: 4, rs1: 1, rs2: 3 },
+            I::AluImm { op: AluOp::Add, rd: 2, rs1: 2, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 2, rs2: 0, target: 4 },
+            I::Join,
+            I::Halt,
+        ],
+        &[],
+    );
+    assert_eq!(a.clusters[0].tcdm.mem.load(0), 800);
+}
+
+#[test]
+fn perf_pause_stops_cycle_attribution() {
+    let mut a = accel();
+    run(
+        &mut a,
+        vec![
+            I::PerfCtl { resume: false },
+            I::Li { rd: 1, imm: 1000 },
+            I::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            I::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 2 },
+            I::PerfCtl { resume: true },
+            I::Halt,
+        ],
+        &[],
+    );
+    let perf = a.clusters[0].cores[0].perf.clone();
+    // Only the instructions after resume are counted.
+    assert!(perf.get(Event::Instructions) <= 2, "{}", perf.get(Event::Instructions));
+}
+
+#[test]
+fn offload_timeout_errors() {
+    let mut a = accel();
+    a.load_program(
+        Arc::new(Program::new(vec![I::Jal { rd: 0, target: 0 }])),
+        1,
+    )
+    .unwrap();
+    assert!(a.run(1_000).is_err());
+}
+
+#[test]
+fn args_reach_core0() {
+    let mut a = accel();
+    run(&mut a, vec![I::Alu { op: AluOp::Add, rd: 1, rs1: 10, rs2: 11 }, I::Halt], &[30, 12]);
+    assert_eq!(reg(&a, 1), 42);
+}

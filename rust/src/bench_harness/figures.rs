@@ -1,0 +1,413 @@
+//! Regeneration of every table and figure in the paper's evaluation (§3).
+//!
+//! Each `figN` function runs the relevant workload matrix through the full
+//! stack, verifies the numerics against the host golden model, and returns
+//! structured rows; the `benches/figN.rs` targets print them side by side
+//! with the paper's reported values. Absolute cycle counts are not expected
+//! to match the authors' FPGA (DESIGN.md §6) — the *shape* (who wins, by
+//! roughly what factor) is the reproduction target.
+
+use super::{geomean, run_workload, verify, RunOutcome, Variant};
+use crate::compiler::metrics;
+use crate::config::{aurora, HeroConfig};
+use crate::isa::Inst;
+use crate::workloads::{self, Workload};
+use anyhow::Result;
+
+const MAX_CYCLES: u64 = 50_000_000_000;
+const SEED: u64 = 2022;
+
+/// Use tiny sizes when `HERO_FAST=1` (CI smoke runs).
+pub fn bench_workloads() -> Vec<Workload> {
+    if std::env::var("HERO_FAST").as_deref() == Ok("1") {
+        workloads::all_tiny()
+    } else {
+        workloads::all_default()
+    }
+}
+
+fn checked(cfg: &HeroConfig, w: &Workload, v: Variant, threads: u32) -> Result<RunOutcome> {
+    let out = run_workload(cfg, w, v, threads, SEED, MAX_CYCLES)?;
+    verify(w, &out, SEED)?;
+    Ok(out)
+}
+
+// --- Fig 4 ------------------------------------------------------------------
+
+/// Fig 4: speed-up of local-memory execution with handwritten DMA over
+/// execution on external main memory (1 thread), plus the DMA cycle share.
+pub struct Fig4Row {
+    pub name: &'static str,
+    pub speedup: f64,
+    pub dma_share_pct: f64,
+}
+
+pub fn fig4(cfg: &HeroConfig) -> Result<Vec<Fig4Row>> {
+    let mut rows = Vec::new();
+    for w in bench_workloads() {
+        let base = checked(cfg, &w, Variant::Unmodified, 1)?;
+        let hand = checked(cfg, &w, Variant::Handwritten, 1)?;
+        rows.push(Fig4Row {
+            name: w.name,
+            speedup: base.cycles() as f64 / hand.cycles() as f64,
+            dma_share_pct: 100.0 * hand.dma_cycles() as f64 / hand.cycles() as f64,
+        });
+    }
+    Ok(rows)
+}
+
+// --- Fig 5 ------------------------------------------------------------------
+
+/// Fig 5: 8-thread vs 1-thread speed-up: computation-only, overall, and the
+/// DMA share at 8 threads.
+pub struct Fig5Row {
+    pub name: &'static str,
+    pub comp_speedup: f64,
+    pub overall_speedup: f64,
+    pub dma_share_pct: f64,
+}
+
+pub fn fig5(cfg: &HeroConfig) -> Result<Vec<Fig5Row>> {
+    let threads = cfg.accel.cores_per_cluster as u32;
+    let mut rows = Vec::new();
+    for w in bench_workloads() {
+        let t1 = checked(cfg, &w, Variant::Handwritten, 1)?;
+        let t8 = checked(cfg, &w, Variant::Handwritten, threads)?;
+        rows.push(Fig5Row {
+            name: w.name,
+            comp_speedup: t1.compute_cycles() as f64 / t8.compute_cycles() as f64,
+            overall_speedup: t1.cycles() as f64 / t8.cycles() as f64,
+            dma_share_pct: 100.0 * t8.dma_cycles() as f64 / t8.cycles() as f64,
+        });
+    }
+    Ok(rows)
+}
+
+// --- Fig 6 ------------------------------------------------------------------
+
+/// Fig 6: code complexity of the handwritten tiled implementation relative
+/// to the unmodified program (CCCC lines-of-code and McCabe cyclomatic).
+pub struct Fig6Row {
+    pub name: &'static str,
+    pub loc_unmodified: u32,
+    pub loc_handwritten: u32,
+    pub cyc_unmodified: u32,
+    pub cyc_handwritten: u32,
+}
+
+impl Fig6Row {
+    pub fn loc_ratio(&self) -> f64 {
+        self.loc_handwritten as f64 / self.loc_unmodified as f64
+    }
+    pub fn cyc_ratio(&self) -> f64 {
+        self.cyc_handwritten as f64 / self.cyc_unmodified as f64
+    }
+}
+
+pub fn fig6() -> Vec<Fig6Row> {
+    workloads::all_default()
+        .iter()
+        .map(|w| {
+            let u = metrics::complexity(&w.unmodified);
+            let h = metrics::complexity(&w.handwritten);
+            Fig6Row {
+                name: w.name,
+                loc_unmodified: u.loc,
+                loc_handwritten: h.loc,
+                cyc_unmodified: u.cyclomatic,
+                cyc_handwritten: h.cyclomatic,
+            }
+        })
+        .collect()
+}
+
+// --- Fig 7 ------------------------------------------------------------------
+
+/// Fig 7: speed-up of compiler-generated (AutoDMA) and handwritten tiling
+/// over execution on external main memory, 8 threads.
+pub struct Fig7Row {
+    pub name: &'static str,
+    pub autodma_speedup: f64,
+    pub handwritten_speedup: f64,
+}
+
+pub fn fig7(cfg: &HeroConfig) -> Result<Vec<Fig7Row>> {
+    let threads = cfg.accel.cores_per_cluster as u32;
+    let mut rows = Vec::new();
+    for w in bench_workloads() {
+        let base = checked(cfg, &w, Variant::Unmodified, threads)?;
+        let auto = checked(cfg, &w, Variant::AutoDma, threads)?;
+        let hand = checked(cfg, &w, Variant::Handwritten, threads)?;
+        rows.push(Fig7Row {
+            name: w.name,
+            autodma_speedup: base.cycles() as f64 / auto.cycles() as f64,
+            handwritten_speedup: base.cycles() as f64 / hand.cycles() as f64,
+        });
+    }
+    Ok(rows)
+}
+
+// --- Fig 8 ------------------------------------------------------------------
+
+/// Fig 8: effect of the accelerator on-chip network data width (32/128 bit
+/// vs the 64-bit default) on DMA, computation, and total cycles.
+pub struct Fig8Row {
+    pub name: &'static str,
+    pub width_bits: u32,
+    pub dma_ratio: f64,
+    pub comp_ratio: f64,
+    pub total_ratio: f64,
+}
+
+pub fn fig8(base_cfg: &HeroConfig) -> Result<Vec<Fig8Row>> {
+    let threads = base_cfg.accel.cores_per_cluster as u32;
+    let mut rows = Vec::new();
+    for w in bench_workloads() {
+        let run_width = |bits: u32| -> Result<RunOutcome> {
+            let mut cfg = base_cfg.clone();
+            cfg.noc.dma_width_bits = bits;
+            checked(&cfg, &w, Variant::Handwritten, threads)
+        };
+        let r64 = run_width(64)?;
+        for bits in [32u32, 128] {
+            let r = run_width(bits)?;
+            rows.push(Fig8Row {
+                name: w.name,
+                width_bits: bits,
+                dma_ratio: r64.dma_cycles() as f64 / r.dma_cycles().max(1) as f64,
+                comp_ratio: r64.compute_cycles() as f64 / r.compute_cycles() as f64,
+                total_ratio: r64.cycles() as f64 / r.cycles() as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// --- Fig 9 ------------------------------------------------------------------
+
+/// Fig 9: speed-up of the Xpulpv2 ISA extension over RV32IMAFC, with
+/// handwritten DMA and 8 threads. Three bars: compiler-generated Xpulpv2,
+/// + manual register promotion, + expert inline assembly (modeled — see
+/// [`EXPERT_FACTOR`]).
+pub struct Fig9Row {
+    pub name: &'static str,
+    pub xpulp_speedup: f64,
+    pub promoted_speedup: f64,
+    pub expert_speedup: f64,
+    /// Innermost-loop instruction counts (base ISA vs Xpulpv2 vs promoted)
+    /// — the paper's 10 → 5 → 4 analysis for gemm.
+    pub inner_base: usize,
+    pub inner_xpulp: usize,
+    pub inner_promoted: usize,
+}
+
+/// Expert-written inline assembly comparator, as a factor on the promoted
+/// compiler output. §3.4 found the compiler's instructions "perform on-par
+/// or better than the expert-written instructions" — for covar the compiler
+/// *outperformed* the expert "due to better scheduling". We model the expert
+/// at parity except covar's documented scheduling loss.
+pub fn expert_factor(name: &str) -> f64 {
+    match name {
+        "covar" => 0.94,
+        _ => 1.0,
+    }
+}
+
+pub fn fig9(base_cfg: &HeroConfig) -> Result<Vec<Fig9Row>> {
+    let threads = base_cfg.accel.cores_per_cluster as u32;
+    let mut base_isa = base_cfg.clone();
+    base_isa.accel.isa.xpulp = false;
+    let mut rows = Vec::new();
+    for w in bench_workloads() {
+        let base = checked(&base_isa, &w, Variant::Handwritten, threads)?;
+        let xp = checked(base_cfg, &w, Variant::Handwritten, threads)?;
+        let prom = checked(base_cfg, &w, Variant::Promoted, threads)?;
+        let s1 = base.cycles() as f64 / xp.cycles() as f64;
+        let s2 = base.cycles() as f64 / prom.cycles() as f64;
+        rows.push(Fig9Row {
+            name: w.name,
+            xpulp_speedup: s1,
+            promoted_speedup: s2,
+            expert_speedup: s2 * expert_factor(w.name),
+            inner_base: inner_loop_len(&base_prog(&base_isa, &w, Variant::Handwritten)?),
+            inner_xpulp: inner_loop_len(&base_prog(base_cfg, &w, Variant::Handwritten)?),
+            inner_promoted: inner_loop_len(&base_prog(base_cfg, &w, Variant::Promoted)?),
+        });
+    }
+    Ok(rows)
+}
+
+fn base_prog(
+    cfg: &HeroConfig,
+    w: &Workload,
+    v: Variant,
+) -> Result<crate::isa::Program> {
+    let opts = crate::compiler::LowerOpts::for_config(cfg);
+    let kernel = match v {
+        Variant::Handwritten => &w.handwritten,
+        Variant::Promoted => w.promoted.as_ref().unwrap_or(&w.handwritten),
+        _ => &w.unmodified,
+    };
+    let (lowered, _) = crate::compiler::compile(kernel, &opts, None)?;
+    Ok(lowered.program)
+}
+
+/// Length of the (static) innermost loop body: the smallest hardware-loop
+/// body, or the smallest backward-branch span when no hardware loops exist.
+pub fn inner_loop_len(p: &crate::isa::Program) -> usize {
+    let mut best = usize::MAX;
+    for (i, inst) in p.insts.iter().enumerate() {
+        match inst {
+            Inst::HwLoop { start, end, .. } => {
+                best = best.min((*end - *start) as usize);
+            }
+            Inst::Branch { target, .. } if (*target as usize) < i => {
+                best = best.min(i - *target as usize + 1);
+            }
+            _ => {}
+        }
+    }
+    if best == usize::MAX {
+        0
+    } else {
+        best
+    }
+}
+
+// --- Tables ------------------------------------------------------------------
+
+/// Table 1: platform configurations.
+pub fn table1() -> String {
+    use crate::config::resources;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>12} {:>14}\n",
+        "Configuration", "Aurora", "Blizzard", "Cyclone"
+    ));
+    let cfgs = [aurora(), crate::config::blizzard(), crate::config::cyclone()];
+    let row = |label: &str, f: &dyn Fn(&HeroConfig) -> String| -> String {
+        format!(
+            "{:<16} {:>12} {:>12} {:>14}\n",
+            label,
+            f(&cfgs[0]),
+            f(&cfgs[1]),
+            f(&cfgs[2])
+        )
+    };
+    out.push_str(&row("Host ISA", &|c| c.host.isa.clone()));
+    out.push_str(&row("Host Core Arch.", &|c| c.host.core_arch.clone()));
+    out.push_str(&row("Host # Cores", &|c| c.host.n_cores.to_string()));
+    out.push_str(&row("Accel. ISA", &|c| c.accel.isa.name()));
+    out.push_str(&row("Accel. Core", &|c| c.accel.core_arch.clone()));
+    out.push_str(&row("Accel. # Cores", &|c| c.n_accel_cores().to_string()));
+    out.push_str(&row("Carrier", &|c| c.carrier.clone()));
+    out.push_str(&row("Freq. (MHz)", &|c| c.accel.freq_mhz.to_string()));
+    out.push_str(&row("Status", &|c| c.status.clone()));
+    out.push('\n');
+    // E9: the FPGA resource model vs the paper's reported utilization.
+    let u = resources::utilization(&aurora(), &resources::ZU9EG);
+    let est = resources::estimate(&aurora(), &resources::ZU9EG);
+    out.push_str(&format!(
+        "Aurora on ZU9EG (resource model): CLB {:.1} % (paper 98.1 %), BRAM {:.1} % \
+         (paper 24.2 %), DSP {:.1} % (paper 2.9 %), est. {:.0} MHz (paper 50 MHz)\n",
+        100.0 * u.clb,
+        100.0 * u.bram,
+        100.0 * u.dsp,
+        est.freq_mhz
+    ));
+    out
+}
+
+/// Table 2: evaluated kernels with complexity classes.
+pub fn table2() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:>6} {:<44} {:>8} {:>8}\n",
+        "Kernel", "N", "Accelerated computation", "space", "compute"
+    ));
+    let desc: &[(&str, &str, &str, &str)] = &[
+        ("2mm", "C = alpha*A*B", "N^2", "N^3"),
+        ("3mm", "E = 2mm(A,B) -> F = 2mm(C,D) -> G = 2mm(E,F)", "N^2", "N^3"),
+        ("atax", "B = A*x -> Y_i = sum_j A[j,i]*B_j", "N^2", "N^2"),
+        ("bicg", "Q = A*P -> S_j = sum_i R_i*A[i,j]", "N^2", "N^2"),
+        ("conv2d", "B[i,j] = sum_kl c[k,l]*A[i+k,j+l]", "N^2", "N^2"),
+        ("covar", "E = a*sum D; D -= E; S = D^T*D", "N^2", "N^3"),
+        ("darknet", "YOLO conv layer as C = alpha*A*B (2D-tiled)", "N^2", "N^3"),
+        ("gemm", "C = beta*C + alpha*A*B", "N^2", "N^3"),
+    ];
+    for (w, (_, d, s, c)) in workloads::all_default().iter().zip(desc) {
+        out.push_str(&format!("{:<8} {:>6} {:<44} {:>8} {:>8}\n", w.name, w.size, d, s, c));
+    }
+    out
+}
+
+/// Summary line used by several benches.
+pub fn summarize_speedups(label: &str, xs: &[f64]) -> String {
+    format!(
+        "{label}: min {:.2}x, max {:.2}x, geomean {:.2}x",
+        xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        xs.iter().cloned().fold(0.0, f64::max),
+        geomean(xs)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_matches_paper_categories() {
+        let rows = fig6();
+        // The six 1D-tiled kernels: modest overhead. darknet (2D): higher.
+        // covar (2 passes of 2D tiling): highest LoC overhead.
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        for n in ["2mm", "3mm", "atax", "bicg", "conv2d", "gemm"] {
+            let r = by_name(n);
+            assert!(
+                (1.3..3.6).contains(&r.loc_ratio()),
+                "{n} LoC ratio {:.2}",
+                r.loc_ratio()
+            );
+        }
+        let dk = by_name("darknet");
+        assert!(dk.loc_ratio() > 2.5, "darknet 2D tiling should cost more LoC");
+        assert!(dk.cyc_ratio() > 2.0, "darknet 2D tiling adds decision points");
+        // covar's two 2D passes are expensive in absolute added lines (the
+        // paper's 6.3x ratio divides by a one-line kernel; our unmodified
+        // covar already carries three nests, so the ratio is smaller but the
+        // absolute overhead is the largest — see EXPERIMENTS.md).
+        let cv = by_name("covar");
+        let added = |r: &Fig6Row| r.loc_handwritten - r.loc_unmodified;
+        for n in ["2mm", "gemm", "conv2d", "bicg", "atax", "darknet"] {
+            assert!(
+                added(cv) >= added(by_name(n)),
+                "covar's two 2D passes must add more lines than {n}: {} vs {}",
+                added(cv),
+                added(by_name(n))
+            );
+        }
+    }
+
+    #[test]
+    fn inner_loop_len_finds_hwloop() {
+        use crate::isa::{Inst as I, Program};
+        let p = Program::new(vec![
+            I::Li { rd: 1, imm: 3 },
+            I::HwLoop { l: 0, count: 1, start: 2, end: 5 },
+            I::Nop,
+            I::Nop,
+            I::Nop,
+            I::Halt,
+        ]);
+        assert_eq!(inner_loop_len(&p), 3);
+    }
+
+    #[test]
+    fn tables_render() {
+        let t1 = table1();
+        assert!(t1.contains("Aurora"));
+        assert!(t1.contains("RV32IMAFCXpulpv2"));
+        let t2 = table2();
+        assert!(t2.contains("darknet"));
+    }
+}

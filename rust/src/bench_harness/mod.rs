@@ -1,0 +1,239 @@
+//! Benchmark harness: run workloads through the full stack and regenerate
+//! the paper's tables and figures.
+//!
+//! Every evaluation artifact (Table 1/2, Figs 4–9) has a `cargo bench`
+//! target built on [`run_workload`]: compile a workload variant for a
+//! platform configuration, execute it on the simulated accelerator through
+//! the OpenMP offload runtime, verify the numerics against the host golden
+//! model (and, when artifacts are built, against the PJRT-executed
+//! JAX/Pallas golden model), and report cycle counts and counter breakdowns.
+
+pub mod figures;
+pub mod stats;
+
+use crate::accel::Accel;
+use crate::compiler::{self, AutoDmaOpts, AutoDmaReport, LowerOpts};
+use crate::config::HeroConfig;
+use crate::host::{HostBuf, HostContext};
+use crate::runtime::omp::{offload, OffloadResult};
+use crate::trace::Event;
+use crate::workloads::Workload;
+use anyhow::{anyhow, bail, Result};
+
+/// Which form of the kernel to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Plain OpenMP, executing on external main memory (Fig 4/7 baseline).
+    Unmodified,
+    /// Handwritten tiling + DMA (Figs 4, 5, 8, 9).
+    Handwritten,
+    /// Handwritten + manual register promotion (Fig 9, second bar).
+    Promoted,
+    /// Compiler-generated tiling + DMA (Fig 7).
+    AutoDma,
+}
+
+impl Variant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Unmodified => "unmodified",
+            Variant::Handwritten => "handwritten",
+            Variant::Promoted => "promoted",
+            Variant::AutoDma => "autodma",
+        }
+    }
+}
+
+/// Outcome of one full-stack run.
+pub struct RunOutcome {
+    pub result: OffloadResult,
+    /// Final contents of every mapped array.
+    pub arrays: Vec<Vec<f32>>,
+    /// AutoDMA report (AutoDma variant only).
+    pub report: Option<AutoDmaReport>,
+    /// Static instruction count of the lowered kernel.
+    pub text_size: usize,
+}
+
+impl RunOutcome {
+    /// Cycles attributable to DMA (descriptor setup + core-visible waits).
+    pub fn dma_cycles(&self) -> u64 {
+        self.result.perf.get(Event::DmaWaitCycles)
+            + self.result.perf.get(Event::DmaTransfers) * 2
+    }
+
+    /// Total device cycles.
+    pub fn cycles(&self) -> u64 {
+        self.result.device_cycles
+    }
+
+    /// Compute cycles = total − DMA-attributable.
+    pub fn compute_cycles(&self) -> u64 {
+        self.cycles().saturating_sub(self.dma_cycles())
+    }
+}
+
+/// Compile and run one workload variant on a fresh accelerator instance.
+///
+/// `threads` = OpenMP thread count (1 or the cluster's core count).
+pub fn run_workload(
+    cfg: &HeroConfig,
+    w: &Workload,
+    variant: Variant,
+    threads: u32,
+    seed: u64,
+    max_cycles: u64,
+) -> Result<RunOutcome> {
+    let mut opts = LowerOpts::for_config(cfg);
+    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
+    let (kernel, autodma) = match variant {
+        Variant::Unmodified => (&w.unmodified, None),
+        Variant::Handwritten => (&w.handwritten, None),
+        Variant::Promoted => (
+            w.promoted.as_ref().unwrap_or(&w.handwritten),
+            None,
+        ),
+        Variant::AutoDma => (&w.unmodified, Some(AutoDmaOpts::for_config(cfg))),
+    };
+    let (lowered, report) = compiler::compile(kernel, &opts, autodma.as_ref())?;
+
+    // Size DRAM to the workload (plus slack for page rounding).
+    let total_elems: usize = w.arrays.iter().map(|a| a.elems).sum();
+    let dram = (total_elems * 4 + (w.arrays.len() + 2) * cfg.iommu.page_bytes).max(1 << 20);
+    let mut accel = Accel::new(cfg.clone(), dram);
+    let mut host = HostContext::new();
+    let data = w.gen_data(seed);
+    let bufs: Vec<HostBuf> = w
+        .arrays
+        .iter()
+        .map(|a| host.alloc(&mut accel, a.elems))
+        .collect::<Result<_>>()?;
+    for (buf, d) in bufs.iter().zip(&data) {
+        host.write_f32(&mut accel, buf, d);
+    }
+    let buf_refs: Vec<&HostBuf> = bufs.iter().collect();
+    let result = offload(&mut accel, &lowered, &buf_refs, &w.fargs, 1, max_cycles)?;
+    let arrays = bufs.iter().map(|b| host.read_f32(&accel, b)).collect();
+    Ok(RunOutcome { result, arrays, report, text_size: lowered.program.len() })
+}
+
+/// Verify a run against the host golden model.
+pub fn verify(w: &Workload, outcome: &RunOutcome, seed: u64) -> Result<()> {
+    let expected = w.expected(seed);
+    for (i, (got, want)) in outcome.arrays.iter().zip(&expected).enumerate() {
+        crate::runtime::pjrt::assert_allclose(got, want, 1e-4, 1e-5)
+            .map_err(|e| anyhow!("{} array {} ({}): {e}", w.name, i, w.arrays[i].name))?;
+    }
+    Ok(())
+}
+
+/// Verify a run against the PJRT-executed JAX/Pallas artifact (the
+/// three-layer golden path). Returns Ok(false) when the artifact has not
+/// been built (`make artifacts`), Ok(true) on successful verification.
+pub fn verify_pjrt(
+    rt: &mut crate::runtime::pjrt::PjrtRuntime,
+    w: &Workload,
+    outcome: &RunOutcome,
+    seed: u64,
+) -> Result<bool> {
+    if !rt.available(&w.pjrt.name) {
+        return Ok(false);
+    }
+    let data = w.gen_data(seed);
+    let inputs: Vec<(&[f32], &[usize])> = w
+        .pjrt
+        .inputs
+        .iter()
+        .map(|&i| (data[i].as_slice(), w.arrays[i].shape.as_slice()))
+        .collect();
+    let outs = rt.exec_f32(&w.pjrt.name, &inputs)?;
+    if outs.len() != w.pjrt.outputs.len() {
+        bail!("{}: artifact returned {} outputs, expected {}", w.name, outs.len(), w.pjrt.outputs.len());
+    }
+    for (out, &ai) in outs.iter().zip(&w.pjrt.outputs) {
+        crate::runtime::pjrt::assert_allclose(&outcome.arrays[ai], out, 2e-3, 1e-4)
+            .map_err(|e| anyhow!("{} vs PJRT, array {}: {e}", w.name, w.arrays[ai].name))?;
+    }
+    Ok(true)
+}
+
+/// Geometric mean (the paper summarizes normalized numbers this way, §3.1).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::workloads;
+
+    #[test]
+    fn gemm_all_variants_verify_tiny() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        for variant in [
+            Variant::Unmodified,
+            Variant::Handwritten,
+            Variant::Promoted,
+            Variant::AutoDma,
+        ] {
+            for threads in [1, 8] {
+                let out = run_workload(&cfg, &w, variant, threads, 7, 200_000_000)
+                    .unwrap_or_else(|e| panic!("{} t{threads}: {e}", variant.label()));
+                verify(&w, &out, 7)
+                    .unwrap_or_else(|e| panic!("{} t{threads}: {e}", variant.label()));
+            }
+        }
+    }
+
+    #[test]
+    fn handwritten_is_faster_than_unmodified() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(24);
+        let base = run_workload(&cfg, &w, Variant::Unmodified, 1, 3, 500_000_000).unwrap();
+        let hand = run_workload(&cfg, &w, Variant::Handwritten, 1, 3, 500_000_000).unwrap();
+        assert!(
+            hand.cycles() * 2 < base.cycles(),
+            "handwritten {} vs unmodified {}",
+            hand.cycles(),
+            base.cycles()
+        );
+    }
+
+    #[test]
+    fn parallel_is_faster() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(24);
+        let t1 = run_workload(&cfg, &w, Variant::Handwritten, 1, 3, 500_000_000).unwrap();
+        let t8 = run_workload(&cfg, &w, Variant::Handwritten, 8, 3, 500_000_000).unwrap();
+        let speedup = t1.cycles() as f64 / t8.cycles() as f64;
+        assert!(speedup > 3.0, "8-thread speedup only {speedup}");
+    }
+
+    #[test]
+    fn all_workloads_all_variants_verify_tiny() {
+        let cfg = aurora();
+        for w in workloads::all_tiny() {
+            for variant in [
+                Variant::Unmodified,
+                Variant::Handwritten,
+                Variant::Promoted,
+                Variant::AutoDma,
+            ] {
+                let out = run_workload(&cfg, &w, variant, 8, 11, 500_000_000)
+                    .unwrap_or_else(|e| panic!("{} {}: {e}", w.name, variant.label()));
+                verify(&w, &out, 11)
+                    .unwrap_or_else(|e| panic!("{} {}: {e}", w.name, variant.label()));
+            }
+        }
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+}

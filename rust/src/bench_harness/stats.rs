@@ -1,0 +1,73 @@
+//! Minimal statistics for the custom (`harness = false`) bench targets:
+//! median, mean, and IQR over repeated measurements.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p25: f64,
+    pub p75: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Summarize (sorts a copy).
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        let idx = p * (v.len() - 1) as f64;
+        let (lo, hi) = (idx.floor() as usize, idx.ceil() as usize);
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (v[hi] - v[lo]) * (idx - lo as f64)
+        }
+    };
+    Summary {
+        n: v.len(),
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        median: q(0.5),
+        p25: q(0.25),
+        p75: q(0.75),
+        min: v[0],
+        max: v[v.len() - 1],
+    }
+}
+
+/// Wall-clock a closure `n` times, returning seconds per run.
+pub fn time_runs<F: FnMut()>(n: usize, mut f: F) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.p25, 7.0);
+    }
+}

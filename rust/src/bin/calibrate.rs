@@ -1,0 +1,29 @@
+//! Calibration sweep: per-workload shape metrics (Fig 4/5/7 in one pass),
+//! used while tuning the DESIGN.md §5 timing parameters.
+
+use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::config::aurora;
+use herov2::workloads;
+
+fn main() {
+    let cfg = aurora();
+    for w in workloads::all_default() {
+        let t0 = std::time::Instant::now();
+        let base = run_workload(&cfg, &w, Variant::Unmodified, 1, 7, 20_000_000_000).unwrap();
+        let hand = run_workload(&cfg, &w, Variant::Handwritten, 1, 7, 20_000_000_000).unwrap();
+        verify(&w, &hand, 7).unwrap();
+        let hand8 = run_workload(&cfg, &w, Variant::Handwritten, 8, 7, 20_000_000_000).unwrap();
+        let auto8 = run_workload(&cfg, &w, Variant::AutoDma, 8, 7, 20_000_000_000).unwrap();
+        let base8 = run_workload(&cfg, &w, Variant::Unmodified, 8, 7, 20_000_000_000).unwrap();
+        println!(
+            "{:8} N={:4} | fig4 speedup {:5.2} dma% {:4.2} | par speedup {:4.2} | fig7: auto {:5.2} hand {:5.2} | wall {:.1}s",
+            w.name, w.size,
+            base.cycles() as f64 / hand.cycles() as f64,
+            100.0 * hand.dma_cycles() as f64 / hand.cycles() as f64,
+            hand.cycles() as f64 / hand8.cycles() as f64,
+            base8.cycles() as f64 / auto8.cycles() as f64,
+            base8.cycles() as f64 / hand8.cycles() as f64,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

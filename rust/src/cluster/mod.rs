@@ -1,0 +1,334 @@
+//! Accelerator cluster: cores, TCDM, shared icache, DMA engine, event unit.
+//!
+//! §2.1: "The accelerator is composed of many minimal 32-bit RISC-V cores,
+//! which are organized into clusters of 4 to 16 cores for scalability. ...
+//! Within each accelerator cluster, the cores have single-cycle access to a
+//! multi-banked, tightly-coupled L1 data SPM. ... The cores fetch their
+//! instructions from an L1 instruction cache, which is shared by all cores
+//! in one cluster. To reduce the pressure on the shared instruction cache
+//! during loops, each core additionally contains an L0 instruction cache
+//! holding up to eight compressed instructions."
+//!
+//! This module holds the cluster *state*; instruction execution lives in
+//! [`crate::accel`], which owns the cross-cluster resources (L2, DRAM,
+//! IOMMU).
+
+use crate::config::HeroConfig;
+use crate::dma::DmaEngine;
+use crate::isa::Program;
+use crate::mem::Tcdm;
+use crate::noc::{Port, WidePath};
+use crate::trace::PerfCounters;
+use std::sync::Arc;
+
+/// Hardware-loop register state (two nested loops, Xpulpv2 `lp.setup`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HwLoopState {
+    pub start: u32,
+    pub end: u32,
+    /// Remaining iterations; 0 = inactive.
+    pub count: u32,
+}
+
+/// Execution state of one core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    /// Parked in the event unit, waiting for a `Fork` (or initial wakeup).
+    Sleeping,
+    /// Executing instructions.
+    Running,
+    /// Blocked on DMA transfer completion (`dma.wait`).
+    WaitDma { id: u32 },
+    /// Arrived at a `Barrier`/`Join`, waiting for the others.
+    WaitBarrier {
+        /// True if this is a `Join` (end of parallel region): workers go
+        /// back to sleep on release, the master falls through.
+        join: bool,
+    },
+    /// Finished (`halt`). Core 0 halting ends the cluster's offload share.
+    Halted,
+}
+
+/// One accelerator core (CV32E40P-style: single-issue, in-order, 1–4 stage).
+#[derive(Debug, Clone)]
+pub struct Core {
+    /// Core index within the cluster (CSR `mhartid`).
+    pub id: usize,
+    pub state: CoreState,
+    /// Next instruction index to execute.
+    pub pc: u32,
+    /// Integer register file; x0 is hardwired to zero.
+    pub regs: [u32; 32],
+    /// Float register file.
+    pub fregs: [f32; 32],
+    /// Address-extension CSR: upper 32 bits for host-address-space accesses.
+    pub ext_addr: u32,
+    /// Hardware loops (index 0 = innermost by convention).
+    pub hwloop: [HwLoopState; 2],
+    /// The core is stalled (memory latency, fetch, setup) until this cycle.
+    pub stall_until: u64,
+    /// L0 loop-buffer window base: holds instructions
+    /// `[l0_base, l0_base + l0_insts)`.
+    pub l0_base: u32,
+    /// Per-core performance counters.
+    pub perf: PerfCounters,
+}
+
+impl Core {
+    pub fn new(id: usize) -> Self {
+        Core {
+            id,
+            state: if id == 0 { CoreState::Running } else { CoreState::Sleeping },
+            pc: 0,
+            regs: [0; 32],
+            fregs: [0.0; 32],
+            ext_addr: 0,
+            hwloop: [HwLoopState::default(); 2],
+            stall_until: 0,
+            l0_base: 0,
+            perf: PerfCounters::new(),
+        }
+    }
+
+    /// Reset architectural state for a new offload (perf counters persist;
+    /// the runtime snapshots them around regions of interest).
+    pub fn reset_for_offload(&mut self, entry: u32) {
+        self.state = if self.id == 0 { CoreState::Running } else { CoreState::Sleeping };
+        self.pc = entry;
+        self.regs = [0; 32];
+        self.fregs = [0.0; 32];
+        self.ext_addr = 0;
+        self.hwloop = [HwLoopState::default(); 2];
+        self.stall_until = 0;
+        self.l0_base = entry;
+    }
+
+    /// Read a register (x0 reads as zero).
+    #[inline(always)]
+    pub fn reg(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    /// Write a register (writes to x0 are discarded).
+    #[inline(always)]
+    pub fn set_reg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+}
+
+/// Deterministic extra TCDM-conflict rate (parts per million) applied when
+/// the wide NoC is ≥128 bit: §3.3 observes that widening the DMA interface
+/// forces the TCDM interconnect from 14×16 to 18×32, causing "on average
+/// 15 % more contention ... despite the higher number of banks" because the
+/// cores' alignment on the interconnect is no longer optimal. We model the
+/// misalignment as a deterministic pseudo-random extra arbitration stall.
+pub const WIDE_TCDM_SKEW_PPM: u64 = 62_000;
+
+/// A cluster: cores + TCDM + shared icache + DMA engine + event unit state.
+#[derive(Debug)]
+pub struct Cluster {
+    pub id: usize,
+    pub cores: Vec<Core>,
+    pub tcdm: Tcdm,
+    pub dma: DmaEngine,
+    /// Program loaded by the offload runtime (shared text segment).
+    pub program: Arc<Program>,
+    /// Direct-mapped shared icache: tag per line slot (`u32::MAX` = empty).
+    pub icache_tags: Vec<u32>,
+    /// Serializing refill port of the shared icache.
+    pub refill_port: Port,
+    /// Narrow-NoC port for core-initiated remote accesses.
+    pub narrow_port: Port,
+    /// Per-cycle TCDM bank claims (stamped with the claiming cycle).
+    pub bank_claim: Vec<u64>,
+    /// Core id that issued the last `Fork` (the parallel-region master).
+    pub fork_master: usize,
+    /// Extra conflict probability in ppm (see [`WIDE_TCDM_SKEW_PPM`]).
+    pub extra_conflict_ppm: u64,
+    /// Per-instruction fast-path eligibility, precomputed at program load
+    /// (instructions touching remote memory, DMA, or the event unit always
+    /// take the interpreter's slow path).
+    pub fast_mask: Vec<bool>,
+    /// Cores currently parked at a barrier (cheap pre-check for the
+    /// per-cycle release scan).
+    pub barrier_waiters: u32,
+}
+
+impl Cluster {
+    pub fn new(id: usize, cfg: &HeroConfig) -> Self {
+        let n_banks = cfg.tcdm_banks();
+        let n_lines = (cfg.accel.icache_bytes / 4 / cfg.accel.icache_line_insts).max(1);
+        let path = WidePath {
+            beat_bytes: cfg.dma_beat_bytes(),
+            burst_overhead: cfg.dma.burst_overhead,
+            first_word: cfg.dram.first_word_cycles,
+            max_burst_beats: cfg.dma.max_burst_beats as u64,
+        };
+        Cluster {
+            id,
+            cores: (0..cfg.accel.cores_per_cluster).map(Core::new).collect(),
+            tcdm: Tcdm::new(cfg.accel.l1_bytes, n_banks),
+            dma: DmaEngine::new(path, cfg.dma.setup_cycles),
+            program: Arc::new(Program::default()),
+            icache_tags: vec![u32::MAX; n_lines],
+            refill_port: Port::new(),
+            narrow_port: Port::new(),
+            bank_claim: vec![u64::MAX; n_banks.max(1)],
+            fork_master: 0,
+            extra_conflict_ppm: if cfg.noc.dma_width_bits >= 128 { WIDE_TCDM_SKEW_PPM } else { 0 },
+            fast_mask: Vec::new(),
+            barrier_waiters: 0,
+        }
+    }
+
+    /// Load a program and reset cores for an offload starting at `entry`.
+    pub fn load_program(&mut self, program: Arc<Program>) {
+        let entry = program.entry;
+        use crate::isa::Inst as I;
+        self.fast_mask = program
+            .insts
+            .iter()
+            .map(|i| {
+                !matches!(
+                    i,
+                    I::LwExt { .. }
+                        | I::SwExt { .. }
+                        | I::FlwExt { .. }
+                        | I::FswExt { .. }
+                        | I::DmaStart1D { .. }
+                        | I::DmaStart2D { .. }
+                        | I::DmaWait { .. }
+                        | I::Fork { .. }
+                        | I::Join
+                        | I::Barrier
+                        | I::PerfCtl { .. }
+                        | I::Halt
+                        | I::CsrW { .. }
+                        | I::Amo { .. }
+                        | I::Jalr { .. }
+                )
+            })
+            .collect();
+        self.barrier_waiters = 0;
+        self.program = program;
+        for core in &mut self.cores {
+            core.reset_for_offload(entry);
+        }
+        for t in &mut self.icache_tags {
+            *t = u32::MAX;
+        }
+        self.bank_claim.fill(u64::MAX);
+        self.dma.reset();
+    }
+
+    /// Whether every non-sleeping, non-halted core has arrived at a barrier.
+    pub fn barrier_ready(&self) -> bool {
+        let mut any = false;
+        for c in &self.cores {
+            match c.state {
+                CoreState::WaitBarrier { .. } => any = true,
+                CoreState::Sleeping | CoreState::Halted => {}
+                _ => return false,
+            }
+        }
+        any
+    }
+
+    /// Release a completed barrier at cycle `now`: everyone pays the event
+    /// unit cost; `Join` workers go back to sleep.
+    pub fn release_barrier(&mut self, now: u64, barrier_cost: u64) {
+        self.barrier_waiters = 0;
+        let master = self.fork_master;
+        for c in &mut self.cores {
+            if let CoreState::WaitBarrier { join } = c.state {
+                c.perf.bump(crate::trace::Event::Barrier);
+                c.stall_until = now + barrier_cost;
+                if join && c.id != master {
+                    c.state = CoreState::Sleeping;
+                } else {
+                    c.state = CoreState::Running;
+                }
+            }
+        }
+    }
+
+    /// Aggregate perf counters over all cores.
+    pub fn perf_aggregate(&self) -> PerfCounters {
+        let mut agg = PerfCounters::new();
+        for c in &self.cores {
+            agg.merge(&c.perf);
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::isa::Inst;
+
+    #[test]
+    fn new_cluster_geometry() {
+        let cfg = aurora();
+        let cl = Cluster::new(0, &cfg);
+        assert_eq!(cl.cores.len(), 8);
+        assert_eq!(cl.tcdm.n_banks(), 16);
+        assert_eq!(cl.cores[0].state, CoreState::Running);
+        assert_eq!(cl.cores[1].state, CoreState::Sleeping);
+        assert_eq!(cl.extra_conflict_ppm, 0);
+    }
+
+    #[test]
+    fn wide_noc_enables_skew() {
+        let mut cfg = aurora();
+        cfg.noc.dma_width_bits = 128;
+        let cl = Cluster::new(0, &cfg);
+        assert_eq!(cl.extra_conflict_ppm, WIDE_TCDM_SKEW_PPM);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut c = Core::new(0);
+        c.set_reg(0, 42);
+        assert_eq!(c.reg(0), 0);
+        c.set_reg(5, 42);
+        assert_eq!(c.reg(5), 42);
+    }
+
+    #[test]
+    fn barrier_ready_logic() {
+        let cfg = aurora();
+        let mut cl = Cluster::new(0, &cfg);
+        cl.load_program(Arc::new(Program::new(vec![Inst::Halt])));
+        // Only core 0 running, not at barrier: not ready.
+        assert!(!cl.barrier_ready());
+        cl.cores[0].state = CoreState::WaitBarrier { join: false };
+        assert!(cl.barrier_ready());
+        // Wake a second core that hasn't arrived: not ready.
+        cl.cores[1].state = CoreState::Running;
+        assert!(!cl.barrier_ready());
+        cl.cores[1].state = CoreState::WaitBarrier { join: true };
+        assert!(cl.barrier_ready());
+        cl.release_barrier(100, 20);
+        assert_eq!(cl.cores[0].state, CoreState::Running);
+        assert_eq!(cl.cores[1].state, CoreState::Sleeping); // join worker
+        assert_eq!(cl.cores[0].stall_until, 120);
+    }
+
+    #[test]
+    fn load_program_resets_cores() {
+        let cfg = aurora();
+        let mut cl = Cluster::new(0, &cfg);
+        cl.cores[3].pc = 99;
+        cl.cores[3].state = CoreState::Halted;
+        let mut p = Program::new(vec![Inst::Nop, Inst::Halt]);
+        p.entry = 1;
+        cl.load_program(Arc::new(p));
+        assert_eq!(cl.cores[3].pc, 1);
+        assert_eq!(cl.cores[3].state, CoreState::Sleeping);
+        assert_eq!(cl.cores[0].state, CoreState::Running);
+    }
+}

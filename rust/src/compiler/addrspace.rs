@@ -1,0 +1,229 @@
+//! Address-space analysis (§2.2.1).
+//!
+//! The paper's Clang frontend infers which pointers may hold 64-bit host
+//! addresses (promoting them to the host address space) and which are
+//! provably 32-bit native; a backend legalizer pass then implements
+//! wider-than-native loads/stores through the address-extension CSR.
+//!
+//! In our IR, arrays carry their space in the symbol table (`HostArray` vs
+//! `LocalBuf`), so the inference reduces to a propagation + validation pass:
+//! every access must resolve to a known space, DMA statements must connect a
+//! host array with a local buffer, local buffers must be allocated before
+//! use, and host-space accesses are counted so the lowering's `*.ext`
+//! emission can be cross-checked.
+
+use super::ir::{Expr, Kernel, Stmt, Sym, VarId};
+use std::collections::HashSet;
+
+/// Result of the address-space pass.
+#[derive(Debug, Clone, Default)]
+pub struct SpaceInfo {
+    /// Number of accesses in the host (64-bit) address space.
+    pub host_accesses: u32,
+    /// Number of accesses in the native (32-bit) space.
+    pub native_accesses: u32,
+    /// Arrays accessed directly (not only via DMA) from compute code.
+    pub direct_host_arrays: Vec<VarId>,
+}
+
+/// Run the pass; returns analysis info or a diagnostic.
+pub fn analyze(k: &Kernel) -> Result<SpaceInfo, String> {
+    let mut info = SpaceInfo::default();
+    let mut allocated: HashSet<VarId> = HashSet::new();
+    let mut direct: HashSet<VarId> = HashSet::new();
+    check_block(k, &k.body, &mut info, &mut allocated, &mut direct)?;
+    info.direct_host_arrays = direct.into_iter().collect();
+    info.direct_host_arrays.sort_unstable();
+    Ok(info)
+}
+
+fn check_expr(
+    k: &Kernel,
+    e: &Expr,
+    info: &mut SpaceInfo,
+    allocated: &HashSet<VarId>,
+    direct: &mut HashSet<VarId>,
+) -> Result<(), String> {
+    match e {
+        Expr::Load(a, idx) => {
+            visit_access(k, *a, info, allocated, direct)?;
+            for i in idx {
+                check_expr(k, i, info, allocated, direct)?;
+            }
+            Ok(())
+        }
+        Expr::Bin(_, a, b) => {
+            check_expr(k, a, info, allocated, direct)?;
+            check_expr(k, b, info, allocated, direct)
+        }
+        _ => Ok(()),
+    }
+}
+
+fn visit_access(
+    k: &Kernel,
+    a: VarId,
+    info: &mut SpaceInfo,
+    allocated: &HashSet<VarId>,
+    direct: &mut HashSet<VarId>,
+) -> Result<(), String> {
+    match k.sym(a) {
+        Sym::HostArray { .. } => {
+            info.host_accesses += 1;
+            direct.insert(a);
+            Ok(())
+        }
+        Sym::LocalBuf { .. } => {
+            if !allocated.contains(&a) {
+                return Err(format!("local buffer {} used before allocation", k.sym_name(a)));
+            }
+            info.native_accesses += 1;
+            Ok(())
+        }
+        other => Err(format!("{} is not an array ({other:?})", k.sym_name(a))),
+    }
+}
+
+fn check_block(
+    k: &Kernel,
+    body: &[Stmt],
+    info: &mut SpaceInfo,
+    allocated: &mut HashSet<VarId>,
+    direct: &mut HashSet<VarId>,
+) -> Result<(), String> {
+    for s in body {
+        match s {
+            Stmt::For { lo, hi, body, .. } => {
+                check_expr(k, lo, info, allocated, direct)?;
+                check_expr(k, hi, info, allocated, direct)?;
+                check_block(k, body, info, allocated, direct)?;
+            }
+            Stmt::Store { dst, idx, value } => {
+                visit_access(k, *dst, info, allocated, direct)?;
+                for i in idx {
+                    check_expr(k, i, info, allocated, direct)?;
+                }
+                check_expr(k, value, info, allocated, direct)?;
+            }
+            Stmt::Let { value, .. } | Stmt::Assign { value, .. } => {
+                check_expr(k, value, info, allocated, direct)?;
+            }
+            Stmt::LocalAlloc { var, .. } => {
+                if !matches!(k.sym(*var), Sym::LocalBuf { .. }) {
+                    return Err(format!("{} allocated but not a local buffer", k.sym_name(*var)));
+                }
+                allocated.insert(*var);
+            }
+            Stmt::Dma { host, local, .. } => {
+                if !matches!(k.sym(*host), Sym::HostArray { .. }) {
+                    return Err(format!(
+                        "DMA host operand {} is not in the host address space",
+                        k.sym_name(*host)
+                    ));
+                }
+                if !matches!(k.sym(*local), Sym::LocalBuf { .. }) {
+                    return Err(format!(
+                        "DMA local operand {} is not a local buffer",
+                        k.sym_name(*local)
+                    ));
+                }
+                if !allocated.contains(local) {
+                    return Err(format!(
+                        "DMA uses unallocated local buffer {}",
+                        k.sym_name(*local)
+                    ));
+                }
+            }
+            Stmt::DmaWaitAll => {}
+            Stmt::LocalFreeAll => {
+                allocated.clear();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::*;
+
+    #[test]
+    fn untiled_kernel_is_all_host() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 8);
+        let a = b.host_array("A", vec![var(n)]);
+        let i = b.loop_var("i");
+        let k = b.body(vec![for_(
+            i,
+            ci(0),
+            var(n),
+            vec![st(a, vec![var(i)], ld(a, vec![var(i)]).mul(cf(2.0)))],
+        )]);
+        let info = analyze(&k).unwrap();
+        assert_eq!(info.native_accesses, 0);
+        assert_eq!(info.host_accesses, 2);
+        assert_eq!(info.direct_host_arrays, vec![a]);
+    }
+
+    #[test]
+    fn rejects_use_before_alloc() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 8);
+        let l = b.local_buf("buf", vec![var(n)]);
+        let i = b.loop_var("i");
+        let k = b.body(vec![for_(i, ci(0), var(n), vec![st(l, vec![var(i)], cf(0.0))])]);
+        assert!(analyze(&k).is_err());
+    }
+
+    #[test]
+    fn rejects_dma_between_two_host_arrays() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 8);
+        let a = b.host_array("A", vec![var(n)]);
+        let c = b.host_array("C", vec![var(n)]);
+        let k = b.body(vec![Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: a,
+            host_off: ci(0),
+            local: c, // not a local buffer!
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: var(n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        }]);
+        assert!(analyze(&k).is_err());
+    }
+
+    #[test]
+    fn tiled_kernel_counts_native() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 8);
+        let a = b.host_array("A", vec![var(n)]);
+        let l = b.local_buf("la", vec![var(n)]);
+        let i = b.loop_var("i");
+        let k = b.body(vec![
+            Stmt::LocalAlloc { var: l, elems: var(n) },
+            Stmt::Dma {
+                dir: Dir::HostToLocal,
+                kind: DmaKind::Merged1D,
+                host: a,
+                host_off: ci(0),
+                local: l,
+                local_off: ci(0),
+                rows: ci(1),
+                row_elems: var(n),
+                host_stride: ci(0),
+                local_stride: ci(0),
+            },
+            Stmt::DmaWaitAll,
+            for_(i, ci(0), var(n), vec![st(l, vec![var(i)], ld(l, vec![var(i)]).mul(cf(2.0)))]),
+        ]);
+        let info = analyze(&k).unwrap();
+        assert_eq!(info.host_accesses, 0);
+        assert_eq!(info.native_accesses, 2);
+        assert!(info.direct_host_arrays.is_empty());
+    }
+}

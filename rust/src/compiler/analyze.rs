@@ -1,0 +1,199 @@
+//! Affine access analysis.
+//!
+//! Array subscripts in the evaluated kernels are affine in the loop
+//! variables with compile-time-constant coefficients (static problem sizes,
+//! as in Polybench). This module extracts `c0 + Σ coeff_v · v` forms from
+//! index expressions; the lowering uses them for pointer strength reduction
+//! and post-increment legality, AutoDMA for footprint/region analysis.
+
+use super::ir::{BinOp, Expr, Kernel, Sym, VarId};
+
+/// An affine form over scalar variables: `constant + Σ terms`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Affine {
+    pub constant: i64,
+    /// (variable, coefficient); variables appear at most once, coeff ≠ 0.
+    pub terms: Vec<(VarId, i64)>,
+}
+
+impl Affine {
+    pub fn constant(c: i64) -> Self {
+        Affine { constant: c, terms: Vec::new() }
+    }
+
+    pub fn var(v: VarId) -> Self {
+        Affine { constant: 0, terms: vec![(v, 1)] }
+    }
+
+    pub fn coeff(&self, v: VarId) -> i64 {
+        self.terms.iter().find(|(t, _)| *t == v).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn add(&self, o: &Affine) -> Affine {
+        let mut r = self.clone();
+        r.constant += o.constant;
+        for (v, c) in &o.terms {
+            r.add_term(*v, *c);
+        }
+        r
+    }
+
+    pub fn sub(&self, o: &Affine) -> Affine {
+        self.add(&o.scale(-1))
+    }
+
+    pub fn scale(&self, s: i64) -> Affine {
+        if s == 0 {
+            return Affine::constant(0);
+        }
+        Affine {
+            constant: self.constant * s,
+            terms: self.terms.iter().map(|(v, c)| (*v, c * s)).collect(),
+        }
+    }
+
+    fn add_term(&mut self, v: VarId, c: i64) {
+        if c == 0 {
+            return;
+        }
+        if let Some(t) = self.terms.iter_mut().find(|(t, _)| *t == v) {
+            t.1 += c;
+            if t.1 == 0 {
+                self.terms.retain(|(_, c)| *c != 0);
+            }
+        } else {
+            self.terms.push((v, c));
+        }
+    }
+
+    /// Substitute `v := repl` (an affine form).
+    pub fn substitute(&self, v: VarId, repl: &Affine) -> Affine {
+        let c = self.coeff(v);
+        if c == 0 {
+            return self.clone();
+        }
+        let mut r = self.clone();
+        r.terms.retain(|(t, _)| *t != v);
+        r.add(&repl.scale(c))
+    }
+}
+
+/// Extract an affine form from an integer expression. Const parameters fold
+/// into constants; loop variables and i32 lets stay symbolic. Returns `None`
+/// for non-affine expressions (products of variables, Min/Max, loads...).
+pub fn affine_of(k: &Kernel, e: &Expr) -> Option<Affine> {
+    match e {
+        Expr::ConstI(c) => Some(Affine::constant(*c as i64)),
+        Expr::Var(v) => match k.sym(*v) {
+            Sym::ConstParam { value } => Some(Affine::constant(*value as i64)),
+            Sym::LoopVar | Sym::LetI32 => Some(Affine::var(*v)),
+            _ => None,
+        },
+        Expr::Bin(op, a, b) => {
+            let (a, b) = (affine_of(k, a)?, affine_of(k, b)?);
+            match op {
+                BinOp::Add => Some(a.add(&b)),
+                BinOp::Sub => Some(a.sub(&b)),
+                BinOp::Mul => {
+                    if a.is_const() {
+                        Some(b.scale(a.constant))
+                    } else if b.is_const() {
+                        Some(a.scale(b.constant))
+                    } else {
+                        None
+                    }
+                }
+                BinOp::Div if b.is_const() && a.is_const() && b.constant != 0 => {
+                    Some(Affine::constant(a.constant / b.constant))
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Flattened element offset of a multi-dimensional access, as an affine
+/// form: `Σ affine(idx_d) · stride_d`.
+pub fn flat_offset(k: &Kernel, array: VarId, idx: &[Expr]) -> Option<Affine> {
+    let strides = k.array_strides(array)?;
+    if strides.len() != idx.len() {
+        return None;
+    }
+    let mut acc = Affine::constant(0);
+    for (e, s) in idx.iter().zip(strides) {
+        acc = acc.add(&affine_of(k, e)?.scale(s));
+    }
+    Some(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::*;
+
+    fn kernel() -> (Kernel, VarId, VarId, VarId, VarId) {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 16);
+        let a = b.host_array("A", vec![var(n), var(n)]);
+        let i = b.loop_var("i");
+        let j = b.loop_var("j");
+        let k = b.body(vec![]);
+        (k, n, a, i, j)
+    }
+
+    #[test]
+    fn affine_extraction() {
+        let (k, n, _, i, j) = kernel();
+        // 2*i + j*N + 3
+        let e = ci(2).mul(var(i)).add(var(j).mul(var(n))).add(ci(3));
+        let a = affine_of(&k, &e).unwrap();
+        assert_eq!(a.constant, 3);
+        assert_eq!(a.coeff(i), 2);
+        assert_eq!(a.coeff(j), 16);
+    }
+
+    #[test]
+    fn nonaffine_rejected() {
+        let (k, _, arr, i, j) = kernel();
+        assert!(affine_of(&k, &var(i).mul(var(j))).is_none());
+        assert!(affine_of(&k, &var(i).min(var(j))).is_none());
+        assert!(affine_of(&k, &ld(arr, vec![var(i), var(j)])).is_none());
+    }
+
+    #[test]
+    fn flat_offset_row_major() {
+        let (k, _, a, i, j) = kernel();
+        // A[i][j] -> i*16 + j
+        let f = flat_offset(&k, a, &[var(i), var(j)]).unwrap();
+        assert_eq!(f.coeff(i), 16);
+        assert_eq!(f.coeff(j), 1);
+        // A[j][i] -> column-wise
+        let f = flat_offset(&k, a, &[var(j), var(i)]).unwrap();
+        assert_eq!(f.coeff(j), 16);
+        assert_eq!(f.coeff(i), 1);
+    }
+
+    #[test]
+    fn substitute() {
+        let (k, _, a, i, j) = kernel();
+        let f = flat_offset(&k, a, &[var(i), var(j)]).unwrap();
+        // i := 2 (constant)
+        let g = f.substitute(i, &Affine::constant(2));
+        assert_eq!(g.constant, 32);
+        assert_eq!(g.coeff(i), 0);
+        assert_eq!(g.coeff(j), 1);
+    }
+
+    #[test]
+    fn scale_and_cancel() {
+        let a = Affine::var(3).scale(4);
+        let b = a.sub(&Affine::var(3).scale(4));
+        assert!(b.is_const());
+        assert_eq!(b.constant, 0);
+    }
+}

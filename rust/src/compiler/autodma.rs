@@ -1,0 +1,820 @@
+//! AutoDMA: automatic tiling and DMA inference (§2.2.2, §3.2).
+//!
+//! AutoDMA transforms an *unmodified* OpenMP kernel into a tiled kernel that
+//! stages data through the L1 SPM with DMA transfers — the paper's answer to
+//! "how to relieve the programmer of the burden of specializing an algorithm
+//! to the memory hierarchy of the accelerator". It derives from HePREM:
+//! kernels become *load / execute / store* phases per tile.
+//!
+//! The model reproduces the paper's compiler behaviour including its
+//! documented limitations:
+//!
+//! * **Tiling**: loops are tiled in program order along the *perfect prefix*
+//!   of the nest (loops whose body is exactly one inner loop); the tile side
+//!   starts from the paper's `S = floor((L/N)^(1/D))` and is halved until
+//!   the footprint fits. Loop reordering is *not* performed (§3.2 footnote:
+//!   polyhedral tools could; AutoDMA does not).
+//! * **Region formation**: for every access group (same array, same linear
+//!   coefficients) the staged region is a rows×len box. The *len*
+//!   (contiguous) direction is the deepest contributing loop variable — and
+//!   only if the access is unit-stride in it. Because of array-to-pointer
+//!   decay the compiler cannot prove that consecutive rows are adjacent, so
+//!   rows are transferred with **one DMA call per row** (the ~15 % gap to
+//!   handwritten code, which merges rows into single bursts).
+//! * **Column-wise accesses** (non-unit stride along the deepest
+//!   contributing loop) degrade to **blocking single-word transfers** — "the
+//!   DMA engine in this case is used to transfer individual words" — which
+//!   is why covar and atax see only marginal gains (§3.2).
+
+use super::analyze::flat_offset;
+use super::ir::*;
+use anyhow::{bail, Result};
+
+/// AutoDMA options.
+#[derive(Debug, Clone)]
+pub struct AutoDmaOpts {
+    /// L1 words available for user data (`hero_l1_capacity`), e.g. 28 Ki.
+    pub l1_words: i64,
+}
+
+impl AutoDmaOpts {
+    pub fn for_config(cfg: &crate::config::HeroConfig) -> Self {
+        AutoDmaOpts { l1_words: cfg.l1_user_words() as i64 }
+    }
+}
+
+/// What AutoDMA did, for reporting and tests.
+#[derive(Debug, Clone, Default)]
+pub struct AutoDmaReport {
+    /// Nests transformed.
+    pub nests: usize,
+    /// Tile side chosen per nest (None = whole footprint fit untiled).
+    pub tile_sides: Vec<Option<i64>>,
+    /// Array groups staged with row-wise (per-row DMA call) transfers.
+    pub row_wise: Vec<String>,
+    /// Array groups staged as one contiguous run.
+    pub run_wise: Vec<String>,
+    /// Array groups degraded to word-wise transfers.
+    pub word_wise: Vec<String>,
+    /// Column-wise access groups the pass declined to stage (their accesses
+    /// stay in the host address space) — the covar/atax pathology of §3.2.
+    pub remote: Vec<String>,
+    /// Nests left untouched (non-affine or otherwise unanalyzable).
+    pub declined: usize,
+}
+
+/// One analyzed loop: nest-prefix loops may be tiled; deeper loops never.
+#[derive(Debug, Clone)]
+struct LoopInfo {
+    var: VarId,
+    extent: i64,
+    par: Par,
+    /// In the tileable perfect prefix?
+    #[allow(dead_code)]
+    tileable: bool,
+    /// Tile side (== extent when untiled).
+    tile: i64,
+    /// Tile loop variable (when actually tiled).
+    tvar: Option<VarId>,
+    /// Point loop variable (== var when untiled).
+    pvar: VarId,
+}
+
+impl LoopInfo {
+    fn tiled(&self) -> bool {
+        self.tvar.is_some()
+    }
+}
+
+/// An access group.
+#[derive(Debug)]
+struct Group {
+    array: VarId,
+    /// Coefficient per loop (parallel to the `loops` list).
+    coeffs: Vec<i64>,
+    /// Constant offsets of member accesses (conv2d taps).
+    consts: Vec<i64>,
+    read: bool,
+    written: bool,
+    local: VarId,
+    local_dims: Vec<i64>,
+    /// (row bias, len bias) per member const, parallel to `consts`.
+    biases: Vec<(i64, i64)>,
+    /// Indices into `loops`; -1 = none.
+    row_var: i32,
+    len_var: i32,
+    word_wise: bool,
+    /// Left in the host address space (not staged).
+    remote: bool,
+    row_stride: i64,
+    base_const: i64,
+}
+
+/// Transform a kernel; returns the tiled kernel and a report.
+pub fn transform(k: &Kernel, opts: &AutoDmaOpts) -> Result<(Kernel, AutoDmaReport)> {
+    let mut out = k.clone();
+    out.name = format!("{}_autodma", k.name);
+    let mut report = AutoDmaReport::default();
+    let body = std::mem::take(&mut out.body);
+    let mut new_body = Vec::new();
+    let mut staged_any = false;
+    for s in body {
+        match s {
+            Stmt::For { .. } => {
+                if staged_any {
+                    // Sequential nests reuse the L1 heap.
+                    new_body.push(Stmt::LocalFreeAll);
+                }
+                match transform_nest(&mut out, &s, opts, &mut report) {
+                    Ok(stmts) => {
+                        staged_any = true;
+                        new_body.extend(stmts);
+                    }
+                    Err(_) => {
+                        report.declined += 1;
+                        if staged_any {
+                            new_body.pop(); // drop the free-all
+                        }
+                        new_body.push(s);
+                    }
+                }
+            }
+            other => new_body.push(other),
+        }
+    }
+    out.body = new_body;
+    Ok(out_with_report(out, report))
+}
+
+fn out_with_report(k: Kernel, r: AutoDmaReport) -> (Kernel, AutoDmaReport) {
+    (k, r)
+}
+
+fn transform_nest(
+    k: &mut Kernel,
+    nest: &Stmt,
+    opts: &AutoDmaOpts,
+    report: &mut AutoDmaReport,
+) -> Result<Vec<Stmt>> {
+    // 1. Collect the perfect-prefix chain and the remaining body.
+    let mut loops: Vec<LoopInfo> = Vec::new();
+    let mut cur = nest;
+    let inner_body: Vec<Stmt>;
+    loop {
+        let Stmt::For { var, lo, hi, par, body } = cur else { unreachable!() };
+        if k.eval_const(lo) != Some(0) {
+            bail!("nest loop lower bound must be 0");
+        }
+        let Some(extent) = k.eval_const(hi) else { bail!("non-constant extent") };
+        loops.push(LoopInfo {
+            var: *var,
+            extent,
+            par: *par,
+            tileable: true,
+            tile: extent,
+            tvar: None,
+            pvar: *var,
+        });
+        if body.len() == 1 {
+            if let Stmt::For { .. } = &body[0] {
+                cur = &body[0];
+                continue;
+            }
+        }
+        inner_body = body.clone();
+        break;
+    }
+    let prefix_len = loops.len();
+    // Deeper loops (inside the imperfect body) are analyzable but untileable.
+    collect_deep_loops(k, &inner_body, &mut loops)?;
+
+    // 2. Group host-array accesses.
+    let mut groups = collect_groups(k, &inner_body, &loops)?;
+    if groups.is_empty() {
+        bail!("no host array accesses");
+    }
+
+    // 3. Tiling decision.
+    let budget = opts.l1_words;
+    let n_arrays = {
+        let mut arrs: Vec<VarId> = groups.iter().map(|g| g.array).collect();
+        arrs.sort_unstable();
+        arrs.dedup();
+        arrs.len() as i64
+    };
+    let dims = groups
+        .iter()
+        .map(|g| match k.sym(g.array) {
+            Sym::HostArray { dims } => dims.len() as u32,
+            _ => 1,
+        })
+        .max()
+        .unwrap_or(1);
+    let mut tile_side: Option<i64> = None;
+    if footprint(&groups, &loops) > budget {
+        // The nest does not fit as-is. Column-wise access groups whose only
+        // unit-stride direction is the *work-distribution* (parallel) loop
+        // are the pass's documented weakness (§3.2): tiles along that
+        // dimension are partitioned across cores, so the per-core gather
+        // degenerates to word-granular transfers ("the DMA engine is used
+        // to transfer individual words"). The pass declines to stage such
+        // groups; their accesses stay in the host address space — which is
+        // why covar and atax end up only marginally faster than the
+        // OpenMP baseline.
+        for g in &mut groups {
+            let contributing: Vec<usize> =
+                (0..g.coeffs.len()).filter(|i| g.coeffs[*i] != 0).collect();
+            let pathological = match contributing.as_slice() {
+                [a] => g.coeffs[*a] != 1,
+                [a, b] => {
+                    g.coeffs[*b] != 1
+                        && g.coeffs[*a] == 1
+                        && loops[*a].par == Par::Cores
+                }
+                _ => false,
+            };
+            if pathological {
+                g.remote = true;
+                report.remote.push(k.sym_name(g.array).to_string());
+            }
+        }
+        let staged: Vec<&Group> = groups.iter().filter(|g| !g.remote).collect();
+        if footprint_of(&staged, &loops) > budget {
+            let mut s =
+                ((budget as f64 / n_arrays as f64).powf(1.0 / dims as f64)).floor() as i64;
+            s = s.max(4);
+            loop {
+                for l in loops.iter_mut().take(prefix_len) {
+                    l.tile = s.min(l.extent);
+                }
+                let staged: Vec<&Group> = groups.iter().filter(|g| !g.remote).collect();
+                if footprint_of(&staged, &loops) <= budget {
+                    tile_side = Some(s);
+                    break;
+                }
+                if s <= 4 {
+                    bail!("cannot tile nest to fit L1");
+                }
+                s /= 2;
+            }
+            // Materialize tile/point vars for loops actually tiled.
+            for l in loops.iter_mut().take(prefix_len) {
+                if l.tile < l.extent {
+                    let name = k.syms[l.var].0.clone();
+                    k.syms.push((format!("t_{name}"), Sym::LoopVar));
+                    l.tvar = Some(k.syms.len() - 1);
+                    k.syms.push((format!("{name}p"), Sym::LoopVar));
+                    l.pvar = k.syms.len() - 1;
+                }
+            }
+        }
+    }
+    report.nests += 1;
+    report.tile_sides.push(tile_side);
+
+    // 4. Local buffers + transfer shapes.
+    let mut allocs: Vec<Stmt> = Vec::new();
+    for g in &mut groups {
+        if g.remote {
+            continue;
+        }
+        decide_shape(k, g, &loops, report)?;
+        let name = format!("l_{}{}", k.sym_name(g.array), k.syms.len());
+        let dims: Vec<Expr> = g.local_dims.iter().map(|d| ci(*d as i32)).collect();
+        k.syms.push((name, Sym::LocalBuf { dims }));
+        g.local = k.syms.len() - 1;
+        let elems: i64 = g.local_dims.iter().product();
+        if elems <= 0 {
+            bail!("empty staging buffer");
+        }
+        allocs.push(Stmt::LocalAlloc { var: g.local, elems: ci(elems as i32) });
+    }
+
+    // 5. Rewrite the execute phase.
+    let rewritten = rewrite_block(k, &inner_body, &groups, &loops)?;
+
+    // 6. Assemble load / execute / store phases.
+    let mut phase: Vec<Stmt> = Vec::new();
+    for g in &groups {
+        if g.read && !g.remote {
+            phase.extend(emit_transfers(k, g, &loops, Dir::HostToLocal));
+        }
+    }
+    phase.push(Stmt::DmaWaitAll);
+    phase.extend(build_point_nest(&loops, 0, prefix_len, rewritten));
+    for g in &groups {
+        if g.written && !g.remote {
+            phase.extend(emit_transfers(k, g, &loops, Dir::LocalToHost));
+        }
+    }
+    phase.push(Stmt::DmaWaitAll);
+
+    // 7. Wrap in tile loops (innermost tiled loop closest to the phases).
+    let mut body = phase;
+    for l in loops[..prefix_len].iter().rev() {
+        if let Some(tv) = l.tvar {
+            let n_tiles = (l.extent + l.tile - 1) / l.tile;
+            body = vec![Stmt::For {
+                var: tv,
+                lo: ci(0),
+                hi: ci(n_tiles as i32),
+                par: Par::None,
+                body,
+            }];
+        }
+    }
+    let mut out = allocs;
+    out.extend(body);
+    Ok(out)
+}
+
+fn collect_deep_loops(k: &Kernel, body: &[Stmt], out: &mut Vec<LoopInfo>) -> Result<()> {
+    for s in body {
+        if let Stmt::For { var, lo, hi, par, body } = s {
+            if k.eval_const(lo) != Some(0) {
+                bail!("inner loop lower bound must be 0");
+            }
+            let Some(e) = k.eval_const(hi) else { bail!("non-constant inner extent") };
+            out.push(LoopInfo {
+                var: *var,
+                extent: e,
+                par: *par,
+                tileable: false,
+                tile: e,
+                tvar: None,
+                pvar: *var,
+            });
+            collect_deep_loops(k, body, out)?;
+        }
+    }
+    Ok(())
+}
+
+fn collect_groups(k: &Kernel, body: &[Stmt], loops: &[LoopInfo]) -> Result<Vec<Group>> {
+    let mut groups: Vec<Group> = Vec::new();
+    walk_accesses(k, body, &mut |k, arr, idx, is_store| {
+        if !matches!(k.sym(arr), Sym::HostArray { .. }) {
+            bail!("AutoDMA input must access host arrays only");
+        }
+        let Some(aff) = flat_offset(k, arr, idx) else { bail!("non-affine access") };
+        let coeffs: Vec<i64> = loops.iter().map(|l| aff.coeff(l.var)).collect();
+        let known: i64 = coeffs.iter().map(|c| c.abs()).sum();
+        let total: i64 = aff.terms.iter().map(|(_, c)| c.abs()).sum();
+        if known != total {
+            bail!("access depends on non-loop variables");
+        }
+        if let Some(g) = groups.iter_mut().find(|g| g.array == arr && g.coeffs == coeffs) {
+            if !g.consts.contains(&aff.constant) {
+                g.consts.push(aff.constant);
+            }
+            g.read |= !is_store;
+            g.written |= is_store;
+        } else {
+            groups.push(Group {
+                array: arr,
+                coeffs,
+                consts: vec![aff.constant],
+                read: !is_store,
+                written: is_store,
+                local: 0,
+                local_dims: Vec::new(),
+                biases: Vec::new(),
+                row_var: -1,
+                len_var: -1,
+                word_wise: false,
+                remote: false,
+                row_stride: 0,
+                base_const: 0,
+            });
+        }
+        Ok(())
+    })?;
+    Ok(groups)
+}
+
+fn walk_accesses(
+    k: &Kernel,
+    body: &[Stmt],
+    f: &mut impl FnMut(&Kernel, VarId, &[Expr], bool) -> Result<()>,
+) -> Result<()> {
+    fn expr(
+        k: &Kernel,
+        e: &Expr,
+        f: &mut impl FnMut(&Kernel, VarId, &[Expr], bool) -> Result<()>,
+    ) -> Result<()> {
+        match e {
+            Expr::Load(a, idx) => {
+                f(k, *a, idx, false)?;
+                for i in idx {
+                    expr(k, i, f)?;
+                }
+                Ok(())
+            }
+            Expr::Bin(_, a, b) => {
+                expr(k, a, f)?;
+                expr(k, b, f)
+            }
+            _ => Ok(()),
+        }
+    }
+    for s in body {
+        match s {
+            Stmt::For { body, .. } => walk_accesses(k, body, f)?,
+            Stmt::Store { dst, idx, value } => {
+                expr(k, value, f)?;
+                for i in idx {
+                    expr(k, i, f)?;
+                }
+                f(k, *dst, idx, true)?;
+            }
+            Stmt::Let { value, .. } | Stmt::Assign { value, .. } => expr(k, value, f)?,
+            Stmt::Dma { .. }
+            | Stmt::DmaWaitAll
+            | Stmt::LocalAlloc { .. }
+            | Stmt::LocalFreeAll => {
+                bail!("AutoDMA input already contains DMA statements")
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Footprint in words of all groups under the current tiling.
+fn footprint(groups: &[Group], loops: &[LoopInfo]) -> i64 {
+    footprint_of(&groups.iter().collect::<Vec<_>>(), loops)
+}
+
+fn footprint_of(groups: &[&Group], loops: &[LoopInfo]) -> i64 {
+    groups
+        .iter()
+        .map(|g| {
+            let mut words = 1i64;
+            for (i, c) in g.coeffs.iter().enumerate() {
+                if *c != 0 {
+                    words *= loops[i].tile;
+                }
+            }
+            let spread = g.consts.iter().max().unwrap() - g.consts.iter().min().unwrap();
+            words + spread.max(0)
+        })
+        .sum()
+}
+
+/// Decide rows/len decomposition and local layout for a group.
+fn decide_shape(
+    k: &Kernel,
+    g: &mut Group,
+    loops: &[LoopInfo],
+    report: &mut AutoDmaReport,
+) -> Result<()> {
+    let contributing: Vec<usize> =
+        (0..g.coeffs.len()).filter(|i| g.coeffs[*i] != 0).collect();
+    if contributing.len() > 2 {
+        bail!("access contributes more than two dimensions");
+    }
+    g.base_const = *g.consts.iter().min().unwrap();
+    let name = k.sym_name(g.array).to_string();
+    match contributing.as_slice() {
+        [] => {
+            g.local_dims = vec![1];
+        }
+        [a] => {
+            let unit = g.coeffs[*a] == 1;
+            if unit {
+                g.len_var = *a as i32;
+                let spread = spread_of(g);
+                g.local_dims = vec![loops[*a].tile + spread];
+                report.run_wise.push(name);
+            } else {
+                g.row_var = *a as i32;
+                g.row_stride = g.coeffs[*a];
+                g.word_wise = true;
+                g.local_dims = vec![loops[*a].tile];
+                report.word_wise.push(name);
+            }
+        }
+        [a, b] => {
+            // `b` is deeper in the nest (loops are in nesting order). The
+            // transfer's contiguous (len) direction is whichever var has
+            // unit stride; rows go along the other. Column-major accesses
+            // (unit stride on the shallow var) still stage row-by-row, but
+            // with short rows and one descriptor each — the degradation the
+            // paper attributes to its 15 % gap. Only accesses with *no*
+            // unit-stride direction degrade to word-wise gathers.
+            let (shallow, deep) = (*a, *b);
+            if g.coeffs[deep] == 1 && g.coeffs[shallow] > 0 {
+                g.row_var = shallow as i32;
+                g.len_var = deep as i32;
+                g.row_stride = g.coeffs[shallow];
+                let (rspread, lspread) = decompose_spread(g, g.row_stride);
+                g.word_wise = false;
+                g.local_dims = vec![loops[shallow].tile + rspread, loops[deep].tile + lspread];
+                report.row_wise.push(name);
+            } else if g.coeffs[shallow] == 1 && g.coeffs[deep] > 0 {
+                // Column-major: rows along the deep var.
+                g.row_var = deep as i32;
+                g.len_var = shallow as i32;
+                g.row_stride = g.coeffs[deep];
+                let (rspread, lspread) = decompose_spread(g, g.row_stride);
+                g.word_wise = false;
+                g.local_dims = vec![loops[deep].tile + rspread, loops[shallow].tile + lspread];
+                report.row_wise.push(name);
+            } else {
+                g.row_var = shallow as i32;
+                g.len_var = deep as i32;
+                g.row_stride = g.coeffs[shallow];
+                g.word_wise = true;
+                g.local_dims = vec![loops[shallow].tile, loops[deep].tile];
+                report.word_wise.push(name);
+            }
+        }
+        _ => unreachable!(),
+    }
+    let rs = g.row_stride;
+    g.biases = g
+        .consts
+        .iter()
+        .map(|c| {
+            let d = c - g.base_const;
+            if rs > 0 {
+                (d / rs, d % rs)
+            } else {
+                (0, d)
+            }
+        })
+        .collect();
+    Ok(())
+}
+
+fn spread_of(g: &Group) -> i64 {
+    g.consts.iter().max().unwrap() - g.consts.iter().min().unwrap()
+}
+
+fn decompose_spread(g: &Group, row_stride: i64) -> (i64, i64) {
+    let spread = spread_of(g);
+    if row_stride > 0 {
+        (spread / row_stride, spread % row_stride)
+    } else {
+        (0, spread)
+    }
+}
+
+/// Point-range length of loop `vi`, `Min`-clamped when tiled.
+fn extent_expr(loops: &[LoopInfo], vi: usize) -> Expr {
+    let l = &loops[vi];
+    if l.tiled() {
+        ci(l.tile as i32).min(ci(l.extent as i32).sub(var(l.tvar.unwrap()).mul(ci(l.tile as i32))))
+    } else {
+        ci(l.extent as i32)
+    }
+}
+
+/// Emit the load or store phase for one group.
+fn emit_transfers(k: &mut Kernel, g: &Group, loops: &[LoopInfo], dir: Dir) -> Vec<Stmt> {
+    // Host base offset: constant + tile-base contributions.
+    let mut host_base = ci(g.base_const as i32);
+    for (i, c) in g.coeffs.iter().enumerate() {
+        if *c == 0 {
+            continue;
+        }
+        if let Some(tv) = loops[i].tvar {
+            host_base = host_base.add(var(tv).mul(ci((loops[i].tile * c) as i32)));
+        }
+    }
+    match (g.word_wise, g.row_var, g.len_var) {
+        (false, -1, -1) => vec![dma1d(g, dir, host_base, ci(0), ci(1))],
+        (false, -1, lv) => {
+            // One contiguous run.
+            let len = extent_expr(loops, lv as usize).add_spread(spread_of(g));
+            vec![dma1d(g, dir, host_base, ci(0), len)]
+        }
+        (false, rv, lv) => {
+            // Row loop: one 1D DMA call (descriptor setup) per row — the
+            // pass cannot merge rows after pointer decay (§3.2).
+            let (rspread, lspread) = decompose_spread(g, g.row_stride);
+            let rows = extent_expr(loops, rv as usize).add_spread(rspread);
+            let len = extent_expr(loops, lv as usize).add_spread(lspread);
+            let r = fresh_loop_var(k, "r");
+            let local_row = ci(g.local_dims[1] as i32);
+            vec![Stmt::For {
+                var: r,
+                lo: ci(0),
+                hi: rows,
+                par: Par::None,
+                body: vec![dma1d(
+                    g,
+                    dir,
+                    host_base.clone().add(var(r).mul(ci(g.row_stride as i32))),
+                    var(r).mul(local_row),
+                    len,
+                )],
+            }]
+        }
+        (true, rv, -1) => {
+            // Single non-unit direction: one blocking word per iteration.
+            let rows = extent_expr(loops, rv as usize);
+            let a = fresh_loop_var(k, "w");
+            vec![Stmt::For {
+                var: a,
+                lo: ci(0),
+                hi: rows,
+                par: Par::None,
+                body: vec![
+                    dma1d(
+                        g,
+                        dir,
+                        host_base.clone().add(var(a).mul(ci(g.row_stride as i32))),
+                        var(a),
+                        ci(1),
+                    ),
+                ],
+            }]
+        }
+        (true, rv, lv) => {
+            // Word-wise box: blocking per-element transfers.
+            let rows = extent_expr(loops, rv as usize);
+            let lens = extent_expr(loops, lv as usize);
+            let a = fresh_loop_var(k, "wa");
+            let b = fresh_loop_var(k, "wb");
+            let local_row = ci(g.local_dims.get(1).copied().unwrap_or(1) as i32);
+            let len_coeff = g.coeffs[lv as usize];
+            vec![Stmt::For {
+                var: a,
+                lo: ci(0),
+                hi: rows,
+                par: Par::None,
+                body: vec![Stmt::For {
+                    var: b,
+                    lo: ci(0),
+                    hi: lens,
+                    par: Par::None,
+                    body: vec![
+                        dma1d(
+                            g,
+                            dir,
+                            host_base
+                                .clone()
+                                .add(var(a).mul(ci(g.row_stride as i32)))
+                                .add(var(b).mul(ci(len_coeff as i32))),
+                            var(a).mul(local_row).add(var(b)),
+                            ci(1),
+                        ),
+                    ],
+                }],
+            }]
+        }
+    }
+}
+
+fn dma1d(g: &Group, dir: Dir, host_off: Expr, local_off: Expr, elems: Expr) -> Stmt {
+    Stmt::Dma {
+        dir,
+        kind: DmaKind::Merged1D,
+        host: g.array,
+        host_off,
+        local: g.local,
+        local_off,
+        rows: ci(1),
+        row_elems: elems,
+        host_stride: ci(0),
+        local_stride: ci(0),
+    }
+}
+
+trait AddSpread {
+    fn add_spread(self, s: i64) -> Expr;
+}
+
+impl AddSpread for Expr {
+    fn add_spread(self, s: i64) -> Expr {
+        if s == 0 {
+            self
+        } else {
+            self.add(ci(s as i32))
+        }
+    }
+}
+
+fn fresh_loop_var(k: &mut Kernel, base: &str) -> VarId {
+    let name = format!("{base}{}", k.syms.len());
+    k.syms.push((name, Sym::LoopVar));
+    k.syms.len() - 1
+}
+
+/// Rebuild the point nest over the (possibly tiled) prefix loops.
+fn build_point_nest(
+    loops: &[LoopInfo],
+    d: usize,
+    prefix_len: usize,
+    inner: Vec<Stmt>,
+) -> Vec<Stmt> {
+    if d >= prefix_len {
+        return inner;
+    }
+    let body = build_point_nest(loops, d + 1, prefix_len, inner);
+    let l = &loops[d];
+    vec![Stmt::For { var: l.pvar, lo: ci(0), hi: extent_expr(loops, d), par: l.par, body }]
+}
+
+/// Rewrite accesses to local buffers and loop vars to tile_base + point.
+fn rewrite_block(
+    k: &Kernel,
+    body: &[Stmt],
+    groups: &[Group],
+    loops: &[LoopInfo],
+) -> Result<Vec<Stmt>> {
+    body.iter().map(|s| rewrite_stmt(k, s, groups, loops)).collect()
+}
+
+fn rewrite_stmt(k: &Kernel, s: &Stmt, groups: &[Group], loops: &[LoopInfo]) -> Result<Stmt> {
+    Ok(match s {
+        Stmt::For { var, lo, hi, par, body } => Stmt::For {
+            var: *var,
+            lo: rewrite_expr(k, lo, groups, loops)?,
+            hi: rewrite_expr(k, hi, groups, loops)?,
+            par: *par,
+            body: rewrite_block(k, body, groups, loops)?,
+        },
+        Stmt::Store { dst, idx, value } => {
+            let value = rewrite_expr(k, value, groups, loops)?;
+            let (local, lidx) = rewrite_access(k, *dst, idx, groups, loops)?;
+            Stmt::Store { dst: local, idx: lidx, value }
+        }
+        Stmt::Let { var, value } => {
+            Stmt::Let { var: *var, value: rewrite_expr(k, value, groups, loops)? }
+        }
+        Stmt::Assign { var, value } => {
+            Stmt::Assign { var: *var, value: rewrite_expr(k, value, groups, loops)? }
+        }
+        other => other.clone(),
+    })
+}
+
+fn rewrite_expr(k: &Kernel, e: &Expr, groups: &[Group], loops: &[LoopInfo]) -> Result<Expr> {
+    Ok(match e {
+        Expr::Load(a, idx) => {
+            let (local, lidx) = rewrite_access(k, *a, idx, groups, loops)?;
+            Expr::Load(local, lidx)
+        }
+        Expr::Var(v) => {
+            if let Some(l) = loops.iter().find(|l| l.var == *v) {
+                if l.tiled() {
+                    var(l.tvar.unwrap()).mul(ci(l.tile as i32)).add(var(l.pvar))
+                } else {
+                    e.clone()
+                }
+            } else {
+                e.clone()
+            }
+        }
+        Expr::Bin(op, a, b) => Expr::Bin(
+            *op,
+            Box::new(rewrite_expr(k, a, groups, loops)?),
+            Box::new(rewrite_expr(k, b, groups, loops)?),
+        ),
+        _ => e.clone(),
+    })
+}
+
+/// Rewrite one access to its local buffer.
+fn rewrite_access(
+    k: &Kernel,
+    arr: VarId,
+    idx: &[Expr],
+    groups: &[Group],
+    loops: &[LoopInfo],
+) -> Result<(VarId, Vec<Expr>)> {
+    let aff = flat_offset(k, arr, idx)
+        .ok_or_else(|| anyhow::anyhow!("non-affine access survived grouping"))?;
+    let coeffs: Vec<i64> = loops.iter().map(|l| aff.coeff(l.var)).collect();
+    for g in groups {
+        if g.array != arr || g.coeffs != coeffs || !g.consts.contains(&aff.constant) {
+            continue;
+        }
+        if g.remote {
+            // Left in the host address space: only substitute tiled loop
+            // variables inside the subscripts.
+            let lidx: Vec<Expr> = idx
+                .iter()
+                .map(|e| rewrite_expr(k, e, groups, loops))
+                .collect::<Result<_>>()?;
+            return Ok((arr, lidx));
+        }
+        let pos = g.consts.iter().position(|c| *c == aff.constant).unwrap();
+        let (rbias, lbias) = g.biases[pos];
+        let mut lidx: Vec<Expr> = Vec::new();
+        if g.row_var >= 0 {
+            let p = var(loops[g.row_var as usize].pvar);
+            lidx.push(if rbias == 0 { p } else { p.add(ci(rbias as i32)) });
+        }
+        if g.len_var >= 0 {
+            let p = var(loops[g.len_var as usize].pvar);
+            lidx.push(if lbias == 0 { p } else { p.add(ci(lbias as i32)) });
+        }
+        if lidx.is_empty() {
+            lidx.push(ci(0));
+        }
+        return Ok((g.local, lidx));
+    }
+    bail!("access to {} not covered by any group", k.sym_name(arr))
+}

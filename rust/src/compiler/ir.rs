@@ -1,0 +1,580 @@
+//! Kernel intermediate representation.
+//!
+//! Device kernels are expressed as structured loop nests over arrays — the
+//! same abstraction level as the C kernels the paper's Clang/LLVM toolchain
+//! consumes after OpenMP outlining. The IR is built with a Rust builder API
+//! (see [`crate::workloads`]), pretty-printed to C-like source for the Fig 6
+//! code-complexity analysis, transformed by [`crate::compiler::autodma`],
+//! and lowered to accelerator machine code by [`crate::compiler::lower`].
+//!
+//! Scalar integer parameters are compile-time constants (polybench-style
+//! static problem sizes), which the affine analyses and the post-increment
+//! legality checks rely on, exactly as the paper's statically-sized
+//! benchmarks do.
+
+/// Address space of an array (§2.2.1): `Host` pointers are 64-bit and reach
+/// main memory through the ext-address path or DMA; `Local` buffers live in
+/// the cluster's TCDM (native 32-bit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    Host,
+    Local,
+}
+
+/// Symbol table index.
+pub type VarId = usize;
+
+/// Symbol kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Sym {
+    /// f32 array parameter in the host address space; `dims` are extents in
+    /// elements (innermost last, row-major).
+    HostArray { dims: Vec<Expr> },
+    /// f32 buffer in L1 TCDM, allocated by `Stmt::LocalAlloc`; `dims` are
+    /// compile-time-constant extents (row-major).
+    LocalBuf { dims: Vec<Expr> },
+    /// Compile-time-constant i32 parameter (static problem size).
+    ConstParam { value: i32 },
+    /// f32 scalar parameter (passed in an f-register).
+    FloatParam,
+    /// Loop induction variable (i32).
+    LoopVar,
+    /// Mutable i32 scalar introduced by `Let`.
+    LetI32,
+    /// Mutable f32 scalar introduced by `Let`.
+    LetF32,
+}
+
+/// Binary operators (typed by context: ints for index math, floats for data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    ConstI(i32),
+    ConstF(f32),
+    Var(VarId),
+    /// Multi-dimensional array load, `A[idx0][idx1]...`.
+    Load(VarId, Vec<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn add(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Add, Box::new(self), Box::new(o))
+    }
+    pub fn sub(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Sub, Box::new(self), Box::new(o))
+    }
+    pub fn mul(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Mul, Box::new(self), Box::new(o))
+    }
+    pub fn div(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Div, Box::new(self), Box::new(o))
+    }
+    pub fn min(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Min, Box::new(self), Box::new(o))
+    }
+
+    /// Does this expression (transitively) contain a `Min`/`Max`? Loop
+    /// bounds derived from tile clamping are `Min`-shaped; the paper's
+    /// compiler does not infer hardware loops for them (§3.4).
+    pub fn has_minmax(&self) -> bool {
+        match self {
+            Expr::Bin(BinOp::Min | BinOp::Max, ..) => true,
+            Expr::Bin(_, a, b) => a.has_minmax() || b.has_minmax(),
+            Expr::Load(_, idx) => idx.iter().any(|e| e.has_minmax()),
+            _ => false,
+        }
+    }
+
+    /// Variables referenced.
+    pub fn vars(&self, out: &mut Vec<VarId>) {
+        match self {
+            Expr::Var(v) => out.push(*v),
+            Expr::Load(a, idx) => {
+                out.push(*a);
+                idx.iter().for_each(|e| e.vars(out));
+            }
+            Expr::Bin(_, a, b) => {
+                a.vars(out);
+                b.vars(out);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Parallelism annotation on a loop (OpenMP `distribute` / `for`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Par {
+    /// Sequential.
+    None,
+    /// `#pragma omp for`: iterations distributed over the cores of a
+    /// cluster (fork/join).
+    Cores,
+    /// `#pragma omp teams distribute`: iterations distributed over clusters.
+    Teams,
+}
+
+/// DMA transfer kind (maps onto the HERO API, §2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaKind {
+    /// `hero_memcpy_*`: one contiguous run; a single merged burst train.
+    Merged1D,
+    /// `hero_memcpy2d_*`: `rows` runs of `row_elems`, one burst per row,
+    /// executed by the DMA hardware from a single descriptor.
+    Hw2D,
+}
+
+/// DMA direction in IR terms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    HostToLocal,
+    LocalToHost,
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `for (var = lo; var < hi; var++) body` (step is always 1).
+    For { var: VarId, lo: Expr, hi: Expr, par: Par, body: Vec<Stmt> },
+    /// `dst[idx...] = value`.
+    Store { dst: VarId, idx: Vec<Expr>, value: Expr },
+    /// Introduce (and initialize) a mutable scalar.
+    Let { var: VarId, value: Expr },
+    /// Update a scalar.
+    Assign { var: VarId, value: Expr },
+    /// Allocate `elems` f32 in L1 (`hero_l1_malloc`). Sizes must be
+    /// compile-time constants (static tiling).
+    LocalAlloc { var: VarId, elems: Expr },
+    /// Free all L1 buffers allocated so far (between sequential nests).
+    LocalFreeAll,
+    /// Asynchronous DMA between a host array and a local buffer.
+    /// Offsets/strides are in f32 elements.
+    Dma {
+        dir: Dir,
+        kind: DmaKind,
+        host: VarId,
+        host_off: Expr,
+        local: VarId,
+        local_off: Expr,
+        rows: Expr,
+        row_elems: Expr,
+        host_stride: Expr,
+        local_stride: Expr,
+    },
+    /// Wait for all outstanding DMA transfers (`hero_memcpy_wait`).
+    DmaWaitAll,
+}
+
+/// A device kernel: the body of an OpenMP `target` region.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    /// Symbol table; params come first, in declaration order.
+    pub syms: Vec<(String, Sym)>,
+    /// Number of leading symbols that are parameters.
+    pub n_params: usize,
+    pub body: Vec<Stmt>,
+}
+
+impl Kernel {
+    pub fn sym(&self, v: VarId) -> &Sym {
+        &self.syms[v].1
+    }
+
+    pub fn sym_name(&self, v: VarId) -> &str {
+        &self.syms[v].0
+    }
+
+    /// Value of a const parameter.
+    pub fn const_of(&self, v: VarId) -> Option<i32> {
+        match self.sym(v) {
+            Sym::ConstParam { value } => Some(*value),
+            _ => None,
+        }
+    }
+
+    /// Evaluate a compile-time-constant expression (const params folded).
+    pub fn eval_const(&self, e: &Expr) -> Option<i64> {
+        match e {
+            Expr::ConstI(c) => Some(*c as i64),
+            Expr::Var(v) => self.const_of(*v).map(|c| c as i64),
+            Expr::Bin(op, a, b) => {
+                let (a, b) = (self.eval_const(a)?, self.eval_const(b)?);
+                Some(match op {
+                    BinOp::Add => a + b,
+                    BinOp::Sub => a - b,
+                    BinOp::Mul => a * b,
+                    BinOp::Div => {
+                        if b == 0 {
+                            return None;
+                        }
+                        a / b
+                    }
+                    BinOp::Min => a.min(b),
+                    BinOp::Max => a.max(b),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Row-major element strides of an array (innermost dim has stride 1).
+    /// All dims must be const-evaluable.
+    pub fn array_strides(&self, v: VarId) -> Option<Vec<i64>> {
+        let dims = match self.sym(v) {
+            Sym::HostArray { dims } | Sym::LocalBuf { dims } => dims,
+            _ => return None,
+        };
+        let exts: Option<Vec<i64>> = dims.iter().map(|d| self.eval_const(d)).collect();
+        let exts = exts?;
+        let mut strides = vec![1i64; exts.len()];
+        for d in (0..exts.len().saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * exts[d + 1];
+        }
+        Some(strides)
+    }
+
+    /// Total elements of an array.
+    pub fn array_elems(&self, v: VarId) -> Option<i64> {
+        let dims = match self.sym(v) {
+            Sym::HostArray { dims } | Sym::LocalBuf { dims } => dims,
+            _ => return None,
+        };
+        dims.iter().map(|d| self.eval_const(d)).product::<Option<i64>>()
+    }
+}
+
+/// Builder for kernels.
+pub struct KernelBuilder {
+    k: Kernel,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str) -> Self {
+        KernelBuilder {
+            k: Kernel { name: name.into(), syms: Vec::new(), n_params: 0, body: Vec::new() },
+        }
+    }
+
+    fn add_sym(&mut self, name: &str, s: Sym) -> VarId {
+        self.k.syms.push((name.into(), s));
+        self.k.syms.len() - 1
+    }
+
+    /// Declare a host f32 array parameter with the given extents.
+    pub fn host_array(&mut self, name: &str, dims: Vec<Expr>) -> VarId {
+        let v = self.add_sym(name, Sym::HostArray { dims });
+        self.k.n_params = self.k.syms.len();
+        v
+    }
+
+    /// Declare a compile-time-constant i32 parameter.
+    pub fn const_param(&mut self, name: &str, value: i32) -> VarId {
+        let v = self.add_sym(name, Sym::ConstParam { value });
+        self.k.n_params = self.k.syms.len();
+        v
+    }
+
+    /// Declare an f32 scalar parameter.
+    pub fn float_param(&mut self, name: &str) -> VarId {
+        let v = self.add_sym(name, Sym::FloatParam);
+        self.k.n_params = self.k.syms.len();
+        v
+    }
+
+    /// Declare a loop variable (used with `Stmt::For`).
+    pub fn loop_var(&mut self, name: &str) -> VarId {
+        self.add_sym(name, Sym::LoopVar)
+    }
+
+    /// Declare a mutable i32 scalar.
+    pub fn let_i32(&mut self, name: &str) -> VarId {
+        self.add_sym(name, Sym::LetI32)
+    }
+
+    /// Declare a mutable f32 scalar.
+    pub fn let_f32(&mut self, name: &str) -> VarId {
+        self.add_sym(name, Sym::LetF32)
+    }
+
+    /// Declare an L1-local buffer with compile-time-constant extents.
+    pub fn local_buf(&mut self, name: &str, dims: Vec<Expr>) -> VarId {
+        self.add_sym(name, Sym::LocalBuf { dims })
+    }
+
+    pub fn body(mut self, body: Vec<Stmt>) -> Kernel {
+        self.k.body = body;
+        self.k
+    }
+}
+
+/// Shorthand constructors.
+pub fn ci(v: i32) -> Expr {
+    Expr::ConstI(v)
+}
+pub fn cf(v: f32) -> Expr {
+    Expr::ConstF(v)
+}
+pub fn var(v: VarId) -> Expr {
+    Expr::Var(v)
+}
+pub fn ld(a: VarId, idx: Vec<Expr>) -> Expr {
+    Expr::Load(a, idx)
+}
+/// Serial loop.
+pub fn for_(var: VarId, lo: Expr, hi: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For { var, lo, hi, par: Par::None, body }
+}
+/// Parallel (`omp for`) loop.
+pub fn par_for(var: VarId, lo: Expr, hi: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For { var, lo, hi, par: Par::Cores, body }
+}
+pub fn st(dst: VarId, idx: Vec<Expr>, value: Expr) -> Stmt {
+    Stmt::Store { dst, idx, value }
+}
+
+// --- pretty printer (C-like; the Fig 6 complexity metrics run on this) ----
+
+/// Render a kernel as C-like source.
+pub fn pretty(k: &Kernel) -> String {
+    let mut out = String::new();
+    let params: Vec<String> = (0..k.n_params)
+        .map(|v| match k.sym(v) {
+            Sym::HostArray { .. } => format!("float *{}", k.sym_name(v)),
+            Sym::ConstParam { .. } => format!("int {}", k.sym_name(v)),
+            Sym::FloatParam => format!("float {}", k.sym_name(v)),
+            _ => unreachable!("non-param in param range"),
+        })
+        .collect();
+    out.push_str(&format!("void {}({}) {{\n", k.name, params.join(", ")));
+    for s in &k.body {
+        pretty_stmt(k, s, 1, &mut out);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn ind(n: usize) -> String {
+    "  ".repeat(n)
+}
+
+fn pretty_expr(k: &Kernel, e: &Expr) -> String {
+    match e {
+        Expr::ConstI(c) => format!("{c}"),
+        Expr::ConstF(c) => format!("{c:?}f"),
+        Expr::Var(v) => k.sym_name(*v).to_string(),
+        Expr::Load(a, idx) => {
+            let idx: Vec<String> =
+                idx.iter().map(|e| format!("[{}]", pretty_expr(k, e))).collect();
+            format!("{}{}", k.sym_name(*a), idx.join(""))
+        }
+        Expr::Bin(op, a, b) => {
+            let (a, b) = (pretty_expr(k, a), pretty_expr(k, b));
+            match op {
+                BinOp::Add => format!("({a} + {b})"),
+                BinOp::Sub => format!("({a} - {b})"),
+                BinOp::Mul => format!("({a} * {b})"),
+                BinOp::Div => format!("({a} / {b})"),
+                BinOp::Min => format!("MIN({a}, {b})"),
+                BinOp::Max => format!("MAX({a}, {b})"),
+            }
+        }
+    }
+}
+
+fn pretty_stmt(k: &Kernel, s: &Stmt, d: usize, out: &mut String) {
+    match s {
+        Stmt::For { var, lo, hi, par, body } => {
+            let pragma = match par {
+                Par::None => String::new(),
+                Par::Cores => format!("{}#pragma omp for\n", ind(d)),
+                Par::Teams => format!("{}#pragma omp teams distribute\n", ind(d)),
+            };
+            out.push_str(&pragma);
+            let v = k.sym_name(*var);
+            out.push_str(&format!(
+                "{}for (int {v} = {}; {v} < {}; {v}++) {{\n",
+                ind(d),
+                pretty_expr(k, lo),
+                pretty_expr(k, hi)
+            ));
+            for s in body {
+                pretty_stmt(k, s, d + 1, out);
+            }
+            out.push_str(&format!("{}}}\n", ind(d)));
+        }
+        Stmt::Store { dst, idx, value } => {
+            let idx: Vec<String> =
+                idx.iter().map(|e| format!("[{}]", pretty_expr(k, e))).collect();
+            // Render accumulations as `+=` like the source programs do.
+            if let Expr::Bin(BinOp::Add, a, b) = value {
+                if **a == Expr::Load(*dst, idx_exprs(s)) {
+                    out.push_str(&format!(
+                        "{}{}{} += {};\n",
+                        ind(d),
+                        k.sym_name(*dst),
+                        idx.join(""),
+                        pretty_expr(k, b)
+                    ));
+                    return;
+                }
+            }
+            out.push_str(&format!(
+                "{}{}{} = {};\n",
+                ind(d),
+                k.sym_name(*dst),
+                idx.join(""),
+                pretty_expr(k, value)
+            ));
+        }
+        Stmt::Let { var, value } => {
+            let ty = if matches!(k.sym(*var), Sym::LetF32) { "float" } else { "int" };
+            out.push_str(&format!(
+                "{}{ty} {} = {};\n",
+                ind(d),
+                k.sym_name(*var),
+                pretty_expr(k, value)
+            ));
+        }
+        Stmt::Assign { var, value } => {
+            out.push_str(&format!(
+                "{}{} = {};\n",
+                ind(d),
+                k.sym_name(*var),
+                pretty_expr(k, value)
+            ));
+        }
+        Stmt::LocalAlloc { var, elems } => {
+            out.push_str(&format!(
+                "{}float *{} = hero_l1_malloc(sizeof(float) * {});\n",
+                ind(d),
+                k.sym_name(*var),
+                pretty_expr(k, elems)
+            ));
+        }
+        Stmt::Dma {
+            dir, kind, host, host_off, local, local_off, rows, row_elems, host_stride, ..
+        } => {
+            let f = match (dir, kind) {
+                (Dir::HostToLocal, DmaKind::Merged1D) => "hero_memcpy_host2dev_async",
+                (Dir::LocalToHost, DmaKind::Merged1D) => "hero_memcpy_dev2host_async",
+                (Dir::HostToLocal, DmaKind::Hw2D) => "hero_memcpy2d_host2dev_async",
+                (Dir::LocalToHost, DmaKind::Hw2D) => "hero_memcpy2d_dev2host_async",
+            };
+            let args = match kind {
+                DmaKind::Merged1D => format!(
+                    "{} + {}, {} + {}, sizeof(float) * {}",
+                    k.sym_name(*local),
+                    pretty_expr(k, local_off),
+                    k.sym_name(*host),
+                    pretty_expr(k, host_off),
+                    pretty_expr(k, row_elems)
+                ),
+                DmaKind::Hw2D => format!(
+                    "{} + {}, {} + {}, sizeof(float) * {}, {}, {}",
+                    k.sym_name(*local),
+                    pretty_expr(k, local_off),
+                    k.sym_name(*host),
+                    pretty_expr(k, host_off),
+                    pretty_expr(k, row_elems),
+                    pretty_expr(k, rows),
+                    pretty_expr(k, host_stride)
+                ),
+            };
+            out.push_str(&format!("{}{f}({args});\n", ind(d)));
+        }
+        Stmt::DmaWaitAll => out.push_str(&format!("{}hero_memcpy_wait_all();\n", ind(d))),
+        Stmt::LocalFreeAll => out.push_str(&format!("{}hero_l1_free_all();\n", ind(d))),
+    }
+}
+
+fn idx_exprs(s: &Stmt) -> Vec<Expr> {
+    match s {
+        Stmt::Store { idx, .. } => idx.clone(),
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Kernel {
+        // for i in 0..N: Y[i] = a * X[i]
+        let mut b = KernelBuilder::new("saxpy0");
+        let x = b.host_array("X", vec![ci(64)]);
+        let y = b.host_array("Y", vec![ci(64)]);
+        let n = b.const_param("N", 64);
+        let a = b.float_param("a");
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            var(n),
+            vec![st(y, vec![var(i)], var(a).mul(ld(x, vec![var(i)])))],
+        )])
+    }
+
+    #[test]
+    fn builder_and_pretty() {
+        let k = tiny();
+        let src = pretty(&k);
+        assert!(src.contains("void saxpy0(float *X, float *Y, int N, float a)"));
+        assert!(src.contains("#pragma omp for"));
+        assert!(src.contains("for (int i = 0; i < N; i++)"));
+        assert!(src.contains("Y[i] = (a * X[i]);"));
+    }
+
+    #[test]
+    fn const_eval() {
+        let k = tiny();
+        let n = 2; // VarId of N
+        assert_eq!(k.eval_const(&var(n)), Some(64));
+        assert_eq!(k.eval_const(&var(n).mul(ci(4)).add(ci(1))), Some(257));
+        assert_eq!(k.eval_const(&var(4)), None); // loop var
+        assert_eq!(k.eval_const(&ci(100).min(var(n))), Some(64));
+    }
+
+    #[test]
+    fn array_strides_row_major() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 8);
+        let a = b.host_array("A", vec![var(n), var(n).mul(ci(2))]);
+        let k = b.body(vec![]);
+        assert_eq!(k.array_strides(a), Some(vec![16, 1]));
+        assert_eq!(k.array_elems(a), Some(128));
+    }
+
+    #[test]
+    fn minmax_detection() {
+        let e = ci(3).min(ci(5)).add(ci(1));
+        assert!(e.has_minmax());
+        assert!(!ci(3).add(ci(5)).has_minmax());
+    }
+
+    #[test]
+    fn accumulate_pretty_prints_plus_eq() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 4);
+        let c = b.host_array("C", vec![var(n)]);
+        let i = b.loop_var("i");
+        let k = b.body(vec![for_(
+            i,
+            ci(0),
+            var(n),
+            vec![st(c, vec![var(i)], ld(c, vec![var(i)]).add(cf(1.0)))],
+        )]);
+        assert!(pretty(&k).contains("C[i] += 1.0f;"));
+    }
+}

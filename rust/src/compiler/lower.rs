@@ -1,0 +1,1479 @@
+//! Lowering: kernel IR → accelerator machine code.
+//!
+//! Mirrors the paper's device compiler (§2.2):
+//! * **Host-pointer legalization** (§2.2.1): accesses to host-space arrays
+//!   become `*.ext` instructions through the address-extension CSR, set once
+//!   in the prologue.
+//! * **Pointer strength reduction**: affine accesses inside loops become
+//!   induction pointers initialized in the preheader and bumped per
+//!   iteration — the classic `-O3` shape the paper's instruction counts
+//!   reflect (gemm base inner loop: 2 loads, 4 adds, 2 muls, 1 store,
+//!   1 branch).
+//! * **Xpulpv2 codegen** (§2.2.3): post-increment load/store fusion
+//!   (immediate strides < 2 KiB only — the paper's atax column walk is "too
+//!   large to be used in post-increment"), MAC fusion, and hardware-loop
+//!   inference for up to two nested levels. Hardware loops are *not*
+//!   inferred when the trip count is tile-dependent (`Min`-shaped bounds) or
+//!   when the body carries a may-alias load/store pair (the covar case,
+//!   which manual register promotion resolves — §3.4).
+//! * **Accumulator caching**: loop-invariant accumulator loads are hoisted
+//!   into a register; the store stays in the loop (the paper notes its
+//!   compiler lacks the memory-to-register pass to hoist it; doing it
+//!   manually in the source is Fig 9's second bar).
+//! * **OpenMP lowering**: `Par::Cores` loops become fork/join regions with
+//!   static chunking by `mhartid`; `Par::Teams` loops chunk by cluster id.
+
+use super::analyze::{flat_offset, Affine};
+use super::ir::*;
+use crate::isa::{AluOp, Cond, Csr, DmaDir, FpOp, Inst, Program, Reg};
+use crate::mem::map;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Lowering options.
+#[derive(Debug, Clone)]
+pub struct LowerOpts {
+    /// Enable Xpulpv2 codegen (post-increment, MAC, hardware loops).
+    pub xpulp: bool,
+    /// Cores per cluster (for `Par::Cores` chunking).
+    pub n_cores: u32,
+    /// Clusters (for `Par::Teams` chunking).
+    pub n_clusters: u32,
+    /// Byte offset within the TCDM where kernel-static buffers start (below
+    /// it lives the runtime + stacks; 1/8 of the TCDM on Aurora).
+    pub l1_base_off: u32,
+    /// TCDM capacity in bytes (for allocation overflow checks).
+    pub l1_bytes: u32,
+}
+
+impl LowerOpts {
+    pub fn for_config(cfg: &crate::config::HeroConfig) -> Self {
+        LowerOpts {
+            xpulp: cfg.accel.isa.xpulp,
+            n_cores: cfg.accel.cores_per_cluster as u32,
+            n_clusters: cfg.accel.n_clusters as u32,
+            l1_base_off: (cfg.accel.l1_bytes / 8) as u32,
+            l1_bytes: cfg.accel.l1_bytes as u32,
+        }
+    }
+}
+
+/// Result of lowering a kernel.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    pub program: Program,
+    /// Host arrays in parameter order: the runtime passes `x10 = VA[63:32]`
+    /// (common to all buffers) and `x11+i = VA[31:0]` of array i.
+    pub arrays: Vec<VarId>,
+    /// Float parameters in order (passed in `f10+i`).
+    pub floats: Vec<VarId>,
+    /// Bytes of TCDM used by kernel-static buffers.
+    pub l1_used: u32,
+}
+
+/// Maximum immediate for post-increment forms (12-bit signed, bytes).
+const POST_INC_MAX: i64 = 2048;
+
+pub fn lower(k: &Kernel, opts: &LowerOpts) -> Result<Lowered> {
+    let mut lw = Lower::new(k, opts)?;
+    lw.prologue()?;
+    let body = k.body.clone();
+    lw.emit_block(&body, &LoopCtx::default())?;
+    lw.asm.push(Inst::Halt);
+    let program = lw.finish()?;
+    let l1_used = lw.l1_peak.max(lw.l1_cursor) - opts.l1_base_off;
+    Ok(Lowered { program, arrays: lw.arrays, floats: lw.floats, l1_used })
+}
+
+// --- assembler with label fixups ------------------------------------------
+
+#[derive(Default)]
+struct Asm {
+    insts: Vec<Inst>,
+    labels: Vec<Option<u32>>,
+    /// (inst index, label, which operand) fixups.
+    fixups: Vec<(usize, usize, FixKind)>,
+}
+
+#[derive(Clone, Copy)]
+enum FixKind {
+    Branch,
+    Fork,
+    HwStart,
+    HwEnd,
+}
+
+impl Asm {
+    fn push(&mut self, i: Inst) -> usize {
+        self.insts.push(i);
+        self.insts.len() - 1
+    }
+
+    fn new_label(&mut self) -> usize {
+        self.labels.push(None);
+        self.labels.len() - 1
+    }
+
+    fn bind(&mut self, l: usize) {
+        self.labels[l] = Some(self.insts.len() as u32);
+    }
+
+    fn push_branch(&mut self, cond: Cond, rs1: Reg, rs2: Reg, label: usize) {
+        let i = self.push(Inst::Branch { cond, rs1, rs2, target: 0 });
+        self.fixups.push((i, label, FixKind::Branch));
+    }
+
+    fn push_fork(&mut self, label: usize) {
+        let i = self.push(Inst::Fork { target: 0 });
+        self.fixups.push((i, label, FixKind::Fork));
+    }
+
+    fn push_hwloop(&mut self, l: u8, count: Reg, start: usize, end: usize) {
+        let i = self.push(Inst::HwLoop { l, count, start: 0, end: 0 });
+        self.fixups.push((i, start, FixKind::HwStart));
+        self.fixups.push((i, end, FixKind::HwEnd));
+    }
+
+    fn finish(mut self) -> Result<Vec<Inst>> {
+        for (idx, label, kind) in &self.fixups {
+            let target =
+                self.labels[*label].ok_or_else(|| anyhow!("unbound label {label}"))?;
+            match (&mut self.insts[*idx], kind) {
+                (Inst::Branch { target: t, .. }, FixKind::Branch) => *t = target,
+                (Inst::Fork { target: t }, FixKind::Fork) => *t = target,
+                (Inst::HwLoop { start, .. }, FixKind::HwStart) => *start = target,
+                (Inst::HwLoop { end, .. }, FixKind::HwEnd) => *end = target,
+                _ => bail!("fixup mismatch at {idx}"),
+            }
+        }
+        Ok(self.insts)
+    }
+}
+
+// --- register allocation ----------------------------------------------------
+
+struct Regs {
+    free_i: Vec<Reg>,
+    free_f: Vec<Reg>,
+    temp_i: Vec<Reg>,
+    temp_f: Vec<Reg>,
+}
+
+/// A value in a register: temps must be freed, homes must not.
+#[derive(Clone, Copy, PartialEq)]
+enum Val {
+    Temp(Reg),
+    Home(Reg),
+}
+
+impl Val {
+    fn reg(self) -> Reg {
+        match self {
+            Val::Temp(r) | Val::Home(r) => r,
+        }
+    }
+}
+
+impl Regs {
+    fn new(n_arrays: usize, n_floats: usize) -> Self {
+        // x0 zero, x1-x4 expr temps, x5 last-dma-id, x10 host-hi,
+        // x11.. array los, x28 tcdm base.
+        let mut free_i: Vec<Reg> = vec![6, 7, 8, 9];
+        let first_free = 11 + n_arrays as u8;
+        for r in first_free..28 {
+            free_i.push(r);
+        }
+        free_i.extend([29, 30, 31]);
+        // f0-f3 temps, f10.. float params.
+        let mut free_f: Vec<Reg> = (4..10).collect();
+        for r in (10 + n_floats as u8)..32 {
+            free_f.push(r);
+        }
+        Regs { free_i, free_f, temp_i: vec![1, 2, 3, 4], temp_f: vec![0, 1, 2, 3] }
+    }
+
+    fn alloc_i(&mut self) -> Result<Reg> {
+        self.free_i.pop().ok_or_else(|| anyhow!("out of integer registers"))
+    }
+
+    fn alloc_f(&mut self) -> Result<Reg> {
+        self.free_f.pop().ok_or_else(|| anyhow!("out of float registers"))
+    }
+
+    fn release_i(&mut self, r: Reg) {
+        self.free_i.push(r);
+    }
+
+    fn release_f(&mut self, r: Reg) {
+        self.free_f.push(r);
+    }
+
+    fn tmp_i(&mut self) -> Result<Reg> {
+        self.temp_i.pop().ok_or_else(|| anyhow!("integer temp pool exhausted"))
+    }
+
+    fn tmp_f(&mut self) -> Result<Reg> {
+        self.temp_f.pop().ok_or_else(|| anyhow!("float temp pool exhausted"))
+    }
+
+    fn free_val_i(&mut self, v: Val) {
+        if let Val::Temp(r) = v {
+            self.temp_i.push(r);
+        }
+    }
+
+    fn free_val_f(&mut self, v: Val) {
+        if let Val::Temp(r) = v {
+            self.temp_f.push(r);
+        }
+    }
+}
+
+// --- strength-reduction entries --------------------------------------------
+
+/// One induction pointer for an access in the current loop body.
+struct SrEntry {
+    array: VarId,
+    /// Flat affine offset of the access (in elements).
+    affine: Affine,
+    /// Pointer register (byte address: native TCDM or host-lo).
+    ptr: Reg,
+    /// Stride in bytes per iteration of the owning loop var.
+    stride: i64,
+    /// Uses per iteration (bump after the last one).
+    uses: u32,
+    uses_left: u32,
+    /// Host (ext) or local access.
+    host: bool,
+}
+
+/// Per-loop lowering context.
+#[derive(Default, Clone)]
+struct LoopCtx {
+    /// Enclosing loop variables (outermost first).
+    loop_vars: Vec<VarId>,
+    /// Hardware-loop nesting level already in use above us.
+    hw_depth: u8,
+    /// Are we inside a parallel (forked) region?
+    in_parallel: bool,
+}
+
+// --- accumulator-cache bookkeeping -----------------------------------------
+
+struct AccCache {
+    array: VarId,
+    idx: Vec<Expr>,
+    freg: Reg,
+    /// Pointer register holding the (invariant) address.
+    ptr: Reg,
+    host: bool,
+}
+
+// --- the lowering driver ----------------------------------------------------
+
+struct Lower<'k> {
+    k: &'k Kernel,
+    opts: LowerOpts,
+    asm: Asm,
+    regs: Regs,
+    /// Home registers of scalar vars (loop vars, lets).
+    home_i: HashMap<VarId, Reg>,
+    home_f: HashMap<VarId, Reg>,
+    /// Array base registers: host arrays → arg reg (VA lo); local buffers →
+    /// computed TCDM pointer.
+    base: HashMap<VarId, Reg>,
+    /// Static L1 allocation cursor (byte offset in TCDM).
+    l1_cursor: u32,
+    /// Peak cursor (for `Lowered::l1_used`).
+    l1_peak: u32,
+    arrays: Vec<VarId>,
+    floats: Vec<VarId>,
+    /// Active SR entries, innermost loop last.
+    sr_stack: Vec<Vec<SrEntry>>,
+    /// Active accumulator caches.
+    acc_stack: Vec<Vec<AccCache>>,
+    /// Register holding this cluster's TCDM base (x28), set in prologue.
+    tcdm_base_reg: Reg,
+    has_locals: bool,
+}
+
+impl<'k> Lower<'k> {
+    fn new(k: &'k Kernel, opts: &LowerOpts) -> Result<Self> {
+        let arrays: Vec<VarId> = (0..k.n_params)
+            .filter(|v| matches!(k.sym(*v), Sym::HostArray { .. }))
+            .collect();
+        let floats: Vec<VarId> =
+            (0..k.n_params).filter(|v| matches!(k.sym(*v), Sym::FloatParam)).collect();
+        if arrays.len() > 14 {
+            bail!("too many array parameters");
+        }
+        let has_locals = k.syms.iter().any(|(_, s)| matches!(s, Sym::LocalBuf { .. }));
+        let mut base = HashMap::new();
+        for (i, a) in arrays.iter().enumerate() {
+            base.insert(*a, 11 + i as u8);
+        }
+        let mut home_f = HashMap::new();
+        for (i, f) in floats.iter().enumerate() {
+            home_f.insert(*f, 10 + i as u8);
+        }
+        Ok(Lower {
+            k,
+            opts: opts.clone(),
+            asm: Asm::default(),
+            regs: Regs::new(arrays.len(), floats.len()),
+            home_i: HashMap::new(),
+            home_f,
+            base,
+            l1_cursor: opts.l1_base_off,
+            l1_peak: opts.l1_base_off,
+            arrays,
+            floats,
+            sr_stack: Vec::new(),
+            acc_stack: Vec::new(),
+            tcdm_base_reg: 28,
+            has_locals,
+        })
+    }
+
+    fn prologue(&mut self) -> Result<()> {
+        if !self.arrays.is_empty() {
+            // Host pointers share one 4 GiB window; the legalizer sets the
+            // address-extension CSR once (§2.2.1).
+            self.asm.push(Inst::CsrW { csr: Csr::ExtAddr, rs1: 10 });
+        }
+        if self.has_locals {
+            // x28 = TCDM base of *this* cluster.
+            let t = self.regs.tmp_i()?;
+            self.asm.push(Inst::CsrR { rd: t, csr: Csr::MClusterId });
+            let u = self.regs.tmp_i()?;
+            self.asm.push(Inst::Li { rd: u, imm: map::CLUSTER_STRIDE as i32 });
+            self.asm.push(Inst::Alu { op: AluOp::Mul, rd: t, rs1: t, rs2: u });
+            self.asm.push(Inst::Li { rd: self.tcdm_base_reg, imm: map::TCDM_BASE as i32 });
+            self.asm.push(Inst::Alu {
+                op: AluOp::Add,
+                rd: self.tcdm_base_reg,
+                rs1: self.tcdm_base_reg,
+                rs2: t,
+            });
+            self.regs.temp_i.push(t);
+            self.regs.temp_i.push(u);
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<Program> {
+        let asm = std::mem::take(&mut self.asm);
+        let insts = asm.finish()?;
+        let mut p = Program::new(insts);
+        p.entry = 0;
+        p.validate().map_err(|e| anyhow!("lowered program invalid: {e}"))?;
+        Ok(p)
+    }
+
+    // --- integer expressions ---
+
+    fn is_host(&self, array: VarId) -> bool {
+        matches!(self.k.sym(array), Sym::HostArray { .. })
+    }
+
+    fn eval_i(&mut self, e: &Expr) -> Result<Val> {
+        // Constant folding first (const params are immediates).
+        if let Some(c) = self.k.eval_const(e) {
+            let t = self.regs.tmp_i()?;
+            self.asm.push(Inst::Li { rd: t, imm: c as i32 });
+            return Ok(Val::Temp(t));
+        }
+        match e {
+            Expr::Var(v) => {
+                let r = *self
+                    .home_i
+                    .get(v)
+                    .ok_or_else(|| anyhow!("use of undefined i32 var {}", self.k.sym_name(*v)))?;
+                Ok(Val::Home(r))
+            }
+            Expr::Bin(op, a, b) => {
+                let va = self.eval_i(a)?;
+                let vb = self.eval_i(b)?;
+                let rd = match (va, vb) {
+                    (Val::Temp(r), _) => r,
+                    (_, Val::Temp(r)) => r,
+                    _ => self.regs.tmp_i()?,
+                };
+                self.emit_int_binop(*op, rd, va.reg(), vb.reg())?;
+                // Free the temp we didn't reuse.
+                match (va, vb) {
+                    (Val::Temp(_), Val::Temp(b)) if b != rd => self.regs.temp_i.push(b),
+                    (Val::Temp(a), Val::Temp(_)) if a != rd => self.regs.temp_i.push(a),
+                    _ => {}
+                }
+                Ok(Val::Temp(rd))
+            }
+            Expr::ConstI(_) => unreachable!("folded above"),
+            _ => bail!("expression is not an integer expression: {e:?}"),
+        }
+    }
+
+    fn emit_int_binop(&mut self, op: BinOp, rd: Reg, a: Reg, b: Reg) -> Result<()> {
+        let alu = match op {
+            BinOp::Add => AluOp::Add,
+            BinOp::Sub => AluOp::Sub,
+            BinOp::Mul => AluOp::Mul,
+            BinOp::Div => AluOp::Div,
+            BinOp::Min | BinOp::Max => {
+                if self.opts.xpulp {
+                    let alu = if op == BinOp::Min { AluOp::Min } else { AluOp::Max };
+                    self.asm.push(Inst::Alu { op: alu, rd, rs1: a, rs2: b });
+                } else {
+                    // Branchless RV32IM min/max:
+                    //   t = (a < b); u = a - b; u *= t; rd = b + u   (min)
+                    let t = self.regs.tmp_i()?;
+                    let u = self.regs.tmp_i()?;
+                    let (x, y) = if op == BinOp::Min { (a, b) } else { (b, a) };
+                    self.asm.push(Inst::Alu { op: AluOp::Slt, rd: t, rs1: x, rs2: y });
+                    self.asm.push(Inst::Alu { op: AluOp::Sub, rd: u, rs1: x, rs2: y });
+                    self.asm.push(Inst::Alu { op: AluOp::Mul, rd: u, rs1: u, rs2: t });
+                    self.asm.push(Inst::Alu { op: AluOp::Add, rd, rs1: y, rs2: u });
+                    self.regs.temp_i.push(t);
+                    self.regs.temp_i.push(u);
+                }
+                return Ok(());
+            }
+        };
+        self.asm.push(Inst::Alu { op: alu, rd, rs1: a, rs2: b });
+        Ok(())
+    }
+
+    // --- addresses & memory accesses ---
+
+    /// Find an active SR entry for this access.
+    fn find_sr(&mut self, array: VarId, affine: &Affine) -> Option<(usize, usize)> {
+        for (li, entries) in self.sr_stack.iter().enumerate().rev() {
+            for (ei, e) in entries.iter().enumerate() {
+                if e.array == array && &e.affine == affine {
+                    return Some((li, ei));
+                }
+            }
+        }
+        None
+    }
+
+    /// Compute the byte address of an access into a temp register
+    /// (fallback path when no SR pointer covers it).
+    fn eval_address(&mut self, array: VarId, idx: &[Expr]) -> Result<Val> {
+        let strides = self
+            .k
+            .array_strides(array)
+            .ok_or_else(|| anyhow!("{} is not an array", self.k.sym_name(array)))?;
+        let base = *self.base.get(&array).ok_or_else(|| {
+            anyhow!("array {} has no base register (unallocated local?)", self.k.sym_name(array))
+        })?;
+        // addr = base + 4 * Σ idx_d * stride_d
+        let acc = self.regs.tmp_i()?;
+        self.asm.push(Inst::Li { rd: acc, imm: 0 });
+        for (e, s) in idx.iter().zip(strides) {
+            let v = self.eval_i(e)?;
+            if s == 1 {
+                self.asm.push(Inst::Alu { op: AluOp::Add, rd: acc, rs1: acc, rs2: v.reg() });
+            } else {
+                let t = self.regs.tmp_i()?;
+                self.asm.push(Inst::Li { rd: t, imm: s as i32 });
+                self.asm.push(Inst::Alu { op: AluOp::Mul, rd: t, rs1: v.reg(), rs2: t });
+                self.asm.push(Inst::Alu { op: AluOp::Add, rd: acc, rs1: acc, rs2: t });
+                self.regs.temp_i.push(t);
+            }
+            self.regs.free_val_i(v);
+        }
+        self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: acc, rs1: acc, imm: 2 });
+        self.asm.push(Inst::Alu { op: AluOp::Add, rd: acc, rs1: acc, rs2: base });
+        Ok(Val::Temp(acc))
+    }
+
+    /// Emit a float load of `array[idx]` into a register.
+    fn emit_fload(&mut self, array: VarId, idx: &[Expr]) -> Result<Val> {
+        let host = self.is_host(array);
+        let affine = flat_offset(self.k, array, idx);
+        if let Some(aff) = &affine {
+            if let Some((li, ei)) = self.find_sr(array, aff) {
+                return self.sr_access(li, ei, AccessKind::FLoad).map(Val::Temp);
+            }
+        }
+        let addr = self.eval_address(array, idx)?;
+        let fd = self.regs.tmp_f()?;
+        if host {
+            self.asm.push(Inst::FlwExt { fd, rs1: addr.reg(), offset: 0 });
+        } else {
+            self.asm.push(Inst::Flw { fd, rs1: addr.reg(), offset: 0 });
+        }
+        self.regs.free_val_i(addr);
+        Ok(Val::Temp(fd))
+    }
+
+    /// Emit a float store of `freg` into `array[idx]`.
+    fn emit_fstore(&mut self, array: VarId, idx: &[Expr], freg: Reg) -> Result<()> {
+        let host = self.is_host(array);
+        let affine = flat_offset(self.k, array, idx);
+        if let Some(aff) = &affine {
+            if let Some((li, ei)) = self.find_sr(array, aff) {
+                self.sr_access(li, ei, AccessKind::FStore(freg))?;
+                return Ok(());
+            }
+        }
+        let addr = self.eval_address(array, idx)?;
+        if host {
+            self.asm.push(Inst::FswExt { fs2: freg, rs1: addr.reg(), offset: 0 });
+        } else {
+            self.asm.push(Inst::Fsw { fs2: freg, rs1: addr.reg(), offset: 0 });
+        }
+        self.regs.free_val_i(addr);
+        Ok(())
+    }
+
+    /// Access through an SR pointer; fuses the pointer bump into a
+    /// post-increment form when legal (Xpulpv2, last use, small stride).
+    fn sr_access(&mut self, li: usize, ei: usize, kind: AccessKind) -> Result<Reg> {
+        let (ptr, stride, host, is_last, imm_ok) = {
+            let e = &mut self.sr_stack[li][ei];
+            e.uses_left -= 1;
+            let is_last = e.uses_left == 0;
+            if is_last {
+                e.uses_left = e.uses; // reset for next iteration
+            }
+            (e.ptr, e.stride, e.host, is_last, e.stride.abs() < POST_INC_MAX)
+        };
+        let bump = is_last && stride != 0;
+        let use_post = self.opts.xpulp && bump && imm_ok && !host;
+        let ret = match kind {
+            AccessKind::FLoad => {
+                let fd = self.regs.tmp_f()?;
+                match (host, use_post) {
+                    (true, _) => {
+                        self.asm.push(Inst::FlwExt { fd, rs1: ptr, offset: 0 });
+                    }
+                    (false, true) => {
+                        self.asm.push(Inst::FlwPost { fd, rs1: ptr, imm: stride as i32 });
+                    }
+                    (false, false) => {
+                        self.asm.push(Inst::Flw { fd, rs1: ptr, offset: 0 });
+                    }
+                }
+                fd
+            }
+            AccessKind::FStore(fs) => {
+                match (host, use_post) {
+                    (true, _) => {
+                        self.asm.push(Inst::FswExt { fs2: fs, rs1: ptr, offset: 0 });
+                    }
+                    (false, true) => {
+                        self.asm.push(Inst::FswPost { fs2: fs, rs1: ptr, imm: stride as i32 });
+                    }
+                    (false, false) => {
+                        self.asm.push(Inst::Fsw { fs2: fs, rs1: ptr, offset: 0 });
+                    }
+                }
+                0
+            }
+        };
+        if bump && !use_post {
+            // Separate pointer bump (an "addition" in the paper's counts).
+            if (-2048..2048).contains(&stride) {
+                self.asm.push(Inst::AluImm { op: AluOp::Add, rd: ptr, rs1: ptr, imm: stride as i32 });
+            } else {
+                let t = self.regs.tmp_i()?;
+                self.asm.push(Inst::Li { rd: t, imm: stride as i32 });
+                self.asm.push(Inst::Alu { op: AluOp::Add, rd: ptr, rs1: ptr, rs2: t });
+                self.regs.temp_i.push(t);
+            }
+        }
+        Ok(ret)
+    }
+
+    // --- float expressions ---
+
+    fn eval_f(&mut self, e: &Expr) -> Result<Val> {
+        match e {
+            Expr::ConstF(c) => {
+                let t = self.regs.tmp_i()?;
+                self.asm.push(Inst::Li { rd: t, imm: c.to_bits() as i32 });
+                let fd = self.regs.tmp_f()?;
+                self.asm.push(Inst::FmvWX { fd, rs1: t });
+                self.regs.temp_i.push(t);
+                Ok(Val::Temp(fd))
+            }
+            Expr::ConstI(c) => {
+                // Integer constant in float context.
+                let t = self.regs.tmp_i()?;
+                self.asm.push(Inst::Li { rd: t, imm: *c });
+                let fd = self.regs.tmp_f()?;
+                self.asm.push(Inst::FcvtSW { fd, rs1: t });
+                self.regs.temp_i.push(t);
+                Ok(Val::Temp(fd))
+            }
+            Expr::Var(v) => {
+                if let Some(r) = self.home_f.get(v) {
+                    Ok(Val::Home(*r))
+                } else if let Some(r) = self.home_i.get(v) {
+                    // int var used in float context: convert.
+                    let r = *r;
+                    let fd = self.regs.tmp_f()?;
+                    self.asm.push(Inst::FcvtSW { fd, rs1: r });
+                    Ok(Val::Temp(fd))
+                } else {
+                    bail!("use of undefined float var {}", self.k.sym_name(*v))
+                }
+            }
+            Expr::Load(a, idx) => {
+                // Accumulator-cached?
+                for caches in self.acc_stack.iter().rev() {
+                    for c in caches {
+                        if c.array == *a && c.idx == *idx {
+                            return Ok(Val::Home(c.freg));
+                        }
+                    }
+                }
+                self.emit_fload(*a, idx)
+            }
+            Expr::Bin(op, a, b) => {
+                let va = self.eval_f(a)?;
+                let vb = self.eval_f(b)?;
+                let rd = match (va, vb) {
+                    (Val::Temp(r), _) => r,
+                    (_, Val::Temp(r)) => r,
+                    _ => self.regs.tmp_f()?,
+                };
+                let fop = match op {
+                    BinOp::Add => FpOp::Add,
+                    BinOp::Sub => FpOp::Sub,
+                    BinOp::Mul => FpOp::Mul,
+                    BinOp::Div => FpOp::Div,
+                    BinOp::Min => FpOp::Min,
+                    BinOp::Max => FpOp::Max,
+                };
+                self.asm.push(Inst::Fp { op: fop, fd: rd, fs1: va.reg(), fs2: vb.reg() });
+                match (va, vb) {
+                    (Val::Temp(_), Val::Temp(y)) if y != rd => self.regs.temp_f.push(y),
+                    (Val::Temp(x), Val::Temp(_)) if x != rd => self.regs.temp_f.push(x),
+                    _ => {}
+                }
+                Ok(Val::Temp(rd))
+            }
+        }
+    }
+
+    /// Float register move (via the integer file, as RV32F without
+    /// sign-injection shortcuts would).
+    fn emit_fmove(&mut self, fd: Reg, fs: Reg) -> Result<()> {
+        let z = self.regs.tmp_i()?;
+        self.asm.push(Inst::FmvXW { rd: z, fs1: fs });
+        self.asm.push(Inst::FmvWX { fd, rs1: z });
+        self.regs.temp_i.push(z);
+        Ok(())
+    }
+
+    /// Accumulate `e` into float register `acc`: `acc += e`, fusing a MAC
+    /// when `e` is a product and Xpulpv2 is enabled.
+    fn eval_accumulate(&mut self, acc: Reg, e: &Expr) -> Result<()> {
+        if let Expr::Bin(BinOp::Mul, a, b) = e {
+            let va = self.eval_f(a)?;
+            let vb = self.eval_f(b)?;
+            if self.opts.xpulp {
+                self.asm.push(Inst::Fmac { fd: acc, fs1: va.reg(), fs2: vb.reg() });
+            } else {
+                let t = self.regs.tmp_f()?;
+                self.asm.push(Inst::Fp { op: FpOp::Mul, fd: t, fs1: va.reg(), fs2: vb.reg() });
+                self.asm.push(Inst::Fp { op: FpOp::Add, fd: acc, fs1: acc, fs2: t });
+                self.regs.temp_f.push(t);
+            }
+            self.regs.free_val_f(va);
+            self.regs.free_val_f(vb);
+        } else {
+            let v = self.eval_f(e)?;
+            self.asm.push(Inst::Fp { op: FpOp::Add, fd: acc, fs1: acc, fs2: v.reg() });
+            self.regs.free_val_f(v);
+        }
+        Ok(())
+    }
+
+    // --- statements ---
+
+    fn emit_block(&mut self, stmts: &[Stmt], ctx: &LoopCtx) -> Result<()> {
+        for s in stmts {
+            self.emit_stmt(s, ctx)?;
+        }
+        Ok(())
+    }
+
+    /// Emit a loop body as a scope: `Let` variables first defined inside it
+    /// release their home registers afterwards (block scoping, like the C
+    /// sources the IR mirrors).
+    fn emit_block_scoped(&mut self, stmts: &[Stmt], ctx: &LoopCtx) -> Result<()> {
+        let snap_i: Vec<VarId> = self.home_i.keys().copied().collect();
+        let snap_f: Vec<VarId> = self.home_f.keys().copied().collect();
+        self.emit_block(stmts, ctx)?;
+        let new_i: Vec<VarId> = self
+            .home_i
+            .keys()
+            .copied()
+            .filter(|v| !snap_i.contains(v) && matches!(self.k.sym(*v), Sym::LetI32))
+            .collect();
+        for v in new_i {
+            let r = self.home_i.remove(&v).unwrap();
+            self.regs.release_i(r);
+        }
+        let new_f: Vec<VarId> = self
+            .home_f
+            .keys()
+            .copied()
+            .filter(|v| !snap_f.contains(v) && matches!(self.k.sym(*v), Sym::LetF32))
+            .collect();
+        for v in new_f {
+            let r = self.home_f.remove(&v).unwrap();
+            self.regs.release_f(r);
+        }
+        Ok(())
+    }
+
+    fn emit_stmt(&mut self, s: &Stmt, ctx: &LoopCtx) -> Result<()> {
+        match s {
+            Stmt::For { .. } => self.emit_for(s, ctx),
+            Stmt::Let { var, value } => {
+                match self.k.sym(*var) {
+                    Sym::LetF32 => {
+                        let r = if let Some(r) = self.home_f.get(var) {
+                            *r
+                        } else {
+                            let r = self.regs.alloc_f()?;
+                            self.home_f.insert(*var, r);
+                            r
+                        };
+                        let v = self.eval_f(value)?;
+                        if v.reg() != r {
+                            self.emit_fmove(r, v.reg())?;
+                        }
+                        self.regs.free_val_f(v);
+                    }
+                    _ => {
+                        let r = if let Some(r) = self.home_i.get(var) {
+                            *r
+                        } else {
+                            let r = self.regs.alloc_i()?;
+                            self.home_i.insert(*var, r);
+                            r
+                        };
+                        let v = self.eval_i(value)?;
+                        if v.reg() != r {
+                            self.asm.push(Inst::AluImm {
+                                op: AluOp::Add,
+                                rd: r,
+                                rs1: v.reg(),
+                                imm: 0,
+                            });
+                        }
+                        self.regs.free_val_i(v);
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Assign { var, value } => {
+                if matches!(self.k.sym(*var), Sym::LetF32) {
+                    let r = *self
+                        .home_f
+                        .get(var)
+                        .ok_or_else(|| anyhow!("assign to undefined {}", self.k.sym_name(*var)))?;
+                    // Accumulation pattern: var = var + e
+                    if let Expr::Bin(BinOp::Add, a, b) = value {
+                        if **a == Expr::Var(*var) {
+                            return self.eval_accumulate(r, b);
+                        }
+                    }
+                    let v = self.eval_f(value)?;
+                    if v.reg() != r {
+                        self.emit_fmove(r, v.reg())?;
+                    }
+                    self.regs.free_val_f(v);
+                } else {
+                    let r = *self
+                        .home_i
+                        .get(var)
+                        .ok_or_else(|| anyhow!("assign to undefined {}", self.k.sym_name(*var)))?;
+                    let v = self.eval_i(value)?;
+                    if v.reg() != r {
+                        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: r, rs1: v.reg(), imm: 0 });
+                    }
+                    self.regs.free_val_i(v);
+                }
+                Ok(())
+            }
+            Stmt::Store { dst, idx, value } => {
+                // Accumulator-cached store: update the register, store through.
+                for caches in self.acc_stack.iter().rev() {
+                    for c in caches {
+                        if c.array == *dst && c.idx == *idx {
+                            let (freg, ptr, host) = (c.freg, c.ptr, c.host);
+                            // value must be Load(dst,idx) + e (checked at setup)
+                            if let Expr::Bin(BinOp::Add, _, e) = value {
+                                let e = e.clone();
+                                self.eval_accumulate(freg, &e)?;
+                            } else {
+                                let v = self.eval_f(value)?;
+                                self.emit_fmove(freg, v.reg())?;
+                                self.regs.free_val_f(v);
+                            }
+                            // Store-through (the paper's compiler keeps the
+                            // store in the loop; manual promotion removes it).
+                            if host {
+                                self.asm.push(Inst::FswExt { fs2: freg, rs1: ptr, offset: 0 });
+                            } else {
+                                self.asm.push(Inst::Fsw { fs2: freg, rs1: ptr, offset: 0 });
+                            }
+                            return Ok(());
+                        }
+                    }
+                }
+                let v = self.eval_f(value)?;
+                self.emit_fstore(*dst, idx, v.reg())?;
+                self.regs.free_val_f(v);
+                Ok(())
+            }
+            Stmt::LocalAlloc { var, elems } => {
+                let n = self
+                    .k
+                    .eval_const(elems)
+                    .ok_or_else(|| anyhow!("local buffer size must be compile-time constant"))?;
+                let bytes = (n as u32) * 4;
+                if self.l1_cursor + bytes > self.opts.l1_bytes {
+                    bail!(
+                        "L1 overflow: {} needs {} B at offset {} (capacity {})",
+                        self.k.sym_name(*var),
+                        bytes,
+                        self.l1_cursor,
+                        self.opts.l1_bytes
+                    );
+                }
+                let r = self.regs.alloc_i()?;
+                self.asm.push(Inst::Li { rd: r, imm: self.l1_cursor as i32 });
+                self.asm.push(Inst::Alu { op: AluOp::Add, rd: r, rs1: r, rs2: self.tcdm_base_reg });
+                self.base.insert(*var, r);
+                self.l1_cursor += bytes;
+                Ok(())
+            }
+            Stmt::Dma { .. } => self.emit_dma(s),
+            Stmt::DmaWaitAll => {
+                self.asm.push(Inst::DmaWait { rs1: 5 });
+                Ok(())
+            }
+            Stmt::LocalFreeAll => {
+                // Static allocator: reset the cursor; base pointers of freed
+                // buffers become invalid (their registers are released).
+                self.l1_peak = self.l1_peak.max(self.l1_cursor);
+                self.l1_cursor = self.opts.l1_base_off;
+                let locals: Vec<VarId> = self
+                    .base
+                    .iter()
+                    .filter(|(v, _)| matches!(self.k.sym(**v), Sym::LocalBuf { .. }))
+                    .map(|(v, _)| *v)
+                    .collect();
+                for v in locals {
+                    let r = self.base.remove(&v).unwrap();
+                    self.regs.release_i(r);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn emit_dma(&mut self, s: &Stmt) -> Result<()> {
+        let Stmt::Dma {
+            dir, kind, host, host_off, local, local_off, rows, row_elems, host_stride,
+            local_stride,
+        } = s
+        else {
+            unreachable!()
+        };
+        let ddir = match dir {
+            Dir::HostToLocal => DmaDir::HostToDev,
+            Dir::LocalToHost => DmaDir::DevToHost,
+        };
+        // dev address = local base + 4*local_off
+        let dev = {
+            let base = *self
+                .base
+                .get(local)
+                .ok_or_else(|| anyhow!("DMA local buffer {} unallocated", self.k.sym_name(*local)))?;
+            let off = self.eval_i(local_off)?;
+            let r = self.regs.alloc_i()?;
+            self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: r, rs1: off.reg(), imm: 2 });
+            self.asm.push(Inst::Alu { op: AluOp::Add, rd: r, rs1: r, rs2: base });
+            self.regs.free_val_i(off);
+            r
+        };
+        // host lo = host base + 4*host_off
+        let hlo = {
+            let base = *self.base.get(host).ok_or_else(|| anyhow!("bad DMA host array"))?;
+            let off = self.eval_i(host_off)?;
+            let r = self.regs.alloc_i()?;
+            self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: r, rs1: off.reg(), imm: 2 });
+            self.asm.push(Inst::Alu { op: AluOp::Add, rd: r, rs1: r, rs2: base });
+            self.regs.free_val_i(off);
+            r
+        };
+        // bytes per row
+        let bytes = {
+            let v = self.eval_i(row_elems)?;
+            let r = self.regs.alloc_i()?;
+            self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: r, rs1: v.reg(), imm: 2 });
+            self.regs.free_val_i(v);
+            r
+        };
+        match kind {
+            DmaKind::Merged1D => {
+                self.asm.push(Inst::DmaStart1D {
+                    rd: 5,
+                    dir: ddir,
+                    dev,
+                    host_lo: hlo,
+                    host_hi: 10,
+                    bytes,
+                });
+            }
+            DmaKind::Hw2D => {
+                let cnt = {
+                    let v = self.eval_i(rows)?;
+                    let r = self.regs.alloc_i()?;
+                    self.asm.push(Inst::AluImm { op: AluOp::Add, rd: r, rs1: v.reg(), imm: 0 });
+                    self.regs.free_val_i(v);
+                    r
+                };
+                let dstr = {
+                    let v = self.eval_i(local_stride)?;
+                    let r = self.regs.alloc_i()?;
+                    self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: r, rs1: v.reg(), imm: 2 });
+                    self.regs.free_val_i(v);
+                    r
+                };
+                let hstr = {
+                    let v = self.eval_i(host_stride)?;
+                    let r = self.regs.alloc_i()?;
+                    self.asm.push(Inst::AluImm { op: AluOp::Sll, rd: r, rs1: v.reg(), imm: 2 });
+                    self.regs.free_val_i(v);
+                    r
+                };
+                self.asm.push(Inst::DmaStart2D {
+                    rd: 5,
+                    dir: ddir,
+                    dev,
+                    host_lo: hlo,
+                    host_hi: 10,
+                    bytes,
+                    count: cnt,
+                    dev_stride: dstr,
+                    host_stride: hstr,
+                });
+                self.regs.release_i(cnt);
+                self.regs.release_i(dstr);
+                self.regs.release_i(hstr);
+            }
+        }
+        self.regs.release_i(dev);
+        self.regs.release_i(hlo);
+        self.regs.release_i(bytes);
+        Ok(())
+    }
+
+    // --- loops ---
+
+    fn emit_for(&mut self, s: &Stmt, ctx: &LoopCtx) -> Result<()> {
+        let Stmt::For { var, lo, hi, par, body } = s else { unreachable!() };
+        match par {
+            Par::None => self.emit_serial_for(*var, lo, hi, body, ctx),
+            Par::Cores => self.emit_parallel_for(*var, lo, hi, body, ctx, false),
+            Par::Teams => self.emit_parallel_for(*var, lo, hi, body, ctx, true),
+        }
+    }
+
+    fn emit_parallel_for(
+        &mut self,
+        var: VarId,
+        lo: &Expr,
+        hi: &Expr,
+        body: &[Stmt],
+        ctx: &LoopCtx,
+        teams: bool,
+    ) -> Result<()> {
+        if ctx.in_parallel && !teams {
+            bail!("nested parallel regions are not supported");
+        }
+        // Single-participant "parallel" regions lower to plain serial loops
+        // (OMP_NUM_THREADS=1 runs, Fig 4).
+        let p1 = if teams { self.opts.n_clusters } else { self.opts.n_cores };
+        if p1 == 1 {
+            return self.emit_serial_for(var, lo, hi, body, ctx);
+        }
+        let region = self.asm.new_label();
+        if !teams {
+            self.asm.push_fork(region);
+        }
+        self.asm.bind(region);
+        // c = my index, p = participant count (compile-time constant).
+        let p = if teams { self.opts.n_clusters } else { self.opts.n_cores };
+        let c = self.regs.alloc_i()?;
+        self.asm.push(Inst::CsrR {
+            rd: c,
+            csr: if teams { Csr::MClusterId } else { Csr::MHartId },
+        });
+        // chunk = ceil((hi - lo) / p)
+        let lo_v = self.eval_i(lo)?;
+        let hi_v = self.eval_i(hi)?;
+        let chunk = self.regs.alloc_i()?;
+        self.asm.push(Inst::Alu { op: AluOp::Sub, rd: chunk, rs1: hi_v.reg(), rs2: lo_v.reg() });
+        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: chunk, rs1: chunk, imm: p as i32 - 1 });
+        let pr = self.regs.tmp_i()?;
+        self.asm.push(Inst::Li { rd: pr, imm: p as i32 });
+        self.asm.push(Inst::Alu { op: AluOp::Div, rd: chunk, rs1: chunk, rs2: pr });
+        self.regs.temp_i.push(pr);
+        // my_lo = lo + c * chunk ; my_hi = min(hi, my_lo + chunk)
+        let my_lo = self.regs.alloc_i()?;
+        self.asm.push(Inst::Alu { op: AluOp::Mul, rd: my_lo, rs1: c, rs2: chunk });
+        self.asm.push(Inst::Alu { op: AluOp::Add, rd: my_lo, rs1: my_lo, rs2: lo_v.reg() });
+        let my_hi = self.regs.alloc_i()?;
+        self.asm.push(Inst::Alu { op: AluOp::Add, rd: my_hi, rs1: my_lo, rs2: chunk });
+        self.emit_int_binop(BinOp::Min, my_hi, my_hi, hi_v.reg())?;
+        self.regs.free_val_i(lo_v);
+        self.regs.free_val_i(hi_v);
+        self.regs.release_i(c);
+        self.regs.release_i(chunk);
+        // Serial loop over [my_lo, my_hi) with register bounds.
+        let inner_ctx = LoopCtx {
+            loop_vars: ctx.loop_vars.clone(),
+            hw_depth: ctx.hw_depth,
+            // Teams regions may still contain a (cluster-local) parallel for.
+            in_parallel: ctx.in_parallel || !teams,
+        };
+        // `my_lo` doubles as the (pre-initialized) loop variable register.
+        self.emit_counted_loop(var, my_lo, RegBound(my_hi), body, &inner_ctx)?;
+        self.regs.release_i(my_lo);
+        self.regs.release_i(my_hi);
+        if !teams {
+            self.asm.push(Inst::Join);
+        }
+        Ok(())
+    }
+
+    fn emit_serial_for(
+        &mut self,
+        var: VarId,
+        lo: &Expr,
+        hi: &Expr,
+        body: &[Stmt],
+        ctx: &LoopCtx,
+    ) -> Result<()> {
+        // Decide hardware loop eligibility.
+        let hw_levels = self.hwloopable_levels(hi, body, ctx);
+        if self.opts.xpulp && hw_levels > 0 && ctx.hw_depth + hw_levels <= 2 {
+            return self.emit_hw_loop(var, lo, hi, body, ctx, hw_levels);
+        }
+        // Initialize the loop variable from `lo` (no register retained).
+        let var_r = self.regs.alloc_i()?;
+        let lo_v = self.eval_i(lo)?;
+        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: var_r, rs1: lo_v.reg(), imm: 0 });
+        self.regs.free_val_i(lo_v);
+        let hi_v = self.eval_i(hi)?;
+        let hi_r = self.regs.alloc_i()?;
+        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: hi_r, rs1: hi_v.reg(), imm: 0 });
+        self.regs.free_val_i(hi_v);
+        self.emit_counted_loop(var, var_r, RegBound(hi_r), body, ctx)?;
+        self.regs.release_i(var_r);
+        self.regs.release_i(hi_r);
+        Ok(())
+    }
+
+    /// Branch-form loop over `[var_r (pre-initialized), hi_reg)`.
+    fn emit_counted_loop(
+        &mut self,
+        var: VarId,
+        var_r: Reg,
+        hi: RegBound,
+        body: &[Stmt],
+        ctx: &LoopCtx,
+    ) -> Result<()> {
+        self.home_i.insert(var, var_r);
+        let l_end = self.asm.new_label();
+        let l_loop = self.asm.new_label();
+        // Zero-trip guard.
+        self.asm.push_branch(Cond::Ge, var_r, hi.0, l_end);
+        let inner_ctx = LoopCtx {
+            loop_vars: {
+                let mut v = ctx.loop_vars.clone();
+                v.push(var);
+                v
+            },
+            hw_depth: ctx.hw_depth,
+            in_parallel: ctx.in_parallel,
+        };
+        // Preheader: SR pointers + accumulator caches.
+        self.setup_sr(var, body)?;
+        self.setup_acc_cache(var, body, &inner_ctx)?;
+        self.asm.bind(l_loop);
+        self.emit_block_scoped(body, &inner_ctx)?;
+        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: var_r, rs1: var_r, imm: 1 });
+        self.asm.push_branch(Cond::Lt, var_r, hi.0, l_loop);
+        self.asm.bind(l_end);
+        self.teardown_acc_cache();
+        self.teardown_sr();
+        self.home_i.remove(&var);
+        // var_r is owned (and released) by the caller.
+        Ok(())
+    }
+
+    /// Hardware-loop form. `levels` = 1 (this loop only) or 2 (this loop and
+    /// the single inner loop both become hardware loops).
+    fn emit_hw_loop(
+        &mut self,
+        var: VarId,
+        lo: &Expr,
+        hi: &Expr,
+        body: &[Stmt],
+        ctx: &LoopCtx,
+        levels: u8,
+    ) -> Result<()> {
+        // Loop level: inner loops use l0, outer l1 (CV32E40P convention).
+        let l = levels - 1;
+        let lo_v = self.eval_i(lo)?;
+        // Trip count = hi - lo.
+        let hi_v = self.eval_i(hi)?;
+        let count = self.regs.alloc_i()?;
+        self.asm.push(Inst::Alu { op: AluOp::Sub, rd: count, rs1: hi_v.reg(), rs2: lo_v.reg() });
+        self.regs.free_val_i(hi_v);
+        // The loop variable is always materialized for the preheader (SR
+        // pointer initialization evaluates affine forms at var = lo); the
+        // per-iteration increment is only emitted if the body still uses it.
+        let uses_var = body_uses_var_beyond_sr(self.k, var, body) || levels == 2;
+        let var_r = self.regs.alloc_i()?;
+        self.asm.push(Inst::AluImm { op: AluOp::Add, rd: var_r, rs1: lo_v.reg(), imm: 0 });
+        self.home_i.insert(var, var_r);
+        self.regs.free_val_i(lo_v);
+        let inner_ctx = LoopCtx {
+            loop_vars: {
+                let mut v = ctx.loop_vars.clone();
+                v.push(var);
+                v
+            },
+            hw_depth: ctx.hw_depth + 1,
+            in_parallel: ctx.in_parallel,
+        };
+        self.setup_sr(var, body)?;
+        self.setup_acc_cache(var, body, &inner_ctx)?;
+        if !uses_var {
+            // The variable was only needed by the SR preheader evaluation.
+            self.home_i.remove(&var);
+            self.regs.release_i(var_r);
+        }
+        let l_start = self.asm.new_label();
+        let l_end = self.asm.new_label();
+        self.asm.push_hwloop(l, count, l_start, l_end);
+        self.asm.bind(l_start);
+        self.emit_block_scoped(body, &inner_ctx)?;
+        if uses_var {
+            self.asm.push(Inst::AluImm { op: AluOp::Add, rd: var_r, rs1: var_r, imm: 1 });
+        }
+        self.asm.bind(l_end);
+        self.teardown_acc_cache();
+        self.teardown_sr();
+        if uses_var {
+            self.home_i.remove(&var);
+            self.regs.release_i(var_r);
+        }
+        self.regs.release_i(count);
+        Ok(())
+    }
+
+    /// How many hardware-loop levels this loop supports: 0 (none), 1, or 2.
+    ///
+    /// Rules modelled on §3.4:
+    /// * the trip count must not be tile-dependent (`Min`-shaped);
+    /// * the lowered body must be branch-free: only simple statements, or
+    ///   exactly one inner `For` that is itself hardware-loopable;
+    /// * no may-alias load/store pair in the body (covar's symmetric store
+    ///   defeats the analysis until manual register promotion).
+    fn hwloopable_levels(&self, hi: &Expr, body: &[Stmt], ctx: &LoopCtx) -> u8 {
+        if hi.has_minmax() {
+            return 0;
+        }
+        let mut inner_for: Option<&Stmt> = None;
+        for s in body {
+            match s {
+                Stmt::Store { .. } | Stmt::Let { .. } | Stmt::Assign { .. } => {}
+                Stmt::For { .. } => {
+                    if inner_for.is_some() {
+                        return 0; // two inner loops -> branches in body
+                    }
+                    inner_for = Some(s);
+                }
+                _ => return 0, // DMA / alloc / wait in body
+            }
+        }
+        if has_alias_hazard(self.k, body) {
+            return 0;
+        }
+        match inner_for {
+            None => 1,
+            Some(Stmt::For { hi: ihi, body: ibody, par: Par::None, .. }) => {
+                let inner_ctx =
+                    LoopCtx { loop_vars: ctx.loop_vars.clone(), hw_depth: ctx.hw_depth, in_parallel: ctx.in_parallel };
+                let inner = self.hwloopable_levels(ihi, ibody, &inner_ctx);
+                if inner == 1 && ctx.hw_depth == 0 {
+                    2
+                } else {
+                    0
+                }
+            }
+            Some(_) => 0,
+        }
+    }
+
+    // --- strength reduction setup ---
+
+    /// Create induction pointers for the affine accesses lexically in `body`
+    /// (not inside nested loops — those get their own preheaders).
+    fn setup_sr(&mut self, var: VarId, body: &[Stmt]) -> Result<()> {
+        let mut accesses: Vec<(VarId, Vec<Expr>, bool)> = Vec::new(); // (array, idx, is_store)
+        for s in body {
+            collect_direct_accesses(s, &mut accesses);
+        }
+        // Accesses that the accumulator cache will own get no SR pointer.
+        let acc = self.acc_candidates(var, body);
+        accesses.retain(|(a, i, _)| !acc.iter().any(|(ca, ci)| ca == a && ci == i));
+        let mut entries: Vec<SrEntry> = Vec::new();
+        for (array, idx, _) in &accesses {
+            let Some(aff) = flat_offset(self.k, *array, idx) else { continue };
+            // Already have an entry for this exact affine?
+            if let Some(e) = entries.iter_mut().find(|e| e.array == *array && e.affine == aff) {
+                e.uses += 1;
+                e.uses_left += 1;
+                continue;
+            }
+            // Stride w.r.t. this loop var must be compile-time constant; all
+            // other terms must be evaluable in the preheader (loop vars of
+            // enclosing loops have home registers).
+            let stride = aff.coeff(var) * 4;
+            // Materialize the pointer in the preheader: base + 4*aff(var=cur).
+            let Ok(ptr) = self.regs.alloc_i() else { continue }; // pool pressure: skip SR
+            let base = match self.base.get(array) {
+                Some(b) => *b,
+                None => {
+                    self.regs.release_i(ptr);
+                    continue;
+                }
+            };
+            // ptr = base; then add 4*coeff*var for each term + 4*const.
+            self.asm.push(Inst::AluImm { op: AluOp::Add, rd: ptr, rs1: base, imm: 0 });
+            let mut ok = true;
+            for (tv, c) in &aff.terms {
+                let Some(&vr) = self.home_i.get(tv) else {
+                    ok = false;
+                    break;
+                };
+                let t = self.regs.tmp_i()?;
+                self.asm.push(Inst::Li { rd: t, imm: (*c * 4) as i32 });
+                self.asm.push(Inst::Alu { op: AluOp::Mul, rd: t, rs1: vr, rs2: t });
+                self.asm.push(Inst::Alu { op: AluOp::Add, rd: ptr, rs1: ptr, rs2: t });
+                self.regs.temp_i.push(t);
+            }
+            if !ok {
+                self.regs.release_i(ptr);
+                continue;
+            }
+            if aff.constant != 0 {
+                let c = (aff.constant * 4) as i32;
+                if (-2048..2048).contains(&c) {
+                    self.asm.push(Inst::AluImm { op: AluOp::Add, rd: ptr, rs1: ptr, imm: c });
+                } else {
+                    let t = self.regs.tmp_i()?;
+                    self.asm.push(Inst::Li { rd: t, imm: c });
+                    self.asm.push(Inst::Alu { op: AluOp::Add, rd: ptr, rs1: ptr, rs2: t });
+                    self.regs.temp_i.push(t);
+                }
+            }
+            entries.push(SrEntry {
+                array: *array,
+                affine: aff,
+                ptr,
+                stride,
+                uses: 1,
+                uses_left: 1,
+                host: self.is_host(*array),
+            });
+        }
+        self.sr_stack.push(entries);
+        Ok(())
+    }
+
+    fn teardown_sr(&mut self) {
+        if let Some(entries) = self.sr_stack.pop() {
+            for e in entries {
+                self.regs.release_i(e.ptr);
+            }
+        }
+    }
+
+    /// Accesses in `body` that [`Lower::setup_acc_cache`] will cache:
+    /// stores of the shape `dst[idx] = dst[idx] + e` with `idx` invariant in
+    /// `var` and no may-aliasing second store to the same array (covar's
+    /// symmetric store defeats it, §3.4).
+    fn acc_candidates(&self, var: VarId, body: &[Stmt]) -> Vec<(VarId, Vec<Expr>)> {
+        let mut out = Vec::new();
+        for s in body {
+            let Stmt::Store { dst, idx, value } = s else { continue };
+            let Expr::Bin(BinOp::Add, a, _) = value else { continue };
+            if **a != Expr::Load(*dst, idx.clone()) {
+                continue;
+            }
+            let Some(aff) = flat_offset(self.k, *dst, idx) else { continue };
+            if aff.coeff(var) != 0 {
+                continue;
+            }
+            let other_store = body.iter().any(|s2| {
+                if let Stmt::Store { dst: d2, idx: i2, .. } = s2 {
+                    *d2 == *dst && i2 != idx
+                } else {
+                    false
+                }
+            });
+            if !other_store {
+                out.push((*dst, idx.clone()));
+            }
+        }
+        out
+    }
+
+    /// Hoist loop-invariant accumulator loads into registers
+    /// (`C[i][j] += ...` inside the k-loop: load once, MAC in register,
+    /// store through).
+    fn setup_acc_cache(&mut self, var: VarId, body: &[Stmt], _ctx: &LoopCtx) -> Result<()> {
+        let candidates = self.acc_candidates(var, body);
+        let mut caches: Vec<AccCache> = Vec::new();
+        for s in body {
+            let Stmt::Store { dst, idx, .. } = s else { continue };
+            if !candidates.iter().any(|(a, i)| a == dst && i == idx) {
+                continue;
+            }
+            let host = self.is_host(*dst);
+            // Pointer (invariant): computed in preheader.
+            let addr = self.eval_address(*dst, idx)?;
+            let ptr = self.regs.alloc_i()?;
+            self.asm.push(Inst::AluImm { op: AluOp::Add, rd: ptr, rs1: addr.reg(), imm: 0 });
+            self.regs.free_val_i(addr);
+            let freg = self.regs.alloc_f()?;
+            if host {
+                self.asm.push(Inst::FlwExt { fd: freg, rs1: ptr, offset: 0 });
+            } else {
+                self.asm.push(Inst::Flw { fd: freg, rs1: ptr, offset: 0 });
+            }
+            caches.push(AccCache { array: *dst, idx: idx.clone(), freg, ptr, host });
+        }
+        self.acc_stack.push(caches);
+        Ok(())
+    }
+
+    fn teardown_acc_cache(&mut self) {
+        if let Some(caches) = self.acc_stack.pop() {
+            for c in caches {
+                self.regs.release_i(c.ptr);
+                self.regs.release_f(c.freg);
+            }
+        }
+    }
+}
+
+struct RegBound(Reg);
+
+#[derive(Clone, Copy)]
+enum AccessKind {
+    FLoad,
+    FStore(Reg),
+}
+
+/// Collect array accesses appearing directly in a statement (descending into
+/// expressions but not into nested loops).
+fn collect_direct_accesses(s: &Stmt, out: &mut Vec<(VarId, Vec<Expr>, bool)>) {
+    fn expr(e: &Expr, out: &mut Vec<(VarId, Vec<Expr>, bool)>) {
+        match e {
+            Expr::Load(a, idx) => {
+                out.push((*a, idx.clone(), false));
+                idx.iter().for_each(|e| expr(e, out));
+            }
+            Expr::Bin(_, a, b) => {
+                expr(a, out);
+                expr(b, out);
+            }
+            _ => {}
+        }
+    }
+    match s {
+        Stmt::Store { dst, idx, value } => {
+            expr(value, out);
+            out.push((*dst, idx.clone(), true));
+        }
+        Stmt::Let { value, .. } | Stmt::Assign { value, .. } => expr(value, out),
+        _ => {}
+    }
+}
+
+/// True if the body has a load and a store to the same array with different
+/// index expressions (a may-alias pair the model's dependence analysis gives
+/// up on — §3.4 covar).
+fn has_alias_hazard(k: &Kernel, body: &[Stmt]) -> bool {
+    let mut acc: Vec<(VarId, Vec<Expr>, bool)> = Vec::new();
+    for s in body {
+        collect_direct_accesses(s, &mut acc);
+        if let Stmt::For { body: inner, .. } = s {
+            for s2 in inner {
+                collect_direct_accesses(s2, &mut acc);
+            }
+        }
+    }
+    let _ = k;
+    for (a, ia, sa) in &acc {
+        for (b, ib, sb) in &acc {
+            if a == b && (*sa || *sb) && ia != ib {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Does the body reference `var` outside of SR-covered (affine) subscript
+/// positions? Affine subscripts fold into induction pointers, so a loop
+/// whose variable only appears there needs no explicit counter.
+fn body_uses_var_beyond_sr(k: &Kernel, var: VarId, body: &[Stmt]) -> bool {
+    fn expr_uses(k: &Kernel, var: VarId, e: &Expr, in_idx: bool) -> bool {
+        match e {
+            Expr::Var(v) => *v == var && !in_idx,
+            Expr::Load(a, idx) => {
+                // If the whole subscript is affine, it folds into a pointer.
+                let affine_ok = flat_offset(k, *a, idx).is_some();
+                idx.iter().any(|i| expr_uses(k, var, i, affine_ok))
+            }
+            Expr::Bin(_, a, b) => expr_uses(k, var, a, in_idx) || expr_uses(k, var, b, in_idx),
+            _ => false,
+        }
+    }
+    body.iter().any(|s| match s {
+        Stmt::Store { dst, idx, value } => {
+            let affine_ok = flat_offset(k, *dst, idx).is_some();
+            idx.iter().any(|i| expr_uses(k, var, i, affine_ok))
+                || expr_uses(k, var, value, false)
+        }
+        Stmt::Let { value, .. } | Stmt::Assign { value, .. } => expr_uses(k, var, value, false),
+        Stmt::For { lo, hi, body, .. } => {
+            expr_uses(k, var, lo, false) || expr_uses(k, var, hi, false)
+                || body_uses_var_beyond_sr(k, var, body)
+        }
+        Stmt::Dma { host_off, local_off, rows, row_elems, host_stride, local_stride, .. } => {
+            [host_off, local_off, rows, row_elems, host_stride, local_stride]
+                .iter()
+                .any(|e| expr_uses(k, var, e, false))
+        }
+        _ => false,
+    })
+}

@@ -1,0 +1,139 @@
+//! Code-complexity metrics (Fig 6).
+//!
+//! The paper quantifies the cost of manual tiling with two CCCC metrics on
+//! the accelerated part of each application: **lines of code** (without
+//! comments) and **McCabe's cyclomatic complexity** (linearly independent
+//! paths = decision points + 1). We compute both on the kernel IR's C-like
+//! rendering: every statement is a line (loops add their header line), and
+//! decision points are `for` loops plus `MIN`/`MAX` (which expand to C
+//! ternaries, which CCCC counts).
+
+use super::ir::{Expr, Kernel, Stmt};
+
+/// Complexity metrics of one kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Complexity {
+    /// Lines of code (without comments/braces-only lines).
+    pub loc: u32,
+    /// McCabe cyclomatic complexity.
+    pub cyclomatic: u32,
+}
+
+fn expr_decisions(e: &Expr) -> u32 {
+    match e {
+        Expr::Bin(op, a, b) => {
+            let own = matches!(op, super::ir::BinOp::Min | super::ir::BinOp::Max) as u32;
+            own + expr_decisions(a) + expr_decisions(b)
+        }
+        Expr::Load(_, idx) => idx.iter().map(expr_decisions).sum(),
+        _ => 0,
+    }
+}
+
+fn stmt_metrics(s: &Stmt) -> (u32, u32) {
+    match s {
+        Stmt::For { lo, hi, body, .. } => {
+            let (mut loc, mut dec) = (1, 1 + expr_decisions(lo) + expr_decisions(hi));
+            for s in body {
+                let (l, d) = stmt_metrics(s);
+                loc += l;
+                dec += d;
+            }
+            (loc, dec)
+        }
+        Stmt::Store { idx, value, .. } => {
+            (1, idx.iter().map(expr_decisions).sum::<u32>() + expr_decisions(value))
+        }
+        Stmt::Let { value, .. } | Stmt::Assign { value, .. } => (1, expr_decisions(value)),
+        Stmt::LocalAlloc { elems, .. } => (1, expr_decisions(elems)),
+        Stmt::Dma { host_off, local_off, rows, row_elems, host_stride, local_stride, .. } => (
+            1,
+            [host_off, local_off, rows, row_elems, host_stride, local_stride]
+                .iter()
+                .map(|e| expr_decisions(e))
+                .sum(),
+        ),
+        Stmt::DmaWaitAll | Stmt::LocalFreeAll => (1, 0),
+    }
+}
+
+/// Compute Fig 6 metrics for a kernel.
+pub fn complexity(k: &Kernel) -> Complexity {
+    let mut loc = 1; // function signature line
+    let mut dec = 0;
+    for s in &k.body {
+        let (l, d) = stmt_metrics(s);
+        loc += l;
+        dec += d;
+    }
+    Complexity { loc, cyclomatic: dec + 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::*;
+
+    #[test]
+    fn simple_nest() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 4);
+        let a = b.host_array("A", vec![var(n), var(n)]);
+        let i = b.loop_var("i");
+        let j = b.loop_var("j");
+        let k = b.body(vec![for_(
+            i,
+            ci(0),
+            var(n),
+            vec![for_(j, ci(0), var(n), vec![st(a, vec![var(i), var(j)], cf(0.0))])],
+        )]);
+        let c = complexity(&k);
+        // signature + 2 for-lines + 1 store
+        assert_eq!(c.loc, 4);
+        // 2 loops + 1
+        assert_eq!(c.cyclomatic, 3);
+    }
+
+    #[test]
+    fn min_counts_as_decision() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 4);
+        let len = b.let_i32("len");
+        let i = b.loop_var("i");
+        let k = b.body(vec![for_(
+            i,
+            ci(0),
+            var(n),
+            vec![Stmt::Let { var: len, value: ci(8).min(var(n).sub(var(i))) }],
+        )]);
+        let c = complexity(&k);
+        assert_eq!(c.cyclomatic, 3); // for + MIN + 1
+        assert_eq!(c.loc, 3);
+    }
+
+    #[test]
+    fn dma_statements_count_as_lines() {
+        let mut b = KernelBuilder::new("t");
+        let n = b.const_param("N", 4);
+        let a = b.host_array("A", vec![var(n)]);
+        let l = b.local_buf("la", vec![var(n)]);
+        let k = b.body(vec![
+            Stmt::LocalAlloc { var: l, elems: var(n) },
+            Stmt::Dma {
+                dir: Dir::HostToLocal,
+                kind: DmaKind::Merged1D,
+                host: a,
+                host_off: ci(0),
+                local: l,
+                local_off: ci(0),
+                rows: ci(1),
+                row_elems: var(n),
+                host_stride: ci(0),
+                local_stride: ci(0),
+            },
+            Stmt::DmaWaitAll,
+        ]);
+        assert_eq!(complexity(&k).loc, 4);
+        assert_eq!(complexity(&k).cyclomatic, 1);
+    }
+}

@@ -1,0 +1,55 @@
+//! The heterogeneous device compiler (§2.2).
+//!
+//! Mirrors the paper's LLVM 9-based toolchain at IR level:
+//!
+//! | Paper component | Module |
+//! |---|---|
+//! | Kernel source (OpenMP target region after outlining) | [`ir`] |
+//! | Clang address-space inference + host-pointer legalizer (§2.2.1) | [`addrspace`] + `*.ext` emission in [`lower`] |
+//! | AutoDMA tiling + DMA inference plugin (§2.2.2) | [`autodma`] |
+//! | Xpulpv2 codegen: hwloops, post-increment, MAC (§2.2.3) | [`lower`] |
+//! | CCCC code metrics used in Fig 6 | [`metrics`] |
+//!
+//! [`compile`] is the full pipeline: address-space validation → (optional)
+//! AutoDMA → lowering to a device [`Program`].
+
+pub mod addrspace;
+pub mod analyze;
+pub mod autodma;
+pub mod ir;
+pub mod lower;
+pub mod metrics;
+
+pub use autodma::{AutoDmaOpts, AutoDmaReport};
+pub use ir::Kernel;
+pub use lower::{Lowered, LowerOpts};
+
+use crate::isa::Program;
+use anyhow::{anyhow, Result};
+
+/// Compile a kernel to a device program.
+///
+/// `autodma`: run the AutoDMA transform first (for kernels written in plain
+/// OpenMP form); handwritten-tiled kernels pass `None`.
+pub fn compile(
+    k: &Kernel,
+    opts: &LowerOpts,
+    autodma: Option<&AutoDmaOpts>,
+) -> Result<(Lowered, Option<AutoDmaReport>)> {
+    addrspace::analyze(k).map_err(|e| anyhow!("address-space check failed: {e}"))?;
+    if let Some(ad) = autodma {
+        let (tiled, report) = autodma::transform(k, ad)?;
+        addrspace::analyze(&tiled)
+            .map_err(|e| anyhow!("AutoDMA output failed address-space check: {e}"))?;
+        let lowered = lower::lower(&tiled, opts)?;
+        Ok((lowered, Some(report)))
+    } else {
+        let lowered = lower::lower(k, opts)?;
+        Ok((lowered, None))
+    }
+}
+
+/// Disassemble for diagnostics.
+pub fn disasm(p: &Program) -> String {
+    crate::isa::disasm::program(p)
+}

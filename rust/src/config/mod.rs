@@ -1,0 +1,334 @@
+//! Platform configuration system.
+//!
+//! HEROv2 is a *configurable* platform: the paper's Table 1 lists three
+//! concrete configurations (Aurora, Blizzard, Cyclone) that differ in host
+//! ISA, accelerator core architecture and count, memory capacities and
+//! carrier silicon. This module models that configuration space.
+//!
+//! A [`HeroConfig`] fully determines a simulated platform instance:
+//! micro-architectural timing parameters, memory geometry, on-chip network
+//! widths and the IOMMU/DMA capabilities. Presets for the paper's three
+//! configurations are in [`preset`], and configurations can be loaded from
+//! simple `key = value` text files (see [`parse`]) so experiments are
+//! scriptable without recompiling.
+
+pub mod parse;
+pub mod preset;
+pub mod resources;
+
+pub use preset::{aurora, blizzard, cyclone};
+
+/// Host processor configuration (paper §2.1: ARMv8 Cortex-A53 hard macro or
+/// RV64GC CVA6 soft macro).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostConfig {
+    /// Host ISA name, e.g. `"ARMv8.0-A"` or `"RV64GC"`.
+    pub isa: String,
+    /// Core architecture, e.g. `"Cortex-A53"` or `"CVA6"`.
+    pub core_arch: String,
+    /// Number of host cores.
+    pub n_cores: usize,
+    /// Host clock frequency in MHz (1200 for the A53 hard macro).
+    pub freq_mhz: u32,
+    /// Per-core L1 instruction/data cache size in bytes.
+    pub l1_bytes: usize,
+    /// Shared L2 cache size in bytes.
+    pub l2_bytes: usize,
+}
+
+/// Accelerator ISA extension set (paper §2.1 and Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IsaExt {
+    /// Single-precision floating point (`F`).
+    pub fp: bool,
+    /// Xpulpv2: hardware loops, post-increment load/store, MAC.
+    pub xpulp: bool,
+    /// Atomics (`A`) — always present on HEROv2 cores.
+    pub atomics: bool,
+}
+
+impl IsaExt {
+    /// The baseline ISA evaluated against in §3.4.
+    pub const RV32IMAFC: IsaExt = IsaExt { fp: true, xpulp: false, atomics: true };
+    /// The full Aurora ISA.
+    pub const RV32IMAFC_XPULPV2: IsaExt = IsaExt { fp: true, xpulp: true, atomics: true };
+
+    /// Render as a RISC-V ISA string.
+    pub fn name(&self) -> String {
+        let mut s = String::from("RV32IM");
+        if self.atomics {
+            s.push('A');
+        }
+        if self.fp {
+            s.push('F');
+        }
+        s.push('C');
+        if self.xpulp {
+            s.push_str("Xpulpv2");
+        }
+        s
+    }
+}
+
+/// Accelerator (PMCA) configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// Core architecture, e.g. `"CV32E40P"` or `"Snitch"`.
+    pub core_arch: String,
+    /// ISA extension set.
+    pub isa: IsaExt,
+    /// Number of clusters.
+    pub n_clusters: usize,
+    /// Cores per cluster (4..=16 per §2.1; 8 on Aurora).
+    pub cores_per_cluster: usize,
+    /// L1 TCDM SPM bytes per cluster (128 KiB on Aurora).
+    pub l1_bytes: usize,
+    /// TCDM banking factor (banks = factor * cores; default 2 per §2.1).
+    pub banking_factor: usize,
+    /// Shared L2 SPM bytes.
+    pub l2_bytes: usize,
+    /// Shared L1 instruction cache bytes per cluster.
+    pub icache_bytes: usize,
+    /// Instructions per icache line.
+    pub icache_line_insts: usize,
+    /// Per-core L0 loop buffer capacity in (compressed) instructions (§2.1: 8).
+    pub l0_insts: usize,
+    /// Accelerator clock frequency in MHz (50 on the ZU9EG).
+    pub freq_mhz: u32,
+}
+
+/// On-chip network configuration (paper §2.1, §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NocConfig {
+    /// Data width of the wide (DMA) network in bits. §3.3 sweeps 32/64/128.
+    pub dma_width_bits: u32,
+    /// Data width of the narrow (core → remote) network in bits.
+    pub narrow_width_bits: u32,
+    /// Maximum outstanding burst transactions ("tens" per §2.1).
+    pub max_outstanding: u32,
+}
+
+/// DMA engine configuration (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmaConfig {
+    /// Cycles to program one transfer descriptor from a core.
+    pub setup_cycles: u64,
+    /// Maximum beats per burst ("tens of data beats").
+    pub max_burst_beats: u32,
+    /// Maximum outstanding bursts.
+    pub max_outstanding: u32,
+    /// Per-burst issue overhead on the wide path (AR handshake + DRAM bank
+    /// access), visible per row of scattered 2D transfers.
+    pub burst_overhead: u64,
+    /// Whether the engine executes 2D descriptors in hardware (§2.4: if not,
+    /// multi-dimensional transfers are implemented in software).
+    pub hw_2d: bool,
+}
+
+/// Hybrid IOMMU configuration (paper §2.1, §2.3, [21], [25]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IommuConfig {
+    /// TLB capacity in entries.
+    pub tlb_entries: usize,
+    /// Cycles for an on-accelerator page-table walk on TLB miss.
+    pub walk_cycles: u64,
+    /// Who handles misses: the faulting core or a dedicated handler core.
+    pub miss_mode: MissMode,
+    /// Page size in bytes (4 KiB like the host MMU).
+    pub page_bytes: usize,
+}
+
+/// TLB miss handling policy (§2.3: configurable per offload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissMode {
+    /// The core that missed walks the page table itself.
+    SelfService,
+    /// A dedicated core handles misses (preferable for pointer chasing).
+    DedicatedCore,
+}
+
+/// Main memory configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramConfig {
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// First-word latency seen from the accelerator, in accelerator cycles.
+    pub first_word_cycles: u64,
+    /// Peak bandwidth in bytes per accelerator cycle on the wide NoC path.
+    /// (19.2 GB/s DDR4 at 50 MHz accel clock = 384 B/cycle is far above the
+    /// 8 B/cycle NoC limit, so the NoC is the bottleneck — as in the paper.)
+    pub bytes_per_cycle: u64,
+}
+
+/// Fixed micro-architectural costs (accelerator cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimingConfig {
+    /// Taken-branch penalty (pipeline refill).
+    pub branch_taken: u64,
+    /// L2 SPM access latency from a core.
+    pub l2_access: u64,
+    /// Extra cycles per remote (64-bit host address space) core access when
+    /// the TLB hits — the address-extension CSR path (§2.3: three cycles).
+    pub ext_addr_overhead: u64,
+    /// Total latency of a remote word access from a core (NoC + DRAM),
+    /// excluding `ext_addr_overhead` and TLB effects. At the 50 MHz Aurora
+    /// accelerator clock, DRAM + NoC round trips are tens of cycles.
+    pub remote_word: u64,
+    /// Narrow-NoC port occupancy per remote access: the issue-rate limit
+    /// shared by all cores of a cluster.
+    pub remote_service: u64,
+    /// Icache refill latency (per line, excluding serialization over the
+    /// fetch port — that part is width-dependent, see `NocConfig`).
+    pub icache_refill: u64,
+    /// Host-side cost of triggering an offload (syscall + mailbox doorbell),
+    /// in accelerator cycles.
+    pub offload_host: u64,
+    /// Device-side cost (mailbox interrupt → offload manager dispatch).
+    pub offload_dev: u64,
+    /// Cluster barrier cost (event-unit synchronization).
+    pub barrier: u64,
+}
+
+/// A complete platform configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeroConfig {
+    /// Configuration name (e.g. "aurora").
+    pub name: String,
+    /// Carrier silicon (e.g. "Xilinx ZU9EG").
+    pub carrier: String,
+    /// Maturity status as in Table 1.
+    pub status: String,
+    pub host: HostConfig,
+    pub accel: AccelConfig,
+    pub noc: NocConfig,
+    pub dma: DmaConfig,
+    pub iommu: IommuConfig,
+    pub dram: DramConfig,
+    pub timing: TimingConfig,
+}
+
+impl HeroConfig {
+    /// Total number of accelerator cores.
+    pub fn n_accel_cores(&self) -> usize {
+        self.accel.n_clusters * self.accel.cores_per_cluster
+    }
+
+    /// Number of TCDM banks per cluster.
+    pub fn tcdm_banks(&self) -> usize {
+        self.accel.banking_factor * self.accel.cores_per_cluster
+    }
+
+    /// L1 capacity available to user data, in 4-byte words. The paper
+    /// reserves runtime state: "L = 28 Ki single-precision words can be
+    /// stored in L1" out of the 32 Ki-word (128 KiB) TCDM.
+    pub fn l1_user_words(&self) -> usize {
+        let total_words = self.accel.l1_bytes / 4;
+        // Runtime + stacks occupy 1/8 of the TCDM, matching 28Ki/32Ki.
+        total_words - total_words / 8
+    }
+
+    /// DMA beat size in bytes on the wide NoC.
+    pub fn dma_beat_bytes(&self) -> u64 {
+        (self.noc.dma_width_bits / 8) as u64
+    }
+
+    /// Instruction-fetch bandwidth into the shared icache in bytes/cycle:
+    /// bounded by both the NoC width and the cache's 64-bit fill port
+    /// (§3.3: "the instruction cache can only fetch at most 64 bit per
+    /// cycle").
+    pub fn ifetch_bytes_per_cycle(&self) -> u64 {
+        ((self.noc.dma_width_bits.min(64)) / 8) as u64
+    }
+
+    /// Validate internal consistency. Returns a human-readable error for the
+    /// first violated invariant.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.accel.cores_per_cluster < 1 || self.accel.cores_per_cluster > 16 {
+            return Err(format!(
+                "cores_per_cluster must be in 1..=16, got {}",
+                self.accel.cores_per_cluster
+            ));
+        }
+        if self.accel.n_clusters == 0 {
+            return Err("n_clusters must be >= 1".into());
+        }
+        if !self.noc.dma_width_bits.is_power_of_two() || self.noc.dma_width_bits < 32 {
+            return Err(format!(
+                "dma_width_bits must be a power of two >= 32, got {}",
+                self.noc.dma_width_bits
+            ));
+        }
+        if self.accel.banking_factor == 0 {
+            return Err("banking_factor must be >= 1".into());
+        }
+        if self.accel.l1_bytes % (self.tcdm_banks() * 4) != 0 {
+            return Err("l1_bytes must divide evenly across banks".into());
+        }
+        if !self.iommu.page_bytes.is_power_of_two() {
+            return Err("page_bytes must be a power of two".into());
+        }
+        if self.iommu.tlb_entries == 0 {
+            return Err("tlb_entries must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [aurora(), blizzard(), cyclone()] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {}", cfg.name, e));
+        }
+    }
+
+    #[test]
+    fn aurora_matches_table1() {
+        let a = aurora();
+        assert_eq!(a.host.core_arch, "Cortex-A53");
+        assert_eq!(a.host.n_cores, 4);
+        assert_eq!(a.accel.cores_per_cluster, 8);
+        assert_eq!(a.accel.n_clusters, 1);
+        assert_eq!(a.accel.l1_bytes, 128 * 1024);
+        assert!(a.accel.isa.xpulp);
+        assert_eq!(a.accel.freq_mhz, 50);
+    }
+
+    #[test]
+    fn l1_user_words_matches_paper() {
+        // §3.1: "L = 28 Ki single-precision words can be stored in L1".
+        assert_eq!(aurora().l1_user_words(), 28 * 1024);
+    }
+
+    #[test]
+    fn isa_names() {
+        assert_eq!(IsaExt::RV32IMAFC.name(), "RV32IMAFC");
+        assert_eq!(IsaExt::RV32IMAFC_XPULPV2.name(), "RV32IMAFCXpulpv2");
+    }
+
+    #[test]
+    fn ifetch_bandwidth_capped_at_64bit() {
+        let mut cfg = aurora();
+        cfg.noc.dma_width_bits = 128;
+        assert_eq!(cfg.ifetch_bytes_per_cycle(), 8); // capped
+        cfg.noc.dma_width_bits = 32;
+        assert_eq!(cfg.ifetch_bytes_per_cycle(), 4);
+    }
+
+    #[test]
+    fn validate_rejects_bad_width() {
+        let mut cfg = aurora();
+        cfg.noc.dma_width_bits = 48;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_clusters() {
+        let mut cfg = aurora();
+        cfg.accel.n_clusters = 0;
+        assert!(cfg.validate().is_err());
+    }
+}

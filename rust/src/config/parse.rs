@@ -1,0 +1,174 @@
+//! Plain-text configuration files.
+//!
+//! Experiments are scriptable without recompiling: a config file starts from
+//! a named preset and overrides individual fields with `key = value` lines.
+//!
+//! ```text
+//! preset = aurora
+//! noc.dma_width_bits = 128
+//! accel.cores_per_cluster = 16
+//! iommu.miss_mode = dedicated
+//! ```
+//!
+//! Comments start with `#`. Sizes accept `K`/`M`/`G` suffixes (binary).
+
+use super::{preset, HeroConfig, MissMode};
+
+/// Parse a size like `128K` or `4G` into bytes.
+fn parse_size(v: &str) -> Result<u64, String> {
+    let v = v.trim();
+    let (num, mult) = match v.chars().last() {
+        Some('K') | Some('k') => (&v[..v.len() - 1], 1u64 << 10),
+        Some('M') | Some('m') => (&v[..v.len() - 1], 1u64 << 20),
+        Some('G') | Some('g') => (&v[..v.len() - 1], 1u64 << 30),
+        _ => (v, 1),
+    };
+    num.trim().parse::<u64>().map(|n| n * mult).map_err(|e| format!("bad size {v:?}: {e}"))
+}
+
+/// Apply one `key = value` override to a config.
+pub fn apply_override(cfg: &mut HeroConfig, key: &str, value: &str) -> Result<(), String> {
+    let v = value.trim();
+    let uint = || v.parse::<u64>().map_err(|e| format!("bad integer {v:?}: {e}"));
+    match key.trim() {
+        "name" => cfg.name = v.into(),
+        "carrier" => cfg.carrier = v.into(),
+        "host.n_cores" => cfg.host.n_cores = uint()? as usize,
+        "host.freq_mhz" => cfg.host.freq_mhz = uint()? as u32,
+        "accel.n_clusters" => cfg.accel.n_clusters = uint()? as usize,
+        "accel.cores_per_cluster" => cfg.accel.cores_per_cluster = uint()? as usize,
+        "accel.l1_bytes" => cfg.accel.l1_bytes = parse_size(v)? as usize,
+        "accel.l2_bytes" => cfg.accel.l2_bytes = parse_size(v)? as usize,
+        "accel.banking_factor" => cfg.accel.banking_factor = uint()? as usize,
+        "accel.icache_bytes" => cfg.accel.icache_bytes = parse_size(v)? as usize,
+        "accel.l0_insts" => cfg.accel.l0_insts = uint()? as usize,
+        "accel.freq_mhz" => cfg.accel.freq_mhz = uint()? as u32,
+        "accel.xpulp" => cfg.accel.isa.xpulp = parse_bool(v)?,
+        "noc.dma_width_bits" => cfg.noc.dma_width_bits = uint()? as u32,
+        "noc.narrow_width_bits" => cfg.noc.narrow_width_bits = uint()? as u32,
+        "noc.max_outstanding" => cfg.noc.max_outstanding = uint()? as u32,
+        "dma.setup_cycles" => cfg.dma.setup_cycles = uint()?,
+        "dma.max_burst_beats" => cfg.dma.max_burst_beats = uint()? as u32,
+        "dma.max_outstanding" => cfg.dma.max_outstanding = uint()? as u32,
+        "dma.burst_overhead" => cfg.dma.burst_overhead = uint()?,
+        "dma.hw_2d" => cfg.dma.hw_2d = parse_bool(v)?,
+        "iommu.tlb_entries" => cfg.iommu.tlb_entries = uint()? as usize,
+        "iommu.walk_cycles" => cfg.iommu.walk_cycles = uint()?,
+        "iommu.page_bytes" => cfg.iommu.page_bytes = parse_size(v)? as usize,
+        "iommu.miss_mode" => {
+            cfg.iommu.miss_mode = match v {
+                "self" => MissMode::SelfService,
+                "dedicated" => MissMode::DedicatedCore,
+                _ => return Err(format!("bad miss_mode {v:?} (self|dedicated)")),
+            }
+        }
+        "dram.capacity" => cfg.dram.capacity = parse_size(v)?,
+        "dram.first_word_cycles" => cfg.dram.first_word_cycles = uint()?,
+        "dram.bytes_per_cycle" => cfg.dram.bytes_per_cycle = uint()?,
+        "timing.branch_taken" => cfg.timing.branch_taken = uint()?,
+        "timing.l2_access" => cfg.timing.l2_access = uint()?,
+        "timing.ext_addr_overhead" => cfg.timing.ext_addr_overhead = uint()?,
+        "timing.remote_word" => cfg.timing.remote_word = uint()?,
+        "timing.remote_service" => cfg.timing.remote_service = uint()?,
+        "timing.icache_refill" => cfg.timing.icache_refill = uint()?,
+        "timing.offload_host" => cfg.timing.offload_host = uint()?,
+        "timing.offload_dev" => cfg.timing.offload_dev = uint()?,
+        "timing.barrier" => cfg.timing.barrier = uint()?,
+        other => return Err(format!("unknown config key {other:?}")),
+    }
+    Ok(())
+}
+
+fn parse_bool(v: &str) -> Result<bool, String> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => Err(format!("bad bool {v:?}")),
+    }
+}
+
+/// Parse a full config file (text form). A `preset = <name>` line selects the
+/// base; all other lines are overrides applied in order.
+pub fn parse_str(text: &str) -> Result<HeroConfig, String> {
+    let mut cfg: Option<HeroConfig> = None;
+    let mut pending: Vec<(String, String)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let (key, value) = (key.trim(), value.trim());
+        if key == "preset" {
+            cfg = Some(
+                preset::by_name(value).ok_or_else(|| format!("unknown preset {value:?}"))?,
+            );
+        } else if let Some(cfg) = cfg.as_mut() {
+            apply_override(cfg, key, value).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        } else {
+            pending.push((key.to_string(), value.to_string()));
+        }
+    }
+    let mut cfg = cfg.unwrap_or_else(preset::aurora);
+    for (k, v) in pending {
+        apply_override(&mut cfg, &k, &v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Load a config from a file path.
+pub fn load(path: &str) -> Result<HeroConfig, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_preset_with_overrides() {
+        let cfg = parse_str(
+            "preset = aurora\n\
+             noc.dma_width_bits = 128\n\
+             accel.l1_bytes = 256K # bigger TCDM\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.noc.dma_width_bits, 128);
+        assert_eq!(cfg.accel.l1_bytes, 256 * 1024);
+    }
+
+    #[test]
+    fn default_preset_is_aurora() {
+        let cfg = parse_str("accel.cores_per_cluster = 4\n").unwrap();
+        assert_eq!(cfg.name, "aurora");
+        assert_eq!(cfg.accel.cores_per_cluster, 4);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(parse_str("preset = aurora\nbogus.key = 3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_final_config() {
+        assert!(parse_str("preset = aurora\nnoc.dma_width_bits = 48\n").is_err());
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("128K").unwrap(), 128 << 10);
+        assert_eq!(parse_size("4G").unwrap(), 4 << 30);
+        assert_eq!(parse_size("77").unwrap(), 77);
+        assert!(parse_size("x4").is_err());
+    }
+
+    #[test]
+    fn miss_mode_parse() {
+        let cfg = parse_str("preset = aurora\niommu.miss_mode = dedicated\n").unwrap();
+        assert_eq!(cfg.iommu.miss_mode, crate::config::MissMode::DedicatedCore);
+    }
+}

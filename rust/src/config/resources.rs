@@ -1,0 +1,122 @@
+//! FPGA resource model (experiment E9).
+//!
+//! The paper reports the PL utilization of the Aurora build on the ZU9EG:
+//! 98.1 % of CLBs (87.7 % PMCA + 10.4 % IOMMU; cores-with-FPU are 38.4 % of
+//! the total), 24.2 % of BRAM tiles, 2.9 % of DSP slices, 50 MHz. We have no
+//! FPGA, so this module provides an analytical *resource model* calibrated to
+//! those numbers, so configuration-space exploration still produces resource
+//! estimates (e.g. "does a 16-core cluster fit on a ZU9EG?").
+
+use super::HeroConfig;
+
+/// Resource capacity of a carrier FPGA.
+#[derive(Debug, Clone, Copy)]
+pub struct Carrier {
+    pub name: &'static str,
+    pub clbs: u64,
+    pub bram_tiles: u64,
+    pub dsp_slices: u64,
+}
+
+/// Known carriers (Xilinx data sheets).
+pub const ZU9EG: Carrier =
+    Carrier { name: "Xilinx ZU9EG", clbs: 34_260, bram_tiles: 912, dsp_slices: 2_520 };
+pub const VU37P: Carrier =
+    Carrier { name: "Xilinx VU37P", clbs: 162_960, bram_tiles: 2_016, dsp_slices: 9_024 };
+
+/// Resource usage estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceEstimate {
+    pub clbs: f64,
+    pub bram_tiles: f64,
+    pub dsp_slices: f64,
+    /// Estimated achievable clock in MHz.
+    pub freq_mhz: f64,
+}
+
+/// Per-component CLB cost model, calibrated on the paper's Aurora numbers:
+/// total = 0.981 * 34_260 ≈ 33_609 CLBs, of which cores+FPU are 38.4 % of the
+/// total (= 12_905 for 8 cores → 1_613/core), the IOMMU 10.4 % (= 3_563), and
+/// the remaining PMCA share (interconnect, DMA, icache, peripherals) scales
+/// with cluster size and NoC width.
+const CLB_PER_CORE: f64 = 1_613.0;
+const CLB_IOMMU_BASE: f64 = 3_563.0;
+const CLB_CLUSTER_BASE: f64 = 9_560.0; // DMA + event unit + mailbox + icache ctrl
+const CLB_PER_BANK: f64 = 350.0; // TCDM interconnect grows with bank count
+const CLB_NOC_PER_BIT: f64 = 22.0; // wide NoC datapath per bit
+
+/// BRAM: one 36 Kib tile per 4 KiB of SPM (plus icache).
+fn bram_tiles(cfg: &HeroConfig) -> f64 {
+    let spm_bytes = cfg.accel.n_clusters * (cfg.accel.l1_bytes + cfg.accel.icache_bytes)
+        + cfg.accel.l2_bytes;
+    spm_bytes as f64 / 4096.0
+}
+
+/// Estimate resources for a configuration on a carrier.
+pub fn estimate(cfg: &HeroConfig, _carrier: &Carrier) -> ResourceEstimate {
+    let n_cores = cfg.n_accel_cores() as f64;
+    let n_clusters = cfg.accel.n_clusters as f64;
+    let banks = (cfg.tcdm_banks() * cfg.accel.n_clusters) as f64;
+    let clbs = n_cores * CLB_PER_CORE
+        + n_clusters * CLB_CLUSTER_BASE
+        + banks * CLB_PER_BANK
+        + cfg.noc.dma_width_bits as f64 * CLB_NOC_PER_BIT * n_clusters
+        + CLB_IOMMU_BASE;
+    // DSP: 9 slices per FPU-capable core (fp32 FMA), as on CV32E40P builds.
+    let dsp = if cfg.accel.isa.fp { n_cores * 9.0 } else { n_cores * 2.0 };
+    // Frequency model: the critical path is LSU → TCDM interconnect →
+    // arbiter → LSU (§3); it lengthens with log2(banks) levels of arbitration.
+    let base = 62.0; // MHz for a minimal 4-core cluster on UltraScale+
+    let freq = base / (1.0 + 0.1 * (banks / n_clusters).log2());
+    ResourceEstimate { clbs, bram_tiles: bram_tiles(cfg), dsp_slices: dsp, freq_mhz: freq }
+}
+
+/// Utilization report (fractions of the carrier, 0..1+).
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    pub clb: f64,
+    pub bram: f64,
+    pub dsp: f64,
+    pub fits: bool,
+}
+
+/// Compute utilization of `cfg` on `carrier`.
+pub fn utilization(cfg: &HeroConfig, carrier: &Carrier) -> Utilization {
+    let est = estimate(cfg, carrier);
+    let clb = est.clbs / carrier.clbs as f64;
+    let bram = est.bram_tiles / carrier.bram_tiles as f64;
+    let dsp = est.dsp_slices / carrier.dsp_slices as f64;
+    Utilization { clb, bram, dsp, fits: clb <= 1.0 && bram <= 1.0 && dsp <= 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{aurora, cyclone};
+
+    #[test]
+    fn aurora_matches_paper_utilization() {
+        // Paper: 98.1 % CLB, 24.2 % BRAM, 2.9 % DSP on the ZU9EG at 50 MHz.
+        let u = utilization(&aurora(), &ZU9EG);
+        assert!((u.clb - 0.981).abs() < 0.05, "clb = {}", u.clb);
+        assert!((u.bram - 0.242).abs() < 0.08, "bram = {}", u.bram);
+        assert!((u.dsp - 0.029).abs() < 0.01, "dsp = {}", u.dsp);
+        let est = estimate(&aurora(), &ZU9EG);
+        assert!((est.freq_mhz - 50.0).abs() < 8.0, "freq = {}", est.freq_mhz);
+    }
+
+    #[test]
+    fn sixteen_core_cluster_overflows_zu9eg() {
+        let mut cfg = aurora();
+        cfg.accel.cores_per_cluster = 16;
+        cfg.accel.l1_bytes = 256 * 1024;
+        let u = utilization(&cfg, &ZU9EG);
+        assert!(!u.fits, "16-core cluster should not fit: {u:?}");
+    }
+
+    #[test]
+    fn cyclone_fits_vu37p() {
+        let u = utilization(&cyclone(), &VU37P);
+        assert!(u.fits, "{u:?}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Cluster DMA engine.
+//!
+//! §2.1: "each accelerator cluster features a DMA engine, which can address
+//! the full 64-bit memory space, supports unified virtual memory through the
+//! hybrid IOMMU, can transfer up to 1024 bit per clock cycle in and out of
+//! the cluster (full duplex), and can have tens of transactions ...
+//! outstanding at any time."
+//!
+//! The engine executes transfer *descriptors*: 1D (one contiguous burst
+//! train) or 2D (per-row bursts with distinct device/host strides —
+//! scatter/gather, §2.4). Timing is burst-level via [`noc::WidePath`];
+//! data movement itself is performed by the accelerator model at enqueue
+//! time (the simulator guarantees no observable difference as long as
+//! software synchronizes with `dma.wait`, which correct HERO programs do).
+
+use crate::isa::DmaDir;
+use crate::noc::{Port, WidePath};
+
+/// A DMA transfer descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Descriptor {
+    pub dir: DmaDir,
+    /// Device-local byte address (TCDM or L2).
+    pub dev_addr: u32,
+    /// Host virtual byte address (64-bit; translated through the IOMMU).
+    pub host_va: u64,
+    /// Bytes per row.
+    pub row_bytes: u32,
+    /// Number of rows (1 for 1D transfers).
+    pub rows: u32,
+    /// Device address increment between rows.
+    pub dev_stride: u32,
+    /// Host address increment between rows.
+    pub host_stride: u32,
+    /// Issue as one merged burst train (1D `hero_memcpy`) rather than
+    /// per-row bursts (2D `hero_memcpy2d`).
+    pub merged: bool,
+}
+
+impl Descriptor {
+    /// Total payload bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.row_bytes as u64 * self.rows as u64
+    }
+
+    /// Number of bursts the engine issues for this descriptor.
+    pub fn bursts(&self) -> u64 {
+        if self.merged {
+            1
+        } else {
+            self.rows as u64
+        }
+    }
+}
+
+/// An in-flight or completed transfer.
+#[derive(Debug, Clone, Copy)]
+struct Transfer {
+    id: u32,
+    done_at: u64,
+}
+
+/// Aggregate DMA statistics (feeds the `Dma*` perf events).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DmaStats {
+    pub transfers: u64,
+    pub bursts: u64,
+    pub bytes: u64,
+    pub busy_cycles: u64,
+}
+
+/// The per-cluster DMA engine.
+#[derive(Debug)]
+pub struct DmaEngine {
+    path: WidePath,
+    setup_cycles: u64,
+    port: Port,
+    inflight: Vec<Transfer>,
+    next_id: u32,
+    pub stats: DmaStats,
+}
+
+impl DmaEngine {
+    pub fn new(path: WidePath, setup_cycles: u64) -> Self {
+        DmaEngine {
+            path,
+            setup_cycles,
+            port: Port::new(),
+            inflight: Vec::new(),
+            next_id: 1,
+            stats: DmaStats::default(),
+        }
+    }
+
+    pub fn path(&self) -> &WidePath {
+        &self.path
+    }
+
+    /// Cycles a core is stalled programming a descriptor.
+    pub fn setup_cycles(&self) -> u64 {
+        self.setup_cycles
+    }
+
+    /// Enqueue a transfer at cycle `now` (after the programming core has
+    /// paid `setup_cycles`). `translate_cost` is the IOMMU cost accumulated
+    /// for the pages this transfer touches (0 if all TLB hits).
+    /// Returns `(id, completion_cycle)`.
+    pub fn enqueue(&mut self, now: u64, d: &Descriptor, translate_cost: u64) -> (u32, u64) {
+        let duration = translate_cost
+            + if d.merged {
+                self.path.merged_cycles(d.total_bytes())
+            } else {
+                self.path.scattered_cycles(d.rows as u64, d.row_bytes as u64)
+            };
+        let (_, end) = self.port.acquire(now, duration);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.inflight.push(Transfer { id, done_at: end });
+        self.stats.transfers += 1;
+        self.stats.bursts += d.bursts();
+        self.stats.bytes += d.total_bytes();
+        self.stats.busy_cycles += duration;
+        (id, end)
+    }
+
+    /// Completion cycle of transfer `id`, if known.
+    pub fn completion(&self, id: u32) -> Option<u64> {
+        self.inflight.iter().find(|t| t.id == id).map(|t| t.done_at)
+    }
+
+    /// Completion cycle of *all* transfers issued so far.
+    pub fn all_done_at(&self) -> u64 {
+        self.inflight.iter().map(|t| t.done_at).max().unwrap_or(0)
+    }
+
+    /// Drop completed bookkeeping up to `now` (keeps the in-flight list
+    /// small on long runs).
+    pub fn retire(&mut self, now: u64) {
+        self.inflight.retain(|t| t.done_at > now);
+    }
+
+    /// Reset between offloads.
+    pub fn reset(&mut self) {
+        self.port.reset();
+        self.inflight.clear();
+        // Stats persist across offloads; callers snapshot/diff them.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> DmaEngine {
+        DmaEngine::new(
+            WidePath { beat_bytes: 8, burst_overhead: 25, first_word: 100, max_burst_beats: 256 },
+            30,
+        )
+    }
+
+    fn desc_1d(bytes: u32) -> Descriptor {
+        Descriptor {
+            dir: DmaDir::HostToDev,
+            dev_addr: 0,
+            host_va: 0,
+            row_bytes: bytes,
+            rows: 1,
+            dev_stride: 0,
+            host_stride: 0,
+            merged: true,
+        }
+    }
+
+    #[test]
+    fn merged_transfer_timing() {
+        let mut e = engine();
+        let (id, done) = e.enqueue(0, &desc_1d(2048), 0);
+        // 25 overhead + 100 first word + 256 beats.
+        assert_eq!(done, 381);
+        assert_eq!(e.completion(id), Some(381));
+    }
+
+    #[test]
+    fn transfers_serialize_on_engine() {
+        let mut e = engine();
+        let (_, d1) = e.enqueue(0, &desc_1d(800), 0);
+        let (_, d2) = e.enqueue(0, &desc_1d(800), 0);
+        assert_eq!(d2 - d1, d1); // second starts when first ends
+        assert_eq!(e.all_done_at(), d2);
+    }
+
+    #[test]
+    fn scattered_counts_bursts_per_row() {
+        let mut e = engine();
+        let d = Descriptor {
+            dir: DmaDir::DevToHost,
+            dev_addr: 0,
+            host_va: 0,
+            row_bytes: 388,
+            rows: 97,
+            dev_stride: 388,
+            host_stride: 512,
+            merged: false,
+        };
+        e.enqueue(0, &d, 0);
+        assert_eq!(e.stats.bursts, 97);
+        assert_eq!(e.stats.bytes, 388 * 97);
+        assert_eq!(e.stats.transfers, 1);
+    }
+
+    #[test]
+    fn translate_cost_extends_transfer() {
+        let mut e = engine();
+        let (_, d_no) = e.enqueue(0, &desc_1d(64), 0);
+        e.reset();
+        let (_, d_tlb) = e.enqueue(0, &desc_1d(64), 600);
+        assert_eq!(d_tlb - d_no, 600);
+    }
+
+    #[test]
+    fn retire_drops_old() {
+        let mut e = engine();
+        let (id, done) = e.enqueue(0, &desc_1d(64), 0);
+        e.retire(done + 1);
+        assert_eq!(e.completion(id), None);
+    }
+}

@@ -1,0 +1,159 @@
+//! Host-side model: user-space process memory, the accelerator driver's
+//! buffer management, and the mailbox.
+//!
+//! §2.3: "The OS device driver and the accompanying user-space accelerator
+//! library on the host implement the accelerator-specific functionality for
+//! offloading to and communicating with the accelerator ... and making the
+//! page table of the user-space process readable for the accelerator."
+//!
+//! The host is not simulated at instruction level (its cost enters as the
+//! configured offload overheads); what matters to the experiments is its
+//! *memory state*: user-space buffers live at 64-bit virtual addresses,
+//! mapped page-by-page onto physical DRAM, and the accelerator reaches them
+//! through the hybrid IOMMU.
+
+use crate::accel::Accel;
+use anyhow::{bail, Result};
+
+/// Base of the user-space heap VA window. All buffers share the upper
+/// 32 bits (one 4 GiB window), matching the compiler's single
+/// address-extension CSR write per kernel.
+pub const VA_BASE: u64 = 0x40_0000_0000;
+
+/// A user-space buffer shared with the accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct HostBuf {
+    /// Virtual address (what the kernel sees via the map clause).
+    pub va: u64,
+    /// Physical address (contiguous in this model; the page table is still
+    /// exercised page-by-page).
+    pub pa: u64,
+    /// Length in f32 elements.
+    pub elems: usize,
+}
+
+impl HostBuf {
+    /// Upper 32 bits of the VA (the ext-CSR value).
+    pub fn hi(&self) -> u32 {
+        (self.va >> 32) as u32
+    }
+
+    /// Lower 32 bits of the VA.
+    pub fn lo(&self) -> u32 {
+        self.va as u32
+    }
+}
+
+/// The host process context: a VA/PA bump allocator over the shared DRAM,
+/// maintaining the application page table.
+#[derive(Debug)]
+pub struct HostContext {
+    next_va: u64,
+    next_pa: u64,
+    dram_bytes: u64,
+}
+
+impl Default for HostContext {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostContext {
+    pub fn new() -> Self {
+        HostContext { next_va: VA_BASE, next_pa: 0, dram_bytes: 0 }
+    }
+
+    /// Allocate an f32 buffer, map its pages, and return it.
+    pub fn alloc(&mut self, accel: &mut Accel, elems: usize) -> Result<HostBuf> {
+        if self.dram_bytes == 0 {
+            self.dram_bytes = accel.dram.mem.bytes() as u64;
+        }
+        let page = accel.cfg.iommu.page_bytes as u64;
+        let bytes = (elems as u64 * 4).div_ceil(page) * page;
+        if self.next_pa + bytes > self.dram_bytes {
+            bail!(
+                "host allocator out of simulated DRAM ({} + {} > {})",
+                self.next_pa,
+                bytes,
+                self.dram_bytes
+            );
+        }
+        let buf = HostBuf { va: self.next_va, pa: self.next_pa, elems };
+        accel.pt.map_range(buf.va, buf.pa, bytes);
+        self.next_va += bytes;
+        self.next_pa += bytes;
+        Ok(buf)
+    }
+
+    /// Write data into a buffer (host-side store, physical path).
+    pub fn write_f32(&self, accel: &mut Accel, buf: &HostBuf, data: &[f32]) {
+        assert!(data.len() <= buf.elems, "write beyond buffer");
+        for (i, v) in data.iter().enumerate() {
+            accel.dram.mem.store_f32(buf.pa as u32 + (i as u32) * 4, *v);
+        }
+    }
+
+    /// Read a buffer back.
+    pub fn read_f32(&self, accel: &Accel, buf: &HostBuf) -> Vec<f32> {
+        (0..buf.elems)
+            .map(|i| accel.dram.mem.load_f32(buf.pa as u32 + (i as u32) * 4))
+            .collect()
+    }
+}
+
+/// The hardware mailbox: the host writes a descriptor, the device's offload
+/// manager core is woken by interrupt (§2.3). Costs are configured; the
+/// functional part is the descriptor handoff done by `runtime::omp`.
+#[derive(Debug, Default)]
+pub struct Mailbox {
+    /// Offloads triggered so far.
+    pub offloads: u64,
+}
+
+impl Mailbox {
+    /// Total cycle cost of one offload round-trip (doorbell + interrupt +
+    /// manager dispatch + completion signal).
+    pub fn round_trip_cycles(cfg: &crate::config::HeroConfig) -> u64 {
+        cfg.timing.offload_host + cfg.timing.offload_dev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+
+    #[test]
+    fn alloc_maps_pages_and_roundtrips() {
+        let mut accel = Accel::new(aurora(), 1 << 20);
+        let mut host = HostContext::new();
+        let buf = host.alloc(&mut accel, 1000).unwrap();
+        assert_eq!(buf.hi(), 0x40);
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        host.write_f32(&mut accel, &buf, &data);
+        assert_eq!(host.read_f32(&accel, &buf), data);
+        // The page table must translate the whole range.
+        for off in [0u64, 2048, 3999] {
+            let pa = accel.pt.walk(buf.va + off).unwrap();
+            assert_eq!(pa, buf.pa + off);
+        }
+    }
+
+    #[test]
+    fn buffers_do_not_overlap() {
+        let mut accel = Accel::new(aurora(), 1 << 20);
+        let mut host = HostContext::new();
+        let a = host.alloc(&mut accel, 100).unwrap();
+        let b = host.alloc(&mut accel, 100).unwrap();
+        assert!(a.va + 400 <= b.va);
+        assert!(a.pa + 400 <= b.pa);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut accel = Accel::new(aurora(), 64 * 1024);
+        let mut host = HostContext::new();
+        assert!(host.alloc(&mut accel, 100_000).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Hybrid IOMMU: software-managed TLB + on-accelerator page-table walking.
+//!
+//! §2.1/§2.3: the accelerator shares the *virtual* address space of the host
+//! application. The IOMMU is "hybrid": a hardware TLB translates virtual
+//! user-space addresses to physical ones; misses are handled *in software*
+//! by the accelerator itself, which walks the application page table (made
+//! readable by the host driver) and fills the TLB. A hit adds ≈3 cycles to a
+//! remote access (modelled as `timing.ext_addr_overhead` on the access
+//! path); a miss costs a software walk (`iommu.walk_cycles`).
+
+use crate::config::{IommuConfig, MissMode};
+use std::collections::HashMap;
+
+/// Host-managed page table: virtual page number → physical page number.
+///
+/// Models the user-space application page table (ARM VMSAv8-64 or RISC-V
+/// Sv39 on real HEROv2); we keep only the final-level mapping since the
+/// multi-level walk cost is a configured constant.
+#[derive(Debug, Default, Clone)]
+pub struct PageTable {
+    map: HashMap<u64, u64>,
+    page_bits: u32,
+}
+
+impl PageTable {
+    pub fn new(page_bytes: usize) -> Self {
+        assert!(page_bytes.is_power_of_two());
+        PageTable { map: HashMap::new(), page_bits: page_bytes.trailing_zeros() }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        1 << self.page_bits
+    }
+
+    /// Map the virtual page containing `va` to the physical page containing
+    /// `pa` (both rounded down).
+    pub fn map_page(&mut self, va: u64, pa: u64) {
+        self.map.insert(va >> self.page_bits, pa >> self.page_bits);
+    }
+
+    /// Map a contiguous virtual range onto a contiguous physical range.
+    pub fn map_range(&mut self, va: u64, pa: u64, bytes: u64) {
+        let pb = self.page_bytes();
+        let first = va >> self.page_bits;
+        let last = (va + bytes.max(1) - 1) >> self.page_bits;
+        for (i, vpn) in (first..=last).enumerate() {
+            self.map.insert(vpn, (pa >> self.page_bits) + i as u64);
+            let _ = pb;
+        }
+    }
+
+    /// Walk: translate `va` → physical address, or None if unmapped
+    /// (a real system would deliver a fault to the host).
+    pub fn walk(&self, va: u64) -> Option<u64> {
+        let ppn = *self.map.get(&(va >> self.page_bits))?;
+        Some((ppn << self.page_bits) | (va & (self.page_bytes() - 1)))
+    }
+}
+
+/// Result of an IOMMU translation, with its cycle cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Translation {
+    pub pa: u64,
+    /// Cycles spent on translation: 0 on a TLB hit (the constant hit
+    /// overhead is charged on the access path), `walk` cycles on a miss.
+    pub cost: u64,
+    pub hit: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct TlbEntry {
+    vpn: u64,
+    ppn: u64,
+    last_use: u64,
+}
+
+/// The hybrid IOMMU: a fully-associative LRU TLB, software-filled.
+#[derive(Debug)]
+pub struct Iommu {
+    cfg: IommuConfig,
+    entries: Vec<TlbEntry>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// Busy-until cycle of the dedicated miss-handler core (DedicatedCore
+    /// mode): concurrent misses queue on it.
+    handler_free: u64,
+}
+
+impl Iommu {
+    pub fn new(cfg: IommuConfig) -> Self {
+        Iommu { cfg, entries: Vec::new(), tick: 0, hits: 0, misses: 0, handler_free: 0 }
+    }
+
+    pub fn cfg(&self) -> &IommuConfig {
+        &self.cfg
+    }
+
+    fn page_bits(&self) -> u32 {
+        self.cfg.page_bytes.trailing_zeros()
+    }
+
+    /// Invalidate all TLB entries (host driver does this between offloads).
+    pub fn flush(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Translate a 64-bit virtual address at cycle `now`. On a TLB miss the
+    /// accelerator walks `pt` in software and fills the entry.
+    ///
+    /// Returns `None` for an unmapped address (fatal in the simulator:
+    /// offloaded kernels only touch mapped buffers).
+    pub fn translate(&mut self, va: u64, pt: &PageTable, now: u64) -> Option<Translation> {
+        self.tick += 1;
+        let vpn = va >> self.page_bits();
+        let off = va & (self.cfg.page_bytes as u64 - 1);
+        if let Some(e) = self.entries.iter_mut().find(|e| e.vpn == vpn) {
+            e.last_use = self.tick;
+            self.hits += 1;
+            return Some(Translation { pa: (e.ppn << self.page_bits()) | off, cost: 0, hit: true });
+        }
+        // Miss: software walk (VMM library, §2.3).
+        self.misses += 1;
+        let pa_page = pt.walk(vpn << self.page_bits())?;
+        let ppn = pa_page >> self.page_bits();
+        if self.entries.len() >= self.cfg.tlb_entries {
+            // Evict LRU.
+            let (i, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .expect("non-empty");
+            self.entries.swap_remove(i);
+        }
+        self.entries.push(TlbEntry { vpn, ppn, last_use: self.tick });
+        let cost = match self.cfg.miss_mode {
+            MissMode::SelfService => self.cfg.walk_cycles,
+            MissMode::DedicatedCore => {
+                // The dedicated handler core overlaps the walk with the
+                // faulting core's pipeline drain, but concurrent misses
+                // queue on it.
+                let start = now.max(self.handler_free);
+                let service = self.cfg.walk_cycles / 2;
+                self.handler_free = start + service;
+                (start + service).saturating_sub(now)
+            }
+        };
+        Some(Translation { pa: (ppn << self.page_bits()) | off, cost, hit: false })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+
+    fn setup() -> (Iommu, PageTable) {
+        let cfg = aurora().iommu;
+        let mut pt = PageTable::new(cfg.page_bytes);
+        pt.map_range(0x7f00_0000_0000, 0x10_0000, 1 << 20); // 1 MiB buffer
+        (Iommu::new(cfg), pt)
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let (mut io, pt) = setup();
+        let t1 = io.translate(0x7f00_0000_0100, &pt, 0).unwrap();
+        assert!(!t1.hit);
+        assert_eq!(t1.cost, aurora().iommu.walk_cycles);
+        assert_eq!(t1.pa, 0x10_0100);
+        let t2 = io.translate(0x7f00_0000_0200, &pt, 10).unwrap();
+        assert!(t2.hit);
+        assert_eq!(t2.cost, 0);
+        assert_eq!(t2.pa, 0x10_0200);
+    }
+
+    #[test]
+    fn contiguous_mapping_is_page_accurate() {
+        let (mut io, pt) = setup();
+        // Page 3, offset 12.
+        let va = 0x7f00_0000_0000u64 + 3 * 4096 + 12;
+        let t = io.translate(va, &pt, 0).unwrap();
+        assert_eq!(t.pa, 0x10_0000 + 3 * 4096 + 12);
+    }
+
+    #[test]
+    fn unmapped_returns_none() {
+        let (mut io, pt) = setup();
+        assert!(io.translate(0xdead_0000_0000, &pt, 0).is_none());
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let (mut io, mut pt) = setup();
+        let n = aurora().iommu.tlb_entries;
+        pt.map_range(0x10_0000_0000, 0x2000_0000, (n as u64 + 2) * 4096);
+        // Fill the TLB with n+1 distinct pages: entry 0 gets evicted.
+        for i in 0..=n as u64 {
+            io.translate(0x10_0000_0000 + i * 4096, &pt, i).unwrap();
+        }
+        assert_eq!(io.misses, n as u64 + 1);
+        let t = io.translate(0x10_0000_0000, &pt, 100).unwrap();
+        assert!(!t.hit, "first page should have been LRU-evicted");
+    }
+
+    #[test]
+    fn dedicated_mode_queues() {
+        let mut cfg = aurora().iommu;
+        cfg.miss_mode = MissMode::DedicatedCore;
+        let mut pt = PageTable::new(cfg.page_bytes);
+        pt.map_range(0, 0, 1 << 20);
+        let mut io = Iommu::new(cfg);
+        let c1 = io.translate(0, &pt, 0).unwrap().cost;
+        let c2 = io.translate(4096, &pt, 0).unwrap().cost; // queues behind c1
+        assert_eq!(c1, cfg.walk_cycles / 2);
+        assert_eq!(c2, cfg.walk_cycles);
+    }
+
+    #[test]
+    fn flush_empties_tlb() {
+        let (mut io, pt) = setup();
+        io.translate(0x7f00_0000_0000, &pt, 0).unwrap();
+        io.flush();
+        let t = io.translate(0x7f00_0000_0000, &pt, 0).unwrap();
+        assert!(!t.hit);
+    }
+}

@@ -1,0 +1,181 @@
+//! Assembly-style pretty printer for [`Inst`] and [`Program`].
+//!
+//! Used by `hero disasm`, the Fig 9 inner-loop analysis, and test
+//! diagnostics. The syntax follows RISC-V assembly with `p.`-prefixed
+//! Xpulpv2 mnemonics, matching the paper's §3.4 discussion.
+
+use super::*;
+use std::fmt::Write as _;
+
+fn alu_name(op: AluOp) -> &'static str {
+    match op {
+        AluOp::Add => "add",
+        AluOp::Sub => "sub",
+        AluOp::Mul => "mul",
+        AluOp::Mulhu => "mulhu",
+        AluOp::Div => "div",
+        AluOp::Rem => "rem",
+        AluOp::And => "and",
+        AluOp::Or => "or",
+        AluOp::Xor => "xor",
+        AluOp::Sll => "sll",
+        AluOp::Srl => "srl",
+        AluOp::Sra => "sra",
+        AluOp::Slt => "slt",
+        AluOp::Sltu => "sltu",
+        AluOp::Min => "p.min",
+        AluOp::Max => "p.max",
+    }
+}
+
+fn fp_name(op: FpOp) -> &'static str {
+    match op {
+        FpOp::Add => "fadd.s",
+        FpOp::Sub => "fsub.s",
+        FpOp::Mul => "fmul.s",
+        FpOp::Div => "fdiv.s",
+        FpOp::Min => "fmin.s",
+        FpOp::Max => "fmax.s",
+    }
+}
+
+fn cond_name(c: Cond) -> &'static str {
+    match c {
+        Cond::Eq => "beq",
+        Cond::Ne => "bne",
+        Cond::Lt => "blt",
+        Cond::Ge => "bge",
+        Cond::Ltu => "bltu",
+        Cond::Geu => "bgeu",
+    }
+}
+
+fn csr_name(c: Csr) -> &'static str {
+    match c {
+        Csr::MHartId => "mhartid",
+        Csr::MClusterId => "mclusterid",
+        Csr::MNumCores => "mnumcores",
+        Csr::ExtAddr => "extaddr",
+        Csr::MCycle => "mcycle",
+    }
+}
+
+/// Render one instruction.
+pub fn inst(i: &Inst) -> String {
+    match *i {
+        Inst::Li { rd, imm } => format!("li x{rd}, {imm}"),
+        Inst::AluImm { op, rd, rs1, imm } => {
+            format!("{}i x{rd}, x{rs1}, {imm}", alu_name(op))
+        }
+        Inst::Alu { op, rd, rs1, rs2 } => format!("{} x{rd}, x{rs1}, x{rs2}", alu_name(op)),
+        Inst::Lw { rd, rs1, offset } => format!("lw x{rd}, {offset}(x{rs1})"),
+        Inst::Sw { rs2, rs1, offset } => format!("sw x{rs2}, {offset}(x{rs1})"),
+        Inst::Branch { cond, rs1, rs2, target } => {
+            format!("{} x{rs1}, x{rs2}, @{target}", cond_name(cond))
+        }
+        Inst::Jal { rd, target } => format!("jal x{rd}, @{target}"),
+        Inst::Jalr { rd, rs1, offset } => format!("jalr x{rd}, {offset}(x{rs1})"),
+        Inst::CsrR { rd, csr } => format!("csrr x{rd}, {}", csr_name(csr)),
+        Inst::CsrW { csr, rs1 } => format!("csrw {}, x{rs1}", csr_name(csr)),
+        Inst::Amo { op, rd, rs1, rs2 } => {
+            let n = match op {
+                AmoOp::Swap => "amoswap.w",
+                AmoOp::Add => "amoadd.w",
+                AmoOp::And => "amoand.w",
+                AmoOp::Or => "amoor.w",
+                AmoOp::Max => "amomax.w",
+                AmoOp::Min => "amomin.w",
+            };
+            format!("{n} x{rd}, x{rs2}, (x{rs1})")
+        }
+        Inst::Flw { fd, rs1, offset } => format!("flw f{fd}, {offset}(x{rs1})"),
+        Inst::Fsw { fs2, rs1, offset } => format!("fsw f{fs2}, {offset}(x{rs1})"),
+        Inst::Fp { op, fd, fs1, fs2 } => format!("{} f{fd}, f{fs1}, f{fs2}", fp_name(op)),
+        Inst::Fmadd { fd, fs1, fs2, fs3 } => {
+            format!("fmadd.s f{fd}, f{fs1}, f{fs2}, f{fs3}")
+        }
+        Inst::FcvtSW { fd, rs1 } => format!("fcvt.s.w f{fd}, x{rs1}"),
+        Inst::FcvtWS { rd, fs1 } => format!("fcvt.w.s x{rd}, f{fs1}"),
+        Inst::FmvWX { fd, rs1 } => format!("fmv.w.x f{fd}, x{rs1}"),
+        Inst::FmvXW { rd, fs1 } => format!("fmv.x.w x{rd}, f{fs1}"),
+        Inst::Fcmp { cond, rd, fs1, fs2 } => {
+            let n = match cond {
+                Cond::Eq => "feq.s",
+                Cond::Lt => "flt.s",
+                _ => "fle.s",
+            };
+            format!("{n} x{rd}, f{fs1}, f{fs2}")
+        }
+        Inst::LwExt { rd, rs1, offset } => format!("lw.ext x{rd}, {offset}(x{rs1})"),
+        Inst::SwExt { rs2, rs1, offset } => format!("sw.ext x{rs2}, {offset}(x{rs1})"),
+        Inst::FlwExt { fd, rs1, offset } => format!("flw.ext f{fd}, {offset}(x{rs1})"),
+        Inst::FswExt { fs2, rs1, offset } => format!("fsw.ext f{fs2}, {offset}(x{rs1})"),
+        Inst::LwPost { rd, rs1, imm } => format!("p.lw x{rd}, {imm}(x{rs1}!)"),
+        Inst::SwPost { rs2, rs1, imm } => format!("p.sw x{rs2}, {imm}(x{rs1}!)"),
+        Inst::FlwPost { fd, rs1, imm } => format!("p.flw f{fd}, {imm}(x{rs1}!)"),
+        Inst::FswPost { fs2, rs1, imm } => format!("p.fsw f{fs2}, {imm}(x{rs1}!)"),
+        Inst::Mac { rd, rs1, rs2 } => format!("p.mac x{rd}, x{rs1}, x{rs2}"),
+        Inst::Fmac { fd, fs1, fs2 } => format!("fmac.s f{fd}, f{fs1}, f{fs2}"),
+        Inst::HwLoop { l, count, start, end } => {
+            format!("lp.setup l{l}, x{count}, @{start}, @{end}")
+        }
+        Inst::DmaStart1D { rd, dir, dev, host_lo, host_hi, bytes } => {
+            let d = if dir == DmaDir::HostToDev { "h2d" } else { "d2h" };
+            format!("dma.1d.{d} x{rd}, dev=x{dev}, host=x{host_lo}:x{host_hi}, n=x{bytes}")
+        }
+        Inst::DmaStart2D { rd, dir, dev, host_lo, host_hi, bytes, count, dev_stride, host_stride } => {
+            let d = if dir == DmaDir::HostToDev { "h2d" } else { "d2h" };
+            format!(
+                "dma.2d.{d} x{rd}, dev=x{dev}, host=x{host_lo}:x{host_hi}, n=x{bytes}, \
+                 cnt=x{count}, dstr=x{dev_stride}, hstr=x{host_stride}"
+            )
+        }
+        Inst::DmaWait { rs1 } => format!("dma.wait x{rs1}"),
+        Inst::Barrier => "barrier".into(),
+        Inst::Fork { target } => format!("fork @{target}"),
+        Inst::Join => "join".into(),
+        Inst::PerfCtl { resume } => {
+            if resume { "perf.continue".into() } else { "perf.pause".into() }
+        }
+        Inst::Halt => "halt".into(),
+        Inst::Nop => "nop".into(),
+    }
+}
+
+/// Render a whole program with labels and indices.
+pub fn program(p: &Program) -> String {
+    let mut out = String::new();
+    for (idx, i) in p.insts.iter().enumerate() {
+        for (at, name) in &p.labels {
+            if *at == idx as u32 {
+                let _ = writeln!(out, "{name}:");
+            }
+        }
+        let _ = writeln!(out, "  {idx:4}: {}", inst(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_xpulp_mnemonics() {
+        assert_eq!(inst(&Inst::Mac { rd: 3, rs1: 1, rs2: 2 }), "p.mac x3, x1, x2");
+        assert_eq!(inst(&Inst::FlwPost { fd: 1, rs1: 5, imm: 4 }), "p.flw f1, 4(x5!)");
+        assert_eq!(
+            inst(&Inst::HwLoop { l: 0, count: 7, start: 3, end: 8 }),
+            "lp.setup l0, x7, @3, @8"
+        );
+    }
+
+    #[test]
+    fn renders_program_with_labels() {
+        let mut p = Program::new(vec![Inst::Nop, Inst::Halt]);
+        p.labels.push((1, "done".into()));
+        let s = program(&p);
+        assert!(s.contains("done:"));
+        assert!(s.contains("0: nop"));
+    }
+}

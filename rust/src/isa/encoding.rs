@@ -1,0 +1,59 @@
+//! Instruction-size model.
+//!
+//! The cores support the RISC-V compressed (`C`) extension; the paper's L0
+//! buffer holds "up to eight compressed instructions" (§2.1). The icache
+//! geometry and the L0 capacity check therefore need a size estimate for
+//! each instruction: common ALU ops, short-immediate loads/stores and
+//! branches compress to 16 bit, everything else is 32 bit.
+
+use super::*;
+
+/// Estimated encoded size in bytes (2 for compressible, 4 otherwise).
+pub fn size_bytes(i: &Inst) -> u32 {
+    match i {
+        // RVC-compressible forms: small immediates / register-register moves.
+        Inst::AluImm { imm, .. } if (-32..32).contains(imm) => 2,
+        Inst::Alu { .. } => 2,
+        Inst::Lw { offset, .. } | Inst::Sw { offset, .. } if (0..128).contains(offset) => 2,
+        Inst::Flw { offset, .. } | Inst::Fsw { offset, .. } if (0..128).contains(offset) => 2,
+        Inst::Li { imm, .. } if (-32..32).contains(imm) => 2,
+        Inst::Nop | Inst::Halt | Inst::Join => 2,
+        // Everything else (incl. all Xpulpv2 and ext-address forms) is 32-bit.
+        _ => 4,
+    }
+}
+
+/// Total encoded size of an instruction range in bytes.
+pub fn range_bytes(insts: &[Inst]) -> u32 {
+    insts.iter().map(size_bytes).sum()
+}
+
+/// Whether an instruction window fits the per-core L0 buffer of
+/// `l0_insts` compressed (16-bit) slots, i.e. `2 * l0_insts` bytes.
+pub fn fits_l0(insts: &[Inst], l0_insts: usize) -> bool {
+    range_bytes(insts) <= 2 * l0_insts as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(size_bytes(&Inst::Alu { op: AluOp::Add, rd: 1, rs1: 1, rs2: 2 }), 2);
+        assert_eq!(size_bytes(&Inst::Li { rd: 1, imm: 100000 }), 4);
+        assert_eq!(size_bytes(&Inst::Mac { rd: 1, rs1: 2, rs2: 3 }), 4);
+        assert_eq!(size_bytes(&Inst::Lw { rd: 1, rs1: 2, offset: 4 }), 2);
+        assert_eq!(size_bytes(&Inst::Lw { rd: 1, rs1: 2, offset: 1024 }), 4);
+    }
+
+    #[test]
+    fn l0_capacity() {
+        // Eight compressed instructions fit; eight uncompressed do not.
+        let small = vec![Inst::Alu { op: AluOp::Add, rd: 1, rs1: 1, rs2: 2 }; 8];
+        assert!(fits_l0(&small, 8));
+        let big = vec![Inst::Mac { rd: 1, rs1: 2, rs2: 3 }; 8];
+        assert!(!fits_l0(&big, 8));
+        assert!(fits_l0(&big, 16));
+    }
+}

@@ -1,0 +1,389 @@
+//! The accelerator instruction set.
+//!
+//! HEROv2's accelerator cores are 32-bit RISC-V cores (CV32E40P on Aurora)
+//! supporting at least RV32IMA, optionally F, and the Xpulpv2 custom
+//! extension (§2.1): *hardware loops* (repeat an instruction sequence without
+//! branches), *post-increment* loads/stores (implicitly bump the address
+//! register), and *multiply-accumulate*.
+//!
+//! We model this as an RV32-flavoured virtual machine: instruction semantics
+//! and cost structure match the paper's cores (single-issue, in-order,
+//! 1 instruction/cycle unless stalled) but instructions are kept in decoded
+//! enum form rather than 32-bit encodings — the case studies measure cycle
+//! and instruction counts, which survive this abstraction (DESIGN.md §6).
+//!
+//! Submodules:
+//! * [`disasm`] — assembly-style pretty printer (used in Fig 9 analysis).
+//! * [`encoding`] — size/encoding model (compressed-instruction estimate for
+//!   the L0 buffer and icache geometry).
+
+pub mod disasm;
+pub mod encoding;
+
+/// Integer register index (x0..x31; x0 is hardwired zero).
+pub type Reg = u8;
+/// Floating-point register index (f0..f31).
+pub type FReg = u8;
+
+/// Integer ALU binary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    Mulhu,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Slt,
+    Sltu,
+    /// Xpulpv2 `p.min` / `p.max` (bit-manipulation family, §2.1).
+    Min,
+    Max,
+}
+
+/// Floating-point binary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+/// Branch comparison conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// Atomic memory operations (RV32A subset used by the runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AmoOp {
+    Swap,
+    Add,
+    And,
+    Or,
+    Max,
+    Min,
+}
+
+/// Control and status registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Csr {
+    /// Hart (core) id within the cluster.
+    MHartId,
+    /// Cluster id within the accelerator.
+    MClusterId,
+    /// Number of cores in this cluster.
+    MNumCores,
+    /// Upper 32 bits for 64-bit host-address-space accesses (§2.1: "a custom
+    /// CSR allows each 32-bit core to load from and store to any 64-bit
+    /// address"). Set by the compiler's host-pointer legalizer (§2.2.1).
+    ExtAddr,
+    /// Monotonic cycle counter.
+    MCycle,
+}
+
+/// DMA transfer direction, from the accelerator's perspective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaDir {
+    /// Main memory → SPM (`hero_memcpy_host2dev`).
+    HostToDev,
+    /// SPM → main memory (`hero_memcpy_dev2host`).
+    DevToHost,
+}
+
+/// One decoded instruction.
+///
+/// Branch/jump targets are absolute instruction indices into the enclosing
+/// [`Program`]. Loads/stores address bytes; word accesses must be 4-aligned.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    // ---- RV32I/M integer core ----
+    /// rd = imm (LUI/ADDI fusion; materializes a full 32-bit constant).
+    Li { rd: Reg, imm: i32 },
+    /// rd = rs1 op imm.
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// rd = rs1 op rs2.
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// rd = M[rs1 + offset] (32-bit, native address space).
+    Lw { rd: Reg, rs1: Reg, offset: i32 },
+    /// M[rs1 + offset] = rs2.
+    Sw { rs2: Reg, rs1: Reg, offset: i32 },
+    /// Conditional branch to `target` (absolute instruction index).
+    Branch { cond: Cond, rs1: Reg, rs2: Reg, target: u32 },
+    /// rd = return address; jump to `target`.
+    Jal { rd: Reg, target: u32 },
+    /// Indirect jump: pc = rs1 (+offset), rd = return address.
+    Jalr { rd: Reg, rs1: Reg, offset: i32 },
+    /// CSR read: rd = csr.
+    CsrR { rd: Reg, csr: Csr },
+    /// CSR write: csr = rs1.
+    CsrW { csr: Csr, rs1: Reg },
+    /// Atomic: rd = M[rs1]; M[rs1] = rd op rs2 (TCDM/L2 only).
+    Amo { op: AmoOp, rd: Reg, rs1: Reg, rs2: Reg },
+
+    // ---- RV32F ----
+    /// fd = M[rs1 + offset].
+    Flw { fd: FReg, rs1: Reg, offset: i32 },
+    /// M[rs1 + offset] = fs2.
+    Fsw { fs2: FReg, rs1: Reg, offset: i32 },
+    /// fd = fs1 op fs2.
+    Fp { op: FpOp, fd: FReg, fs1: FReg, fs2: FReg },
+    /// fd = fs1 * fs2 + fs3 (RV32F FMADD.S).
+    Fmadd { fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+    /// fd = (float) rs1 (signed).
+    FcvtSW { fd: FReg, rs1: Reg },
+    /// rd = (int) fs1 (truncating).
+    FcvtWS { rd: Reg, fs1: FReg },
+    /// Move bit pattern: fd = rs1.
+    FmvWX { fd: FReg, rs1: Reg },
+    /// Move bit pattern: rd = fs1.
+    FmvXW { rd: Reg, fs1: FReg },
+    /// Float compare: rd = (fs1 cond fs2) ? 1 : 0 (Eq/Lt/Ge only).
+    Fcmp { cond: Cond, rd: Reg, fs1: FReg, fs2: FReg },
+
+    // ---- 64-bit host address space (ext-CSR path, §2.2.1) ----
+    /// rd = M64[(ExtAddr << 32) | (rs1 + offset)] — remote load through the
+    /// IOMMU. Costs `ext_addr_overhead` extra cycles (§2.3: 3 on TLB hit).
+    LwExt { rd: Reg, rs1: Reg, offset: i32 },
+    /// Remote store.
+    SwExt { rs2: Reg, rs1: Reg, offset: i32 },
+    /// Remote float load.
+    FlwExt { fd: FReg, rs1: Reg, offset: i32 },
+    /// Remote float store.
+    FswExt { fs2: FReg, rs1: Reg, offset: i32 },
+
+    // ---- Xpulpv2 ----
+    /// Post-increment load: rd = M[rs1]; rs1 += imm (`p.lw rd, imm(rs1!)`).
+    LwPost { rd: Reg, rs1: Reg, imm: i32 },
+    /// Post-increment store: M[rs1] = rs2; rs1 += imm.
+    SwPost { rs2: Reg, rs1: Reg, imm: i32 },
+    /// Post-increment float load.
+    FlwPost { fd: FReg, rs1: Reg, imm: i32 },
+    /// Post-increment float store.
+    FswPost { fs2: FReg, rs1: Reg, imm: i32 },
+    /// Integer MAC: rd += rs1 * rs2 (`p.mac`).
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Float MAC: fd += fs1 * fs2 (single-cycle on the FPnew MAC path).
+    Fmac { fd: FReg, fs1: FReg, fs2: FReg },
+    /// Hardware loop setup (`lp.setup l, rs1, start, end`): execute
+    /// instructions `[start, end)` `rs1` times with zero-overhead back-edges.
+    /// Two nested loops (l ∈ {0, 1}) are supported, as on CV32E40P.
+    HwLoop { l: u8, count: Reg, start: u32, end: u32 },
+
+    // ---- Runtime assists (HAL primitives, §2.3) ----
+    /// Program a DMA 1D transfer: regs = [dev_addr, host_lo, host_hi,
+    /// bytes]; rd = transfer id. Costs `dma.setup_cycles`.
+    DmaStart1D { rd: Reg, dir: DmaDir, dev: Reg, host_lo: Reg, host_hi: Reg, bytes: Reg },
+    /// Program a DMA 2D transfer: additionally [count, dev_stride,
+    /// host_stride]; copies `count` rows of `bytes` each.
+    DmaStart2D {
+        rd: Reg,
+        dir: DmaDir,
+        dev: Reg,
+        host_lo: Reg,
+        host_hi: Reg,
+        bytes: Reg,
+        count: Reg,
+        dev_stride: Reg,
+        host_stride: Reg,
+    },
+    /// Block until transfer id in rs1 completes (`hero_memcpy_wait`).
+    DmaWait { rs1: Reg },
+    /// Cluster barrier (event unit).
+    Barrier,
+    /// Master wakes all cluster cores; they start at `target`. Workers run
+    /// until they hit `Join`; the master continues at the next instruction
+    /// *after* also executing the region (OpenMP `parallel` fork).
+    Fork { target: u32 },
+    /// End of a parallel region: implicit barrier; non-master cores go back
+    /// to sleep, master falls through.
+    Join,
+    /// Pause/resume all allocated performance counters
+    /// (`hero_perf_pause_all` / `hero_perf_continue_all`; 1 cycle, §2.4).
+    PerfCtl { resume: bool },
+    /// Stop this core; an offload finishes when core 0 halts (non-parallel
+    /// sections run on core 0 only).
+    Halt,
+    /// No operation.
+    Nop,
+}
+
+impl Inst {
+    /// True for instructions that access data memory.
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Inst::Lw { .. }
+                | Inst::Sw { .. }
+                | Inst::Flw { .. }
+                | Inst::Fsw { .. }
+                | Inst::LwExt { .. }
+                | Inst::SwExt { .. }
+                | Inst::FlwExt { .. }
+                | Inst::FswExt { .. }
+                | Inst::LwPost { .. }
+                | Inst::SwPost { .. }
+                | Inst::FlwPost { .. }
+                | Inst::FswPost { .. }
+                | Inst::Amo { .. }
+        )
+    }
+
+    /// True for remote (64-bit host address space) accesses.
+    pub fn is_remote(&self) -> bool {
+        matches!(
+            self,
+            Inst::LwExt { .. } | Inst::SwExt { .. } | Inst::FlwExt { .. } | Inst::FswExt { .. }
+        )
+    }
+
+    /// True for Xpulpv2-only instructions.
+    pub fn is_xpulp(&self) -> bool {
+        matches!(
+            self,
+            Inst::LwPost { .. }
+                | Inst::SwPost { .. }
+                | Inst::FlwPost { .. }
+                | Inst::FswPost { .. }
+                | Inst::Mac { .. }
+                | Inst::Fmac { .. }
+                | Inst::HwLoop { .. }
+                | Inst::Alu { op: AluOp::Min | AluOp::Max, .. }
+        )
+    }
+}
+
+/// A device program: the decoded text segment of the device ELF that the
+/// offload runtime loads into accelerator instruction memory.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+    /// Entry point (instruction index).
+    pub entry: u32,
+    /// Optional label map for diagnostics (index → name).
+    pub labels: Vec<(u32, String)>,
+}
+
+impl Program {
+    pub fn new(insts: Vec<Inst>) -> Self {
+        Program { insts, entry: 0, labels: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Validate static well-formedness: branch/jump/hwloop targets in range,
+    /// hwloop bodies non-empty and properly nested, x0 never written.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.insts.len() as u32;
+        let check = |t: u32, what: &str, i: usize| {
+            if t >= n {
+                Err(format!("inst {i}: {what} target {t} out of range (len {n})"))
+            } else {
+                Ok(())
+            }
+        };
+        for (i, inst) in self.insts.iter().enumerate() {
+            match inst {
+                Inst::Branch { target, .. } | Inst::Jal { target, .. } | Inst::Fork { target } => {
+                    check(*target, "branch", i)?
+                }
+                Inst::HwLoop { start, end, l, .. } => {
+                    check(*start, "hwloop start", i)?;
+                    if *end > n {
+                        return Err(format!("inst {i}: hwloop end {end} out of range"));
+                    }
+                    if start >= end {
+                        return Err(format!("inst {i}: empty hwloop body [{start},{end})"));
+                    }
+                    if *l > 1 {
+                        return Err(format!("inst {i}: hwloop index {l} > 1"));
+                    }
+                }
+                Inst::Li { rd, .. } | Inst::AluImm { rd, .. } | Inst::Alu { rd, .. }
+                    if *rd == 0 =>
+                {
+                    return Err(format!("inst {i}: write to x0"));
+                }
+                _ => {}
+            }
+        }
+        if self.entry >= n && n > 0 {
+            return Err(format!("entry {} out of range", self.entry));
+        }
+        Ok(())
+    }
+
+    /// Count instructions matching a predicate (used by the Fig 9 analysis).
+    pub fn count<F: Fn(&Inst) -> bool>(&self, f: F) -> usize {
+        self.insts.iter().filter(|i| f(i)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_simple_program() {
+        let p = Program::new(vec![
+            Inst::Li { rd: 1, imm: 5 },
+            Inst::AluImm { op: AluOp::Add, rd: 1, rs1: 1, imm: -1 },
+            Inst::Branch { cond: Cond::Ne, rs1: 1, rs2: 0, target: 1 },
+            Inst::Halt,
+        ]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_branch() {
+        let p = Program::new(vec![Inst::Branch {
+            cond: Cond::Eq,
+            rs1: 0,
+            rs2: 0,
+            target: 10,
+        }]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_empty_hwloop() {
+        let p =
+            Program::new(vec![Inst::HwLoop { l: 0, count: 1, start: 1, end: 1 }, Inst::Halt]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_x0_write() {
+        let p = Program::new(vec![Inst::Li { rd: 0, imm: 1 }, Inst::Halt]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn xpulp_classification() {
+        assert!(Inst::Mac { rd: 1, rs1: 2, rs2: 3 }.is_xpulp());
+        assert!(Inst::LwPost { rd: 1, rs1: 2, imm: 4 }.is_xpulp());
+        assert!(!Inst::Lw { rd: 1, rs1: 2, offset: 0 }.is_xpulp());
+        assert!(Inst::LwExt { rd: 1, rs1: 2, offset: 0 }.is_remote());
+    }
+}

@@ -1,0 +1,43 @@
+//! # HEROv2 — Heterogeneous Research Platform, reproduced as a Rust + JAX + Pallas stack
+//!
+//! This crate reproduces the system described in *"HEROv2: Full-Stack
+//! Open-Source Research Platform for Heterogeneous Computing"* (Kurth,
+//! Forsberg, Benini; IEEE TC 2022) as a three-layer software platform:
+//!
+//! * **Layer 3 (this crate)** — the platform itself: a cycle-approximate
+//!   simulator of the HEROv2 hardware (RV32+Xpulpv2 clusters, banked TCDM
+//!   SPMs, DMA engine, hybrid IOMMU, configurable on-chip network, host
+//!   model), a mini heterogeneous compiler (AutoDMA tiling + DMA inference,
+//!   address-space legalization, Xpulpv2 codegen), an OpenMP-style offload
+//!   runtime and the HERO API.
+//! * **Layer 2 (`python/compile`, build-time)** — JAX kernel graphs for every
+//!   evaluated workload, AOT-lowered to HLO text.
+//! * **Layer 1 (`python/compile/kernels`, build-time)** — Pallas kernels whose
+//!   `BlockSpec` tiling mirrors the paper's SPM tiling.
+//!
+//! At run time the Rust binary is self-contained: `runtime::pjrt` loads the
+//! AOT artifacts via the PJRT C API and uses them as the golden functional
+//! model that the simulated accelerator is verified against. Python never
+//! runs on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod accel;
+pub mod bench_harness;
+pub mod cluster;
+pub mod compiler;
+pub mod config;
+pub mod dma;
+pub mod host;
+pub mod iommu;
+pub mod isa;
+pub mod mem;
+pub mod noc;
+pub mod runtime;
+pub mod testkit;
+pub mod trace;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,225 @@
+//! `hero` — the HEROv2 platform CLI.
+//!
+//! ```text
+//! hero info [--resources]             platform configurations (Table 1)
+//! hero run <kernel> [options]         compile + offload a workload
+//!     --variant unmodified|handwritten|promoted|autodma   (default handwritten)
+//!     --threads N                     OpenMP threads (default 8)
+//!     --size N                        problem size (default: paper size)
+//!     --config FILE                   platform config file (see config::parse)
+//!     --no-xpulp                      disable Xpulpv2 codegen
+//!     --verify-pjrt                   also check against the PJRT artifact
+//! hero disasm <kernel> [--variant V] [--size N]   dump device assembly
+//! hero autodma <kernel> [--size N]    show the AutoDMA transformation
+//! hero kernels                        list workloads (Table 2)
+//! ```
+
+use herov2::bench_harness::{self, figures, run_workload, verify, Variant};
+use herov2::compiler::{self, ir, AutoDmaOpts, LowerOpts};
+use herov2::config::{self, aurora, HeroConfig};
+use herov2::runtime::pjrt::PjrtRuntime;
+use herov2::workloads;
+use std::process::exit;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("info") => cmd_info(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("disasm") => cmd_disasm(&args[1..]),
+        Some("autodma") => cmd_autodma(&args[1..]),
+        Some("kernels") => {
+            print!("{}", figures::table2());
+            0
+        }
+        _ => {
+            eprintln!("usage: hero <info|run|disasm|autodma|kernels> [options]");
+            2
+        }
+    };
+    exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn load_cfg(args: &[String]) -> HeroConfig {
+    let mut cfg = match opt(args, "--config") {
+        Some(path) => config::parse::load(&path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            exit(2)
+        }),
+        None => aurora(),
+    };
+    if flag(args, "--no-xpulp") {
+        cfg.accel.isa.xpulp = false;
+    }
+    cfg
+}
+
+fn pick_workload(args: &[String]) -> workloads::Workload {
+    let name = args.first().cloned().unwrap_or_default();
+    let size = opt(args, "--size").and_then(|s| s.parse::<usize>().ok());
+    let build = |n: Option<usize>| -> Option<workloads::Workload> {
+        let w = workloads::by_name(&name)?;
+        Some(match n {
+            Some(n) => match name.as_str() {
+                "2mm" => workloads::mm2::build(n),
+                "3mm" => workloads::mm3::build(n),
+                "atax" => workloads::atax::build(n),
+                "bicg" => workloads::bicg::build(n),
+                "conv2d" => workloads::conv2d::build(n),
+                "covar" => workloads::covar::build(n),
+                "darknet" => workloads::darknet::build(n),
+                _ => workloads::gemm::build(n),
+            },
+            None => w,
+        })
+    };
+    build(size).unwrap_or_else(|| {
+        eprintln!("unknown kernel {name:?}; see `hero kernels`");
+        exit(2)
+    })
+}
+
+fn pick_variant(args: &[String]) -> Variant {
+    match opt(args, "--variant").as_deref() {
+        None | Some("handwritten") => Variant::Handwritten,
+        Some("unmodified") => Variant::Unmodified,
+        Some("promoted") => Variant::Promoted,
+        Some("autodma") => Variant::AutoDma,
+        Some(v) => {
+            eprintln!("unknown variant {v:?}");
+            exit(2)
+        }
+    }
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    print!("{}", figures::table1());
+    if flag(args, "--resources") {
+        use herov2::config::resources::{estimate, utilization, VU37P, ZU9EG};
+        for (cfg, carrier) in [
+            (aurora(), &ZU9EG),
+            (config::blizzard(), &ZU9EG),
+            (config::cyclone(), &VU37P),
+        ] {
+            let u = utilization(&cfg, carrier);
+            let e = estimate(&cfg, carrier);
+            println!(
+                "{:<10} on {:<14}: CLB {:>5.1}%  BRAM {:>5.1}%  DSP {:>4.1}%  ~{:.0} MHz  fits={}",
+                cfg.name,
+                carrier.name,
+                100.0 * u.clb,
+                100.0 * u.bram,
+                100.0 * u.dsp,
+                e.freq_mhz,
+                u.fits
+            );
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let w = pick_workload(args);
+    let cfg = load_cfg(args);
+    let variant = pick_variant(args);
+    let threads: u32 = opt(args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let seed = 42;
+    println!("running {} (N={}) {} with {threads} thread(s) on {}", w.name, w.size, variant.label(), cfg.name);
+    let out = match run_workload(&cfg, &w, variant, threads, seed, 100_000_000_000) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("offload failed: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = verify(&w, &out, seed) {
+        eprintln!("VERIFICATION FAILED: {e}");
+        return 1;
+    }
+    println!("device cycles : {:>12}", out.result.device_cycles);
+    println!("end-to-end    : {:>12} ({:.2} ms at {} MHz)", out.result.total_cycles,
+        out.result.total_cycles as f64 / (cfg.accel.freq_mhz as f64 * 1e3), cfg.accel.freq_mhz);
+    println!("dma cycles    : {:>12} ({:.2}%)", out.dma_cycles(),
+        100.0 * out.dma_cycles() as f64 / out.cycles() as f64);
+    println!("verified against the host golden model: OK");
+    if let Some(r) = &out.report {
+        println!("AutoDMA: tiles {:?}, remote {:?}", r.tile_sides, r.remote);
+    }
+    if flag(args, "--verify-pjrt") {
+        let mut rt = match PjrtRuntime::new(PjrtRuntime::default_dir()) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("PJRT unavailable: {e}");
+                return 1;
+            }
+        };
+        match bench_harness::verify_pjrt(&mut rt, &w, &out, seed) {
+            Ok(true) => println!("verified against the PJRT JAX/Pallas artifact: OK"),
+            Ok(false) => println!("PJRT artifact {} not built (run `make artifacts`)", w.pjrt.name),
+            Err(e) => {
+                eprintln!("PJRT VERIFICATION FAILED: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("\ndevice counters:\n{}", out.result.perf.report());
+    0
+}
+
+fn cmd_disasm(args: &[String]) -> i32 {
+    let w = pick_workload(args);
+    let cfg = load_cfg(args);
+    let variant = pick_variant(args);
+    let opts = LowerOpts::for_config(&cfg);
+    let kernel = match variant {
+        Variant::Unmodified | Variant::AutoDma => &w.unmodified,
+        Variant::Handwritten => &w.handwritten,
+        Variant::Promoted => w.promoted.as_ref().unwrap_or(&w.handwritten),
+    };
+    let autodma =
+        (variant == Variant::AutoDma).then(|| AutoDmaOpts::for_config(&cfg));
+    match compiler::compile(kernel, &opts, autodma.as_ref()) {
+        Ok((lowered, _)) => {
+            println!("{}", compiler::disasm(&lowered.program));
+            println!("; {} instructions, {} B of L1 statically allocated",
+                lowered.program.len(), lowered.l1_used);
+            0
+        }
+        Err(e) => {
+            eprintln!("compile error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_autodma(args: &[String]) -> i32 {
+    let w = pick_workload(args);
+    let cfg = load_cfg(args);
+    println!("=== unmodified OpenMP source ===\n{}", ir::pretty(&w.unmodified));
+    match herov2::compiler::autodma::transform(&w.unmodified, &AutoDmaOpts::for_config(&cfg)) {
+        Ok((tiled, report)) => {
+            println!("=== after AutoDMA ===\n{}", ir::pretty(&tiled));
+            println!("report: {report:#?}");
+            let u = herov2::compiler::metrics::complexity(&w.unmodified);
+            let h = herov2::compiler::metrics::complexity(&w.handwritten);
+            println!(
+                "handwritten equivalent would cost {}x LoC, {}x cyclomatic — AutoDMA: zero code changes",
+                h.loc as f64 / u.loc as f64,
+                h.cyclomatic as f64 / u.cyclomatic as f64
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("AutoDMA declined: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Memory subsystem: DRAM main memory, L2 SPM, per-cluster TCDM L1 SPMs,
+//! the device address map, and the deterministic O(1) heap allocator.
+//!
+//! HEROv2's accelerator memory hierarchy is *software-managed* (§2.1): no
+//! data caches — multi-banked L1 scratch-pads with single-cycle access,
+//! a shared L2 SPM, and shared off-chip DRAM reached through the on-chip
+//! network and (for virtual addresses) the hybrid IOMMU.
+//!
+//! Data storage and timing are separated: these types store bytes/words and
+//! expose geometry (bank mapping); cycle costs are applied by the cluster
+//! and NoC models that call into them.
+
+pub mod o1heap;
+
+pub use o1heap::O1Heap;
+
+/// Device (native, 32-bit) address map.
+///
+/// Mirrors PULP conventions: each cluster's TCDM is at a fixed offset, the
+/// L2 SPM is shared, and everything above `HOST_WINDOW` is only reachable
+/// through the 64-bit ext-address path.
+pub mod map {
+    /// Base address of cluster `i`'s TCDM.
+    pub const TCDM_BASE: u32 = 0x1000_0000;
+    /// Address stride between clusters.
+    pub const CLUSTER_STRIDE: u32 = 0x0040_0000;
+    /// Base address of the shared L2 SPM.
+    pub const L2_BASE: u32 = 0x1C00_0000;
+
+    /// Region a native 32-bit address falls into.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Region {
+        /// TCDM of cluster `.0`, at byte offset `.1`.
+        Tcdm(usize, u32),
+        /// L2 SPM at byte offset `.0`.
+        L2(u32),
+        /// Not mapped in the native address space.
+        Unmapped,
+    }
+
+    /// Decode a native address (given L1/L2 sizes in bytes).
+    pub fn decode(addr: u32, n_clusters: usize, l1_bytes: u32, l2_bytes: u32) -> Region {
+        if addr >= L2_BASE {
+            let off = addr - L2_BASE;
+            if off < l2_bytes {
+                return Region::L2(off);
+            }
+            return Region::Unmapped;
+        }
+        if addr >= TCDM_BASE {
+            let rel = addr - TCDM_BASE;
+            let cl = (rel / CLUSTER_STRIDE) as usize;
+            let off = rel % CLUSTER_STRIDE;
+            if cl < n_clusters && off < l1_bytes {
+                return Region::Tcdm(cl, off);
+            }
+        }
+        Region::Unmapped
+    }
+
+    /// TCDM base address of cluster `cl`.
+    pub fn tcdm_base(cl: usize) -> u32 {
+        TCDM_BASE + cl as u32 * CLUSTER_STRIDE
+    }
+}
+
+/// Word-addressed backing store shared by all SPM/DRAM models.
+#[derive(Debug, Clone)]
+pub struct WordMem {
+    words: Vec<u32>,
+}
+
+impl WordMem {
+    /// Create a zeroed memory of `bytes` (must be 4-aligned).
+    pub fn new(bytes: usize) -> Self {
+        assert_eq!(bytes % 4, 0, "memory size must be word-aligned");
+        WordMem { words: vec![0; bytes / 4] }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Load the 32-bit word at byte offset `off` (must be 4-aligned).
+    #[inline(always)]
+    pub fn load(&self, off: u32) -> u32 {
+        debug_assert_eq!(off % 4, 0, "unaligned load at {off:#x}");
+        self.words[(off / 4) as usize]
+    }
+
+    /// Store the 32-bit word at byte offset `off`.
+    #[inline(always)]
+    pub fn store(&mut self, off: u32, val: u32) {
+        debug_assert_eq!(off % 4, 0, "unaligned store at {off:#x}");
+        self.words[(off / 4) as usize] = val;
+    }
+
+    /// Bulk copy out of this memory (used by the DMA data path).
+    pub fn read_words(&self, off: u32, out: &mut [u32]) {
+        let base = (off / 4) as usize;
+        out.copy_from_slice(&self.words[base..base + out.len()]);
+    }
+
+    /// Bulk copy into this memory.
+    pub fn write_words(&mut self, off: u32, data: &[u32]) {
+        let base = (off / 4) as usize;
+        self.words[base..base + data.len()].copy_from_slice(data);
+    }
+
+    /// View as f32 (bit-cast) — convenience for tests and data staging.
+    pub fn load_f32(&self, off: u32) -> f32 {
+        f32::from_bits(self.load(off))
+    }
+
+    pub fn store_f32(&mut self, off: u32, v: f32) {
+        self.store(off, v.to_bits());
+    }
+}
+
+/// Per-cluster tightly-coupled data memory: multi-banked, word-interleaved.
+///
+/// §2.1: "the cores have single-cycle access to a multi-banked,
+/// tightly-coupled L1 data SPM. A default banking factor of two allows any
+/// core to access any bank in any cycle with a low probability of
+/// contention." Bank conflicts are arbitrated per cycle by the cluster
+/// model; this type provides storage and the address→bank mapping.
+#[derive(Debug, Clone)]
+pub struct Tcdm {
+    pub mem: WordMem,
+    n_banks: usize,
+}
+
+impl Tcdm {
+    pub fn new(bytes: usize, n_banks: usize) -> Self {
+        assert!(n_banks > 0);
+        Tcdm { mem: WordMem::new(bytes), n_banks }
+    }
+
+    /// Bank index of a byte offset (word-interleaved).
+    #[inline(always)]
+    pub fn bank_of(&self, off: u32) -> usize {
+        ((off / 4) as usize) % self.n_banks
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.n_banks
+    }
+
+    /// Change bank count (Fig 8: the 128-bit configuration changes the TCDM
+    /// interconnect from 14×16 to 18×32).
+    pub fn set_banks(&mut self, n: usize) {
+        assert!(n > 0);
+        self.n_banks = n;
+    }
+}
+
+/// Physical main memory (DDR4 on Aurora, HBM2E on Blizzard/Cyclone).
+/// Addressed by physical byte address starting at 0.
+#[derive(Debug)]
+pub struct Dram {
+    pub mem: WordMem,
+}
+
+impl Dram {
+    pub fn new(bytes: usize) -> Self {
+        Dram { mem: WordMem::new(bytes) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_map_decodes() {
+        use map::*;
+        let l1 = 128 * 1024;
+        let l2 = 1024 * 1024;
+        assert_eq!(decode(TCDM_BASE, 2, l1, l2), Region::Tcdm(0, 0));
+        assert_eq!(decode(TCDM_BASE + 0x40, 2, l1, l2), Region::Tcdm(0, 0x40));
+        assert_eq!(decode(tcdm_base(1) + 8, 2, l1, l2), Region::Tcdm(1, 8));
+        assert_eq!(decode(L2_BASE + 16, 2, l1, l2), Region::L2(16));
+        assert_eq!(decode(0x0000_0000, 2, l1, l2), Region::Unmapped);
+        assert_eq!(decode(TCDM_BASE + l1, 1, l1, l2), Region::Unmapped);
+        assert_eq!(decode(L2_BASE + l2, 2, l1, l2), Region::Unmapped);
+    }
+
+    #[test]
+    fn word_mem_roundtrip() {
+        let mut m = WordMem::new(64);
+        m.store(0, 0xdead_beef);
+        m.store_f32(4, 1.5);
+        assert_eq!(m.load(0), 0xdead_beef);
+        assert_eq!(m.load_f32(4), 1.5);
+    }
+
+    #[test]
+    fn bulk_copy_roundtrip() {
+        let mut m = WordMem::new(64);
+        m.write_words(8, &[1, 2, 3]);
+        let mut out = [0u32; 3];
+        m.read_words(8, &mut out);
+        assert_eq!(out, [1, 2, 3]);
+    }
+
+    #[test]
+    fn bank_interleaving() {
+        let t = Tcdm::new(1024, 16);
+        assert_eq!(t.bank_of(0), 0);
+        assert_eq!(t.bank_of(4), 1);
+        assert_eq!(t.bank_of(64), 0);
+        // Stride-4 words with 16 banks: consecutive words hit distinct banks.
+        let banks: Vec<usize> = (0..16).map(|i| t.bank_of(i * 4)).collect();
+        let uniq: std::collections::HashSet<_> = banks.iter().collect();
+        assert_eq!(uniq.len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oob_load_panics() {
+        let m = WordMem::new(16);
+        m.load(16);
+    }
+}

@@ -1,0 +1,346 @@
+//! Deterministic constant-complexity heap allocator.
+//!
+//! §2.4: "The implementation uses a deterministic constant-complexity memory
+//! allocator [o1heap, 32][33], ensures mutual exclusivity among all affected
+//! cores through RISC-V atomic operations, and can detect heap overflows
+//! with a canary mechanism. The alignment and minimum allocation granule is
+//! 8 B."
+//!
+//! This is a half-fit allocator in the style of o1heap: free blocks are kept
+//! in segregated lists by power-of-two size class; allocation rounds the
+//! request up to the next power of two, takes the head of the first
+//! non-empty list of sufficient class (O(1) via a bitmask), and splits the
+//! remainder back into the lists. Free coalesces with the physically
+//! adjacent blocks in O(1) via boundary metadata.
+//!
+//! The allocator manages *offsets into a simulated SPM region*; block
+//! headers live in allocator state (as the device-side headers would occupy
+//! SPM in hardware, the capacity accounting subtracts them), and the canary
+//! word is actually written to simulated memory so that heap overruns by
+//! simulated kernels are detected on `free`.
+
+/// Allocation granule and alignment (bytes).
+pub const GRANULE: u32 = 8;
+/// Canary value written after each live block.
+pub const CANARY: u32 = 0x5AFE_CAFE;
+/// Per-block bookkeeping overhead charged against capacity (header word +
+/// canary word, rounded to the granule).
+pub const BLOCK_OVERHEAD: u32 = 8;
+
+const NUM_CLASSES: usize = 27; // up to 2^26 = 64 MiB regions
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Block {
+    off: u32,
+    size: u32,
+    free: bool,
+    prev_phys: i32, // index into blocks, -1 = none
+    next_phys: i32,
+}
+
+/// Outcome of a `free` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FreeResult {
+    Ok,
+    /// The canary after the block was overwritten — heap overflow detected.
+    CanaryCorrupted,
+}
+
+/// A deterministic O(1) allocator over a `[base, base+capacity)` region of
+/// device memory.
+#[derive(Debug, Clone)]
+pub struct O1Heap {
+    #[allow(dead_code)]
+    base: u32,
+    capacity: u32,
+    free_heads: [i32; NUM_CLASSES],
+    nonempty_mask: u32,
+    blocks: Vec<Block>,
+    free_block_slots: Vec<i32>,
+    /// next free-list link per block (parallel to `blocks`).
+    next_free: Vec<i32>,
+    prev_free: Vec<i32>,
+    allocated_bytes: u32,
+}
+
+fn class_of(size: u32) -> usize {
+    // Smallest class c with 2^c >= size; granule floor.
+    let s = size.max(GRANULE);
+    (32 - (s - 1).leading_zeros()) as usize
+}
+
+impl O1Heap {
+    /// Create an allocator over `capacity` bytes starting at device offset
+    /// `base`. Both must be granule-aligned.
+    pub fn new(base: u32, capacity: u32) -> Self {
+        assert_eq!(base % GRANULE, 0);
+        assert_eq!(capacity % GRANULE, 0);
+        let mut h = O1Heap {
+            base,
+            capacity,
+            free_heads: [-1; NUM_CLASSES],
+            nonempty_mask: 0,
+            blocks: Vec::new(),
+            free_block_slots: Vec::new(),
+            next_free: Vec::new(),
+            prev_free: Vec::new(),
+            allocated_bytes: 0,
+        };
+        let b = h.new_block(Block { off: base, size: capacity, free: true, prev_phys: -1, next_phys: -1 });
+        h.push_free(b);
+        h
+    }
+
+    fn new_block(&mut self, b: Block) -> i32 {
+        if let Some(slot) = self.free_block_slots.pop() {
+            self.blocks[slot as usize] = b;
+            self.next_free[slot as usize] = -1;
+            self.prev_free[slot as usize] = -1;
+            slot
+        } else {
+            self.blocks.push(b);
+            self.next_free.push(-1);
+            self.prev_free.push(-1);
+            (self.blocks.len() - 1) as i32
+        }
+    }
+
+    fn free_class(&self, size: u32) -> usize {
+        // Largest class c with 2^c <= size (a free block of `size` can serve
+        // requests up to 2^c).
+        (31 - size.leading_zeros()) as usize
+    }
+
+    fn push_free(&mut self, idx: i32) {
+        let c = self.free_class(self.blocks[idx as usize].size);
+        let head = self.free_heads[c];
+        self.next_free[idx as usize] = head;
+        self.prev_free[idx as usize] = -1;
+        if head >= 0 {
+            self.prev_free[head as usize] = idx;
+        }
+        self.free_heads[c] = idx;
+        self.nonempty_mask |= 1 << c;
+        self.blocks[idx as usize].free = true;
+    }
+
+    fn unlink_free(&mut self, idx: i32) {
+        let c = self.free_class(self.blocks[idx as usize].size);
+        let (p, n) = (self.prev_free[idx as usize], self.next_free[idx as usize]);
+        if p >= 0 {
+            self.next_free[p as usize] = n;
+        } else {
+            self.free_heads[c] = n;
+            if n < 0 {
+                self.nonempty_mask &= !(1 << c);
+            }
+        }
+        if n >= 0 {
+            self.prev_free[n as usize] = p;
+        }
+        self.blocks[idx as usize].free = false;
+    }
+
+    /// Currently available heap memory in bytes (`hero_lN_capacity`): the
+    /// total free bytes minus per-block overhead that a subsequent
+    /// allocation would consume.
+    pub fn capacity_remaining(&self) -> u32 {
+        self.capacity - self.allocated_bytes
+    }
+
+    /// Total managed capacity.
+    pub fn capacity_total(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Allocate `size` bytes; returns the device address of the payload.
+    /// The canary is written to `mem_canary` (a callback storing a word into
+    /// simulated memory at a byte offset).
+    pub fn malloc(&mut self, size: u32, mut write_word: impl FnMut(u32, u32)) -> Option<u32> {
+        if size == 0 {
+            return None;
+        }
+        // Round payload to granule and add the canary slot.
+        let payload = (size + GRANULE - 1) / GRANULE * GRANULE;
+        let need = payload + BLOCK_OVERHEAD;
+        let c = class_of(need);
+        // O(1): find the lowest non-empty class >= c via the bitmask.
+        let mask = self.nonempty_mask >> c << c;
+        if mask == 0 {
+            return None;
+        }
+        let cls = mask.trailing_zeros() as usize;
+        let idx = self.free_heads[cls];
+        debug_assert!(idx >= 0);
+        self.unlink_free(idx);
+        let blk = self.blocks[idx as usize];
+        debug_assert!(blk.size >= need);
+        let rem = blk.size - need;
+        if rem >= GRANULE + BLOCK_OVERHEAD {
+            // Split: shrink this block, create the tail as free.
+            self.blocks[idx as usize].size = need;
+            let next_phys = blk.next_phys;
+            let tail = self.new_block(Block {
+                off: blk.off + need,
+                size: rem,
+                free: true,
+                prev_phys: idx,
+                next_phys,
+            });
+            if next_phys >= 0 {
+                self.blocks[next_phys as usize].prev_phys = tail;
+            }
+            self.blocks[idx as usize].next_phys = tail;
+            self.push_free(tail);
+        }
+        self.allocated_bytes += self.blocks[idx as usize].size;
+        let addr = blk.off + (BLOCK_OVERHEAD - 4); // header word precedes payload
+        // Canary directly after the payload.
+        write_word(addr + payload, CANARY);
+        Some(addr)
+    }
+
+    fn find_block(&self, payload_addr: u32) -> Option<i32> {
+        let off = payload_addr - (BLOCK_OVERHEAD - 4);
+        // O(1) in hardware via the header; linear scan here is fine for the
+        // model (allocation counts are small), but keep it correct.
+        (0..self.blocks.len() as i32).find(|&i| {
+            let b = self.blocks[i as usize];
+            !b.free && b.off == off && !self.is_slot_free(i)
+        })
+    }
+
+    fn is_slot_free(&self, idx: i32) -> bool {
+        self.free_block_slots.contains(&idx)
+    }
+
+    /// Free a previously allocated address, checking the canary via
+    /// `read_word`.
+    pub fn free(&mut self, addr: u32, mut read_word: impl FnMut(u32) -> u32) -> FreeResult {
+        let idx = self.find_block(addr).expect("free of unallocated address");
+        let blk = self.blocks[idx as usize];
+        let payload = blk.size - BLOCK_OVERHEAD;
+        let canary_ok = read_word(addr + payload) == CANARY;
+        self.allocated_bytes -= blk.size;
+        // Coalesce with physical neighbours (O(1)).
+        let mut cur = idx;
+        if blk.prev_phys >= 0 && self.blocks[blk.prev_phys as usize].free {
+            let p = blk.prev_phys;
+            self.unlink_free(p);
+            let cur_next = self.blocks[cur as usize].next_phys;
+            self.blocks[p as usize].size += self.blocks[cur as usize].size;
+            self.blocks[p as usize].next_phys = cur_next;
+            if cur_next >= 0 {
+                self.blocks[cur_next as usize].prev_phys = p;
+            }
+            self.free_block_slots.push(cur);
+            cur = p;
+        }
+        let nxt = self.blocks[cur as usize].next_phys;
+        if nxt >= 0 && self.blocks[nxt as usize].free {
+            self.unlink_free(nxt);
+            let nxt_next = self.blocks[nxt as usize].next_phys;
+            self.blocks[cur as usize].size += self.blocks[nxt as usize].size;
+            self.blocks[cur as usize].next_phys = nxt_next;
+            if nxt_next >= 0 {
+                self.blocks[nxt_next as usize].prev_phys = cur;
+            }
+            self.free_block_slots.push(nxt);
+        }
+        self.push_free(cur);
+        if canary_ok {
+            FreeResult::Ok
+        } else {
+            FreeResult::CanaryCorrupted
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn mem() -> HashMap<u32, u32> {
+        HashMap::new()
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut m = mem();
+        let mut h = O1Heap::new(0, 1024);
+        let a = h.malloc(100, |o, v| { m.insert(o, v); }).unwrap();
+        assert_eq!(a % 4, 0);
+        assert_eq!(h.free(a, |o| m[&o]), FreeResult::Ok);
+        assert_eq!(h.capacity_remaining(), 1024);
+    }
+
+    #[test]
+    fn canary_detects_overflow() {
+        let mut m = mem();
+        let mut h = O1Heap::new(0, 1024);
+        let a = h.malloc(16, |o, v| { m.insert(o, v); }).unwrap();
+        // Simulated kernel writes past the end of its 16-byte buffer.
+        m.insert(a + 16, 0x1234_5678);
+        assert_eq!(h.free(a, |o| m[&o]), FreeResult::CanaryCorrupted);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut m = mem();
+        let mut h = O1Heap::new(0, 256);
+        let mut got = Vec::new();
+        while let Some(a) = h.malloc(64, |o, v| { m.insert(o, v); }) {
+            got.push(a);
+        }
+        assert!(!got.is_empty());
+        assert!(h.malloc(64, |o, v| { m.insert(o, v); }).is_none());
+        // Free everything: capacity fully restored (coalescing works).
+        for a in got {
+            assert_eq!(h.free(a, |o| m[&o]), FreeResult::Ok);
+        }
+        assert_eq!(h.capacity_remaining(), 256);
+        // And a big block is allocatable again.
+        assert!(h.malloc(200, |o, v| { m.insert(o, v); }).is_some());
+    }
+
+    #[test]
+    fn no_overlap_among_live_blocks() {
+        let mut m = mem();
+        let mut h = O1Heap::new(4096, 4096);
+        let sizes = [8, 24, 100, 8, 512, 64, 17, 40];
+        let mut live: Vec<(u32, u32)> = Vec::new();
+        for (i, &s) in sizes.iter().enumerate() {
+            if let Some(a) = h.malloc(s, |o, v| { m.insert(o, v); }) {
+                assert!(a >= 4096 && a + s <= 8192, "block outside region");
+                for &(b, bs) in &live {
+                    assert!(a + s <= b || b + bs <= a, "overlap: ({a},{s}) vs ({b},{bs})");
+                }
+                live.push((a, s));
+            }
+            // Free every other allocation to exercise coalescing paths.
+            if i % 2 == 1 && !live.is_empty() {
+                let (a, _) = live.remove(0);
+                assert_eq!(h.free(a, |o| m[&o]), FreeResult::Ok);
+            }
+        }
+    }
+
+    #[test]
+    fn granule_alignment() {
+        let mut m = mem();
+        let mut h = O1Heap::new(0, 1024);
+        for s in [1, 7, 8, 9, 15] {
+            let a = h.malloc(s, |o, v| { m.insert(o, v); }).unwrap();
+            assert_eq!(a % 4, 0, "size {s} gave unaligned {a}");
+            h.free(a, |o| m[&o]);
+        }
+    }
+
+    #[test]
+    fn zero_size_rejected() {
+        let mut m = mem();
+        let mut h = O1Heap::new(0, 1024);
+        assert!(h.malloc(0, |o, v| { m.insert(o, v); }).is_none());
+    }
+}

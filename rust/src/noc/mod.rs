@@ -1,0 +1,172 @@
+//! On-chip network model.
+//!
+//! HEROv2's clusters are interconnected by two non-coherent AXI-style
+//! networks (§2.1): a *wide* one for high-bandwidth DMA bursts and a *narrow*
+//! one for low-latency single-word accesses by cores. Both are end-to-end
+//! open-source in the real platform and — critically for the §3.3 case study
+//! — the wide network's data width is configurable (32/64/128 bit).
+//!
+//! We model each network port as a serializing resource with burst-level
+//! timing: a burst of `n` beats occupies the data path for `n` cycles; burst
+//! issue overhead (address-channel handshake + DRAM access) is paid once per
+//! *transfer* for long merged bursts (the AR channel pipelines ahead of the
+//! data) but once per *burst* for scattered 2D row transfers, which is
+//! exactly why "2D transfer patterns do not fully saturate the given on-chip
+//! network" (§3.3, darknet/covar).
+
+/// A serializing port with cycle-stamped occupancy (wide DMA path, narrow
+/// remote-access path, icache refill port).
+#[derive(Debug, Clone, Default)]
+pub struct Port {
+    free_at: u64,
+    /// Total busy cycles, for utilization reporting.
+    pub busy_cycles: u64,
+}
+
+impl Port {
+    pub fn new() -> Self {
+        Port::default()
+    }
+
+    /// Occupy the port for `duration` cycles starting no earlier than `now`.
+    /// Returns (start, end): the request is serviced in `[start, end)`.
+    pub fn acquire(&mut self, now: u64, duration: u64) -> (u64, u64) {
+        let start = now.max(self.free_at);
+        let end = start + duration;
+        self.free_at = end;
+        self.busy_cycles += duration;
+        (start, end)
+    }
+
+    /// Next cycle at which the port is free.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0;
+        self.busy_cycles = 0;
+    }
+}
+
+/// Timing parameters of the wide (DMA) network path to main memory.
+#[derive(Debug, Clone, Copy)]
+pub struct WidePath {
+    /// Bytes per beat (= data width / 8).
+    pub beat_bytes: u64,
+    /// Per-burst issue overhead in cycles (AR/AW handshake, NoC traversal,
+    /// DRAM bank access). Hidden for all but the first burst of a merged
+    /// transfer; paid per row for scattered transfers.
+    pub burst_overhead: u64,
+    /// First-word latency to DRAM (paid once per transfer).
+    pub first_word: u64,
+    /// Maximum beats per burst (long transfers are chunked, but chunks of
+    /// one transfer pipeline back-to-back).
+    pub max_burst_beats: u64,
+}
+
+impl WidePath {
+    /// Beats needed for `bytes`.
+    pub fn beats(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.beat_bytes)
+    }
+
+    /// Data-path occupancy of a *merged* (contiguous) transfer of `bytes`:
+    /// one issue overhead + back-to-back beats.
+    pub fn merged_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.burst_overhead + self.first_word + self.beats(bytes)
+    }
+
+    /// Data-path occupancy of a scattered transfer: `rows` bursts of
+    /// `row_bytes` each. Every row pays the burst issue overhead — the DMA
+    /// engine must reconfigure the address per row (§3.2: "initiates a new
+    /// DMA burst for each row, which adds an overhead compared to the single
+    /// DMA burst in the handwritten code").
+    pub fn scattered_cycles(&self, rows: u64, row_bytes: u64) -> u64 {
+        if rows == 0 || row_bytes == 0 {
+            return 0;
+        }
+        self.first_word + rows * (self.burst_overhead + self.beats(row_bytes))
+    }
+}
+
+/// Timing parameters of the narrow (core remote access) path.
+#[derive(Debug, Clone, Copy)]
+pub struct NarrowPath {
+    /// End-to-end latency of a remote word load (NoC + IOMMU + DRAM),
+    /// excluding the ext-CSR overhead charged on the core side.
+    pub load_latency: u64,
+    /// Port occupancy per remote access (issue rate limit shared by the
+    /// cores of a cluster).
+    pub service: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wide64() -> WidePath {
+        WidePath { beat_bytes: 8, burst_overhead: 25, first_word: 100, max_burst_beats: 256 }
+    }
+
+    #[test]
+    fn port_serializes() {
+        let mut p = Port::new();
+        let (s1, e1) = p.acquire(0, 10);
+        let (s2, e2) = p.acquire(5, 10);
+        assert_eq!((s1, e1), (0, 10));
+        assert_eq!((s2, e2), (10, 20));
+        assert_eq!(p.busy_cycles, 20);
+    }
+
+    #[test]
+    fn port_idles_between_requests() {
+        let mut p = Port::new();
+        p.acquire(0, 4);
+        let (s, _) = p.acquire(100, 4);
+        assert_eq!(s, 100);
+    }
+
+    #[test]
+    fn merged_scales_with_width() {
+        // A 2 KiB merged transfer: doubling the width halves the beat count.
+        let w32 = WidePath { beat_bytes: 4, ..wide64() };
+        let w128 = WidePath { beat_bytes: 16, ..wide64() };
+        let beats64 = wide64().merged_cycles(2048) - 125;
+        let beats32 = w32.merged_cycles(2048) - 125;
+        let beats128 = w128.merged_cycles(2048) - 125;
+        assert_eq!(beats64, 256);
+        assert_eq!(beats32, 512);
+        assert_eq!(beats128, 128);
+    }
+
+    #[test]
+    fn scattered_pays_overhead_per_row() {
+        // 97-word rows (darknet tile): scattered vs merged ratios reproduce
+        // the §3.3 observation that 2D patterns undersaturate wide links.
+        let rows = 97u64;
+        let row_bytes = 97 * 4;
+        let w = wide64();
+        let w128 = WidePath { beat_bytes: 16, ..wide64() };
+        let w32 = WidePath { beat_bytes: 4, ..wide64() };
+        let c64 = w.scattered_cycles(rows, row_bytes) as f64;
+        let c128 = w128.scattered_cycles(rows, row_bytes) as f64;
+        let c32 = w32.scattered_cycles(rows, row_bytes) as f64;
+        let speedup128 = c64 / c128;
+        let slowdown32 = c64 / c32;
+        // Paper Fig 8 darknet DMA bars: 0.6× at 32 bit, 1.5× at 128 bit.
+        assert!((1.3..1.7).contains(&speedup128), "128-bit speedup {speedup128}");
+        assert!((0.55..0.7).contains(&slowdown32), "32-bit speedup {slowdown32}");
+    }
+
+    #[test]
+    fn beats_round_up() {
+        assert_eq!(wide64().beats(1), 1);
+        assert_eq!(wide64().beats(8), 1);
+        assert_eq!(wide64().beats(9), 2);
+        assert_eq!(wide64().beats(0), 0);
+    }
+}

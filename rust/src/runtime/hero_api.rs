@@ -1,0 +1,399 @@
+//! The HERO application programming interface (§2.4).
+//!
+//! Three families of functionality, unified over all accelerators:
+//! SPM **memory management** (`hero_lN_capacity` / `hero_lN_malloc` /
+//! `hero_lN_free` — a deterministic constant-complexity allocator with a
+//! canary), **data transfers** (`hero_memcpy_*`: direction × synchronicity ×
+//! dimensionality), and **performance measurement** (dynamically allocated
+//! hardware counters with pause/continue).
+//!
+//! This is the host-callable embodiment of the API for tests, examples and
+//! tooling; the device-side embodiment is what the compiler lowers `Dma`
+//! statements and perf controls to.
+
+use crate::accel::Accel;
+use crate::dma::Descriptor;
+use crate::isa::DmaDir;
+use crate::mem::{map, o1heap, O1Heap};
+use crate::trace::{Event, PerfCounters};
+use anyhow::{anyhow, bail, Result};
+
+/// SPM level selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmLevel {
+    /// Per-cluster TCDM.
+    L1(usize),
+    /// Shared L2 SPM.
+    L2,
+}
+
+/// A pending asynchronous transfer id (`hero_memcpy_*_async` return value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferId {
+    cluster: usize,
+    id: u32,
+}
+
+/// The HERO API bound to one accelerator instance.
+pub struct HeroApi {
+    l1: Vec<O1Heap>,
+    l2: O1Heap,
+}
+
+impl HeroApi {
+    /// Initialize heaps: the user portion of each cluster's TCDM (above the
+    /// runtime reserve) and the upper half of L2.
+    pub fn new(accel: &Accel) -> Self {
+        let l1_bytes = accel.cfg.accel.l1_bytes as u32;
+        let reserve = l1_bytes / 8;
+        let l1 = (0..accel.clusters.len())
+            .map(|cl| O1Heap::new(map::tcdm_base(cl) + reserve, l1_bytes - reserve))
+            .collect();
+        let l2_bytes = accel.cfg.accel.l2_bytes as u32;
+        let l2 = O1Heap::new(map::L2_BASE + l2_bytes / 2, l2_bytes / 2);
+        HeroApi { l1, l2 }
+    }
+
+    fn heap(&mut self, level: SpmLevel) -> &mut O1Heap {
+        match level {
+            SpmLevel::L1(cl) => &mut self.l1[cl],
+            SpmLevel::L2 => &mut self.l2,
+        }
+    }
+
+    /// `hero_lN_capacity`: currently available heap memory at this level.
+    pub fn capacity(&mut self, level: SpmLevel) -> u32 {
+        self.heap(level).capacity_remaining()
+    }
+
+    /// `hero_lN_malloc`: allocate `bytes`, returning a device address.
+    /// The canary is written into simulated SPM.
+    pub fn malloc(&mut self, accel: &mut Accel, level: SpmLevel, bytes: u32) -> Option<u32> {
+        let heap = match level {
+            SpmLevel::L1(cl) => &mut self.l1[cl],
+            SpmLevel::L2 => &mut self.l2,
+        };
+        heap.malloc(bytes, |addr, v| store_dev(accel, addr, v))
+    }
+
+    /// `hero_lN_free`: free and check the canary.
+    pub fn free(
+        &mut self,
+        accel: &mut Accel,
+        level: SpmLevel,
+        addr: u32,
+    ) -> o1heap::FreeResult {
+        let heap = match level {
+            SpmLevel::L1(cl) => &mut self.l1[cl],
+            SpmLevel::L2 => &mut self.l2,
+        };
+        heap.free(addr, |a| load_dev(accel, a))
+    }
+
+    /// `hero_memcpy_host2dev_async` (1D).
+    pub fn memcpy_host2dev_async(
+        &mut self,
+        accel: &mut Accel,
+        dev: u32,
+        host_va: u64,
+        bytes: u32,
+    ) -> Result<TransferId> {
+        self.start(accel, DmaDir::HostToDev, dev, host_va, bytes, 1, 0, 0, true)
+    }
+
+    /// `hero_memcpy_dev2host_async` (1D).
+    pub fn memcpy_dev2host_async(
+        &mut self,
+        accel: &mut Accel,
+        host_va: u64,
+        dev: u32,
+        bytes: u32,
+    ) -> Result<TransferId> {
+        self.start(accel, DmaDir::DevToHost, dev, host_va, bytes, 1, 0, 0, true)
+    }
+
+    /// `hero_memcpy2d_host2dev_async`: copy `rows` sequences of `bytes`,
+    /// applying strides after each (scatter/gather, §2.4).
+    #[allow(clippy::too_many_arguments)]
+    pub fn memcpy2d_host2dev_async(
+        &mut self,
+        accel: &mut Accel,
+        dev: u32,
+        host_va: u64,
+        bytes: u32,
+        rows: u32,
+        dev_stride: u32,
+        host_stride: u32,
+    ) -> Result<TransferId> {
+        self.start(accel, DmaDir::HostToDev, dev, host_va, bytes, rows, dev_stride, host_stride, false)
+    }
+
+    /// `hero_memcpy2d_dev2host_async`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn memcpy2d_dev2host_async(
+        &mut self,
+        accel: &mut Accel,
+        host_va: u64,
+        dev: u32,
+        bytes: u32,
+        rows: u32,
+        dev_stride: u32,
+        host_stride: u32,
+    ) -> Result<TransferId> {
+        self.start(accel, DmaDir::DevToHost, dev, host_va, bytes, rows, dev_stride, host_stride, false)
+    }
+
+    /// Blocking 1D host→device copy (no `_async` suffix): returns after all
+    /// data is transferred (the simulator clock advances past completion).
+    pub fn memcpy_host2dev(
+        &mut self,
+        accel: &mut Accel,
+        dev: u32,
+        host_va: u64,
+        bytes: u32,
+    ) -> Result<()> {
+        let id = self.memcpy_host2dev_async(accel, dev, host_va, bytes)?;
+        self.wait(accel, id)
+    }
+
+    /// Blocking 1D device→host copy.
+    pub fn memcpy_dev2host(
+        &mut self,
+        accel: &mut Accel,
+        host_va: u64,
+        dev: u32,
+        bytes: u32,
+    ) -> Result<()> {
+        let id = self.memcpy_dev2host_async(accel, host_va, dev, bytes)?;
+        self.wait(accel, id)
+    }
+
+    /// `hero_memcpy_wait`: advance simulated time to transfer completion.
+    pub fn wait(&mut self, accel: &mut Accel, id: TransferId) -> Result<()> {
+        let done = accel.clusters[id.cluster]
+            .dma
+            .completion(id.id)
+            .ok_or_else(|| anyhow!("unknown transfer id {:?}", id))?;
+        if done > accel.now {
+            accel.now = done;
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start(
+        &mut self,
+        accel: &mut Accel,
+        dir: DmaDir,
+        dev: u32,
+        host_va: u64,
+        bytes: u32,
+        rows: u32,
+        dev_stride: u32,
+        host_stride: u32,
+        merged: bool,
+    ) -> Result<TransferId> {
+        // Which cluster's engine? The one owning the device address (L2
+        // traffic uses cluster 0's engine in this model).
+        let cluster = match map::decode(
+            dev,
+            accel.clusters.len(),
+            accel.cfg.accel.l1_bytes as u32,
+            accel.cfg.accel.l2_bytes as u32,
+        ) {
+            map::Region::Tcdm(cl, _) => cl,
+            map::Region::L2(_) => 0,
+            map::Region::Unmapped => bail!("DMA to unmapped device address {dev:#010x}"),
+        };
+        let d = Descriptor {
+            dir,
+            dev_addr: dev,
+            host_va,
+            row_bytes: bytes,
+            rows,
+            dev_stride,
+            host_stride,
+            merged,
+        };
+        let id = accel.dma_submit_external(cluster, &d)?;
+        Ok(TransferId { cluster, id })
+    }
+}
+
+fn store_dev(accel: &mut Accel, addr: u32, v: u32) {
+    match map::decode(
+        addr,
+        accel.clusters.len(),
+        accel.cfg.accel.l1_bytes as u32,
+        accel.cfg.accel.l2_bytes as u32,
+    ) {
+        map::Region::Tcdm(cl, off) => accel.clusters[cl].tcdm.mem.store(off, v),
+        map::Region::L2(off) => accel.l2.store(off, v),
+        map::Region::Unmapped => panic!("store to unmapped device address {addr:#010x}"),
+    }
+}
+
+fn load_dev(accel: &Accel, addr: u32) -> u32 {
+    match map::decode(
+        addr,
+        accel.clusters.len(),
+        accel.cfg.accel.l1_bytes as u32,
+        accel.cfg.accel.l2_bytes as u32,
+    ) {
+        map::Region::Tcdm(cl, off) => accel.clusters[cl].tcdm.mem.load(off),
+        map::Region::L2(off) => accel.l2.load(off),
+        map::Region::Unmapped => panic!("load from unmapped device address {addr:#010x}"),
+    }
+}
+
+/// Performance-measurement API (§2.4): dynamically allocate a hardware
+/// counter for an event; pause/continue all with single-cycle overhead.
+pub struct PerfSession {
+    events: Vec<Event>,
+    base: PerfCounters,
+    max_counters: usize,
+}
+
+impl PerfSession {
+    pub fn new(accel: &Accel) -> Self {
+        PerfSession { events: Vec::new(), base: accel.perf_aggregate(), max_counters: 8 }
+    }
+
+    /// `hero_perf_alloc`: returns an error when the hardware counters are
+    /// exhausted (8 event counters per core on CV32E40P-style PMUs).
+    pub fn alloc(&mut self, ev: Event) -> Result<usize> {
+        if self.events.len() >= self.max_counters {
+            bail!("hardware performance counters exhausted");
+        }
+        self.events.push(ev);
+        Ok(self.events.len() - 1)
+    }
+
+    /// `hero_perf_continue_all`: (re)start counting from here.
+    pub fn continue_all(&mut self, accel: &mut Accel) {
+        self.base = accel.perf_aggregate();
+        for cl in &mut accel.clusters {
+            for c in &mut cl.cores {
+                c.perf.running = true;
+            }
+        }
+    }
+
+    /// `hero_perf_pause_all`.
+    pub fn pause_all(&self, accel: &mut Accel) {
+        for cl in &mut accel.clusters {
+            for c in &mut cl.cores {
+                c.perf.running = false;
+            }
+        }
+    }
+
+    /// Read an allocated counter (delta since the last `continue_all`).
+    pub fn read(&self, accel: &Accel, handle: usize) -> u64 {
+        let ev = self.events[handle];
+        accel.perf_aggregate().get(ev).saturating_sub(self.base.get(ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::host::HostContext;
+
+    fn setup() -> (Accel, HostContext, HeroApi) {
+        let mut accel = Accel::new(aurora(), 1 << 20);
+        let host = HostContext::new();
+        let api = HeroApi::new(&accel);
+        // The API drives DMA without an offload; activate cluster 0.
+        accel
+            .load_program(
+                std::sync::Arc::new(crate::isa::Program::new(vec![crate::isa::Inst::Halt])),
+                1,
+            )
+            .unwrap();
+        (accel, host, api)
+    }
+
+    #[test]
+    fn l1_malloc_free_capacity() {
+        let (mut accel, _, mut api) = setup();
+        let cap0 = api.capacity(SpmLevel::L1(0));
+        assert_eq!(cap0, 128 * 1024 - 128 * 1024 / 8); // 112 KiB user L1
+        let a = api.malloc(&mut accel, SpmLevel::L1(0), 1024).unwrap();
+        assert!(api.capacity(SpmLevel::L1(0)) < cap0);
+        assert_eq!(api.free(&mut accel, SpmLevel::L1(0), a), o1heap::FreeResult::Ok);
+        assert_eq!(api.capacity(SpmLevel::L1(0)), cap0);
+    }
+
+    #[test]
+    fn canary_detects_kernel_overflow() {
+        let (mut accel, _, mut api) = setup();
+        let a = api.malloc(&mut accel, SpmLevel::L1(0), 64).unwrap();
+        // A buggy "kernel" writes one word past the end.
+        store_dev(&mut accel, a + 64, 0xbad);
+        assert_eq!(
+            api.free(&mut accel, SpmLevel::L1(0), a),
+            o1heap::FreeResult::CanaryCorrupted
+        );
+    }
+
+    #[test]
+    fn l2_malloc_works() {
+        let (mut accel, _, mut api) = setup();
+        let a = api.malloc(&mut accel, SpmLevel::L2, 4096).unwrap();
+        assert!(a >= map::L2_BASE);
+        assert_eq!(api.free(&mut accel, SpmLevel::L2, a), o1heap::FreeResult::Ok);
+    }
+
+    #[test]
+    fn memcpy_roundtrip_1d() {
+        let (mut accel, mut host, mut api) = setup();
+        let buf = host.alloc(&mut accel, 64).unwrap();
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        host.write_f32(&mut accel, &buf, &data);
+        let dev = api.malloc(&mut accel, SpmLevel::L1(0), 256).unwrap();
+        api.memcpy_host2dev(&mut accel, dev, buf.va, 256).unwrap();
+        // Scale on "device" then copy back.
+        for i in 0..64 {
+            let v = load_dev(&accel, dev + i * 4);
+            store_dev(&mut accel, dev + i * 4, (f32::from_bits(v) * 2.0).to_bits());
+        }
+        let out = host.alloc(&mut accel, 64).unwrap();
+        api.memcpy_dev2host(&mut accel, out.va, dev, 256).unwrap();
+        let got = host.read_f32(&accel, &out);
+        for i in 0..64 {
+            assert_eq!(got[i], 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn memcpy2d_gathers() {
+        let (mut accel, mut host, mut api) = setup();
+        let buf = host.alloc(&mut accel, 64).unwrap(); // 8x8 matrix
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        host.write_f32(&mut accel, &buf, &data);
+        let dev = api.malloc(&mut accel, SpmLevel::L1(0), 64).unwrap();
+        // Gather a 4x4 tile at (2,3): 4 rows of 16 B, host stride 32 B.
+        let id = api
+            .memcpy2d_host2dev_async(&mut accel, dev, buf.va + (2 * 8 + 3) * 4, 16, 4, 16, 32)
+            .unwrap();
+        api.wait(&mut accel, id).unwrap();
+        for r in 0..4u32 {
+            for c in 0..4u32 {
+                let v = f32::from_bits(load_dev(&accel, dev + (r * 4 + c) * 4));
+                assert_eq!(v, ((r + 2) * 8 + c + 3) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn perf_session_counts_and_exhausts() {
+        let (accel, _, _) = setup();
+        let mut sess = PerfSession::new(&accel);
+        for _ in 0..8 {
+            sess.alloc(Event::Cycles).unwrap();
+        }
+        assert!(sess.alloc(Event::Instructions).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Runtime libraries (§2.3, §2.4): OpenMP-style offloading, the HERO API,
+//! and the PJRT bridge to the AOT-compiled JAX/Pallas artifacts.
+
+pub mod hero_api;
+pub mod omp;
+pub mod pjrt;
+
+pub use omp::{offload, OffloadResult};

@@ -1,0 +1,143 @@
+//! OpenMP offloading runtime (§2.3).
+//!
+//! "A heterogeneous application starts executing on the host. When the host
+//! encounters a `#pragma omp target` directive, it offloads the code within
+//! the target region to the specified accelerator. ... The plugin passes a
+//! pointer to the offloaded code and data to a hardware mailbox in the
+//! device, thereby starting execution on the device."
+//!
+//! With unified virtual memory enabled (the default), pointers are passed
+//! unmodified and no data is copied — offloading does *not* copy data into
+//! the SPMs (§2.3 gives the two reasons: coarse-grained offload model, and
+//! `map` clauses cannot express tiling).
+
+use crate::accel::Accel;
+use crate::compiler::Lowered;
+use crate::host::HostBuf;
+use crate::trace::{Event, PerfCounters};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Result of one offload.
+#[derive(Debug, Clone)]
+pub struct OffloadResult {
+    /// Device cycles from offload-manager wakeup to completion.
+    pub device_cycles: u64,
+    /// End-to-end cycles as the host observes them (device + mailbox +
+    /// driver overheads) — what the paper's timestamps measure (§3).
+    pub total_cycles: u64,
+    /// Aggregated device performance counters for this offload.
+    pub perf: PerfCounters,
+}
+
+impl OffloadResult {
+    /// Cycles attributable to DMA (core-visible wait + descriptor setup),
+    /// as plotted on the right-hand scales of Figs 4/5 and in Fig 8.
+    pub fn dma_cycles(&self) -> u64 {
+        self.perf.get(Event::DmaWaitCycles)
+            + self.perf.get(Event::DmaTransfers) * 30 // setup stalls
+    }
+}
+
+/// Execute one `target` region: marshal `map`-clause pointers, ring the
+/// mailbox, run the device until the offload manager reports completion.
+///
+/// `bufs` must match `lowered.arrays` order; `fargs` matches
+/// `lowered.floats`. `n_teams` clusters participate (OpenMP `num_teams`).
+pub fn offload(
+    accel: &mut Accel,
+    lowered: &Lowered,
+    bufs: &[&HostBuf],
+    fargs: &[f32],
+    n_teams: usize,
+    max_cycles: u64,
+) -> Result<OffloadResult> {
+    if bufs.len() != lowered.arrays.len() {
+        bail!("expected {} buffers, got {}", lowered.arrays.len(), bufs.len());
+    }
+    if fargs.len() != lowered.floats.len() {
+        bail!("expected {} float args, got {}", lowered.floats.len(), fargs.len());
+    }
+    // All map-clause pointers must share the 4 GiB window (one ext-CSR
+    // write per kernel — §2.2.1).
+    let hi = bufs.first().map(|b| b.hi()).unwrap_or((crate::host::VA_BASE >> 32) as u32);
+    for b in bufs {
+        if b.hi() != hi {
+            bail!("map-clause buffers span multiple 4 GiB windows");
+        }
+    }
+    // Driver: load the device ELF (decoded program) + flush the IOMMU TLB
+    // for the new process context.
+    accel.load_program(Arc::new(lowered.program.clone()), n_teams)?;
+    accel.iommu.flush();
+    // Marshal arguments: x10 = VA[63:32], x11.. = VA[31:0] per array.
+    let mut args: Vec<u32> = vec![hi];
+    args.extend(bufs.iter().map(|b| b.lo()));
+    accel.set_args(&args, fargs)?;
+    // Snapshot counters so the result reports only this offload.
+    let before = accel.perf_aggregate();
+    let device_cycles = accel.run(max_cycles)?;
+    let mut perf = accel.perf_aggregate();
+    perf.sub(&before);
+    let overhead = crate::host::Mailbox::round_trip_cycles(&accel.cfg);
+    Ok(OffloadResult { device_cycles, total_cycles: device_cycles + overhead, perf })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, ir::*, LowerOpts};
+    use crate::config::aurora;
+    use crate::host::HostContext;
+
+    /// y[i] = a*x[i] + y[i], untiled (all accesses remote).
+    fn saxpy(n: i32) -> Kernel {
+        let mut b = KernelBuilder::new("saxpy");
+        let x = b.host_array("X", vec![ci(n)]);
+        let y = b.host_array("Y", vec![ci(n)]);
+        let _n = b.const_param("N", n);
+        let a = b.float_param("a");
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            ci(n),
+            vec![st(
+                y,
+                vec![var(i)],
+                var(a).mul(ld(x, vec![var(i)])).add(ld(y, vec![var(i)])),
+            )],
+        )])
+    }
+
+    #[test]
+    fn saxpy_offload_end_to_end() {
+        let cfg = aurora();
+        let (lowered, _) = compile(&saxpy(256), &LowerOpts::for_config(&cfg), None).unwrap();
+        let mut accel = Accel::new(cfg, 1 << 20);
+        let mut host = HostContext::new();
+        let xb = host.alloc(&mut accel, 256).unwrap();
+        let yb = host.alloc(&mut accel, 256).unwrap();
+        let xs: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let ys: Vec<f32> = (0..256).map(|i| 2.0 * i as f32).collect();
+        host.write_f32(&mut accel, &xb, &xs);
+        host.write_f32(&mut accel, &yb, &ys);
+        let res = offload(&mut accel, &lowered, &[&xb, &yb], &[3.0], 1, 10_000_000).unwrap();
+        let got = host.read_f32(&accel, &yb);
+        for i in 0..256 {
+            assert_eq!(got[i], 3.0 * i as f32 + 2.0 * i as f32, "y[{i}]");
+        }
+        assert!(res.total_cycles > res.device_cycles);
+        assert!(res.perf.get(Event::RemoteAccess) >= 512, "saxpy is remote");
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let cfg = aurora();
+        let (lowered, _) = compile(&saxpy(16), &LowerOpts::for_config(&cfg), None).unwrap();
+        let mut accel = Accel::new(cfg, 1 << 20);
+        let mut host = HostContext::new();
+        let xb = host.alloc(&mut accel, 16).unwrap();
+        assert!(offload(&mut accel, &lowered, &[&xb], &[1.0], 1, 1_000_000).is_err());
+    }
+}

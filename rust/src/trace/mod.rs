@@ -1,0 +1,240 @@
+//! Performance monitoring: hardware event counters and cycle accounting.
+//!
+//! Models the paper's §2.4 performance-measurement API substrate: a set of
+//! hardware events, a small number of physical counters to which events are
+//! assigned dynamically (`hero_perf_alloc`), and pause/continue controls with
+//! single-cycle overhead. The simulator additionally keeps *all* events in a
+//! [`PerfCounters`] block per core/cluster, which the figure-regeneration
+//! benches read directly.
+
+/// Hardware events observable on the accelerator (§2.4: "from monotonic
+/// clock cycles over memory accesses and stalls to memory and interconnect
+/// contention and utilization metrics").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Event {
+    /// Monotonic clock cycles while the counter is running.
+    Cycles,
+    /// Retired instructions.
+    Instructions,
+    /// TCDM (L1 SPM) accesses.
+    TcdmAccess,
+    /// TCDM bank-conflict stall cycles.
+    TcdmConflict,
+    /// L2 SPM accesses.
+    L2Access,
+    /// Remote (host address space) accesses from a core.
+    RemoteAccess,
+    /// Load/store stall cycles (memory latency).
+    LoadStall,
+    /// Instruction-fetch stall cycles (icache miss/refill).
+    IFetchStall,
+    /// Shared-icache misses.
+    IcacheMiss,
+    /// L0 loop-buffer hits.
+    L0Hit,
+    /// Taken branches.
+    BranchTaken,
+    /// Hardware-loop back-edges (zero-cycle).
+    HwLoop,
+    /// IOMMU TLB hits.
+    TlbHit,
+    /// IOMMU TLB misses.
+    TlbMiss,
+    /// Cycles a core spent waiting on DMA completion (`hero_memcpy_wait`
+    /// and blocking transfers).
+    DmaWaitCycles,
+    /// Cycles the DMA engine was busy moving data.
+    DmaBusyCycles,
+    /// Bytes moved by the DMA engine.
+    DmaBytes,
+    /// DMA transfer descriptors programmed.
+    DmaTransfers,
+    /// Individual bursts issued by the DMA engine (a 2D transfer issues one
+    /// per row unless rows are merged).
+    DmaBursts,
+    /// Barrier synchronizations.
+    Barrier,
+    /// Cycles stalled at barriers.
+    BarrierStall,
+}
+
+/// Number of distinct events.
+pub const N_EVENTS: usize = Event::BarrierStall as usize + 1;
+
+/// All events, for iteration.
+pub const ALL_EVENTS: [Event; N_EVENTS] = [
+    Event::Cycles,
+    Event::Instructions,
+    Event::TcdmAccess,
+    Event::TcdmConflict,
+    Event::L2Access,
+    Event::RemoteAccess,
+    Event::LoadStall,
+    Event::IFetchStall,
+    Event::IcacheMiss,
+    Event::L0Hit,
+    Event::BranchTaken,
+    Event::HwLoop,
+    Event::TlbHit,
+    Event::TlbMiss,
+    Event::DmaWaitCycles,
+    Event::DmaBusyCycles,
+    Event::DmaBytes,
+    Event::DmaTransfers,
+    Event::DmaBursts,
+    Event::Barrier,
+    Event::BarrierStall,
+];
+
+impl Event {
+    /// Short mnemonic, as printed by `hero info --events`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::Cycles => "cycles",
+            Event::Instructions => "instr",
+            Event::TcdmAccess => "tcdm_access",
+            Event::TcdmConflict => "tcdm_conflict",
+            Event::L2Access => "l2_access",
+            Event::RemoteAccess => "remote_access",
+            Event::LoadStall => "load_stall",
+            Event::IFetchStall => "ifetch_stall",
+            Event::IcacheMiss => "icache_miss",
+            Event::L0Hit => "l0_hit",
+            Event::BranchTaken => "branch_taken",
+            Event::HwLoop => "hwloop",
+            Event::TlbHit => "tlb_hit",
+            Event::TlbMiss => "tlb_miss",
+            Event::DmaWaitCycles => "dma_wait_cycles",
+            Event::DmaBusyCycles => "dma_busy_cycles",
+            Event::DmaBytes => "dma_bytes",
+            Event::DmaTransfers => "dma_transfers",
+            Event::DmaBursts => "dma_bursts",
+            Event::Barrier => "barrier",
+            Event::BarrierStall => "barrier_stall",
+        }
+    }
+}
+
+/// A block of event counters (one per core in the simulator; aggregated
+/// views are produced by [`PerfCounters::merge`]).
+#[derive(Debug, Clone)]
+pub struct PerfCounters {
+    counts: [u64; N_EVENTS],
+    /// Whether counting is active (hero_perf_pause_all / continue_all).
+    pub running: bool,
+}
+
+impl Default for PerfCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PerfCounters {
+    pub fn new() -> Self {
+        PerfCounters { counts: [0; N_EVENTS], running: true }
+    }
+
+    /// Add `n` to an event counter (no-op while paused).
+    #[inline(always)]
+    pub fn add(&mut self, ev: Event, n: u64) {
+        if self.running {
+            self.counts[ev as usize] += n;
+        }
+    }
+
+    /// Increment an event counter by one (no-op while paused).
+    #[inline(always)]
+    pub fn bump(&mut self, ev: Event) {
+        self.add(ev, 1);
+    }
+
+    /// Read a counter.
+    #[inline]
+    pub fn get(&self, ev: Event) -> u64 {
+        self.counts[ev as usize]
+    }
+
+    /// Reset all counters.
+    pub fn reset(&mut self) {
+        self.counts = [0; N_EVENTS];
+    }
+
+    /// Merge another counter block into this one (sums all events).
+    pub fn merge(&mut self, other: &PerfCounters) {
+        for i in 0..N_EVENTS {
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// Subtract a snapshot (for per-offload deltas).
+    pub fn sub(&mut self, other: &PerfCounters) {
+        for i in 0..N_EVENTS {
+            self.counts[i] = self.counts[i].saturating_sub(other.counts[i]);
+        }
+    }
+
+    /// Render a compact multi-line report of all non-zero counters.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for ev in ALL_EVENTS {
+            let v = self.get(ev);
+            if v != 0 {
+                out.push_str(&format!("{:>16}: {v}\n", ev.name()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_and_get() {
+        let mut c = PerfCounters::new();
+        c.bump(Event::Cycles);
+        c.add(Event::DmaBytes, 128);
+        assert_eq!(c.get(Event::Cycles), 1);
+        assert_eq!(c.get(Event::DmaBytes), 128);
+        assert_eq!(c.get(Event::TlbMiss), 0);
+    }
+
+    #[test]
+    fn pause_stops_counting() {
+        let mut c = PerfCounters::new();
+        c.running = false;
+        c.bump(Event::Cycles);
+        assert_eq!(c.get(Event::Cycles), 0);
+        c.running = true;
+        c.bump(Event::Cycles);
+        assert_eq!(c.get(Event::Cycles), 1);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PerfCounters::new();
+        let mut b = PerfCounters::new();
+        a.add(Event::Instructions, 10);
+        b.add(Event::Instructions, 5);
+        a.merge(&b);
+        assert_eq!(a.get(Event::Instructions), 15);
+    }
+
+    #[test]
+    fn event_names_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for ev in ALL_EVENTS {
+            assert!(seen.insert(ev.name()), "duplicate name {}", ev.name());
+        }
+    }
+
+    #[test]
+    fn all_events_indices_match() {
+        for (i, ev) in ALL_EVENTS.iter().enumerate() {
+            assert_eq!(*ev as usize, i);
+        }
+    }
+}

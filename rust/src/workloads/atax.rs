@@ -1,0 +1,311 @@
+//! atax: `B = A·x → Y_i = Σ_j A_{j,i} B_j` (Table 2) — the second phase
+//! walks A **column-wise**, which is the paper's showcase for both the
+//! post-increment limitation (§3.4: "the increment of one of the two loads
+//! is too large") and AutoDMA's word-wise degradation (§3.2).
+
+use super::*;
+use crate::compiler::ir::*;
+
+fn unmodified(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("atax");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let x = b.host_array("X", vec![ci(n)]);
+    let bv = b.host_array("B", vec![ci(n)]);
+    let y = b.host_array("Y", vec![ci(n)]);
+    let _n = b.const_param("N", n);
+    let (i1, j1) = (b.loop_var("i"), b.loop_var("j"));
+    let (i2, j2) = (b.loop_var("i2"), b.loop_var("j2"));
+    b.body(vec![
+        // Phase 1: B_i = Σ_j A[i][j] * X[j]  (row-wise).
+        Stmt::For {
+            var: i1,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![
+                st(bv, vec![var(i1)], cf(0.0)),
+                for_(
+                    j1,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        bv,
+                        vec![var(i1)],
+                        ld(bv, vec![var(i1)])
+                            .add(ld(a, vec![var(i1), var(j1)]).mul(ld(x, vec![var(j1)]))),
+                    )],
+                ),
+            ],
+        },
+        // Phase 2: Y_i = Σ_j A[j][i] * B[j]  (column-wise!).
+        Stmt::For {
+            var: i2,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![
+                st(y, vec![var(i2)], cf(0.0)),
+                for_(
+                    j2,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        y,
+                        vec![var(i2)],
+                        ld(y, vec![var(i2)])
+                            .add(ld(a, vec![var(j2), var(i2)]).mul(ld(bv, vec![var(j2)]))),
+                    )],
+                ),
+            ],
+        },
+    ])
+}
+
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    // Phase 1: row strips (X resident). Phase 2: column tiles gathered
+    // with a single 2D DMA descriptor per tile — "the DMA engine's
+    // capability for gather-scatter transfers and many outstanding requests
+    // offers a speed-up of more than 4x even with low spatial locality"
+    // (§3.1).
+    let r1 = ((l1_words as i32 - n) / n).clamp(1, n).min(48); // phase-1 strip rows
+    let t2 = ((l1_words as i32 - 2 * n) / n).clamp(1, n).min(48); // phase-2 column-tile width
+    let n_strips = (n + r1 - 1) / r1;
+    let n_tiles = (n + t2 - 1) / t2;
+    let mut b = KernelBuilder::new(if promoted { "atax_promoted" } else { "atax_hand" });
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let x = b.host_array("X", vec![ci(n)]);
+    let bv = b.host_array("B", vec![ci(n)]);
+    let y = b.host_array("Y", vec![ci(n)]);
+    let _n = b.const_param("N", n);
+    // Phase 1 locals.
+    let lx = b.local_buf("lX", vec![ci(n)]);
+    let la = b.local_buf("lA", vec![ci(r1), ci(n)]);
+    let lb = b.local_buf("lB", vec![ci(r1)]);
+    let is = b.loop_var("is");
+    let rows = b.let_i32("rows");
+    let (ip, j) = (b.loop_var("ip"), b.loop_var("j"));
+    let acc = b.let_f32("acc");
+    // Phase 2 locals.
+    let lat = b.local_buf("lAT", vec![ci(n), ci(t2)]);
+    let lbf = b.local_buf("lBf", vec![ci(n)]);
+    let ly = b.local_buf("lY", vec![ci(t2)]);
+    let it = b.loop_var("it");
+    let cols = b.let_i32("cols");
+    let (cp, j2) = (b.loop_var("cp"), b.loop_var("j2"));
+    let acc2 = b.let_f32("acc2");
+
+    let p1_inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc, value: cf(0.0) },
+            for_(
+                j,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(ld(la, vec![var(ip), var(j)]).mul(ld(lx, vec![var(j)]))),
+                }],
+            ),
+            st(lb, vec![var(ip)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(lb, vec![var(ip)], cf(0.0)),
+            for_(
+                j,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lb,
+                    vec![var(ip)],
+                    ld(lb, vec![var(ip)])
+                        .add(ld(la, vec![var(ip), var(j)]).mul(ld(lx, vec![var(j)]))),
+                )],
+            ),
+        ]
+    };
+    let p2_inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc2, value: cf(0.0) },
+            for_(
+                j2,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc2,
+                    value: var(acc2)
+                        .add(ld(lat, vec![var(j2), var(cp)]).mul(ld(lbf, vec![var(j2)]))),
+                }],
+            ),
+            st(ly, vec![var(cp)], var(acc2)),
+        ]
+    } else {
+        vec![
+            st(ly, vec![var(cp)], cf(0.0)),
+            for_(
+                j2,
+                ci(0),
+                ci(n),
+                vec![st(
+                    ly,
+                    vec![var(cp)],
+                    ld(ly, vec![var(cp)])
+                        .add(ld(lat, vec![var(j2), var(cp)]).mul(ld(lbf, vec![var(j2)]))),
+                )],
+            ),
+        ]
+    };
+
+    b.body(vec![
+        // ---- phase 1: B = A x ----
+        Stmt::LocalAlloc { var: lx, elems: ci(n) },
+        Stmt::LocalAlloc { var: la, elems: ci(r1 * n) },
+        Stmt::LocalAlloc { var: lb, elems: ci(r1) },
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: x,
+            host_off: ci(0),
+            local: lx,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r1).min(ci(n).sub(var(is).mul(ci(r1)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: a,
+                    host_off: var(is).mul(ci(r1 * n)),
+                    local: la,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For {
+                    var: ip,
+                    lo: ci(0),
+                    hi: var(rows),
+                    par: Par::Cores,
+                    body: p1_inner,
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: bv,
+                    host_off: var(is).mul(ci(r1)),
+                    local: lb,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+        // ---- phase 2: Y_i = Σ_j A[j][i] B[j] over column tiles ----
+        Stmt::LocalFreeAll,
+        Stmt::LocalAlloc { var: lat, elems: ci(n * t2) },
+        Stmt::LocalAlloc { var: lbf, elems: ci(n) },
+        Stmt::LocalAlloc { var: ly, elems: ci(t2) },
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: bv,
+            host_off: ci(0),
+            local: lbf,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        for_(
+            it,
+            ci(0),
+            ci(n_tiles),
+            vec![
+                Stmt::Let { var: cols, value: ci(t2).min(ci(n).sub(var(it).mul(ci(t2)))) },
+                // One 2D descriptor gathers N rows of the column tile.
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Hw2D,
+                    host: a,
+                    host_off: var(it).mul(ci(t2)),
+                    local: lat,
+                    local_off: ci(0),
+                    rows: ci(n),
+                    row_elems: var(cols),
+                    host_stride: ci(n),
+                    local_stride: ci(t2),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For { var: cp, lo: ci(0), hi: var(cols), par: Par::Cores, body: p2_inner },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: y,
+                    host_off: var(it).mul(ci(t2)),
+                    local: ly,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(cols),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+    ])
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let a = data[0].clone();
+    let x = data[1].clone();
+    for i in 0..n {
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += a[i * n + j] * x[j];
+        }
+        data[2][i] = acc;
+    }
+    let bv = data[2].clone();
+    for i in 0..n {
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += a[j * n + i] * bv[j];
+        }
+        data[3][i] = acc;
+    }
+}
+
+pub fn build(n: usize) -> Workload {
+    Workload {
+        name: "atax",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "X", elems: n, role: Role::In, shape: vec![n] },
+            ArraySpec { name: "B", elems: n, role: Role::Out, shape: vec![n] },
+            ArraySpec { name: "Y", elems: n, role: Role::Out, shape: vec![n] },
+        ],
+        fargs: vec![],
+        unmodified: unmodified(n as i32),
+        handwritten: handwritten(n as i32, 28 * 1024, false),
+        promoted: Some(handwritten(n as i32, 28 * 1024, true)),
+        golden,
+        pjrt: PjrtSpec { name: format!("atax_{n}"), inputs: vec![0, 1], outputs: vec![2, 3] },
+    }
+}

@@ -1,0 +1,283 @@
+//! bicg: `Q_i = Σ_j A_{i,j} P_j → S_j = Σ_i R_i A_{i,j}` (Table 2) — two
+//! consecutive offloads; the second reduces down the columns of A, so its
+//! race-free OpenMP form parallelizes over `j` with `i` innermost.
+
+use super::*;
+use crate::compiler::ir::*;
+
+fn unmodified(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("bicg");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let p = b.host_array("P", vec![ci(n)]);
+    let r = b.host_array("R", vec![ci(n)]);
+    let q = b.host_array("Q", vec![ci(n)]);
+    let s = b.host_array("S", vec![ci(n)]);
+    let _n = b.const_param("N", n);
+    let (i1, j1) = (b.loop_var("i"), b.loop_var("j"));
+    let (j2, i2) = (b.loop_var("j2"), b.loop_var("i2"));
+    b.body(vec![
+        // Q_i = Σ_j A[i][j] P[j]  (row-wise).
+        Stmt::For {
+            var: i1,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![
+                st(q, vec![var(i1)], cf(0.0)),
+                for_(
+                    j1,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        q,
+                        vec![var(i1)],
+                        ld(q, vec![var(i1)])
+                            .add(ld(a, vec![var(i1), var(j1)]).mul(ld(p, vec![var(j1)]))),
+                    )],
+                ),
+            ],
+        },
+        // S_j = Σ_i R[i] A[i][j]  (column-wise inner loop).
+        Stmt::For {
+            var: j2,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![
+                st(s, vec![var(j2)], cf(0.0)),
+                for_(
+                    i2,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        s,
+                        vec![var(j2)],
+                        ld(s, vec![var(j2)])
+                            .add(ld(r, vec![var(i2)]).mul(ld(a, vec![var(i2), var(j2)]))),
+                    )],
+                ),
+            ],
+        },
+    ])
+}
+
+/// Handwritten: phase 1 = row strips (like atax); phase 2 = row strips too,
+/// but with the *strip-local* reduction order (the handwritten programmer
+/// knows S can be accumulated strip by strip): S_j += Σ_{i in strip} R_i
+/// A[i][j], keeping all DMA transfers long and contiguous.
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    let r1 = ((l1_words as i32 - 3 * n) / n).clamp(1, n).min(48);
+    let n_strips = (n + r1 - 1) / r1;
+    let mut b = KernelBuilder::new(if promoted { "bicg_promoted" } else { "bicg_hand" });
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let p = b.host_array("P", vec![ci(n)]);
+    let r = b.host_array("R", vec![ci(n)]);
+    let q = b.host_array("Q", vec![ci(n)]);
+    let s = b.host_array("S", vec![ci(n)]);
+    let _n = b.const_param("N", n);
+    let lp = b.local_buf("lP", vec![ci(n)]);
+    let lr = b.local_buf("lR", vec![ci(r1)]);
+    let la = b.local_buf("lA", vec![ci(r1), ci(n)]);
+    let lq = b.local_buf("lQ", vec![ci(r1)]);
+    let ls = b.local_buf("lS", vec![ci(n)]);
+    let is = b.loop_var("is");
+    let rows = b.let_i32("rows");
+    let (ip, j) = (b.loop_var("ip"), b.loop_var("j"));
+    let (jp, i2) = (b.loop_var("jp"), b.loop_var("i2"));
+    let acc = b.let_f32("acc");
+    let acc2 = b.let_f32("acc2");
+
+    // Per-strip Q compute (row-major).
+    let q_inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc, value: cf(0.0) },
+            for_(
+                j,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(ld(la, vec![var(ip), var(j)]).mul(ld(lp, vec![var(j)]))),
+                }],
+            ),
+            st(lq, vec![var(ip)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(lq, vec![var(ip)], cf(0.0)),
+            for_(
+                j,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lq,
+                    vec![var(ip)],
+                    ld(lq, vec![var(ip)])
+                        .add(ld(la, vec![var(ip), var(j)]).mul(ld(lp, vec![var(j)]))),
+                )],
+            ),
+        ]
+    };
+    // Per-strip S accumulation: each core owns a j-chunk; inner loop over
+    // strip rows reads A column-wise *within L1* (single-cycle TCDM, so the
+    // column walk is cheap once the strip is local).
+    let s_inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc2, value: ld(ls, vec![var(jp)]) },
+            for_(
+                i2,
+                ci(0),
+                var(rows),
+                vec![Stmt::Assign {
+                    var: acc2,
+                    value: var(acc2)
+                        .add(ld(lr, vec![var(i2)]).mul(ld(la, vec![var(i2), var(jp)]))),
+                }],
+            ),
+            st(ls, vec![var(jp)], var(acc2)),
+        ]
+    } else {
+        vec![for_(
+            i2,
+            ci(0),
+            var(rows),
+            vec![st(
+                ls,
+                vec![var(jp)],
+                ld(ls, vec![var(jp)])
+                    .add(ld(lr, vec![var(i2)]).mul(ld(la, vec![var(i2), var(jp)]))),
+            )],
+        )]
+    };
+
+    let zero_j = b.loop_var("jz");
+    b.body(vec![
+        Stmt::LocalAlloc { var: lp, elems: ci(n) },
+        Stmt::LocalAlloc { var: ls, elems: ci(n) },
+        Stmt::LocalAlloc { var: lr, elems: ci(r1) },
+        Stmt::LocalAlloc { var: la, elems: ci(r1 * n) },
+        Stmt::LocalAlloc { var: lq, elems: ci(r1) },
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: p,
+            host_off: ci(0),
+            local: lp,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        // Zero the S accumulator in L1.
+        Stmt::For {
+            var: zero_j,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![st(ls, vec![var(zero_j)], cf(0.0))],
+        },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r1).min(ci(n).sub(var(is).mul(ci(r1)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: a,
+                    host_off: var(is).mul(ci(r1 * n)),
+                    local: la,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: r,
+                    host_off: var(is).mul(ci(r1)),
+                    local: lr,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For { var: ip, lo: ci(0), hi: var(rows), par: Par::Cores, body: q_inner },
+                Stmt::For { var: jp, lo: ci(0), hi: ci(n), par: Par::Cores, body: s_inner },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: q,
+                    host_off: var(is).mul(ci(r1)),
+                    local: lq,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+        Stmt::Dma {
+            dir: Dir::LocalToHost,
+            kind: DmaKind::Merged1D,
+            host: s,
+            host_off: ci(0),
+            local: ls,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        Stmt::DmaWaitAll,
+    ])
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let a = data[0].clone();
+    let p = data[1].clone();
+    let r = data[2].clone();
+    for i in 0..n {
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += a[i * n + j] * p[j];
+        }
+        data[3][i] = acc;
+    }
+    for j in 0..n {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += r[i] * a[i * n + j];
+        }
+        data[4][j] = acc;
+    }
+}
+
+pub fn build(n: usize) -> Workload {
+    Workload {
+        name: "bicg",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "P", elems: n, role: Role::In, shape: vec![n] },
+            ArraySpec { name: "R", elems: n, role: Role::In, shape: vec![n] },
+            ArraySpec { name: "Q", elems: n, role: Role::Out, shape: vec![n] },
+            ArraySpec { name: "S", elems: n, role: Role::Out, shape: vec![n] },
+        ],
+        fargs: vec![],
+        unmodified: unmodified(n as i32),
+        handwritten: handwritten(n as i32, 28 * 1024, false),
+        promoted: Some(handwritten(n as i32, 28 * 1024, true)),
+        golden,
+        pjrt: PjrtSpec { name: format!("bicg_{n}"), inputs: vec![0, 1, 2], outputs: vec![3, 4] },
+    }
+}

@@ -1,0 +1,153 @@
+//! conv2d: 3×3 stencil `B_{i,j} = Σ_{k,l} c_{k,l} A_{i+k,j+l}` (Table 2,
+//! "stencil" domain). Taps are unrolled constants as in Polybench.
+
+use super::*;
+use crate::compiler::ir::*;
+
+/// The nine tap coefficients (Polybench-style constants).
+pub const TAPS: [[f32; 3]; 3] =
+    [[0.2, 0.5, -0.8], [-0.3, 0.6, -0.9], [0.4, 0.7, 0.10]];
+
+fn stencil_expr(a: VarId, i: Expr, j: Expr) -> Expr {
+    let mut terms: Vec<Expr> = Vec::new();
+    for (k, row) in TAPS.iter().enumerate() {
+        for (l, c) in row.iter().enumerate() {
+            terms.push(cf(*c).mul(ld(
+                a,
+                vec![i.clone().add(ci(k as i32)), j.clone().add(ci(l as i32))],
+            )));
+        }
+    }
+    let mut e = terms.remove(0);
+    for t in terms {
+        e = e.add(t);
+    }
+    e
+}
+
+fn unmodified(n: i32) -> Kernel {
+    let m = n - 2;
+    let mut b = KernelBuilder::new("conv2d");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(m), ci(m)]);
+    let _n = b.const_param("N", n);
+    let (i, j) = (b.loop_var("i"), b.loop_var("j"));
+    b.body(vec![Stmt::For {
+        var: i,
+        lo: ci(0),
+        hi: ci(m),
+        par: Par::Cores,
+        body: vec![for_(
+            j,
+            ci(0),
+            ci(m),
+            vec![st(bb, vec![var(i), var(j)], stencil_expr(a, var(i), var(j)))],
+        )],
+    }])
+}
+
+fn handwritten(n: i32, l1_words: usize) -> Kernel {
+    let m = n - 2;
+    // Row strips with a 2-row halo; strips are contiguous (full-width rows).
+    let r = ((l1_words as i32 - 2 * n) / (2 * n)).clamp(1, m).min(48);
+    let n_strips = (m + r - 1) / r;
+    let mut b = KernelBuilder::new("conv2d_hand");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(m), ci(m)]);
+    let _n = b.const_param("N", n);
+    let la = b.local_buf("lA", vec![ci(r + 2), ci(n)]);
+    let lb = b.local_buf("lB", vec![ci(r), ci(m)]);
+    let is = b.loop_var("is");
+    let rows = b.let_i32("rows");
+    let (ip, j) = (b.loop_var("ip"), b.loop_var("j"));
+    b.body(vec![
+        Stmt::LocalAlloc { var: la, elems: ci((r + 2) * n) },
+        Stmt::LocalAlloc { var: lb, elems: ci(r * m) },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r).min(ci(m).sub(var(is).mul(ci(r)))) },
+                // Strip + halo: one merged burst of (rows+2) full rows.
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: a,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: la,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).add(ci(2)).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For {
+                    var: ip,
+                    lo: ci(0),
+                    hi: var(rows),
+                    par: Par::Cores,
+                    body: vec![for_(
+                        j,
+                        ci(0),
+                        ci(m),
+                        vec![st(lb, vec![var(ip), var(j)], stencil_expr(la, var(ip), var(j)))],
+                    )],
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: bb,
+                    host_off: var(is).mul(ci(r * m)),
+                    local: lb,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(m)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+    ])
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let m = n - 2;
+    let a = data[0].clone();
+    for i in 0..m {
+        for j in 0..m {
+            // Same summation order as `stencil_expr` (left-to-right adds).
+            let mut acc = TAPS[0][0] * a[i * n + j];
+            for (k, row) in TAPS.iter().enumerate() {
+                for (l, c) in row.iter().enumerate() {
+                    if k == 0 && l == 0 {
+                        continue;
+                    }
+                    acc += *c * a[(i + k) * n + (j + l)];
+                }
+            }
+            data[1][i * m + j] = acc;
+        }
+    }
+}
+
+pub fn build(n: usize) -> Workload {
+    let m = n - 2;
+    Workload {
+        name: "conv2d",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "B", elems: m * m, role: Role::Out, shape: vec![m, m] },
+        ],
+        fargs: vec![],
+        unmodified: unmodified(n as i32),
+        handwritten: handwritten(n as i32, 28 * 1024),
+        promoted: None, // nothing to promote: single store, no reduction loop
+        golden,
+        pjrt: PjrtSpec { name: format!("conv2d_{n}"), inputs: vec![0], outputs: vec![1] },
+    }
+}

@@ -1,0 +1,391 @@
+//! covar: `E_j = α Σ_i D_{i,j}; D_{i,j} -= E_j; S_{i,j} = S_{j,i} =
+//! Σ_k D_{k,i} D_{k,j}` (Table 2, "datamining" domain).
+//!
+//! Iterates the full square (both triangles) so all variants compute
+//! identical values; the unmodified form keeps the symmetric mirror store
+//! *inside* the reduction loop — the may-alias pair that defeats both the
+//! compiler's accumulator caching and its hardware-loop inference until
+//! *manual register promotion* resolves it (§3.4, Fig 9).
+//!
+//! Temporal locality is covar's defining property: every element of D is
+//! needed twice (mean pass + covariance pass) and the covariance pass
+//! re-reads column tiles per tile pair — the "reload factor of two [that]
+//! reduces the speed-up by DMA transfers to only 2.2×" (§3.1).
+
+use super::*;
+use crate::compiler::ir::*;
+
+fn unmodified(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("covar");
+    let d = b.host_array("D", vec![ci(n), ci(n)]);
+    let e = b.host_array("E", vec![ci(n)]);
+    let s = b.host_array("S", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let (j, i) = (b.loop_var("j"), b.loop_var("i"));
+    let (i2, j2) = (b.loop_var("i2"), b.loop_var("j2"));
+    let (j1c, j2c, k) = (b.loop_var("j1"), b.loop_var("jj"), b.loop_var("k"));
+    b.body(vec![
+        // Mean: E_j = alpha * Σ_i D[i][j]  (column-wise reduction).
+        Stmt::For {
+            var: j,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![
+                st(e, vec![var(j)], cf(0.0)),
+                for_(
+                    i,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        e,
+                        vec![var(j)],
+                        ld(e, vec![var(j)]).add(var(alpha).mul(ld(d, vec![var(i), var(j)]))),
+                    )],
+                ),
+            ],
+        },
+        // Subtract the mean.
+        Stmt::For {
+            var: i2,
+            lo: ci(0),
+            hi: ci(n),
+            par: Par::Cores,
+            body: vec![for_(
+                j2,
+                ci(0),
+                ci(n),
+                vec![st(
+                    d,
+                    vec![var(i2), var(j2)],
+                    ld(d, vec![var(i2), var(j2)]).sub(ld(e, vec![var(j2)])),
+                )],
+            )],
+        },
+        // Covariance with the in-loop symmetric mirror store.
+        for_(
+            j1c,
+            ci(0),
+            ci(n),
+            vec![Stmt::For {
+                var: j2c,
+                lo: ci(0),
+                hi: ci(n),
+                par: Par::Cores,
+                body: vec![
+                    st(s, vec![var(j1c), var(j2c)], cf(0.0)),
+                    for_(
+                        k,
+                        ci(0),
+                        ci(n),
+                        vec![
+                            st(
+                                s,
+                                vec![var(j1c), var(j2c)],
+                                ld(s, vec![var(j1c), var(j2c)]).add(
+                                    ld(d, vec![var(k), var(j1c)])
+                                        .mul(ld(d, vec![var(k), var(j2c)])),
+                                ),
+                            ),
+                            st(
+                                s,
+                                vec![var(j2c), var(j1c)],
+                                ld(s, vec![var(j1c), var(j2c)]),
+                            ),
+                        ],
+                    ),
+                ],
+            }],
+        ),
+    ])
+}
+
+/// Handwritten: 2D column-tile gathers for both passes. This is the paper's
+/// "implementation split over two separate iterations through the entire
+/// data" with ~3× LoC overhead incurred twice (Fig 6: 6.3× total).
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    // Column-tile width for the covariance pass: two D column tiles + one
+    // S tile must fit.
+    let t = {
+        let mut t = 48.min(n);
+        while 2 * (t * n) + t * t > l1_words as i32 {
+            t /= 2;
+        }
+        t.max(1)
+    };
+    let n_tiles = (n + t - 1) / t;
+    let mut b = KernelBuilder::new(if promoted { "covar_promoted" } else { "covar_hand" });
+    let d = b.host_array("D", vec![ci(n), ci(n)]);
+    let e = b.host_array("E", vec![ci(n)]);
+    let s = b.host_array("S", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    // Pass 1 locals: one column tile of D + the E tile.
+    let ld1 = b.local_buf("lD", vec![ci(n), ci(t)]);
+    let le = b.local_buf("lE", vec![ci(t)]);
+    let it = b.loop_var("it");
+    let cols = b.let_i32("cols");
+    let (cp, i1) = (b.loop_var("cp"), b.loop_var("i1"));
+    let (cp2, i3) = (b.loop_var("cp2"), b.loop_var("i3"));
+    let acc = b.let_f32("macc");
+    // Pass 2 locals: two column tiles + S tile.
+    let lda = b.local_buf("lDa", vec![ci(n), ci(t)]);
+    let ldb = b.local_buf("lDb", vec![ci(n), ci(t)]);
+    let lst = b.local_buf("lS", vec![ci(t), ci(t)]);
+    let (ta, tb) = (b.loop_var("ta"), b.loop_var("tb"));
+    let (ca, cb2) = (b.let_i32("ca"), b.let_i32("cb"));
+    let (pa, pb, k) = (b.loop_var("pa"), b.loop_var("pb"), b.loop_var("k"));
+    let acc2 = b.let_f32("sacc");
+
+    // Pass 1 compute: E tile + subtract, per column of the tile.
+    let mean_body: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc, value: cf(0.0) },
+            for_(
+                i1,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(var(alpha).mul(ld(ld1, vec![var(i1), var(cp)]))),
+                }],
+            ),
+            st(le, vec![var(cp)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(le, vec![var(cp)], cf(0.0)),
+            for_(
+                i1,
+                ci(0),
+                ci(n),
+                vec![st(
+                    le,
+                    vec![var(cp)],
+                    ld(le, vec![var(cp)])
+                        .add(var(alpha).mul(ld(ld1, vec![var(i1), var(cp)]))),
+                )],
+            ),
+        ]
+    };
+    let cov_body: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc2, value: cf(0.0) },
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc2,
+                    value: var(acc2)
+                        .add(ld(lda, vec![var(k), var(pa)]).mul(ld(ldb, vec![var(k), var(pb)]))),
+                }],
+            ),
+            st(lst, vec![var(pa), var(pb)], var(acc2)),
+        ]
+    } else {
+        vec![
+            st(lst, vec![var(pa), var(pb)], cf(0.0)),
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lst,
+                    vec![var(pa), var(pb)],
+                    ld(lst, vec![var(pa), var(pb)]).add(
+                        ld(lda, vec![var(k), var(pa)]).mul(ld(ldb, vec![var(k), var(pb)])),
+                    ),
+                )],
+            ),
+        ]
+    };
+
+    b.body(vec![
+        // ---- pass 1: mean + subtract, one column tile at a time ----
+        Stmt::LocalAlloc { var: ld1, elems: ci(n * t) },
+        Stmt::LocalAlloc { var: le, elems: ci(t) },
+        for_(
+            it,
+            ci(0),
+            ci(n_tiles),
+            vec![
+                Stmt::Let { var: cols, value: ci(t).min(ci(n).sub(var(it).mul(ci(t)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Hw2D,
+                    host: d,
+                    host_off: var(it).mul(ci(t)),
+                    local: ld1,
+                    local_off: ci(0),
+                    rows: ci(n),
+                    row_elems: var(cols),
+                    host_stride: ci(n),
+                    local_stride: ci(t),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For { var: cp, lo: ci(0), hi: var(cols), par: Par::Cores, body: mean_body },
+                // Subtract the mean in place.
+                Stmt::For {
+                    var: cp2,
+                    lo: ci(0),
+                    hi: var(cols),
+                    par: Par::Cores,
+                    body: vec![for_(
+                        i3,
+                        ci(0),
+                        ci(n),
+                        vec![st(
+                            ld1,
+                            vec![var(i3), var(cp2)],
+                            ld(ld1, vec![var(i3), var(cp2)]).sub(ld(le, vec![var(cp2)])),
+                        )],
+                    )],
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Hw2D,
+                    host: d,
+                    host_off: var(it).mul(ci(t)),
+                    local: ld1,
+                    local_off: ci(0),
+                    rows: ci(n),
+                    row_elems: var(cols),
+                    host_stride: ci(n),
+                    local_stride: ci(t),
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: e,
+                    host_off: var(it).mul(ci(t)),
+                    local: le,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(cols),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+        // ---- pass 2: covariance over tile pairs (full square) ----
+        Stmt::LocalFreeAll,
+        Stmt::LocalAlloc { var: lda, elems: ci(n * t) },
+        Stmt::LocalAlloc { var: ldb, elems: ci(n * t) },
+        Stmt::LocalAlloc { var: lst, elems: ci(t * t) },
+        for_(
+            ta,
+            ci(0),
+            ci(n_tiles),
+            vec![
+                Stmt::Let { var: ca, value: ci(t).min(ci(n).sub(var(ta).mul(ci(t)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Hw2D,
+                    host: d,
+                    host_off: var(ta).mul(ci(t)),
+                    local: lda,
+                    local_off: ci(0),
+                    rows: ci(n),
+                    row_elems: var(ca),
+                    host_stride: ci(n),
+                    local_stride: ci(t),
+                },
+                Stmt::DmaWaitAll,
+                for_(
+                    tb,
+                    ci(0),
+                    ci(n_tiles),
+                    vec![
+                        Stmt::Let { var: cb2, value: ci(t).min(ci(n).sub(var(tb).mul(ci(t)))) },
+                        // The second tile is re-gathered for every (ta, tb)
+                        // pair: the reload factor the paper discusses.
+                        Stmt::Dma {
+                            dir: Dir::HostToLocal,
+                            kind: DmaKind::Hw2D,
+                            host: d,
+                            host_off: var(tb).mul(ci(t)),
+                            local: ldb,
+                            local_off: ci(0),
+                            rows: ci(n),
+                            row_elems: var(cb2),
+                            host_stride: ci(n),
+                            local_stride: ci(t),
+                        },
+                        Stmt::DmaWaitAll,
+                        Stmt::For {
+                            var: pa,
+                            lo: ci(0),
+                            hi: var(ca),
+                            par: Par::Cores,
+                            body: vec![for_(pb, ci(0), var(cb2), cov_body)],
+                        },
+                        // Scatter the S tile: one 2D descriptor.
+                        Stmt::Dma {
+                            dir: Dir::LocalToHost,
+                            kind: DmaKind::Hw2D,
+                            host: s,
+                            host_off: var(ta).mul(ci(t)).mul(ci(n)).add(var(tb).mul(ci(t))),
+                            local: lst,
+                            local_off: ci(0),
+                            rows: var(ca),
+                            row_elems: var(cb2),
+                            host_stride: ci(n),
+                            local_stride: ci(t),
+                        },
+                        Stmt::DmaWaitAll,
+                    ],
+                ),
+            ],
+        ),
+    ])
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let alpha = w.fargs[0];
+    // Mean.
+    for j in 0..n {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += alpha * data[0][i * n + j];
+        }
+        data[1][j] = acc;
+    }
+    // Subtract.
+    for i in 0..n {
+        for j in 0..n {
+            data[0][i * n + j] -= data[1][j];
+        }
+    }
+    // Covariance (full square).
+    for j1 in 0..n {
+        for j2 in 0..n {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += data[0][k * n + j1] * data[0][k * n + j2];
+            }
+            data[2][j1 * n + j2] = acc;
+        }
+    }
+}
+
+pub fn build(n: usize) -> Workload {
+    Workload {
+        name: "covar",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "D", elems: n * n, role: Role::InOut, shape: vec![n, n] },
+            ArraySpec { name: "E", elems: n, role: Role::Out, shape: vec![n] },
+            ArraySpec { name: "S", elems: n * n, role: Role::Out, shape: vec![n, n] },
+        ],
+        fargs: vec![1.0 / n as f32],
+        unmodified: unmodified(n as i32),
+        handwritten: handwritten(n as i32, 28 * 1024, false),
+        promoted: Some(handwritten(n as i32, 28 * 1024, true)),
+        golden,
+        pjrt: PjrtSpec { name: format!("covar_{n}"), inputs: vec![0], outputs: vec![0, 1, 2] },
+    }
+}

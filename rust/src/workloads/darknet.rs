@@ -1,0 +1,236 @@
+//! darknet: one YOLO convolutional layer as a matrix-matrix multiplication
+//! `C = α·A·B` (Table 2) at a size where **no operand fits L1**, so the
+//! handwritten implementation uses two-dimensional tiling with 2D
+//! scatter/gather DMA — "the tile side length of the two input matrices A
+//! and B and the output matrix C is S = 97" (§3.1). darknet and covar are
+//! the only applications using 2D DMA transfers, which is why their DMA
+//! bars behave differently in the Fig 8 data-width sweep.
+
+use super::*;
+use crate::compiler::ir::*;
+
+/// Paper tile side: `S = floor((L/N)^(1/D))` with L = 28 Ki words,
+/// N = 3 matrices, D = 2 → 97.
+pub fn tile_side(n: usize, l1_words: usize) -> usize {
+    (((l1_words / 3) as f64).sqrt().floor() as usize).min(n)
+}
+
+fn unmodified(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("darknet");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let (i, j, k) = (b.loop_var("i"), b.loop_var("j"), b.loop_var("k"));
+    b.body(vec![Stmt::For {
+        var: i,
+        lo: ci(0),
+        hi: ci(n),
+        par: Par::Cores,
+        body: vec![for_(
+            j,
+            ci(0),
+            ci(n),
+            vec![
+                st(c, vec![var(i), var(j)], cf(0.0)),
+                for_(
+                    k,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        c,
+                        vec![var(i), var(j)],
+                        ld(c, vec![var(i), var(j)]).add(
+                            var(alpha)
+                                .mul(ld(a, vec![var(i), var(k)]))
+                                .mul(ld(bb, vec![var(k), var(j)])),
+                        ),
+                    )],
+                ),
+            ],
+        )],
+    }])
+}
+
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    let s = tile_side(n as usize, l1_words) as i32;
+    let nt = (n + s - 1) / s;
+    let mut b = KernelBuilder::new(if promoted { "darknet_promoted" } else { "darknet_hand" });
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let la = b.local_buf("lA", vec![ci(s), ci(s)]);
+    let lb = b.local_buf("lB", vec![ci(s), ci(s)]);
+    let lc = b.local_buf("lC", vec![ci(s), ci(s)]);
+    let (ti, tj, tk) = (b.loop_var("ti"), b.loop_var("tj"), b.loop_var("tk"));
+    let (il, jl, kl) = (b.let_i32("il"), b.let_i32("jl"), b.let_i32("kl"));
+    let (ip, jp, kp) = (b.loop_var("ip"), b.loop_var("jp"), b.loop_var("kp"));
+    let acc = b.let_f32("acc");
+    let (zi, zj) = (b.loop_var("zi"), b.loop_var("zj"));
+
+    let inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc, value: ld(lc, vec![var(ip), var(jp)]) },
+            for_(
+                kp,
+                ci(0),
+                var(kl),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(
+                        var(alpha)
+                            .mul(ld(la, vec![var(ip), var(kp)]))
+                            .mul(ld(lb, vec![var(kp), var(jp)])),
+                    ),
+                }],
+            ),
+            st(lc, vec![var(ip), var(jp)], var(acc)),
+        ]
+    } else {
+        vec![for_(
+            kp,
+            ci(0),
+            var(kl),
+            vec![st(
+                lc,
+                vec![var(ip), var(jp)],
+                ld(lc, vec![var(ip), var(jp)]).add(
+                    var(alpha)
+                        .mul(ld(la, vec![var(ip), var(kp)]))
+                        .mul(ld(lb, vec![var(kp), var(jp)])),
+                ),
+            )],
+        )]
+    };
+
+    b.body(vec![
+        Stmt::LocalAlloc { var: la, elems: ci(s * s) },
+        Stmt::LocalAlloc { var: lb, elems: ci(s * s) },
+        Stmt::LocalAlloc { var: lc, elems: ci(s * s) },
+        for_(
+            ti,
+            ci(0),
+            ci(nt),
+            vec![
+                Stmt::Let { var: il, value: ci(s).min(ci(n).sub(var(ti).mul(ci(s)))) },
+                for_(
+                    tj,
+                    ci(0),
+                    ci(nt),
+                    vec![
+                        Stmt::Let { var: jl, value: ci(s).min(ci(n).sub(var(tj).mul(ci(s)))) },
+                        // Zero the C tile (C is write-only).
+                        Stmt::For {
+                            var: zi,
+                            lo: ci(0),
+                            hi: var(il),
+                            par: Par::Cores,
+                            body: vec![for_(
+                                zj,
+                                ci(0),
+                                var(jl),
+                                vec![st(lc, vec![var(zi), var(zj)], cf(0.0))],
+                            )],
+                        },
+                        for_(
+                            tk,
+                            ci(0),
+                            ci(nt),
+                            vec![
+                                Stmt::Let {
+                                    var: kl,
+                                    value: ci(s).min(ci(n).sub(var(tk).mul(ci(s)))),
+                                },
+                                // 2D gathers: one descriptor per tile.
+                                Stmt::Dma {
+                                    dir: Dir::HostToLocal,
+                                    kind: DmaKind::Hw2D,
+                                    host: a,
+                                    host_off: var(ti).mul(ci(s)).mul(ci(n)).add(var(tk).mul(ci(s))),
+                                    local: la,
+                                    local_off: ci(0),
+                                    rows: var(il),
+                                    row_elems: var(kl),
+                                    host_stride: ci(n),
+                                    local_stride: ci(s),
+                                },
+                                Stmt::Dma {
+                                    dir: Dir::HostToLocal,
+                                    kind: DmaKind::Hw2D,
+                                    host: bb,
+                                    host_off: var(tk).mul(ci(s)).mul(ci(n)).add(var(tj).mul(ci(s))),
+                                    local: lb,
+                                    local_off: ci(0),
+                                    rows: var(kl),
+                                    row_elems: var(jl),
+                                    host_stride: ci(n),
+                                    local_stride: ci(s),
+                                },
+                                Stmt::DmaWaitAll,
+                                Stmt::For {
+                                    var: ip,
+                                    lo: ci(0),
+                                    hi: var(il),
+                                    par: Par::Cores,
+                                    body: vec![for_(jp, ci(0), var(jl), inner.clone())],
+                                },
+                            ],
+                        ),
+                        // Scatter the finished C tile.
+                        Stmt::Dma {
+                            dir: Dir::LocalToHost,
+                            kind: DmaKind::Hw2D,
+                            host: c,
+                            host_off: var(ti).mul(ci(s)).mul(ci(n)).add(var(tj).mul(ci(s))),
+                            local: lc,
+                            local_off: ci(0),
+                            rows: var(il),
+                            row_elems: var(jl),
+                            host_stride: ci(n),
+                            local_stride: ci(s),
+                        },
+                        Stmt::DmaWaitAll,
+                    ],
+                ),
+            ],
+        ),
+    ])
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let a = data[0].clone();
+    let b = data[1].clone();
+    super::mm2::golden_mm(n, w.fargs[0], &a, &b, &mut data[2]);
+}
+
+pub fn build(n: usize) -> Workload {
+    Workload {
+        name: "darknet",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "B", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "C", elems: n * n, role: Role::Out, shape: vec![n, n] },
+        ],
+        fargs: vec![1.0],
+        unmodified: unmodified(n as i32),
+        handwritten: handwritten(n as i32, 28 * 1024, false),
+        promoted: Some(handwritten(n as i32, 28 * 1024, true)),
+        golden,
+        pjrt: PjrtSpec { name: format!("darknet_{n}"), inputs: vec![0, 1], outputs: vec![2] },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tile_side_is_97() {
+        assert_eq!(tile_side(192, 28 * 1024), 97);
+    }
+}

@@ -1,0 +1,287 @@
+//! gemm: `C = beta*C + alpha*A*B` (Table 2) — the paper's running example
+//! for the Xpulpv2 case study (§3.4).
+
+use super::*;
+use crate::compiler::ir::*;
+
+/// Row-strip size for the handwritten tiling: B stays resident in L1 and A/C
+/// move through row strips — strips are contiguous in memory, so the
+/// handwritten code "transfers multiple rows of matrices at once" (§3.2)
+/// with a single merged burst.
+pub fn strip_rows(n: usize, l1_words: usize) -> usize {
+    if 3 * n * n <= l1_words {
+        return n; // everything resident: one "strip"
+    }
+    let left = l1_words.saturating_sub(n * n);
+    (left / (2 * n)).clamp(1, n)
+}
+
+fn unmodified(n: i32, name: &str) -> Kernel {
+    let mut b = KernelBuilder::new(name);
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let beta = b.float_param("beta");
+    let (i, j, k) = (b.loop_var("i"), b.loop_var("j"), b.loop_var("k"));
+    b.body(vec![Stmt::For {
+        var: i,
+        lo: ci(0),
+        hi: ci(n),
+        par: Par::Cores,
+        body: vec![for_(
+            j,
+            ci(0),
+            ci(n),
+            vec![
+                st(c, vec![var(i), var(j)], ld(c, vec![var(i), var(j)]).mul(var(beta))),
+                for_(
+                    k,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        c,
+                        vec![var(i), var(j)],
+                        ld(c, vec![var(i), var(j)]).add(
+                            var(alpha)
+                                .mul(ld(a, vec![var(i), var(k)]))
+                                .mul(ld(bb, vec![var(k), var(j)])),
+                        ),
+                    )],
+                ),
+            ],
+        )],
+    }])
+}
+
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    let r = strip_rows(n as usize, l1_words) as i32;
+    let n_strips = (n + r - 1) / r;
+    let mut b = KernelBuilder::new(if promoted { "gemm_promoted" } else { "gemm_hand" });
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let beta = b.float_param("beta");
+    let la = b.local_buf("lA", vec![ci(r), ci(n)]);
+    let lb = b.local_buf("lB", vec![ci(n), ci(n)]);
+    let lc = b.local_buf("lC", vec![ci(r), ci(n)]);
+    let is = b.loop_var("is");
+    let rows = b.let_i32("rows");
+    let (ip, j, k) = (b.loop_var("ip"), b.loop_var("j"), b.loop_var("k"));
+    let acc = b.let_f32("acc");
+
+    let inner_acc: Vec<Stmt> = if promoted {
+        // Manual register promotion: scalar accumulator, store after loop.
+        vec![
+            Stmt::Let {
+                var: acc,
+                value: ld(lc, vec![var(ip), var(j)]).mul(var(beta)),
+            },
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(
+                        var(alpha)
+                            .mul(ld(la, vec![var(ip), var(k)]))
+                            .mul(ld(lb, vec![var(k), var(j)])),
+                    ),
+                }],
+            ),
+            st(lc, vec![var(ip), var(j)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(lc, vec![var(ip), var(j)], ld(lc, vec![var(ip), var(j)]).mul(var(beta))),
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lc,
+                    vec![var(ip), var(j)],
+                    ld(lc, vec![var(ip), var(j)]).add(
+                        var(alpha)
+                            .mul(ld(la, vec![var(ip), var(k)]))
+                            .mul(ld(lb, vec![var(k), var(j)])),
+                    ),
+                )],
+            ),
+        ]
+    };
+
+    b.body(vec![
+        Stmt::LocalAlloc { var: lb, elems: ci(n * n) },
+        Stmt::LocalAlloc { var: la, elems: ci(r * n) },
+        Stmt::LocalAlloc { var: lc, elems: ci(r * n) },
+        // B is resident for the whole kernel: one merged transfer.
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: bb,
+            host_off: ci(0),
+            local: lb,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n * n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r).min(ci(n).sub(var(is).mul(ci(r)))) },
+                // A and C strips: rows are adjacent in memory — single
+                // merged burst of rows*N elements each.
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: a,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: la,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: c,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: lc,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For {
+                    var: ip,
+                    lo: ci(0),
+                    hi: var(rows),
+                    par: Par::Cores,
+                    body: vec![for_(j, ci(0), ci(n), inner_acc)],
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: c,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: lc,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+    ])
+}
+
+/// Host reference (bit-exact against the simulated arithmetic: same
+/// association `(alpha*a)*b` and same accumulation order).
+pub fn golden_gemm(n: usize, alpha: f32, beta: f32, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = c[i * n + j] * beta;
+            for k in 0..n {
+                acc += (alpha * a[i * n + k]) * b[k * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let (alpha, beta) = (w.fargs[0], w.fargs[1]);
+    let a = data[0].clone();
+    let b = data[1].clone();
+    golden_gemm(n, alpha, beta, &a, &b, &mut data[2]);
+}
+
+/// Build the gemm workload for size `n`.
+pub fn build(n: usize) -> Workload {
+    let ni = n as i32;
+    let l1_words = 28 * 1024; // Aurora user L1 (§3.1)
+    Workload {
+        name: "gemm",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "B", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "C", elems: n * n, role: Role::InOut, shape: vec![n, n] },
+        ],
+        fargs: vec![1.5, 1.2],
+        unmodified: unmodified(ni, "gemm"),
+        handwritten: handwritten(ni, l1_words, false),
+        promoted: Some(handwritten(ni, l1_words, true)),
+        golden,
+        pjrt: PjrtSpec {
+            name: format!("gemm_{n}"),
+            inputs: vec![0, 1, 2],
+            outputs: vec![2],
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{addrspace, metrics};
+
+    #[test]
+    fn variants_pass_addrspace() {
+        let w = build(12);
+        addrspace::analyze(&w.unmodified).unwrap();
+        addrspace::analyze(&w.handwritten).unwrap();
+        addrspace::analyze(w.promoted.as_ref().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn handwritten_is_more_complex() {
+        // Fig 6: 1D tiling costs 1.7-2.5x LoC, 1.3-1.5x cyclomatic.
+        let w = build(128);
+        let u = metrics::complexity(&w.unmodified);
+        let h = metrics::complexity(&w.handwritten);
+        let loc_ratio = h.loc as f64 / u.loc as f64;
+        let cyc_ratio = h.cyclomatic as f64 / u.cyclomatic as f64;
+        assert!((1.5..3.2).contains(&loc_ratio), "LoC ratio {loc_ratio}");
+        assert!((1.0..2.0).contains(&cyc_ratio), "cyclomatic ratio {cyc_ratio}");
+    }
+
+    #[test]
+    fn strip_rows_fits_budget() {
+        let r = strip_rows(128, 28 * 1024);
+        assert_eq!(r, 48);
+        assert!(128 * 128 + 2 * r * 128 <= 28 * 1024);
+        assert_eq!(strip_rows(12, 28 * 1024), 12); // tiny: fully resident
+    }
+
+    #[test]
+    fn golden_matches_naive() {
+        let n = 4;
+        let a: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        let b: Vec<f32> = (0..16).map(|i| (15 - i) as f32 * 0.5).collect();
+        let mut c = vec![1.0; 16];
+        golden_gemm(n, 2.0, 0.5, &a, &b, &mut c);
+        // Spot check C[1][2].
+        let mut want = 1.0f32 * 0.5;
+        for k in 0..4 {
+            want += (2.0 * a[4 + k]) * b[k * 4 + 2];
+        }
+        assert_eq!(c[6], want);
+    }
+}

@@ -1,0 +1,196 @@
+//! 2mm: `C = alpha * A * B` (Table 2) — like gemm but with a write-only
+//! output (no `beta` rescale), so the handwritten tiling needs no C
+//! gather before compute.
+
+use super::*;
+use crate::compiler::ir::*;
+
+fn unmodified(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("2mm");
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let (i, j, k) = (b.loop_var("i"), b.loop_var("j"), b.loop_var("k"));
+    b.body(vec![Stmt::For {
+        var: i,
+        lo: ci(0),
+        hi: ci(n),
+        par: Par::Cores,
+        body: vec![for_(
+            j,
+            ci(0),
+            ci(n),
+            vec![
+                st(c, vec![var(i), var(j)], cf(0.0)),
+                for_(
+                    k,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        c,
+                        vec![var(i), var(j)],
+                        ld(c, vec![var(i), var(j)]).add(
+                            var(alpha)
+                                .mul(ld(a, vec![var(i), var(k)]))
+                                .mul(ld(bb, vec![var(k), var(j)])),
+                        ),
+                    )],
+                ),
+            ],
+        )],
+    }])
+}
+
+fn handwritten(n: i32, l1_words: usize, promoted: bool) -> Kernel {
+    let r = super::gemm::strip_rows(n as usize, l1_words) as i32;
+    let n_strips = (n + r - 1) / r;
+    let mut b = KernelBuilder::new(if promoted { "2mm_promoted" } else { "2mm_hand" });
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    let la = b.local_buf("lA", vec![ci(r), ci(n)]);
+    let lb = b.local_buf("lB", vec![ci(n), ci(n)]);
+    let lc = b.local_buf("lC", vec![ci(r), ci(n)]);
+    let is = b.loop_var("is");
+    let rows = b.let_i32("rows");
+    let (ip, j, k) = (b.loop_var("ip"), b.loop_var("j"), b.loop_var("k"));
+    let acc = b.let_f32("acc");
+    let inner: Vec<Stmt> = if promoted {
+        vec![
+            Stmt::Let { var: acc, value: cf(0.0) },
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(
+                        var(alpha)
+                            .mul(ld(la, vec![var(ip), var(k)]))
+                            .mul(ld(lb, vec![var(k), var(j)])),
+                    ),
+                }],
+            ),
+            st(lc, vec![var(ip), var(j)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(lc, vec![var(ip), var(j)], cf(0.0)),
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lc,
+                    vec![var(ip), var(j)],
+                    ld(lc, vec![var(ip), var(j)]).add(
+                        var(alpha)
+                            .mul(ld(la, vec![var(ip), var(k)]))
+                            .mul(ld(lb, vec![var(k), var(j)])),
+                    ),
+                )],
+            ),
+        ]
+    };
+    b.body(vec![
+        Stmt::LocalAlloc { var: lb, elems: ci(n * n) },
+        Stmt::LocalAlloc { var: la, elems: ci(r * n) },
+        Stmt::LocalAlloc { var: lc, elems: ci(r * n) },
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: bb,
+            host_off: ci(0),
+            local: lb,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n * n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r).min(ci(n).sub(var(is).mul(ci(r)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: a,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: la,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For {
+                    var: ip,
+                    lo: ci(0),
+                    hi: var(rows),
+                    par: Par::Cores,
+                    body: vec![for_(j, ci(0), ci(n), inner)],
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: c,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: lc,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+    ])
+}
+
+/// C = alpha*A*B, matching the simulated association.
+pub fn golden_mm(n: usize, alpha: f32, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += (alpha * a[i * n + k]) * b[k * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let a = data[0].clone();
+    let b = data[1].clone();
+    golden_mm(n, w.fargs[0], &a, &b, &mut data[2]);
+}
+
+pub fn build(n: usize) -> Workload {
+    let ni = n as i32;
+    Workload {
+        name: "2mm",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "B", elems: n * n, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "C", elems: n * n, role: Role::Out, shape: vec![n, n] },
+        ],
+        fargs: vec![1.5],
+        unmodified: unmodified(ni),
+        handwritten: handwritten(ni, 28 * 1024, false),
+        promoted: Some(handwritten(ni, 28 * 1024, true)),
+        golden,
+        pjrt: PjrtSpec { name: format!("mm2_{n}"), inputs: vec![0, 1], outputs: vec![2] },
+    }
+}

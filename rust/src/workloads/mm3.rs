@@ -1,0 +1,237 @@
+//! 3mm: `E = 2mm(A,B) → F = 2mm(C,D) → G = 2mm(E,F)` (Table 2) — three
+//! consecutive offload nests (arrows in the paper's table) sharing the L1
+//! heap via `hero_l1_free_all` between nests.
+
+use super::*;
+use crate::compiler::ir::*;
+
+/// One alpha-matmul nest `out = alpha * x * y` over N×N host arrays.
+fn mm_nest(
+    b: &mut KernelBuilder,
+    n: i32,
+    x: VarId,
+    y: VarId,
+    out: VarId,
+    alpha: VarId,
+    tag: &str,
+) -> Stmt {
+    let (i, j, k) =
+        (b.loop_var(&format!("i{tag}")), b.loop_var(&format!("j{tag}")), b.loop_var(&format!("k{tag}")));
+    Stmt::For {
+        var: i,
+        lo: ci(0),
+        hi: ci(n),
+        par: Par::Cores,
+        body: vec![for_(
+            j,
+            ci(0),
+            ci(n),
+            vec![
+                st(out, vec![var(i), var(j)], cf(0.0)),
+                for_(
+                    k,
+                    ci(0),
+                    ci(n),
+                    vec![st(
+                        out,
+                        vec![var(i), var(j)],
+                        ld(out, vec![var(i), var(j)]).add(
+                            var(alpha)
+                                .mul(ld(x, vec![var(i), var(k)]))
+                                .mul(ld(y, vec![var(k), var(j)])),
+                        ),
+                    )],
+                ),
+            ],
+        )],
+    }
+}
+
+/// One handwritten strip-tiled alpha-matmul nest (y resident, x/out strips).
+#[allow(clippy::too_many_arguments)]
+fn mm_nest_hand(
+    b: &mut KernelBuilder,
+    n: i32,
+    r: i32,
+    x: VarId,
+    y: VarId,
+    out: VarId,
+    alpha: VarId,
+    tag: &str,
+    promoted: bool,
+) -> Vec<Stmt> {
+    let n_strips = (n + r - 1) / r;
+    let lx = b.local_buf(&format!("lX{tag}"), vec![ci(r), ci(n)]);
+    let ly = b.local_buf(&format!("lY{tag}"), vec![ci(n), ci(n)]);
+    let lo = b.local_buf(&format!("lO{tag}"), vec![ci(r), ci(n)]);
+    let is = b.loop_var(&format!("is{tag}"));
+    let rows = b.let_i32(&format!("rows{tag}"));
+    let (ip, j, k) =
+        (b.loop_var(&format!("ip{tag}")), b.loop_var(&format!("j{tag}")), b.loop_var(&format!("k{tag}")));
+    let inner: Vec<Stmt> = if promoted {
+        let acc = b.let_f32(&format!("acc{tag}"));
+        vec![
+            Stmt::Let { var: acc, value: cf(0.0) },
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![Stmt::Assign {
+                    var: acc,
+                    value: var(acc).add(
+                        var(alpha)
+                            .mul(ld(lx, vec![var(ip), var(k)]))
+                            .mul(ld(ly, vec![var(k), var(j)])),
+                    ),
+                }],
+            ),
+            st(lo, vec![var(ip), var(j)], var(acc)),
+        ]
+    } else {
+        vec![
+            st(lo, vec![var(ip), var(j)], cf(0.0)),
+            for_(
+                k,
+                ci(0),
+                ci(n),
+                vec![st(
+                    lo,
+                    vec![var(ip), var(j)],
+                    ld(lo, vec![var(ip), var(j)]).add(
+                        var(alpha)
+                            .mul(ld(lx, vec![var(ip), var(k)]))
+                            .mul(ld(ly, vec![var(k), var(j)])),
+                    ),
+                )],
+            ),
+        ]
+    };
+    vec![
+        Stmt::LocalAlloc { var: ly, elems: ci(n * n) },
+        Stmt::LocalAlloc { var: lx, elems: ci(r * n) },
+        Stmt::LocalAlloc { var: lo, elems: ci(r * n) },
+        Stmt::Dma {
+            dir: Dir::HostToLocal,
+            kind: DmaKind::Merged1D,
+            host: y,
+            host_off: ci(0),
+            local: ly,
+            local_off: ci(0),
+            rows: ci(1),
+            row_elems: ci(n * n),
+            host_stride: ci(0),
+            local_stride: ci(0),
+        },
+        for_(
+            is,
+            ci(0),
+            ci(n_strips),
+            vec![
+                Stmt::Let { var: rows, value: ci(r).min(ci(n).sub(var(is).mul(ci(r)))) },
+                Stmt::Dma {
+                    dir: Dir::HostToLocal,
+                    kind: DmaKind::Merged1D,
+                    host: x,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: lx,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+                Stmt::For {
+                    var: ip,
+                    lo: ci(0),
+                    hi: var(rows),
+                    par: Par::Cores,
+                    body: vec![for_(j, ci(0), ci(n), inner.clone())],
+                },
+                Stmt::Dma {
+                    dir: Dir::LocalToHost,
+                    kind: DmaKind::Merged1D,
+                    host: out,
+                    host_off: var(is).mul(ci(r * n)),
+                    local: lo,
+                    local_off: ci(0),
+                    rows: ci(1),
+                    row_elems: var(rows).mul(ci(n)),
+                    host_stride: ci(0),
+                    local_stride: ci(0),
+                },
+                Stmt::DmaWaitAll,
+            ],
+        ),
+    ]
+}
+
+fn build_kernel(n: i32, variant: u8) -> Kernel {
+    let name = match variant {
+        0 => "3mm",
+        1 => "3mm_hand",
+        _ => "3mm_promoted",
+    };
+    let mut b = KernelBuilder::new(name);
+    let a = b.host_array("A", vec![ci(n), ci(n)]);
+    let bb = b.host_array("B", vec![ci(n), ci(n)]);
+    let c = b.host_array("C", vec![ci(n), ci(n)]);
+    let d = b.host_array("D", vec![ci(n), ci(n)]);
+    let e = b.host_array("E", vec![ci(n), ci(n)]);
+    let f = b.host_array("F", vec![ci(n), ci(n)]);
+    let g = b.host_array("G", vec![ci(n), ci(n)]);
+    let _n = b.const_param("N", n);
+    let alpha = b.float_param("alpha");
+    if variant == 0 {
+        let n1 = mm_nest(&mut b, n, a, bb, e, alpha, "1");
+        let n2 = mm_nest(&mut b, n, c, d, f, alpha, "2");
+        let n3 = mm_nest(&mut b, n, e, f, g, alpha, "3");
+        b.body(vec![n1, n2, n3])
+    } else {
+        let promoted = variant == 2;
+        let r = super::gemm::strip_rows(n as usize, 28 * 1024) as i32;
+        let mut body = mm_nest_hand(&mut b, n, r, a, bb, e, alpha, "1", promoted);
+        body.push(Stmt::LocalFreeAll);
+        body.extend(mm_nest_hand(&mut b, n, r, c, d, f, alpha, "2", promoted));
+        body.push(Stmt::LocalFreeAll);
+        body.extend(mm_nest_hand(&mut b, n, r, e, f, g, alpha, "3", promoted));
+        b.body(body)
+    }
+}
+
+fn golden(w: &Workload, data: &mut [Vec<f32>]) {
+    let n = w.size;
+    let alpha = w.fargs[0];
+    let (a, b, c, d) = (data[0].clone(), data[1].clone(), data[2].clone(), data[3].clone());
+    super::mm2::golden_mm(n, alpha, &a, &b, &mut data[4]);
+    super::mm2::golden_mm(n, alpha, &c, &d, &mut data[5]);
+    let (e, f) = (data[4].clone(), data[5].clone());
+    super::mm2::golden_mm(n, alpha, &e, &f, &mut data[6]);
+}
+
+pub fn build(n: usize) -> Workload {
+    let sq = n * n;
+    Workload {
+        name: "3mm",
+        size: n,
+        arrays: vec![
+            ArraySpec { name: "A", elems: sq, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "B", elems: sq, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "C", elems: sq, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "D", elems: sq, role: Role::In, shape: vec![n, n] },
+            ArraySpec { name: "E", elems: sq, role: Role::Out, shape: vec![n, n] },
+            ArraySpec { name: "F", elems: sq, role: Role::Out, shape: vec![n, n] },
+            ArraySpec { name: "G", elems: sq, role: Role::Out, shape: vec![n, n] },
+        ],
+        fargs: vec![1.25],
+        unmodified: build_kernel(n as i32, 0),
+        handwritten: build_kernel(n as i32, 1),
+        promoted: Some(build_kernel(n as i32, 2)),
+        golden,
+        pjrt: PjrtSpec {
+            name: format!("mm3_{n}"),
+            inputs: vec![0, 1, 2, 3],
+            outputs: vec![4, 5, 6],
+        },
+    }
+}

@@ -1,0 +1,169 @@
+//! Evaluated kernels and applications (Table 2).
+//!
+//! Eight workloads spanning linear algebra (2mm, 3mm, atax, bicg, gemm),
+//! stencils (conv2d), data mining (covar), and an end-to-end CNN application
+//! (darknet, whose convolutional layers are matrix-matrix multiplications).
+//!
+//! Each workload provides:
+//! * `unmodified` — the plain OpenMP form (host arrays, `#pragma omp for` on
+//!   the outermost computational loop, no tiling): the baseline of Figs 4/7
+//!   and the AutoDMA input;
+//! * `handwritten` — manually tiled with explicit `hero_memcpy*` DMA
+//!   transfers (1D row-strip tiling for the six left kernels of Fig 6,
+//!   2D tiling for darknet/covar), the Figs 4/5/8/9 configuration;
+//! * `promoted` — the handwritten variant after *manual register promotion*
+//!   (scalar accumulators, stores hoisted out of inner loops): Fig 9's
+//!   second bar;
+//! * `golden` — a host-side Rust reference producing expected outputs;
+//! * `pjrt` — the artifact name + shapes of the AOT JAX/Pallas golden model.
+
+pub mod atax;
+pub mod bicg;
+pub mod conv2d;
+pub mod covar;
+pub mod darknet;
+pub mod gemm;
+pub mod mm2;
+pub mod mm3;
+
+use crate::compiler::ir::Kernel;
+
+/// Array role in the offload's `map` clauses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    In,
+    Out,
+    InOut,
+}
+
+/// One mapped array.
+#[derive(Debug, Clone)]
+pub struct ArraySpec {
+    pub name: &'static str,
+    pub elems: usize,
+    pub role: Role,
+    /// Logical shape (for the PJRT artifact).
+    pub shape: Vec<usize>,
+}
+
+/// PJRT golden-model binding.
+#[derive(Debug, Clone)]
+pub struct PjrtSpec {
+    /// Artifact name (`artifacts/<name>.hlo.txt`).
+    pub name: String,
+    /// Indices (into `arrays`) of the artifact inputs, in order.
+    pub inputs: Vec<usize>,
+    /// Indices of the arrays the artifact outputs correspond to, in order.
+    pub outputs: Vec<usize>,
+}
+
+/// A fully-specified workload instance.
+pub struct Workload {
+    pub name: &'static str,
+    /// Problem-size label (e.g. "128" for N=128).
+    pub size: usize,
+    pub arrays: Vec<ArraySpec>,
+    /// Float kernel parameters (alpha, beta, ...).
+    pub fargs: Vec<f32>,
+    pub unmodified: Kernel,
+    pub handwritten: Kernel,
+    /// Manual register promotion variant (Fig 9 bar 2); `None` when the
+    /// handwritten form already has nothing to promote.
+    pub promoted: Option<Kernel>,
+    /// Host reference: given input arrays (in `arrays` order, with zeroed
+    /// outputs), returns the expected contents of every array after the
+    /// offload.
+    pub golden: fn(&Workload, &mut [Vec<f32>]),
+    pub pjrt: PjrtSpec,
+}
+
+impl Workload {
+    /// Deterministic input data for array `i` (xorshift-based, seedable).
+    pub fn gen_data(&self, seed: u64) -> Vec<Vec<f32>> {
+        self.arrays
+            .iter()
+            .enumerate()
+            .map(|(i, a)| match a.role {
+                Role::Out => vec![0.0; a.elems],
+                _ => gen_f32(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9), a.elems),
+            })
+            .collect()
+    }
+
+    /// Expected array contents after the offload.
+    pub fn expected(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut data = self.gen_data(seed);
+        (self.golden)(self, &mut data);
+        data
+    }
+}
+
+/// Deterministic pseudo-random f32 in [-1, 1) (values kept small so long
+/// accumulations stay well-conditioned in fp32).
+pub fn gen_f32(seed: u64, n: usize) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        })
+        .collect()
+}
+
+/// All eight workloads at their paper-scale default sizes.
+pub fn all_default() -> Vec<Workload> {
+    vec![
+        mm2::build(128),
+        mm3::build(96),
+        atax::build(512),
+        bicg::build(512),
+        conv2d::build(256),
+        covar::build(128),
+        darknet::build(192),
+        gemm::build(128),
+    ]
+}
+
+/// All eight at tiny sizes for fast correctness tests.
+pub fn all_tiny() -> Vec<Workload> {
+    vec![
+        mm2::build(12),
+        mm3::build(10),
+        atax::build(24),
+        bicg::build(24),
+        conv2d::build(18),
+        covar::build(12),
+        darknet::build(14),
+        gemm::build(12),
+    ]
+}
+
+/// Look a workload up by name at its default size.
+pub fn by_name(name: &str) -> Option<Workload> {
+    all_default().into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic_and_bounded() {
+        let a = gen_f32(42, 1000);
+        let b = gen_f32(42, 1000);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| (-1.0..1.0).contains(v)));
+        let c = gen_f32(43, 1000);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn registry_has_eight() {
+        assert_eq!(all_default().len(), 8);
+        assert_eq!(all_tiny().len(), 8);
+        let names: Vec<&str> = all_default().iter().map(|w| w.name).collect();
+        assert_eq!(names, ["2mm", "3mm", "atax", "bicg", "conv2d", "covar", "darknet", "gemm"]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Property-based tests over the coordinator's invariants: allocator
+//! soundness, DMA scatter/gather correctness, IOMMU translation, NoC port
+//! serialization, compiler semantic preservation across random problem
+//! sizes (which sweeps ragged tile edges), and config-file round-trips.
+
+use herov2::accel::Accel;
+use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::config::{aurora, parse};
+use herov2::dma::Descriptor;
+use herov2::iommu::{Iommu, PageTable};
+use herov2::isa::DmaDir;
+use herov2::mem::o1heap::{FreeResult, O1Heap};
+use herov2::noc::Port;
+use herov2::testkit::{check, Rng};
+use herov2::workloads;
+use std::collections::HashMap;
+
+#[test]
+fn prop_o1heap_random_alloc_free_never_overlaps() {
+    check(
+        60,
+        |rng| {
+            let ops: Vec<(bool, u32)> =
+                (0..40).map(|_| (rng.bool(), rng.range(1, 700) as u32)).collect();
+            ops
+        },
+        |ops| {
+            let mut mem: HashMap<u32, u32> = HashMap::new();
+            let mut h = O1Heap::new(1024, 16 * 1024);
+            let mut live: Vec<(u32, u32)> = Vec::new();
+            for (is_alloc, size) in ops {
+                if *is_alloc {
+                    if let Some(a) = h.malloc(*size, |o, v| {
+                        mem.insert(o, v);
+                    }) {
+                        for &(b, bs) in &live {
+                            if a < b + bs && b < a + size {
+                                return Err(format!("overlap ({a},{size}) vs ({b},{bs})"));
+                            }
+                        }
+                        if a < 1024 || a + size > 1024 + 16 * 1024 {
+                            return Err(format!("block ({a},{size}) outside region"));
+                        }
+                        live.push((a, *size));
+                    }
+                } else if let Some((a, _)) = live.pop() {
+                    if h.free(a, |o| mem[&o]) != FreeResult::Ok {
+                        return Err(format!("canary failed for untouched block {a}"));
+                    }
+                }
+            }
+            // Free the rest: full capacity must come back (coalescing).
+            for (a, _) in live {
+                h.free(a, |o| mem[&o]);
+            }
+            if h.capacity_remaining() != 16 * 1024 {
+                return Err(format!("leak: {} != {}", h.capacity_remaining(), 16 * 1024));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dma_2d_gather_matches_reference() {
+    check(
+        40,
+        |rng| {
+            let rows = rng.usize(1, 12) as u32;
+            let elems = rng.usize(1, 24) as u32;
+            let host_pitch = elems + rng.usize(0, 16) as u32;
+            let dev_pitch = elems + rng.usize(0, 8) as u32;
+            (rows, elems, host_pitch, dev_pitch, rng.range(0, 1) == 1)
+        },
+        |&(rows, elems, host_pitch, dev_pitch, to_dev)| {
+            let mut accel = Accel::new(aurora(), 1 << 20);
+            accel.pt.map_range(0x40_0000_0000, 0, 1 << 19);
+            // Fill both sides with distinct patterns.
+            for i in 0..(1 << 16) {
+                accel.dram.mem.store(i * 4, 0xA000_0000 | i);
+                accel.clusters[0].tcdm.mem.store(i % (1 << 15) * 4, 0xB000_0000 | i);
+            }
+            let d = Descriptor {
+                dir: if to_dev { DmaDir::HostToDev } else { DmaDir::DevToHost },
+                dev_addr: herov2::mem::map::TCDM_BASE + 64,
+                host_va: 0x40_0000_0000 + 128,
+                row_bytes: elems * 4,
+                rows,
+                dev_stride: dev_pitch * 4,
+                host_stride: host_pitch * 4,
+                merged: false,
+            };
+            let snapshot_dram: Vec<u32> =
+                (0..4096).map(|i| accel.dram.mem.load(i * 4)).collect();
+            let snapshot_tcdm: Vec<u32> =
+                (0..4096).map(|i| accel.clusters[0].tcdm.mem.load(i * 4)).collect();
+            accel.dma_submit_external(0, &d).map_err(|e| e.to_string())?;
+            for r in 0..rows {
+                for c in 0..elems {
+                    let dev_w = (64 / 4) + r * dev_pitch + c;
+                    let host_w = (128 / 4) + r * host_pitch + c;
+                    let dev_v = accel.clusters[0].tcdm.mem.load(dev_w * 4);
+                    let host_v = accel.dram.mem.load(host_w * 4);
+                    if to_dev {
+                        if dev_v != snapshot_dram[host_w as usize] {
+                            return Err(format!("gather row {r} col {c}: {dev_v:#x}"));
+                        }
+                    } else if host_v != snapshot_tcdm[dev_w as usize] {
+                        return Err(format!("scatter row {r} col {c}: {host_v:#x}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_iommu_translation_matches_page_table() {
+    check(
+        50,
+        |rng| {
+            let vas: Vec<u64> =
+                (0..30).map(|_| 0x40_0000_0000u64 + rng.range(0, (1 << 20) - 4)).collect();
+            vas
+        },
+        |vas| {
+            let cfg = aurora();
+            let mut pt = PageTable::new(cfg.iommu.page_bytes);
+            pt.map_range(0x40_0000_0000, 0x20_0000, 1 << 20);
+            let mut io = Iommu::new(cfg.iommu);
+            for (i, va) in vas.iter().enumerate() {
+                let t = io
+                    .translate(*va, &pt, i as u64)
+                    .ok_or_else(|| format!("unmapped {va:#x}"))?;
+                let want = pt.walk(*va).unwrap();
+                if t.pa != want {
+                    return Err(format!("{va:#x}: {:#x} != {want:#x}", t.pa));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_noc_port_serializes_and_conserves_busy_time() {
+    check(
+        50,
+        |rng| {
+            let reqs: Vec<(u64, u64)> =
+                (0..20).map(|_| (rng.range(0, 1000), rng.range(1, 50))).collect();
+            reqs
+        },
+        |reqs| {
+            let mut p = Port::new();
+            let mut prev_end = 0u64;
+            let mut total = 0u64;
+            let mut t = 0u64;
+            for (dt, dur) in reqs {
+                t += dt;
+                let (start, end) = p.acquire(t, *dur);
+                if start < t || start < prev_end {
+                    return Err(format!("overlap: start {start} < max({t}, {prev_end})"));
+                }
+                if end - start != *dur {
+                    return Err("duration not honored".into());
+                }
+                prev_end = end;
+                total += dur;
+            }
+            if p.busy_cycles != total {
+                return Err(format!("busy {} != {total}", p.busy_cycles));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_compiler_preserves_semantics_across_sizes() {
+    // Random problem sizes sweep ragged strips/tiles; every variant must
+    // still match the host golden model bit-for-bit.
+    check(
+        10,
+        |rng| {
+            let which = rng.usize(0, 3);
+            let n = rng.usize(5, 28);
+            (which, n, rng.range(1, 1 << 30))
+        },
+        |&(which, n, seed)| {
+            let w = match which {
+                0 => workloads::gemm::build(n),
+                1 => workloads::atax::build(n.max(6)),
+                2 => workloads::conv2d::build(n.max(8)),
+                _ => workloads::darknet::build(n),
+            };
+            let cfg = aurora();
+            for variant in
+                [Variant::Unmodified, Variant::Handwritten, Variant::Promoted, Variant::AutoDma]
+            {
+                let out = run_workload(&cfg, &w, variant, 8, seed, 10_000_000_000)
+                    .map_err(|e| format!("{} {}: {e}", w.name, variant.label()))?;
+                verify(&w, &out, seed)
+                    .map_err(|e| format!("{} {}: {e}", w.name, variant.label()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_xpulp_and_base_isa_agree() {
+    // Xpulpv2 codegen (hwloops, post-increment, MAC) must not change
+    // results relative to the base-ISA lowering.
+    check(
+        8,
+        |rng| (rng.usize(6, 24), rng.range(1, 1 << 30)),
+        |&(n, seed)| {
+            let w = workloads::gemm::build(n);
+            let mut base = aurora();
+            base.accel.isa.xpulp = false;
+            let a = run_workload(&base, &w, Variant::Handwritten, 8, seed, 10_000_000_000)
+                .map_err(|e| e.to_string())?;
+            let b = run_workload(&aurora(), &w, Variant::Handwritten, 8, seed, 10_000_000_000)
+                .map_err(|e| e.to_string())?;
+            if a.arrays != b.arrays {
+                return Err("base ISA and Xpulpv2 disagree".into());
+            }
+            // And Xpulpv2 must not be slower.
+            if b.cycles() > a.cycles() {
+                return Err(format!("xpulp slower: {} > {}", b.cycles(), a.cycles()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_overrides_roundtrip() {
+    check(
+        40,
+        |rng| {
+            (
+                *rng.pick(&[32u32, 64, 128]),
+                *rng.pick(&[1usize, 2, 4, 8, 16]), // bank count must divide L1
+                rng.usize(1, 64) * 1024,
+                rng.bool(),
+            )
+        },
+        |&(width, cores, tlb, xpulp)| {
+            let text = format!(
+                "preset = aurora\nnoc.dma_width_bits = {width}\n\
+                 accel.cores_per_cluster = {cores}\niommu.tlb_entries = {tlb}\n\
+                 accel.xpulp = {xpulp}\n"
+            );
+            let cfg = parse::parse_str(&text).map_err(|e| e)?;
+            if cfg.noc.dma_width_bits != width
+                || cfg.accel.cores_per_cluster != cores
+                || cfg.iommu.tlb_entries != tlb
+                || cfg.accel.isa.xpulp != xpulp
+            {
+                return Err("override not applied".into());
+            }
+            cfg.validate()
+        },
+    );
+}
