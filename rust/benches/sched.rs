@@ -1,0 +1,73 @@
+//! Scheduler scaling study: one FIFO instance without a binary cache vs a
+//! pooled, batched, cached configuration.
+//!
+//! ```sh
+//! cargo bench --bench sched
+//! ```
+//!
+//! The acceptance bar for the subsystem: pool=4 with binary caching must
+//! deliver at least 2x the simulated throughput (jobs per megacycle of
+//! pool makespan) of pool=1 uncached — with bit-identical job results,
+//! regardless of policy, pool size, batching or caching.
+
+use herov2::config::aurora;
+use herov2::sched::{Policy, Scheduler, ServeReport};
+use herov2::workloads::synth;
+
+fn run(pool: usize, policy: Policy, cache: bool, batch: bool, jobs: &[synth::JobDesc]) -> ServeReport {
+    let mut s = Scheduler::new(aurora(), pool, policy)
+        .with_cache(cache)
+        .with_batching(batch)
+        .with_verify(false); // numerics are covered by the digest identity
+    s.submit_all(jobs);
+    s.drain().expect("drain");
+    s.report()
+}
+
+fn main() {
+    let jobs = synth::mixed_jobs(48, 7);
+    println!("{} mixed jobs (8 kernels, 3 tiled variants, 2 sizes each)\n", jobs.len());
+    println!(
+        "{:<26} {:>14} {:>12} {:>10} {:>8}",
+        "configuration", "makespan (cy)", "jobs/Mcycle", "compile cy", "lowered"
+    );
+
+    let mut baseline = None;
+    let mut scaled = None;
+    for (label, pool, policy, cache, batch) in [
+        ("pool=1 fifo uncached", 1usize, Policy::Fifo, false, false),
+        ("pool=1 fifo cached", 1, Policy::Fifo, true, true),
+        ("pool=2 fifo cached", 2, Policy::Fifo, true, true),
+        ("pool=4 fifo cached", 4, Policy::Fifo, true, true),
+        ("pool=4 sjf cached", 4, Policy::Sjf, true, true),
+    ] {
+        let r = run(pool, policy, cache, batch, &jobs);
+        assert_eq!(r.completed, jobs.len(), "{label}: all jobs must complete");
+        println!(
+            "{label:<26} {:>14} {:>12.3} {:>10} {:>8}",
+            r.makespan_cycles,
+            r.jobs_per_mcycle(),
+            r.compile_cycles,
+            r.cache_misses
+        );
+        if pool == 1 && !cache {
+            baseline = Some(r);
+        } else if pool == 4 && policy == Policy::Fifo {
+            scaled = Some(r);
+        }
+    }
+
+    let baseline = baseline.unwrap();
+    let scaled = scaled.unwrap();
+    assert_eq!(
+        baseline.digest, scaled.digest,
+        "job results must be bit-identical across scheduler configurations"
+    );
+    let speedup = scaled.jobs_per_mcycle() / baseline.jobs_per_mcycle();
+    println!(
+        "\npool=4 + binary cache vs pool=1 uncached: {speedup:.2}x simulated throughput \
+         (target >= 2x)"
+    );
+    assert!(speedup >= 2.0, "scheduler scaling regressed: {speedup:.2}x < 2x");
+    println!("results bit-identical across configurations: OK");
+}

@@ -1016,7 +1016,16 @@ impl Accel {
         let translate_cost = self.dma_move_data(d);
         let now = self.now;
         let setup = self.clusters[cl_idx].dma.setup_cycles();
+        let busy_before = self.clusters[cl_idx].dma.stats.busy_cycles;
         let (id, _) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
+        let busy = self.clusters[cl_idx].dma.stats.busy_cycles - busy_before;
+        // Book the same event set as core-initiated submissions (on core 0;
+        // no core pays setup stalls for external transfers).
+        let core = &mut self.clusters[cl_idx].cores[0];
+        core.perf.bump(Event::DmaTransfers);
+        core.perf.add(Event::DmaBursts, d.bursts());
+        core.perf.add(Event::DmaBytes, d.total_bytes());
+        core.perf.add(Event::DmaBusyCycles, busy);
         Ok(id)
     }
 
@@ -1026,11 +1035,14 @@ impl Accel {
         let translate_cost = self.dma_move_data(d);
         let now = self.now;
         let setup = self.clusters[cl_idx].dma.setup_cycles();
+        let busy_before = self.clusters[cl_idx].dma.stats.busy_cycles;
         let (id, _done_at) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
+        let busy = self.clusters[cl_idx].dma.stats.busy_cycles - busy_before;
         let core = &mut self.clusters[cl_idx].cores[c_idx];
         core.perf.bump(Event::DmaTransfers);
         core.perf.add(Event::DmaBursts, d.bursts());
         core.perf.add(Event::DmaBytes, d.total_bytes());
+        core.perf.add(Event::DmaBusyCycles, busy);
         (id, setup)
     }
 

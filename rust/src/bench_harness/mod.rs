@@ -73,30 +73,38 @@ impl RunOutcome {
     }
 }
 
-/// Compile and run one workload variant on a fresh accelerator instance.
-///
-/// `threads` = OpenMP thread count (1 or the cluster's core count).
-pub fn run_workload(
+/// The kernel form a variant executes (pre-AutoDMA for the AutoDma variant).
+pub fn variant_kernel<'a>(w: &'a Workload, variant: Variant) -> &'a crate::compiler::Kernel {
+    match variant {
+        Variant::Unmodified | Variant::AutoDma => &w.unmodified,
+        Variant::Handwritten => &w.handwritten,
+        Variant::Promoted => w.promoted.as_ref().unwrap_or(&w.handwritten),
+    }
+}
+
+/// Compile one workload variant for `threads` OpenMP threads, without
+/// running it. The scheduler's binary cache is built on this entry point.
+pub fn compile_workload(
     cfg: &HeroConfig,
     w: &Workload,
     variant: Variant,
     threads: u32,
+) -> Result<(compiler::Lowered, Option<AutoDmaReport>)> {
+    let mut opts = LowerOpts::for_config(cfg);
+    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
+    let autodma = (variant == Variant::AutoDma).then(|| AutoDmaOpts::for_config(cfg));
+    compiler::compile(variant_kernel(w, variant), &opts, autodma.as_ref())
+}
+
+/// Run an already-lowered kernel on a fresh accelerator instance: allocate
+/// and fill shared buffers, offload, read the arrays back.
+pub fn run_lowered(
+    cfg: &HeroConfig,
+    w: &Workload,
+    lowered: &compiler::Lowered,
     seed: u64,
     max_cycles: u64,
 ) -> Result<RunOutcome> {
-    let mut opts = LowerOpts::for_config(cfg);
-    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
-    let (kernel, autodma) = match variant {
-        Variant::Unmodified => (&w.unmodified, None),
-        Variant::Handwritten => (&w.handwritten, None),
-        Variant::Promoted => (
-            w.promoted.as_ref().unwrap_or(&w.handwritten),
-            None,
-        ),
-        Variant::AutoDma => (&w.unmodified, Some(AutoDmaOpts::for_config(cfg))),
-    };
-    let (lowered, report) = compiler::compile(kernel, &opts, autodma.as_ref())?;
-
     // Size DRAM to the workload (plus slack for page rounding).
     let total_elems: usize = w.arrays.iter().map(|a| a.elems).sum();
     let dram = (total_elems * 4 + (w.arrays.len() + 2) * cfg.iommu.page_bytes).max(1 << 20);
@@ -112,9 +120,26 @@ pub fn run_workload(
         host.write_f32(&mut accel, buf, d);
     }
     let buf_refs: Vec<&HostBuf> = bufs.iter().collect();
-    let result = offload(&mut accel, &lowered, &buf_refs, &w.fargs, 1, max_cycles)?;
+    let result = offload(&mut accel, lowered, &buf_refs, &w.fargs, 1, max_cycles)?;
     let arrays = bufs.iter().map(|b| host.read_f32(&accel, b)).collect();
-    Ok(RunOutcome { result, arrays, report, text_size: lowered.program.len() })
+    Ok(RunOutcome { result, arrays, report: None, text_size: lowered.program.len() })
+}
+
+/// Compile and run one workload variant on a fresh accelerator instance.
+///
+/// `threads` = OpenMP thread count (1 or the cluster's core count).
+pub fn run_workload(
+    cfg: &HeroConfig,
+    w: &Workload,
+    variant: Variant,
+    threads: u32,
+    seed: u64,
+    max_cycles: u64,
+) -> Result<RunOutcome> {
+    let (lowered, report) = compile_workload(cfg, w, variant, threads)?;
+    let mut out = run_lowered(cfg, w, &lowered, seed, max_cycles)?;
+    out.report = report;
+    Ok(out)
 }
 
 /// Verify a run against the host golden model.

@@ -74,6 +74,16 @@ pub struct Lowered {
 /// Maximum immediate for post-increment forms (12-bit signed, bytes).
 const POST_INC_MAX: i64 = 2048;
 
+/// Marker prefix of the error raised when a kernel's static SPM allocation
+/// exceeds the TCDM. The scheduler's capacity-aware admission
+/// (`sched::Scheduler`) keys on this exact string — change both together.
+pub const L1_OVERFLOW_MARKER: &str = "L1 overflow";
+
+/// Whether an error (anywhere in its chain) is an L1 allocation overflow.
+pub fn is_l1_overflow(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.to_string().contains(L1_OVERFLOW_MARKER))
+}
+
 pub fn lower(k: &Kernel, opts: &LowerOpts) -> Result<Lowered> {
     let mut lw = Lower::new(k, opts)?;
     lw.prologue()?;
@@ -842,7 +852,7 @@ impl<'k> Lower<'k> {
                 let bytes = (n as u32) * 4;
                 if self.l1_cursor + bytes > self.opts.l1_bytes {
                     bail!(
-                        "L1 overflow: {} needs {} B at offset {} (capacity {})",
+                        "{L1_OVERFLOW_MARKER}: {} needs {} B at offset {} (capacity {})",
                         self.k.sym_name(*var),
                         bytes,
                         self.l1_cursor,

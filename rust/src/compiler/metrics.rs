@@ -57,6 +57,95 @@ fn stmt_metrics(s: &Stmt) -> (u32, u32) {
     }
 }
 
+/// Options for the static cycle predictor.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictOpts {
+    /// Trip count assumed for loops whose bounds do not fold to constants
+    /// (typically the job's problem size N).
+    pub default_trips: u64,
+    /// Ways a `Par::Cores`/`Par::Teams` loop is split across (thread count);
+    /// its trip count is divided by this.
+    pub par_ways: u64,
+}
+
+impl Default for PredictOpts {
+    fn default() -> Self {
+        PredictOpts { default_trips: 16, par_ways: 1 }
+    }
+}
+
+/// Rough per-access costs for the predictor, mirroring the simulator's cost
+/// model at the order-of-magnitude level: host-array accesses go over the
+/// narrow NoC (§2.3: ext-CSR + NoC + DRAM, tens of cycles), local accesses
+/// are single-cycle TCDM hits.
+const REMOTE_LOAD_COST: u64 = 30;
+const REMOTE_STORE_COST: u64 = 5;
+const LOCAL_ACCESS_COST: u64 = 1;
+const DMA_SETUP_COST: u64 = 30;
+const DMA_WAIT_COST: u64 = 60;
+
+fn expr_predict(k: &Kernel, e: &Expr) -> u64 {
+    match e {
+        Expr::Bin(_, a, b) => 1 + expr_predict(k, a) + expr_predict(k, b),
+        Expr::Load(v, idx) => {
+            let access = match k.sym(*v) {
+                super::ir::Sym::HostArray { .. } => REMOTE_LOAD_COST,
+                _ => LOCAL_ACCESS_COST,
+            };
+            access + idx.iter().map(|i| expr_predict(k, i)).sum::<u64>()
+        }
+        _ => 0,
+    }
+}
+
+fn stmt_predict(k: &Kernel, s: &Stmt, opts: &PredictOpts) -> u64 {
+    match s {
+        Stmt::For { lo, hi, par, body, .. } => {
+            let mut trips = match (k.eval_const(lo), k.eval_const(hi)) {
+                (Some(l), Some(h)) => (h - l).max(0) as u64,
+                _ => opts.default_trips,
+            };
+            if !matches!(par, super::ir::Par::None) {
+                trips = trips.div_ceil(opts.par_ways.max(1));
+            }
+            let body_cost: u64 = body.iter().map(|s| stmt_predict(k, s, opts)).sum();
+            2 + trips * (1 + body_cost)
+        }
+        Stmt::Store { dst, idx, value } => {
+            let access = match k.sym(*dst) {
+                super::ir::Sym::HostArray { .. } => REMOTE_STORE_COST,
+                _ => LOCAL_ACCESS_COST,
+            };
+            access
+                + idx.iter().map(|i| expr_predict(k, i)).sum::<u64>()
+                + expr_predict(k, value)
+        }
+        Stmt::Let { value, .. } | Stmt::Assign { value, .. } => 1 + expr_predict(k, value),
+        Stmt::LocalAlloc { .. } | Stmt::LocalFreeAll => 10,
+        Stmt::Dma { rows, row_elems, .. } => {
+            // Setup + a bandwidth term when the extent folds to a constant.
+            let elems = match (k.eval_const(rows), k.eval_const(row_elems)) {
+                (Some(r), Some(e)) => (r.max(0) as u64) * (e.max(0) as u64),
+                _ => opts.default_trips * opts.default_trips,
+            };
+            DMA_SETUP_COST + elems / 2
+        }
+        Stmt::DmaWaitAll => DMA_WAIT_COST,
+    }
+}
+
+/// Statically predict the device cycles of one kernel execution.
+///
+/// This is the cost model behind the scheduler's shortest-predicted-first
+/// policy (`sched::policy`): a recursive walk of the IR that multiplies
+/// const-folded trip counts through loop nests, divides parallel loops by
+/// the thread count, and charges address-space-aware access costs (remote
+/// host-array accesses are ~30x a TCDM hit, as in §2.3). It is intentionally
+/// cheap and deterministic — an *ordering* heuristic, not a simulator.
+pub fn predict_cycles(k: &Kernel, opts: &PredictOpts) -> u64 {
+    100 + k.body.iter().map(|s| stmt_predict(k, s, opts)).sum::<u64>()
+}
+
 /// Compute Fig 6 metrics for a kernel.
 pub fn complexity(k: &Kernel) -> Complexity {
     let mut loc = 1; // function signature line
@@ -109,6 +198,37 @@ mod tests {
         let c = complexity(&k);
         assert_eq!(c.cyclomatic, 3); // for + MIN + 1
         assert_eq!(c.loc, 3);
+    }
+
+    #[test]
+    fn predictor_scales_with_problem_size() {
+        let w12 = crate::workloads::gemm::build(12);
+        let w24 = crate::workloads::gemm::build(24);
+        let opts = PredictOpts { default_trips: 12, par_ways: 8 };
+        let opts24 = PredictOpts { default_trips: 24, par_ways: 8 };
+        let p12 = predict_cycles(&w12.handwritten, &opts);
+        let p24 = predict_cycles(&w24.handwritten, &opts24);
+        // gemm is O(N^3): doubling N must predict much more than 2x.
+        assert!(p24 > 4 * p12, "p24 {p24} vs p12 {p12}");
+    }
+
+    #[test]
+    fn predictor_charges_remote_accesses() {
+        // The unmodified (external-memory) form must predict slower than the
+        // handwritten (SPM-tiled) form of the same problem.
+        let w = crate::workloads::gemm::build(16);
+        let opts = PredictOpts { default_trips: 16, par_ways: 8 };
+        let unm = predict_cycles(&w.unmodified, &opts);
+        let hand = predict_cycles(&w.handwritten, &opts);
+        assert!(unm > 2 * hand, "unmodified {unm} vs handwritten {hand}");
+    }
+
+    #[test]
+    fn predictor_parallelism_reduces_prediction() {
+        let w = crate::workloads::gemm::build(16);
+        let p1 = predict_cycles(&w.handwritten, &PredictOpts { default_trips: 16, par_ways: 1 });
+        let p8 = predict_cycles(&w.handwritten, &PredictOpts { default_trips: 16, par_ways: 8 });
+        assert!(p1 > p8, "p1 {p1} vs p8 {p8}");
     }
 
     #[test]

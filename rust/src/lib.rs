@@ -17,8 +17,23 @@
 //!
 //! At run time the Rust binary is self-contained: `runtime::pjrt` loads the
 //! AOT artifacts via the PJRT C API and uses them as the golden functional
-//! model that the simulated accelerator is verified against. Python never
-//! runs on the request path.
+//! model that the simulated accelerator is verified against (build with the
+//! `pjrt-xla` feature; without it those checks skip with a warning). Python
+//! never runs on the request path.
+//!
+//! ## Offload scheduler
+//!
+//! The [`sched`] module scales the paper's one-host/one-accelerator offload
+//! model (§2.3/§2.4) to a stream of concurrent heterogeneous jobs: an
+//! asynchronous job queue whose handles mirror `hero_memcpy_*_async`
+//! semantics at the job level, pluggable dispatch policies (FIFO,
+//! shortest-predicted-first on [`compiler::metrics::predict_cycles`], and
+//! capacity-aware admission against `hero_l1_capacity` that rejects or
+//! splits oversized jobs), a lowered-binary cache that lets same-kernel
+//! jobs batch and amortize compile cost, and aggregate throughput /
+//! per-instance utilization reporting built on [`noc::Port::busy_cycles`].
+//! Front-ends: the `hero serve` CLI subcommand, the synthetic job streams
+//! in [`workloads::synth`], and `benches/sched.rs`.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -35,6 +50,7 @@ pub mod isa;
 pub mod mem;
 pub mod noc;
 pub mod runtime;
+pub mod sched;
 pub mod testkit;
 pub mod trace;
 pub mod workloads;

@@ -12,6 +12,17 @@
 //! hero disasm <kernel> [--variant V] [--size N]   dump device assembly
 //! hero autodma <kernel> [--size N]    show the AutoDMA transformation
 //! hero kernels                        list workloads (Table 2)
+//! hero serve [options]                drain a synthetic job stream through
+//!                                     the multi-accelerator scheduler
+//!     --jobs N                        jobs in the stream (default 100)
+//!     --pool K                        accelerator instances (default 4)
+//!     --policy fifo|sjf|capacity|cap-reject    dispatch policy (default fifo)
+//!     --seed S                        stream seed (default 42)
+//!     --no-cache                      disable the lowered-binary cache
+//!     --no-batch                      disable same-binary batching
+//!     --no-verify                     skip per-job golden-model checks
+//!     --trace                         dump the scheduler event log
+//!     --config FILE                   platform config file
 //! ```
 
 use herov2::bench_harness::{self, figures, run_workload, verify, Variant};
@@ -32,8 +43,9 @@ fn main() {
             print!("{}", figures::table2());
             0
         }
+        Some("serve") => cmd_serve(&args[1..]),
         _ => {
-            eprintln!("usage: hero <info|run|disasm|autodma|kernels> [options]");
+            eprintln!("usage: hero <info|run|disasm|autodma|kernels|serve> [options]");
             2
         }
     };
@@ -65,23 +77,11 @@ fn load_cfg(args: &[String]) -> HeroConfig {
 fn pick_workload(args: &[String]) -> workloads::Workload {
     let name = args.first().cloned().unwrap_or_default();
     let size = opt(args, "--size").and_then(|s| s.parse::<usize>().ok());
-    let build = |n: Option<usize>| -> Option<workloads::Workload> {
-        let w = workloads::by_name(&name)?;
-        Some(match n {
-            Some(n) => match name.as_str() {
-                "2mm" => workloads::mm2::build(n),
-                "3mm" => workloads::mm3::build(n),
-                "atax" => workloads::atax::build(n),
-                "bicg" => workloads::bicg::build(n),
-                "conv2d" => workloads::conv2d::build(n),
-                "covar" => workloads::covar::build(n),
-                "darknet" => workloads::darknet::build(n),
-                _ => workloads::gemm::build(n),
-            },
-            None => w,
-        })
-    };
-    build(size).unwrap_or_else(|| {
+    match size {
+        Some(n) => workloads::build(&name, n),
+        None => workloads::by_name(&name),
+    }
+    .unwrap_or_else(|| {
         eprintln!("unknown kernel {name:?}; see `hero kernels`");
         exit(2)
     })
@@ -171,6 +171,58 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     }
     println!("\ndevice counters:\n{}", out.result.perf.report());
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+
+    let cfg = load_cfg(args);
+    let jobs: usize = opt(args, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let pool: usize = opt(args, "--pool").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seed: u64 = opt(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let policy_arg = opt(args, "--policy").unwrap_or_else(|| "fifo".into());
+    let Some(policy) = Policy::parse(&policy_arg) else {
+        eprintln!("unknown policy {policy_arg:?} (fifo|sjf|capacity|cap-reject)");
+        return 2;
+    };
+    if pool == 0 {
+        eprintln!("--pool must be at least 1");
+        return 2;
+    }
+    let stream = synth::mixed_jobs(jobs, seed);
+    println!(
+        "serving {} mixed-kernel jobs on {} (pool {}, policy {}, seed {seed})",
+        stream.len(),
+        cfg.name,
+        pool,
+        policy.label()
+    );
+    let mut sched = Scheduler::new(cfg, pool, policy)
+        .with_cache(!flag(args, "--no-cache"))
+        .with_batching(!flag(args, "--no-batch"))
+        .with_verify(!flag(args, "--no-verify"));
+    let handles = sched.submit_all(&stream);
+    if let Err(e) = sched.drain() {
+        eprintln!("scheduler error: {e}");
+        return 1;
+    }
+    if flag(args, "--trace") {
+        print!("{}", sched.trace.render());
+    }
+    let report = sched.report();
+    println!("{report}");
+    // Every submitted handle must have settled — the async contract.
+    let unsettled = handles.iter().filter(|h| !sched.state(**h).settled()).count();
+    if unsettled > 0 {
+        eprintln!("BUG: {unsettled} handles left unsettled");
+        return 1;
+    }
+    if report.verify_failures > 0 {
+        eprintln!("VERIFICATION FAILED for {} job(s)", report.verify_failures);
+        return 1;
+    }
     0
 }
 

@@ -71,25 +71,54 @@ impl WidePath {
         bytes.div_ceil(self.beat_bytes)
     }
 
+    /// Bursts a contiguous run of `beats` beats is chunked into (AXI caps a
+    /// single burst at `max_burst_beats` beats).
+    pub fn bursts_of(&self, beats: u64) -> u64 {
+        beats.div_ceil(self.max_burst_beats.max(1))
+    }
+
+    /// Visible re-issue cost per chunk after the first of a burst train.
+    /// The AR channel pipelines one address phase ahead, so a chunk's issue
+    /// overhead hides behind the previous chunk's data phase (one cycle per
+    /// beat, up to `max_burst_beats` cycles); only the remainder stalls the
+    /// data path. With the default configurations (256-beat bursts, tens of
+    /// cycles of overhead) this is zero — chunks stream back-to-back — but
+    /// tiny `max_burst_beats` values expose the re-issue cost, which is what
+    /// makes the field observable.
+    fn reissue_gap(&self) -> u64 {
+        self.burst_overhead.saturating_sub(self.max_burst_beats.max(1))
+    }
+
     /// Data-path occupancy of a *merged* (contiguous) transfer of `bytes`:
-    /// one issue overhead + back-to-back beats.
+    /// one issue overhead + beats, chunked into bursts of at most
+    /// `max_burst_beats` beats whose re-issue cost pipelines behind data.
     pub fn merged_cycles(&self, bytes: u64) -> u64 {
         if bytes == 0 {
             return 0;
         }
-        self.burst_overhead + self.first_word + self.beats(bytes)
+        let beats = self.beats(bytes);
+        self.burst_overhead
+            + self.first_word
+            + beats
+            + (self.bursts_of(beats) - 1) * self.reissue_gap()
     }
 
     /// Data-path occupancy of a scattered transfer: `rows` bursts of
     /// `row_bytes` each. Every row pays the burst issue overhead — the DMA
     /// engine must reconfigure the address per row (§3.2: "initiates a new
     /// DMA burst for each row, which adds an overhead compared to the single
-    /// DMA burst in the handwritten code").
+    /// DMA burst in the handwritten code"). Rows longer than
+    /// `max_burst_beats` beats are additionally chunked like merged
+    /// transfers.
     pub fn scattered_cycles(&self, rows: u64, row_bytes: u64) -> u64 {
         if rows == 0 || row_bytes == 0 {
             return 0;
         }
-        self.first_word + rows * (self.burst_overhead + self.beats(row_bytes))
+        let row_beats = self.beats(row_bytes);
+        let row_cost = self.burst_overhead
+            + row_beats
+            + (self.bursts_of(row_beats) - 1) * self.reissue_gap();
+        self.first_word + rows * row_cost
     }
 }
 
@@ -160,6 +189,44 @@ mod tests {
         // Paper Fig 8 darknet DMA bars: 0.6× at 32 bit, 1.5× at 128 bit.
         assert!((1.3..1.7).contains(&speedup128), "128-bit speedup {speedup128}");
         assert!((0.55..0.7).contains(&slowdown32), "32-bit speedup {slowdown32}");
+    }
+
+    #[test]
+    fn merged_chunks_at_max_burst_beats() {
+        // 4-beat bursts, 25-cycle overhead: each extra chunk exposes
+        // 25 - 4 = 21 cycles the AR pipelining cannot hide.
+        let w = WidePath { max_burst_beats: 4, ..wide64() };
+        // Exactly one burst: identical to the unchunked model.
+        assert_eq!(w.merged_cycles(4 * 8), 25 + 100 + 4);
+        // One beat over the boundary: second burst appears.
+        assert_eq!(w.merged_cycles(5 * 8), 25 + 100 + 5 + 21);
+        // 64 beats = 16 bursts: 15 visible re-issues.
+        assert_eq!(w.merged_cycles(64 * 8), 25 + 100 + 64 + 15 * 21);
+        // Wide default (256-beat bursts): overhead fully pipelined away, so
+        // the historical numbers are unchanged even for multi-burst trains.
+        assert_eq!(wide64().merged_cycles(512 * 8), 25 + 100 + 512);
+        assert_eq!(wide64().bursts_of(512), 2);
+    }
+
+    #[test]
+    fn scattered_chunks_long_rows() {
+        let w = WidePath { max_burst_beats: 4, ..wide64() };
+        // 6-beat rows: 2 bursts per row, one visible re-issue each.
+        assert_eq!(w.scattered_cycles(3, 6 * 8), 100 + 3 * (25 + 6 + 21));
+        // Rows at the boundary stay single-burst.
+        assert_eq!(w.scattered_cycles(3, 4 * 8), 100 + 3 * (25 + 4));
+        // Default configuration: unchanged.
+        assert_eq!(wide64().scattered_cycles(3, 4 * 8), 100 + 3 * (25 + 4));
+    }
+
+    #[test]
+    fn bursts_of_rounds_up() {
+        let w = wide64();
+        assert_eq!(w.bursts_of(1), 1);
+        assert_eq!(w.bursts_of(256), 1);
+        assert_eq!(w.bursts_of(257), 2);
+        let tiny = WidePath { max_burst_beats: 1, ..wide64() };
+        assert_eq!(tiny.bursts_of(7), 7);
     }
 
     #[test]

@@ -10,28 +10,157 @@
 //! once on the PJRT CPU client, caches the executable, and runs it — the
 //! golden functional model every simulated offload is verified against.
 //! Python never runs on this path.
+//!
+//! ## Graceful degradation
+//!
+//! The PJRT backend depends on the `xla` bindings, which need a native
+//! libxla install. That dependency is gated behind the `pjrt-xla` cargo
+//! feature so a clean checkout builds and tests without it. Without the
+//! feature (or without built artifacts) every golden-model check *skips
+//! with a warning* instead of erroring: [`PjrtRuntime::new`] still
+//! succeeds, [`PjrtRuntime::available`] reports `false`, and
+//! `bench_harness::verify_pjrt` returns `Ok(false)`. The host golden model
+//! (`Workload::golden`) remains the mandatory check either way.
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 
-/// A named, compiled artifact.
-struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(feature = "pjrt-xla")]
+mod backend {
+    //! The real PJRT CPU client (feature `pjrt-xla`).
+    use anyhow::{anyhow, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// A named, compiled artifact.
+    struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    pub struct Backend {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, Artifact>,
+    }
+
+    impl Backend {
+        pub fn new(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+            Ok(Backend { client, dir: dir.to_path_buf(), cache: HashMap::new() })
+        }
+
+        fn path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        pub fn available(&self, name: &str) -> bool {
+            self.path(name).exists()
+        }
+
+        fn load(&mut self, name: &str) -> Result<&Artifact> {
+            if !self.cache.contains_key(name) {
+                let path = self.path(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+                self.cache.insert(name.to_string(), Artifact { exe });
+            }
+            Ok(self.cache.get(name).unwrap())
+        }
+
+        /// Execute artifact `name`; artifacts are lowered with
+        /// `return_tuple=True`, outputs are unpacked from the tuple.
+        pub fn exec_f32(
+            &mut self,
+            name: &str,
+            inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Vec<f32>>> {
+            // Build literals first (cache borrow rules).
+            let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?;
+                lits.push(lit);
+            }
+            let art = self.load(name)?;
+            let result = art
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            tuple
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+                .collect()
+        }
+    }
 }
 
-/// The PJRT runtime: client + executable cache.
+#[cfg(not(feature = "pjrt-xla"))]
+mod backend {
+    //! Stub backend: artifacts are never available; execution is an error.
+    //! Callers that probe with [`Backend::available`] first (the verify
+    //! paths all do) therefore *skip* PJRT checks instead of failing.
+    use anyhow::{bail, Result};
+    use std::path::{Path, PathBuf};
+
+    pub struct Backend {
+        dir: PathBuf,
+    }
+
+    impl Backend {
+        pub fn new(dir: &Path) -> Result<Self> {
+            Ok(Backend { dir: dir.to_path_buf() })
+        }
+
+        pub fn available(&self, name: &str) -> bool {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if path.exists() {
+                eprintln!(
+                    "warning: PJRT artifact {} exists but this build lacks the \
+                     `pjrt-xla` feature; skipping the PJRT golden-model check",
+                    path.display()
+                );
+            }
+            false
+        }
+
+        pub fn exec_f32(
+            &mut self,
+            name: &str,
+            _inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Vec<f32>>> {
+            bail!(
+                "PJRT backend not compiled in (artifact {name:?}); add the xla \
+                 bindings and rebuild (`cargo add xla && cargo build --features \
+                 pjrt-xla`) to execute AOT artifacts"
+            )
+        }
+    }
+}
+
+/// The PJRT runtime: client + executable cache (or the graceful stub when
+/// built without the `pjrt-xla` feature).
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, Artifact>,
+    backend: backend::Backend,
 }
 
 impl PjrtRuntime {
-    /// Create a CPU PJRT client over an artifact directory.
+    /// Create a CPU PJRT client over an artifact directory. Never fails in
+    /// stub builds; with `pjrt-xla` it fails when no PJRT plugin loads.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(PjrtRuntime { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+        Ok(PjrtRuntime { backend: backend::Backend::new(dir.as_ref())? })
     }
 
     /// The default artifact directory (repo `artifacts/`), honoring
@@ -42,65 +171,22 @@ impl PjrtRuntime {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
-    /// Whether an artifact exists (benches skip PJRT verification when the
-    /// artifacts have not been built).
+    /// Whether an artifact exists *and* this build can execute it (benches
+    /// skip PJRT verification otherwise).
     pub fn available(&self, name: &str) -> bool {
-        self.path(name).exists()
-    }
-
-    fn path(&self, name: &str) -> PathBuf {
-        self.dir.join(format!("{name}.hlo.txt"))
-    }
-
-    fn load(&mut self, name: &str) -> Result<&Artifact> {
-        if !self.cache.contains_key(name) {
-            let path = self.path(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), Artifact { exe });
-        }
-        Ok(self.cache.get(name).unwrap())
+        self.backend.available(name)
     }
 
     /// Execute artifact `name` on f32 inputs with the given shapes; returns
     /// the flattened f32 outputs (one vec per tuple element).
-    ///
-    /// Artifacts are lowered with `return_tuple=True`; outputs are unpacked
-    /// from the tuple.
     pub fn exec_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        // Build literals first (cache borrow rules).
-        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs {
             let n: usize = shape.iter().product();
             if n != data.len() {
                 bail!("shape {:?} does not match {} elements", shape, data.len());
             }
-            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape: {e:?}"))?;
-            lits.push(lit);
         }
-        let art = self.load(name)?;
-        let result = art
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
+        self.backend.exec_f32(name, inputs)
     }
 
     /// Convenience: single-output execution.
@@ -131,12 +217,6 @@ pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) -> Resul
     Ok(())
 }
 
-#[allow(unused)]
-fn _keep_context() -> Result<()> {
-    Option::<()>::Some(()).context("")?;
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,8 +228,20 @@ mod tests {
         assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
     }
 
+    /// A clean checkout (no artifacts, no pjrt-xla feature) must construct a
+    /// runtime and report artifacts as unavailable instead of erroring —
+    /// this is what lets `cargo test -q` pass without the Python AOT step.
+    #[test]
+    fn degrades_gracefully_without_artifacts() {
+        let rt = match PjrtRuntime::new("artifacts-nonexistent-dir") {
+            Ok(rt) => rt,
+            Err(_) => return, // pjrt-xla build without a PJRT plugin: fine
+        };
+        assert!(!rt.available("smoke_matmul2"));
+    }
+
     /// Full PJRT round trip — runs only when `make artifacts` has produced
-    /// the smoke artifact.
+    /// the smoke artifact and the `pjrt-xla` feature is enabled.
     #[test]
     fn smoke_artifact_runs_if_built() {
         let mut rt = match PjrtRuntime::new(PjrtRuntime::default_dir()) {
@@ -157,7 +249,7 @@ mod tests {
             Err(_) => return, // no PJRT plugin in this environment
         };
         if !rt.available("smoke_matmul2") {
-            return; // artifacts not built yet
+            return; // artifacts not built yet (or stub backend)
         }
         let x = [1f32, 2., 3., 4.];
         let y = [1f32, 1., 1., 1.];

@@ -1,0 +1,254 @@
+//! The lowered-binary cache.
+//!
+//! Compiling a kernel (AutoDMA + address-space legalization + Xpulpv2
+//! lowering) is host-side work the scheduler models with a simulated cycle
+//! charge. Same-kernel jobs in a stream amortize it: the first dispatch of
+//! a `(kernel, variant, size, threads, config)` combination lowers the
+//! kernel and pays [`compile_cost_cycles`]; every later job reuses the
+//! cached [`Lowered`] binary for free. This is the mechanism behind the
+//! scheduler's batching — a batch of same-binary jobs pays one compile.
+
+use crate::bench_harness::{compile_workload, variant_kernel, Variant};
+use crate::compiler::{metrics, Lowered};
+use crate::config::HeroConfig;
+use crate::workloads::Workload;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Simulated compile-charge model: a fixed driver/JIT overhead plus a
+/// per-statement lowering cost, in accelerator cycles (a few ms of host
+/// time at the 50 MHz Aurora device clock).
+pub const COMPILE_BASE_CYCLES: u64 = 25_000;
+pub const COMPILE_CYCLES_PER_LOC: u64 = 1_500;
+
+/// Cycles charged for lowering one workload variant.
+pub fn compile_cost_cycles(w: &Workload, variant: Variant) -> u64 {
+    let loc = metrics::complexity(variant_kernel(w, variant)).loc as u64;
+    COMPILE_BASE_CYCLES + loc * COMPILE_CYCLES_PER_LOC
+}
+
+/// Cache key: everything that changes the lowered program.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BinKey {
+    pub kernel: &'static str,
+    pub variant: &'static str,
+    pub size: usize,
+    /// Effective core count the kernel was lowered for.
+    pub threads: u32,
+    pub config: String,
+    pub xpulp: bool,
+}
+
+/// Build the cache key for a job on a platform configuration. The variant
+/// is normalized the way `variant_kernel` resolves it — a Promoted request
+/// on a workload without a promoted form compiles the handwritten kernel,
+/// so it must share that cache entry rather than duplicate it.
+pub fn key_for(cfg: &HeroConfig, w: &Workload, variant: Variant, threads: u32) -> BinKey {
+    let variant = match variant {
+        Variant::Promoted if w.promoted.is_none() => Variant::Handwritten,
+        v => v,
+    };
+    BinKey {
+        kernel: w.name,
+        variant: variant.label(),
+        size: w.size,
+        threads: threads.min(cfg.accel.cores_per_cluster as u32),
+        config: cfg.name.clone(),
+        xpulp: cfg.accel.isa.xpulp,
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    /// Lowerings performed.
+    pub misses: u64,
+    /// Acquires served from the cache.
+    pub hits: u64,
+    /// Simulated compile cycles charged to dispatches.
+    pub charged_cycles: u64,
+}
+
+struct Entry {
+    lowered: Arc<Lowered>,
+    cost: u64,
+    /// Whether a dispatch has paid this entry's compile charge yet (probes
+    /// from admission control fill the cache without consuming the charge).
+    charged: bool,
+}
+
+/// Binary cache keyed on [`BinKey`]. With caching disabled every acquire
+/// lowers afresh and pays the full charge — the scheduler bench's baseline.
+pub struct BinaryCache {
+    enabled: bool,
+    map: HashMap<BinKey, Entry>,
+    pub stats: CacheStats,
+}
+
+impl BinaryCache {
+    pub fn new(enabled: bool) -> Self {
+        BinaryCache { enabled, map: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Number of distinct binaries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch the binary for a job, lowering it on a miss. Returns the
+    /// binary and the simulated compile cycles to charge this dispatch
+    /// (non-zero exactly once per key while caching is on).
+    pub fn acquire(
+        &mut self,
+        cfg: &HeroConfig,
+        w: &Workload,
+        variant: Variant,
+        threads: u32,
+    ) -> Result<(Arc<Lowered>, u64)> {
+        if !self.enabled {
+            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
+            let cost = compile_cost_cycles(w, variant);
+            self.stats.misses += 1;
+            self.stats.charged_cycles += cost;
+            return Ok((Arc::new(lowered), cost));
+        }
+        let key = key_for(cfg, w, variant, threads);
+        if !self.map.contains_key(&key) {
+            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
+            let cost = compile_cost_cycles(w, variant);
+            self.stats.misses += 1;
+            self.map.insert(key.clone(), Entry { lowered: Arc::new(lowered), cost, charged: false });
+        } else {
+            self.stats.hits += 1;
+        }
+        let e = self.map.get_mut(&key).unwrap();
+        let charge = if e.charged { 0 } else { e.cost };
+        e.charged = true;
+        self.stats.charged_cycles += charge;
+        Ok((e.lowered.clone(), charge))
+    }
+
+    /// Admission probe: lower (and cache) without consuming the compile
+    /// charge — the first real dispatch still pays it. With caching
+    /// disabled the probe cannot be stored, so capacity admission on an
+    /// uncached scheduler lowers each admitted job once at submit and again
+    /// at dispatch; both lowerings show up in `stats.misses`.
+    pub fn probe(
+        &mut self,
+        cfg: &HeroConfig,
+        w: &Workload,
+        variant: Variant,
+        threads: u32,
+    ) -> Result<Arc<Lowered>> {
+        if !self.enabled {
+            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
+            self.stats.misses += 1;
+            return Ok(Arc::new(lowered));
+        }
+        let key = key_for(cfg, w, variant, threads);
+        if !self.map.contains_key(&key) {
+            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
+            let cost = compile_cost_cycles(w, variant);
+            self.stats.misses += 1;
+            self.map.insert(key.clone(), Entry { lowered: Arc::new(lowered), cost, charged: false });
+        }
+        Ok(self.map.get(&key).unwrap().lowered.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::workloads;
+
+    #[test]
+    fn charges_once_then_hits() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let mut c = BinaryCache::new(true);
+        let (_, cost1) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(cost1 > 0);
+        let (_, cost2) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert_eq!(cost2, 0);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.charged_cycles, cost1);
+    }
+
+    #[test]
+    fn probe_fills_without_charging() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let mut c = BinaryCache::new(true);
+        let lowered = c.probe(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(lowered.l1_used > 0);
+        assert_eq!(c.stats.charged_cycles, 0);
+        // First dispatch after the probe still pays the compile.
+        let (_, cost) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(cost > 0);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cfg = aurora();
+        let w12 = workloads::gemm::build(12);
+        let w16 = workloads::gemm::build(16);
+        let mut c = BinaryCache::new(true);
+        let (_, c1) = c.acquire(&cfg, &w12, Variant::Handwritten, 8).unwrap();
+        let (_, c2) = c.acquire(&cfg, &w16, Variant::Handwritten, 8).unwrap();
+        let (_, c3) = c.acquire(&cfg, &w12, Variant::Promoted, 8).unwrap();
+        let (_, c4) = c.acquire(&cfg, &w12, Variant::Handwritten, 4).unwrap();
+        assert!(c1 > 0 && c2 > 0 && c3 > 0 && c4 > 0);
+        assert_eq!(c.stats.misses, 4);
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn disabled_cache_always_pays() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let mut c = BinaryCache::new(false);
+        let (_, c1) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        let (_, c2) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(c1 > 0 && c2 > 0);
+        assert_eq!(c.stats.misses, 2);
+        assert_eq!(c.stats.hits, 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn promoted_without_promoted_form_shares_handwritten_entry() {
+        // conv2d has no promoted kernel: a Promoted job compiles the
+        // handwritten form and must hit its cache entry.
+        let cfg = aurora();
+        let w = workloads::conv2d::build(18);
+        let k_p = key_for(&cfg, &w, Variant::Promoted, 8);
+        let k_h = key_for(&cfg, &w, Variant::Handwritten, 8);
+        assert_eq!(k_p, k_h);
+        let mut c = BinaryCache::new(true);
+        let (_, c1) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        let (_, c2) = c.acquire(&cfg, &w, Variant::Promoted, 8).unwrap();
+        assert!(c1 > 0);
+        assert_eq!(c2, 0);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn threads_normalized_to_cluster_width() {
+        let cfg = aurora(); // 8 cores per cluster
+        let w = workloads::gemm::build(12);
+        let k8 = key_for(&cfg, &w, Variant::Handwritten, 8);
+        let k99 = key_for(&cfg, &w, Variant::Handwritten, 99);
+        assert_eq!(k8, k99);
+    }
+}

@@ -1,0 +1,164 @@
+//! Scheduling policies.
+//!
+//! A policy decides two things:
+//!
+//! * **Ordering** — which queued job dispatches next ([`Policy::pick`]):
+//!   FIFO takes the oldest, SJF the one with the smallest static cycle
+//!   prediction ([`crate::compiler::metrics::predict_cycles`]).
+//! * **Admission** — whether submission itself filters jobs
+//!   ([`Policy::admission`]): the capacity-aware policy compares a job's
+//!   static SPM footprint (`Lowered::l1_used`) against what
+//!   `hero_l1_capacity` reports for the target cluster, and either rejects
+//!   oversized jobs or splits them into feasible sub-jobs.
+
+use crate::bench_harness::{variant_kernel, Variant};
+use crate::compiler::metrics::{predict_cycles, PredictOpts};
+use crate::workloads::Workload;
+
+/// What the capacity policy does with a job whose SPM footprint exceeds
+/// `hero_l1_capacity`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OversizeAction {
+    /// Refuse the job (its handle completes as `Rejected`).
+    Reject,
+    /// Decompose it into same-kernel sub-jobs at half the problem size,
+    /// recursively, until the footprint fits (the handle completes as
+    /// `Split` with the child handles).
+    Split,
+}
+
+/// A pluggable scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First in, first out.
+    Fifo,
+    /// Shortest-predicted-first on static cycle predictions.
+    Sjf,
+    /// FIFO ordering plus capacity-aware admission control.
+    Capacity(OversizeAction),
+}
+
+impl Policy {
+    /// Parse a `--policy` argument.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "sjf" => Some(Policy::Sjf),
+            "capacity" | "cap" | "cap-split" => Some(Policy::Capacity(OversizeAction::Split)),
+            "cap-reject" => Some(Policy::Capacity(OversizeAction::Reject)),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Sjf => "sjf",
+            Policy::Capacity(OversizeAction::Split) => "capacity(split)",
+            Policy::Capacity(OversizeAction::Reject) => "capacity(reject)",
+        }
+    }
+
+    /// Admission action, if this policy gates submissions.
+    pub fn admission(&self) -> Option<OversizeAction> {
+        match self {
+            Policy::Capacity(a) => Some(*a),
+            _ => None,
+        }
+    }
+
+    /// Index into `queue` of the job to dispatch next. `predicted` maps a
+    /// job id to its static cycle prediction.
+    pub fn pick(&self, queue: &[usize], predicted: impl Fn(usize) -> u64) -> usize {
+        assert!(!queue.is_empty());
+        match self {
+            Policy::Fifo | Policy::Capacity(_) => 0,
+            Policy::Sjf => {
+                // Ties break toward the older job (stable argmin), which is
+                // what keeps SJF starvation-free for equal-length jobs.
+                let mut best = 0;
+                for (i, &id) in queue.iter().enumerate().skip(1) {
+                    if predicted(id) < predicted(queue[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Static cycle prediction for one job: the kernel form the job will
+/// *execute*, walked with the job's problem size as the fallback trip count
+/// and its thread count as the parallel width.
+///
+/// For the AutoDma variant the compiler input is the unmodified
+/// (external-memory) kernel, but the executed binary is the SPM-tiled
+/// AutoDMA output — costed here by its closest static proxy, the
+/// handwritten tiling. Predicting the unmodified form instead would
+/// over-estimate AutoDma jobs by 1-2 orders of magnitude and invert SJF's
+/// ordering for exactly the jobs it is meant to favor.
+pub fn predict_job(w: &Workload, variant: Variant, threads: u32) -> u64 {
+    let kernel = match variant {
+        Variant::AutoDma => variant_kernel(w, Variant::Handwritten),
+        _ => variant_kernel(w, variant),
+    };
+    predict_cycles(
+        kernel,
+        &PredictOpts { default_trips: w.size as u64, par_ways: threads.max(1) as u64 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Policy::parse("fifo"), Some(Policy::Fifo));
+        assert_eq!(Policy::parse("sjf"), Some(Policy::Sjf));
+        assert_eq!(Policy::parse("capacity"), Some(Policy::Capacity(OversizeAction::Split)));
+        assert_eq!(Policy::parse("cap-reject"), Some(Policy::Capacity(OversizeAction::Reject)));
+        assert_eq!(Policy::parse("lifo"), None);
+        assert_eq!(Policy::Sjf.label(), "sjf");
+    }
+
+    #[test]
+    fn fifo_picks_head_sjf_picks_shortest() {
+        let queue = [10usize, 11, 12];
+        let predicted = |id: usize| match id {
+            10 => 500u64,
+            11 => 100,
+            _ => 300,
+        };
+        assert_eq!(Policy::Fifo.pick(&queue, predicted), 0);
+        assert_eq!(Policy::Capacity(OversizeAction::Reject).pick(&queue, predicted), 0);
+        assert_eq!(Policy::Sjf.pick(&queue, predicted), 1);
+    }
+
+    #[test]
+    fn sjf_ties_break_toward_older() {
+        let queue = [3usize, 4, 5];
+        assert_eq!(Policy::Sjf.pick(&queue, |_| 42), 0);
+    }
+
+    #[test]
+    fn prediction_orders_problem_sizes() {
+        let small = workloads::gemm::build(12);
+        let big = workloads::gemm::build(24);
+        let ps = predict_job(&small, Variant::Handwritten, 8);
+        let pb = predict_job(&big, Variant::Handwritten, 8);
+        assert!(pb > ps, "{pb} vs {ps}");
+    }
+
+    #[test]
+    fn only_capacity_admits() {
+        assert_eq!(Policy::Fifo.admission(), None);
+        assert_eq!(Policy::Sjf.admission(), None);
+        assert_eq!(
+            Policy::Capacity(OversizeAction::Split).admission(),
+            Some(OversizeAction::Split)
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! The accelerator instance pool.
+//!
+//! Each pool slot models one HEROv2 accelerator card on the shared job
+//! timeline. A slot is a serializing resource — exactly the abstraction
+//! [`crate::noc::Port`] already provides for NoC data paths — so the pool
+//! reuses it: dispatching a job `acquire`s the slot's port for the job's
+//! simulated duration, and per-instance utilization falls out of
+//! `Port::busy_cycles` divided by the pool makespan.
+//!
+//! Functional state is *not* shared between jobs: every job runs on a fresh
+//! `Accel` (its own DRAM, SPMs and IOMMU), which is what makes results
+//! independent of placement and policy. The pool tracks *time*, not memory.
+
+use crate::noc::Port;
+
+/// Cycle accounting for one pool slot.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct InstanceStats {
+    /// Jobs completed on this instance.
+    pub jobs: u64,
+    /// Sum of pure device cycles of those jobs (excludes compile charges).
+    pub device_cycles: u64,
+    /// Sum of the jobs' DMA-engine busy cycles (wide-NoC occupancy).
+    pub dma_busy_cycles: u64,
+}
+
+/// A pool of `K` accelerator instances sharing one simulated timeline that
+/// starts at cycle 0.
+#[derive(Debug)]
+pub struct InstancePool {
+    ports: Vec<Port>,
+    stats: Vec<InstanceStats>,
+}
+
+impl InstancePool {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "pool needs at least one instance");
+        InstancePool { ports: (0..k).map(|_| Port::new()).collect(), stats: vec![InstanceStats::default(); k] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ports.is_empty()
+    }
+
+    /// The instance that frees up earliest (ties broken toward the lowest
+    /// index, so single-job streams always land on instance 0).
+    pub fn pick(&self) -> usize {
+        self.ports
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, p)| (p.free_at(), *i))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Occupy instance `i` for `duration` cycles; returns `(start, end)`.
+    pub fn assign(&mut self, i: usize, duration: u64) -> (u64, u64) {
+        self.ports[i].acquire(0, duration)
+    }
+
+    /// Book a completed job's cycle breakdown on instance `i`.
+    pub fn record(&mut self, i: usize, device_cycles: u64, dma_busy_cycles: u64) {
+        self.stats[i].jobs += 1;
+        self.stats[i].device_cycles += device_cycles;
+        self.stats[i].dma_busy_cycles += dma_busy_cycles;
+    }
+
+    pub fn stats(&self, i: usize) -> InstanceStats {
+        self.stats[i]
+    }
+
+    /// Simulated cycle at which the last instance goes idle.
+    pub fn makespan(&self) -> u64 {
+        self.ports.iter().map(|p| p.free_at()).max().unwrap_or(0)
+    }
+
+    /// Occupied cycles of instance `i` (`noc::Port::busy_cycles`).
+    pub fn busy_cycles(&self, i: usize) -> u64 {
+        self.ports[i].busy_cycles
+    }
+
+    /// Fraction of the pool makespan instance `i` spent busy.
+    pub fn utilization(&self, i: usize) -> f64 {
+        let m = self.makespan();
+        if m == 0 {
+            0.0
+        } else {
+            self.busy_cycles(i) as f64 / m as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_prefers_least_loaded() {
+        let mut p = InstancePool::new(3);
+        assert_eq!(p.pick(), 0);
+        p.assign(0, 100);
+        assert_eq!(p.pick(), 1);
+        p.assign(1, 50);
+        p.assign(2, 60);
+        assert_eq!(p.pick(), 1); // frees at 50, earliest
+    }
+
+    #[test]
+    fn assign_serializes_per_instance() {
+        let mut p = InstancePool::new(1);
+        let (s1, e1) = p.assign(0, 10);
+        let (s2, e2) = p.assign(0, 5);
+        assert_eq!((s1, e1), (0, 10));
+        assert_eq!((s2, e2), (10, 15));
+        assert_eq!(p.makespan(), 15);
+        assert_eq!(p.busy_cycles(0), 15);
+    }
+
+    #[test]
+    fn utilization_uses_port_busy_cycles() {
+        let mut p = InstancePool::new(2);
+        p.assign(0, 100);
+        p.assign(1, 50);
+        assert!((p.utilization(0) - 1.0).abs() < 1e-12);
+        assert!((p.utilization(1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spreading_beats_one_instance() {
+        // Four 100-cycle jobs: pool of 4 finishes in 100, pool of 1 in 400.
+        let mut p1 = InstancePool::new(1);
+        let mut p4 = InstancePool::new(4);
+        for _ in 0..4 {
+            let i1 = p1.pick();
+            p1.assign(i1, 100);
+            let i4 = p4.pick();
+            p4.assign(i4, 100);
+        }
+        assert_eq!(p1.makespan(), 400);
+        assert_eq!(p4.makespan(), 100);
+    }
+}

@@ -1,0 +1,159 @@
+//! Aggregate scheduler reporting: throughput, utilization, cache efficacy.
+
+use std::fmt;
+
+/// Per-instance cycle summary.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceReport {
+    pub jobs: u64,
+    /// Occupied cycles on the shared timeline (`noc::Port::busy_cycles`).
+    pub busy_cycles: u64,
+    /// Pure device cycles of the jobs run here (excludes compile charges).
+    pub device_cycles: u64,
+    /// DMA wide-path occupancy summed over this instance's jobs.
+    pub dma_busy_cycles: u64,
+    /// busy / makespan.
+    pub utilization: f64,
+}
+
+/// One serve run's aggregate outcome.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: &'static str,
+    pub caching: bool,
+    pub batching: bool,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub split: usize,
+    /// Jobs whose numerics failed the host golden model (should be 0).
+    pub verify_failures: usize,
+    /// Simulated cycle the last instance went idle.
+    pub makespan_cycles: u64,
+    pub total_device_cycles: u64,
+    /// Simulated compile cycles charged across all dispatches.
+    pub compile_cycles: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub freq_mhz: u32,
+    /// Order-stable digest over every completed job's output arrays:
+    /// bit-identical results ⇔ identical digest, regardless of policy,
+    /// pool size, batching or caching.
+    pub digest: u64,
+    pub instances: Vec<InstanceReport>,
+}
+
+impl ServeReport {
+    /// Completed jobs per simulated second at the accelerator clock.
+    pub fn jobs_per_sec(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan_cycles as f64 / (self.freq_mhz as f64 * 1e6))
+    }
+
+    /// Completed jobs per simulated megacycle (clock-independent form).
+    pub fn jobs_per_mcycle(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan_cycles as f64 / 1e6)
+    }
+}
+
+impl fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "policy {} | pool {} | cache {} | batching {}",
+            self.policy,
+            self.instances.len(),
+            if self.caching { "on" } else { "off" },
+            if self.batching { "on" } else { "off" },
+        )?;
+        writeln!(
+            f,
+            "jobs          : {} submitted, {} completed, {} rejected, {} split, {} verify failures",
+            self.submitted, self.completed, self.rejected, self.split, self.verify_failures
+        )?;
+        writeln!(
+            f,
+            "makespan      : {} cycles ({:.2} ms at {} MHz)",
+            self.makespan_cycles,
+            self.makespan_cycles as f64 / (self.freq_mhz as f64 * 1e3),
+            self.freq_mhz
+        )?;
+        writeln!(
+            f,
+            "throughput    : {:.1} jobs/s ({:.3} jobs/Mcycle)",
+            self.jobs_per_sec(),
+            self.jobs_per_mcycle()
+        )?;
+        writeln!(
+            f,
+            "compile       : {} lowerings, {} cache hits, {} cycles charged",
+            self.cache_misses, self.cache_hits, self.compile_cycles
+        )?;
+        for (i, inst) in self.instances.iter().enumerate() {
+            writeln!(
+                f,
+                "instance {:>3}  : {:>4} jobs, busy {:>12} cy, dma {:>12} cy, util {:>5.1}%",
+                i,
+                inst.jobs,
+                inst.busy_cycles,
+                inst.dma_busy_cycles,
+                100.0 * inst.utilization
+            )?;
+        }
+        write!(f, "result digest : {:#018x}", self.digest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ServeReport {
+        ServeReport {
+            policy: "fifo",
+            caching: true,
+            batching: true,
+            submitted: 10,
+            completed: 8,
+            rejected: 2,
+            split: 0,
+            verify_failures: 0,
+            makespan_cycles: 4_000_000,
+            total_device_cycles: 3_900_000,
+            compile_cycles: 100_000,
+            cache_hits: 6,
+            cache_misses: 2,
+            freq_mhz: 50,
+            digest: 0xdead_beef,
+            instances: vec![InstanceReport {
+                jobs: 8,
+                busy_cycles: 4_000_000,
+                device_cycles: 3_900_000,
+                dma_busy_cycles: 50_000,
+                utilization: 1.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = report();
+        // 8 jobs in 4 Mcycles at 50 MHz = 80 ms -> 100 jobs/s.
+        assert!((r.jobs_per_sec() - 100.0).abs() < 1e-9, "{}", r.jobs_per_sec());
+        assert!((r.jobs_per_mcycle() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn renders_all_sections() {
+        let s = report().to_string();
+        assert!(s.contains("8 completed"));
+        assert!(s.contains("jobs/s"));
+        assert!(s.contains("instance   0"));
+        assert!(s.contains("result digest"));
+    }
+}

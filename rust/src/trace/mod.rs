@@ -188,9 +188,100 @@ impl PerfCounters {
     }
 }
 
+/// Scheduler-level events (the `sched` subsystem's analogue of the device
+/// perf events above): the life cycle of an offload job from submission
+/// through dispatch to completion, time-stamped in simulated cycles.
+/// Rendered by `hero serve --trace`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Job entered the queue.
+    Submitted { job: usize },
+    /// Job was refused (admission control, unknown kernel, compile error).
+    Rejected { job: usize, reason: String },
+    /// Oversized job decomposed into feasible sub-jobs (capacity policy).
+    Split { job: usize, children: Vec<usize> },
+    /// Dispatch had to lower the kernel (binary cache miss): `cycles` of
+    /// simulated compile time were charged to the job's instance.
+    CompileMiss { job: usize, cycles: u64 },
+    /// Dispatch reused a cached binary.
+    CompileHit { job: usize },
+    /// Job (plus `batched` same-binary followers) started on an instance.
+    Dispatched { job: usize, instance: usize, start: u64, batched: usize },
+    /// Job finished on its instance at simulated cycle `end`.
+    Completed { job: usize, instance: usize, end: u64 },
+}
+
+/// An append-only scheduler event log.
+#[derive(Debug, Default)]
+pub struct SchedTrace {
+    pub events: Vec<SchedEvent>,
+}
+
+impl SchedTrace {
+    pub fn new() -> Self {
+        SchedTrace::default()
+    }
+
+    pub fn record(&mut self, e: SchedEvent) {
+        self.events.push(e);
+    }
+
+    /// Jobs the trace saw dispatched, in dispatch order.
+    pub fn dispatch_order(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                SchedEvent::Dispatched { job, .. } => Some(*job),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render one line per event.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let line = match e {
+                SchedEvent::Submitted { job } => format!("submit    job {job}"),
+                SchedEvent::Rejected { job, reason } => format!("reject    job {job}: {reason}"),
+                SchedEvent::Split { job, children } => {
+                    format!("split     job {job} -> {children:?}")
+                }
+                SchedEvent::CompileMiss { job, cycles } => {
+                    format!("compile   job {job} (miss, {cycles} cy)")
+                }
+                SchedEvent::CompileHit { job } => format!("compile   job {job} (cache hit)"),
+                SchedEvent::Dispatched { job, instance, start, batched } => format!(
+                    "dispatch  job {job} -> instance {instance} at cycle {start} (+{batched} batched)"
+                ),
+                SchedEvent::Completed { job, instance, end } => {
+                    format!("complete  job {job} on instance {instance} at cycle {end}")
+                }
+            };
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sched_trace_records_and_renders() {
+        let mut t = SchedTrace::new();
+        t.record(SchedEvent::Submitted { job: 0 });
+        t.record(SchedEvent::CompileMiss { job: 0, cycles: 1000 });
+        t.record(SchedEvent::Dispatched { job: 0, instance: 1, start: 0, batched: 2 });
+        t.record(SchedEvent::Completed { job: 0, instance: 1, end: 500 });
+        assert_eq!(t.dispatch_order(), vec![0]);
+        let s = t.render();
+        assert!(s.contains("dispatch  job 0 -> instance 1"));
+        assert!(s.contains("cache") || s.contains("miss"));
+        assert_eq!(s.lines().count(), 4);
+    }
 
     #[test]
     fn bump_and_get() {

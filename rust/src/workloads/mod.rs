@@ -25,6 +25,7 @@ pub mod darknet;
 pub mod gemm;
 pub mod mm2;
 pub mod mm3;
+pub mod synth;
 
 use crate::compiler::ir::Kernel;
 
@@ -143,6 +144,26 @@ pub fn all_tiny() -> Vec<Workload> {
 /// Look a workload up by name at its default size.
 pub fn by_name(name: &str) -> Option<Workload> {
     all_default().into_iter().find(|w| w.name == name)
+}
+
+/// Build a workload by name at an explicit problem size.
+pub fn build(name: &str, size: usize) -> Option<Workload> {
+    Some(match name {
+        "2mm" => mm2::build(size),
+        "3mm" => mm3::build(size),
+        "atax" => atax::build(size),
+        "bicg" => bicg::build(size),
+        "conv2d" => conv2d::build(size),
+        "covar" => covar::build(size),
+        "darknet" => darknet::build(size),
+        "gemm" => gemm::build(size),
+        _ => return None,
+    })
+}
+
+/// Whether `name` is a registered kernel (cheaper than building one).
+pub fn known(name: &str) -> bool {
+    matches!(name, "2mm" | "3mm" | "atax" | "bicg" | "conv2d" | "covar" | "darknet" | "gemm")
 }
 
 #[cfg(test)]

@@ -1,0 +1,119 @@
+//! Synthetic mixed-workload job streams for the offload scheduler.
+//!
+//! A "job" at this layer is plain data — kernel name, problem size,
+//! variant, thread count, input seed — so the generator stays independent
+//! of the scheduler that consumes it (`sched::Scheduler::submit` turns a
+//! [`JobDesc`] into a queued job). The mix is deterministic in the stream
+//! seed: the same `(n, seed)` always yields the same job list, which is
+//! what makes cross-policy bit-identity checks possible.
+//!
+//! Sizes are intentionally small (same scale as [`super::all_tiny`]) so a
+//! 100-job `hero serve` run completes in seconds of wall time while still
+//! exercising every kernel, several tiling variants, and enough distinct
+//! (kernel, variant, size, threads) binaries that the scheduler's binary
+//! cache sees both hits and misses.
+
+use super::Workload;
+use crate::bench_harness::Variant;
+use crate::testkit::Rng;
+
+/// One synthetic offload request (scheduler-independent plain data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobDesc {
+    pub kernel: &'static str,
+    pub size: usize,
+    pub variant: Variant,
+    pub threads: u32,
+    /// Seed for the job's input data (`Workload::gen_data`).
+    pub seed: u64,
+}
+
+impl JobDesc {
+    /// Materialize the workload this job runs.
+    pub fn workload(&self) -> Option<Workload> {
+        super::build(self.kernel, self.size)
+    }
+}
+
+/// Kernel menu: each entry is (name, [small size, larger size]). Two sizes
+/// per kernel keeps the distinct-binary count at ~2x kernels x variants, so
+/// a long stream revisits each binary many times (batching pays off).
+const MENU: [(&str, [usize; 2]); 8] = [
+    ("gemm", [12, 24]),
+    ("2mm", [12, 16]),
+    ("3mm", [10, 12]),
+    ("atax", [24, 40]),
+    ("bicg", [24, 40]),
+    ("conv2d", [18, 24]),
+    ("covar", [12, 16]),
+    ("darknet", [14, 18]),
+];
+
+/// SPM-tiled variants only: the unmodified (external-memory) form is one to
+/// two orders of magnitude slower to simulate and is covered by the fig4/7
+/// benches; a serve stream is meant to model production offload traffic.
+const VARIANTS: [Variant; 4] =
+    [Variant::Handwritten, Variant::Handwritten, Variant::Promoted, Variant::AutoDma];
+
+/// Generate `n` mixed jobs, deterministically in `seed`.
+pub fn mixed_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
+    let mut rng = Rng::new(seed ^ 0x5EED_0B50);
+    (0..n)
+        .map(|_| {
+            let (kernel, sizes) = *rng.pick(&MENU);
+            JobDesc {
+                kernel,
+                size: *rng.pick(&sizes),
+                variant: *rng.pick(&VARIANTS),
+                threads: *rng.pick(&[4u32, 8, 8]),
+                seed: rng.next_u64(),
+            }
+        })
+        .collect()
+}
+
+/// Generate `n` jobs at the smallest size of each kernel only — the fast
+/// variant for property tests that run many scheduler configurations.
+pub fn tiny_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
+    mixed_jobs(n, seed)
+        .into_iter()
+        .map(|mut j| {
+            let (_, sizes) = MENU.iter().find(|(k, _)| *k == j.kernel).unwrap();
+            j.size = sizes[0];
+            j
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        assert_eq!(mixed_jobs(50, 7), mixed_jobs(50, 7));
+        assert_ne!(mixed_jobs(50, 7), mixed_jobs(50, 8));
+        assert_eq!(mixed_jobs(50, 7).len(), 50);
+    }
+
+    #[test]
+    fn all_jobs_buildable_and_mixed() {
+        let jobs = mixed_jobs(100, 42);
+        let mut kernels = std::collections::HashSet::new();
+        for j in &jobs {
+            let w = j.workload().expect("menu kernel must build");
+            assert_eq!(w.size, j.size);
+            kernels.insert(j.kernel);
+        }
+        // 100 draws over 8 kernels: all of them must appear.
+        assert_eq!(kernels.len(), MENU.len());
+    }
+
+    #[test]
+    fn tiny_jobs_use_smallest_sizes() {
+        for j in tiny_jobs(40, 3) {
+            let (_, sizes) = MENU.iter().find(|(k, _)| *k == j.kernel).unwrap();
+            assert_eq!(j.size, sizes[0]);
+        }
+    }
+}

@@ -237,6 +237,96 @@ fn prop_xpulp_and_base_isa_agree() {
 }
 
 #[test]
+fn prop_sched_results_identical_across_policies_and_pools() {
+    // Scheduling moves *time*, never numerics: the same job stream must
+    // produce bit-identical per-job results (hence an identical digest)
+    // under any policy, pool size, batching or caching configuration.
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 6), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let mut digests = Vec::new();
+            for (policy, pool, cache, batch) in [
+                (Policy::Fifo, 1usize, true, false),
+                (Policy::Sjf, 3, true, true),
+                (Policy::parse("cap-reject").unwrap(), 2, false, true),
+            ] {
+                let mut s = Scheduler::new(aurora(), pool, policy)
+                    .with_cache(cache)
+                    .with_batching(batch);
+                let handles = s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                let r = s.report();
+                if r.completed != jobs.len() {
+                    return Err(format!(
+                        "{}: only {} of {} jobs completed",
+                        policy.label(),
+                        r.completed,
+                        jobs.len()
+                    ));
+                }
+                if r.verify_failures != 0 {
+                    return Err(format!("{}: golden-model mismatch", policy.label()));
+                }
+                if handles.iter().any(|h| !s.state(*h).settled()) {
+                    return Err(format!("{}: unsettled handle", policy.label()));
+                }
+                digests.push(r.digest);
+            }
+            if digests.windows(2).any(|w| w[0] != w[1]) {
+                return Err(format!("digests diverge across configurations: {digests:#x?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sched_no_submitted_job_starves() {
+    // Every handle must settle (Done, Rejected or Split) once the queue is
+    // drained — including oversized jobs under capacity pressure and
+    // long jobs that SJF keeps pushing behind shorter ones.
+    use herov2::bench_harness::Variant;
+    use herov2::sched::{JobDesc, JobHandle, OversizeAction, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(3, 5), rng.range(1, 1 << 20), rng.bool()),
+        |&(n, seed, sjf)| {
+            let mut cfg = aurora();
+            cfg.accel.l1_bytes = 16 * 1024; // shrink L1 to pressure admission
+            let policy =
+                if sjf { Policy::Sjf } else { Policy::Capacity(OversizeAction::Split) };
+            let mut s = Scheduler::new(cfg, 2, policy).with_verify(false);
+            s.submit_all(&synth::tiny_jobs(n, seed));
+            // An oversized job: the capacity policy must split it into
+            // feasible sub-jobs; SJF (no admission) must still settle it
+            // (rejected at dispatch when its tiling overflows L1).
+            s.submit(JobDesc {
+                kernel: "gemm",
+                size: 64,
+                variant: Variant::Handwritten,
+                threads: 8,
+                seed,
+            });
+            s.drain().map_err(|e| e.to_string())?;
+            for id in 0..s.submitted() {
+                if !s.state(JobHandle(id)).settled() {
+                    return Err(format!("job {id} never settled"));
+                }
+            }
+            if s.pending() != 0 {
+                return Err(format!("{} jobs left in the queue", s.pending()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_config_overrides_roundtrip() {
     check(
         40,
