@@ -1,17 +1,23 @@
-//! Scheduler scaling study: one FIFO instance without a binary cache vs a
-//! pooled, batched, cached configuration.
+//! Scheduler scaling study: pool/cache scaling on an uncontended board,
+//! then shared carrier-board DRAM contention.
 //!
 //! ```sh
 //! cargo bench --bench sched
 //! ```
 //!
-//! The acceptance bar for the subsystem: pool=4 with binary caching must
-//! deliver at least 2x the simulated throughput (jobs per megacycle of
-//! pool makespan) of pool=1 uncached — with bit-identical job results,
-//! regardless of policy, pool size, batching or caching.
+//! Acceptance bars for the subsystem:
+//!
+//! * pool=4 with binary caching delivers at least 2x the simulated
+//!   throughput (jobs per megacycle of pool makespan) of pool=1 uncached —
+//!   with bit-identical job results regardless of policy, pool size,
+//!   batching or caching.
+//! * With the shared-DRAM coupling enabled on a constrained board, a
+//!   DMA-heavy stream scales **sub-linearly**: pool=4 throughput strictly
+//!   between 1x and 4x of pool=1 — while pool=1 stays cycle-identical
+//!   (makespan and digest) to the uncontended baseline.
 
 use herov2::config::aurora;
-use herov2::sched::{Policy, Scheduler, ServeReport};
+use herov2::sched::{BoardSpec, Policy, Scheduler, ServeReport};
 use herov2::workloads::synth;
 
 fn run(pool: usize, policy: Policy, cache: bool, batch: bool, jobs: &[synth::JobDesc]) -> ServeReport {
@@ -19,6 +25,18 @@ fn run(pool: usize, policy: Policy, cache: bool, batch: bool, jobs: &[synth::Job
         .with_cache(cache)
         .with_batching(batch)
         .with_verify(false); // numerics are covered by the digest identity
+    s.submit_all(jobs);
+    s.drain().expect("drain");
+    s.report()
+}
+
+fn run_board(pool: usize, board: BoardSpec, jobs: &[synth::JobDesc]) -> ServeReport {
+    // Batching off so placement spreads evenly: the contention study
+    // measures the board, not batch imbalance.
+    let mut s = Scheduler::new(aurora(), pool, Policy::Fifo)
+        .with_board(board)
+        .with_batching(false)
+        .with_verify(false);
     s.submit_all(jobs);
     s.drain().expect("drain");
     s.report()
@@ -70,4 +88,50 @@ fn main() {
     );
     assert!(speedup >= 2.0, "scheduler scaling regressed: {speedup:.2}x < 2x");
     println!("results bit-identical across configurations: OK");
+
+    // --- shared carrier-board DRAM contention -----------------------------
+    // A DMA-heavy stream on a board whose DRAM peak (12 B/cy) covers one
+    // instance's 8 B/cy NoC drain rate but not four of them.
+    let heavy = synth::dma_heavy_jobs(24, 11);
+    let bw = 12u64;
+    println!("\n{} DMA-heavy jobs, board DRAM capped at {bw} B/cycle\n", heavy.len());
+    println!(
+        "{:<26} {:>14} {:>12} {:>14} {:>10}",
+        "configuration", "makespan (cy)", "jobs/Mcycle", "dram stall cy", "dram util"
+    );
+    let solo_open = run_board(1, BoardSpec::uncontended(), &heavy);
+    let mut contended = Vec::new();
+    for pool in [1usize, 2, 4] {
+        let r = run_board(pool, BoardSpec::with_bandwidth(bw), &heavy);
+        assert_eq!(r.completed, heavy.len());
+        println!(
+            "pool={pool} fifo board={bw}B/cy{:<4} {:>14} {:>12.3} {:>14} {:>9.1}%",
+            "",
+            r.makespan_cycles,
+            r.jobs_per_mcycle(),
+            r.dram_stall_cycles,
+            100.0 * r.dram_utilization
+        );
+        contended.push(r);
+    }
+    let solo = &contended[0];
+    let quad = &contended[2];
+    // pool=1 with contention accounting is cycle-identical to uncontended.
+    assert_eq!(
+        solo.makespan_cycles, solo_open.makespan_cycles,
+        "pool=1 must be cycle-identical with the shared-DRAM model enabled"
+    );
+    assert_eq!(solo.digest, solo_open.digest);
+    assert_eq!(solo.dram_stall_cycles, 0);
+    // Contention never touches numerics.
+    assert_eq!(quad.digest, solo.digest);
+    assert!(quad.dram_stall_cycles > 0, "a DMA-heavy pool=4 stream must contend");
+    let sp = quad.jobs_per_mcycle() / solo.jobs_per_mcycle();
+    println!(
+        "\npool=4 vs pool=1 on the contended board: {sp:.2}x \
+         (sub-linear target: strictly between 1x and 4x)"
+    );
+    assert!(sp > 1.0, "pool=4 regressed below pool=1: {sp:.2}x");
+    assert!(sp < 4.0, "pool=4 scaled linearly despite DRAM contention: {sp:.2}x");
+    println!("shared-DRAM contention bends pool scaling sub-linear: OK");
 }

@@ -13,7 +13,7 @@ use crate::config::HeroConfig;
 use crate::dma::Descriptor;
 use crate::iommu::{Iommu, PageTable};
 use crate::isa::{AluOp, AmoOp, Cond, Csr, DmaDir, FpOp, Inst, Program};
-use crate::mem::{map, Dram, WordMem};
+use crate::mem::{map, DramPort, SharedDram, WordMem};
 use crate::trace::Event;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -31,8 +31,13 @@ pub struct Accel {
     pub clusters: Vec<Cluster>,
     /// Shared L2 SPM.
     pub l2: WordMem,
-    /// Shared main memory (physical).
-    pub dram: Dram,
+    /// Shared carrier-board main memory: storage plus the cycle-accounted
+    /// bandwidth model every cluster's DMA engine and the narrow
+    /// ext-address path contend on (see [`crate::mem::dram`]).
+    pub dram: SharedDram,
+    /// This accelerator's requester port for narrow (single-word remote)
+    /// main-memory accesses.
+    narrow_dram_port: DramPort,
     /// Hybrid IOMMU shared by all clusters.
     pub iommu: Iommu,
     /// Host-managed application page table (read-only for the accelerator).
@@ -64,7 +69,19 @@ impl Accel {
     /// what experiments need).
     pub fn new(cfg: HeroConfig, dram_bytes: usize) -> Self {
         cfg.validate().map_err(|e| anyhow::anyhow!(e)).expect("invalid config");
-        let clusters = (0..cfg.accel.n_clusters).map(|i| Cluster::new(i, &cfg)).collect();
+        // One shared DRAM for the whole board: every cluster's DMA engine
+        // gets its own requester port, plus one for the narrow path. With
+        // the paper configurations the DRAM peak far exceeds the per-port
+        // NoC rates, so contention only appears when a config (or the
+        // instance pool) narrows the shared bandwidth.
+        let mut dram = SharedDram::new(dram_bytes, cfg.dram.bytes_per_cycle, 0);
+        let clusters = (0..cfg.accel.n_clusters)
+            .map(|i| {
+                let port = dram.add_port(format!("cluster{i}-dma"), false);
+                Cluster::new(i, &cfg, port)
+            })
+            .collect();
+        let narrow_dram_port = dram.add_port("narrow", false);
         let kc = StepConsts {
             l0_insts: cfg.accel.l0_insts as u32,
             line_insts: cfg.accel.icache_line_insts as u32,
@@ -77,7 +94,8 @@ impl Accel {
         Accel {
             kc,
             l2: WordMem::new(cfg.accel.l2_bytes),
-            dram: Dram::new(dram_bytes),
+            dram,
+            narrow_dram_port,
             iommu: Iommu::new(cfg.iommu),
             pt: PageTable::new(cfg.iommu.page_bytes),
             clusters,
@@ -166,6 +184,10 @@ impl Accel {
             }
             self.clusters[cl_idx].dma.retire(now.saturating_sub(1_000));
         }
+        if now % 1024 == 0 {
+            // Bound the DRAM ledger's breakpoint list on long runs.
+            self.dram.trim(now.saturating_sub(4_096));
+        }
         self.now += 1;
     }
 
@@ -229,7 +251,7 @@ impl Accel {
                 return self.step_core_slow(cl_idx, c_idx);
             }
             // --- fetch (full model, fast borrows) ---
-            if pc < core.l0_base || pc >= core.l0_base + l0_insts {
+            if !(core.l0_base..core.l0_base + l0_insts).contains(&pc) {
                 let line = pc / line_insts;
                 let slot = (line as usize) % icache_tags.len();
                 if icache_tags[slot] != line {
@@ -452,7 +474,7 @@ impl Accel {
         let l0_insts = self.cfg.accel.l0_insts as u32;
         let in_l0 = {
             let base = self.clusters[cl_idx].cores[c_idx].l0_base;
-            pc >= base && pc < base + l0_insts
+            (base..base + l0_insts).contains(&pc)
         };
         if !in_l0 {
             // Fetch from the shared icache.
@@ -837,12 +859,12 @@ impl Accel {
                     core.l0_base = min_base;
                 }
             } else if taken_branch_to.is_some() {
-                let in_window = next_pc >= core.l0_base && next_pc < core.l0_base + l0_insts;
+                let in_window = (core.l0_base..core.l0_base + l0_insts).contains(&next_pc);
                 if !in_window {
                     core.l0_base = next_pc;
                     extra += FETCH_GROUP_BYTES / self.cfg.ifetch_bytes_per_cycle().max(1);
                 }
-            } else if next_pc < core.l0_base || next_pc >= core.l0_base + l0_insts {
+            } else if !(core.l0_base..core.l0_base + l0_insts).contains(&next_pc) {
                 // Hardware-loop back-edge out of window: move it.
                 core.l0_base = next_pc;
             }
@@ -976,7 +998,7 @@ impl Accel {
             .acquire(now + t.cost, self.cfg.timing.remote_service);
         let done = start + self.cfg.timing.remote_word;
         let extra = (done - now) + self.cfg.timing.ext_addr_overhead;
-        let value = self.dram.mem.load(t.pa as u32);
+        let value = self.dram.port_load(self.narrow_dram_port, t.pa as u32);
         let core = &mut self.clusters[cl_idx].cores[c_idx];
         core.perf.add(Event::LoadStall, extra);
         (value, extra)
@@ -999,7 +1021,7 @@ impl Accel {
         let (start, _) = self.clusters[cl_idx]
             .narrow_port
             .acquire(now + t.cost, self.cfg.timing.remote_service);
-        self.dram.mem.store(t.pa as u32, val);
+        self.dram.port_store(self.narrow_dram_port, t.pa as u32, val);
         let extra = (start - now) + self.cfg.timing.ext_addr_overhead + 1;
         let core = &mut self.clusters[cl_idx].cores[c_idx];
         core.perf.add(Event::LoadStall, extra);
@@ -1013,36 +1035,32 @@ impl Accel {
         if cl_idx >= self.clusters.len() {
             bail!("no such cluster {cl_idx}");
         }
-        let translate_cost = self.dma_move_data(d);
-        let now = self.now;
-        let setup = self.clusters[cl_idx].dma.setup_cycles();
-        let busy_before = self.clusters[cl_idx].dma.stats.busy_cycles;
-        let (id, _) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
-        let busy = self.clusters[cl_idx].dma.stats.busy_cycles - busy_before;
-        // Book the same event set as core-initiated submissions (on core 0;
-        // no core pays setup stalls for external transfers).
-        let core = &mut self.clusters[cl_idx].cores[0];
-        core.perf.bump(Event::DmaTransfers);
-        core.perf.add(Event::DmaBursts, d.bursts());
-        core.perf.add(Event::DmaBytes, d.total_bytes());
-        core.perf.add(Event::DmaBusyCycles, busy);
+        // Book on core 0: no core pays setup stalls for external transfers.
+        let (id, _) = self.dma_submit(cl_idx, 0, d);
         Ok(id)
     }
 
-    /// Submit a DMA descriptor: move the data functionally, compute timing,
-    /// and charge the programming core `setup_cycles`.
+    /// Submit a DMA descriptor: move the data functionally, enqueue on the
+    /// cluster engine (which routes the DRAM side through its shared-DRAM
+    /// port), book perf events on `c_idx`, and return the programming
+    /// core's `setup_cycles` stall.
     fn dma_submit(&mut self, cl_idx: usize, c_idx: usize, d: &Descriptor) -> (u32, u64) {
         let translate_cost = self.dma_move_data(d);
         let now = self.now;
-        let setup = self.clusters[cl_idx].dma.setup_cycles();
-        let busy_before = self.clusters[cl_idx].dma.stats.busy_cycles;
-        let (id, _done_at) = self.clusters[cl_idx].dma.enqueue(now + setup, d, translate_cost);
-        let busy = self.clusters[cl_idx].dma.stats.busy_cycles - busy_before;
-        let core = &mut self.clusters[cl_idx].cores[c_idx];
+        let Accel { clusters, dram, .. } = self;
+        let cluster = &mut clusters[cl_idx];
+        let setup = cluster.dma.setup_cycles();
+        let busy_before = cluster.dma.stats.busy_cycles;
+        let stall_before = cluster.dma.stats.dram_stall_cycles;
+        let (id, _done_at) = cluster.dma.enqueue(now + setup, d, translate_cost, dram);
+        let busy = cluster.dma.stats.busy_cycles - busy_before;
+        let stall = cluster.dma.stats.dram_stall_cycles - stall_before;
+        let core = &mut cluster.cores[c_idx];
         core.perf.bump(Event::DmaTransfers);
         core.perf.add(Event::DmaBursts, d.bursts());
         core.perf.add(Event::DmaBytes, d.total_bytes());
         core.perf.add(Event::DmaBusyCycles, busy);
+        core.perf.add(Event::DmaDramStall, stall);
         (id, setup)
     }
 
@@ -1188,12 +1206,12 @@ fn finish_step(
             core.l0_base = min_base;
         }
     } else if branch_to.is_some() {
-        let in_window = next_pc >= core.l0_base && next_pc < core.l0_base + l0_insts;
+        let in_window = (core.l0_base..core.l0_base + l0_insts).contains(&next_pc);
         if !in_window {
             core.l0_base = next_pc;
             extra += fetch_pen;
         }
-    } else if next_pc < core.l0_base || next_pc >= core.l0_base + l0_insts {
+    } else if !(core.l0_base..core.l0_base + l0_insts).contains(&next_pc) {
         core.l0_base = next_pc;
     }
     core.pc = next_pc;

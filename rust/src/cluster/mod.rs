@@ -16,7 +16,7 @@
 use crate::config::HeroConfig;
 use crate::dma::DmaEngine;
 use crate::isa::Program;
-use crate::mem::Tcdm;
+use crate::mem::{DramPort, Tcdm};
 use crate::noc::{Port, WidePath};
 use crate::trace::PerfCounters;
 use std::sync::Arc;
@@ -157,7 +157,9 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(id: usize, cfg: &HeroConfig) -> Self {
+    /// `dram_port` is this cluster's DMA requester port on the board's
+    /// shared DRAM (registered by the accelerator that owns both).
+    pub fn new(id: usize, cfg: &HeroConfig, dram_port: DramPort) -> Self {
         let n_banks = cfg.tcdm_banks();
         let n_lines = (cfg.accel.icache_bytes / 4 / cfg.accel.icache_line_insts).max(1);
         let path = WidePath {
@@ -170,7 +172,7 @@ impl Cluster {
             id,
             cores: (0..cfg.accel.cores_per_cluster).map(Core::new).collect(),
             tcdm: Tcdm::new(cfg.accel.l1_bytes, n_banks),
-            dma: DmaEngine::new(path, cfg.dma.setup_cycles),
+            dma: DmaEngine::new(path, cfg.dma.setup_cycles, dram_port),
             program: Arc::new(Program::default()),
             icache_tags: vec![u32::MAX; n_lines],
             refill_port: Port::new(),
@@ -269,11 +271,17 @@ mod tests {
     use super::*;
     use crate::config::aurora;
     use crate::isa::Inst;
+    use crate::mem::SharedDram;
+
+    fn test_cluster(cfg: &HeroConfig) -> Cluster {
+        let mut dram = SharedDram::new(0, cfg.dram.bytes_per_cycle, 0);
+        Cluster::new(0, cfg, dram.add_port("cluster0-dma", false))
+    }
 
     #[test]
     fn new_cluster_geometry() {
         let cfg = aurora();
-        let cl = Cluster::new(0, &cfg);
+        let cl = test_cluster(&cfg);
         assert_eq!(cl.cores.len(), 8);
         assert_eq!(cl.tcdm.n_banks(), 16);
         assert_eq!(cl.cores[0].state, CoreState::Running);
@@ -285,7 +293,7 @@ mod tests {
     fn wide_noc_enables_skew() {
         let mut cfg = aurora();
         cfg.noc.dma_width_bits = 128;
-        let cl = Cluster::new(0, &cfg);
+        let cl = test_cluster(&cfg);
         assert_eq!(cl.extra_conflict_ppm, WIDE_TCDM_SKEW_PPM);
     }
 
@@ -301,7 +309,7 @@ mod tests {
     #[test]
     fn barrier_ready_logic() {
         let cfg = aurora();
-        let mut cl = Cluster::new(0, &cfg);
+        let mut cl = test_cluster(&cfg);
         cl.load_program(Arc::new(Program::new(vec![Inst::Halt])));
         // Only core 0 running, not at barrier: not ready.
         assert!(!cl.barrier_ready());
@@ -321,7 +329,7 @@ mod tests {
     #[test]
     fn load_program_resets_cores() {
         let cfg = aurora();
-        let mut cl = Cluster::new(0, &cfg);
+        let mut cl = test_cluster(&cfg);
         cl.cores[3].pc = 99;
         cl.cores[3].state = CoreState::Halted;
         let mut p = Program::new(vec![Inst::Nop, Inst::Halt]);

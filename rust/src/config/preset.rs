@@ -103,6 +103,19 @@ pub fn cyclone() -> HeroConfig {
     cfg
 }
 
+/// Derive a variant of `base` with a different wide-NoC data width (the
+/// §3.3 sweep axis). When the width actually changes, the name gains a
+/// `-w<bits>` suffix so lowered-binary caches and reports keep the variants
+/// distinct — the building block for heterogeneous instance pools.
+pub fn with_dma_width(base: &HeroConfig, bits: u32) -> HeroConfig {
+    let mut cfg = base.clone();
+    cfg.noc.dma_width_bits = bits;
+    if bits != base.noc.dma_width_bits {
+        cfg.name = format!("{}-w{bits}", base.name);
+    }
+    cfg
+}
+
 /// Look a preset up by name (case-insensitive).
 pub fn by_name(name: &str) -> Option<HeroConfig> {
     match name.to_ascii_lowercase().as_str() {
@@ -130,5 +143,16 @@ mod tests {
         let c = cyclone();
         assert_eq!(c.n_accel_cores(), 32);
         assert_eq!(c.host.core_arch, "CVA6");
+    }
+
+    #[test]
+    fn with_dma_width_renames_only_on_change() {
+        let base = aurora();
+        let w128 = with_dma_width(&base, 128);
+        assert_eq!(w128.noc.dma_width_bits, 128);
+        assert_eq!(w128.name, "aurora-w128");
+        assert!(w128.validate().is_ok());
+        let same = with_dma_width(&base, base.noc.dma_width_bits);
+        assert_eq!(same.name, "aurora");
     }
 }

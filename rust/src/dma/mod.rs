@@ -12,8 +12,18 @@
 //! data movement itself is performed by the accelerator model at enqueue
 //! time (the simulator guarantees no observable difference as long as
 //! software synchronizes with `dma.wait`, which correct HERO programs do).
+//!
+//! Main-memory traffic is routed through a [`DramPort`] on the board's
+//! [`SharedDram`]: the DRAM side of every transfer reserves bandwidth on
+//! the shared ledger, and when concurrent requesters (other clusters, or —
+//! at the pool level — other accelerator instances) oversubscribe the peak,
+//! the transfer completes late. That extra latency is *contention stall*,
+//! accounted exactly once: [`DmaStats::busy_cycles`] is pure NoC data-path
+//! occupancy (translate + burst timing) and [`DmaStats::dram_stall_cycles`]
+//! is the added DRAM wait; the engine port's occupancy is their sum.
 
 use crate::isa::DmaDir;
+use crate::mem::{DramPort, SharedDram};
 use crate::noc::{Port, WidePath};
 
 /// A DMA transfer descriptor.
@@ -66,7 +76,14 @@ pub struct DmaStats {
     pub transfers: u64,
     pub bursts: u64,
     pub bytes: u64,
+    /// NoC data-path occupancy (IOMMU translate + burst timing), excluding
+    /// DRAM contention stall — see [`DmaStats::dram_stall_cycles`].
     pub busy_cycles: u64,
+    /// Extra cycles transfers waited on the shared DRAM beyond their
+    /// uncontended service time. Disjoint from `busy_cycles` by
+    /// construction: engine-port occupancy == busy + stall, so nothing is
+    /// ever counted twice.
+    pub dram_stall_cycles: u64,
 }
 
 /// The per-cluster DMA engine.
@@ -75,17 +92,20 @@ pub struct DmaEngine {
     path: WidePath,
     setup_cycles: u64,
     port: Port,
+    /// This engine's requester port on the board's shared DRAM.
+    dram_port: DramPort,
     inflight: Vec<Transfer>,
     next_id: u32,
     pub stats: DmaStats,
 }
 
 impl DmaEngine {
-    pub fn new(path: WidePath, setup_cycles: u64) -> Self {
+    pub fn new(path: WidePath, setup_cycles: u64, dram_port: DramPort) -> Self {
         DmaEngine {
             path,
             setup_cycles,
             port: Port::new(),
+            dram_port,
             inflight: Vec::new(),
             next_id: 1,
             stats: DmaStats::default(),
@@ -96,30 +116,63 @@ impl DmaEngine {
         &self.path
     }
 
+    pub fn dram_port(&self) -> DramPort {
+        self.dram_port
+    }
+
     /// Cycles a core is stalled programming a descriptor.
     pub fn setup_cycles(&self) -> u64 {
         self.setup_cycles
     }
 
+    /// Engine-port occupancy: NoC busy plus DRAM stall. Exposed so tests
+    /// can pin the counted-once invariant
+    /// `occupancy == stats.busy_cycles + stats.dram_stall_cycles`.
+    pub fn occupancy_cycles(&self) -> u64 {
+        self.port.busy_cycles
+    }
+
     /// Enqueue a transfer at cycle `now` (after the programming core has
     /// paid `setup_cycles`). `translate_cost` is the IOMMU cost accumulated
-    /// for the pages this transfer touches (0 if all TLB hits).
+    /// for the pages this transfer touches (0 if all TLB hits); `dram` is
+    /// the shared main memory the transfer's far end lives in.
     /// Returns `(id, completion_cycle)`.
-    pub fn enqueue(&mut self, now: u64, d: &Descriptor, translate_cost: u64) -> (u32, u64) {
-        let duration = translate_cost
+    pub fn enqueue(
+        &mut self,
+        now: u64,
+        d: &Descriptor,
+        translate_cost: u64,
+        dram: &mut SharedDram,
+    ) -> (u32, u64) {
+        let noc_cycles = translate_cost
             + if d.merged {
                 self.path.merged_cycles(d.total_bytes())
             } else {
                 self.path.scattered_cycles(d.rows as u64, d.row_bytes as u64)
             };
-        let (_, end) = self.port.acquire(now, duration);
+        // DRAM side: reserve bandwidth on the shared ledger at this port's
+        // NoC drain rate. Uncontended, the DRAM finishes within the NoC
+        // window (service time == beat count <= noc_cycles); anything
+        // beyond it is contention stall and extends the transfer.
+        let start = now.max(self.port.free_at());
+        let bytes = d.total_bytes();
+        let stall = if bytes > 0 {
+            let dram_end = dram.reserve(self.dram_port, start, bytes, self.path.beat_bytes);
+            let stall = dram_end.saturating_sub(start + noc_cycles);
+            dram.note_stall(self.dram_port, stall);
+            stall
+        } else {
+            0
+        };
+        let (_, end) = self.port.acquire(now, noc_cycles + stall);
         let id = self.next_id;
         self.next_id += 1;
         self.inflight.push(Transfer { id, done_at: end });
         self.stats.transfers += 1;
         self.stats.bursts += d.bursts();
-        self.stats.bytes += d.total_bytes();
-        self.stats.busy_cycles += duration;
+        self.stats.bytes += bytes;
+        self.stats.busy_cycles += noc_cycles;
+        self.stats.dram_stall_cycles += stall;
         (id, end)
     }
 
@@ -151,11 +204,19 @@ impl DmaEngine {
 mod tests {
     use super::*;
 
-    fn engine() -> DmaEngine {
-        DmaEngine::new(
-            WidePath { beat_bytes: 8, burst_overhead: 25, first_word: 100, max_burst_beats: 256 },
-            30,
-        )
+    fn wide64() -> WidePath {
+        WidePath { beat_bytes: 8, burst_overhead: 25, first_word: 100, max_burst_beats: 256 }
+    }
+
+    /// A board DRAM whose peak far exceeds one engine's 8 B/cycle drain
+    /// rate — the uncontended default, matching the Aurora configuration.
+    fn board() -> SharedDram {
+        SharedDram::new(0, 384, 0)
+    }
+
+    fn engine(dram: &mut SharedDram) -> DmaEngine {
+        let port = dram.add_port("dma", false);
+        DmaEngine::new(wide64(), 30, port)
     }
 
     fn desc_1d(bytes: u32) -> Descriptor {
@@ -173,25 +234,30 @@ mod tests {
 
     #[test]
     fn merged_transfer_timing() {
-        let mut e = engine();
-        let (id, done) = e.enqueue(0, &desc_1d(2048), 0);
-        // 25 overhead + 100 first word + 256 beats.
+        let mut dram = board();
+        let mut e = engine(&mut dram);
+        let (id, done) = e.enqueue(0, &desc_1d(2048), 0, &mut dram);
+        // 25 overhead + 100 first word + 256 beats; no DRAM stall at
+        // 8 B/cycle demand against a 384 B/cycle board.
         assert_eq!(done, 381);
         assert_eq!(e.completion(id), Some(381));
+        assert_eq!(e.stats.dram_stall_cycles, 0);
     }
 
     #[test]
     fn transfers_serialize_on_engine() {
-        let mut e = engine();
-        let (_, d1) = e.enqueue(0, &desc_1d(800), 0);
-        let (_, d2) = e.enqueue(0, &desc_1d(800), 0);
+        let mut dram = board();
+        let mut e = engine(&mut dram);
+        let (_, d1) = e.enqueue(0, &desc_1d(800), 0, &mut dram);
+        let (_, d2) = e.enqueue(0, &desc_1d(800), 0, &mut dram);
         assert_eq!(d2 - d1, d1); // second starts when first ends
         assert_eq!(e.all_done_at(), d2);
     }
 
     #[test]
     fn scattered_counts_bursts_per_row() {
-        let mut e = engine();
+        let mut dram = board();
+        let mut e = engine(&mut dram);
         let d = Descriptor {
             dir: DmaDir::DevToHost,
             dev_addr: 0,
@@ -202,26 +268,76 @@ mod tests {
             host_stride: 512,
             merged: false,
         };
-        e.enqueue(0, &d, 0);
+        e.enqueue(0, &d, 0, &mut dram);
         assert_eq!(e.stats.bursts, 97);
         assert_eq!(e.stats.bytes, 388 * 97);
         assert_eq!(e.stats.transfers, 1);
+        assert_eq!(dram.stats(e.dram_port()).bytes, 388 * 97);
     }
 
     #[test]
     fn translate_cost_extends_transfer() {
-        let mut e = engine();
-        let (_, d_no) = e.enqueue(0, &desc_1d(64), 0);
+        let mut dram = board();
+        let mut e = engine(&mut dram);
+        let (_, d_no) = e.enqueue(0, &desc_1d(64), 0, &mut dram);
         e.reset();
-        let (_, d_tlb) = e.enqueue(0, &desc_1d(64), 600);
+        let (_, d_tlb) = e.enqueue(0, &desc_1d(64), 600, &mut dram);
         assert_eq!(d_tlb - d_no, 600);
     }
 
     #[test]
     fn retire_drops_old() {
-        let mut e = engine();
-        let (id, done) = e.enqueue(0, &desc_1d(64), 0);
+        let mut dram = board();
+        let mut e = engine(&mut dram);
+        let (id, done) = e.enqueue(0, &desc_1d(64), 0, &mut dram);
         e.retire(done + 1);
         assert_eq!(e.completion(id), None);
+    }
+
+    #[test]
+    fn dram_bottleneck_stalls_transfer() {
+        // Board peak below the engine's 8 B/cycle drain rate: the DRAM
+        // side, not the NoC, bounds the transfer.
+        let mut dram = SharedDram::new(0, 4, 0);
+        let mut e = engine(&mut dram);
+        let (_, done) = e.enqueue(0, &desc_1d(2048), 0, &mut dram);
+        // NoC occupancy 381, DRAM service 2048/4 = 512: stall 131.
+        assert_eq!(done, 512);
+        assert_eq!(e.stats.busy_cycles, 381);
+        assert_eq!(e.stats.dram_stall_cycles, 131);
+        assert_eq!(dram.stats(e.dram_port()).stall_cycles, 131);
+    }
+
+    #[test]
+    fn two_engines_contend_on_one_dram() {
+        // Two clusters, 8 B/cycle each, sharing a 8 B/cycle board: the
+        // second engine's concurrent transfer is served from the residual
+        // bandwidth and stalls; a lone engine is unaffected.
+        let mut dram = SharedDram::new(0, 8, 0);
+        let mut e0 = engine(&mut dram);
+        let mut e1 = engine(&mut dram);
+        let (_, d0) = e0.enqueue(0, &desc_1d(2048), 0, &mut dram);
+        let (_, d1) = e1.enqueue(0, &desc_1d(2048), 0, &mut dram);
+        assert_eq!(d0, 381); // full rate: NoC-bound as before
+        assert!(d1 > d0, "concurrent transfer must stall ({d1} vs {d0})");
+        assert_eq!(e0.stats.dram_stall_cycles, 0);
+        assert_eq!(e1.stats.dram_stall_cycles, d1 - 381);
+    }
+
+    #[test]
+    fn stall_counted_once_between_port_and_stats() {
+        // The no-double-count invariant: engine-port occupancy equals NoC
+        // busy plus DRAM stall, for stalled and unstalled transfers alike.
+        let mut dram = SharedDram::new(0, 4, 0);
+        let mut e = engine(&mut dram);
+        e.enqueue(0, &desc_1d(2048), 0, &mut dram);
+        e.enqueue(0, &desc_1d(64), 17, &mut dram);
+        e.enqueue(0, &desc_1d(800), 0, &mut dram);
+        assert!(e.stats.dram_stall_cycles > 0);
+        assert_eq!(
+            e.occupancy_cycles(),
+            e.stats.busy_cycles + e.stats.dram_stall_cycles,
+            "stall cycles double-counted between Port::acquire and DmaStats"
+        );
     }
 }

@@ -32,8 +32,15 @@
 //! splits oversized jobs), a lowered-binary cache that lets same-kernel
 //! jobs batch and amortize compile cost, and aggregate throughput /
 //! per-instance utilization reporting built on [`noc::Port::busy_cycles`].
-//! Front-ends: the `hero serve` CLI subcommand, the synthetic job streams
-//! in [`workloads::synth`], and `benches/sched.rs`.
+//! Pool instances share **one carrier-board DRAM** ([`mem::dram`]): each
+//! job's main-memory traffic reserves bandwidth on a cycle-accounted
+//! ledger, so oversubscribed boards stretch occupancy windows (contention
+//! stall) and pool-scaling curves bend realistically; pools may be
+//! heterogeneous (mixed wide-NoC widths via
+//! [`config::preset::with_dma_width`]) and SJF ordering is
+//! contention-aware. Front-ends: the `hero serve` CLI subcommand (synthetic
+//! streams or `--trace` replay), the job generators in [`workloads::synth`],
+//! and `benches/sched.rs`.
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.

@@ -12,16 +12,25 @@
 //! hero disasm <kernel> [--variant V] [--size N]   dump device assembly
 //! hero autodma <kernel> [--size N]    show the AutoDMA transformation
 //! hero kernels                        list workloads (Table 2)
-//! hero serve [options]                drain a synthetic job stream through
-//!                                     the multi-accelerator scheduler
-//!     --jobs N                        jobs in the stream (default 100)
+//! hero serve [options]                drain a job stream through the
+//!                                     multi-accelerator scheduler (one
+//!                                     shared carrier-board DRAM)
+//!     --jobs N                        synthetic jobs in the stream (default 100)
+//!     --trace FILE                    replay a job trace instead of the
+//!                                     synthetic stream (lines:
+//!                                     `arrival kernel size [variant] [threads] [seed]`)
 //!     --pool K                        accelerator instances (default 4)
 //!     --policy fifo|sjf|capacity|cap-reject    dispatch policy (default fifo)
 //!     --seed S                        stream seed (default 42)
+//!     --board-bw B                    shared board DRAM bandwidth in
+//!                                     bytes/cycle (default: config
+//!                                     dram.bytes_per_cycle)
+//!     --mixed-widths                  heterogeneous pool cycling 64/32/128-bit
+//!                                     wide-NoC instances
 //!     --no-cache                      disable the lowered-binary cache
 //!     --no-batch                      disable same-binary batching
 //!     --no-verify                     skip per-job golden-model checks
-//!     --trace                         dump the scheduler event log
+//!     --events                        dump the scheduler event log
 //!     --config FILE                   platform config file
 //! ```
 
@@ -175,7 +184,8 @@ fn cmd_run(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    use herov2::sched::{Policy, Scheduler};
+    use herov2::config::preset::with_dma_width;
+    use herov2::sched::{BoardSpec, Policy, Scheduler};
     use herov2::workloads::synth;
 
     let cfg = load_cfg(args);
@@ -191,24 +201,74 @@ fn cmd_serve(args: &[String]) -> i32 {
         eprintln!("--pool must be at least 1");
         return 2;
     }
-    let stream = synth::mixed_jobs(jobs, seed);
+    // `--trace` takes a file path (PR 1's boolean event-dump flag is now
+    // `--events`); catch a missing or flag-shaped value instead of silently
+    // falling back to the synthetic stream.
+    let trace_path = match (flag(args, "--trace"), opt(args, "--trace")) {
+        (false, _) => None,
+        (true, Some(path)) if !path.starts_with("--") => Some(path),
+        (true, _) => {
+            eprintln!(
+                "--trace expects a trace file path (to dump the event log, use --events)"
+            );
+            return 2;
+        }
+    };
+    let stream = match trace_path {
+        Some(path) => {
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("cannot read trace {path:?}: {e}");
+                    return 2;
+                }
+            };
+            match synth::parse_trace(&text) {
+                Ok(jobs) => {
+                    println!("replaying {} jobs from trace {path}", jobs.len());
+                    jobs
+                }
+                Err(e) => {
+                    eprintln!("trace error: {e}");
+                    return 2;
+                }
+            }
+        }
+        None => synth::mixed_jobs(jobs, seed),
+    };
     println!(
-        "serving {} mixed-kernel jobs on {} (pool {}, policy {}, seed {seed})",
+        "serving {} jobs on {} (pool {}, policy {}, seed {seed})",
         stream.len(),
         cfg.name,
         pool,
         policy.label()
     );
-    let mut sched = Scheduler::new(cfg, pool, policy)
-        .with_cache(!flag(args, "--no-cache"))
-        .with_batching(!flag(args, "--no-batch"))
-        .with_verify(!flag(args, "--no-verify"));
+    let mut sched = if flag(args, "--mixed-widths") {
+        let widths = [64u32, 32, 128];
+        let cfgs: Vec<_> =
+            (0..pool).map(|i| with_dma_width(&cfg, widths[i % widths.len()])).collect();
+        Scheduler::new_heterogeneous(cfgs, policy)
+    } else {
+        Scheduler::new(cfg, pool, policy)
+    }
+    .with_cache(!flag(args, "--no-cache"))
+    .with_batching(!flag(args, "--no-batch"))
+    .with_verify(!flag(args, "--no-verify"));
+    if let Some(bw_arg) = opt(args, "--board-bw") {
+        match bw_arg.parse::<u64>() {
+            Ok(bw) => sched = sched.with_board(BoardSpec::with_bandwidth(bw)),
+            Err(_) => {
+                eprintln!("--board-bw expects bytes/cycle, got {bw_arg:?}");
+                return 2;
+            }
+        }
+    }
     let handles = sched.submit_all(&stream);
     if let Err(e) = sched.drain() {
         eprintln!("scheduler error: {e}");
         return 1;
     }
-    if flag(args, "--trace") {
+    if flag(args, "--events") {
         print!("{}", sched.trace.render());
     }
     let report = sched.report();

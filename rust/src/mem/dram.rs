@@ -1,0 +1,456 @@
+//! Shared carrier-board DRAM: one contended main memory behind the NoC.
+//!
+//! HEROv2's accelerator clusters do not own private DRAM — they share the
+//! board's off-chip main memory behind the on-chip network, and the paper's
+//! case studies show DMA bandwidth at the DRAM boundary is the first-order
+//! bottleneck for multi-cluster offload. This module models that boundary:
+//!
+//! * [`BandwidthLedger`] — a cycle-accounted reservation model of a link
+//!   with a peak byte rate. Requesters reserve service for a byte count at
+//!   a per-port rate cap (their NoC drain rate); when concurrent
+//!   reservations exceed the peak, later requests are served from the
+//!   residual bandwidth and stretch in time. Grant order is request order,
+//!   which in the simulator is the rotating per-cycle cluster/core
+//!   arbitration — i.e. round-robin at the cycle level. An optional
+//!   *priority headroom* keeps a slice of the peak free for
+//!   priority-flagged ports (QoS for latency-critical requesters).
+//! * [`SharedDram`] — the board DRAM itself: word storage plus a
+//!   [`BandwidthLedger`] and per-[`DramPort`] accounting (bytes served,
+//!   stall cycles). The accelerator's DMA engines and the narrow
+//!   ext-address path route their main-memory traffic through `DramPort`
+//!   handles instead of touching storage directly; the instance pool in
+//!   [`crate::sched::pool`] reuses the ledger to couple whole accelerator
+//!   instances onto one board.
+//!
+//! Burst math is shared with [`crate::noc::WidePath`]: a transfer's
+//! uncontended DRAM service time is its beat count (`WidePath::beats`),
+//! because the wide NoC drains one beat per cycle — so with the default
+//! configurations (DRAM peak far above one NoC port's rate) the ledger
+//! never stalls anything and all timings are bit-identical to the
+//! pre-shared-DRAM model. Contention becomes visible exactly when the sum
+//! of concurrent port rates exceeds the configured peak.
+
+use super::WordMem;
+
+/// Handle to one requester port of a [`SharedDram`] (a cluster DMA engine,
+/// the narrow ext-address path, or a whole pool instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramPort(pub(crate) usize);
+
+impl DramPort {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Per-port accounting of a [`SharedDram`].
+#[derive(Debug, Clone)]
+pub struct PortStats {
+    pub label: String,
+    /// Whether this port may reserve into the priority headroom.
+    pub priority: bool,
+    /// Bytes served through this port (DMA payload + narrow words).
+    pub bytes: u64,
+    /// Reservations made.
+    pub requests: u64,
+    /// Extra cycles this port's transfers waited on the shared DRAM beyond
+    /// their uncontended service time.
+    pub stall_cycles: u64,
+}
+
+/// Cycle-accounted bandwidth reservations on a link with a peak byte rate.
+///
+/// The reserved rate over time is kept as a piecewise-constant step
+/// function: sorted `(cycle, rate)` breakpoints, each rate applying until
+/// the next breakpoint (the trailing segment is always back at 0 —
+/// reservations are finite). All arithmetic is integer and deterministic.
+#[derive(Debug, Clone)]
+pub struct BandwidthLedger {
+    peak: u64,
+    /// Bandwidth normal ports may not use (kept free for priority ports).
+    priority_headroom: u64,
+    segs: Vec<(u64, u64)>,
+    total_bytes: u64,
+}
+
+impl BandwidthLedger {
+    /// `peak` in bytes per cycle (clamped to at least 1); `u64::MAX` models
+    /// an uncontended link. `priority_headroom` bytes/cycle are reachable
+    /// only by priority reservations.
+    pub fn new(peak: u64, priority_headroom: u64) -> Self {
+        BandwidthLedger {
+            peak: peak.max(1),
+            priority_headroom,
+            segs: Vec::new(),
+            total_bytes: 0,
+        }
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Total bytes reserved through this ledger so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Reserved rate at cycle `t` and the cycle where the current segment
+    /// ends (`u64::MAX` for the trailing free segment).
+    fn rate_and_end_at(&self, t: u64) -> (u64, u64) {
+        let idx = self.segs.partition_point(|s| s.0 <= t);
+        let rate = if idx == 0 { 0 } else { self.segs[idx - 1].1 };
+        let end = self.segs.get(idx).map_or(u64::MAX, |s| s.0);
+        (rate, end)
+    }
+
+    /// Reserved rate at cycle `t`.
+    pub fn rate_at(&self, t: u64) -> u64 {
+        self.rate_and_end_at(t).0
+    }
+
+    /// Highest reserved rate anywhere on the ledger (for invariant checks:
+    /// never exceeds `peak`).
+    pub fn max_rate(&self) -> u64 {
+        self.segs.iter().map(|s| s.1).max().unwrap_or(0)
+    }
+
+    /// Insert a breakpoint at `t` carrying the prevailing rate.
+    fn ensure_breakpoint(&mut self, t: u64) {
+        if let Err(pos) = self.segs.binary_search_by_key(&t, |s| s.0) {
+            let rate = if pos == 0 { 0 } else { self.segs[pos - 1].1 };
+            self.segs.insert(pos, (t, rate));
+        }
+    }
+
+    /// Add `delta` to the reserved rate over `[from, to)`.
+    fn add(&mut self, from: u64, to: u64, delta: u64) {
+        if from >= to || delta == 0 {
+            return;
+        }
+        self.ensure_breakpoint(from);
+        self.ensure_breakpoint(to);
+        for seg in &mut self.segs {
+            if (from..to).contains(&seg.0) {
+                seg.1 += delta;
+            }
+        }
+    }
+
+    /// Reserve service for `bytes` starting no earlier than `start`, at a
+    /// per-cycle rate of at most `rate_cap` and at most the residual
+    /// bandwidth. Returns the cycle at which the last byte is served.
+    ///
+    /// The uncontended service time is `bytes.div_ceil(rate_cap)` (capped
+    /// at the usable peak); any extra latency is contention stall caused by
+    /// earlier reservations.
+    pub fn reserve(&mut self, start: u64, bytes: u64, rate_cap: u64, priority: bool) -> u64 {
+        if bytes == 0 {
+            return start;
+        }
+        let cap = if priority {
+            self.peak
+        } else {
+            self.peak.saturating_sub(self.priority_headroom).max(1)
+        };
+        let rate_cap = rate_cap.clamp(1, cap);
+        let mut remaining = bytes;
+        let mut t = start;
+        let mut taken: Vec<(u64, u64, u64)> = Vec::new();
+        loop {
+            let (reserved, seg_end) = self.rate_and_end_at(t);
+            let avail = cap.saturating_sub(reserved).min(rate_cap);
+            if avail == 0 {
+                // Fully booked segment; reservations are finite, so a later
+                // segment always has residual bandwidth.
+                debug_assert!(seg_end != u64::MAX);
+                t = seg_end;
+                continue;
+            }
+            let span = seg_end - t;
+            let served = avail.saturating_mul(span);
+            if served >= remaining {
+                let need = remaining.div_ceil(avail);
+                taken.push((t, t + need, avail));
+                t += need;
+                break;
+            }
+            taken.push((t, seg_end, avail));
+            remaining -= served;
+            t = seg_end;
+        }
+        for (from, to, rate) in taken {
+            self.add(from, to, rate);
+        }
+        self.total_bytes += bytes;
+        t
+    }
+
+    /// Uncontended service time of `bytes` at `rate_cap` on this ledger
+    /// (what [`BandwidthLedger::reserve`] returns minus `start` when no
+    /// other reservation is in the way). Uses the same usable-peak clamp
+    /// as `reserve` — a non-priority request never sees the headroom, so
+    /// the headroom-induced slowdown is not misreported as contention.
+    pub fn uncontended_cycles(&self, bytes: u64, rate_cap: u64, priority: bool) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let cap = if priority {
+            self.peak
+        } else {
+            self.peak.saturating_sub(self.priority_headroom).max(1)
+        };
+        bytes.div_ceil(rate_cap.clamp(1, cap))
+    }
+
+    /// Drop breakpoints entirely before `before` (keeps the prevailing
+    /// rate) so long-running simulations stay O(outstanding reservations).
+    pub fn trim(&mut self, before: u64) {
+        let idx = self.segs.partition_point(|s| s.0 <= before);
+        if idx >= 2 {
+            self.segs.drain(..idx - 1);
+        }
+    }
+
+    /// Reserved fraction of the peak at cycle `t` (0.0 on an uncontended
+    /// link).
+    pub fn pressure_at(&self, t: u64) -> f64 {
+        if self.peak == u64::MAX {
+            return 0.0;
+        }
+        self.rate_at(t) as f64 / self.peak as f64
+    }
+}
+
+/// The carrier board's shared main memory: word storage plus the bandwidth
+/// ledger and per-port stall accounting. See the module docs for the model.
+#[derive(Debug)]
+pub struct SharedDram {
+    /// Backing word storage (physical byte addresses from 0). Host-side
+    /// staging (`host::HostContext`) writes it directly — host traffic is
+    /// not on the modeled accelerator path.
+    pub mem: WordMem,
+    ledger: BandwidthLedger,
+    ports: Vec<PortStats>,
+}
+
+impl SharedDram {
+    /// `bytes` of storage; `peak_bytes_per_cycle` of shared bandwidth;
+    /// `priority_headroom` bytes/cycle reachable only by priority ports.
+    pub fn new(bytes: usize, peak_bytes_per_cycle: u64, priority_headroom: u64) -> Self {
+        SharedDram {
+            mem: WordMem::new(bytes),
+            ledger: BandwidthLedger::new(peak_bytes_per_cycle, priority_headroom),
+            ports: Vec::new(),
+        }
+    }
+
+    /// Register a requester; the returned handle routes traffic and stats.
+    pub fn add_port(&mut self, label: impl Into<String>, priority: bool) -> DramPort {
+        self.ports.push(PortStats {
+            label: label.into(),
+            priority,
+            bytes: 0,
+            requests: 0,
+            stall_cycles: 0,
+        });
+        DramPort(self.ports.len() - 1)
+    }
+
+    pub fn peak_bytes_per_cycle(&self) -> u64 {
+        self.ledger.peak()
+    }
+
+    /// Total bytes served across all ports (ledger traffic + narrow words).
+    pub fn total_bytes(&self) -> u64 {
+        self.ports.iter().map(|p| p.bytes).sum()
+    }
+
+    pub fn stats(&self, port: DramPort) -> &PortStats {
+        &self.ports[port.0]
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Reserve DRAM service for a transfer of `bytes` through `port`,
+    /// draining at most `rate_cap` bytes/cycle (the port's NoC beat rate),
+    /// starting no earlier than `start`. Returns the completion cycle of
+    /// the DRAM side; the caller compares it against the transfer's NoC
+    /// occupancy to derive the contention stall (and reports it back via
+    /// [`SharedDram::note_stall`] so it is counted exactly once).
+    pub fn reserve(&mut self, port: DramPort, start: u64, bytes: u64, rate_cap: u64) -> u64 {
+        let p = &mut self.ports[port.0];
+        p.bytes += bytes;
+        p.requests += 1;
+        let priority = p.priority;
+        self.ledger.reserve(start, bytes, rate_cap, priority)
+    }
+
+    /// Uncontended DRAM service time for `bytes` at `rate_cap` through
+    /// `port` (honors the port's priority class).
+    pub fn uncontended_cycles(&self, port: DramPort, bytes: u64, rate_cap: u64) -> u64 {
+        self.ledger.uncontended_cycles(bytes, rate_cap, self.ports[port.0].priority)
+    }
+
+    /// Book contention stall cycles on a port (derived by the caller as
+    /// actual completion minus uncontended completion).
+    pub fn note_stall(&mut self, port: DramPort, cycles: u64) {
+        self.ports[port.0].stall_cycles += cycles;
+    }
+
+    /// Word load through a port (narrow ext-address path). Single-word
+    /// accesses are latency-bound — their cost is `timing.remote_word` on
+    /// the core side — so they are tallied for conservation accounting but
+    /// do not walk the ledger.
+    pub fn port_load(&mut self, port: DramPort, pa: u32) -> u32 {
+        self.ports[port.0].bytes += 4;
+        self.mem.load(pa)
+    }
+
+    /// Word store through a port (posted write on the narrow path).
+    pub fn port_store(&mut self, port: DramPort, pa: u32, val: u32) {
+        self.ports[port.0].bytes += 4;
+        self.mem.store(pa, val);
+    }
+
+    /// Reserved fraction of peak bandwidth at cycle `t`.
+    pub fn pressure_at(&self, t: u64) -> f64 {
+        self.ledger.pressure_at(t)
+    }
+
+    /// Forget ledger history before `before` (bounded memory on long runs).
+    pub fn trim(&mut self, before: u64) {
+        self.ledger.trim(before);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontended_reservation_runs_at_rate_cap() {
+        let mut l = BandwidthLedger::new(384, 0);
+        // 2048 B at 8 B/cycle: 256 cycles, no stall.
+        assert_eq!(l.reserve(100, 2048, 8, false), 356);
+        assert_eq!(l.uncontended_cycles(2048, 8, false), 256);
+        assert_eq!(l.total_bytes(), 2048);
+        assert_eq!(l.rate_at(100), 8);
+        assert_eq!(l.rate_at(355), 8);
+        assert_eq!(l.rate_at(356), 0);
+    }
+
+    #[test]
+    fn concurrent_reservations_share_the_peak() {
+        // Peak 12, two requesters at 8 B/cycle each, same start.
+        let mut l = BandwidthLedger::new(12, 0);
+        let e1 = l.reserve(0, 800, 8, false);
+        assert_eq!(e1, 100);
+        // Second gets the residual 4 B/cycle while the first runs, then the
+        // full 8: 100 cycles * 4 B = 400 B, remaining 400 B at 8 B = 50 cy.
+        let e2 = l.reserve(0, 800, 8, false);
+        assert_eq!(e2, 150);
+        assert_eq!(l.rate_at(0), 12);
+        assert_eq!(l.rate_at(100), 8);
+        assert_eq!(l.rate_at(150), 0);
+        assert_eq!(l.max_rate(), 12);
+        assert_eq!(l.total_bytes(), 1600);
+    }
+
+    #[test]
+    fn saturated_segment_defers_service() {
+        let mut l = BandwidthLedger::new(8, 0);
+        l.reserve(0, 80, 8, false); // occupies [0, 10) fully
+        let e = l.reserve(0, 40, 8, false);
+        assert_eq!(e, 15); // waits 10, then 5 cycles at 8 B/cycle
+        assert_eq!(l.max_rate(), 8);
+    }
+
+    #[test]
+    fn priority_headroom_is_reserved_for_priority_ports() {
+        // Peak 12 with 4 B/cycle of priority headroom: normal ports see 8.
+        let mut l = BandwidthLedger::new(12, 4);
+        let normal = l.reserve(0, 800, 8, false);
+        assert_eq!(normal, 100); // rate 8 = peak - headroom
+        // The floor agrees with reserve's cap: headroom slowdown on a
+        // too-eager rate is intrinsic, not contention.
+        assert_eq!(l.uncontended_cycles(800, 12, false), 100);
+        assert_eq!(l.uncontended_cycles(800, 12, true), 67);
+        // A priority request overlapping it still gets 4 B/cycle.
+        let prio = l.reserve(0, 400, 8, true);
+        assert_eq!(prio, 100);
+        assert_eq!(l.rate_at(0), 12);
+        // A second normal request is fully blocked until cycle 100.
+        let blocked = l.reserve(0, 80, 8, false);
+        assert_eq!(blocked, 110);
+    }
+
+    #[test]
+    fn reservations_compose_across_partial_overlap() {
+        let mut l = BandwidthLedger::new(10, 0);
+        l.reserve(50, 100, 10, false); // [50, 60) at 10
+        // Starts at 40: 10 cycles at 10, then stalled [50,60), finishes after.
+        let e = l.reserve(40, 200, 10, false);
+        assert_eq!(e, 70);
+        assert_eq!(l.rate_at(55), 10);
+        assert_eq!(l.max_rate(), 10);
+    }
+
+    #[test]
+    fn trim_preserves_future_reservations() {
+        let mut l = BandwidthLedger::new(8, 0);
+        l.reserve(0, 80, 8, false);
+        l.reserve(1000, 80, 8, false);
+        l.trim(500);
+        assert_eq!(l.rate_at(1005), 8);
+        assert_eq!(l.rate_at(500), 0);
+        // New reservations still honor what survived the trim: the link is
+        // fully booked over [1000, 1010), so service runs [1010, 1020).
+        let e = l.reserve(1000, 80, 8, false);
+        assert_eq!(e, 1020);
+    }
+
+    #[test]
+    fn uncapped_ledger_never_stalls() {
+        let mut l = BandwidthLedger::new(u64::MAX, 0);
+        for i in 0..16 {
+            let e = l.reserve(0, 4096, 8, false);
+            assert_eq!(e, 512, "request {i} stalled on an uncapped ledger");
+        }
+        assert_eq!(l.pressure_at(0), 0.0);
+    }
+
+    #[test]
+    fn shared_dram_ports_account_bytes_and_stalls() {
+        let mut d = SharedDram::new(64, 8, 0);
+        let a = d.add_port("cluster0-dma", false);
+        let b = d.add_port("cluster1-dma", false);
+        let e1 = d.reserve(a, 0, 80, 8);
+        let e2 = d.reserve(b, 0, 80, 8);
+        assert_eq!((e1, e2), (10, 20));
+        let stall = e2 - d.uncontended_cycles(b, 80, 8);
+        d.note_stall(b, stall);
+        assert_eq!(d.stats(b).stall_cycles, 10);
+        assert_eq!(d.stats(a).bytes, 80);
+        assert_eq!(d.stats(b).bytes, 80);
+        assert_eq!(d.total_bytes(), 160);
+        // Narrow words tally into port bytes without walking the ledger.
+        d.mem.store(0, 7);
+        assert_eq!(d.port_load(a, 0), 7);
+        assert_eq!(d.stats(a).bytes, 84);
+        d.port_store(a, 4, 9);
+        assert_eq!(d.mem.load(4), 9);
+        assert_eq!(d.stats(a).bytes, 88);
+    }
+
+    #[test]
+    fn pressure_reflects_reserved_fraction() {
+        let mut d = SharedDram::new(0, 16, 0);
+        let p = d.add_port("dma", false);
+        d.reserve(p, 0, 80, 8);
+        assert!((d.pressure_at(0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.pressure_at(10), 0.0);
+    }
+}

@@ -1,17 +1,25 @@
-//! Memory subsystem: DRAM main memory, L2 SPM, per-cluster TCDM L1 SPMs,
-//! the device address map, and the deterministic O(1) heap allocator.
+//! Memory subsystem: the shared carrier-board DRAM, L2 SPM, per-cluster
+//! TCDM L1 SPMs, the device address map, and the deterministic O(1) heap
+//! allocator.
 //!
 //! HEROv2's accelerator memory hierarchy is *software-managed* (§2.1): no
 //! data caches — multi-banked L1 scratch-pads with single-cycle access,
 //! a shared L2 SPM, and shared off-chip DRAM reached through the on-chip
 //! network and (for virtual addresses) the hybrid IOMMU.
 //!
-//! Data storage and timing are separated: these types store bytes/words and
-//! expose geometry (bank mapping); cycle costs are applied by the cluster
-//! and NoC models that call into them.
+//! The SPM types ([`Tcdm`], [`WordMem`]) separate storage from timing:
+//! they store words and expose geometry (bank mapping); cycle costs are
+//! applied by the cluster and NoC models that call into them. Main memory
+//! is different — it is a *contended* resource shared by every DMA engine
+//! and (at the pool level) every accelerator instance on the board, so
+//! [`dram::SharedDram`] owns both the storage and a cycle-accounted
+//! bandwidth/arbitration model; requesters route their traffic through
+//! [`dram::DramPort`] handles which account bytes and contention stalls.
 
+pub mod dram;
 pub mod o1heap;
 
+pub use dram::{BandwidthLedger, DramPort, SharedDram};
 pub use o1heap::O1Heap;
 
 /// Device (native, 32-bit) address map.
@@ -151,19 +159,6 @@ impl Tcdm {
     pub fn set_banks(&mut self, n: usize) {
         assert!(n > 0);
         self.n_banks = n;
-    }
-}
-
-/// Physical main memory (DDR4 on Aurora, HBM2E on Blizzard/Cyclone).
-/// Addressed by physical byte address starting at 0.
-#[derive(Debug)]
-pub struct Dram {
-    pub mem: WordMem,
-}
-
-impl Dram {
-    pub fn new(bytes: usize) -> Self {
-        Dram { mem: WordMem::new(bytes) }
     }
 }
 

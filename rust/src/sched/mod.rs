@@ -25,14 +25,21 @@
 //! * [`cache`] — lowered-binary cache keyed on (kernel, variant, size,
 //!   threads, config); same-kernel jobs batch onto one instance and
 //!   amortize the simulated compile charge.
-//! * [`pool`] — K accelerator instances as serializing resources
-//!   (reusing [`crate::noc::Port`]; utilization = `busy_cycles`/makespan).
-//! * [`report`] — aggregate throughput/utilization reporting.
+//! * [`pool`] — K accelerator instances (homogeneous or heterogeneous —
+//!   e.g. mixed wide-NoC widths) as serializing resources on **one shared
+//!   carrier-board DRAM**: each job's main-memory traffic is reserved on a
+//!   cycle-accounted bandwidth ledger ([`crate::mem::BandwidthLedger`]),
+//!   and oversubscription stretches occupancy windows — contention stall,
+//!   surfaced per instance and in aggregate.
+//! * [`report`] — aggregate throughput/utilization/DRAM-stall reporting.
 //!
-//! Every job executes on a *fresh* `Accel` (own DRAM/SPM/IOMMU state), so
-//! results are bit-identical regardless of policy, pool size, batching or
-//! caching — the scheduler moves *time*, never numerics. `hero serve`
-//! (see `main.rs`) and `benches/sched.rs` are the front-ends.
+//! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state), so
+//! results on a homogeneous pool are bit-identical regardless of policy,
+//! pool size, batching, caching or board bandwidth — the scheduler and the
+//! board model move *time*, never numerics. (A heterogeneous pool may tile
+//! kernels differently per instance config, which legitimately reorders
+//! float accumulation.) `hero serve` (see `main.rs`) and `benches/sched.rs`
+//! are the front-ends.
 
 pub mod cache;
 pub mod policy;
@@ -42,7 +49,7 @@ pub mod report;
 pub use crate::workloads::synth::JobDesc;
 pub use cache::BinaryCache;
 pub use policy::{OversizeAction, Policy};
-pub use pool::InstancePool;
+pub use pool::{BoardSpec, InstancePool};
 pub use report::{InstanceReport, ServeReport};
 
 use crate::accel::Accel;
@@ -83,6 +90,11 @@ pub struct JobOutcome {
     pub compile_cycles: u64,
     /// DMA wide-path occupancy of the offload.
     pub dma_busy_cycles: u64,
+    /// Bytes the job moved through the shared carrier-board DRAM.
+    pub dma_bytes: u64,
+    /// Cycles the job's occupancy window stretched waiting on the shared
+    /// board DRAM (0 on an uncontended board).
+    pub dram_stall_cycles: u64,
     /// FNV-1a digest over every output array's f32 bits.
     pub digest: u64,
     /// Host golden-model verification result (always true when the
@@ -114,6 +126,8 @@ impl JobState {
 struct JobRecord {
     spec: JobDesc,
     predicted: u64,
+    /// Static DMA-cycle proxy (SJF contention-aware inflation).
+    predicted_dma: u64,
     state: JobState,
 }
 
@@ -133,17 +147,38 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// `pool_size` identical instances of `cfg` on the board the config
+    /// describes (`BoardSpec::from_config`).
     pub fn new(cfg: HeroConfig, pool_size: usize, policy: Policy) -> Self {
-        // Ask the HERO API itself, on a throwaway instance, how much user L1
-        // a cluster offers — the admission threshold is the runtime's own
-        // answer, not a re-derivation of it.
-        let l1_capacity = {
-            let accel = Accel::new(cfg.clone(), 1 << 20);
-            let mut api = HeroApi::new(&accel);
-            api.capacity(SpmLevel::L1(0))
-        };
+        assert!(pool_size >= 1, "pool needs at least one instance");
+        Self::new_heterogeneous(vec![cfg; pool_size], policy)
+    }
+
+    /// One instance per config — a heterogeneous pool (e.g. mixed 32/64/128
+    /// bit wide-NoC instances from [`crate::config::preset::with_dma_width`]).
+    /// The first config is the *base*: it decides the board DRAM bandwidth,
+    /// admission thresholds use the most constrained instance, and SJF
+    /// predictions use the base NoC width.
+    pub fn new_heterogeneous(cfgs: Vec<HeroConfig>, policy: Policy) -> Self {
+        assert!(!cfgs.is_empty(), "pool needs at least one instance");
+        // Ask the HERO API itself, on a throwaway instance per distinct
+        // config, how much user L1 a cluster offers — the admission
+        // threshold is the runtime's own answer (the minimum across the
+        // pool, so admitted jobs fit every instance), not a re-derivation.
+        let mut seen: Vec<String> = Vec::new();
+        let mut l1_capacity = u32::MAX;
+        for c in &cfgs {
+            if !seen.contains(&c.name) {
+                seen.push(c.name.clone());
+                let accel = Accel::new(c.clone(), 1 << 20);
+                let mut api = HeroApi::new(&accel);
+                l1_capacity = l1_capacity.min(api.capacity(SpmLevel::L1(0)));
+            }
+        }
+        let cfg = cfgs[0].clone();
+        let board = BoardSpec::from_config(&cfg);
         Scheduler {
-            pool: InstancePool::new(pool_size),
+            pool: InstancePool::heterogeneous(cfgs, board),
             cache: BinaryCache::new(true),
             batching: true,
             verify: true,
@@ -154,6 +189,13 @@ impl Scheduler {
             cfg,
             policy,
         }
+    }
+
+    /// Override the shared carrier-board DRAM spec (must precede
+    /// submissions; contention studies and `hero serve --board-bw`).
+    pub fn with_board(mut self, board: BoardSpec) -> Self {
+        self.pool.set_board(board);
+        self
     }
 
     /// Disable/enable the lowered-binary cache (on by default).
@@ -206,7 +248,12 @@ impl Scheduler {
     pub fn submit(&mut self, desc: JobDesc) -> JobHandle {
         let id = self.jobs.len();
         self.trace.record(SchedEvent::Submitted { job: id });
-        self.jobs.push(JobRecord { spec: desc, predicted: 0, state: JobState::Queued });
+        self.jobs.push(JobRecord {
+            spec: desc,
+            predicted: 0,
+            predicted_dma: 0,
+            state: JobState::Queued,
+        });
         if !workloads::known(desc.kernel) {
             self.reject(id, format!("unknown kernel {:?}", desc.kernel));
             return JobHandle(id);
@@ -220,6 +267,8 @@ impl Scheduler {
             let w = desc.workload().unwrap();
             let eff_threads = desc.threads.min(self.cfg.accel.cores_per_cluster as u32);
             self.jobs[id].predicted = policy::predict_job(&w, desc.variant, eff_threads);
+            self.jobs[id].predicted_dma =
+                policy::predict_job_dma_cycles(&w, self.cfg.dma_beat_bytes());
         }
         if let Some(action) = self.policy.admission() {
             let w = desc.workload().unwrap();
@@ -300,14 +349,43 @@ impl Scheduler {
         if self.queue.is_empty() {
             return Ok(false);
         }
+        // The target instance is known before job selection (earliest-free
+        // slot), so ordering can be contention-aware: predictions inflate
+        // with the DRAM pressure at the dispatch frontier, steering SJF
+        // away from DMA-heavy jobs while the board is loaded.
+        let inst = self.pool.pick();
+        let icfg = self.pool.cfg(inst).clone();
+        let frontier = self.pool.free_at(inst);
         let policy = self.policy;
-        let qi = policy.pick(&self.queue, |id| self.jobs[id].predicted);
+        let pressure = self.pool.pressure();
+        // Jobs that have arrived by the dispatch frontier compete under the
+        // policy; a job whose arrival is still in the future must not jump
+        // ahead of ready work (it would idle the instance and serialize
+        // everything behind the gap). Only when nothing has arrived yet
+        // does the earliest future arrival dispatch (the instance waits).
+        let arrived: Vec<usize> = (0..self.queue.len())
+            .filter(|&p| self.jobs[self.queue[p]].spec.arrival <= frontier)
+            .collect();
+        let qi = if arrived.is_empty() {
+            (0..self.queue.len())
+                .min_by_key(|&p| (self.jobs[self.queue[p]].spec.arrival, p))
+                .expect("queue is non-empty")
+        } else {
+            let sub: Vec<JobId> = arrived.iter().map(|&p| self.queue[p]).collect();
+            let k = policy.pick(&sub, |id| {
+                policy::inflate(self.jobs[id].predicted, self.jobs[id].predicted_dma, pressure)
+            });
+            arrived[k]
+        };
         let head = self.queue.remove(qi);
         let spec = self.jobs[head].spec;
         let w = workloads::build(spec.kernel, spec.size)
             .expect("queued jobs have known kernels");
 
-        // Gather same-binary followers from the queue (batching).
+        // Gather same-binary followers from the queue (batching). Only
+        // jobs already arrived by the head's start may chain — batching a
+        // future arrival would park the instance on its gap.
+        let head_start = frontier.max(spec.arrival);
         let mut batch = vec![head];
         if self.batching {
             let mut i = 0;
@@ -317,6 +395,7 @@ impl Scheduler {
                     && cand.size == spec.size
                     && cand.variant == spec.variant
                     && cand.threads == spec.threads
+                    && cand.arrival <= head_start
                 {
                     batch.push(self.queue.remove(i));
                 } else {
@@ -325,8 +404,10 @@ impl Scheduler {
             }
         }
 
+        // Compile for the *instance's* configuration (the cache key includes
+        // the config name, so heterogeneous pools keep per-width binaries).
         let (lowered, compile_cost) =
-            match self.cache.acquire(&self.cfg, &w, spec.variant, spec.threads) {
+            match self.cache.acquire(&icfg, &w, spec.variant, spec.threads) {
                 Ok(x) => x,
                 Err(e) => {
                     // The binary fails for every job of the batch alike.
@@ -343,18 +424,18 @@ impl Scheduler {
             self.trace.record(SchedEvent::CompileHit { job: head });
         }
 
-        let inst = self.pool.pick();
         let followers = batch.len() - 1;
         let mut charge = compile_cost;
         for id in batch {
             let seed = self.jobs[id].spec.seed;
-            match run_lowered(&self.cfg, &w, &lowered, seed, JOB_MAX_CYCLES) {
+            let arrival = self.jobs[id].spec.arrival;
+            match run_lowered(&icfg, &w, &lowered, seed, JOB_MAX_CYCLES) {
                 Err(e) => {
                     // The lowering happened even though the job failed:
                     // book the pending compile charge on the instance so it
                     // neither vanishes nor migrates onto a cached follower.
                     if charge > 0 {
-                        self.pool.assign(inst, charge);
+                        self.pool.assign(inst, arrival, charge, 0);
                         charge = 0;
                     }
                     self.reject(id, format!("execution failed: {e}"));
@@ -363,22 +444,35 @@ impl Scheduler {
                     let verified = !self.verify || bench_harness::verify(&w, &out, seed).is_ok();
                     let digest = digest_arrays(&out.arrays);
                     let dma_busy = out.result.perf.get(Event::DmaBusyCycles);
-                    let (start, end) = self.pool.assign(inst, charge + out.result.total_cycles);
+                    let dma_bytes = out.result.perf.get(Event::DmaBytes);
+                    let a = self.pool.assign(
+                        inst,
+                        arrival,
+                        charge + out.result.total_cycles,
+                        dma_bytes,
+                    );
                     self.pool.record(inst, out.result.device_cycles, dma_busy);
                     self.trace.record(SchedEvent::Dispatched {
                         job: id,
                         instance: inst,
-                        start,
+                        start: a.start,
                         batched: if id == head { followers } else { 0 },
                     });
-                    self.trace.record(SchedEvent::Completed { job: id, instance: inst, end });
+                    self.trace.record(SchedEvent::Completed {
+                        job: id,
+                        instance: inst,
+                        end: a.end,
+                        dram_stall: a.dram_stall,
+                    });
                     self.jobs[id].state = JobState::Done(JobOutcome {
                         instance: inst,
-                        start,
-                        end,
+                        start: a.start,
+                        end: a.end,
                         device_cycles: out.result.device_cycles,
                         compile_cycles: charge,
                         dma_busy_cycles: dma_busy,
+                        dma_bytes,
+                        dram_stall_cycles: a.dram_stall,
                         digest,
                         verified,
                     });
@@ -437,6 +531,9 @@ impl Scheduler {
                     busy_cycles: self.pool.busy_cycles(i),
                     device_cycles: s.device_cycles,
                     dma_busy_cycles: s.dma_busy_cycles,
+                    dram_stall_cycles: s.dram_stall_cycles,
+                    dram_bytes: s.dram_bytes,
+                    dma_width_bits: self.pool.cfg(i).noc.dma_width_bits,
                     utilization: self.pool.utilization(i),
                 }
             })
@@ -458,6 +555,10 @@ impl Scheduler {
             cache_hits: self.cache.stats.hits,
             cache_misses: self.cache.stats.misses,
             freq_mhz: self.cfg.accel.freq_mhz,
+            dram_peak_bytes_per_cycle: self.pool.dram_peak(),
+            dram_stall_cycles: self.pool.dram_stall_total(),
+            dram_bytes: self.pool.dram_total_bytes(),
+            dram_utilization: self.pool.dram_utilization(),
             digest,
             instances,
         }
@@ -484,7 +585,7 @@ mod tests {
     use crate::config::aurora;
 
     fn job(kernel: &'static str, size: usize, seed: u64) -> JobDesc {
-        JobDesc { kernel, size, variant: Variant::Handwritten, threads: 8, seed }
+        JobDesc { kernel, size, variant: Variant::Handwritten, threads: 8, seed, arrival: 0 }
     }
 
     /// Aurora with a TCDM small enough that mid-size kernels overflow it —
@@ -635,6 +736,75 @@ mod tests {
         let r = s.report();
         assert_eq!(r.split, 1);
         assert_eq!(r.completed, 2);
+    }
+
+    #[test]
+    fn arrival_cycle_delays_dispatch() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let early = s.submit(job("gemm", 12, 1));
+        let late = s.submit(JobDesc { arrival: 500_000_000, ..job("gemm", 12, 2) });
+        s.drain().unwrap();
+        let e = s.poll(early).unwrap();
+        let l = s.poll(late).unwrap();
+        assert!(e.end < 500_000_000, "early job should finish well before the late arrival");
+        assert_eq!(l.start, 500_000_000, "late job must wait for its arrival cycle");
+        let r = s.report();
+        assert!(r.makespan_cycles > 500_000_000);
+    }
+
+    #[test]
+    fn constrained_board_stalls_overlapping_jobs_but_not_pool1() {
+        // Board bandwidth equal to one instance's NoC drain rate: a pool of
+        // 2 must stall where windows overlap, and a pool of 1 must be
+        // cycle-identical to the uncontended baseline.
+        let jobs: Vec<JobDesc> = (0..4).map(|i| job("gemm", 24, i)).collect();
+        let run = |pool: usize, board: BoardSpec| {
+            let mut s = Scheduler::new(aurora(), pool, Policy::Fifo)
+                .with_board(board)
+                .with_batching(false)
+                .with_verify(false);
+            s.submit_all(&jobs);
+            s.drain().unwrap();
+            s.report()
+        };
+        let beat = aurora().dma_beat_bytes();
+        let open1 = run(1, BoardSpec::uncontended());
+        let capped1 = run(1, BoardSpec::with_bandwidth(beat));
+        assert_eq!(open1.makespan_cycles, capped1.makespan_cycles);
+        assert_eq!(open1.digest, capped1.digest);
+        assert_eq!(capped1.dram_stall_cycles, 0);
+        assert!(capped1.dram_bytes > 0);
+        let capped2 = run(2, BoardSpec::with_bandwidth(beat));
+        assert_eq!(capped2.digest, open1.digest, "contention must never change numerics");
+        assert!(capped2.dram_stall_cycles > 0, "overlapping DMA windows must contend");
+        assert!(
+            capped2.makespan_cycles < capped1.makespan_cycles,
+            "two instances still beat one despite contention"
+        );
+        // Conservation: the board ledger and the per-instance/per-job books
+        // agree on every byte.
+        let per_inst: u64 = capped2.instances.iter().map(|i| i.dram_bytes).sum();
+        assert_eq!(capped2.dram_bytes, per_inst);
+    }
+
+    #[test]
+    fn heterogeneous_pool_compiles_per_instance_config() {
+        use crate::config::preset::with_dma_width;
+        let base = aurora();
+        let cfgs = vec![with_dma_width(&base, 64), with_dma_width(&base, 128)];
+        let mut s = Scheduler::new_heterogeneous(cfgs, Policy::Fifo).with_batching(false);
+        for seed in 0..4 {
+            s.submit(job("gemm", 12, seed));
+        }
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.verify_failures, 0);
+        assert_eq!(r.instances[0].dma_width_bits, 64);
+        assert_eq!(r.instances[1].dma_width_bits, 128);
+        // Both instances ran jobs, and each width needed its own lowering.
+        assert!(r.instances.iter().all(|i| i.jobs > 0), "{r}");
+        assert_eq!(r.cache_misses, 2);
     }
 
     #[test]

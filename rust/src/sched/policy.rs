@@ -10,6 +10,12 @@
 //!   static SPM footprint (`Lowered::l1_used`) against what
 //!   `hero_l1_capacity` reports for the target cluster, and either rejects
 //!   oversized jobs or splits them into feasible sub-jobs.
+//!
+//! Ordering is *contention-aware*: the scheduler feeds [`Policy::pick`]
+//! predictions inflated by [`inflate`] with the current shared-DRAM
+//! pressure, so under a loaded board SJF deprioritizes DMA-heavy jobs
+//! (whose cycles will stretch) in favor of compute-bound ones. On an idle
+//! or uncontended board the inflation is zero and ordering is unchanged.
 
 use crate::bench_harness::{variant_kernel, Variant};
 use crate::compiler::metrics::{predict_cycles, PredictOpts};
@@ -109,6 +115,22 @@ pub fn predict_job(w: &Workload, variant: Variant, threads: u32) -> u64 {
     )
 }
 
+/// Static DMA-cycle proxy for one job: every mapped array crosses the
+/// DRAM boundary at least once (tiled variants stage inputs in and results
+/// out), so the job's data footprint over the instance's NoC beat rate
+/// approximates its uncontended DRAM service time.
+pub fn predict_job_dma_cycles(w: &Workload, beat_bytes: u64) -> u64 {
+    let bytes: u64 = w.arrays.iter().map(|a| a.elems as u64 * 4).sum();
+    bytes / beat_bytes.max(1)
+}
+
+/// Inflate a static cycle prediction by the current DRAM pressure: the
+/// DMA share of the job stretches proportionally to how much of the board
+/// peak is already reserved (fully loaded board ⇒ the DMA share doubles).
+pub fn inflate(predicted: u64, predicted_dma: u64, pressure: f64) -> u64 {
+    predicted + (predicted_dma as f64 * pressure.clamp(0.0, 1.0)) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +172,39 @@ mod tests {
         let ps = predict_job(&small, Variant::Handwritten, 8);
         let pb = predict_job(&big, Variant::Handwritten, 8);
         assert!(pb > ps, "{pb} vs {ps}");
+    }
+
+    #[test]
+    fn inflation_reorders_dma_heavy_jobs_under_pressure() {
+        // Job A: compute-bound (little DMA), job B: slightly shorter but
+        // DMA-heavy. Idle board: SJF picks B. Loaded board: A.
+        let queue = [0usize, 1];
+        let stat = |id: usize| if id == 0 { (1000u64, 50u64) } else { (900, 800) };
+        let idle = |id: usize| {
+            let (p, d) = stat(id);
+            inflate(p, d, 0.0)
+        };
+        let loaded = |id: usize| {
+            let (p, d) = stat(id);
+            inflate(p, d, 0.9)
+        };
+        assert_eq!(Policy::Sjf.pick(&queue, idle), 1);
+        assert_eq!(Policy::Sjf.pick(&queue, loaded), 0);
+        // Inflation never deflates and is clamped.
+        assert_eq!(inflate(100, 40, 0.0), 100);
+        assert_eq!(inflate(100, 40, 2.0), 140);
+    }
+
+    #[test]
+    fn dma_prediction_scales_with_footprint_and_width() {
+        let small = workloads::gemm::build(12);
+        let big = workloads::gemm::build(24);
+        assert!(
+            predict_job_dma_cycles(&big, 8) > predict_job_dma_cycles(&small, 8)
+        );
+        assert!(
+            predict_job_dma_cycles(&small, 4) > predict_job_dma_cycles(&small, 16)
+        );
     }
 
     #[test]

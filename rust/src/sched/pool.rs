@@ -1,17 +1,66 @@
-//! The accelerator instance pool.
+//! The accelerator instance pool: K instances on **one carrier board**.
 //!
-//! Each pool slot models one HEROv2 accelerator card on the shared job
-//! timeline. A slot is a serializing resource — exactly the abstraction
+//! Each pool slot models one HEROv2 accelerator instance on the shared job
+//! timeline. A slot is a serializing resource — the abstraction
 //! [`crate::noc::Port`] already provides for NoC data paths — so the pool
 //! reuses it: dispatching a job `acquire`s the slot's port for the job's
 //! simulated duration, and per-instance utilization falls out of
 //! `Port::busy_cycles` divided by the pool makespan.
 //!
-//! Functional state is *not* shared between jobs: every job runs on a fresh
-//! `Accel` (its own DRAM, SPMs and IOMMU), which is what makes results
-//! independent of placement and policy. The pool tracks *time*, not memory.
+//! Unlike the original pool (K fully independent simulators), the instances
+//! share the board's DRAM: every job's main-memory traffic is reserved on
+//! one [`BandwidthLedger`] whose peak is the carrier DRAM bandwidth
+//! ([`BoardSpec`]). A job that would drain its instance's NoC rate while
+//! other instances are doing the same gets only the residual bandwidth and
+//! *stalls* — its occupancy window stretches by the extra DRAM service
+//! time, which is what bends pool-scaling curves sub-linear for DMA-heavy
+//! streams. With one instance, reservations never overlap (jobs on one
+//! slot serialize), so pool=1 results are cycle-identical to the
+//! pre-shared-DRAM model as long as the board peak covers a single
+//! instance's drain rate.
+//!
+//! Slots carry their own [`HeroConfig`], so a pool may be *heterogeneous* —
+//! e.g. mixed 32/64/128-bit wide-NoC instances built with
+//! [`crate::config::preset::with_dma_width`]. An instance's config decides
+//! both how its jobs compile/execute and at what rate it drains the shared
+//! DRAM (its NoC beat rate, capped by the config's own DRAM peak — the
+//! part of the memory path the per-job simulation already accounts for).
+//!
+//! Functional state is still *not* shared between jobs: every job runs on a
+//! fresh `Accel` (its own SPMs and IOMMU), which keeps results independent
+//! of placement and policy. The board couples *time*, never memory
+//! contents.
 
+use crate::config::HeroConfig;
+use crate::mem::BandwidthLedger;
 use crate::noc::Port;
+
+/// Shared carrier-board DRAM parameters for a pool.
+#[derive(Debug, Clone, Copy)]
+pub struct BoardSpec {
+    /// Peak shared DRAM bandwidth in bytes per (accelerator) cycle.
+    pub dram_bytes_per_cycle: u64,
+}
+
+impl BoardSpec {
+    /// The board the configuration describes (e.g. 384 B/cycle for
+    /// Aurora's 19.2 GB/s DDR4 at the 50 MHz accelerator clock — far above
+    /// a single instance's 8 B/cycle NoC drain rate, so small pools do not
+    /// contend, matching the paper's single-card system balance).
+    pub fn from_config(cfg: &HeroConfig) -> Self {
+        BoardSpec { dram_bytes_per_cycle: cfg.dram.bytes_per_cycle }
+    }
+
+    /// An explicit bandwidth cap (contention studies, `--board-bw`).
+    pub fn with_bandwidth(bytes_per_cycle: u64) -> Self {
+        BoardSpec { dram_bytes_per_cycle: bytes_per_cycle.max(1) }
+    }
+
+    /// No shared-bandwidth coupling: the pre-refactor pool behavior.
+    pub fn uncontended() -> Self {
+        BoardSpec { dram_bytes_per_cycle: u64::MAX }
+    }
+}
 
 /// Cycle accounting for one pool slot.
 #[derive(Debug, Default, Clone, Copy)]
@@ -22,65 +71,162 @@ pub struct InstanceStats {
     pub device_cycles: u64,
     /// Sum of the jobs' DMA-engine busy cycles (wide-NoC occupancy).
     pub dma_busy_cycles: u64,
+    /// Cycles this instance's jobs waited on the shared board DRAM.
+    pub dram_stall_cycles: u64,
+    /// Bytes this instance moved through the shared board DRAM.
+    pub dram_bytes: u64,
 }
 
-/// A pool of `K` accelerator instances sharing one simulated timeline that
-/// starts at cycle 0.
+/// One job's placement on the shared timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Assignment {
+    pub start: u64,
+    pub end: u64,
+    /// Cycles of the occupancy window attributable to DRAM contention.
+    pub dram_stall: u64,
+}
+
+#[derive(Debug)]
+struct Slot {
+    port: Port,
+    stats: InstanceStats,
+    cfg: HeroConfig,
+    /// Effective *solo* drain rate toward the board DRAM (bytes/cycle):
+    /// the wide-NoC beat rate capped by the config's own DRAM peak. The
+    /// per-job simulation already models everything up to this rate
+    /// (including a config-level DRAM bottleneck, via the job's own
+    /// `SharedDram`), so the board ledger must only add stall *beyond* it
+    /// — anything else would double-count the engine-level stall.
+    drain_bytes_per_cycle: u64,
+}
+
+/// A pool of accelerator instances sharing one simulated timeline (starting
+/// at cycle 0) and one board DRAM.
 #[derive(Debug)]
 pub struct InstancePool {
-    ports: Vec<Port>,
-    stats: Vec<InstanceStats>,
+    slots: Vec<Slot>,
+    board: BandwidthLedger,
 }
 
 impl InstancePool {
-    pub fn new(k: usize) -> Self {
+    /// `k` identical instances of `cfg` on a board.
+    pub fn homogeneous(cfg: &HeroConfig, k: usize, board: BoardSpec) -> Self {
         assert!(k >= 1, "pool needs at least one instance");
-        InstancePool { ports: (0..k).map(|_| Port::new()).collect(), stats: vec![InstanceStats::default(); k] }
+        Self::heterogeneous(vec![cfg.clone(); k], board)
+    }
+
+    /// One instance per config (heterogeneous pool: e.g. mixed NoC widths).
+    pub fn heterogeneous(cfgs: Vec<HeroConfig>, board: BoardSpec) -> Self {
+        assert!(!cfgs.is_empty(), "pool needs at least one instance");
+        let slots = cfgs
+            .into_iter()
+            .map(|cfg| Slot {
+                port: Port::new(),
+                stats: InstanceStats::default(),
+                drain_bytes_per_cycle: cfg
+                    .dma_beat_bytes()
+                    .min(cfg.dram.bytes_per_cycle)
+                    .max(1),
+                cfg,
+            })
+            .collect();
+        InstancePool { slots, board: BandwidthLedger::new(board.dram_bytes_per_cycle, 0) }
+    }
+
+    /// Replace the board DRAM spec. Only meaningful before any assignment.
+    pub fn set_board(&mut self, board: BoardSpec) {
+        debug_assert_eq!(self.makespan(), 0, "set_board after assignments");
+        self.board = BandwidthLedger::new(board.dram_bytes_per_cycle, 0);
     }
 
     pub fn len(&self) -> usize {
-        self.ports.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ports.is_empty()
+        self.slots.is_empty()
+    }
+
+    /// Platform configuration of instance `i`.
+    pub fn cfg(&self, i: usize) -> &HeroConfig {
+        &self.slots[i].cfg
     }
 
     /// The instance that frees up earliest (ties broken toward the lowest
     /// index, so single-job streams always land on instance 0).
     pub fn pick(&self) -> usize {
-        self.ports
+        self.slots
             .iter()
             .enumerate()
-            .min_by_key(|(i, p)| (p.free_at(), *i))
+            .min_by_key(|(i, s)| (s.port.free_at(), *i))
             .map(|(i, _)| i)
             .unwrap()
     }
 
-    /// Occupy instance `i` for `duration` cycles; returns `(start, end)`.
-    pub fn assign(&mut self, i: usize, duration: u64) -> (u64, u64) {
-        self.ports[i].acquire(0, duration)
+    /// Occupy instance `i` for a job of `duration` cycles that becomes
+    /// runnable at `ready_at` (its arrival cycle) and moves `dma_bytes`
+    /// through the shared board DRAM. The DRAM demand is reserved on the
+    /// board ledger at the instance's NoC drain rate; any service beyond
+    /// the uncontended time is contention stall and extends the occupancy.
+    pub fn assign(&mut self, i: usize, ready_at: u64, duration: u64, dma_bytes: u64) -> Assignment {
+        // No future reservation can start before the earliest-free slot, so
+        // ledger history before that frontier is dead — trim it to keep
+        // long serve runs O(outstanding reservations) per assign.
+        let frontier = self.slots.iter().map(|s| s.port.free_at()).min().unwrap_or(0);
+        let InstancePool { slots, board } = self;
+        board.trim(frontier);
+        let slot = &mut slots[i];
+        let start = ready_at.max(slot.port.free_at());
+        let mut stall = 0u64;
+        if dma_bytes > 0 {
+            // The stall floor is the service time at the instance's *solo*
+            // drain rate — what the job's own simulation already charged.
+            // A board narrower than that rate (e.g. `--board-bw` below the
+            // NoC beat rate) is an additional bottleneck and stretches the
+            // job, like the engine-level model in `dma::DmaEngine::enqueue`;
+            // a config whose own DRAM is the bottleneck was already slowed
+            // inside the job and is not charged again here. Deliberately
+            // NOT `BandwidthLedger::uncontended_cycles`: clamping the floor
+            // to the board peak (or future headroom) would drop exactly the
+            // board-imposed wait from the occupancy window, letting DRAM
+            // service run past the job's slot time.
+            let rate = slot.drain_bytes_per_cycle;
+            let dram_end = board.reserve(start, dma_bytes, rate, false);
+            stall = dram_end.saturating_sub(start + dma_bytes.div_ceil(rate));
+            slot.stats.dram_stall_cycles += stall;
+            slot.stats.dram_bytes += dma_bytes;
+        }
+        let (s, e) = slot.port.acquire(ready_at, duration + stall);
+        debug_assert_eq!(s, start);
+        Assignment { start: s, end: e, dram_stall: stall }
     }
 
     /// Book a completed job's cycle breakdown on instance `i`.
     pub fn record(&mut self, i: usize, device_cycles: u64, dma_busy_cycles: u64) {
-        self.stats[i].jobs += 1;
-        self.stats[i].device_cycles += device_cycles;
-        self.stats[i].dma_busy_cycles += dma_busy_cycles;
+        let s = &mut self.slots[i].stats;
+        s.jobs += 1;
+        s.device_cycles += device_cycles;
+        s.dma_busy_cycles += dma_busy_cycles;
     }
 
     pub fn stats(&self, i: usize) -> InstanceStats {
-        self.stats[i]
+        self.slots[i].stats
+    }
+
+    /// Cycle at which instance `i` frees up (its dispatch frontier).
+    pub fn free_at(&self, i: usize) -> u64 {
+        self.slots[i].port.free_at()
     }
 
     /// Simulated cycle at which the last instance goes idle.
     pub fn makespan(&self) -> u64 {
-        self.ports.iter().map(|p| p.free_at()).max().unwrap_or(0)
+        self.slots.iter().map(|s| s.port.free_at()).max().unwrap_or(0)
     }
 
-    /// Occupied cycles of instance `i` (`noc::Port::busy_cycles`).
+    /// Occupied cycles of instance `i` (`noc::Port::busy_cycles`; includes
+    /// that instance's DRAM stalls — they occupy the slot).
     pub fn busy_cycles(&self, i: usize) -> u64 {
-        self.ports[i].busy_cycles
+        self.slots[i].port.busy_cycles
     }
 
     /// Fraction of the pool makespan instance `i` spent busy.
@@ -92,39 +238,88 @@ impl InstancePool {
             self.busy_cycles(i) as f64 / m as f64
         }
     }
+
+    /// Peak shared DRAM bandwidth (bytes/cycle; `u64::MAX` = uncontended).
+    pub fn dram_peak(&self) -> u64 {
+        self.board.peak()
+    }
+
+    /// Total bytes moved through the board DRAM (ledger accounting; equals
+    /// the sum of per-instance `dram_bytes` — the conservation invariant).
+    pub fn dram_total_bytes(&self) -> u64 {
+        self.board.total_bytes()
+    }
+
+    /// Total DRAM contention stall cycles across all instances.
+    pub fn dram_stall_total(&self) -> u64 {
+        self.slots.iter().map(|s| s.stats.dram_stall_cycles).sum()
+    }
+
+    /// Reserved fraction of the board DRAM peak at the next dispatch
+    /// frontier (the cycle where the earliest-free instance would start).
+    /// Contention-aware policies use this to inflate predictions.
+    pub fn pressure(&self) -> f64 {
+        let frontier = self.slots.iter().map(|s| s.port.free_at()).min().unwrap_or(0);
+        self.board.pressure_at(frontier)
+    }
+
+    /// Fraction of the board DRAM's deliverable bytes actually moved over
+    /// the makespan (0.0 for an uncontended board: no meaningful peak).
+    pub fn dram_utilization(&self) -> f64 {
+        let m = self.makespan();
+        let peak = self.board.peak();
+        if m == 0 || peak == u64::MAX {
+            return 0.0;
+        }
+        self.board.total_bytes() as f64 / (peak as f64 * m as f64)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{aurora, preset};
+
+    fn pool(k: usize, board: BoardSpec) -> InstancePool {
+        InstancePool::homogeneous(&aurora(), k, board)
+    }
 
     #[test]
     fn pick_prefers_least_loaded() {
-        let mut p = InstancePool::new(3);
+        let mut p = pool(3, BoardSpec::uncontended());
         assert_eq!(p.pick(), 0);
-        p.assign(0, 100);
+        p.assign(0, 0, 100, 0);
         assert_eq!(p.pick(), 1);
-        p.assign(1, 50);
-        p.assign(2, 60);
+        p.assign(1, 0, 50, 0);
+        p.assign(2, 0, 60, 0);
         assert_eq!(p.pick(), 1); // frees at 50, earliest
     }
 
     #[test]
     fn assign_serializes_per_instance() {
-        let mut p = InstancePool::new(1);
-        let (s1, e1) = p.assign(0, 10);
-        let (s2, e2) = p.assign(0, 5);
-        assert_eq!((s1, e1), (0, 10));
-        assert_eq!((s2, e2), (10, 15));
+        let mut p = pool(1, BoardSpec::uncontended());
+        let a1 = p.assign(0, 0, 10, 0);
+        let a2 = p.assign(0, 0, 5, 0);
+        assert_eq!((a1.start, a1.end), (0, 10));
+        assert_eq!((a2.start, a2.end), (10, 15));
         assert_eq!(p.makespan(), 15);
         assert_eq!(p.busy_cycles(0), 15);
     }
 
     #[test]
+    fn arrival_delays_start() {
+        let mut p = pool(1, BoardSpec::uncontended());
+        let a = p.assign(0, 500, 100, 0);
+        assert_eq!((a.start, a.end), (500, 600));
+        assert_eq!(p.makespan(), 600);
+        assert_eq!(p.busy_cycles(0), 100); // idle gap is not busy time
+    }
+
+    #[test]
     fn utilization_uses_port_busy_cycles() {
-        let mut p = InstancePool::new(2);
-        p.assign(0, 100);
-        p.assign(1, 50);
+        let mut p = pool(2, BoardSpec::uncontended());
+        p.assign(0, 0, 100, 0);
+        p.assign(1, 0, 50, 0);
         assert!((p.utilization(0) - 1.0).abs() < 1e-12);
         assert!((p.utilization(1) - 0.5).abs() < 1e-12);
     }
@@ -132,15 +327,100 @@ mod tests {
     #[test]
     fn spreading_beats_one_instance() {
         // Four 100-cycle jobs: pool of 4 finishes in 100, pool of 1 in 400.
-        let mut p1 = InstancePool::new(1);
-        let mut p4 = InstancePool::new(4);
+        let mut p1 = pool(1, BoardSpec::uncontended());
+        let mut p4 = pool(4, BoardSpec::uncontended());
         for _ in 0..4 {
             let i1 = p1.pick();
-            p1.assign(i1, 100);
+            p1.assign(i1, 0, 100, 0);
             let i4 = p4.pick();
-            p4.assign(i4, 100);
+            p4.assign(i4, 0, 100, 0);
         }
         assert_eq!(p1.makespan(), 400);
         assert_eq!(p4.makespan(), 100);
+    }
+
+    #[test]
+    fn overlapping_dma_jobs_contend_on_the_board() {
+        // Board peak equals one instance's 8 B/cycle drain rate: two
+        // concurrent DMA-heavy jobs must share it.
+        let mut p = pool(2, BoardSpec::with_bandwidth(8));
+        let a0 = p.assign(0, 0, 100, 400);
+        // Instance 0 serves its 400 B in 50 cycles at full rate: no stall.
+        assert_eq!((a0.start, a0.end, a0.dram_stall), (0, 100, 0));
+        // Instance 1 overlaps: blocked for 50 cycles, then 50 at full rate.
+        let a1 = p.assign(1, 0, 100, 400);
+        assert_eq!(a1.dram_stall, 50);
+        assert_eq!((a1.start, a1.end), (0, 150));
+        assert_eq!(p.stats(1).dram_stall_cycles, 50);
+        assert_eq!(p.dram_stall_total(), 50);
+        assert_eq!(p.dram_total_bytes(), 800);
+        assert_eq!(p.stats(0).dram_bytes + p.stats(1).dram_bytes, 800);
+    }
+
+    #[test]
+    fn board_slower_than_one_instance_stalls_even_solo() {
+        // Peak 4 B/cycle under an 8 B/cycle instance: the board itself is
+        // the bottleneck, so even an unshared job stretches (mirroring the
+        // engine-level dram_bottleneck_stalls_transfer behavior).
+        let mut p = pool(1, BoardSpec::with_bandwidth(4));
+        let a = p.assign(0, 0, 100, 400);
+        // Service takes 400/4 = 100 cycles vs the 400/8 = 50-cycle floor.
+        assert_eq!(a.dram_stall, 50);
+        assert_eq!(a.end, 150);
+    }
+
+    #[test]
+    fn config_level_dram_bottleneck_is_not_double_counted() {
+        // A config whose own DRAM peak (4 B/cy) is below its NoC beat rate
+        // already pays the slowdown inside each job's simulation, so the
+        // matching board (BoardSpec::from_config) adds zero extra stall.
+        let mut cfg = aurora();
+        cfg.dram.bytes_per_cycle = 4;
+        let mut p = InstancePool::homogeneous(&cfg, 1, BoardSpec::from_config(&cfg));
+        let a = p.assign(0, 0, 200, 400);
+        assert_eq!(a.dram_stall, 0);
+        assert_eq!(a.end, 200);
+    }
+
+    #[test]
+    fn sequential_jobs_on_one_instance_never_stall() {
+        // The pool=1 identity: one instance's reservations cannot overlap,
+        // so a board that covers its drain rate adds zero cycles.
+        let mut capped = pool(1, BoardSpec::with_bandwidth(8));
+        let mut open = pool(1, BoardSpec::uncontended());
+        for (dur, bytes) in [(300u64, 800u64), (120, 640), (50, 0), (700, 2048)] {
+            let a = capped.assign(0, 0, dur, bytes);
+            let b = open.assign(0, 0, dur, bytes);
+            assert_eq!(a.dram_stall, 0);
+            assert_eq!((a.start, a.end), (b.start, b.end));
+        }
+        assert_eq!(capped.makespan(), open.makespan());
+    }
+
+    #[test]
+    fn heterogeneous_slots_keep_their_configs() {
+        let base = aurora();
+        let cfgs = vec![
+            preset::with_dma_width(&base, 64),
+            preset::with_dma_width(&base, 32),
+            preset::with_dma_width(&base, 128),
+        ];
+        let p = InstancePool::heterogeneous(cfgs, BoardSpec::uncontended());
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.cfg(0).noc.dma_width_bits, 64);
+        assert_eq!(p.cfg(1).noc.dma_width_bits, 32);
+        assert_eq!(p.cfg(2).noc.dma_width_bits, 128);
+        assert_eq!(p.cfg(0).name, "aurora");
+        assert_eq!(p.cfg(1).name, "aurora-w32");
+        assert_eq!(p.cfg(2).name, "aurora-w128");
+    }
+
+    #[test]
+    fn pressure_tracks_the_dispatch_frontier() {
+        let mut p = pool(2, BoardSpec::with_bandwidth(16));
+        assert_eq!(p.pressure(), 0.0);
+        p.assign(0, 0, 100, 800); // reserves 8 B/cycle over [0, 100)
+        // Frontier is instance 1's free_at = 0, where half the peak is gone.
+        assert!((p.pressure() - 0.5).abs() < 1e-12);
     }
 }

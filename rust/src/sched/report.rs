@@ -6,12 +6,20 @@ use std::fmt;
 #[derive(Debug, Clone, Copy)]
 pub struct InstanceReport {
     pub jobs: u64,
-    /// Occupied cycles on the shared timeline (`noc::Port::busy_cycles`).
+    /// Occupied cycles on the shared timeline (`noc::Port::busy_cycles`,
+    /// including this instance's DRAM contention stalls).
     pub busy_cycles: u64,
     /// Pure device cycles of the jobs run here (excludes compile charges).
     pub device_cycles: u64,
     /// DMA wide-path occupancy summed over this instance's jobs.
     pub dma_busy_cycles: u64,
+    /// Cycles this instance's jobs waited on the shared board DRAM.
+    pub dram_stall_cycles: u64,
+    /// Bytes this instance moved through the shared board DRAM.
+    pub dram_bytes: u64,
+    /// Wide-NoC width of this instance's configuration (heterogeneous
+    /// pools mix widths).
+    pub dma_width_bits: u32,
     /// busy / makespan.
     pub utilization: f64,
 }
@@ -36,9 +44,19 @@ pub struct ServeReport {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub freq_mhz: u32,
+    /// Shared carrier-board DRAM peak (bytes/cycle; `u64::MAX` when the
+    /// board coupling is disabled).
+    pub dram_peak_bytes_per_cycle: u64,
+    /// Aggregate cycles jobs waited on the shared board DRAM.
+    pub dram_stall_cycles: u64,
+    /// Total bytes moved through the shared board DRAM (ledger accounting;
+    /// equals the per-instance sum — the conservation invariant).
+    pub dram_bytes: u64,
+    /// Delivered fraction of the board DRAM's peak over the makespan.
+    pub dram_utilization: f64,
     /// Order-stable digest over every completed job's output arrays:
     /// bit-identical results ⇔ identical digest, regardless of policy,
-    /// pool size, batching or caching.
+    /// pool size, batching, caching or board bandwidth (homogeneous pools).
     pub digest: u64,
     pub instances: Vec<InstanceReport>,
 }
@@ -94,14 +112,29 @@ impl fmt::Display for ServeReport {
             "compile       : {} lowerings, {} cache hits, {} cycles charged",
             self.cache_misses, self.cache_hits, self.compile_cycles
         )?;
+        if self.dram_peak_bytes_per_cycle == u64::MAX {
+            writeln!(f, "board dram    : uncoupled (no shared-bandwidth model)")?;
+        } else {
+            writeln!(
+                f,
+                "board dram    : peak {} B/cy, {} B moved, {} stall cy, util {:>5.1}%",
+                self.dram_peak_bytes_per_cycle,
+                self.dram_bytes,
+                self.dram_stall_cycles,
+                100.0 * self.dram_utilization
+            )?;
+        }
         for (i, inst) in self.instances.iter().enumerate() {
             writeln!(
                 f,
-                "instance {:>3}  : {:>4} jobs, busy {:>12} cy, dma {:>12} cy, util {:>5.1}%",
+                "instance {:>3}  : {:>4} jobs, w{:<3} busy {:>12} cy, dma {:>12} cy, \
+                 dram stall {:>10} cy, util {:>5.1}%",
                 i,
                 inst.jobs,
+                inst.dma_width_bits,
                 inst.busy_cycles,
                 inst.dma_busy_cycles,
+                inst.dram_stall_cycles,
                 100.0 * inst.utilization
             )?;
         }
@@ -129,12 +162,19 @@ mod tests {
             cache_hits: 6,
             cache_misses: 2,
             freq_mhz: 50,
+            dram_peak_bytes_per_cycle: 384,
+            dram_stall_cycles: 12_000,
+            dram_bytes: 3_000_000,
+            dram_utilization: 0.25,
             digest: 0xdead_beef,
             instances: vec![InstanceReport {
                 jobs: 8,
                 busy_cycles: 4_000_000,
                 device_cycles: 3_900_000,
                 dma_busy_cycles: 50_000,
+                dram_stall_cycles: 12_000,
+                dram_bytes: 3_000_000,
+                dma_width_bits: 64,
                 utilization: 1.0,
             }],
         }
@@ -153,7 +193,16 @@ mod tests {
         let s = report().to_string();
         assert!(s.contains("8 completed"));
         assert!(s.contains("jobs/s"));
+        assert!(s.contains("board dram"));
+        assert!(s.contains("stall"));
         assert!(s.contains("instance   0"));
         assert!(s.contains("result digest"));
+    }
+
+    #[test]
+    fn uncoupled_board_renders_distinctly() {
+        let mut r = report();
+        r.dram_peak_bytes_per_cycle = u64::MAX;
+        assert!(r.to_string().contains("uncoupled"));
     }
 }

@@ -57,10 +57,14 @@ pub enum Event {
     Barrier,
     /// Cycles stalled at barriers.
     BarrierStall,
+    /// Extra cycles DMA transfers waited on the shared carrier-board DRAM
+    /// beyond their uncontended service time (bandwidth contention at the
+    /// DRAM boundary; disjoint from `DmaBusyCycles` by construction).
+    DmaDramStall,
 }
 
 /// Number of distinct events.
-pub const N_EVENTS: usize = Event::BarrierStall as usize + 1;
+pub const N_EVENTS: usize = Event::DmaDramStall as usize + 1;
 
 /// All events, for iteration.
 pub const ALL_EVENTS: [Event; N_EVENTS] = [
@@ -85,6 +89,7 @@ pub const ALL_EVENTS: [Event; N_EVENTS] = [
     Event::DmaBursts,
     Event::Barrier,
     Event::BarrierStall,
+    Event::DmaDramStall,
 ];
 
 impl Event {
@@ -112,6 +117,7 @@ impl Event {
             Event::DmaBursts => "dma_bursts",
             Event::Barrier => "barrier",
             Event::BarrierStall => "barrier_stall",
+            Event::DmaDramStall => "dma_dram_stall",
         }
     }
 }
@@ -207,8 +213,10 @@ pub enum SchedEvent {
     CompileHit { job: usize },
     /// Job (plus `batched` same-binary followers) started on an instance.
     Dispatched { job: usize, instance: usize, start: u64, batched: usize },
-    /// Job finished on its instance at simulated cycle `end`.
-    Completed { job: usize, instance: usize, end: u64 },
+    /// Job finished on its instance at simulated cycle `end`; `dram_stall`
+    /// cycles of its occupancy were contention waits on the shared
+    /// carrier-board DRAM.
+    Completed { job: usize, instance: usize, end: u64, dram_stall: u64 },
 }
 
 /// An append-only scheduler event log.
@@ -254,8 +262,15 @@ impl SchedTrace {
                 SchedEvent::Dispatched { job, instance, start, batched } => format!(
                     "dispatch  job {job} -> instance {instance} at cycle {start} (+{batched} batched)"
                 ),
-                SchedEvent::Completed { job, instance, end } => {
-                    format!("complete  job {job} on instance {instance} at cycle {end}")
+                SchedEvent::Completed { job, instance, end, dram_stall } => {
+                    if *dram_stall > 0 {
+                        format!(
+                            "complete  job {job} on instance {instance} at cycle {end} \
+                             ({dram_stall} cy DRAM stall)"
+                        )
+                    } else {
+                        format!("complete  job {job} on instance {instance} at cycle {end}")
+                    }
                 }
             };
             out.push_str(&line);
@@ -275,7 +290,7 @@ mod tests {
         t.record(SchedEvent::Submitted { job: 0 });
         t.record(SchedEvent::CompileMiss { job: 0, cycles: 1000 });
         t.record(SchedEvent::Dispatched { job: 0, instance: 1, start: 0, batched: 2 });
-        t.record(SchedEvent::Completed { job: 0, instance: 1, end: 500 });
+        t.record(SchedEvent::Completed { job: 0, instance: 1, end: 500, dram_stall: 40 });
         assert_eq!(t.dispatch_order(), vec![0]);
         let s = t.render();
         assert!(s.contains("dispatch  job 0 -> instance 1"));

@@ -163,7 +163,24 @@ pub fn build(name: &str, size: usize) -> Option<Workload> {
 
 /// Whether `name` is a registered kernel (cheaper than building one).
 pub fn known(name: &str) -> bool {
-    matches!(name, "2mm" | "3mm" | "atax" | "bicg" | "conv2d" | "covar" | "darknet" | "gemm")
+    canonical(name).is_some()
+}
+
+/// The registry's `&'static str` for a kernel name — lets parsers that hold
+/// owned strings (e.g. `hero serve --trace` ingestion) build [`crate::workloads::synth::JobDesc`]s,
+/// whose kernel field is a static registry name.
+pub fn canonical(name: &str) -> Option<&'static str> {
+    match name {
+        "2mm" => Some("2mm"),
+        "3mm" => Some("3mm"),
+        "atax" => Some("atax"),
+        "bicg" => Some("bicg"),
+        "conv2d" => Some("conv2d"),
+        "covar" => Some("covar"),
+        "darknet" => Some("darknet"),
+        "gemm" => Some("gemm"),
+        _ => None,
+    }
 }
 
 #[cfg(test)]

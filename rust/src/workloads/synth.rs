@@ -1,17 +1,24 @@
-//! Synthetic mixed-workload job streams for the offload scheduler.
+//! Synthetic mixed-workload job streams for the offload scheduler, plus
+//! ingestion of replayable job traces.
 //!
 //! A "job" at this layer is plain data — kernel name, problem size,
-//! variant, thread count, input seed — so the generator stays independent
-//! of the scheduler that consumes it (`sched::Scheduler::submit` turns a
-//! [`JobDesc`] into a queued job). The mix is deterministic in the stream
-//! seed: the same `(n, seed)` always yields the same job list, which is
-//! what makes cross-policy bit-identity checks possible.
+//! variant, thread count, input seed, arrival cycle — so the generator
+//! stays independent of the scheduler that consumes it
+//! (`sched::Scheduler::submit` turns a [`JobDesc`] into a queued job). The
+//! mix is deterministic in the stream seed: the same `(n, seed)` always
+//! yields the same job list, which is what makes cross-policy bit-identity
+//! checks possible.
 //!
 //! Sizes are intentionally small (same scale as [`super::all_tiny`]) so a
 //! 100-job `hero serve` run completes in seconds of wall time while still
 //! exercising every kernel, several tiling variants, and enough distinct
 //! (kernel, variant, size, threads) binaries that the scheduler's binary
 //! cache sees both hits and misses.
+//!
+//! Besides the synthetic generators, [`parse_trace`] replays production
+//! traffic from a newline-delimited trace file
+//! (`arrival-cycle kernel size [variant] [threads] [seed]`), the
+//! `hero serve --trace <file>` ingestion path.
 
 use super::Workload;
 use crate::bench_harness::Variant;
@@ -26,6 +33,9 @@ pub struct JobDesc {
     pub threads: u32,
     /// Seed for the job's input data (`Workload::gen_data`).
     pub seed: u64,
+    /// Cycle the job becomes available for dispatch (0 = immediately; trace
+    /// replay sets real arrival times).
+    pub arrival: u64,
 }
 
 impl JobDesc {
@@ -67,6 +77,7 @@ pub fn mixed_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
                 variant: *rng.pick(&VARIANTS),
                 threads: *rng.pick(&[4u32, 8, 8]),
                 seed: rng.next_u64(),
+                arrival: 0,
             }
         })
         .collect()
@@ -83,6 +94,82 @@ pub fn tiny_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
             j
         })
         .collect()
+}
+
+/// Generate `n` DMA-heavy jobs: tiled kernels at the larger menu sizes,
+/// where staging tiles in and out of the SPMs dominates. The stream for
+/// shared-DRAM contention studies (`benches/sched.rs`).
+pub fn dma_heavy_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
+    const HEAVY: [(&str, usize); 4] = [("gemm", 24), ("conv2d", 24), ("darknet", 18), ("2mm", 16)];
+    let mut rng = Rng::new(seed ^ 0xD0A_BEEF);
+    (0..n)
+        .map(|_| {
+            let (kernel, size) = *rng.pick(&HEAVY);
+            JobDesc {
+                kernel,
+                size,
+                variant: Variant::Handwritten,
+                threads: 8,
+                seed: rng.next_u64(),
+                arrival: 0,
+            }
+        })
+        .collect()
+}
+
+/// Parse a newline-delimited job trace. Line format (whitespace-separated):
+///
+/// ```text
+/// <arrival-cycle> <kernel> <size> [variant] [threads] [seed]
+/// ```
+///
+/// `#` starts a comment; blank lines are skipped. Omitted fields default to
+/// `handwritten`, 8 threads, and a deterministic per-line seed. The parse
+/// is strict about what it does understand — unknown kernels or variants
+/// are errors, not silently dropped jobs. Jobs are returned sorted by
+/// arrival cycle (stable, so same-cycle jobs keep file order): the
+/// scheduler dispatches in submission order, and replaying a later arrival
+/// first would serialize earlier jobs behind it.
+pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
+    let mut jobs = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 3 {
+            return Err(format!(
+                "trace line {ln}: expected `arrival kernel size [variant] [threads] [seed]`, \
+                 got {line:?}"
+            ));
+        }
+        let arrival: u64 =
+            f[0].parse().map_err(|_| format!("trace line {ln}: bad arrival cycle {:?}", f[0]))?;
+        let kernel = super::canonical(f[1])
+            .ok_or_else(|| format!("trace line {ln}: unknown kernel {:?}", f[1]))?;
+        let size: usize =
+            f[2].parse().map_err(|_| format!("trace line {ln}: bad size {:?}", f[2]))?;
+        let variant = match f.get(3).copied() {
+            None | Some("handwritten") => Variant::Handwritten,
+            Some("unmodified") => Variant::Unmodified,
+            Some("promoted") => Variant::Promoted,
+            Some("autodma") => Variant::AutoDma,
+            Some(v) => return Err(format!("trace line {ln}: unknown variant {v:?}")),
+        };
+        let threads: u32 = match f.get(4) {
+            None => 8,
+            Some(t) => t.parse().map_err(|_| format!("trace line {ln}: bad threads {t:?}"))?,
+        };
+        let seed: u64 = match f.get(5) {
+            None => (ln as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ arrival,
+            Some(s) => s.parse().map_err(|_| format!("trace line {ln}: bad seed {s:?}"))?,
+        };
+        jobs.push(JobDesc { kernel, size, variant, threads, seed, arrival });
+    }
+    jobs.sort_by_key(|j| j.arrival);
+    Ok(jobs)
 }
 
 #[cfg(test)]
@@ -115,5 +202,64 @@ mod tests {
             let (_, sizes) = MENU.iter().find(|(k, _)| *k == j.kernel).unwrap();
             assert_eq!(j.size, sizes[0]);
         }
+    }
+
+    #[test]
+    fn dma_heavy_jobs_are_tiled_and_buildable() {
+        let jobs = dma_heavy_jobs(20, 9);
+        assert_eq!(jobs, dma_heavy_jobs(20, 9));
+        for j in &jobs {
+            assert_eq!(j.variant, Variant::Handwritten);
+            assert!(j.workload().is_some());
+        }
+    }
+
+    #[test]
+    fn trace_parses_full_and_defaulted_lines() {
+        let text = "\
+# production replay, cycle-stamped
+0 gemm 12 handwritten 8 7
+150 atax 24            # defaults: handwritten, 8 threads, derived seed
+
+40000 conv2d 18 autodma 4 99
+";
+        let jobs = parse_trace(text).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(
+            jobs[0],
+            JobDesc {
+                kernel: "gemm",
+                size: 12,
+                variant: Variant::Handwritten,
+                threads: 8,
+                seed: 7,
+                arrival: 0
+            }
+        );
+        assert_eq!((jobs[1].kernel, jobs[1].arrival, jobs[1].threads), ("atax", 150, 8));
+        assert_eq!(jobs[2].variant, Variant::AutoDma);
+        assert_eq!(jobs[2].threads, 4);
+        assert_eq!(jobs[2].arrival, 40_000);
+        // Determinism of derived seeds.
+        assert_eq!(parse_trace(text).unwrap(), jobs);
+    }
+
+    #[test]
+    fn trace_sorts_by_arrival() {
+        let jobs = parse_trace("900 gemm 12\n0 atax 24\n900 bicg 24\n").unwrap();
+        assert_eq!(
+            jobs.iter().map(|j| (j.arrival, j.kernel)).collect::<Vec<_>>(),
+            // Stable: the two cycle-900 jobs keep their file order.
+            vec![(0, "atax"), (900, "gemm"), (900, "bicg")]
+        );
+    }
+
+    #[test]
+    fn trace_rejects_malformed_lines() {
+        assert!(parse_trace("0 gemm").unwrap_err().contains("line 1"));
+        assert!(parse_trace("x gemm 12").unwrap_err().contains("arrival"));
+        assert!(parse_trace("0 nope 12").unwrap_err().contains("unknown kernel"));
+        assert!(parse_trace("0 gemm 12 turbo").unwrap_err().contains("unknown variant"));
+        assert!(parse_trace("0 gemm twelve").unwrap_err().contains("bad size"));
     }
 }

@@ -311,6 +311,7 @@ fn prop_sched_no_submitted_job_starves() {
                 variant: Variant::Handwritten,
                 threads: 8,
                 seed,
+                arrival: 0,
             });
             s.drain().map_err(|e| e.to_string())?;
             for id in 0..s.submitted() {
@@ -320,6 +321,114 @@ fn prop_sched_no_submitted_job_starves() {
             }
             if s.pending() != 0 {
                 return Err(format!("{} jobs left in the queue", s.pending()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dram_ledger_conserves_bytes_and_respects_peak() {
+    // The shared-DRAM bandwidth ledger must (a) account every requested
+    // byte exactly once, (b) never reserve above its peak anywhere on the
+    // timeline, and (c) never finish a request before its uncontended
+    // service time.
+    use herov2::mem::BandwidthLedger;
+    check(
+        60,
+        |rng| {
+            let peak = rng.range(2, 48);
+            let headroom = rng.range(0, peak / 2);
+            let reqs: Vec<(u64, u64, u64, bool)> = (0..25)
+                .map(|_| {
+                    (rng.range(0, 2000), rng.range(1, 8192), rng.range(1, 16), rng.bool())
+                })
+                .collect();
+            (peak, headroom, reqs)
+        },
+        |(peak, headroom, reqs)| {
+            let mut l = BandwidthLedger::new(*peak, *headroom);
+            let mut sum = 0u64;
+            for &(start, bytes, rate, prio) in reqs {
+                let end = l.reserve(start, bytes, rate, prio);
+                let floor = l.uncontended_cycles(bytes, rate, prio);
+                if end < start + floor {
+                    return Err(format!(
+                        "request ({start}, {bytes} B, {rate} B/cy) finished at {end}, \
+                         before its uncontended time {floor}"
+                    ));
+                }
+                sum += bytes;
+            }
+            if l.total_bytes() != sum {
+                return Err(format!("served {} B != requested {sum} B", l.total_bytes()));
+            }
+            if l.max_rate() > *peak {
+                return Err(format!("reserved rate {} exceeds peak {peak}", l.max_rate()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pool_conserves_dram_beats_and_pool1_matches_uncontended() {
+    // Scheduler-level conservation: every byte a job moved through the
+    // board DRAM shows up exactly once in the ledger, the per-instance
+    // stats, and the per-job outcomes. And the pool=1 identity: with the
+    // board peak covering a single instance's drain rate, contention
+    // accounting adds zero cycles — makespan and digest are identical to
+    // the uncontended board.
+    use herov2::sched::{BoardSpec, JobHandle, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 6), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let cfg = aurora();
+            let beat = cfg.dma_beat_bytes();
+            let run = |board: BoardSpec| {
+                let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_verify(false);
+                s = s.with_board(board);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok::<_, String>(s)
+            };
+            let open = run(BoardSpec::uncontended())?;
+            let capped = run(BoardSpec::with_bandwidth(beat))?;
+            let ro = open.report();
+            let rc = capped.report();
+            if rc.makespan_cycles != ro.makespan_cycles {
+                return Err(format!(
+                    "pool=1 contended makespan {} != uncontended {}",
+                    rc.makespan_cycles, ro.makespan_cycles
+                ));
+            }
+            if rc.digest != ro.digest {
+                return Err("pool=1 digest diverged under contention accounting".into());
+            }
+            if rc.dram_stall_cycles != 0 {
+                return Err(format!("pool=1 stalled {} cycles", rc.dram_stall_cycles));
+            }
+            // Conservation across all three books.
+            let per_inst: u64 = rc.instances.iter().map(|i| i.dram_bytes).sum();
+            let per_job: u64 = (0..capped.submitted())
+                .filter_map(|i| capped.poll(JobHandle(i)).map(|o| o.dma_bytes))
+                .sum();
+            if rc.dram_bytes != per_inst || rc.dram_bytes != per_job {
+                return Err(format!(
+                    "DRAM byte books disagree: ledger {} vs instances {per_inst} vs jobs {per_job}",
+                    rc.dram_bytes
+                ));
+            }
+            if per_job == 0 {
+                return Err("tiled jobs must move DMA bytes".into());
+            }
+            for i in 0..capped.submitted() {
+                if !capped.state(JobHandle(i)).settled() {
+                    return Err(format!("job {i} never settled"));
+                }
             }
             Ok(())
         },
