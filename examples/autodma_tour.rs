@@ -7,11 +7,13 @@
 //! Shows the §3.2 story end to end: the unmodified source, the transformed
 //! load/execute/store form, the zero-code-change speedup vs external-memory
 //! execution, and the gap to (and code-size cost of) handwritten tiling.
+//! All three variants run through one `Session`.
 
-use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::bench_harness::{verify_arrays, Variant};
 use herov2::compiler::{autodma, ir, metrics, AutoDmaOpts};
 use herov2::config::aurora;
 use herov2::workloads;
+use herov2::Session;
 
 fn main() -> anyhow::Result<()> {
     let cfg = aurora();
@@ -26,24 +28,24 @@ fn main() -> anyhow::Result<()> {
         report.tile_sides, report.row_wise, report.remote);
 
     let seed = 5;
-    let base = run_workload(&cfg, &w, Variant::Unmodified, 8, seed, 10_000_000_000)?;
-    let auto = run_workload(&cfg, &w, Variant::AutoDma, 8, seed, 10_000_000_000)?;
-    let hand = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 10_000_000_000)?;
+    let mut sess = Session::single(cfg.clone());
+    let base = sess.run_workload(&w, Variant::Unmodified, 8, seed)?;
+    let auto = sess.run_workload(&w, Variant::AutoDma, 8, seed)?;
+    let hand = sess.run_workload(&w, Variant::Handwritten, 8, seed)?;
     for out in [&base, &auto, &hand] {
-        verify(&w, out, seed)?;
+        verify_arrays(&w, &out.arrays, seed)?;
     }
     let u = metrics::complexity(&w.unmodified);
     let h = metrics::complexity(&w.handwritten);
-    println!("external memory : {:>9} cycles", base.cycles());
-    println!("AutoDMA         : {:>9} cycles ({:.2}x, zero code changes)",
-        auto.cycles(), base.cycles() as f64 / auto.cycles() as f64);
-    println!("handwritten     : {:>9} cycles ({:.2}x, {:.1}x more code, {:.1}x cyclomatic)",
-        hand.cycles(),
-        base.cycles() as f64 / hand.cycles() as f64,
+    let (bc, ac, hc) =
+        (base.result.device_cycles, auto.result.device_cycles, hand.result.device_cycles);
+    println!("external memory : {bc:>9} cycles");
+    println!("AutoDMA         : {ac:>9} cycles ({:.2}x, zero code changes)", bc as f64 / ac as f64);
+    println!("handwritten     : {hc:>9} cycles ({:.2}x, {:.1}x more code, {:.1}x cyclomatic)",
+        bc as f64 / hc as f64,
         h.loc as f64 / u.loc as f64,
         h.cyclomatic as f64 / u.cyclomatic as f64);
-    println!("AutoDMA reaches {:.0}% of the handwritten speedup",
-        100.0 * hand.cycles() as f64 / auto.cycles() as f64);
+    println!("AutoDMA reaches {:.0}% of the handwritten speedup", 100.0 * hc as f64 / ac as f64);
 
     // The pathological case (§3.2): covar's column-wise accesses.
     let w = workloads::covar::build(128); // large enough that tiling kicks in

@@ -14,22 +14,23 @@
 //!
 //! Each conv layer is im2col'd on the host (as darknet does) and its GEMM
 //! is built as a *custom rectangular kernel* with the public `KernelBuilder`
-//! API, compiled by the heterogeneous compiler (AutoDMA — zero manual
-//! tiling), and offloaded through the OpenMP runtime onto the simulated
-//! Aurora accelerator. Host work (im2col, ReLU, pooling) stays on the host,
-//! exactly like the paper's application split. Every layer is verified
-//! against a host golden model; the run reports per-layer cycles and the
-//! end-to-end speedup of AutoDMA offloading vs running the same kernels on
-//! external memory — the paper's headline metric for this application.
+//! API — not a registry workload — then launched through the unified
+//! `Session` front door (AutoDMA tiling, zero manual DMA code). Host work
+//! (im2col, ReLU, pooling) stays on the host, exactly like the paper's
+//! application split. Every layer is verified against a host golden model;
+//! the run reports per-layer cycles and the end-to-end speedup of AutoDMA
+//! offloading vs running the same kernels on external memory — the paper's
+//! headline metric for this application. A final section submits the same
+//! custom GEMM to a *pooled* session (2 accelerator instances behind the
+//! offload scheduler) and checks the digest is bit-identical to the
+//! single-accelerator launch: one API, any number of devices.
 
-use herov2::accel::Accel;
-use herov2::bench_harness::geomean;
-use herov2::compiler::{compile, ir::*, AutoDmaOpts, LowerOpts};
-use herov2::config::aurora;
-use herov2::host::{HostBuf, HostContext};
-use herov2::runtime::omp::offload;
-use herov2::workloads::gen_f32;
 use anyhow::Result;
+use herov2::bench_harness::geomean;
+use herov2::compiler::ir::*;
+use herov2::config::aurora;
+use herov2::workloads::gen_f32;
+use herov2::Session;
 
 /// Build `C[M][N] = A[M][K] @ B[K][N]` as an unmodified OpenMP kernel; the
 /// AutoDMA pass does the tiling.
@@ -108,11 +109,10 @@ fn golden_mm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     c
 }
 
+/// Launch one im2col'd conv GEMM through the session; returns C + cycles.
 fn offload_mm(
-    accel: &mut Accel,
-    host: &mut HostContext,
-    opts: &LowerOpts,
-    autodma: Option<&AutoDmaOpts>,
+    sess: &mut Session,
+    autodma: bool,
     m: usize,
     k: usize,
     n: usize,
@@ -120,24 +120,17 @@ fn offload_mm(
     b: &[f32],
 ) -> Result<(Vec<f32>, u64)> {
     let kernel = mm_kernel(m as i32, k as i32, n as i32);
-    let (lowered, _) = compile(&kernel, opts, autodma)?;
-    let ab = host.alloc(accel, m * k)?;
-    let bb = host.alloc(accel, k * n)?;
-    let cb = host.alloc(accel, m * n)?;
-    host.write_f32(accel, &ab, a);
-    host.write_f32(accel, &bb, b);
-    let bufs: Vec<&HostBuf> = vec![&ab, &bb, &cb];
-    let res = offload(accel, &lowered, &bufs, &[], 1, 100_000_000_000)?;
-    Ok((host.read_f32(accel, &cb), res.device_cycles))
+    let ab = sess.buffer_from_f32(a);
+    let bb = sess.buffer_from_f32(b);
+    let cb = sess.buffer_zeroed(m * n);
+    let launch =
+        sess.launch(&kernel).args(&[&ab, &bb, &cb]).autodma(autodma).submit()?;
+    let res = sess.wait(&launch)?;
+    Ok((sess.read_f32(&cb)?, res.device_cycles))
 }
 
 fn run_network(autodma: bool) -> Result<(Vec<f32>, Vec<(String, u64)>)> {
-    let cfg = aurora();
-    let opts = LowerOpts::for_config(&cfg);
-    let ad = AutoDmaOpts::for_config(&cfg);
-    let autodma = autodma.then_some(&ad);
-    let mut accel = Accel::new(cfg.clone(), 64 << 20);
-    let mut host = HostContext::new();
+    let mut sess = Session::single(aurora());
 
     // Synthetic 32x32 RGB image + deterministic weights.
     let (mut h, mut w, mut c_in) = (32usize, 32usize, 3usize);
@@ -147,17 +140,8 @@ fn run_network(autodma: bool) -> Result<(Vec<f32>, Vec<(String, u64)>)> {
     for (li, layer) in layers.iter().enumerate() {
         let (cols_mat, krows, cols) = im2col(&act, c_in, h, w);
         let weights = gen_f32(100 + li as u64, layer.c_out * krows);
-        let (out, cycles) = offload_mm(
-            &mut accel,
-            &mut host,
-            &opts,
-            autodma,
-            layer.c_out,
-            krows,
-            cols,
-            &weights,
-            &cols_mat,
-        )?;
+        let (out, cycles) =
+            offload_mm(&mut sess, autodma, layer.c_out, krows, cols, &weights, &cols_mat)?;
         // Verify the offloaded GEMM against the host golden model.
         let want = golden_mm(layer.c_out, krows, cols, &weights, &cols_mat);
         for (g, wv) in out.iter().zip(&want) {
@@ -179,6 +163,29 @@ fn run_network(autodma: bool) -> Result<(Vec<f32>, Vec<(String, u64)>)> {
         .map(|o| (0..c_in).map(|c| wfc[o * c_in + c] * pooled[c]).sum())
         .collect();
     Ok((logits, log))
+}
+
+/// The same custom GEMM, single vs pooled: digests must be bit-identical.
+fn pool_digest_check() -> Result<()> {
+    let (m, k, n) = (16usize, 27, 64);
+    let a = gen_f32(41, m * k);
+    let b = gen_f32(42, k * n);
+    let run = |sess: &mut Session| -> Result<u64> {
+        let ab = sess.buffer_from_f32(&a);
+        let bb = sess.buffer_from_f32(&b);
+        let cb = sess.buffer_zeroed(m * n);
+        let kernel = mm_kernel(m as i32, k as i32, n as i32);
+        let launch = sess.launch(&kernel).args(&[&ab, &bb, &cb]).autodma(true).submit()?;
+        Ok(sess.wait(&launch)?.digest)
+    };
+    let single = run(&mut Session::single(aurora()))?;
+    let pooled = run(&mut Session::pool(aurora(), 2))?;
+    assert_eq!(single, pooled, "pooled launch must be bit-identical to single");
+    println!(
+        "\ncustom GEMM through a pool=2 session: digest {pooled:#018x} — \
+         bit-identical to the single-accelerator launch"
+    );
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -208,5 +215,7 @@ fn main() -> Result<()> {
     );
     println!("logits: {:?}", &logits_auto[..5.min(logits_auto.len())]);
     println!("all layers verified against the host golden model: OK");
+
+    pool_digest_check()?;
     Ok(())
 }

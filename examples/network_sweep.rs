@@ -9,11 +9,13 @@
 //! watch DMA, compute, and total cycles respond — including the paper's
 //! counter-intuitive result that a wider network can make the application
 //! slower when the TCDM interconnect is not co-designed. Also demonstrates
-//! multi-cluster (Cyclone-style) and 1..16-core cluster scaling.
+//! multi-cluster (Cyclone-style) and 1..16-core cluster scaling. Each swept
+//! configuration is one `Session`.
 
-use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::bench_harness::{verify_arrays, Variant};
 use herov2::config::{self, parse};
 use herov2::workloads;
+use herov2::Session;
 
 fn main() -> anyhow::Result<()> {
     let seed = 3;
@@ -25,14 +27,15 @@ fn main() -> anyhow::Result<()> {
             "preset = aurora\nnoc.dma_width_bits = {width}\n"
         ))
         .map_err(anyhow::Error::msg)?;
-        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 10_000_000_000)?;
-        verify(&w, &out, seed)?;
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::Handwritten, 8, seed)?;
+        verify_arrays(&w, &out.arrays, seed)?;
         println!(
             "{:<28} {:>10} {:>10} {:>10}",
             format!("aurora / {width}-bit NoC"),
-            out.dma_cycles(),
-            out.compute_cycles(),
-            out.cycles()
+            out.result.dma_cycles(),
+            out.result.compute_cycles(),
+            out.result.device_cycles
         );
     }
 
@@ -41,10 +44,10 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = config::aurora();
         cfg.accel.cores_per_cluster = cores;
         let w = workloads::gemm::build(64);
-        let out =
-            run_workload(&cfg, &w, Variant::Handwritten, cores as u32, seed, 10_000_000_000)?;
-        verify(&w, &out, seed)?;
-        println!("  {cores:>2} cores: {:>9} cycles", out.cycles());
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::Handwritten, cores as u32, seed)?;
+        verify_arrays(&w, &out.arrays, seed)?;
+        println!("  {cores:>2} cores: {:>9} cycles", out.result.device_cycles);
     }
     Ok(())
 }

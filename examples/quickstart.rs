@@ -4,16 +4,19 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the whole platform once: build the Aurora configuration, compile
-//! the gemm OpenMP kernel with the heterogeneous compiler, allocate shared
-//! buffers in the host process, offload, and verify the simulated
-//! accelerator's numerics against (a) the host golden model and (b) the
-//! AOT-compiled JAX/Pallas artifact executed via PJRT.
+//! Walks the whole platform once through the unified `Session` front door:
+//! build the Aurora configuration, open a single-accelerator session,
+//! launch the gemm workload in three compilation variants, and verify the
+//! simulated accelerator's numerics against (a) the host golden model and
+//! (b) the AOT-compiled JAX/Pallas artifact executed via PJRT. No
+//! `&mut Accel` or raw `HostBuf` plumbing appears anywhere — the session
+//! owns the device.
 
-use herov2::bench_harness::{run_workload, verify, verify_pjrt, Variant};
+use herov2::bench_harness::{verify_arrays, verify_pjrt_arrays, Variant};
 use herov2::config::aurora;
 use herov2::runtime::pjrt::PjrtRuntime;
 use herov2::workloads;
+use herov2::Session;
 
 fn main() -> anyhow::Result<()> {
     let cfg = aurora();
@@ -27,23 +30,24 @@ fn main() -> anyhow::Result<()> {
     let w = workloads::gemm::build(128); // matches the gemm_128 AOT artifact
     println!("kernel: {} N={} ({} map-clause arrays)", w.name, w.size, w.arrays.len());
 
+    let mut sess = Session::single(cfg.clone());
     let seed = 1;
     for variant in [Variant::Unmodified, Variant::AutoDma, Variant::Handwritten] {
-        let out = run_workload(&cfg, &w, variant, 8, seed, 10_000_000_000)?;
-        verify(&w, &out, seed)?;
+        let out = sess.run_workload(&w, variant, 8, seed)?;
+        verify_arrays(&w, &out.arrays, seed)?;
         println!(
             "{:<12}: {:>9} device cycles ({:>6.2} ms wall at {} MHz), numerics OK",
             variant.label(),
-            out.cycles(),
-            out.cycles() as f64 / (cfg.accel.freq_mhz as f64 * 1e3),
+            out.result.device_cycles,
+            out.result.device_cycles as f64 / (cfg.accel.freq_mhz as f64 * 1e3),
             cfg.accel.freq_mhz
         );
     }
 
     // Three-layer check: simulated RV32 accelerator vs XLA-executed HLO.
-    let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 10_000_000_000)?;
+    let out = sess.run_workload(&w, Variant::Handwritten, 8, seed)?;
     match PjrtRuntime::new(PjrtRuntime::default_dir()) {
-        Ok(mut rt) => match verify_pjrt(&mut rt, &w, &out, seed)? {
+        Ok(mut rt) => match verify_pjrt_arrays(&mut rt, &w, &out.arrays, seed)? {
             true => println!("PJRT (JAX/Pallas artifact {}) check: OK", w.pjrt.name),
             false => println!("PJRT artifact not built — run `make artifacts` first"),
         },

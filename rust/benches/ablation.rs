@@ -1,12 +1,14 @@
 //! Ablations over the platform's design parameters — the §3.3-style
 //! exploration the platform exists to enable, applied to our own design
 //! choices: TCDM banking factor, IOMMU TLB capacity, DMA burst overhead,
-//! and the AutoDMA tile-side formula.
+//! and the AutoDMA tile-side formula. Every configuration point is one
+//! `Session` over the tweaked platform.
 
-use herov2::bench_harness::{run_workload, verify, Variant};
+use herov2::bench_harness::{verify_arrays, Variant};
 use herov2::config::aurora;
 use herov2::trace::Event;
 use herov2::workloads;
+use herov2::Session;
 
 fn main() {
     let seed = 13;
@@ -16,12 +18,13 @@ fn main() {
     for bf in [1usize, 2, 4] {
         let mut cfg = aurora();
         cfg.accel.banking_factor = bf;
-        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, seed, 1e10 as u64).unwrap();
-        verify(&w, &out, seed).unwrap();
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::Handwritten, 8, seed).unwrap();
+        verify_arrays(&w, &out.arrays, seed).unwrap();
         println!(
             "  factor {bf} ({:2} banks): {:>8} cycles, {:>8} conflicts",
             bf * 8,
-            out.cycles(),
+            out.result.device_cycles,
             out.result.perf.get(Event::TcdmConflict)
         );
     }
@@ -31,11 +34,12 @@ fn main() {
     for tlb in [8usize, 32, 128, 1024] {
         let mut cfg = aurora();
         cfg.iommu.tlb_entries = tlb;
-        let out = run_workload(&cfg, &wa, Variant::Unmodified, 8, seed, 1e10 as u64).unwrap();
-        verify(&wa, &out, seed).unwrap();
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&wa, Variant::Unmodified, 8, seed).unwrap();
+        verify_arrays(&wa, &out.arrays, seed).unwrap();
         println!(
             "  {tlb:>4} entries: {:>9} cycles, {:>6} misses",
-            out.cycles(),
+            out.result.device_cycles,
             out.result.perf.get(Event::TlbMiss)
         );
     }
@@ -45,12 +49,13 @@ fn main() {
     for oh in [0u64, 10, 20, 40] {
         let mut cfg = aurora();
         cfg.dma.burst_overhead = oh;
-        let out = run_workload(&cfg, &wd, Variant::Handwritten, 8, seed, 1e10 as u64).unwrap();
-        verify(&wd, &out, seed).unwrap();
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&wd, Variant::Handwritten, 8, seed).unwrap();
+        verify_arrays(&wd, &out.arrays, seed).unwrap();
         println!(
             "  {oh:>2} cycles/burst: {:>8} total cycles, {:>8} dma cycles",
-            out.cycles(),
-            out.dma_cycles()
+            out.result.device_cycles,
+            out.result.dma_cycles()
         );
     }
 
@@ -59,13 +64,15 @@ fn main() {
         let mut cfg = aurora();
         // Shrink the usable TCDM by the factor (smaller tiles, more phases).
         cfg.accel.l1_bytes = 128 * 1024 / frac as usize;
-        let out = run_workload(&cfg, &w, Variant::AutoDma, 8, seed, 1e10 as u64).unwrap();
-        verify(&w, &out, seed).unwrap();
-        let tiles = out.report.as_ref().and_then(|r| r.tile_sides.first().copied()).flatten();
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::AutoDma, 8, seed).unwrap();
+        verify_arrays(&w, &out.arrays, seed).unwrap();
+        let tiles =
+            out.result.autodma.as_ref().and_then(|r| r.tile_sides.first().copied()).flatten();
         println!(
             "  L1 {:>3} KiB: {:>8} cycles (tile side {:?})",
             128 / frac,
-            out.cycles(),
+            out.result.device_cycles,
             tiles
         );
     }

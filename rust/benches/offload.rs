@@ -3,21 +3,23 @@
 //! The paper's offloading model is coarse-grained: kernels of at least a
 //! few ten thousand cycles amortize the mailbox/driver overhead. A TLB hit
 //! adds 3 cycles to a remote access; misses are handled in software by the
-//! faulting core or a dedicated core (configurable per offload).
+//! faulting core or a dedicated core (configurable per offload). All runs
+//! go through the unified `Session` front door.
 
-use herov2::bench_harness::{run_workload, Variant};
 use herov2::config::{aurora, MissMode};
 use herov2::host::Mailbox;
 use herov2::trace::Event;
 use herov2::workloads;
+use herov2::{bench_harness::Variant, Session};
 
 fn main() {
     let cfg = aurora();
     println!("Offload overhead (mailbox + driver): {} cycles", Mailbox::round_trip_cycles(&cfg));
     println!("\nkernel-size sweep (gemm, handwritten, 8 threads): overhead share");
+    let mut sess = Session::single(cfg);
     for n in [8usize, 12, 16, 24, 32, 48] {
         let w = workloads::gemm::build(n);
-        let out = run_workload(&cfg, &w, Variant::Handwritten, 8, 1, 10_000_000_000).unwrap();
+        let out = sess.run_workload(&w, Variant::Handwritten, 8, 1).unwrap();
         let dev = out.result.device_cycles;
         let tot = out.result.total_cycles;
         println!(
@@ -31,10 +33,11 @@ fn main() {
         cfg.iommu.miss_mode = mode;
         cfg.iommu.tlb_entries = 16; // pressure the TLB to expose the modes
         let w = workloads::atax::build(256);
-        let out = run_workload(&cfg, &w, Variant::Unmodified, 8, 1, 10_000_000_000).unwrap();
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::Unmodified, 8, 1).unwrap();
         println!(
             "  {mode:?}: {} cycles, {} TLB misses",
-            out.cycles(),
+            out.result.device_cycles,
             out.result.perf.get(Event::TlbMiss)
         );
     }

@@ -1,13 +1,16 @@
 //! §Perf: simulator hot-path throughput (simulated core-cycles per second).
 //!
-//! This is the L3 optimization target of EXPERIMENTS.md §Perf: the gemm
-//! compute loop must simulate fast enough that every figure bench runs in
-//! seconds. Reports simulated cycles/sec over repeated runs.
+//! This is the L3 optimization target: the gemm compute loop must simulate
+//! fast enough that every figure bench runs in seconds. Reports simulated
+//! cycles/sec over repeated runs, driving the stack through the `Session`
+//! front door (a fresh session per run keeps the compile inside the timed
+//! region, like the original harness).
 
 use herov2::bench_harness::stats;
-use herov2::bench_harness::{run_workload, Variant};
+use herov2::bench_harness::Variant;
 use herov2::config::aurora;
 use herov2::workloads;
+use herov2::Session;
 
 fn main() {
     let cfg = aurora();
@@ -18,8 +21,9 @@ fn main() {
     ] {
         let mut cycles = 0u64;
         let secs = stats::time_runs(3, || {
-            let out = run_workload(&cfg, &w, v, threads, 1, 10_000_000_000).unwrap();
-            cycles = out.cycles();
+            let mut sess = Session::single(cfg.clone());
+            let out = sess.run_workload(&w, v, threads, 1).unwrap();
+            cycles = out.result.device_cycles;
         });
         let s = stats::summarize(&secs);
         println!(

@@ -188,7 +188,7 @@ pub fn fig8(base_cfg: &HeroConfig) -> Result<Vec<Fig8Row>> {
 /// Fig 9: speed-up of the Xpulpv2 ISA extension over RV32IMAFC, with
 /// handwritten DMA and 8 threads. Three bars: compiler-generated Xpulpv2,
 /// + manual register promotion, + expert inline assembly (modeled — see
-/// [`EXPERT_FACTOR`]).
+/// [`expert_factor`]).
 pub struct Fig9Row {
     pub name: &'static str,
     pub xpulp_speedup: f64,

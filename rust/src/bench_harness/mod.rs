@@ -11,12 +11,9 @@
 pub mod figures;
 pub mod stats;
 
-use crate::accel::Accel;
 use crate::compiler::{self, AutoDmaOpts, AutoDmaReport, LowerOpts};
 use crate::config::HeroConfig;
-use crate::host::{HostBuf, HostContext};
-use crate::runtime::omp::{offload, OffloadResult};
-use crate::trace::Event;
+use crate::runtime::omp::OffloadResult;
 use crate::workloads::Workload;
 use anyhow::{anyhow, bail, Result};
 
@@ -58,8 +55,7 @@ pub struct RunOutcome {
 impl RunOutcome {
     /// Cycles attributable to DMA (descriptor setup + core-visible waits).
     pub fn dma_cycles(&self) -> u64 {
-        self.result.perf.get(Event::DmaWaitCycles)
-            + self.result.perf.get(Event::DmaTransfers) * 2
+        self.result.perf.dma_attributed_cycles()
     }
 
     /// Total device cycles.
@@ -82,6 +78,21 @@ pub fn variant_kernel<'a>(w: &'a Workload, variant: Variant) -> &'a crate::compi
     }
 }
 
+/// Lower an arbitrary kernel for `threads` OpenMP threads on `cfg` — the
+/// one lowering recipe (thread clamping, optional AutoDMA) shared by the
+/// named-workload path below and the scheduler's kernel-job cache.
+pub fn compile_kernel(
+    cfg: &HeroConfig,
+    k: &compiler::Kernel,
+    autodma: bool,
+    threads: u32,
+) -> Result<(compiler::Lowered, Option<AutoDmaReport>)> {
+    let mut opts = LowerOpts::for_config(cfg);
+    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
+    let ad = autodma.then(|| AutoDmaOpts::for_config(cfg));
+    compiler::compile(k, &opts, ad.as_ref())
+}
+
 /// Compile one workload variant for `threads` OpenMP threads, without
 /// running it. The scheduler's binary cache is built on this entry point.
 pub fn compile_workload(
@@ -90,14 +101,13 @@ pub fn compile_workload(
     variant: Variant,
     threads: u32,
 ) -> Result<(compiler::Lowered, Option<AutoDmaReport>)> {
-    let mut opts = LowerOpts::for_config(cfg);
-    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
-    let autodma = (variant == Variant::AutoDma).then(|| AutoDmaOpts::for_config(cfg));
-    compiler::compile(variant_kernel(w, variant), &opts, autodma.as_ref())
+    compile_kernel(cfg, variant_kernel(w, variant), variant == Variant::AutoDma, threads)
 }
 
 /// Run an already-lowered kernel on a fresh accelerator instance: allocate
-/// and fill shared buffers, offload, read the arrays back.
+/// and fill shared buffers, offload, read the arrays back. A thin layer
+/// over the shared offload core ([`crate::session::core::run_arrays`]),
+/// which the scheduler and [`crate::session::Session`] use too.
 pub fn run_lowered(
     cfg: &HeroConfig,
     w: &Workload,
@@ -105,23 +115,9 @@ pub fn run_lowered(
     seed: u64,
     max_cycles: u64,
 ) -> Result<RunOutcome> {
-    // Size DRAM to the workload (plus slack for page rounding).
-    let total_elems: usize = w.arrays.iter().map(|a| a.elems).sum();
-    let dram = (total_elems * 4 + (w.arrays.len() + 2) * cfg.iommu.page_bytes).max(1 << 20);
-    let mut accel = Accel::new(cfg.clone(), dram);
-    let mut host = HostContext::new();
     let data = w.gen_data(seed);
-    let bufs: Vec<HostBuf> = w
-        .arrays
-        .iter()
-        .map(|a| host.alloc(&mut accel, a.elems))
-        .collect::<Result<_>>()?;
-    for (buf, d) in bufs.iter().zip(&data) {
-        host.write_f32(&mut accel, buf, d);
-    }
-    let buf_refs: Vec<&HostBuf> = bufs.iter().collect();
-    let result = offload(&mut accel, lowered, &buf_refs, &w.fargs, 1, max_cycles)?;
-    let arrays = bufs.iter().map(|b| host.read_f32(&accel, b)).collect();
+    let (result, arrays) =
+        crate::session::core::run_arrays(cfg, lowered, &data, &w.fargs, 1, max_cycles)?;
     Ok(RunOutcome { result, arrays, report: None, text_size: lowered.program.len() })
 }
 
@@ -142,23 +138,31 @@ pub fn run_workload(
     Ok(out)
 }
 
-/// Verify a run against the host golden model.
-pub fn verify(w: &Workload, outcome: &RunOutcome, seed: u64) -> Result<()> {
+/// Verify final array contents against the host golden model (shared by
+/// [`verify`] and the session-based front doors, which hold arrays rather
+/// than a [`RunOutcome`]).
+pub fn verify_arrays(w: &Workload, arrays: &[Vec<f32>], seed: u64) -> Result<()> {
     let expected = w.expected(seed);
-    for (i, (got, want)) in outcome.arrays.iter().zip(&expected).enumerate() {
+    for (i, (got, want)) in arrays.iter().zip(&expected).enumerate() {
         crate::runtime::pjrt::assert_allclose(got, want, 1e-4, 1e-5)
             .map_err(|e| anyhow!("{} array {} ({}): {e}", w.name, i, w.arrays[i].name))?;
     }
     Ok(())
 }
 
-/// Verify a run against the PJRT-executed JAX/Pallas artifact (the
-/// three-layer golden path). Returns Ok(false) when the artifact has not
-/// been built (`make artifacts`), Ok(true) on successful verification.
-pub fn verify_pjrt(
+/// Verify a run against the host golden model.
+pub fn verify(w: &Workload, outcome: &RunOutcome, seed: u64) -> Result<()> {
+    verify_arrays(w, &outcome.arrays, seed)
+}
+
+/// Verify final array contents against the PJRT-executed JAX/Pallas
+/// artifact (the three-layer golden path). Returns Ok(false) when the
+/// artifact has not been built (`make artifacts`), Ok(true) on successful
+/// verification.
+pub fn verify_pjrt_arrays(
     rt: &mut crate::runtime::pjrt::PjrtRuntime,
     w: &Workload,
-    outcome: &RunOutcome,
+    arrays: &[Vec<f32>],
     seed: u64,
 ) -> Result<bool> {
     if !rt.available(&w.pjrt.name) {
@@ -176,10 +180,20 @@ pub fn verify_pjrt(
         bail!("{}: artifact returned {} outputs, expected {}", w.name, outs.len(), w.pjrt.outputs.len());
     }
     for (out, &ai) in outs.iter().zip(&w.pjrt.outputs) {
-        crate::runtime::pjrt::assert_allclose(&outcome.arrays[ai], out, 2e-3, 1e-4)
+        crate::runtime::pjrt::assert_allclose(&arrays[ai], out, 2e-3, 1e-4)
             .map_err(|e| anyhow!("{} vs PJRT, array {}: {e}", w.name, w.arrays[ai].name))?;
     }
     Ok(true)
+}
+
+/// [`verify_pjrt_arrays`] over a [`RunOutcome`].
+pub fn verify_pjrt(
+    rt: &mut crate::runtime::pjrt::PjrtRuntime,
+    w: &Workload,
+    outcome: &RunOutcome,
+    seed: u64,
+) -> Result<bool> {
+    verify_pjrt_arrays(rt, w, &outcome.arrays, seed)
 }
 
 /// Geometric mean (the paper summarizes normalized numbers this way, §3.1).

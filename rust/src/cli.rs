@@ -1,0 +1,144 @@
+//! Tiny declarative argument parser shared by the `hero` subcommands.
+//!
+//! Each subcommand declares its accepted boolean flags and value-taking
+//! options up front ([`Spec`]); [`parse`] then rejects anything it does not
+//! recognize instead of silently ignoring it — previously a typo like
+//! `--polcy sjf` would fall back to the default policy without a word, and
+//! `hero serve` carried ad-hoc code just to distinguish `--trace <file>`
+//! from a dangling `--trace`. Malformed option values are errors too
+//! (`--jobs x` used to silently become the default).
+
+use std::collections::HashMap;
+
+/// What one subcommand accepts.
+pub struct Spec {
+    /// Boolean flags, spelled with their dashes (e.g. `"--events"`).
+    pub flags: &'static [&'static str],
+    /// Value-taking options (e.g. `"--pool"`).
+    pub opts: &'static [&'static str],
+    /// Greatest number of positional arguments accepted (e.g. the kernel
+    /// name of `hero run`).
+    pub max_positional: usize,
+}
+
+/// Parsed arguments of one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: Vec<&'static str>,
+    opts: HashMap<&'static str, String>,
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Whether a boolean flag was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| *f == name)
+    }
+
+    /// Raw value of an option, if given.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Parsed value of an option: `Ok(None)` when absent, an error (instead
+    /// of a silent default) when present but malformed.
+    pub fn parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse::<T>().map(Some).map_err(|_| format!("{name} got invalid value {v:?}"))
+            }
+        }
+    }
+}
+
+/// Parse `raw` against `spec`. Unknown `--flags`, missing or flag-shaped
+/// option values, and excess positional arguments are all errors.
+pub fn parse(spec: &Spec, raw: &[String]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < raw.len() {
+        let tok = &raw[i];
+        if tok.starts_with("--") {
+            if let Some(&canon) = spec.flags.iter().find(|f| **f == tok.as_str()) {
+                args.flags.push(canon);
+            } else if let Some(&canon) = spec.opts.iter().find(|o| **o == tok.as_str()) {
+                match raw.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        args.opts.insert(canon, v.clone());
+                        i += 1;
+                    }
+                    _ => return Err(format!("{tok} expects a value")),
+                }
+            } else {
+                let mut known: Vec<&str> =
+                    spec.flags.iter().chain(spec.opts.iter()).copied().collect();
+                known.sort_unstable();
+                return Err(format!("unknown flag {tok}; accepted: {}", known.join(" ")));
+            }
+        } else {
+            if args.positional.len() >= spec.max_positional {
+                return Err(format!("unexpected argument {tok:?}"));
+            }
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: Spec = Spec {
+        flags: &["--events", "--no-cache"],
+        opts: &["--pool", "--trace"],
+        max_positional: 1,
+    };
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_options_and_positionals() {
+        let a = parse(&SPEC, &strs(&["gemm", "--events", "--pool", "4"])).unwrap();
+        assert!(a.flag("--events"));
+        assert!(!a.flag("--no-cache"));
+        assert_eq!(a.opt("--pool"), Some("4"));
+        assert_eq!(a.parsed::<usize>("--pool"), Ok(Some(4)));
+        assert_eq!(a.parsed::<usize>("--trace"), Ok(None));
+        assert_eq!(a.positional, vec!["gemm"]);
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        // The `--polcy` typo class: an error listing what is accepted.
+        let e = parse(&SPEC, &strs(&["--evnets"])).unwrap_err();
+        assert!(e.contains("unknown flag --evnets"), "{e}");
+        assert!(e.contains("--events"), "{e}");
+    }
+
+    #[test]
+    fn rejects_missing_or_flag_shaped_values() {
+        assert!(parse(&SPEC, &strs(&["--trace"])).unwrap_err().contains("expects a value"));
+        assert!(
+            parse(&SPEC, &strs(&["--trace", "--events"]))
+                .unwrap_err()
+                .contains("expects a value")
+        );
+        // A value is consumed, not treated as a positional.
+        let a = parse(&SPEC, &strs(&["--trace", "jobs.txt"])).unwrap();
+        assert_eq!(a.opt("--trace"), Some("jobs.txt"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn rejects_excess_positionals_and_bad_values() {
+        assert!(parse(&SPEC, &strs(&["a", "b"])).unwrap_err().contains("unexpected"));
+        let a = parse(&SPEC, &strs(&["--pool", "many"])).unwrap();
+        assert!(a.parsed::<usize>("--pool").is_err());
+    }
+}

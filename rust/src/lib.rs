@@ -21,6 +21,21 @@
 //! `pjrt-xla` feature; without it those checks skip with a warning). Python
 //! never runs on the request path.
 //!
+//! ## The `session` front door (start here)
+//!
+//! The [`session`] module is the **recommended entry point** for client
+//! code: one handle-based API ([`session::Session`]) over every way of
+//! running a kernel. `Session::single(cfg)` wraps one accelerator,
+//! `Session::pool(cfg, k)` an instance pool behind the offload scheduler —
+//! the client code is identical either way. Buffers
+//! (`session.buffer_from_f32(..)`) replace raw `HostBuf` plumbing, and
+//! `session.launch(&kernel).args(..).fargs(..).teams(n).submit()` is
+//! async-by-default with `session.wait(..)` returning cycles, perf
+//! counters and an output digest. `hero run`, `hero serve`, all examples
+//! and the offload/perf/ablation benches go through it; the lower-level
+//! surfaces below remain as thin layers over the same core
+//! ([`session::core`]), so offload semantics exist exactly once.
+//!
 //! ## Offload scheduler
 //!
 //! The [`sched`] module scales the paper's one-host/one-accelerator offload
@@ -32,6 +47,10 @@
 //! splits oversized jobs), a lowered-binary cache that lets same-kernel
 //! jobs batch and amortize compile cost, and aggregate throughput /
 //! per-instance utilization reporting built on [`noc::Port::busy_cycles`].
+//! Jobs are either *named* synthetic workloads ([`workloads::synth`]) or
+//! *arbitrary compiled kernels* ([`sched::KernelJob`] — what a pooled
+//! [`session::Session`] submits), both flowing through the same policies,
+//! cache, batching and board model.
 //! Pool instances share **one carrier-board DRAM** ([`mem::dram`]): each
 //! job's main-memory traffic reserves bandwidth on a cycle-accounted
 //! ledger, so oversubscribed boards stretch occupancy windows (contention
@@ -41,12 +60,10 @@
 //! contention-aware. Front-ends: the `hero serve` CLI subcommand (synthetic
 //! streams or `--trace` replay), the job generators in [`workloads::synth`],
 //! and `benches/sched.rs`.
-//!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod accel;
 pub mod bench_harness;
+pub mod cli;
 pub mod cluster;
 pub mod compiler;
 pub mod config;
@@ -58,9 +75,12 @@ pub mod mem;
 pub mod noc;
 pub mod runtime;
 pub mod sched;
+pub mod session;
 pub mod testkit;
 pub mod trace;
 pub mod workloads;
+
+pub use session::Session;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

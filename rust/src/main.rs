@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! hero info [--resources]             platform configurations (Table 1)
-//! hero run <kernel> [options]         compile + offload a workload
+//! hero run <kernel> [options]         compile + offload a workload through
+//!                                     the unified `Session` API
 //!     --variant unmodified|handwritten|promoted|autodma   (default handwritten)
 //!     --threads N                     OpenMP threads (default 8)
 //!     --size N                        problem size (default: paper size)
@@ -12,9 +13,10 @@
 //! hero disasm <kernel> [--variant V] [--size N]   dump device assembly
 //! hero autodma <kernel> [--size N]    show the AutoDMA transformation
 //! hero kernels                        list workloads (Table 2)
-//! hero serve [options]                drain a job stream through the
-//!                                     multi-accelerator scheduler (one
-//!                                     shared carrier-board DRAM)
+//! hero serve [options]                drain a job stream through a pooled
+//!                                     `Session` (multi-accelerator
+//!                                     scheduler, one shared carrier-board
+//!                                     DRAM)
 //!     --jobs N                        synthetic jobs in the stream (default 100)
 //!     --trace FILE                    replay a job trace instead of the
 //!                                     synthetic stream (lines:
@@ -33,12 +35,18 @@
 //!     --events                        dump the scheduler event log
 //!     --config FILE                   platform config file
 //! ```
+//!
+//! Every subcommand parses its arguments through the shared declarative
+//! parser (`herov2::cli`), so unknown flags and malformed values are
+//! errors rather than silently ignored.
 
-use herov2::bench_harness::{self, figures, run_workload, verify, Variant};
+use herov2::bench_harness::{figures, verify_arrays, verify_pjrt_arrays, Variant};
+use herov2::cli;
 use herov2::compiler::{self, ir, AutoDmaOpts, LowerOpts};
 use herov2::config::{self, aurora, HeroConfig};
 use herov2::runtime::pjrt::PjrtRuntime;
 use herov2::workloads;
+use herov2::Session;
 use std::process::exit;
 
 fn main() {
@@ -61,31 +69,45 @@ fn main() {
     exit(code);
 }
 
-fn flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
+fn parse_args(spec: &cli::Spec, raw: &[String]) -> cli::Args {
+    cli::parse(spec, raw).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        exit(2)
+    })
 }
 
-fn opt(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+/// Parse an option value with a default; malformed input is a hard error.
+fn opt_or<T: std::str::FromStr>(args: &cli::Args, name: &str, default: T) -> T {
+    match args.parsed::<T>(name) {
+        Ok(Some(v)) => v,
+        Ok(None) => default,
+        Err(e) => {
+            eprintln!("{e}");
+            exit(2)
+        }
+    }
 }
 
-fn load_cfg(args: &[String]) -> HeroConfig {
-    let mut cfg = match opt(args, "--config") {
-        Some(path) => config::parse::load(&path).unwrap_or_else(|e| {
+fn load_cfg(args: &cli::Args) -> HeroConfig {
+    let mut cfg = match args.opt("--config") {
+        Some(path) => config::parse::load(path).unwrap_or_else(|e| {
             eprintln!("config error: {e}");
             exit(2)
         }),
         None => aurora(),
     };
-    if flag(args, "--no-xpulp") {
+    if args.flag("--no-xpulp") {
         cfg.accel.isa.xpulp = false;
     }
     cfg
 }
 
-fn pick_workload(args: &[String]) -> workloads::Workload {
-    let name = args.first().cloned().unwrap_or_default();
-    let size = opt(args, "--size").and_then(|s| s.parse::<usize>().ok());
+fn pick_workload(args: &cli::Args) -> workloads::Workload {
+    let name = args.positional.first().cloned().unwrap_or_default();
+    let size = args.parsed::<usize>("--size").unwrap_or_else(|e| {
+        eprintln!("{e}");
+        exit(2)
+    });
     match size {
         Some(n) => workloads::build(&name, n),
         None => workloads::by_name(&name),
@@ -96,8 +118,8 @@ fn pick_workload(args: &[String]) -> workloads::Workload {
     })
 }
 
-fn pick_variant(args: &[String]) -> Variant {
-    match opt(args, "--variant").as_deref() {
+fn pick_variant(args: &cli::Args) -> Variant {
+    match args.opt("--variant") {
         None | Some("handwritten") => Variant::Handwritten,
         Some("unmodified") => Variant::Unmodified,
         Some("promoted") => Variant::Promoted,
@@ -109,9 +131,12 @@ fn pick_variant(args: &[String]) -> Variant {
     }
 }
 
-fn cmd_info(args: &[String]) -> i32 {
+fn cmd_info(raw: &[String]) -> i32 {
+    const SPEC: cli::Spec =
+        cli::Spec { flags: &["--resources"], opts: &[], max_positional: 0 };
+    let args = parse_args(&SPEC, raw);
     print!("{}", figures::table1());
-    if flag(args, "--resources") {
+    if args.flag("--resources") {
         use herov2::config::resources::{estimate, utilization, VU37P, ZU9EG};
         for (cfg, carrier) in [
             (aurora(), &ZU9EG),
@@ -135,34 +160,56 @@ fn cmd_info(args: &[String]) -> i32 {
     0
 }
 
-fn cmd_run(args: &[String]) -> i32 {
-    let w = pick_workload(args);
-    let cfg = load_cfg(args);
-    let variant = pick_variant(args);
-    let threads: u32 = opt(args, "--threads").and_then(|s| s.parse().ok()).unwrap_or(8);
+fn cmd_run(raw: &[String]) -> i32 {
+    const SPEC: cli::Spec = cli::Spec {
+        flags: &["--no-xpulp", "--verify-pjrt"],
+        opts: &["--variant", "--threads", "--size", "--config"],
+        max_positional: 1,
+    };
+    let args = parse_args(&SPEC, raw);
+    let cfg = load_cfg(&args);
+    let w = pick_workload(&args);
+    let variant = pick_variant(&args);
+    let threads: u32 = opt_or(&args, "--threads", 8);
     let seed = 42;
-    println!("running {} (N={}) {} with {threads} thread(s) on {}", w.name, w.size, variant.label(), cfg.name);
-    let out = match run_workload(&cfg, &w, variant, threads, seed, 100_000_000_000) {
+    println!(
+        "running {} (N={}) {} with {threads} thread(s) on {}",
+        w.name,
+        w.size,
+        variant.label(),
+        cfg.name
+    );
+    // One unified front door: a single-accelerator session.
+    let mut sess = Session::single(cfg.clone());
+    let out = match sess.run_workload(&w, variant, threads, seed) {
         Ok(o) => o,
         Err(e) => {
             eprintln!("offload failed: {e}");
             return 1;
         }
     };
-    if let Err(e) = verify(&w, &out, seed) {
+    if let Err(e) = verify_arrays(&w, &out.arrays, seed) {
         eprintln!("VERIFICATION FAILED: {e}");
         return 1;
     }
-    println!("device cycles : {:>12}", out.result.device_cycles);
-    println!("end-to-end    : {:>12} ({:.2} ms at {} MHz)", out.result.total_cycles,
-        out.result.total_cycles as f64 / (cfg.accel.freq_mhz as f64 * 1e3), cfg.accel.freq_mhz);
-    println!("dma cycles    : {:>12} ({:.2}%)", out.dma_cycles(),
-        100.0 * out.dma_cycles() as f64 / out.cycles() as f64);
+    let res = &out.result;
+    println!("device cycles : {:>12}", res.device_cycles);
+    println!(
+        "end-to-end    : {:>12} ({:.2} ms at {} MHz)",
+        res.total_cycles,
+        res.total_cycles as f64 / (cfg.accel.freq_mhz as f64 * 1e3),
+        cfg.accel.freq_mhz
+    );
+    println!(
+        "dma cycles    : {:>12} ({:.2}%)",
+        res.dma_cycles(),
+        100.0 * res.dma_cycles() as f64 / res.device_cycles as f64
+    );
     println!("verified against the host golden model: OK");
-    if let Some(r) = &out.report {
+    if let Some(r) = &res.autodma {
         println!("AutoDMA: tiles {:?}, remote {:?}", r.tile_sides, r.remote);
     }
-    if flag(args, "--verify-pjrt") {
+    if args.flag("--verify-pjrt") {
         let mut rt = match PjrtRuntime::new(PjrtRuntime::default_dir()) {
             Ok(rt) => rt,
             Err(e) => {
@@ -170,7 +217,7 @@ fn cmd_run(args: &[String]) -> i32 {
                 return 1;
             }
         };
-        match bench_harness::verify_pjrt(&mut rt, &w, &out, seed) {
+        match verify_pjrt_arrays(&mut rt, &w, &out.arrays, seed) {
             Ok(true) => println!("verified against the PJRT JAX/Pallas artifact: OK"),
             Ok(false) => println!("PJRT artifact {} not built (run `make artifacts`)", w.pjrt.name),
             Err(e) => {
@@ -179,21 +226,34 @@ fn cmd_run(args: &[String]) -> i32 {
             }
         }
     }
-    println!("\ndevice counters:\n{}", out.result.perf.report());
+    println!("\ndevice counters:\n{}", res.perf.report());
     0
 }
 
-fn cmd_serve(args: &[String]) -> i32 {
+fn cmd_serve(raw: &[String]) -> i32 {
     use herov2::config::preset::with_dma_width;
     use herov2::sched::{BoardSpec, Policy, Scheduler};
     use herov2::workloads::synth;
 
-    let cfg = load_cfg(args);
-    let jobs: usize = opt(args, "--jobs").and_then(|s| s.parse().ok()).unwrap_or(100);
-    let pool: usize = opt(args, "--pool").and_then(|s| s.parse().ok()).unwrap_or(4);
-    let seed: u64 = opt(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
-    let policy_arg = opt(args, "--policy").unwrap_or_else(|| "fifo".into());
-    let Some(policy) = Policy::parse(&policy_arg) else {
+    const SPEC: cli::Spec = cli::Spec {
+        flags: &[
+            "--events",
+            "--mixed-widths",
+            "--no-batch",
+            "--no-cache",
+            "--no-verify",
+            "--no-xpulp",
+        ],
+        opts: &["--board-bw", "--config", "--jobs", "--policy", "--pool", "--seed", "--trace"],
+        max_positional: 0,
+    };
+    let args = parse_args(&SPEC, raw);
+    let cfg = load_cfg(&args);
+    let jobs: usize = opt_or(&args, "--jobs", 100);
+    let pool: usize = opt_or(&args, "--pool", 4);
+    let seed: u64 = opt_or(&args, "--seed", 42);
+    let policy_arg = args.opt("--policy").unwrap_or("fifo");
+    let Some(policy) = Policy::parse(policy_arg) else {
         eprintln!("unknown policy {policy_arg:?} (fifo|sjf|capacity|cap-reject)");
         return 2;
     };
@@ -201,22 +261,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         eprintln!("--pool must be at least 1");
         return 2;
     }
-    // `--trace` takes a file path (PR 1's boolean event-dump flag is now
-    // `--events`); catch a missing or flag-shaped value instead of silently
-    // falling back to the synthetic stream.
-    let trace_path = match (flag(args, "--trace"), opt(args, "--trace")) {
-        (false, _) => None,
-        (true, Some(path)) if !path.starts_with("--") => Some(path),
-        (true, _) => {
-            eprintln!(
-                "--trace expects a trace file path (to dump the event log, use --events)"
-            );
-            return 2;
-        }
-    };
-    let stream = match trace_path {
+    let stream = match args.opt("--trace") {
         Some(path) => {
-            let text = match std::fs::read_to_string(&path) {
+            let text = match std::fs::read_to_string(path) {
                 Ok(t) => t,
                 Err(e) => {
                     eprintln!("cannot read trace {path:?}: {e}");
@@ -243,7 +290,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         pool,
         policy.label()
     );
-    let mut sched = if flag(args, "--mixed-widths") {
+    let mut sched = if args.flag("--mixed-widths") {
         let widths = [64u32, 32, 128];
         let cfgs: Vec<_> =
             (0..pool).map(|i| with_dma_width(&cfg, widths[i % widths.len()])).collect();
@@ -251,30 +298,40 @@ fn cmd_serve(args: &[String]) -> i32 {
     } else {
         Scheduler::new(cfg, pool, policy)
     }
-    .with_cache(!flag(args, "--no-cache"))
-    .with_batching(!flag(args, "--no-batch"))
-    .with_verify(!flag(args, "--no-verify"));
-    if let Some(bw_arg) = opt(args, "--board-bw") {
-        match bw_arg.parse::<u64>() {
-            Ok(bw) => sched = sched.with_board(BoardSpec::with_bandwidth(bw)),
-            Err(_) => {
-                eprintln!("--board-bw expects bytes/cycle, got {bw_arg:?}");
-                return 2;
-            }
+    .with_cache(!args.flag("--no-cache"))
+    .with_batching(!args.flag("--no-batch"))
+    .with_verify(!args.flag("--no-verify"));
+    match args.parsed::<u64>("--board-bw") {
+        Ok(Some(bw)) => sched = sched.with_board(BoardSpec::with_bandwidth(bw)),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
         }
     }
-    let handles = sched.submit_all(&stream);
-    if let Err(e) = sched.drain() {
+    // The pooled session is the serve front door.
+    let mut sess = Session::with_scheduler(sched);
+    let handles = match sess.submit_jobs(&stream) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("submit error: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = sess.drain() {
         eprintln!("scheduler error: {e}");
         return 1;
     }
-    if flag(args, "--events") {
-        print!("{}", sched.trace.render());
+    if args.flag("--events") {
+        print!("{}", sess.events().expect("pooled session renders events"));
     }
-    let report = sched.report();
+    let report = sess.report().expect("pooled session reports");
     println!("{report}");
     // Every submitted handle must have settled — the async contract.
-    let unsettled = handles.iter().filter(|h| !sched.state(**h).settled()).count();
+    let unsettled = handles
+        .iter()
+        .filter(|h| !sess.job_state(**h).is_some_and(|s| s.settled()))
+        .count();
     if unsettled > 0 {
         eprintln!("BUG: {unsettled} handles left unsettled");
         return 1;
@@ -286,10 +343,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     0
 }
 
-fn cmd_disasm(args: &[String]) -> i32 {
-    let w = pick_workload(args);
-    let cfg = load_cfg(args);
-    let variant = pick_variant(args);
+fn cmd_disasm(raw: &[String]) -> i32 {
+    const SPEC: cli::Spec = cli::Spec {
+        flags: &["--no-xpulp"],
+        opts: &["--variant", "--size", "--config"],
+        max_positional: 1,
+    };
+    let args = parse_args(&SPEC, raw);
+    let w = pick_workload(&args);
+    let cfg = load_cfg(&args);
+    let variant = pick_variant(&args);
     let opts = LowerOpts::for_config(&cfg);
     let kernel = match variant {
         Variant::Unmodified | Variant::AutoDma => &w.unmodified,
@@ -312,9 +375,12 @@ fn cmd_disasm(args: &[String]) -> i32 {
     }
 }
 
-fn cmd_autodma(args: &[String]) -> i32 {
-    let w = pick_workload(args);
-    let cfg = load_cfg(args);
+fn cmd_autodma(raw: &[String]) -> i32 {
+    const SPEC: cli::Spec =
+        cli::Spec { flags: &["--no-xpulp"], opts: &["--size", "--config"], max_positional: 1 };
+    let args = parse_args(&SPEC, raw);
+    let w = pick_workload(&args);
+    let cfg = load_cfg(&args);
     println!("=== unmodified OpenMP source ===\n{}", ir::pretty(&w.unmodified));
     match herov2::compiler::autodma::transform(&w.unmodified, &AutoDmaOpts::for_config(&cfg)) {
         Ok((tiled, report)) => {

@@ -54,16 +54,14 @@ impl HeroApi {
         HeroApi { l1, l2 }
     }
 
-    fn heap(&mut self, level: SpmLevel) -> &mut O1Heap {
-        match level {
-            SpmLevel::L1(cl) => &mut self.l1[cl],
-            SpmLevel::L2 => &mut self.l2,
-        }
-    }
-
     /// `hero_lN_capacity`: currently available heap memory at this level.
-    pub fn capacity(&mut self, level: SpmLevel) -> u32 {
-        self.heap(level).capacity_remaining()
+    /// A read-only query, so it borrows the API immutably (callers like the
+    /// scheduler's admission control hold no exclusive access).
+    pub fn capacity(&self, level: SpmLevel) -> u32 {
+        match level {
+            SpmLevel::L1(cl) => self.l1[cl].capacity_remaining(),
+            SpmLevel::L2 => self.l2.capacity_remaining(),
+        }
     }
 
     /// `hero_lN_malloc`: allocate `bytes`, returning a device address.

@@ -15,8 +15,7 @@ use crate::accel::Accel;
 use crate::compiler::Lowered;
 use crate::host::HostBuf;
 use crate::trace::{Event, PerfCounters};
-use anyhow::{bail, Result};
-use std::sync::Arc;
+use anyhow::Result;
 
 /// Result of one offload.
 #[derive(Debug, Clone)]
@@ -44,6 +43,11 @@ impl OffloadResult {
 ///
 /// `bufs` must match `lowered.arrays` order; `fargs` matches
 /// `lowered.floats`. `n_teams` clusters participate (OpenMP `num_teams`).
+///
+/// This is a thin layer over the shared offload core
+/// ([`crate::session::core::offload_lowered`]) — the same marshal/run path
+/// [`crate::session::Session`] and the scheduler use, so offload semantics
+/// exist exactly once.
 pub fn offload(
     accel: &mut Accel,
     lowered: &Lowered,
@@ -52,35 +56,7 @@ pub fn offload(
     n_teams: usize,
     max_cycles: u64,
 ) -> Result<OffloadResult> {
-    if bufs.len() != lowered.arrays.len() {
-        bail!("expected {} buffers, got {}", lowered.arrays.len(), bufs.len());
-    }
-    if fargs.len() != lowered.floats.len() {
-        bail!("expected {} float args, got {}", lowered.floats.len(), fargs.len());
-    }
-    // All map-clause pointers must share the 4 GiB window (one ext-CSR
-    // write per kernel — §2.2.1).
-    let hi = bufs.first().map(|b| b.hi()).unwrap_or((crate::host::VA_BASE >> 32) as u32);
-    for b in bufs {
-        if b.hi() != hi {
-            bail!("map-clause buffers span multiple 4 GiB windows");
-        }
-    }
-    // Driver: load the device ELF (decoded program) + flush the IOMMU TLB
-    // for the new process context.
-    accel.load_program(Arc::new(lowered.program.clone()), n_teams)?;
-    accel.iommu.flush();
-    // Marshal arguments: x10 = VA[63:32], x11.. = VA[31:0] per array.
-    let mut args: Vec<u32> = vec![hi];
-    args.extend(bufs.iter().map(|b| b.lo()));
-    accel.set_args(&args, fargs)?;
-    // Snapshot counters so the result reports only this offload.
-    let before = accel.perf_aggregate();
-    let device_cycles = accel.run(max_cycles)?;
-    let mut perf = accel.perf_aggregate();
-    perf.sub(&before);
-    let overhead = crate::host::Mailbox::round_trip_cycles(&accel.cfg);
-    Ok(OffloadResult { device_cycles, total_cycles: device_cycles + overhead, perf })
+    crate::session::core::offload_lowered(accel, lowered, bufs, fargs, n_teams, max_cycles)
 }
 
 #[cfg(test)]

@@ -7,9 +7,16 @@
 //! kernel and pays [`compile_cost_cycles`]; every later job reuses the
 //! cached [`Lowered`] binary for free. This is the mechanism behind the
 //! scheduler's batching — a batch of same-binary jobs pays one compile.
+//!
+//! Two key spaces share the cache: registry workloads are keyed by
+//! [`BinKey`] (name, variant, size, threads, config), arbitrary
+//! compiled-kernel jobs by [`IrKey`] (a structural content hash from
+//! [`super::job::kernel_content_key`], threads, config). Both sides share
+//! the hit/miss/charge statistics, so `hero serve` reports are uniform.
 
-use crate::bench_harness::{compile_workload, variant_kernel, Variant};
-use crate::compiler::{metrics, Lowered};
+use crate::bench_harness::{compile_kernel, compile_workload, variant_kernel, Variant};
+use crate::compiler::ir::Kernel;
+use crate::compiler::{metrics, AutoDmaReport, Lowered};
 use crate::config::HeroConfig;
 use crate::workloads::Workload;
 use anyhow::Result;
@@ -24,8 +31,13 @@ pub const COMPILE_CYCLES_PER_LOC: u64 = 1_500;
 
 /// Cycles charged for lowering one workload variant.
 pub fn compile_cost_cycles(w: &Workload, variant: Variant) -> u64 {
-    let loc = metrics::complexity(variant_kernel(w, variant)).loc as u64;
-    COMPILE_BASE_CYCLES + loc * COMPILE_CYCLES_PER_LOC
+    compile_kernel_cost_cycles(variant_kernel(w, variant))
+}
+
+/// Cycles charged for lowering an arbitrary kernel (same LoC-proportional
+/// model the registry workloads pay).
+pub fn compile_kernel_cost_cycles(k: &Kernel) -> u64 {
+    COMPILE_BASE_CYCLES + metrics::complexity(k).loc as u64 * COMPILE_CYCLES_PER_LOC
 }
 
 /// Cache key: everything that changes the lowered program.
@@ -59,6 +71,29 @@ pub fn key_for(cfg: &HeroConfig, w: &Workload, variant: Variant, threads: u32) -
     }
 }
 
+/// Cache key for an arbitrary compiled-kernel job: everything that changes
+/// the lowered program. `content` is the structural IR hash
+/// ([`super::job::kernel_content_key`], which folds in the AutoDMA flag).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct IrKey {
+    pub content: u64,
+    /// Effective core count the kernel is lowered for.
+    pub threads: u32,
+    pub config: String,
+    pub xpulp: bool,
+}
+
+/// Build the IR cache key for a kernel job on a platform configuration
+/// (threads normalized to the cluster width, like [`key_for`]).
+pub fn ir_key_for(cfg: &HeroConfig, content: u64, threads: u32) -> IrKey {
+    IrKey {
+        content,
+        threads: threads.min(cfg.accel.cores_per_cluster as u32),
+        config: cfg.name.clone(),
+        xpulp: cfg.accel.isa.xpulp,
+    }
+}
+
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CacheStats {
     /// Lowerings performed.
@@ -71,36 +106,101 @@ pub struct CacheStats {
 
 struct Entry {
     lowered: Arc<Lowered>,
+    /// AutoDMA transformation report, when the entry's compile ran the pass.
+    report: Option<AutoDmaReport>,
     cost: u64,
     /// Whether a dispatch has paid this entry's compile charge yet (probes
     /// from admission control fill the cache without consuming the charge).
     charged: bool,
 }
 
-/// Binary cache keyed on [`BinKey`]. With caching disabled every acquire
-/// lowers afresh and pays the full charge — the scheduler bench's baseline.
+/// Ensure `key` is present in `map`, lowering via `compile` on a miss
+/// (which returns the binary, its report, and its compile cost) and
+/// booking the miss/hit on `stats`. The single fill path under both key
+/// spaces and both the acquire and probe entry points.
+fn fill<K: std::hash::Hash + Eq + Clone>(
+    map: &mut HashMap<K, Entry>,
+    stats: &mut CacheStats,
+    key: &K,
+    compile: impl FnOnce() -> Result<(Lowered, Option<AutoDmaReport>, u64)>,
+    count_hit: bool,
+) -> Result<()> {
+    if !map.contains_key(key) {
+        let (lowered, report, cost) = compile()?;
+        stats.misses += 1;
+        map.insert(key.clone(), Entry { lowered: Arc::new(lowered), report, cost, charged: false });
+    } else if count_hit {
+        stats.hits += 1;
+    }
+    Ok(())
+}
+
+/// [`fill`] + consume the entry's one-time compile charge (the acquire
+/// semantics). Returns the binary, the cycles to charge this dispatch, and
+/// the entry's AutoDMA report.
+fn fill_and_charge<K: std::hash::Hash + Eq + Clone>(
+    map: &mut HashMap<K, Entry>,
+    stats: &mut CacheStats,
+    key: &K,
+    compile: impl FnOnce() -> Result<(Lowered, Option<AutoDmaReport>, u64)>,
+) -> Result<(Arc<Lowered>, u64, Option<AutoDmaReport>)> {
+    fill(map, stats, key, compile, true)?;
+    let e = map.get_mut(key).unwrap();
+    let charge = if e.charged { 0 } else { e.cost };
+    e.charged = true;
+    stats.charged_cycles += charge;
+    Ok((e.lowered.clone(), charge, e.report.clone()))
+}
+
+/// The caching-disabled path: lower afresh, count the miss, optionally pay
+/// the full charge (acquires pay, probes do not).
+fn compile_uncached(
+    stats: &mut CacheStats,
+    compile: impl FnOnce() -> Result<(Lowered, Option<AutoDmaReport>, u64)>,
+    pay: bool,
+) -> Result<(Arc<Lowered>, u64, Option<AutoDmaReport>)> {
+    let (lowered, report, cost) = compile()?;
+    stats.misses += 1;
+    let charge = if pay {
+        stats.charged_cycles += cost;
+        cost
+    } else {
+        0
+    };
+    Ok((Arc::new(lowered), charge, report))
+}
+
+/// Binary cache keyed on [`BinKey`] (registry workloads) and [`IrKey`]
+/// (arbitrary kernels). With caching disabled every acquire lowers afresh
+/// and pays the full charge — the scheduler bench's baseline.
 pub struct BinaryCache {
     enabled: bool,
     map: HashMap<BinKey, Entry>,
+    ir_map: HashMap<IrKey, Entry>,
     pub stats: CacheStats,
 }
 
 impl BinaryCache {
     pub fn new(enabled: bool) -> Self {
-        BinaryCache { enabled, map: HashMap::new(), stats: CacheStats::default() }
+        BinaryCache {
+            enabled,
+            map: HashMap::new(),
+            ir_map: HashMap::new(),
+            stats: CacheStats::default(),
+        }
     }
 
     pub fn enabled(&self) -> bool {
         self.enabled
     }
 
-    /// Number of distinct binaries currently cached.
+    /// Number of distinct binaries currently cached (both key spaces).
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.map.len() + self.ir_map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.map.is_empty() && self.ir_map.is_empty()
     }
 
     /// Fetch the binary for a job, lowering it on a miss. Returns the
@@ -113,27 +213,39 @@ impl BinaryCache {
         variant: Variant,
         threads: u32,
     ) -> Result<(Arc<Lowered>, u64)> {
+        let compile = || {
+            compile_workload(cfg, w, variant, threads)
+                .map(|(l, r)| (l, r, compile_cost_cycles(w, variant)))
+        };
         if !self.enabled {
-            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
-            let cost = compile_cost_cycles(w, variant);
-            self.stats.misses += 1;
-            self.stats.charged_cycles += cost;
-            return Ok((Arc::new(lowered), cost));
+            return compile_uncached(&mut self.stats, compile, true).map(|(l, c, _)| (l, c));
         }
         let key = key_for(cfg, w, variant, threads);
-        if !self.map.contains_key(&key) {
-            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
-            let cost = compile_cost_cycles(w, variant);
-            self.stats.misses += 1;
-            self.map.insert(key.clone(), Entry { lowered: Arc::new(lowered), cost, charged: false });
-        } else {
-            self.stats.hits += 1;
+        fill_and_charge(&mut self.map, &mut self.stats, &key, compile).map(|(l, c, _)| (l, c))
+    }
+
+    /// Fetch the binary for an arbitrary-kernel job, lowering on a miss —
+    /// the [`IrKey`] analogue of [`BinaryCache::acquire`]. `content` is the
+    /// job's structural hash ([`super::job::kernel_content_key`], which
+    /// already folds in `autodma`). Also returns the entry's AutoDMA
+    /// report, for front doors that surface it (`hero run`).
+    pub fn acquire_ir(
+        &mut self,
+        cfg: &HeroConfig,
+        k: &Kernel,
+        autodma: bool,
+        threads: u32,
+        content: u64,
+    ) -> Result<(Arc<Lowered>, u64, Option<AutoDmaReport>)> {
+        let compile = || {
+            compile_kernel(cfg, k, autodma, threads)
+                .map(|(l, r)| (l, r, compile_kernel_cost_cycles(k)))
+        };
+        if !self.enabled {
+            return compile_uncached(&mut self.stats, compile, true);
         }
-        let e = self.map.get_mut(&key).unwrap();
-        let charge = if e.charged { 0 } else { e.cost };
-        e.charged = true;
-        self.stats.charged_cycles += charge;
-        Ok((e.lowered.clone(), charge))
+        let key = ir_key_for(cfg, content, threads);
+        fill_and_charge(&mut self.ir_map, &mut self.stats, &key, compile)
     }
 
     /// Admission probe: lower (and cache) without consuming the compile
@@ -148,19 +260,38 @@ impl BinaryCache {
         variant: Variant,
         threads: u32,
     ) -> Result<Arc<Lowered>> {
+        let compile = || {
+            compile_workload(cfg, w, variant, threads)
+                .map(|(l, r)| (l, r, compile_cost_cycles(w, variant)))
+        };
         if !self.enabled {
-            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
-            self.stats.misses += 1;
-            return Ok(Arc::new(lowered));
+            return compile_uncached(&mut self.stats, compile, false).map(|(l, ..)| l);
         }
         let key = key_for(cfg, w, variant, threads);
-        if !self.map.contains_key(&key) {
-            let (lowered, _) = compile_workload(cfg, w, variant, threads)?;
-            let cost = compile_cost_cycles(w, variant);
-            self.stats.misses += 1;
-            self.map.insert(key.clone(), Entry { lowered: Arc::new(lowered), cost, charged: false });
-        }
+        fill(&mut self.map, &mut self.stats, &key, compile, false)?;
         Ok(self.map.get(&key).unwrap().lowered.clone())
+    }
+
+    /// Admission probe for an arbitrary-kernel job: lower (and cache)
+    /// without consuming the compile charge (see [`BinaryCache::probe`]).
+    pub fn probe_ir(
+        &mut self,
+        cfg: &HeroConfig,
+        k: &Kernel,
+        autodma: bool,
+        threads: u32,
+        content: u64,
+    ) -> Result<Arc<Lowered>> {
+        let compile = || {
+            compile_kernel(cfg, k, autodma, threads)
+                .map(|(l, r)| (l, r, compile_kernel_cost_cycles(k)))
+        };
+        if !self.enabled {
+            return compile_uncached(&mut self.stats, compile, false).map(|(l, ..)| l);
+        }
+        let key = ir_key_for(cfg, content, threads);
+        fill(&mut self.ir_map, &mut self.stats, &key, compile, false)?;
+        Ok(self.ir_map.get(&key).unwrap().lowered.clone())
     }
 }
 
@@ -250,5 +381,42 @@ mod tests {
         let k8 = key_for(&cfg, &w, Variant::Handwritten, 8);
         let k99 = key_for(&cfg, &w, Variant::Handwritten, 99);
         assert_eq!(k8, k99);
+    }
+
+    #[test]
+    fn ir_path_charges_once_then_hits() {
+        use crate::sched::job::kernel_content_key;
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let k = &w.handwritten;
+        let content = kernel_content_key(k, false);
+        let mut c = BinaryCache::new(true);
+        let (l1, c1, _) = c.acquire_ir(&cfg, k, false, 8, content).unwrap();
+        assert!(c1 > 0);
+        assert!(l1.l1_used > 0);
+        let (_, c2, _) = c.acquire_ir(&cfg, k, false, 8, content).unwrap();
+        assert_eq!(c2, 0);
+        assert_eq!((c.stats.misses, c.stats.hits), (1, 1));
+        assert_eq!(c.len(), 1);
+        // IR keys live in their own space: the registry entry for the same
+        // kernel does not collide with the content-hash entry.
+        let (_, c3) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(c3 > 0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn ir_probe_fills_without_charging() {
+        use crate::sched::job::kernel_content_key;
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let content = kernel_content_key(&w.handwritten, false);
+        let mut c = BinaryCache::new(true);
+        let lowered = c.probe_ir(&cfg, &w.handwritten, false, 8, content).unwrap();
+        assert!(lowered.l1_used > 0);
+        assert_eq!(c.stats.charged_cycles, 0);
+        let (_, cost, _) = c.acquire_ir(&cfg, &w.handwritten, false, 8, content).unwrap();
+        assert!(cost > 0);
+        assert_eq!(c.stats.misses, 1);
     }
 }

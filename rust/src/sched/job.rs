@@ -1,0 +1,234 @@
+//! Arbitrary compiled-kernel jobs for the scheduler.
+//!
+//! The original scheduler only accepted *named synthetic* workloads
+//! ([`crate::workloads::synth::JobDesc`] — a registry name plus a problem
+//! size), which meant a user-compiled kernel could never be submitted to a
+//! pool. A [`KernelJob`] closes that gap: it carries the kernel IR itself
+//! plus the launch payload (initial array contents, float arguments,
+//! thread/team counts), so anything the compiler can lower flows through
+//! the same policies, binary cache, batching and shared-DRAM board model
+//! as the named streams. [`crate::session::Session::launch`] on a pooled
+//! session is the front door that builds these.
+
+use crate::compiler::ir::{Kernel, Sym};
+
+/// One arbitrary-kernel offload request.
+///
+/// `inputs` holds the initial contents of every `map`-clause array in the
+/// kernel's parameter-declaration order (outputs are typically zeroed);
+/// the job's result is the final contents of the same arrays. Two
+/// `KernelJob`s with structurally identical kernels (same
+/// [`kernel_content_key`]) and thread counts share one lowered binary and
+/// may batch onto one instance, exactly like same-named synthetic jobs.
+#[derive(Debug, Clone)]
+pub struct KernelJob {
+    /// Display label for traces and reports (defaults to the kernel name).
+    pub name: String,
+    /// The kernel IR to compile and run.
+    pub kernel: Kernel,
+    /// Initial contents of every host array, in parameter order.
+    pub inputs: Vec<Vec<f32>>,
+    /// Float parameters, in parameter order.
+    pub fargs: Vec<f32>,
+    /// OpenMP thread count the kernel is lowered for (clamped to the
+    /// instance's cores per cluster at compile time).
+    pub threads: u32,
+    /// Clusters participating in the offload (OpenMP `num_teams`).
+    pub teams: usize,
+    /// Cycle the job becomes available for dispatch (0 = immediately).
+    pub arrival: u64,
+    /// Run the AutoDMA tiling pass before lowering (for kernels written in
+    /// plain OpenMP form; handwritten-tiled kernels leave this off).
+    pub autodma: bool,
+    /// Per-job simulation budget (abort bound — it never changes the timing
+    /// of a job that completes). Named synthetic jobs use the scheduler's
+    /// fixed budget; kernel jobs carry their own so a session launch keeps
+    /// the same budget on a pooled backend as on a single one.
+    pub max_cycles: u64,
+}
+
+impl KernelJob {
+    /// A job over `kernel` with default launch parameters: 8 threads, one
+    /// team, immediate arrival, no AutoDMA.
+    pub fn new(kernel: Kernel, inputs: Vec<Vec<f32>>, fargs: Vec<f32>) -> Self {
+        KernelJob {
+            name: kernel.name.clone(),
+            kernel,
+            inputs,
+            fargs,
+            threads: 8,
+            teams: 1,
+            arrival: 0,
+            autodma: false,
+            max_cycles: super::JOB_MAX_CYCLES,
+        }
+    }
+
+    /// Content key of the binary this job needs (see [`kernel_content_key`]).
+    pub fn content_key(&self) -> u64 {
+        kernel_content_key(&self.kernel, self.autodma)
+    }
+
+    /// Check the payload against the kernel's signature (see
+    /// [`validate_payload`]) plus job-level parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.teams == 0 {
+            return Err(format!("kernel {:?}: teams must be at least 1", self.name));
+        }
+        validate_payload(&self.kernel, &self.inputs, &self.fargs)
+    }
+
+    /// Total bytes of array data the job moves across the DRAM boundary at
+    /// least once (the SJF DMA-cost proxy).
+    pub fn input_bytes(&self) -> u64 {
+        self.inputs.iter().map(|a| a.len() as u64 * 4).sum()
+    }
+}
+
+/// Validate a launch payload against `kernel`'s signature: array and float
+/// parameter counts must match, and where an array's extents are
+/// compile-time constants, its input must be at least that big — an
+/// undersized buffer would let the device read past it into whatever the
+/// host allocator placed next. This is the one guard shared by
+/// [`crate::sched::Scheduler::submit_kernel`] and the session's
+/// `LaunchBuilder`, so the two front doors cannot drift.
+pub fn validate_payload(
+    kernel: &Kernel,
+    inputs: &[Vec<f32>],
+    fargs: &[f32],
+) -> Result<(), String> {
+    let n_arrays = (0..kernel.n_params)
+        .filter(|&v| matches!(kernel.sym(v), Sym::HostArray { .. }))
+        .count();
+    let n_floats = (0..kernel.n_params)
+        .filter(|&v| matches!(kernel.sym(v), Sym::FloatParam))
+        .count();
+    if inputs.len() != n_arrays {
+        return Err(format!(
+            "kernel {:?} has {n_arrays} array parameter(s), got {} input array(s)",
+            kernel.name,
+            inputs.len()
+        ));
+    }
+    if fargs.len() != n_floats {
+        return Err(format!(
+            "kernel {:?} has {n_floats} float parameter(s), got {}",
+            kernel.name,
+            fargs.len()
+        ));
+    }
+    let mut ai = 0;
+    for v in 0..kernel.n_params {
+        if matches!(kernel.sym(v), Sym::HostArray { .. }) {
+            if let Some(declared) = kernel.array_elems(v) {
+                let have = inputs[ai].len();
+                if declared as usize > have {
+                    return Err(format!(
+                        "array {:?} declares {declared} element(s) but its input holds \
+                         only {have}",
+                        kernel.sym_name(v)
+                    ));
+                }
+            }
+            ai += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Structural content key of a kernel: FNV-1a over the full IR (symbol
+/// table including array extents and const-parameter values, plus the
+/// statement tree) and the AutoDMA flag. Two kernels with equal keys lower
+/// to the same binary under the same `LowerOpts`, which is what makes the
+/// binary cache and same-binary batching sound for arbitrary kernels —
+/// the named-job path gets the same guarantee from its (kernel, variant,
+/// size) registry key.
+pub fn kernel_content_key(k: &Kernel, autodma: bool) -> u64 {
+    use std::fmt::Write as _;
+    // Stream the Debug rendering straight into the hash state — the IR
+    // dump of a large kernel is several KB, not worth materializing per
+    // submission.
+    let mut h = Fnv1a(0xcbf2_9ce4_8422_2325);
+    write!(h, "{k:?}|autodma={autodma}").expect("hashing writer never fails");
+    h.0
+}
+
+struct Fnv1a(u64);
+
+impl std::fmt::Write for Fnv1a {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for &b in s.as_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::*;
+
+    fn scale(n: i32, name: &str) -> Kernel {
+        let mut b = KernelBuilder::new(name);
+        let x = b.host_array("X", vec![ci(n)]);
+        let a = b.float_param("a");
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            ci(n),
+            vec![st(x, vec![var(i)], var(a).mul(ld(x, vec![var(i)])))],
+        )])
+    }
+
+    #[test]
+    fn content_key_is_structural() {
+        // Identical structure, independently built: same key.
+        assert_eq!(
+            kernel_content_key(&scale(32, "s"), false),
+            kernel_content_key(&scale(32, "s"), false)
+        );
+        // Problem size, name and the AutoDMA flag all change the binary.
+        assert_ne!(
+            kernel_content_key(&scale(32, "s"), false),
+            kernel_content_key(&scale(64, "s"), false)
+        );
+        assert_ne!(
+            kernel_content_key(&scale(32, "s"), false),
+            kernel_content_key(&scale(32, "t"), false)
+        );
+        assert_ne!(
+            kernel_content_key(&scale(32, "s"), false),
+            kernel_content_key(&scale(32, "s"), true)
+        );
+    }
+
+    #[test]
+    fn payload_validation_catches_shape_errors() {
+        let k = scale(16, "s");
+        assert!(validate_payload(&k, &[vec![0.0; 16]], &[1.0]).is_ok());
+        // Oversized inputs are harmless; undersized ones are not.
+        assert!(validate_payload(&k, &[vec![0.0; 32]], &[1.0]).is_ok());
+        assert!(validate_payload(&k, &[], &[1.0]).unwrap_err().contains("array parameter"));
+        assert!(
+            validate_payload(&k, &[vec![0.0; 16]], &[]).unwrap_err().contains("float parameter")
+        );
+        assert!(
+            validate_payload(&k, &[vec![0.0; 4]], &[1.0]).unwrap_err().contains("declares 16")
+        );
+        let mut j = KernelJob::new(scale(16, "s"), vec![vec![0.0; 16]], vec![1.0]);
+        assert!(j.validate().is_ok());
+        j.teams = 0;
+        assert!(j.validate().unwrap_err().contains("teams"));
+    }
+
+    #[test]
+    fn job_defaults_and_footprint() {
+        let j = KernelJob::new(scale(16, "s"), vec![vec![0.0; 16]], vec![2.0]);
+        assert_eq!(j.name, "s");
+        assert_eq!((j.threads, j.teams, j.arrival, j.autodma), (8, 1, 0, false));
+        assert_eq!(j.input_bytes(), 64);
+        assert_eq!(j.content_key(), KernelJob::new(scale(16, "s"), vec![], vec![]).content_key());
+    }
+}

@@ -33,32 +33,46 @@
 //!   surfaced per instance and in aggregate.
 //! * [`report`] — aggregate throughput/utilization/DRAM-stall reporting.
 //!
-//! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state), so
-//! results on a homogeneous pool are bit-identical regardless of policy,
-//! pool size, batching, caching or board bandwidth — the scheduler and the
-//! board model move *time*, never numerics. (A heterogeneous pool may tile
-//! kernels differently per instance config, which legitimately reorders
-//! float accumulation.) `hero serve` (see `main.rs`) and `benches/sched.rs`
-//! are the front-ends.
+//! Jobs come in two kinds sharing one queue: *named* synthetic workloads
+//! ([`JobDesc`] — a registry name plus problem size, what `hero serve`
+//! streams) and *arbitrary compiled kernels* ([`KernelJob`] — the kernel IR
+//! plus its launch payload, submitted via [`Scheduler::submit_kernel`] or,
+//! preferably, through a pooled [`crate::session::Session`]). Both flow
+//! through the same policies, binary cache (content-hash keys for IR jobs),
+//! batching and board model; kernel jobs return their output arrays in
+//! [`JobOutcome::arrays`].
+//!
+//! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state) through
+//! the shared offload core ([`crate::session::core`]), so results on a
+//! homogeneous pool are bit-identical regardless of policy, pool size,
+//! batching, caching or board bandwidth — the scheduler and the board model
+//! move *time*, never numerics. (A heterogeneous pool may tile kernels
+//! differently per instance config, which legitimately reorders float
+//! accumulation.) `hero serve` (see `main.rs`) and `benches/sched.rs` are
+//! the front-ends.
 
 pub mod cache;
+pub mod job;
 pub mod policy;
 pub mod pool;
 pub mod report;
 
 pub use crate::workloads::synth::JobDesc;
 pub use cache::BinaryCache;
+pub use job::KernelJob;
 pub use policy::{OversizeAction, Policy};
 pub use pool::{BoardSpec, InstancePool};
 pub use report::{InstanceReport, ServeReport};
 
 use crate::accel::Accel;
-use crate::bench_harness::{self, run_lowered};
+use crate::bench_harness::{self, run_lowered, Variant};
 use crate::config::HeroConfig;
 use crate::runtime::hero_api::{HeroApi, SpmLevel};
-use crate::trace::{Event, SchedEvent, SchedTrace};
+use crate::runtime::omp::OffloadResult;
+use crate::trace::{Event, PerfCounters, SchedEvent, SchedTrace};
 use crate::workloads::{self, Workload};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Smallest problem size the capacity policy will split down to.
 pub const MIN_SPLIT_SIZE: usize = 8;
@@ -85,6 +99,9 @@ pub struct JobOutcome {
     pub end: u64,
     /// Pure device cycles of the offload.
     pub device_cycles: u64,
+    /// End-to-end cycles of the offload as the host observes them (device
+    /// plus mailbox/driver overheads).
+    pub total_cycles: u64,
     /// Simulated compile cycles charged to this job (0 when the binary was
     /// cached or a batch predecessor paid).
     pub compile_cycles: u64,
@@ -98,8 +115,17 @@ pub struct JobOutcome {
     /// FNV-1a digest over every output array's f32 bits.
     pub digest: u64,
     /// Host golden-model verification result (always true when the
-    /// scheduler runs with verification off).
+    /// scheduler runs with verification off; arbitrary-kernel jobs have no
+    /// registry golden model and report true).
     pub verified: bool,
+    /// Final contents of the job's arrays. Kept for arbitrary-kernel jobs
+    /// (their caller needs the outputs back — a session's wait moves them
+    /// out via [`Scheduler::take_payload`]); named synthetic jobs skip the
+    /// copy so long serve runs stay lean.
+    pub arrays: Option<Vec<Vec<f32>>>,
+    /// Device performance counters of the offload (arbitrary-kernel jobs
+    /// only, same rationale as `arrays`).
+    pub perf: Option<Box<PerfCounters>>,
 }
 
 /// Life cycle of a submitted job.
@@ -123,8 +149,39 @@ impl JobState {
     }
 }
 
+/// What a queued job runs: a registry workload or an arbitrary kernel.
+#[derive(Debug, Clone)]
+enum JobSpec {
+    Named(JobDesc),
+    Kernel(Arc<KernelJob>),
+}
+
+impl JobSpec {
+    fn arrival(&self) -> u64 {
+        match self {
+            JobSpec::Named(d) => d.arrival,
+            JobSpec::Kernel(j) => j.arrival,
+        }
+    }
+}
+
+/// Same-binary identity: jobs with equal batch keys share one lowered
+/// binary (per instance config) and may chain onto one dispatch. Thread
+/// counts are the *raw* requested values, not clamped to any config: a
+/// batch compiles once with the head's threads, so equal raw counts are
+/// what guarantees the followers get their own lowering on every instance
+/// of a heterogeneous pool (clamping to the base config would batch
+/// 8- and 12-thread jobs together and run the followers with the head's
+/// binary on a wider instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BatchKey {
+    Named { kernel: &'static str, size: usize, variant: Variant, threads: u32 },
+    Ir { content: u64, threads: u32 },
+}
+
 struct JobRecord {
-    spec: JobDesc,
+    spec: JobSpec,
+    batch: BatchKey,
     predicted: u64,
     /// Static DMA-cycle proxy (SJF contention-aware inflation).
     predicted_dma: u64,
@@ -171,7 +228,7 @@ impl Scheduler {
             if !seen.contains(&c.name) {
                 seen.push(c.name.clone());
                 let accel = Accel::new(c.clone(), 1 << 20);
-                let mut api = HeroApi::new(&accel);
+                let api = HeroApi::new(&accel);
                 l1_capacity = l1_capacity.min(api.capacity(SpmLevel::L1(0)));
             }
         }
@@ -220,6 +277,11 @@ impl Scheduler {
         self.policy
     }
 
+    /// The pool's base platform configuration (instance 0's).
+    pub fn config(&self) -> &HeroConfig {
+        &self.cfg
+    }
+
     /// Jobs submitted so far (including rejected/split ones).
     pub fn submitted(&self) -> usize {
         self.jobs.len()
@@ -230,16 +292,37 @@ impl Scheduler {
         self.queue.len()
     }
 
-    /// Current state of a handle.
-    pub fn state(&self, h: JobHandle) -> &JobState {
-        &self.jobs[h.0].state
+    /// Current state of a handle, or `None` for a handle this scheduler
+    /// never issued (a foreign or stale `JobHandle` must not panic).
+    pub fn state(&self, h: JobHandle) -> Option<&JobState> {
+        self.jobs.get(h.0).map(|r| &r.state)
     }
 
     /// Completion record, if the job has finished (non-blocking probe — the
-    /// `hero_memcpy` test-for-completion analogue).
+    /// `hero_memcpy` test-for-completion analogue). `None` for unfinished
+    /// jobs and for foreign handles alike.
     pub fn poll(&self, h: JobHandle) -> Option<&JobOutcome> {
-        match &self.jobs[h.0].state {
+        match &self.jobs.get(h.0)?.state {
             JobState::Done(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Move a finished kernel job's payload (output arrays + perf counters)
+    /// out of the scheduler, leaving the outcome as lean as a named job's —
+    /// this is how a pooled [`crate::session::Session`] collects results
+    /// without the scheduler retaining every launch's data forever. `None`
+    /// for unfinished/foreign handles, named jobs, or an already-taken
+    /// payload.
+    pub fn take_payload(
+        &mut self,
+        h: JobHandle,
+    ) -> Option<(Vec<Vec<f32>>, Option<Box<PerfCounters>>)> {
+        match &mut self.jobs.get_mut(h.0)?.state {
+            JobState::Done(o) => {
+                let arrays = o.arrays.take()?;
+                Some((arrays, o.perf.take()))
+            }
             _ => None,
         }
     }
@@ -248,8 +331,15 @@ impl Scheduler {
     pub fn submit(&mut self, desc: JobDesc) -> JobHandle {
         let id = self.jobs.len();
         self.trace.record(SchedEvent::Submitted { job: id });
+        let eff_threads = desc.threads.min(self.cfg.accel.cores_per_cluster as u32);
         self.jobs.push(JobRecord {
-            spec: desc,
+            spec: JobSpec::Named(desc),
+            batch: BatchKey::Named {
+                kernel: desc.kernel,
+                size: desc.size,
+                variant: desc.variant,
+                threads: desc.threads,
+            },
             predicted: 0,
             predicted_dma: 0,
             state: JobState::Queued,
@@ -265,7 +355,6 @@ impl Scheduler {
         // cannot deflate a job's prediction relative to how it executes.
         if matches!(self.policy, Policy::Sjf) {
             let w = desc.workload().unwrap();
-            let eff_threads = desc.threads.min(self.cfg.accel.cores_per_cluster as u32);
             self.jobs[id].predicted = policy::predict_job(&w, desc.variant, eff_threads);
             self.jobs[id].predicted_dma =
                 policy::predict_job_dma_cycles(&w, self.cfg.dma_beat_bytes());
@@ -299,6 +388,68 @@ impl Scheduler {
     /// Submit a whole stream.
     pub fn submit_all(&mut self, descs: &[JobDesc]) -> Vec<JobHandle> {
         descs.iter().map(|d| self.submit(*d)).collect()
+    }
+
+    /// Submit an arbitrary compiled-kernel job; returns immediately with
+    /// its handle. The job flows through the same policies, binary cache,
+    /// batching and shared-DRAM board model as named synthetic jobs; its
+    /// outputs come back in [`JobOutcome::arrays`].
+    pub fn submit_kernel(&mut self, kjob: KernelJob) -> JobHandle {
+        let id = self.jobs.len();
+        self.trace.record(SchedEvent::Submitted { job: id });
+        let content = kjob.content_key();
+        let eff_threads = kjob.threads.min(self.cfg.accel.cores_per_cluster as u32);
+        let kjob = Arc::new(kjob);
+        self.jobs.push(JobRecord {
+            spec: JobSpec::Kernel(kjob.clone()),
+            batch: BatchKey::Ir { content, threads: kjob.threads },
+            predicted: 0,
+            predicted_dma: 0,
+            state: JobState::Queued,
+        });
+        // Shape checks up front (shared with the session's LaunchBuilder —
+        // see `job::validate_payload`): a mismatched or undersized payload
+        // would otherwise fail deep inside the marshalling path of whatever
+        // instance it lands on, or worse, read past its buffers.
+        if let Err(reason) = kjob.validate() {
+            self.reject(id, reason);
+            return JobHandle(id);
+        }
+        if matches!(self.policy, Policy::Sjf) {
+            self.jobs[id].predicted =
+                policy::predict_kernel_job(&kjob.kernel, kjob.autodma, &self.cfg, eff_threads);
+            self.jobs[id].predicted_dma =
+                policy::predict_dma_cycles(kjob.input_bytes(), self.cfg.dma_beat_bytes());
+        }
+        if let Some(action) = self.policy.admission() {
+            // An arbitrary kernel has no registry problem-size semantics to
+            // halve, so the split action degrades to rejection.
+            let cannot_split = matches!(action, OversizeAction::Split)
+                .then_some("; arbitrary kernels cannot be split")
+                .unwrap_or("");
+            match self.cache.probe_ir(&self.cfg, &kjob.kernel, kjob.autodma, kjob.threads, content)
+            {
+                Ok(l) if l.l1_used <= self.l1_capacity => {}
+                Ok(l) => {
+                    let reason = format!(
+                        "SPM footprint {} B exceeds hero_l1_capacity {} B{cannot_split}",
+                        l.l1_used, self.l1_capacity
+                    );
+                    self.reject(id, reason);
+                    return JobHandle(id);
+                }
+                Err(e) if crate::compiler::lower::is_l1_overflow(&e) => {
+                    self.reject(id, format!("{e}{cannot_split}"));
+                    return JobHandle(id);
+                }
+                Err(e) => {
+                    self.reject(id, format!("compile failed: {e}"));
+                    return JobHandle(id);
+                }
+            }
+        }
+        self.queue.push(id);
+        JobHandle(id)
     }
 
     fn reject(&mut self, id: JobId, reason: String) {
@@ -364,11 +515,11 @@ impl Scheduler {
         // everything behind the gap). Only when nothing has arrived yet
         // does the earliest future arrival dispatch (the instance waits).
         let arrived: Vec<usize> = (0..self.queue.len())
-            .filter(|&p| self.jobs[self.queue[p]].spec.arrival <= frontier)
+            .filter(|&p| self.jobs[self.queue[p]].spec.arrival() <= frontier)
             .collect();
         let qi = if arrived.is_empty() {
             (0..self.queue.len())
-                .min_by_key(|&p| (self.jobs[self.queue[p]].spec.arrival, p))
+                .min_by_key(|&p| (self.jobs[self.queue[p]].spec.arrival(), p))
                 .expect("queue is non-empty")
         } else {
             let sub: Vec<JobId> = arrived.iter().map(|&p| self.queue[p]).collect();
@@ -378,24 +529,20 @@ impl Scheduler {
             arrived[k]
         };
         let head = self.queue.remove(qi);
-        let spec = self.jobs[head].spec;
-        let w = workloads::build(spec.kernel, spec.size)
-            .expect("queued jobs have known kernels");
+        let spec = self.jobs[head].spec.clone();
+        let head_key = self.jobs[head].batch;
 
         // Gather same-binary followers from the queue (batching). Only
         // jobs already arrived by the head's start may chain — batching a
         // future arrival would park the instance on its gap.
-        let head_start = frontier.max(spec.arrival);
+        let head_start = frontier.max(spec.arrival());
         let mut batch = vec![head];
         if self.batching {
             let mut i = 0;
             while i < self.queue.len() && batch.len() < MAX_BATCH {
-                let cand = self.jobs[self.queue[i]].spec;
-                if cand.kernel == spec.kernel
-                    && cand.size == spec.size
-                    && cand.variant == spec.variant
-                    && cand.threads == spec.threads
-                    && cand.arrival <= head_start
+                let cand = self.queue[i];
+                if self.jobs[cand].batch == head_key
+                    && self.jobs[cand].spec.arrival() <= head_start
                 {
                     batch.push(self.queue.remove(i));
                 } else {
@@ -406,18 +553,36 @@ impl Scheduler {
 
         // Compile for the *instance's* configuration (the cache key includes
         // the config name, so heterogeneous pools keep per-width binaries).
-        let (lowered, compile_cost) =
-            match self.cache.acquire(&icfg, &w, spec.variant, spec.threads) {
-                Ok(x) => x,
-                Err(e) => {
-                    // The binary fails for every job of the batch alike.
-                    let reason = format!("compile failed: {e}");
-                    for id in batch {
-                        self.reject(id, reason.clone());
-                    }
-                    return Ok(true);
+        // Named jobs also materialize their workload here (shared by the
+        // whole batch); kernel jobs carry their IR along.
+        let acquired = match &spec {
+            JobSpec::Named(desc) => {
+                let w = workloads::build(desc.kernel, desc.size)
+                    .expect("queued jobs have known kernels");
+                self.cache
+                    .acquire(&icfg, &w, desc.variant, desc.threads)
+                    .map(|(lowered, cost)| (lowered, cost, Some(w)))
+            }
+            JobSpec::Kernel(kjob) => {
+                let BatchKey::Ir { content, .. } = head_key else {
+                    unreachable!("kernel jobs carry IR batch keys")
+                };
+                self.cache
+                    .acquire_ir(&icfg, &kjob.kernel, kjob.autodma, kjob.threads, content)
+                    .map(|(lowered, cost, _)| (lowered, cost, None))
+            }
+        };
+        let (lowered, compile_cost, w) = match acquired {
+            Ok(x) => x,
+            Err(e) => {
+                // The binary fails for every job of the batch alike.
+                let reason = format!("compile failed: {e}");
+                for id in batch {
+                    self.reject(id, reason.clone());
                 }
-            };
+                return Ok(true);
+            }
+        };
         if compile_cost > 0 {
             self.trace.record(SchedEvent::CompileMiss { job: head, cycles: compile_cost });
         } else {
@@ -427,9 +592,30 @@ impl Scheduler {
         let followers = batch.len() - 1;
         let mut charge = compile_cost;
         for id in batch {
-            let seed = self.jobs[id].spec.seed;
-            let arrival = self.jobs[id].spec.arrival;
-            match run_lowered(&icfg, &w, &lowered, seed, JOB_MAX_CYCLES) {
+            let member = self.jobs[id].spec.clone();
+            let arrival = member.arrival();
+            // Every job executes on a fresh accelerator through the shared
+            // session core; only the payload source differs per spec kind.
+            let ran: Result<(OffloadResult, Vec<Vec<f32>>, bool, bool)> = match &member {
+                JobSpec::Named(desc) => {
+                    let w = w.as_ref().expect("named batches carry their workload");
+                    run_lowered(&icfg, w, &lowered, desc.seed, JOB_MAX_CYCLES).map(|out| {
+                        let verified =
+                            !self.verify || bench_harness::verify(w, &out, desc.seed).is_ok();
+                        (out.result, out.arrays, verified, false)
+                    })
+                }
+                JobSpec::Kernel(kjob) => crate::session::core::run_arrays(
+                    &icfg,
+                    &lowered,
+                    &kjob.inputs,
+                    &kjob.fargs,
+                    kjob.teams,
+                    kjob.max_cycles,
+                )
+                .map(|(result, arrays)| (result, arrays, true, true)),
+            };
+            match ran {
                 Err(e) => {
                     // The lowering happened even though the job failed:
                     // book the pending compile charge on the instance so it
@@ -440,18 +626,17 @@ impl Scheduler {
                     }
                     self.reject(id, format!("execution failed: {e}"));
                 }
-                Ok(out) => {
-                    let verified = !self.verify || bench_harness::verify(&w, &out, seed).is_ok();
-                    let digest = digest_arrays(&out.arrays);
-                    let dma_busy = out.result.perf.get(Event::DmaBusyCycles);
-                    let dma_bytes = out.result.perf.get(Event::DmaBytes);
+                Ok((result, arrays, verified, keep_payload)) => {
+                    let digest = digest_arrays(&arrays);
+                    let dma_busy = result.perf.get(Event::DmaBusyCycles);
+                    let dma_bytes = result.perf.get(Event::DmaBytes);
                     let a = self.pool.assign(
                         inst,
                         arrival,
-                        charge + out.result.total_cycles,
+                        charge + result.total_cycles,
                         dma_bytes,
                     );
-                    self.pool.record(inst, out.result.device_cycles, dma_busy);
+                    self.pool.record(inst, result.device_cycles, dma_busy);
                     self.trace.record(SchedEvent::Dispatched {
                         job: id,
                         instance: inst,
@@ -468,13 +653,16 @@ impl Scheduler {
                         instance: inst,
                         start: a.start,
                         end: a.end,
-                        device_cycles: out.result.device_cycles,
+                        device_cycles: result.device_cycles,
+                        total_cycles: result.total_cycles,
                         compile_cycles: charge,
                         dma_busy_cycles: dma_busy,
                         dma_bytes,
                         dram_stall_cycles: a.dram_stall,
                         digest,
                         verified,
+                        perf: keep_payload.then(|| Box::new(result.perf)),
+                        arrays: keep_payload.then_some(arrays),
                     });
                     charge = 0; // the batch head pays the compile once
                 }
@@ -491,8 +679,12 @@ impl Scheduler {
 
     /// Drive the scheduler until `h` settles (the `hero_memcpy_wait`
     /// analogue). Note a `Split` parent settles at submission; wait on its
-    /// children to wait for the decomposed work.
+    /// children to wait for the decomposed work. A foreign or stale handle
+    /// is an error, not a panic.
     pub fn wait(&mut self, h: JobHandle) -> Result<&JobState> {
+        if h.0 >= self.jobs.len() {
+            bail!("unknown job handle {} ({} jobs submitted)", h.0, self.jobs.len());
+        }
         while !self.jobs[h.0].state.settled() {
             if !self.step()? {
                 bail!("job {} is queued but the queue is empty", h.0);
@@ -600,12 +792,15 @@ mod tests {
     fn submit_returns_immediately_and_wait_completes() {
         let mut s = Scheduler::new(aurora(), 2, Policy::Fifo);
         let h = s.submit(job("gemm", 12, 3));
-        assert!(matches!(s.state(h), JobState::Queued));
+        assert!(matches!(s.state(h), Some(JobState::Queued)));
         assert!(s.poll(h).is_none());
         let state = s.wait(h).unwrap();
         let JobState::Done(o) = state else { panic!("not done: {state:?}") };
         assert!(o.verified);
         assert!(o.end > o.start);
+        assert!(o.total_cycles > o.device_cycles);
+        // Named jobs keep serve runs lean: no payload copies.
+        assert!(o.arrays.is_none() && o.perf.is_none());
         assert!(s.poll(h).is_some());
     }
 
@@ -613,7 +808,19 @@ mod tests {
     fn unknown_kernel_rejected() {
         let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
         let h = s.submit(job("nope", 12, 3));
-        assert!(matches!(s.state(h), JobState::Rejected { .. }));
+        assert!(matches!(s.state(h), Some(JobState::Rejected { .. })));
+    }
+
+    #[test]
+    fn foreign_handles_are_safe() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        assert!(s.state(JobHandle(7)).is_none());
+        assert!(s.poll(JobHandle(7)).is_none());
+        let err = s.wait(JobHandle(7)).unwrap_err();
+        assert!(err.to_string().contains("unknown job handle"), "{err}");
+        // A genuine handle still works afterwards.
+        let h = s.submit(job("gemm", 12, 1));
+        assert!(matches!(s.wait(h).unwrap(), JobState::Done(_)));
     }
 
     #[test]
@@ -635,8 +842,8 @@ mod tests {
         s.drain().unwrap();
         assert_eq!(s.trace.dispatch_order(), vec![1, 0]);
         // Both still complete (no starvation).
-        assert!(s.state(JobHandle(0)).settled());
-        assert!(s.state(JobHandle(1)).settled());
+        assert!(s.state(JobHandle(0)).unwrap().settled());
+        assert!(s.state(JobHandle(1)).unwrap().settled());
     }
 
     #[test]
@@ -700,7 +907,7 @@ mod tests {
         // gemm N=64 handwritten keeps B (16 KiB) + strips resident: > 14 KiB
         // of user L1 on the shrunken config.
         let h = s.submit(job("gemm", 64, 1));
-        let JobState::Rejected { reason } = s.state(h) else {
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
             panic!("expected rejection, got {:?}", s.state(h));
         };
         assert!(
@@ -710,28 +917,29 @@ mod tests {
         // A job that fits is admitted and completes.
         let ok = s.submit(job("gemm", 16, 2));
         s.drain().unwrap();
-        assert!(matches!(s.state(ok), JobState::Done(_)));
+        assert!(matches!(s.state(ok), Some(JobState::Done(_))));
     }
 
     #[test]
     fn capacity_policy_splits_oversize_to_feasible_children() {
         let mut s = Scheduler::new(small_l1_cfg(), 2, Policy::Capacity(OversizeAction::Split));
         let h = s.submit(job("gemm", 64, 9));
-        let JobState::Split { children } = s.state(h).clone() else {
+        let JobState::Split { children } = s.state(h).unwrap().clone() else {
             panic!("expected split, got {:?}", s.state(h));
         };
         assert_eq!(children.len(), 2);
         s.drain().unwrap();
         for c in &children {
-            let JobState::Done(o) = s.state(*c) else {
+            let Some(JobState::Done(o)) = s.state(*c) else {
                 panic!("child not done: {:?}", s.state(*c));
             };
             assert!(o.verified);
         }
         // Children run the same kernel at feasible granularity.
         for c in &children {
-            assert_eq!(s.jobs[c.0].spec.kernel, "gemm");
-            assert_eq!(s.jobs[c.0].spec.size, 32);
+            let JobSpec::Named(d) = &s.jobs[c.0].spec else { panic!("child is not named") };
+            assert_eq!(d.kernel, "gemm");
+            assert_eq!(d.size, 32);
         }
         let r = s.report();
         assert_eq!(r.split, 1);
@@ -827,5 +1035,156 @@ mod tests {
             digests.push(r.digest);
         }
         assert!(digests.windows(2).all(|w| w[0] == w[1]), "{digests:#x?}");
+    }
+
+    /// `y[i] = a*x[i] + y[i]` built with the public `KernelBuilder` — the
+    /// arbitrary-kernel test payload (not a `workloads::by_name` entry).
+    fn saxpy(n: i32) -> crate::compiler::ir::Kernel {
+        use crate::compiler::ir::*;
+        let mut b = KernelBuilder::new("saxpy_custom");
+        let x = b.host_array("X", vec![ci(n)]);
+        let y = b.host_array("Y", vec![ci(n)]);
+        let a = b.float_param("a");
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            ci(n),
+            vec![st(
+                y,
+                vec![var(i)],
+                var(a).mul(ld(x, vec![var(i)])).add(ld(y, vec![var(i)])),
+            )],
+        )])
+    }
+
+    fn saxpy_job(n: i32, seed: u64) -> KernelJob {
+        let xs = crate::workloads::gen_f32(seed, n as usize);
+        let ys = crate::workloads::gen_f32(seed ^ 0xFF, n as usize);
+        KernelJob::new(saxpy(n), vec![xs, ys], vec![3.0])
+    }
+
+    #[test]
+    fn kernel_job_runs_and_returns_outputs() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let h = s.submit_kernel(saxpy_job(64, 5));
+        let state = s.wait(h).unwrap();
+        let JobState::Done(o) = state else { panic!("not done: {state:?}") };
+        assert!(o.verified);
+        let arrays = o.arrays.as_ref().expect("kernel jobs carry their outputs");
+        assert_eq!(arrays.len(), 2);
+        let xs = crate::workloads::gen_f32(5, 64);
+        let ys = crate::workloads::gen_f32(5 ^ 0xFF, 64);
+        for i in 0..64 {
+            assert_eq!(arrays[1][i], 3.0 * xs[i] + ys[i], "y[{i}]");
+        }
+        assert!(o.perf.is_some());
+        assert!(o.device_cycles > 0);
+    }
+
+    #[test]
+    fn kernel_jobs_batch_and_share_one_binary() {
+        let mut s = Scheduler::new(aurora(), 2, Policy::Fifo);
+        for seed in 0..4 {
+            s.submit_kernel(saxpy_job(64, seed));
+        }
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 4);
+        // Structurally identical kernels hit one content-keyed entry and
+        // chain onto instance 0 like a same-named batch.
+        assert_eq!(r.cache_misses, 1);
+        assert_eq!(r.instances[0].jobs, 4);
+        assert_eq!(r.instances[1].jobs, 0);
+    }
+
+    #[test]
+    fn kernel_and_named_jobs_share_one_queue() {
+        let mut s = Scheduler::new(aurora(), 2, Policy::Fifo).with_batching(false);
+        let hn = s.submit(job("gemm", 12, 1));
+        let hk = s.submit_kernel(saxpy_job(32, 2));
+        s.drain().unwrap();
+        assert!(matches!(s.state(hn), Some(JobState::Done(_))));
+        assert!(matches!(s.state(hk), Some(JobState::Done(_))));
+        let r = s.report();
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.cache_misses, 2);
+    }
+
+    #[test]
+    fn kernel_job_payload_mismatch_rejected() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        // Two arrays declared, one provided.
+        let h = s.submit_kernel(KernelJob::new(saxpy(16), vec![vec![0.0; 16]], vec![1.0]));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("array parameter"), "{reason}");
+        // Wrong float-arg count.
+        let h = s.submit_kernel(KernelJob::new(saxpy(16), vec![vec![0.0; 16]; 2], vec![]));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("float parameter"), "{reason}");
+    }
+
+    #[test]
+    fn kernel_job_undersized_input_rejected() {
+        // Constant-extent arrays must be backed by big-enough inputs — the
+        // device would otherwise read past the buffer (same guard the
+        // session's LaunchBuilder applies).
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let h = s.submit_kernel(KernelJob::new(
+            saxpy(64),
+            vec![vec![0.0; 4], vec![0.0; 64]],
+            vec![1.0],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("declares 64"), "{reason}");
+    }
+
+    #[test]
+    fn take_payload_moves_outputs_out_once() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let h = s.submit_kernel(saxpy_job(32, 3));
+        s.drain().unwrap();
+        let (arrays, perf) = s.take_payload(h).unwrap();
+        assert_eq!(arrays.len(), 2);
+        assert!(perf.is_some());
+        // Second take: nothing left; metadata survives, payload is gone.
+        assert!(s.take_payload(h).is_none());
+        let o = s.poll(h).unwrap();
+        assert!(o.device_cycles > 0);
+        assert!(o.arrays.is_none() && o.perf.is_none());
+        // Named jobs and foreign handles have no payload either.
+        let hn = s.submit(job("gemm", 12, 1));
+        s.drain().unwrap();
+        assert!(s.take_payload(hn).is_none());
+        assert!(s.take_payload(JobHandle(99)).is_none());
+    }
+
+    #[test]
+    fn kernel_job_capacity_admission_applies() {
+        // gemm's handwritten tiling at N=64 overflows the shrunken L1; the
+        // same IR submitted as an arbitrary kernel must be refused by the
+        // capacity policy (split degrades to reject — no size semantics).
+        let w = crate::workloads::gemm::build(64);
+        for action in [OversizeAction::Reject, OversizeAction::Split] {
+            let mut s = Scheduler::new(small_l1_cfg(), 1, Policy::Capacity(action));
+            let h = s.submit_kernel(KernelJob::new(
+                w.handwritten.clone(),
+                w.gen_data(3),
+                w.fargs.clone(),
+            ));
+            let Some(JobState::Rejected { reason }) = s.state(h) else {
+                panic!("expected rejection, got {:?}", s.state(h));
+            };
+            assert!(
+                reason.contains("hero_l1_capacity") || reason.contains("L1 overflow"),
+                "{reason}"
+            );
+        }
     }
 }

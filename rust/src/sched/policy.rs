@@ -115,12 +115,46 @@ pub fn predict_job(w: &Workload, variant: Variant, threads: u32) -> u64 {
     )
 }
 
+/// Static cycle prediction for an arbitrary compiled-kernel job
+/// ([`crate::sched::KernelJob`]). Builder kernels carry constant loop
+/// bounds, so the fallback trip count rarely fires; 16 matches the
+/// [`PredictOpts`] default.
+///
+/// For an AutoDMA job the submitted IR is the external-memory form but the
+/// *executed* binary is the tiled transform output — predicting the input
+/// IR would over-estimate by 1-2 orders of magnitude and invert SJF's
+/// ordering for exactly the jobs it should favor (the same trap
+/// [`predict_job`] avoids for named jobs via the handwritten proxy). So
+/// the prediction walks the transformed kernel; when AutoDMA declines, the
+/// input IR is what actually runs and is predicted directly.
+pub fn predict_kernel_job(
+    k: &crate::compiler::ir::Kernel,
+    autodma: bool,
+    cfg: &crate::config::HeroConfig,
+    threads: u32,
+) -> u64 {
+    let opts = PredictOpts { default_trips: 16, par_ways: threads.max(1) as u64 };
+    if autodma {
+        let ad = crate::compiler::AutoDmaOpts::for_config(cfg);
+        if let Ok((tiled, _)) = crate::compiler::autodma::transform(k, &ad) {
+            return predict_cycles(&tiled, &opts);
+        }
+    }
+    predict_cycles(k, &opts)
+}
+
 /// Static DMA-cycle proxy for one job: every mapped array crosses the
 /// DRAM boundary at least once (tiled variants stage inputs in and results
 /// out), so the job's data footprint over the instance's NoC beat rate
 /// approximates its uncontended DRAM service time.
 pub fn predict_job_dma_cycles(w: &Workload, beat_bytes: u64) -> u64 {
     let bytes: u64 = w.arrays.iter().map(|a| a.elems as u64 * 4).sum();
+    predict_dma_cycles(bytes, beat_bytes)
+}
+
+/// DMA-cycle proxy from a raw byte footprint (shared by the named and
+/// arbitrary-kernel job paths).
+pub fn predict_dma_cycles(bytes: u64, beat_bytes: u64) -> u64 {
     bytes / beat_bytes.max(1)
 }
 
@@ -163,6 +197,18 @@ mod tests {
     fn sjf_ties_break_toward_older() {
         let queue = [3usize, 4, 5];
         assert_eq!(Policy::Sjf.pick(&queue, |_| 42), 0);
+    }
+
+    #[test]
+    fn kernel_job_prediction_uses_tiled_form_for_autodma() {
+        // An AutoDMA kernel job executes the tiled transform output, not
+        // the external-memory input IR; its prediction must reflect that
+        // (otherwise SJF inverts for autodma launches).
+        let cfg = crate::config::aurora();
+        let w = workloads::gemm::build(24);
+        let plain = predict_kernel_job(&w.unmodified, false, &cfg, 8);
+        let tiled = predict_kernel_job(&w.unmodified, true, &cfg, 8);
+        assert!(tiled < plain, "autodma prediction {tiled} must undercut {plain}");
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! The shared offload core: one marshal/run path under every front door.
+//!
+//! [`offload_lowered`] is the §2.3 offload sequence — argument marshalling,
+//! the single 4-GiB-window check, mailbox round trip, device run — that
+//! every way of launching a kernel ultimately goes through.
+//! [`run_arrays`] wraps it with the host side: build a fresh accelerator,
+//! allocate shared buffers for the given array contents, offload, read the
+//! arrays back.
+//!
+//! [`crate::runtime::omp::offload`], the benchmark harness's
+//! [`crate::bench_harness::run_lowered`] and the scheduler's dispatch path
+//! are thin layers over these two functions, so offload semantics exist
+//! exactly once; [`crate::session::Session`] is the recommended client API
+//! on top.
+
+use crate::accel::Accel;
+use crate::compiler::Lowered;
+use crate::config::HeroConfig;
+use crate::host::{HostBuf, HostContext};
+use crate::runtime::omp::OffloadResult;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Execute one `target` region: marshal `map`-clause pointers, ring the
+/// mailbox, run the device until the offload manager reports completion.
+///
+/// `bufs` must match `lowered.arrays` order; `fargs` matches
+/// `lowered.floats`. `n_teams` clusters participate (OpenMP `num_teams`).
+pub fn offload_lowered(
+    accel: &mut Accel,
+    lowered: &Lowered,
+    bufs: &[&HostBuf],
+    fargs: &[f32],
+    n_teams: usize,
+    max_cycles: u64,
+) -> Result<OffloadResult> {
+    if bufs.len() != lowered.arrays.len() {
+        bail!("expected {} buffers, got {}", lowered.arrays.len(), bufs.len());
+    }
+    if fargs.len() != lowered.floats.len() {
+        bail!("expected {} float args, got {}", lowered.floats.len(), fargs.len());
+    }
+    // All map-clause pointers must share the 4 GiB window (one ext-CSR
+    // write per kernel — §2.2.1).
+    let hi = bufs.first().map(|b| b.hi()).unwrap_or((crate::host::VA_BASE >> 32) as u32);
+    for b in bufs {
+        if b.hi() != hi {
+            bail!("map-clause buffers span multiple 4 GiB windows");
+        }
+    }
+    // Driver: load the device ELF (decoded program) + flush the IOMMU TLB
+    // for the new process context.
+    accel.load_program(Arc::new(lowered.program.clone()), n_teams)?;
+    accel.iommu.flush();
+    // Marshal arguments: x10 = VA[63:32], x11.. = VA[31:0] per array.
+    let mut args: Vec<u32> = vec![hi];
+    args.extend(bufs.iter().map(|b| b.lo()));
+    accel.set_args(&args, fargs)?;
+    // Snapshot counters so the result reports only this offload.
+    let before = accel.perf_aggregate();
+    let device_cycles = accel.run(max_cycles)?;
+    let mut perf = accel.perf_aggregate();
+    perf.sub(&before);
+    let overhead = crate::host::Mailbox::round_trip_cycles(&accel.cfg);
+    Ok(OffloadResult { device_cycles, total_cycles: device_cycles + overhead, perf })
+}
+
+/// Run a lowered binary on a fresh accelerator instance: allocate a shared
+/// buffer per entry of `arrays` (initialized to its contents), offload,
+/// and return the offload result together with the final contents of every
+/// array.
+///
+/// This is the execution model every launch path shares: each launch gets
+/// its own SPM/IOMMU state, so results depend only on the binary and the
+/// input data — never on what ran before (the scheduler's bit-identity
+/// invariant).
+pub fn run_arrays(
+    cfg: &HeroConfig,
+    lowered: &Lowered,
+    arrays: &[Vec<f32>],
+    fargs: &[f32],
+    n_teams: usize,
+    max_cycles: u64,
+) -> Result<(OffloadResult, Vec<Vec<f32>>)> {
+    // Size DRAM to the data (plus slack for page rounding).
+    let total_elems: usize = arrays.iter().map(|a| a.len()).sum();
+    let dram = (total_elems * 4 + (arrays.len() + 2) * cfg.iommu.page_bytes).max(1 << 20);
+    let mut accel = Accel::new(cfg.clone(), dram);
+    let mut host = HostContext::new();
+    let bufs: Vec<HostBuf> = arrays
+        .iter()
+        .map(|a| host.alloc(&mut accel, a.len()))
+        .collect::<Result<_>>()?;
+    for (buf, data) in bufs.iter().zip(arrays) {
+        host.write_f32(&mut accel, buf, data);
+    }
+    let refs: Vec<&HostBuf> = bufs.iter().collect();
+    let result = offload_lowered(&mut accel, lowered, &refs, fargs, n_teams, max_cycles)?;
+    let out = bufs.iter().map(|b| host.read_f32(&accel, b)).collect();
+    Ok((result, out))
+}

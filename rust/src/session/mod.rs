@@ -1,0 +1,698 @@
+//! `Session` — the unified heterogeneous client API (the recommended entry
+//! point).
+//!
+//! The platform used to expose three disjoint offload surfaces:
+//! [`crate::runtime::omp::offload`] for synchronous single-accelerator
+//! runs, [`crate::runtime::hero_api::HeroApi`] which threads `&mut Accel`
+//! through every call, and [`crate::sched::Scheduler`] which only accepted
+//! named synthetic workloads. A [`Session`] is the one front door over all
+//! of them, mirroring the original HERO platform's single-API-over-many-
+//! accelerators design (§2.3/§2.4):
+//!
+//! * [`Session::single`] owns one accelerator configuration,
+//!   [`Session::pool`] an instance pool behind the offload scheduler — the
+//!   client code is identical either way, and `&mut Accel` never appears.
+//! * [`Session::buffer_from_f32`] / [`Session::buffer_zeroed`] replace raw
+//!   `HostBuf` handling (the 4-GiB-window discipline lives in the shared
+//!   offload core, checked once for everyone).
+//! * [`Session::launch`] starts a builder:
+//!   `session.launch(&kernel).args(&[&x, &y]).fargs(&[a]).teams(n).submit()`
+//!   returns a [`Launch`] handle, async by default;
+//!   [`Session::wait`] resolves it to a [`LaunchResult`] (device/total
+//!   cycles, perf counters, output digest) and materializes the outputs in
+//!   the session's buffers.
+//! * [`Session::submit_workload`] / [`Session::run_workload`] are the
+//!   registry-workload conveniences `hero run`, the examples and the
+//!   benches use; [`Session::submit_jobs`] / [`Session::drain`] /
+//!   [`Session::report`] drive named job streams on a pooled session
+//!   (`hero serve`).
+//!
+//! Launches are snapshot-in / copy-out: argument buffers are captured at
+//! `submit` and written back at `wait`, so a pooled launch behaves exactly
+//! like a single-accelerator one — and every launch runs on a fresh
+//! accelerator through [`core::run_arrays`], which is what makes the two
+//! paths bit-identical (the equivalence tests in `tests/session.rs` pin
+//! this down).
+
+pub mod core;
+
+use crate::bench_harness::{variant_kernel, Variant};
+use crate::compiler::ir::Kernel;
+use crate::compiler::AutoDmaReport;
+use crate::config::HeroConfig;
+use crate::sched::cache::BinaryCache;
+use crate::sched::job::kernel_content_key;
+use crate::sched::{
+    digest_arrays, JobDesc, JobHandle, JobState, KernelJob, Policy, Scheduler, ServeReport,
+};
+use crate::trace::PerfCounters;
+use crate::workloads::Workload;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Default per-launch simulation budget (matches `hero run`).
+const LAUNCH_MAX_CYCLES: u64 = 100_000_000_000;
+
+/// A session-owned f32 buffer handle (replaces raw `HostBuf` plumbing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Buffer {
+    id: usize,
+}
+
+/// An in-flight launch handle (the job-level analogue of the HERO API's
+/// `hero_memcpy_*_async` transfer ids). Resolve it with [`Session::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Launch {
+    id: usize,
+}
+
+/// Outcome of one resolved launch.
+#[derive(Debug, Clone)]
+pub struct LaunchResult {
+    /// Device cycles from offload-manager wakeup to completion.
+    pub device_cycles: u64,
+    /// End-to-end cycles as the host observes them (device + mailbox +
+    /// driver overheads).
+    pub total_cycles: u64,
+    /// Aggregated device performance counters for this launch.
+    pub perf: PerfCounters,
+    /// FNV-1a digest over the final f32 bits of every argument array —
+    /// identical across single and pooled execution of the same launch.
+    pub digest: u64,
+    /// Pool instance the launch ran on (`None` on a single session).
+    pub instance: Option<usize>,
+    /// Simulated compile cycles charged (0 when the binary was cached).
+    pub compile_cycles: u64,
+    /// AutoDMA transformation report of the binary this launch ran, when it
+    /// was compiled with the pass (single sessions; also present on cache
+    /// hits — the entry keeps its report. Use `compile_cycles > 0` to tell
+    /// whether *this* launch paid for the compile).
+    pub autodma: Option<AutoDmaReport>,
+}
+
+impl LaunchResult {
+    /// Cycles attributable to DMA (descriptor setup + core-visible waits).
+    pub fn dma_cycles(&self) -> u64 {
+        self.perf.dma_attributed_cycles()
+    }
+
+    /// Compute cycles = device − DMA-attributable.
+    pub fn compute_cycles(&self) -> u64 {
+        self.device_cycles.saturating_sub(self.dma_cycles())
+    }
+}
+
+/// A submitted registry workload: the launch plus its argument buffers (in
+/// the workload's array order), for reading outputs back after the wait.
+#[derive(Debug, Clone)]
+pub struct WorkloadRun {
+    pub launch: Launch,
+    pub buffers: Vec<Buffer>,
+}
+
+/// A completed registry workload (see [`Session::run_workload`]).
+#[derive(Debug, Clone)]
+pub struct WorkloadOutcome {
+    pub result: LaunchResult,
+    /// Final contents of every array, in the workload's array order.
+    pub arrays: Vec<Vec<f32>>,
+    pub buffers: Vec<Buffer>,
+}
+
+/// Everything a deferred single-backend launch needs to execute.
+struct SingleSpec {
+    kernel: Kernel,
+    autodma: bool,
+    args: Vec<usize>,
+    inputs: Vec<Vec<f32>>,
+    fargs: Vec<f32>,
+    teams: usize,
+    threads: u32,
+    max_cycles: u64,
+}
+
+enum LaunchState {
+    /// Queued on a single session; executes at wait (async by default).
+    PendingSingle(Box<SingleSpec>),
+    /// Submitted to the pooled scheduler.
+    PendingPool { handle: JobHandle, args: Vec<usize> },
+    Done(Box<LaunchResult>),
+    Failed(String),
+}
+
+enum Backend {
+    Single { cfg: HeroConfig, cache: BinaryCache },
+    Pool { sched: Scheduler },
+}
+
+/// The unified offload session. See the [`session`](crate::session)
+/// module docs for the full tour.
+pub struct Session {
+    buffers: Vec<Vec<f32>>,
+    launches: Vec<LaunchState>,
+    backend: Backend,
+}
+
+impl Session {
+    /// A session over one accelerator of configuration `cfg`.
+    pub fn single(cfg: HeroConfig) -> Session {
+        Session {
+            buffers: Vec::new(),
+            launches: Vec::new(),
+            backend: Backend::Single { cfg, cache: BinaryCache::new(true) },
+        }
+    }
+
+    /// A session over a pool of `k` identical instances of `cfg` behind the
+    /// offload scheduler (FIFO dispatch, board DRAM from the config). For
+    /// full control over policy, board bandwidth or heterogeneous pools,
+    /// build the [`Scheduler`] yourself and use [`Session::with_scheduler`].
+    pub fn pool(cfg: HeroConfig, k: usize) -> Session {
+        Session::with_scheduler(Scheduler::new(cfg, k, Policy::Fifo))
+    }
+
+    /// A session over an explicitly configured scheduler.
+    pub fn with_scheduler(sched: Scheduler) -> Session {
+        Session {
+            buffers: Vec::new(),
+            launches: Vec::new(),
+            backend: Backend::Pool { sched },
+        }
+    }
+
+    /// The session's base platform configuration.
+    pub fn config(&self) -> &HeroConfig {
+        match &self.backend {
+            Backend::Single { cfg, .. } => cfg,
+            Backend::Pool { sched } => sched.config(),
+        }
+    }
+
+    // --- buffers ---------------------------------------------------------
+
+    /// Allocate a session buffer initialized from `data`.
+    pub fn buffer_from_f32(&mut self, data: &[f32]) -> Buffer {
+        self.buffers.push(data.to_vec());
+        Buffer { id: self.buffers.len() - 1 }
+    }
+
+    /// Allocate a zero-initialized session buffer of `elems` f32 (outputs).
+    pub fn buffer_zeroed(&mut self, elems: usize) -> Buffer {
+        self.buffers.push(vec![0.0; elems]);
+        Buffer { id: self.buffers.len() - 1 }
+    }
+
+    /// Overwrite a buffer's contents (length may change).
+    pub fn write_f32(&mut self, buf: &Buffer, data: &[f32]) -> Result<()> {
+        ensure!(buf.id < self.buffers.len(), "buffer does not belong to this session");
+        self.buffers[buf.id] = data.to_vec();
+        Ok(())
+    }
+
+    /// Read a buffer's current contents (outputs become visible after the
+    /// producing launch's [`Session::wait`]).
+    pub fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        self.buffers
+            .get(buf.id)
+            .cloned()
+            .ok_or_else(|| anyhow!("buffer does not belong to this session"))
+    }
+
+    /// Read several buffers at once (e.g. a [`WorkloadRun`]'s).
+    pub fn arrays(&self, bufs: &[Buffer]) -> Result<Vec<Vec<f32>>> {
+        bufs.iter().map(|b| self.read_f32(b)).collect()
+    }
+
+    // --- launches --------------------------------------------------------
+
+    /// Start a launch builder over `kernel` (cloned into the launch).
+    pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
+        LaunchBuilder {
+            kernel: kernel.clone(),
+            autodma: false,
+            args: Vec::new(),
+            fargs: Vec::new(),
+            teams: 1,
+            threads: None,
+            max_cycles: LAUNCH_MAX_CYCLES,
+            err: None,
+            session: self,
+        }
+    }
+
+    /// Resolve a launch: execute it (single sessions defer to here; pooled
+    /// sessions drive the scheduler until the job settles), write the
+    /// outputs back into the argument buffers, and return the result.
+    /// Waiting a second time returns the memoized result.
+    pub fn wait(&mut self, launch: &Launch) -> Result<LaunchResult> {
+        ensure!(launch.id < self.launches.len(), "launch does not belong to this session");
+        match &self.launches[launch.id] {
+            LaunchState::Done(r) => return Ok((**r).clone()),
+            LaunchState::Failed(e) => bail!("launch previously failed: {e}"),
+            _ => {}
+        }
+        let state = std::mem::replace(
+            &mut self.launches[launch.id],
+            LaunchState::Failed("launch interrupted mid-wait".into()),
+        );
+        let run = match state {
+            LaunchState::PendingSingle(spec) => self.run_single(*spec),
+            LaunchState::PendingPool { handle, args } => self.finish_pool(handle, &args),
+            LaunchState::Done(_) | LaunchState::Failed(_) => unreachable!("handled above"),
+        };
+        match run {
+            Ok(r) => {
+                self.launches[launch.id] = LaunchState::Done(Box::new(r.clone()));
+                Ok(r)
+            }
+            Err(e) => {
+                self.launches[launch.id] = LaunchState::Failed(e.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    /// The memoized result of an already-waited launch (non-blocking).
+    pub fn poll(&self, launch: &Launch) -> Option<&LaunchResult> {
+        match self.launches.get(launch.id)? {
+            LaunchState::Done(r) => Some(&**r),
+            _ => None,
+        }
+    }
+
+    fn run_single(&mut self, spec: SingleSpec) -> Result<LaunchResult> {
+        let Backend::Single { cfg, cache } = &mut self.backend else {
+            unreachable!("single launches only queue on single sessions")
+        };
+        let content = kernel_content_key(&spec.kernel, spec.autodma);
+        let (lowered, compile_cycles, autodma) =
+            cache.acquire_ir(cfg, &spec.kernel, spec.autodma, spec.threads, content)?;
+        let (result, arrays) = core::run_arrays(
+            cfg,
+            &lowered,
+            &spec.inputs,
+            &spec.fargs,
+            spec.teams,
+            spec.max_cycles,
+        )?;
+        let digest = digest_arrays(&arrays);
+        for (&bid, data) in spec.args.iter().zip(arrays) {
+            self.buffers[bid] = data;
+        }
+        Ok(LaunchResult {
+            device_cycles: result.device_cycles,
+            total_cycles: result.total_cycles,
+            perf: result.perf,
+            digest,
+            instance: None,
+            compile_cycles,
+            autodma,
+        })
+    }
+
+    fn finish_pool(&mut self, handle: JobHandle, args: &[usize]) -> Result<LaunchResult> {
+        let Backend::Pool { sched } = &mut self.backend else {
+            unreachable!("pool launches only queue on pooled sessions")
+        };
+        match sched.wait(handle)? {
+            JobState::Done(_) => {}
+            JobState::Rejected { reason } => bail!("launch rejected by the scheduler: {reason}"),
+            JobState::Split { .. } => bail!("kernel launches never split"),
+            JobState::Queued => unreachable!("wait settles the job"),
+        }
+        // Move the payload out rather than cloning it, so the scheduler
+        // does not retain every launch's data for the session's lifetime.
+        let (arrays, perf) = sched
+            .take_payload(handle)
+            .ok_or_else(|| anyhow!("scheduler returned no arrays for a kernel job"))?;
+        let o = sched.poll(handle).expect("job settled as Done above");
+        let result = LaunchResult {
+            device_cycles: o.device_cycles,
+            total_cycles: o.total_cycles,
+            perf: perf.map(|p| *p).unwrap_or_default(),
+            digest: o.digest,
+            instance: Some(o.instance),
+            compile_cycles: o.compile_cycles,
+            autodma: None,
+        };
+        for (&bid, data) in args.iter().zip(arrays) {
+            self.buffers[bid] = data;
+        }
+        Ok(result)
+    }
+
+    // --- registry workloads ----------------------------------------------
+
+    /// Submit a registry workload: allocate a buffer per array (inputs from
+    /// the workload's deterministic generator at `seed`, outputs zeroed)
+    /// and launch the chosen variant's kernel.
+    pub fn submit_workload(
+        &mut self,
+        w: &Workload,
+        variant: Variant,
+        threads: u32,
+        seed: u64,
+    ) -> Result<WorkloadRun> {
+        let data = w.gen_data(seed);
+        let buffers: Vec<Buffer> = data.iter().map(|d| self.buffer_from_f32(d)).collect();
+        let kernel = variant_kernel(w, variant).clone();
+        let refs: Vec<&Buffer> = buffers.iter().collect();
+        let launch = self
+            .launch(&kernel)
+            .autodma(variant == Variant::AutoDma)
+            .args(&refs)
+            .fargs(&w.fargs)
+            .threads(threads)
+            .submit()?;
+        Ok(WorkloadRun { launch, buffers })
+    }
+
+    /// Submit, wait and read back one registry workload (the synchronous
+    /// convenience the benches use).
+    pub fn run_workload(
+        &mut self,
+        w: &Workload,
+        variant: Variant,
+        threads: u32,
+        seed: u64,
+    ) -> Result<WorkloadOutcome> {
+        let run = self.submit_workload(w, variant, threads, seed)?;
+        let result = self.wait(&run.launch)?;
+        let arrays = self.arrays(&run.buffers)?;
+        Ok(WorkloadOutcome { result, arrays, buffers: run.buffers })
+    }
+
+    // --- named job streams (pooled sessions) -----------------------------
+
+    fn sched(&self) -> Result<&Scheduler> {
+        match &self.backend {
+            Backend::Pool { sched } => Ok(sched),
+            Backend::Single { .. } => bail!("named job streams need a pooled session"),
+        }
+    }
+
+    fn sched_mut(&mut self) -> Result<&mut Scheduler> {
+        match &mut self.backend {
+            Backend::Pool { sched } => Ok(sched),
+            Backend::Single { .. } => bail!("named job streams need a pooled session"),
+        }
+    }
+
+    /// Submit a stream of named synthetic jobs (pooled sessions; the
+    /// `hero serve` path).
+    pub fn submit_jobs(&mut self, jobs: &[JobDesc]) -> Result<Vec<JobHandle>> {
+        Ok(self.sched_mut()?.submit_all(jobs))
+    }
+
+    /// State of a named job handle (pooled sessions).
+    pub fn job_state(&self, h: JobHandle) -> Option<&JobState> {
+        self.sched().ok()?.state(h)
+    }
+
+    /// Run everything outstanding to completion: pooled sessions drain the
+    /// scheduler queue, single sessions execute every pending launch — and
+    /// on both backends every pending [`Launch`] is resolved, exactly as if
+    /// [`Session::wait`] had been called on each (successful launches get
+    /// their outputs written back and [`Session::poll`] returns `Some`).
+    /// A failing launch does not stop the drain: the rest still resolve,
+    /// and the first failure is returned at the end.
+    pub fn drain(&mut self) -> Result<()> {
+        let mut first_err = None;
+        if let Backend::Pool { sched } = &mut self.backend {
+            if let Err(e) = sched.drain() {
+                first_err = Some(e);
+            }
+        }
+        for id in 0..self.launches.len() {
+            if matches!(
+                self.launches[id],
+                LaunchState::PendingSingle(_) | LaunchState::PendingPool { .. }
+            ) {
+                if let Err(e) = self.wait(&Launch { id }) {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Aggregate serve report (pooled sessions).
+    pub fn report(&self) -> Result<ServeReport> {
+        Ok(self.sched()?.report())
+    }
+
+    /// Rendered scheduler event log (pooled sessions).
+    pub fn events(&self) -> Result<String> {
+        Ok(self.sched()?.trace.render())
+    }
+}
+
+/// Builder returned by [`Session::launch`]. Defaults: no AutoDMA, one team,
+/// the configuration's full cluster width as the thread count, and a
+/// 100 G-cycle simulation budget.
+pub struct LaunchBuilder<'s> {
+    session: &'s mut Session,
+    kernel: Kernel,
+    autodma: bool,
+    args: Vec<usize>,
+    fargs: Vec<f32>,
+    teams: usize,
+    threads: Option<u32>,
+    max_cycles: u64,
+    err: Option<String>,
+}
+
+impl LaunchBuilder<'_> {
+    /// Bind the kernel's host-array parameters, in declaration order.
+    pub fn args(mut self, bufs: &[&Buffer]) -> Self {
+        for b in bufs {
+            self = self.arg(b);
+        }
+        self
+    }
+
+    /// Bind the next host-array parameter.
+    pub fn arg(mut self, buf: &Buffer) -> Self {
+        if buf.id >= self.session.buffers.len() {
+            self.err = Some("argument buffer does not belong to this session".into());
+        } else {
+            self.args.push(buf.id);
+        }
+        self
+    }
+
+    /// Bind the kernel's float parameters, in declaration order.
+    pub fn fargs(mut self, fargs: &[f32]) -> Self {
+        self.fargs.extend_from_slice(fargs);
+        self
+    }
+
+    /// Clusters participating in the offload (OpenMP `num_teams`).
+    pub fn teams(mut self, n: usize) -> Self {
+        self.teams = n;
+        self
+    }
+
+    /// OpenMP thread count the kernel is lowered for (clamped to the
+    /// cluster width at compile time).
+    pub fn threads(mut self, t: u32) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    /// Run the AutoDMA tiling pass before lowering (for kernels written in
+    /// plain OpenMP form).
+    pub fn autodma(mut self, on: bool) -> Self {
+        self.autodma = on;
+        self
+    }
+
+    /// Override the simulation budget for this launch.
+    pub fn max_cycles(mut self, cycles: u64) -> Self {
+        self.max_cycles = cycles;
+        self
+    }
+
+    /// Submit the launch: snapshots the argument buffers and returns an
+    /// async [`Launch`] handle (resolve with [`Session::wait`]).
+    pub fn submit(self) -> Result<Launch> {
+        if let Some(e) = self.err {
+            bail!("{e}");
+        }
+        let threads = self
+            .threads
+            .unwrap_or_else(|| self.session.config().accel.cores_per_cluster as u32);
+        let inputs: Vec<Vec<f32>> =
+            self.args.iter().map(|&id| self.session.buffers[id].clone()).collect();
+        // One shared guard with `Scheduler::submit_kernel`: parameter
+        // counts and declared-constant extents vs the snapshot (an
+        // undersized buffer would let the device read past it).
+        if let Err(e) = crate::sched::job::validate_payload(&self.kernel, &inputs, &self.fargs) {
+            bail!("{e}");
+        }
+        let state = match &mut self.session.backend {
+            Backend::Single { .. } => LaunchState::PendingSingle(Box::new(SingleSpec {
+                kernel: self.kernel,
+                autodma: self.autodma,
+                args: self.args,
+                inputs,
+                fargs: self.fargs,
+                teams: self.teams,
+                threads,
+                max_cycles: self.max_cycles,
+            })),
+            Backend::Pool { sched } => {
+                let mut job = KernelJob::new(self.kernel, inputs, self.fargs);
+                job.threads = threads;
+                job.teams = self.teams;
+                job.autodma = self.autodma;
+                job.max_cycles = self.max_cycles;
+                let handle = sched.submit_kernel(job);
+                LaunchState::PendingPool { handle, args: self.args }
+            }
+        };
+        self.session.launches.push(state);
+        Ok(Launch { id: self.session.launches.len() - 1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ir::*;
+    use crate::config::aurora;
+    use crate::workloads;
+
+    fn scale_kernel(n: i32) -> Kernel {
+        let mut b = KernelBuilder::new("scale2");
+        let x = b.host_array("X", vec![ci(n)]);
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            ci(n),
+            vec![st(x, vec![var(i)], ld(x, vec![var(i)]).mul(cf(2.0)))],
+        )])
+    }
+
+    #[test]
+    fn single_launch_roundtrip() {
+        let mut sess = Session::single(aurora());
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let x = sess.buffer_from_f32(&data);
+        let launch = sess.launch(&scale_kernel(64)).args(&[&x]).submit().unwrap();
+        // Async by default: the buffer is untouched until the wait.
+        assert_eq!(sess.read_f32(&x).unwrap(), data);
+        assert!(sess.poll(&launch).is_none());
+        let res = sess.wait(&launch).unwrap();
+        assert!(res.device_cycles > 0);
+        assert!(res.total_cycles > res.device_cycles);
+        assert!(res.compile_cycles > 0);
+        assert_eq!(res.instance, None);
+        let got = sess.read_f32(&x).unwrap();
+        for i in 0..64 {
+            assert_eq!(got[i], 2.0 * i as f32, "x[{i}]");
+        }
+        // Waiting again returns the memoized result.
+        let again = sess.wait(&launch).unwrap();
+        assert_eq!(again.digest, res.digest);
+        assert!(sess.poll(&launch).is_some());
+    }
+
+    #[test]
+    fn repeated_launches_hit_the_binary_cache() {
+        let mut sess = Session::single(aurora());
+        let x = sess.buffer_from_f32(&[1.0; 32]);
+        let l1 = sess.launch(&scale_kernel(32)).args(&[&x]).submit().unwrap();
+        let r1 = sess.wait(&l1).unwrap();
+        let l2 = sess.launch(&scale_kernel(32)).args(&[&x]).submit().unwrap();
+        let r2 = sess.wait(&l2).unwrap();
+        assert!(r1.compile_cycles > 0);
+        assert_eq!(r2.compile_cycles, 0, "structurally identical kernel must hit");
+        // The second launch consumed the first one's output (4.0 = 1*2*2).
+        assert_eq!(sess.read_f32(&x).unwrap()[0], 4.0);
+    }
+
+    #[test]
+    fn misuse_is_an_error_not_a_panic() {
+        let mut sess = Session::single(aurora());
+        let foreign = Buffer { id: 99 };
+        assert!(sess.read_f32(&foreign).is_err());
+        assert!(sess.write_f32(&foreign, &[0.0]).is_err());
+        assert!(sess.launch(&scale_kernel(8)).arg(&foreign).submit().is_err());
+        // Undersized buffer for a constant-extent array.
+        let small = sess.buffer_from_f32(&[0.0; 4]);
+        let err = sess.launch(&scale_kernel(8)).args(&[&small]).submit().unwrap_err();
+        assert!(err.to_string().contains("8 element(s)"), "{err}");
+        // Arity mismatch is caught at submit (the shared payload guard).
+        let err = sess.launch(&scale_kernel(8)).submit().unwrap_err();
+        assert!(err.to_string().contains("array parameter"), "{err}");
+        // Foreign launch handle.
+        assert!(sess.wait(&Launch { id: 42 }).is_err());
+        assert!(sess.poll(&Launch { id: 42 }).is_none());
+        // Named streams are a pooled-session feature.
+        assert!(sess.submit_jobs(&[]).is_err());
+        assert!(sess.report().is_err());
+    }
+
+    #[test]
+    fn workload_launch_verifies_and_reports_autodma() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let mut sess = Session::single(cfg);
+        let out = sess.run_workload(&w, Variant::AutoDma, 8, 7).unwrap();
+        crate::bench_harness::verify_arrays(&w, &out.arrays, 7).unwrap();
+        assert!(out.result.autodma.is_some(), "AutoDma compile must surface its report");
+        assert!(out.result.dma_cycles() > 0);
+        assert!(out.result.compute_cycles() < out.result.device_cycles);
+    }
+
+    #[test]
+    fn pool_session_runs_kernels_and_streams() {
+        let mut sess = Session::pool(aurora(), 2);
+        let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let x = sess.buffer_from_f32(&data);
+        let launch = sess.launch(&scale_kernel(32)).args(&[&x]).submit().unwrap();
+        let res = sess.wait(&launch).unwrap();
+        assert_eq!(res.instance, Some(0));
+        assert_eq!(sess.read_f32(&x).unwrap()[3], 6.0);
+        // Named streams ride the same session.
+        let handles = sess
+            .submit_jobs(&crate::workloads::synth::tiny_jobs(3, 9))
+            .unwrap();
+        sess.drain().unwrap();
+        for h in &handles {
+            assert!(sess.job_state(*h).unwrap().settled());
+        }
+        let report = sess.report().unwrap();
+        assert_eq!(report.completed, 4, "kernel launch + 3 named jobs");
+        assert!(sess.events().unwrap().contains("submit"));
+    }
+
+    #[test]
+    fn drain_resolves_pooled_launches() {
+        // drain() must behave identically on both backends: outputs written
+        // back and poll() returning Some without an explicit wait().
+        let mut sess = Session::pool(aurora(), 1);
+        let x = sess.buffer_from_f32(&[1.0; 16]);
+        let l = sess.launch(&scale_kernel(16)).args(&[&x]).submit().unwrap();
+        assert!(sess.poll(&l).is_none());
+        sess.drain().unwrap();
+        assert!(sess.poll(&l).is_some());
+        assert_eq!(sess.read_f32(&x).unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn pool_rejection_surfaces_at_wait() {
+        let mut cfg = aurora();
+        cfg.accel.l1_bytes = 16 * 1024;
+        let sched = Scheduler::new(cfg, 1, Policy::Capacity(crate::sched::OversizeAction::Reject));
+        let mut sess = Session::with_scheduler(sched);
+        let w = workloads::gemm::build(64);
+        let run = sess.submit_workload(&w, Variant::Handwritten, 8, 1).unwrap();
+        let err = sess.wait(&run.launch).unwrap_err();
+        assert!(err.to_string().contains("rejected"), "{err}");
+    }
+}

@@ -174,6 +174,14 @@ impl PerfCounters {
         }
     }
 
+    /// Cycles attributable to DMA: core-visible waits plus a 2-cycle
+    /// descriptor-setup charge per transfer. The single attribution model
+    /// behind `RunOutcome::dma_cycles` and `LaunchResult::dma_cycles`, so
+    /// the dma/compute split agrees across every front door.
+    pub fn dma_attributed_cycles(&self) -> u64 {
+        self.get(Event::DmaWaitCycles) + self.get(Event::DmaTransfers) * 2
+    }
+
     /// Subtract a snapshot (for per-offload deltas).
     pub fn sub(&mut self, other: &PerfCounters) {
         for i in 0..N_EVENTS {

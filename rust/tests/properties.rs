@@ -271,7 +271,7 @@ fn prop_sched_results_identical_across_policies_and_pools() {
                 if r.verify_failures != 0 {
                     return Err(format!("{}: golden-model mismatch", policy.label()));
                 }
-                if handles.iter().any(|h| !s.state(*h).settled()) {
+                if handles.iter().any(|h| !s.state(*h).is_some_and(|st| st.settled())) {
                     return Err(format!("{}: unsettled handle", policy.label()));
                 }
                 digests.push(r.digest);
@@ -315,7 +315,7 @@ fn prop_sched_no_submitted_job_starves() {
             });
             s.drain().map_err(|e| e.to_string())?;
             for id in 0..s.submitted() {
-                if !s.state(JobHandle(id)).settled() {
+                if !s.state(JobHandle(id)).is_some_and(|st| st.settled()) {
                     return Err(format!("job {id} never settled"));
                 }
             }
@@ -426,7 +426,7 @@ fn prop_pool_conserves_dram_beats_and_pool1_matches_uncontended() {
                 return Err("tiled jobs must move DMA bytes".into());
             }
             for i in 0..capped.submitted() {
-                if !capped.state(JobHandle(i)).settled() {
+                if !capped.state(JobHandle(i)).is_some_and(|st| st.settled()) {
                     return Err(format!("job {i} never settled"));
                 }
             }

@@ -1,0 +1,185 @@
+//! API-equivalence tests for the unified `Session` front door: the same
+//! kernel must produce bit-identical outputs (and identical device cycles)
+//! whether it goes through the legacy `omp::offload` path, a single
+//! session, or a pooled session — the session layers move *plumbing*,
+//! never numerics or time.
+
+use herov2::accel::Accel;
+use herov2::bench_harness::{self, verify_arrays, Variant};
+use herov2::compiler::{compile, ir::*, LowerOpts};
+use herov2::config::aurora;
+use herov2::host::{HostBuf, HostContext};
+use herov2::runtime::omp::offload;
+use herov2::sched::{digest_arrays, BoardSpec, JobHandle, Policy, Scheduler};
+use herov2::workloads::{self, gen_f32, synth};
+use herov2::Session;
+
+/// `y[i] = a*x[i] + y[i]` built with the public `KernelBuilder` — an
+/// arbitrary kernel, not a `workloads::by_name` entry.
+fn saxpy(n: i32) -> Kernel {
+    let mut b = KernelBuilder::new("saxpy_equiv");
+    let x = b.host_array("X", vec![ci(n)]);
+    let y = b.host_array("Y", vec![ci(n)]);
+    let a = b.float_param("a");
+    let i = b.loop_var("i");
+    b.body(vec![par_for(
+        i,
+        ci(0),
+        ci(n),
+        vec![st(y, vec![var(i)], var(a).mul(ld(x, vec![var(i)])).add(ld(y, vec![var(i)])))],
+    )])
+}
+
+#[test]
+fn session_single_matches_legacy_omp_offload() {
+    let cfg = aurora();
+    let n = 256usize;
+    let xs = gen_f32(11, n);
+    let ys = gen_f32(12, n);
+
+    // Legacy path: compile by hand, thread `&mut Accel` through everything.
+    let (lowered, _) = compile(&saxpy(n as i32), &LowerOpts::for_config(&cfg), None).unwrap();
+    let mut accel = Accel::new(cfg.clone(), 1 << 20);
+    let mut host = HostContext::new();
+    let xb = host.alloc(&mut accel, n).unwrap();
+    let yb = host.alloc(&mut accel, n).unwrap();
+    host.write_f32(&mut accel, &xb, &xs);
+    host.write_f32(&mut accel, &yb, &ys);
+    let bufs: Vec<&HostBuf> = vec![&xb, &yb];
+    let legacy = offload(&mut accel, &lowered, &bufs, &[3.0], 1, 100_000_000_000).unwrap();
+    let legacy_arrays = vec![host.read_f32(&accel, &xb), host.read_f32(&accel, &yb)];
+    let legacy_digest = digest_arrays(&legacy_arrays);
+
+    // Session path: same kernel, same data, no plumbing.
+    let mut sess = Session::single(cfg);
+    let sx = sess.buffer_from_f32(&xs);
+    let sy = sess.buffer_from_f32(&ys);
+    let launch = sess.launch(&saxpy(n as i32)).args(&[&sx, &sy]).fargs(&[3.0]).submit().unwrap();
+    let res = sess.wait(&launch).unwrap();
+
+    assert_eq!(res.digest, legacy_digest, "outputs must be bit-identical");
+    assert_eq!(res.device_cycles, legacy.device_cycles, "device cycles must be identical");
+    assert_eq!(res.total_cycles, legacy.total_cycles);
+    assert_eq!(sess.read_f32(&sy).unwrap(), legacy_arrays[1]);
+}
+
+#[test]
+fn session_workload_matches_bench_harness() {
+    let cfg = aurora();
+    let seed = 21;
+    for (w, variant) in [
+        (workloads::gemm::build(16), Variant::Handwritten),
+        (workloads::atax::build(24), Variant::AutoDma),
+    ] {
+        let legacy =
+            bench_harness::run_workload(&cfg, &w, variant, 8, seed, 100_000_000_000).unwrap();
+        let mut sess = Session::single(cfg.clone());
+        let out = sess.run_workload(&w, variant, 8, seed).unwrap();
+        verify_arrays(&w, &out.arrays, seed).unwrap();
+        assert_eq!(
+            digest_arrays(&out.arrays),
+            digest_arrays(&legacy.arrays),
+            "{} {}: session and harness outputs diverge",
+            w.name,
+            variant.label()
+        );
+        assert_eq!(out.result.device_cycles, legacy.result.device_cycles);
+        assert_eq!(out.result.total_cycles, legacy.result.total_cycles);
+    }
+}
+
+#[test]
+fn arbitrary_kernel_pool_matches_single() {
+    // The acceptance bar: a non-registry kernel submitted to a pooled
+    // scheduler produces the same digest (and device cycles) as the
+    // single-accelerator run of the same kernel.
+    let n = 128usize;
+    let xs = gen_f32(31, n);
+    let ys = gen_f32(32, n);
+    let run = |sess: &mut Session| {
+        let sx = sess.buffer_from_f32(&xs);
+        let sy = sess.buffer_from_f32(&ys);
+        let launch =
+            sess.launch(&saxpy(n as i32)).args(&[&sx, &sy]).fargs(&[0.5]).submit().unwrap();
+        let res = sess.wait(&launch).unwrap();
+        (res, sess.read_f32(&sy).unwrap())
+    };
+    let (single, single_y) = run(&mut Session::single(aurora()));
+    let (pooled, pooled_y) = run(&mut Session::pool(aurora(), 3));
+    assert_eq!(single.digest, pooled.digest);
+    assert_eq!(single.device_cycles, pooled.device_cycles);
+    assert_eq!(single_y, pooled_y);
+    assert_eq!(pooled.instance, Some(0));
+    // And the numerics are right (unfused mul+add on the device).
+    for i in 0..n {
+        assert_eq!(single_y[i], 0.5 * xs[i] + ys[i], "y[{i}]");
+    }
+}
+
+#[test]
+fn pool1_session_matches_uncontended_scheduler_baseline() {
+    // A pooled session at pool=1 is the uncontended scheduler baseline:
+    // same stream, same digest, same makespan, same device cycles.
+    let jobs = synth::tiny_jobs(6, 17);
+
+    let mut base = Scheduler::new(aurora(), 1, Policy::Fifo);
+    base.submit_all(&jobs);
+    base.drain().unwrap();
+    let baseline = base.report();
+
+    let sched =
+        Scheduler::new(aurora(), 1, Policy::Fifo).with_board(BoardSpec::uncontended());
+    let mut sess = Session::with_scheduler(sched);
+    let handles = sess.submit_jobs(&jobs).unwrap();
+    sess.drain().unwrap();
+    let report = sess.report().unwrap();
+
+    assert_eq!(report.digest, baseline.digest);
+    assert_eq!(report.makespan_cycles, baseline.makespan_cycles);
+    assert_eq!(report.total_device_cycles, baseline.total_device_cycles);
+    assert_eq!(report.completed, jobs.len());
+    for h in &handles {
+        assert!(sess.job_state(*h).unwrap().settled());
+    }
+}
+
+#[test]
+fn pooled_kernel_launches_batch_and_cache() {
+    // Two structurally identical custom kernels with different payloads:
+    // one lowering, both complete, outputs independent.
+    let mut sess = Session::pool(aurora(), 2);
+    let n = 64usize;
+    let mk = |sess: &mut Session, seed: u64| {
+        let sx = sess.buffer_from_f32(&gen_f32(seed, n));
+        let sy = sess.buffer_from_f32(&gen_f32(seed ^ 9, n));
+        let launch = sess
+            .launch(&saxpy(n as i32))
+            .args(&[&sx, &sy])
+            .fargs(&[2.0])
+            .submit()
+            .unwrap();
+        (launch, sy)
+    };
+    let (l1, _y1) = mk(&mut sess, 1);
+    let (l2, _y2) = mk(&mut sess, 2);
+    let r1 = sess.wait(&l1).unwrap();
+    let r2 = sess.wait(&l2).unwrap();
+    assert_ne!(r1.digest, r2.digest, "different payloads, different outputs");
+    let report = sess.report().unwrap();
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.cache_misses, 1, "identical kernels share one lowered binary");
+}
+
+#[test]
+fn scheduler_handles_are_bounds_checked() {
+    // Satellite regression: foreign/stale handles return None / error
+    // instead of panicking.
+    let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+    assert!(s.state(JobHandle(123)).is_none());
+    assert!(s.poll(JobHandle(123)).is_none());
+    assert!(s.wait(JobHandle(123)).is_err());
+    let h = s.submit(synth::tiny_jobs(1, 1)[0]);
+    s.drain().unwrap();
+    assert!(s.state(h).unwrap().settled());
+    assert!(s.poll(h).is_some());
+}
