@@ -5,7 +5,11 @@
 //! adds 3 cycles to a remote access; misses are handled in software by the
 //! faulting core or a dedicated core (configurable per offload). All runs
 //! go through the unified `Session` front door.
+//!
+//! Every reported cycle count is deterministic and emitted to
+//! `BENCH_offload.json` for the `bench-gate` CI job.
 
+use herov2::bench_harness::emit::BenchJson;
 use herov2::config::{aurora, MissMode};
 use herov2::host::Mailbox;
 use herov2::trace::Event;
@@ -13,19 +17,24 @@ use herov2::workloads;
 use herov2::{bench_harness::Variant, Session};
 
 fn main() {
+    let mut out = BenchJson::new("offload");
     let cfg = aurora();
-    println!("Offload overhead (mailbox + driver): {} cycles", Mailbox::round_trip_cycles(&cfg));
+    let overhead = Mailbox::round_trip_cycles(&cfg);
+    println!("Offload overhead (mailbox + driver): {overhead} cycles");
+    out.metric("mailbox.round_trip_cycles", overhead);
     println!("\nkernel-size sweep (gemm, handwritten, 8 threads): overhead share");
     let mut sess = Session::single(cfg);
     for n in [8usize, 12, 16, 24, 32, 48] {
         let w = workloads::gemm::build(n);
-        let out = sess.run_workload(&w, Variant::Handwritten, 8, 1).unwrap();
-        let dev = out.result.device_cycles;
-        let tot = out.result.total_cycles;
+        let out_n = sess.run_workload(&w, Variant::Handwritten, 8, 1).unwrap();
+        let dev = out_n.result.device_cycles;
+        let tot = out_n.result.total_cycles;
         println!(
             "  N={n:3}: device {dev:>9} cy, end-to-end {tot:>9} cy, overhead {:.2}%",
             100.0 * (tot - dev) as f64 / tot as f64
         );
+        out.metric(format!("gemm{n}.device_cycles"), dev);
+        out.metric(format!("gemm{n}.total_cycles"), tot);
     }
     println!("\nTLB miss handling (atax unmodified, 8 threads — pointer-heavy):");
     for mode in [MissMode::SelfService, MissMode::DedicatedCore] {
@@ -34,11 +43,19 @@ fn main() {
         cfg.iommu.tlb_entries = 16; // pressure the TLB to expose the modes
         let w = workloads::atax::build(256);
         let mut sess = Session::single(cfg);
-        let out = sess.run_workload(&w, Variant::Unmodified, 8, 1).unwrap();
+        let out_m = sess.run_workload(&w, Variant::Unmodified, 8, 1).unwrap();
+        let misses = out_m.result.perf.get(Event::TlbMiss);
         println!(
-            "  {mode:?}: {} cycles, {} TLB misses",
-            out.result.device_cycles,
-            out.result.perf.get(Event::TlbMiss)
+            "  {mode:?}: {} cycles, {misses} TLB misses",
+            out_m.result.device_cycles
         );
+        let key = match mode {
+            MissMode::SelfService => "tlb.self_service",
+            MissMode::DedicatedCore => "tlb.dedicated_core",
+        };
+        out.metric(format!("{key}.device_cycles"), out_m.result.device_cycles);
+        out.metric(format!("{key}.misses"), misses);
     }
+    let path = out.emit().expect("emit BENCH_offload.json");
+    println!("\nwrote {}", path.display());
 }

@@ -5,7 +5,12 @@
 //! cycles/sec over repeated runs, driving the stack through the `Session`
 //! front door (a fresh session per run keeps the compile inside the timed
 //! region, like the original harness).
+//!
+//! Only the **simulated** cycle counts go to `BENCH_perf_sim.json` — the
+//! wall-clock throughput is machine-dependent and stays out of the
+//! `bench-gate` comparison by design.
 
+use herov2::bench_harness::emit::BenchJson;
 use herov2::bench_harness::stats;
 use herov2::bench_harness::Variant;
 use herov2::config::aurora;
@@ -13,6 +18,7 @@ use herov2::workloads;
 use herov2::Session;
 
 fn main() {
+    let mut out = BenchJson::new("perf_sim");
     let cfg = aurora();
     for (label, w, v, threads) in [
         ("gemm-96-hand-8t", workloads::gemm::build(96), Variant::Handwritten, 8u32),
@@ -32,5 +38,8 @@ fn main() {
             s.median,
             cycles as f64 / s.median / 1e6
         );
+        out.metric(format!("{label}.device_cycles"), cycles);
     }
+    let path = out.emit().expect("emit BENCH_perf_sim.json");
+    println!("\nwrote {}", path.display());
 }

@@ -1,5 +1,6 @@
 //! Scheduler scaling study: pool/cache scaling on an uncontended board,
-//! then shared carrier-board DRAM contention.
+//! shared carrier-board DRAM contention, board-aware placement, and QoS
+//! priority classes.
 //!
 //! ```sh
 //! cargo bench --bench sched
@@ -15,9 +16,28 @@
 //!   DMA-heavy stream scales **sub-linearly**: pool=4 throughput strictly
 //!   between 1x and 4x of pool=1 — while pool=1 stays cycle-identical
 //!   (makespan and digest) to the uncontended baseline.
+//! * On a mixed compute/DMA stream over a bandwidth-constrained board
+//!   with a mixed-width pool (64/32/128-bit instances), pressure-aware
+//!   placement strictly beats earliest-free on makespan at pool 2 and 4 —
+//!   the per-slot window term steers DMA-heavy jobs away from narrow
+//!   instances and the stall probe keeps DRAM windows from stacking —
+//!   while a homogeneous uncontended pool stays **bit-identical** to
+//!   earliest-free (same events, makespan, digest).
+//! * Marking a slice of the stream latency-critical (`Priority::High` +
+//!   priority headroom) improves that slice's p95 turnaround vs the same
+//!   jobs in the same stream unprioritized.
+//!
+//! Every headline number is emitted to `BENCH_sched.json`
+//! (`bench_harness::emit`) for the `bench-gate` CI job: the sim is
+//! deterministic, so any cycle regression or digest drift vs the committed
+//! baseline fails CI exactly.
 
+use herov2::bench_harness::emit::BenchJson;
 use herov2::config::aurora;
-use herov2::sched::{BoardSpec, Policy, Scheduler, ServeReport};
+use herov2::config::preset::with_dma_width;
+use herov2::sched::{
+    BoardSpec, JobHandle, Placement, Policy, Priority, Scheduler, ServeReport,
+};
 use herov2::workloads::synth;
 
 fn run(pool: usize, policy: Policy, cache: bool, batch: bool, jobs: &[synth::JobDesc]) -> ServeReport {
@@ -42,7 +62,24 @@ fn run_board(pool: usize, board: BoardSpec, jobs: &[synth::JobDesc]) -> ServeRep
     s.report()
 }
 
+fn run_placed(
+    pool: usize,
+    placement: Placement,
+    board: BoardSpec,
+    jobs: &[synth::JobDesc],
+) -> Scheduler {
+    let mut s = Scheduler::new(aurora(), pool, Policy::Fifo)
+        .with_placement(placement)
+        .with_board(board)
+        .with_batching(false)
+        .with_verify(false);
+    s.submit_all(jobs);
+    s.drain().expect("drain");
+    s
+}
+
 fn main() {
+    let mut out = BenchJson::new("sched");
     let jobs = synth::mixed_jobs(48, 7);
     println!("{} mixed jobs (8 kernels, 3 tiled variants, 2 sizes each)\n", jobs.len());
     println!(
@@ -52,12 +89,12 @@ fn main() {
 
     let mut baseline = None;
     let mut scaled = None;
-    for (label, pool, policy, cache, batch) in [
-        ("pool=1 fifo uncached", 1usize, Policy::Fifo, false, false),
-        ("pool=1 fifo cached", 1, Policy::Fifo, true, true),
-        ("pool=2 fifo cached", 2, Policy::Fifo, true, true),
-        ("pool=4 fifo cached", 4, Policy::Fifo, true, true),
-        ("pool=4 sjf cached", 4, Policy::Sjf, true, true),
+    for (label, key, pool, policy, cache, batch) in [
+        ("pool=1 fifo uncached", "mixed.pool1_uncached", 1usize, Policy::Fifo, false, false),
+        ("pool=1 fifo cached", "mixed.pool1_cached", 1, Policy::Fifo, true, true),
+        ("pool=2 fifo cached", "mixed.pool2_cached", 2, Policy::Fifo, true, true),
+        ("pool=4 fifo cached", "mixed.pool4_cached", 4, Policy::Fifo, true, true),
+        ("pool=4 sjf cached", "mixed.pool4_sjf", 4, Policy::Sjf, true, true),
     ] {
         let r = run(pool, policy, cache, batch, &jobs);
         assert_eq!(r.completed, jobs.len(), "{label}: all jobs must complete");
@@ -68,6 +105,7 @@ fn main() {
             r.compile_cycles,
             r.cache_misses
         );
+        out.metric(format!("{key}.makespan_cycles"), r.makespan_cycles);
         if pool == 1 && !cache {
             baseline = Some(r);
         } else if pool == 4 && policy == Policy::Fifo {
@@ -81,6 +119,7 @@ fn main() {
         baseline.digest, scaled.digest,
         "job results must be bit-identical across scheduler configurations"
     );
+    out.digest("mixed.digest", baseline.digest);
     let speedup = scaled.jobs_per_mcycle() / baseline.jobs_per_mcycle();
     println!(
         "\npool=4 + binary cache vs pool=1 uncached: {speedup:.2}x simulated throughput \
@@ -112,6 +151,8 @@ fn main() {
             r.dram_stall_cycles,
             100.0 * r.dram_utilization
         );
+        out.metric(format!("heavy.pool{pool}.makespan_cycles"), r.makespan_cycles);
+        out.metric(format!("heavy.pool{pool}.dram_stall_cycles"), r.dram_stall_cycles);
         contended.push(r);
     }
     let solo = &contended[0];
@@ -126,6 +167,7 @@ fn main() {
     // Contention never touches numerics.
     assert_eq!(quad.digest, solo.digest);
     assert!(quad.dram_stall_cycles > 0, "a DMA-heavy pool=4 stream must contend");
+    out.digest("heavy.digest", solo.digest);
     let sp = quad.jobs_per_mcycle() / solo.jobs_per_mcycle();
     println!(
         "\npool=4 vs pool=1 on the contended board: {sp:.2}x \
@@ -134,4 +176,142 @@ fn main() {
     assert!(sp > 1.0, "pool=4 regressed below pool=1: {sp:.2}x");
     assert!(sp < 4.0, "pool=4 scaled linearly despite DRAM contention: {sp:.2}x");
     println!("shared-DRAM contention bends pool scaling sub-linear: OK");
+
+    // --- board-aware placement: pressure vs earliest-free -----------------
+    // A mixed compute/DMA stream on a *mixed-width* pool (64/32/128-bit
+    // wide-NoC instances — the `--mixed-widths` heterogeneity) over a
+    // bandwidth-constrained board. A DMA-heavy job on the 32-bit instance
+    // drains at 4 B/cycle — nearly double the occupancy it has on the
+    // 64-bit slot — and earliest-free placement is blind to that.
+    // Pressure placement's window term (bytes over the slot's drain rate)
+    // steers DMA-heavy jobs onto wide slots and fills the narrow slot with
+    // compute-heavy work, and its stall probe keeps their DRAM windows
+    // from stacking. (Digests legitimately differ across placements here:
+    // a different instance width tiles a job differently.)
+    let mix = synth::pressure_mix_jobs(32, 13);
+    let bw_mix = 12u64;
+    let widths = [64u32, 32, 128];
+    println!(
+        "\n{} mixed compute/DMA jobs, mixed-width pool, board DRAM at {bw_mix} B/cycle\n",
+        mix.len()
+    );
+    println!(
+        "{:<30} {:>14} {:>14} {:>12}",
+        "configuration", "makespan (cy)", "dram stall cy", "util inst0"
+    );
+    let run_mixed = |pool: usize, placement: Placement| {
+        let cfgs: Vec<_> =
+            (0..pool).map(|i| with_dma_width(&aurora(), widths[i % widths.len()])).collect();
+        let mut s = Scheduler::new_heterogeneous(cfgs, Policy::Fifo)
+            .with_placement(placement)
+            .with_board(BoardSpec::with_bandwidth(bw_mix))
+            .with_batching(false)
+            .with_verify(false);
+        s.submit_all(&mix);
+        s.drain().expect("drain");
+        s.report()
+    };
+    for pool in [2usize, 4] {
+        let ef = run_mixed(pool, Placement::EarliestFree);
+        let pr = run_mixed(pool, Placement::Pressure);
+        for r in [&ef, &pr] {
+            assert_eq!(r.completed, mix.len());
+            println!(
+                "pool={pool} {:<22} {:>14} {:>14} {:>11.1}%",
+                r.placement,
+                r.makespan_cycles,
+                r.dram_stall_cycles,
+                100.0 * r.instances[0].utilization
+            );
+        }
+        assert!(
+            pr.makespan_cycles < ef.makespan_cycles,
+            "pool={pool}: pressure placement must strictly beat earliest-free on a \
+             constrained mixed-width board ({} vs {})",
+            pr.makespan_cycles,
+            ef.makespan_cycles
+        );
+        out.metric(format!("mix.pool{pool}.earliest.makespan_cycles"), ef.makespan_cycles);
+        out.metric(format!("mix.pool{pool}.pressure.makespan_cycles"), pr.makespan_cycles);
+        out.metric(format!("mix.pool{pool}.earliest.dram_stall_cycles"), ef.dram_stall_cycles);
+        out.metric(format!("mix.pool{pool}.pressure.dram_stall_cycles"), pr.dram_stall_cycles);
+        if pool == 2 {
+            out.digest("mix.pool2.pressure.digest", pr.digest);
+        }
+    }
+    println!("pressure placement strictly beats earliest-free under contention: OK");
+
+    // On an uncontended board the two placements must be bit-identical —
+    // not just equal makespans: the same dispatch event sequence.
+    let ef = run_placed(4, Placement::EarliestFree, BoardSpec::uncontended(), &mix);
+    let pr = run_placed(4, Placement::Pressure, BoardSpec::uncontended(), &mix);
+    assert_eq!(ef.trace.events, pr.trace.events, "uncontended placement must be bit-identical");
+    let (ref_, rpr) = (ef.report(), pr.report());
+    assert_eq!(ref_.makespan_cycles, rpr.makespan_cycles);
+    assert_eq!(ref_.digest, rpr.digest);
+    out.metric("mix.uncontended.makespan_cycles", rpr.makespan_cycles);
+    println!("uncontended pool is bit-identical to earliest-free: OK");
+
+    // --- QoS: priority class + DRAM headroom ------------------------------
+    // Mark every 4th job of the mix latency-critical and give a
+    // *homogeneous* pool (so priorities cannot touch numerics) a board
+    // with a small priority headroom: those jobs jump the arrived queue
+    // and their DRAM traffic rides the reserved slice.
+    let hi_every = 4;
+    let marked: Vec<synth::JobDesc> = mix
+        .iter()
+        .enumerate()
+        .map(|(i, j)| {
+            let mut j = *j;
+            if i % hi_every == 0 {
+                j.priority = Priority::High;
+            }
+            j
+        })
+        .collect();
+    let board = BoardSpec::with_bandwidth(8).with_priority_headroom(2);
+    let prioritized = run_placed(2, Placement::Pressure, board, &marked);
+    let unprioritized = run_placed(2, Placement::Pressure, board, &mix);
+    let turnaround = |s: &Scheduler, i: usize| {
+        let o = s.poll(JobHandle(i)).expect("mix jobs all complete");
+        o.end - marked[i].arrival
+    };
+    let mut hi_with: Vec<u64> = (0..marked.len())
+        .filter(|i| i % hi_every == 0)
+        .map(|i| turnaround(&prioritized, i))
+        .collect();
+    let mut hi_without: Vec<u64> = (0..marked.len())
+        .filter(|i| i % hi_every == 0)
+        .map(|i| turnaround(&unprioritized, i))
+        .collect();
+    hi_with.sort_unstable();
+    hi_without.sort_unstable();
+    let p95 = |v: &[u64]| herov2::sched::report::percentile(v, 95);
+    let (with_p95, without_p95) = (p95(&hi_with), p95(&hi_without));
+    let r = prioritized.report();
+    let high_class = r.class(Priority::High).expect("high class completed jobs");
+    println!(
+        "\npriority study: {} high jobs | class p50 {} cy, p95 {} cy",
+        high_class.jobs, high_class.p50_turnaround_cycles, high_class.p95_turnaround_cycles
+    );
+    println!(
+        "p95 turnaround of the marked jobs: {with_p95} cy prioritized vs \
+         {without_p95} cy unprioritized"
+    );
+    assert_eq!(
+        r.digest,
+        unprioritized.report().digest,
+        "priorities must never change numerics"
+    );
+    assert!(
+        with_p95 < without_p95,
+        "priority class must improve its p95 turnaround ({with_p95} vs {without_p95})"
+    );
+    out.metric("qos.high.p95_turnaround_cycles", with_p95);
+    out.metric("qos.unprioritized.p95_turnaround_cycles", without_p95);
+    out.metric("qos.high.p50_turnaround_cycles", high_class.p50_turnaround_cycles);
+    println!("priority class improves p95 turnaround: OK");
+
+    let path = out.emit().expect("emit BENCH_sched.json");
+    println!("\nwrote {}", path.display());
 }

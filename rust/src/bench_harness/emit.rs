@@ -1,0 +1,140 @@
+//! Machine-readable bench results for the CI cycle-regression gate.
+//!
+//! Every bench that reports simulated cycle counts also emits a
+//! `BENCH_<name>.json` file via [`BenchJson`]: a flat map of **cycle
+//! metrics** (u64 simulated cycles or counts — never wall-clock) plus
+//! **digests** (u64 bit-identity hashes, rendered as hex strings so JSON
+//! number precision can never corrupt them). The simulator is fully
+//! deterministic, so the `bench-gate` CI job (`src/bin/bench_gate.rs`)
+//! compares fresh emissions against the baselines committed under
+//! `rust/benches/baselines/` **exactly** — any cycle-count regression or
+//! digest drift fails the build, with no noise tolerance to tune.
+//!
+//! Workflow:
+//!
+//! * benches call [`BenchJson::emit`], writing into `$BENCH_JSON_DIR`
+//!   (default `target/bench-json/`);
+//! * `bench_gate check <emitted> <baseline>` fails on regressions/drift,
+//!   and reports improvements as "re-bless suggested";
+//! * `bench_gate bless <emitted> <baseline>` adopts the current numbers as
+//!   the new committed baseline.
+//!
+//! The rendering is deliberately one `"key": value` per line so baseline
+//! diffs in review read like a perf report.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+/// One bench's machine-readable result set. Keys keep insertion order so
+/// the rendered file is stable run to run.
+#[derive(Debug, Default)]
+pub struct BenchJson {
+    name: String,
+    metrics: Vec<(String, u64)>,
+    digests: Vec<(String, u64)>,
+}
+
+/// One-shot form of [`BenchJson`]: write `BENCH_<name>.json` from slices of
+/// cycle metrics and digests. Benches that accumulate results across
+/// sections use the builder instead.
+pub fn emit_json(
+    name: &str,
+    metrics: &[(&str, u64)],
+    digests: &[(&str, u64)],
+) -> std::io::Result<PathBuf> {
+    let mut b = BenchJson::new(name);
+    for (k, v) in metrics {
+        b.metric(*k, *v);
+    }
+    for (k, v) in digests {
+        b.digest(*k, *v);
+    }
+    b.emit()
+}
+
+/// Directory `BENCH_*.json` files are written to: `$BENCH_JSON_DIR`, or
+/// `target/bench-json` relative to the working directory.
+pub fn out_dir() -> PathBuf {
+    std::env::var_os("BENCH_JSON_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("target").join("bench-json"))
+}
+
+impl BenchJson {
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchJson { name: name.into(), ..Default::default() }
+    }
+
+    /// Record a cycle/count metric (simulated cycles, stall totals, job
+    /// counts — anything deterministic; never wall-clock).
+    pub fn metric(&mut self, key: impl Into<String>, value: u64) {
+        self.metrics.push((key.into(), value));
+    }
+
+    /// Record a bit-identity digest (rendered as a hex string).
+    pub fn digest(&mut self, key: impl Into<String>, value: u64) {
+        self.digests.push((key.into(), value));
+    }
+
+    /// Render the JSON document (stable key order, one entry per line).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", self.name));
+        s.push_str("  \"metrics\": {\n");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            let comma = if i + 1 < self.metrics.len() { "," } else { "" };
+            s.push_str(&format!("    \"{k}\": {v}{comma}\n"));
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"digests\": {\n");
+        for (i, (k, v)) in self.digests.iter().enumerate() {
+            let comma = if i + 1 < self.digests.len() { "," } else { "" };
+            s.push_str(&format!("    \"{k}\": \"{v:#018x}\"{comma}\n"));
+        }
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into [`out_dir`], creating it as needed.
+    /// Returns the path written. Benches print it so CI logs show where
+    /// the gate's input came from.
+    pub fn emit(&self) -> std::io::Result<PathBuf> {
+        let dir = out_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_stable_flat_json() {
+        let mut b = BenchJson::new("sched");
+        b.metric("mixed.pool1.makespan_cycles", 123456);
+        b.metric("mixed.pool4.makespan_cycles", 45678);
+        b.digest("mixed.digest", 0xdead_beef);
+        let s = b.render();
+        assert_eq!(s, b.render(), "rendering is deterministic");
+        assert!(s.contains("\"bench\": \"sched\""));
+        assert!(s.contains("    \"mixed.pool1.makespan_cycles\": 123456,\n"));
+        assert!(s.contains("    \"mixed.pool4.makespan_cycles\": 45678\n"));
+        assert!(s.contains("    \"mixed.digest\": \"0x00000000deadbeef\"\n"));
+        // Valid-JSON shape guards: balanced braces, no trailing commas.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert!(!s.contains(",\n  }"));
+    }
+
+    #[test]
+    fn empty_sections_render_as_empty_objects() {
+        let s = BenchJson::new("x").render();
+        assert!(s.contains("\"metrics\": {\n  },"));
+        assert!(s.contains("\"digests\": {\n  }\n"));
+    }
+}

@@ -8,6 +8,7 @@
 //! model (and, when artifacts are built, against the PJRT-executed
 //! JAX/Pallas golden model), and report cycle counts and counter breakdowns.
 
+pub mod emit;
 pub mod figures;
 pub mod stats;
 

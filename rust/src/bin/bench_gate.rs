@@ -1,0 +1,343 @@
+//! `bench_gate` — the CI cycle-regression gate over `BENCH_*.json` files.
+//!
+//! ```text
+//! bench_gate check <emitted-dir> <baseline-dir>   compare a fresh bench
+//!     emission against the committed baselines; exit 1 on any cycle-count
+//!     regression, digest drift, or key-set mismatch
+//! bench_gate bless <emitted-dir> <baseline-dir>   adopt the emitted files
+//!     as the new baseline (then commit them)
+//! ```
+//!
+//! The simulator is deterministic, so `check` compares **exactly**: a
+//! metric higher than its baseline is a regression, a differing digest is
+//! drift, and there is no noise tolerance to tune. A metric *lower* than
+//! its baseline passes with a "re-bless suggested" notice, so improvements
+//! land without friction but are visible in CI logs until the baseline is
+//! refreshed.
+//!
+//! Bootstrapping: a committed baseline may carry `"bootstrap": true`
+//! (hand-seeded values from an environment that could not run the
+//! benches). Against such a file, `check` reports mismatches as warnings
+//! and passes — the gate becomes strict the first time someone runs
+//! `bench_gate bless` and commits the result, which drops the flag because
+//! emitted files never carry it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::exit;
+
+/// Parsed form of one `BENCH_<name>.json` (the exact shape
+/// `herov2::bench_harness::emit::BenchJson` renders).
+#[derive(Debug, Default, PartialEq)]
+struct BenchFile {
+    bench: String,
+    bootstrap: bool,
+    metrics: BTreeMap<String, u64>,
+    digests: BTreeMap<String, String>,
+}
+
+/// Parse the restricted one-entry-per-line JSON the emitter writes. Strict
+/// about what it understands: unknown lines are errors so a corrupted
+/// baseline cannot silently pass the gate.
+fn parse(text: &str) -> Result<BenchFile, String> {
+    #[derive(PartialEq)]
+    enum Section {
+        Top,
+        Metrics,
+        Digests,
+    }
+    let mut f = BenchFile::default();
+    let mut section = Section::Top;
+    for (i, raw) in text.lines().enumerate() {
+        let ln = i + 1;
+        let line = raw.trim();
+        match line {
+            "" | "{" | "}" | "{}" | "}," => {
+                if line == "}" || line == "}," {
+                    section = Section::Top;
+                }
+                continue;
+            }
+            "\"metrics\": {" => {
+                section = Section::Metrics;
+                continue;
+            }
+            "\"digests\": {" => {
+                section = Section::Digests;
+                continue;
+            }
+            _ => {}
+        }
+        let (key, value) = line
+            .strip_prefix('"')
+            .and_then(|r| r.split_once("\":"))
+            .ok_or_else(|| format!("line {ln}: expected `\"key\": value`, got {line:?}"))?;
+        let value = value.trim().trim_end_matches(',').trim();
+        match section {
+            Section::Top => match key {
+                "bench" => f.bench = value.trim_matches('"').to_string(),
+                "bootstrap" => f.bootstrap = value == "true",
+                _ => return Err(format!("line {ln}: unknown top-level key {key:?}")),
+            },
+            Section::Metrics => {
+                let v: u64 = value
+                    .parse()
+                    .map_err(|_| format!("line {ln}: metric {key:?} has non-u64 value"))?;
+                f.metrics.insert(key.to_string(), v);
+            }
+            Section::Digests => {
+                f.digests.insert(key.to_string(), value.trim_matches('"').to_string());
+            }
+        }
+    }
+    if f.bench.is_empty() {
+        return Err("missing \"bench\" name".into());
+    }
+    Ok(f)
+}
+
+fn load(path: &Path) -> Result<BenchFile, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// `BENCH_*.json` paths in `dir`, sorted for stable output.
+fn bench_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("cannot list {}: {e}", dir.display()))?;
+    let mut out: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        })
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+/// Outcome of comparing one bench against its baseline.
+#[derive(Debug, Default)]
+struct Comparison {
+    /// Hard failures: regressions, digest drift, key mismatches.
+    failures: Vec<String>,
+    /// Passing notices: improvements that suggest a re-bless.
+    notices: Vec<String>,
+}
+
+fn compare(emitted: &BenchFile, baseline: &BenchFile) -> Comparison {
+    let mut c = Comparison::default();
+    for (key, &base) in &baseline.metrics {
+        match emitted.metrics.get(key) {
+            None => c.failures.push(format!("metric {key}: missing from the fresh run")),
+            Some(&now) if now > base => c.failures.push(format!(
+                "metric {key}: REGRESSION {base} -> {now} (+{})",
+                now - base
+            )),
+            Some(&now) if now < base => c.notices.push(format!(
+                "metric {key}: improved {base} -> {now} (-{}); re-bless to lock in",
+                base - now
+            )),
+            Some(_) => {}
+        }
+    }
+    for key in emitted.metrics.keys() {
+        if !baseline.metrics.contains_key(key) {
+            c.failures.push(format!("metric {key}: not in the baseline (bless to adopt)"));
+        }
+    }
+    for (key, base) in &baseline.digests {
+        match emitted.digests.get(key) {
+            None => c.failures.push(format!("digest {key}: missing from the fresh run")),
+            Some(now) if now != base => {
+                c.failures.push(format!("digest {key}: DRIFT {base} -> {now}"))
+            }
+            Some(_) => {}
+        }
+    }
+    for key in emitted.digests.keys() {
+        if !baseline.digests.contains_key(key) {
+            c.failures.push(format!("digest {key}: not in the baseline (bless to adopt)"));
+        }
+    }
+    c
+}
+
+fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
+    let baselines = bench_files(baseline_dir)?;
+    if baselines.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json baselines in {} — run the benches and `bench_gate bless`",
+            baseline_dir.display()
+        ));
+    }
+    let mut failed = false;
+    for bpath in &baselines {
+        let name = bpath.file_name().unwrap().to_string_lossy().into_owned();
+        let baseline = load(bpath)?;
+        let epath = emitted_dir.join(&name);
+        if !epath.exists() {
+            println!("FAIL {name}: bench was not run (no {})", epath.display());
+            failed = true;
+            continue;
+        }
+        let emitted = load(&epath)?;
+        let c = compare(&emitted, &baseline);
+        for n in &c.notices {
+            println!("note {name}: {n}");
+        }
+        if c.failures.is_empty() {
+            println!(
+                "ok   {name}: {} metrics, {} digests",
+                baseline.metrics.len(),
+                baseline.digests.len()
+            );
+        } else if baseline.bootstrap {
+            // Hand-seeded baseline: report, demand a bless, but do not
+            // block CI on numbers no machine ever measured.
+            for f in &c.failures {
+                println!("warn {name} (bootstrap baseline): {f}");
+            }
+            println!(
+                "warn {name}: baseline is bootstrap-seeded — run `bench_gate bless {} {}` \
+                 and commit to make the gate strict",
+                emitted_dir.display(),
+                baseline_dir.display()
+            );
+        } else {
+            for f in &c.failures {
+                println!("FAIL {name}: {f}");
+            }
+            failed = true;
+        }
+    }
+    // Emitted benches with no baseline at all must be blessed explicitly.
+    for epath in bench_files(emitted_dir)? {
+        let name = epath.file_name().unwrap().to_string_lossy().into_owned();
+        if !baseline_dir.join(&name).exists() {
+            println!("FAIL {name}: emitted but has no committed baseline (bless to adopt)");
+            failed = true;
+        }
+    }
+    Ok(if failed { 1 } else { 0 })
+}
+
+fn bless(emitted_dir: &Path, baseline_dir: &Path) -> Result<(), String> {
+    let emitted = bench_files(emitted_dir)?;
+    if emitted.is_empty() {
+        return Err(format!(
+            "nothing to bless: no BENCH_*.json in {} (run the benches first)",
+            emitted_dir.display()
+        ));
+    }
+    std::fs::create_dir_all(baseline_dir)
+        .map_err(|e| format!("cannot create {}: {e}", baseline_dir.display()))?;
+    for epath in emitted {
+        load(&epath)?; // refuse to bless something the gate cannot parse
+        let name = epath.file_name().unwrap().to_string_lossy().into_owned();
+        let dst = baseline_dir.join(&name);
+        std::fs::copy(&epath, &dst)
+            .map_err(|e| format!("cannot copy {} -> {}: {e}", epath.display(), dst.display()))?;
+        println!("blessed {}", dst.display());
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let usage = "usage: bench_gate <check|bless> <emitted-dir> <baseline-dir>";
+    let (cmd, emitted, baseline) = match args.as_slice() {
+        [c, e, b] => (c.as_str(), PathBuf::from(e), PathBuf::from(b)),
+        _ => {
+            eprintln!("{usage}");
+            exit(2);
+        }
+    };
+    let outcome = match cmd {
+        "check" => check(&emitted, &baseline),
+        "bless" => bless(&emitted, &baseline).map(|()| 0),
+        _ => {
+            eprintln!("{usage}");
+            exit(2);
+        }
+    };
+    match outcome {
+        Ok(code) => exit(code),
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "bench": "sched",
+  "metrics": {
+    "mixed.pool1.makespan_cycles": 1000,
+    "mixed.pool4.makespan_cycles": 400
+  },
+  "digests": {
+    "mixed.digest": "0x00000000deadbeef"
+  }
+}
+"#;
+
+    #[test]
+    fn parses_the_emitter_format() {
+        let f = parse(SAMPLE).unwrap();
+        assert_eq!(f.bench, "sched");
+        assert!(!f.bootstrap);
+        assert_eq!(f.metrics["mixed.pool1.makespan_cycles"], 1000);
+        assert_eq!(f.metrics["mixed.pool4.makespan_cycles"], 400);
+        assert_eq!(f.digests["mixed.digest"], "0x00000000deadbeef");
+        // Round-trips through the real emitter.
+        let mut b = herov2::bench_harness::emit::BenchJson::new("sched");
+        b.metric("mixed.pool1.makespan_cycles", 1000);
+        b.metric("mixed.pool4.makespan_cycles", 400);
+        b.digest("mixed.digest", 0xdead_beef);
+        assert_eq!(parse(&b.render()).unwrap(), f);
+    }
+
+    #[test]
+    fn parses_bootstrap_flag_and_rejects_garbage() {
+        let f = parse("{\n  \"bench\": \"x\",\n  \"bootstrap\": true,\n  \"metrics\": {\n  },\n  \"digests\": {\n  }\n}\n").unwrap();
+        assert!(f.bootstrap);
+        assert!(parse("{\n  \"metrics\": {\n  }\n}\n").is_err(), "missing bench name");
+        assert!(parse("{\n  \"bench\": \"x\",\n  \"metrics\": {\n    \"k\": oops\n  }\n}\n").is_err());
+        assert!(parse("{\n  \"bench\": \"x\",\n  \"surprise\": 1\n}\n").is_err());
+    }
+
+    #[test]
+    fn compare_flags_regressions_drift_and_key_mismatches() {
+        let base = parse(SAMPLE).unwrap();
+        let mut good = parse(SAMPLE).unwrap();
+        let c = compare(&good, &base);
+        assert!(c.failures.is_empty() && c.notices.is_empty());
+        // Improvement: notice, not failure.
+        good.metrics.insert("mixed.pool4.makespan_cycles".into(), 300);
+        let c = compare(&good, &base);
+        assert!(c.failures.is_empty());
+        assert_eq!(c.notices.len(), 1);
+        // Regression.
+        good.metrics.insert("mixed.pool4.makespan_cycles".into(), 500);
+        let c = compare(&good, &base);
+        assert!(c.failures.iter().any(|f| f.contains("REGRESSION")));
+        // Digest drift.
+        let mut drift = parse(SAMPLE).unwrap();
+        drift.digests.insert("mixed.digest".into(), "0x0000000000000001".into());
+        assert!(compare(&drift, &base).failures.iter().any(|f| f.contains("DRIFT")));
+        // Key-set mismatches in both directions.
+        let mut missing = parse(SAMPLE).unwrap();
+        missing.metrics.remove("mixed.pool1.makespan_cycles");
+        missing.metrics.insert("new.metric".into(), 1);
+        let c = compare(&missing, &base);
+        assert!(c.failures.iter().any(|f| f.contains("missing from the fresh run")));
+        assert!(c.failures.iter().any(|f| f.contains("not in the baseline")));
+    }
+}

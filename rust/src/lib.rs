@@ -57,9 +57,14 @@
 //! stall) and pool-scaling curves bend realistically; pools may be
 //! heterogeneous (mixed wide-NoC widths via
 //! [`config::preset::with_dma_width`]) and SJF ordering is
-//! contention-aware. Front-ends: the `hero serve` CLI subcommand (synthetic
-//! streams or `--trace` replay), the job generators in [`workloads::synth`],
-//! and `benches/sched.rs`.
+//! contention-aware. Placement is board-aware too:
+//! [`sched::Placement::Pressure`] scores candidate instances by predicted
+//! finish time including DRAM stall (bit-identical to earliest-free on an
+//! uncontended board), and jobs carry a QoS class ([`sched::Priority`])
+//! that jumps the queue and reserves DRAM into the board's priority
+//! headroom. Front-ends: the `hero serve` CLI subcommand (synthetic
+//! streams or `--trace` replay; `--placement`, `--priority-headroom`), the
+//! job generators in [`workloads::synth`], and `benches/sched.rs`.
 
 pub mod accel;
 pub mod bench_harness;

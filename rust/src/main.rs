@@ -20,9 +20,14 @@
 //!     --jobs N                        synthetic jobs in the stream (default 100)
 //!     --trace FILE                    replay a job trace instead of the
 //!                                     synthetic stream (lines:
-//!                                     `arrival kernel size [variant] [threads] [seed]`)
+//!                                     `arrival kernel size [variant] [threads] [seed] [priority]`)
 //!     --pool K                        accelerator instances (default 4)
 //!     --policy fifo|sjf|capacity|cap-reject    dispatch policy (default fifo)
+//!     --placement earliest|pressure   placement engine (default earliest;
+//!                                     pressure scores slots by predicted
+//!                                     finish incl. board DRAM stall)
+//!     --priority-headroom B           bytes/cycle of board DRAM reachable
+//!                                     only by priority-class jobs (default 0)
 //!     --seed S                        stream seed (default 42)
 //!     --board-bw B                    shared board DRAM bandwidth in
 //!                                     bytes/cycle (default: config
@@ -232,7 +237,7 @@ fn cmd_run(raw: &[String]) -> i32 {
 
 fn cmd_serve(raw: &[String]) -> i32 {
     use herov2::config::preset::with_dma_width;
-    use herov2::sched::{BoardSpec, Policy, Scheduler};
+    use herov2::sched::{BoardSpec, Placement, Policy, Scheduler};
     use herov2::workloads::synth;
 
     const SPEC: cli::Spec = cli::Spec {
@@ -244,7 +249,17 @@ fn cmd_serve(raw: &[String]) -> i32 {
             "--no-verify",
             "--no-xpulp",
         ],
-        opts: &["--board-bw", "--config", "--jobs", "--policy", "--pool", "--seed", "--trace"],
+        opts: &[
+            "--board-bw",
+            "--config",
+            "--jobs",
+            "--placement",
+            "--policy",
+            "--pool",
+            "--priority-headroom",
+            "--seed",
+            "--trace",
+        ],
         max_positional: 0,
     };
     let args = parse_args(&SPEC, raw);
@@ -257,6 +272,12 @@ fn cmd_serve(raw: &[String]) -> i32 {
         eprintln!("unknown policy {policy_arg:?} (fifo|sjf|capacity|cap-reject)");
         return 2;
     };
+    let placement_arg = args.opt("--placement").unwrap_or("earliest");
+    let Some(placement) = Placement::parse(placement_arg) else {
+        eprintln!("unknown placement {placement_arg:?} (earliest|pressure)");
+        return 2;
+    };
+    let headroom: u64 = opt_or(&args, "--priority-headroom", 0);
     if pool == 0 {
         eprintln!("--pool must be at least 1");
         return 2;
@@ -284,13 +305,31 @@ fn cmd_serve(raw: &[String]) -> i32 {
         None => synth::mixed_jobs(jobs, seed),
     };
     println!(
-        "serving {} jobs on {} (pool {}, policy {}, seed {seed})",
+        "serving {} jobs on {} (pool {}, policy {}, placement {}, seed {seed})",
         stream.len(),
         cfg.name,
         pool,
-        policy.label()
+        policy.label(),
+        placement.label()
     );
-    let mut sched = if args.flag("--mixed-widths") {
+    let board = match args.parsed::<u64>("--board-bw") {
+        Ok(Some(bw)) => BoardSpec::with_bandwidth(bw),
+        Ok(None) => BoardSpec::from_config(&cfg),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    .with_priority_headroom(headroom);
+    if headroom >= board.dram_bytes_per_cycle {
+        eprintln!(
+            "--priority-headroom {headroom} must be below the board bandwidth ({} B/cycle); \
+             it would throttle all normal traffic to 1 B/cycle",
+            board.dram_bytes_per_cycle
+        );
+        return 2;
+    }
+    let sched = if args.flag("--mixed-widths") {
         let widths = [64u32, 32, 128];
         let cfgs: Vec<_> =
             (0..pool).map(|i| with_dma_width(&cfg, widths[i % widths.len()])).collect();
@@ -298,17 +337,11 @@ fn cmd_serve(raw: &[String]) -> i32 {
     } else {
         Scheduler::new(cfg, pool, policy)
     }
+    .with_placement(placement)
+    .with_board(board)
     .with_cache(!args.flag("--no-cache"))
     .with_batching(!args.flag("--no-batch"))
     .with_verify(!args.flag("--no-verify"));
-    match args.parsed::<u64>("--board-bw") {
-        Ok(Some(bw)) => sched = sched.with_board(BoardSpec::with_bandwidth(bw)),
-        Ok(None) => {}
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    }
     // The pooled session is the serve front door.
     let mut sess = Session::with_scheduler(sched);
     let handles = match sess.submit_jobs(&stream) {

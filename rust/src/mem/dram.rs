@@ -13,7 +13,12 @@
 //!   which in the simulator is the rotating per-cycle cluster/core
 //!   arbitration — i.e. round-robin at the cycle level. An optional
 //!   *priority headroom* keeps a slice of the peak free for
-//!   priority-flagged ports (QoS for latency-critical requesters).
+//!   priority-flagged ports (QoS for latency-critical requesters). The
+//!   headroom is not just an accounting knob: the offload scheduler maps
+//!   [`crate::sched::Priority::High`] jobs onto priority reservations
+//!   (`hero serve --priority-headroom`), so latency-critical traffic keeps
+//!   a guaranteed slice of the board peak while normal jobs contend for
+//!   the remainder — the Cheshire-style interconnect QoS split.
 //! * [`SharedDram`] — the board DRAM itself: word storage plus a
 //!   [`BandwidthLedger`] and per-[`DramPort`] accounting (bytes served,
 //!   stall cycles). The accelerator's DMA engines and the narrow
@@ -61,15 +66,22 @@ pub struct PortStats {
 /// Cycle-accounted bandwidth reservations on a link with a peak byte rate.
 ///
 /// The reserved rate over time is kept as a piecewise-constant step
-/// function: sorted `(cycle, rate)` breakpoints, each rate applying until
-/// the next breakpoint (the trailing segment is always back at 0 —
-/// reservations are finite). All arithmetic is integer and deterministic.
+/// function: sorted `(cycle, total rate, normal-class rate)` breakpoints,
+/// each applying until the next breakpoint (the trailing segment is always
+/// back at 0 — reservations are finite). Two class constraints hold at
+/// every cycle: *normal* traffic in aggregate stays within
+/// `peak - priority_headroom`, and *all* traffic stays within `peak` — so
+/// priority reservations are absorbed by the headroom first and only the
+/// spill past it competes with normal traffic, while normal traffic never
+/// reaches the headroom at all. All arithmetic is integer and
+/// deterministic.
 #[derive(Debug, Clone)]
 pub struct BandwidthLedger {
     peak: u64,
     /// Bandwidth normal ports may not use (kept free for priority ports).
     priority_headroom: u64,
-    segs: Vec<(u64, u64)>,
+    /// `(from-cycle, total reserved rate, normal-class reserved rate)`.
+    segs: Vec<(u64, u64, u64)>,
     total_bytes: u64,
 }
 
@@ -95,36 +107,40 @@ impl BandwidthLedger {
         self.total_bytes
     }
 
-    /// Reserved rate at cycle `t` and the cycle where the current segment
-    /// ends (`u64::MAX` for the trailing free segment).
-    fn rate_and_end_at(&self, t: u64) -> (u64, u64) {
+    /// Total and normal-class reserved rates at cycle `t`, plus the cycle
+    /// where the current segment ends (`u64::MAX` for the trailing free
+    /// segment).
+    fn rates_and_end_at(&self, t: u64) -> (u64, u64, u64) {
         let idx = self.segs.partition_point(|s| s.0 <= t);
-        let rate = if idx == 0 { 0 } else { self.segs[idx - 1].1 };
+        let (total, normal) =
+            if idx == 0 { (0, 0) } else { (self.segs[idx - 1].1, self.segs[idx - 1].2) };
         let end = self.segs.get(idx).map_or(u64::MAX, |s| s.0);
-        (rate, end)
+        (total, normal, end)
     }
 
-    /// Reserved rate at cycle `t`.
+    /// Total reserved rate at cycle `t`.
     pub fn rate_at(&self, t: u64) -> u64 {
-        self.rate_and_end_at(t).0
+        self.rates_and_end_at(t).0
     }
 
-    /// Highest reserved rate anywhere on the ledger (for invariant checks:
-    /// never exceeds `peak`).
+    /// Highest total reserved rate anywhere on the ledger (for invariant
+    /// checks: never exceeds `peak`).
     pub fn max_rate(&self) -> u64 {
         self.segs.iter().map(|s| s.1).max().unwrap_or(0)
     }
 
-    /// Insert a breakpoint at `t` carrying the prevailing rate.
+    /// Insert a breakpoint at `t` carrying the prevailing rates.
     fn ensure_breakpoint(&mut self, t: u64) {
         if let Err(pos) = self.segs.binary_search_by_key(&t, |s| s.0) {
-            let rate = if pos == 0 { 0 } else { self.segs[pos - 1].1 };
-            self.segs.insert(pos, (t, rate));
+            let (total, normal) =
+                if pos == 0 { (0, 0) } else { (self.segs[pos - 1].1, self.segs[pos - 1].2) };
+            self.segs.insert(pos, (t, total, normal));
         }
     }
 
-    /// Add `delta` to the reserved rate over `[from, to)`.
-    fn add(&mut self, from: u64, to: u64, delta: u64) {
+    /// Add `delta` to the reserved rate over `[from, to)`; non-priority
+    /// traffic also books against the normal-class track.
+    fn add(&mut self, from: u64, to: u64, delta: u64, priority: bool) {
         if from >= to || delta == 0 {
             return;
         }
@@ -133,8 +149,79 @@ impl BandwidthLedger {
         for seg in &mut self.segs {
             if (from..to).contains(&seg.0) {
                 seg.1 += delta;
+                if !priority {
+                    seg.2 += delta;
+                }
             }
         }
+    }
+
+    /// Usable peak for one requester class (priority requesters reach into
+    /// the headroom, normal ones do not).
+    fn usable_cap(&self, priority: bool) -> u64 {
+        if priority {
+            self.peak
+        } else {
+            self.peak.saturating_sub(self.priority_headroom).max(1)
+        }
+    }
+
+    /// Plan service for `bytes` from `start` against the current
+    /// reservations, returning the completion cycle. The `(from, to, rate)`
+    /// segments the request would occupy are pushed into `taken` when the
+    /// caller intends to commit them — probes pass `None` and stay
+    /// allocation-free (one probe per pool slot per dispatched job adds
+    /// up). Shared read-only core of [`BandwidthLedger::reserve`] and
+    /// [`BandwidthLedger::probe`].
+    fn plan(
+        &self,
+        start: u64,
+        bytes: u64,
+        rate_cap: u64,
+        priority: bool,
+        mut taken: Option<&mut Vec<(u64, u64, u64)>>,
+    ) -> u64 {
+        let cap = self.usable_cap(priority);
+        let rate_cap = rate_cap.clamp(1, cap);
+        let mut remaining = bytes;
+        let mut t = start;
+        loop {
+            let (total, normal, seg_end) = self.rates_and_end_at(t);
+            // A priority request is limited only by the physical peak; a
+            // normal request additionally may not push the *normal-class*
+            // aggregate past the usable (headroom-free) slice — priority
+            // traffic riding the headroom does not count against it.
+            let avail = if priority {
+                self.peak.saturating_sub(total).min(rate_cap)
+            } else {
+                cap.saturating_sub(normal)
+                    .min(self.peak.saturating_sub(total))
+                    .min(rate_cap)
+            };
+            if avail == 0 {
+                // Fully booked segment; reservations are finite, so a later
+                // segment always has residual bandwidth.
+                debug_assert!(seg_end != u64::MAX);
+                t = seg_end;
+                continue;
+            }
+            let span = seg_end - t;
+            let served = avail.saturating_mul(span);
+            if served >= remaining {
+                let need = remaining.div_ceil(avail);
+                if let Some(taken) = taken.as_mut() {
+                    taken.push((t, t + need, avail));
+                }
+                t += need;
+                break;
+            }
+            if let Some(taken) = taken.as_mut() {
+                taken.push((t, seg_end, avail));
+            }
+            remaining -= served;
+            t = seg_end;
+        }
+        t
     }
 
     /// Reserve service for `bytes` starting no earlier than `start`, at a
@@ -148,42 +235,29 @@ impl BandwidthLedger {
         if bytes == 0 {
             return start;
         }
-        let cap = if priority {
-            self.peak
-        } else {
-            self.peak.saturating_sub(self.priority_headroom).max(1)
-        };
-        let rate_cap = rate_cap.clamp(1, cap);
-        let mut remaining = bytes;
-        let mut t = start;
-        let mut taken: Vec<(u64, u64, u64)> = Vec::new();
-        loop {
-            let (reserved, seg_end) = self.rate_and_end_at(t);
-            let avail = cap.saturating_sub(reserved).min(rate_cap);
-            if avail == 0 {
-                // Fully booked segment; reservations are finite, so a later
-                // segment always has residual bandwidth.
-                debug_assert!(seg_end != u64::MAX);
-                t = seg_end;
-                continue;
-            }
-            let span = seg_end - t;
-            let served = avail.saturating_mul(span);
-            if served >= remaining {
-                let need = remaining.div_ceil(avail);
-                taken.push((t, t + need, avail));
-                t += need;
-                break;
-            }
-            taken.push((t, seg_end, avail));
-            remaining -= served;
-            t = seg_end;
-        }
+        let mut taken = Vec::new();
+        let end = self.plan(start, bytes, rate_cap, priority, Some(&mut taken));
         for (from, to, rate) in taken {
-            self.add(from, to, rate);
+            self.add(from, to, rate, priority);
         }
         self.total_bytes += bytes;
-        t
+        end
+    }
+
+    /// Completion cycle [`BandwidthLedger::reserve`] *would* return for this
+    /// request, without committing anything — the placement engine's
+    /// what-if query ([`crate::sched::place`]). Because the planned segments
+    /// integrate the reserved-rate step function over the request's window,
+    /// this is the exact windowed form of [`BandwidthLedger::pressure_at`]:
+    /// on a ledger with zero reserved rate over the window it returns
+    /// exactly `start + bytes.div_ceil(rate_cap)`, so a pressure-aware
+    /// placement degenerates bit-exactly to earliest-free on an uncontended
+    /// board.
+    pub fn probe(&self, start: u64, bytes: u64, rate_cap: u64, priority: bool) -> u64 {
+        if bytes == 0 {
+            return start;
+        }
+        self.plan(start, bytes, rate_cap, priority, None)
     }
 
     /// Uncontended service time of `bytes` at `rate_cap` on this ledger
@@ -195,12 +269,7 @@ impl BandwidthLedger {
         if bytes == 0 {
             return 0;
         }
-        let cap = if priority {
-            self.peak
-        } else {
-            self.peak.saturating_sub(self.priority_headroom).max(1)
-        };
-        bytes.div_ceil(rate_cap.clamp(1, cap))
+        bytes.div_ceil(rate_cap.clamp(1, self.usable_cap(priority)))
     }
 
     /// Drop breakpoints entirely before `before` (keeps the prevailing
@@ -388,6 +457,23 @@ mod tests {
     }
 
     #[test]
+    fn priority_traffic_rides_the_headroom_without_starving_the_normal_slice() {
+        // Peak 16 with 8 B/cy of headroom. A priority reservation at
+        // 8 B/cy is absorbed entirely by the headroom, so a concurrent
+        // normal request still gets the full 8 B/cy normal slice — the
+        // classes only collide at the physical peak.
+        let mut l = BandwidthLedger::new(16, 8);
+        assert_eq!(l.reserve(0, 800, 8, true), 100);
+        assert_eq!(l.reserve(0, 800, 8, false), 100, "normal slice must stay available");
+        assert_eq!(l.rate_at(0), 16);
+        // The physical peak still binds everyone: a third request of
+        // either class is fully deferred behind the saturated link.
+        assert_eq!(l.probe(0, 80, 8, false), 110);
+        assert_eq!(l.probe(0, 80, 8, true), 110);
+        assert_eq!(l.max_rate(), 16);
+    }
+
+    #[test]
     fn reservations_compose_across_partial_overlap() {
         let mut l = BandwidthLedger::new(10, 0);
         l.reserve(50, 100, 10, false); // [50, 60) at 10
@@ -396,6 +482,29 @@ mod tests {
         assert_eq!(e, 70);
         assert_eq!(l.rate_at(55), 10);
         assert_eq!(l.max_rate(), 10);
+    }
+
+    #[test]
+    fn probe_matches_reserve_without_committing() {
+        let mut l = BandwidthLedger::new(12, 0);
+        l.reserve(0, 800, 8, false); // [0, 100) at 8
+        // A second 8 B/cycle request overlapping it: 4 B/cycle residual for
+        // 100 cycles, then full rate — probe predicts exactly what reserve
+        // would do, but leaves the ledger untouched.
+        let before_bytes = l.total_bytes();
+        let planned = l.probe(0, 800, 8, false);
+        assert_eq!(planned, 150);
+        assert_eq!(l.total_bytes(), before_bytes);
+        assert_eq!(l.rate_at(120), 0, "probe must not reserve");
+        assert_eq!(l.reserve(0, 800, 8, false), planned);
+        // Empty window: probe is the uncontended service time exactly.
+        assert_eq!(l.probe(500, 64, 8, false), 508);
+        assert_eq!(l.probe(500, 0, 8, false), 500);
+        // Priority probes reach the headroom like priority reserves.
+        let mut h = BandwidthLedger::new(12, 4);
+        h.reserve(0, 800, 8, false); // normal: capped at 8, [0, 100)
+        assert_eq!(h.probe(0, 400, 8, true), 100); // 4 B/cy of headroom
+        assert_eq!(h.probe(0, 80, 8, false), 110); // normal: fully blocked
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! as the named streams. [`crate::session::Session::launch`] on a pooled
 //! session is the front door that builds these.
 
+use super::Priority;
 use crate::compiler::ir::{Kernel, Sym};
 
 /// One arbitrary-kernel offload request.
@@ -37,6 +38,10 @@ pub struct KernelJob {
     pub teams: usize,
     /// Cycle the job becomes available for dispatch (0 = immediately).
     pub arrival: u64,
+    /// QoS class: `High` dispatches before arrived `Normal` work and
+    /// reserves board DRAM into the priority headroom
+    /// ([`crate::sched::Priority`]).
+    pub priority: Priority,
     /// Run the AutoDMA tiling pass before lowering (for kernels written in
     /// plain OpenMP form; handwritten-tiled kernels leave this off).
     pub autodma: bool,
@@ -59,6 +64,7 @@ impl KernelJob {
             threads: 8,
             teams: 1,
             arrival: 0,
+            priority: Priority::Normal,
             autodma: false,
             max_cycles: super::JOB_MAX_CYCLES,
         }
@@ -228,6 +234,7 @@ mod tests {
         let j = KernelJob::new(scale(16, "s"), vec![vec![0.0; 16]], vec![2.0]);
         assert_eq!(j.name, "s");
         assert_eq!((j.threads, j.teams, j.arrival, j.autodma), (8, 1, 0, false));
+        assert_eq!(j.priority, Priority::Normal);
         assert_eq!(j.input_bytes(), 64);
         assert_eq!(j.content_key(), KernelJob::new(scale(16, "s"), vec![], vec![]).content_key());
     }

@@ -1,0 +1,210 @@
+//! Board-aware placement: which pool instance a chosen job should run on.
+//!
+//! The original pool placed every job on the earliest-free instance — the
+//! right call when instances are independent, but blind to the one
+//! resource they share: the carrier board's DRAM bandwidth
+//! ([`crate::mem::BandwidthLedger`]). On a bandwidth-constrained board,
+//! earliest-free happily opens a DMA-heavy job's occupancy window right on
+//! top of another instance's reservation, and the job burns its slot
+//! *stalled* — cycles the makespan pays twice, once as dead slot time and
+//! once as the delayed tail behind it.
+//!
+//! [`Placement::Pressure`] scores every candidate slot by the job's
+//! **predicted finish time including DRAM contention**:
+//!
+//! ```text
+//! start_i  = max(arrival, free_at(i))
+//! window_i = max(predicted_cycles, predict_dma_cycles(bytes, drain_i))
+//! stall_i  = probe_stall(i, start_i, bytes)      // read-only ledger what-if
+//! finish_i = start_i + window_i + stall_i
+//! ```
+//!
+//! and picks the minimum `(finish, stall, free_at, index)`. The stall term
+//! is [`crate::sched::pool::InstancePool::probe_stall`] — the exact stall
+//! `assign` would book, i.e. the reserved-rate step function
+//! (`SharedDram::pressure_at` at every cycle) integrated over the job's
+//! predicted window at the slot's drain rate. The `stall` tie-break is the
+//! co-scheduling rule: when two slots predict the same finish, prefer the
+//! one that *waits* for the board to clear over the one that burns slot
+//! time stalled — which steers DMA-heavy jobs onto non-overlapping DRAM
+//! windows and leaves the early slot free for compute-heavy work.
+//!
+//! Two exact identities keep the engine safe to enable by default:
+//!
+//! * **Uncontended board ⇒ earliest-free.** With no reservations above the
+//!   peak, every `stall_i` is exactly 0 and `window_i` is a per-job
+//!   constant across a homogeneous pool, so the score is a monotone
+//!   transform of `free_at` and the argmin (including tie-breaks) is
+//!   bit-identical to [`crate::sched::pool::InstancePool::pick`]. The
+//!   property test
+//!   `prop_pressure_placement_identical_to_earliest_free_on_uncontended_board`
+//!   pins this.
+//! * **All integer.** Scores are u64 arithmetic end to end — no floats, no
+//!   platform-dependent rounding, so placements are deterministic and the
+//!   cycle-regression gate can compare them exactly.
+
+use super::policy;
+use super::pool::InstancePool;
+
+/// Which instance a dispatched job lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// The instance that frees up first (`InstancePool::pick`) — the
+    /// board-blind baseline.
+    #[default]
+    EarliestFree,
+    /// Minimize predicted finish time including DRAM-stall inflation from
+    /// the board ledger's reserved bandwidth over the job's window.
+    Pressure,
+}
+
+impl Placement {
+    /// Parse a `--placement` argument.
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s {
+            "earliest" | "earliest-free" => Some(Placement::EarliestFree),
+            "pressure" | "dram-pressure" => Some(Placement::Pressure),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Placement::EarliestFree => "earliest",
+            Placement::Pressure => "pressure",
+        }
+    }
+}
+
+/// One candidate slot's score for a job.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotScore {
+    pub instance: usize,
+    /// Cycle the job's occupancy window would open.
+    pub start: u64,
+    /// Predicted DRAM contention stall inside that window.
+    pub stall: u64,
+    /// Predicted completion: `start + window + stall`.
+    pub finish: u64,
+}
+
+/// Score every slot of `pool` for a job of `predicted_cycles` static cycles
+/// and `dma_bytes` of board-DRAM traffic, runnable from `arrival`.
+pub fn scores(
+    pool: &InstancePool,
+    arrival: u64,
+    predicted_cycles: u64,
+    dma_bytes: u64,
+    priority: bool,
+) -> Vec<SlotScore> {
+    (0..pool.len())
+        .map(|i| {
+            let start = arrival.max(pool.free_at(i));
+            // The occupancy proxy: the job's static prediction, floored by
+            // its uncontended DRAM service time at this slot's drain rate
+            // (a narrow heterogeneous slot can be DMA-bound even when the
+            // base-config prediction says otherwise).
+            let window = predicted_cycles
+                .max(policy::predict_dma_cycles(dma_bytes, pool.drain_rate(i)));
+            let stall = pool.probe_stall(i, start, dma_bytes, priority);
+            SlotScore { instance: i, start, stall, finish: start + window + stall }
+        })
+        .collect()
+}
+
+/// Pick the instance for a job under `placement`. For
+/// [`Placement::Pressure`] the winner is the minimal
+/// `(finish, stall, free_at, index)` — see the module docs for why each
+/// tie-break is load-bearing.
+pub fn choose(
+    pool: &InstancePool,
+    placement: Placement,
+    arrival: u64,
+    predicted_cycles: u64,
+    dma_bytes: u64,
+    priority: bool,
+) -> usize {
+    match placement {
+        Placement::EarliestFree => pool.pick(),
+        Placement::Pressure => scores(pool, arrival, predicted_cycles, dma_bytes, priority)
+            .into_iter()
+            .min_by_key(|s| (s.finish, s.stall, pool.free_at(s.instance), s.instance))
+            .map(|s| s.instance)
+            .expect("pool is non-empty"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::sched::pool::{BoardSpec, InstancePool};
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Placement::parse("earliest"), Some(Placement::EarliestFree));
+        assert_eq!(Placement::parse("earliest-free"), Some(Placement::EarliestFree));
+        assert_eq!(Placement::parse("pressure"), Some(Placement::Pressure));
+        assert_eq!(Placement::parse("dram-pressure"), Some(Placement::Pressure));
+        assert_eq!(Placement::parse("best-fit"), None);
+        assert_eq!(Placement::default(), Placement::EarliestFree);
+        assert_eq!(Placement::Pressure.label(), "pressure");
+    }
+
+    #[test]
+    fn uncontended_pressure_matches_earliest_free_choice() {
+        // With zero board pressure the score reduces to a monotone
+        // transform of free_at, so both placements agree — including the
+        // lowest-index tie-break on an idle pool.
+        let mut p = InstancePool::homogeneous(&aurora(), 3, BoardSpec::uncontended());
+        for (arrival, predicted, bytes) in
+            [(0u64, 1000u64, 0u64), (0, 500, 4096), (250, 1000, 800), (10_000, 1, 64)]
+        {
+            let ef = choose(&p, Placement::EarliestFree, arrival, predicted, bytes, false);
+            let pr = choose(&p, Placement::Pressure, arrival, predicted, bytes, false);
+            assert_eq!(ef, pr, "placements diverged on an uncontended board");
+            p.assign(ef, arrival, predicted.max(1), bytes, false);
+        }
+    }
+
+    #[test]
+    fn pressure_avoids_stalling_on_a_saturated_window() {
+        // Board peak = one instance's 8 B/cycle drain rate. Instance 0 runs
+        // a DMA job whose reservation saturates [0, 100); instance 1 runs a
+        // short compute job. A DMA-heavy follow-up arriving at cycle 30:
+        //   earliest-free picks instance 1 (free at 30) and burns 70 cycles
+        //     stalled behind instance 0's reservation (finish 200);
+        //   pressure sees the same finish either way and breaks the tie
+        //     away from the stall, landing on instance 0 (starts at 100,
+        //     clear board, zero stall) — leaving instance 1 free from cycle
+        //     30 for compute work instead of a DRAM wait.
+        let mut p = InstancePool::homogeneous(&aurora(), 2, BoardSpec::with_bandwidth(8));
+        p.assign(0, 0, 100, 800, false); // reserves 8 B/cy over [0, 100)
+        p.assign(1, 0, 30, 0, false);
+        let s = scores(&p, 30, 100, 800, false);
+        assert_eq!((s[0].start, s[0].stall, s[0].finish), (100, 0, 200));
+        assert_eq!((s[1].start, s[1].stall, s[1].finish), (30, 70, 200));
+        assert_eq!(choose(&p, Placement::EarliestFree, 30, 100, 800, false), 1);
+        assert_eq!(choose(&p, Placement::Pressure, 30, 100, 800, false), 0);
+        // A pure compute job keeps going to the earliest-free slot.
+        assert_eq!(choose(&p, Placement::Pressure, 30, 100, 0, false), 1);
+    }
+
+    #[test]
+    fn pressure_prefers_strictly_earlier_finish() {
+        // Instance 0 frees at 1000; instance 1 at 0 with a clear board: the
+        // earlier slot wins outright on finish, no tie-break needed.
+        let mut p = InstancePool::homogeneous(&aurora(), 2, BoardSpec::with_bandwidth(16));
+        p.assign(0, 0, 1000, 0, false);
+        assert_eq!(choose(&p, Placement::Pressure, 0, 200, 800, false), 1);
+    }
+
+    #[test]
+    fn dma_floor_widens_the_window_on_narrow_slots() {
+        // 4096 B over an 8 B/cycle drain is a 512-cycle DRAM service floor:
+        // a 100-cycle static prediction cannot predict a finish before it.
+        let p = InstancePool::homogeneous(&aurora(), 1, BoardSpec::uncontended());
+        let s = scores(&p, 0, 100, 4096, false);
+        assert_eq!(s[0].finish, 512);
+    }
+}

@@ -21,6 +21,48 @@ use crate::bench_harness::{variant_kernel, Variant};
 use crate::compiler::metrics::{predict_cycles, PredictOpts};
 use crate::workloads::Workload;
 
+/// QoS class of a job (the scheduler-level face of the DRAM ledger's
+/// priority headroom — see [`crate::mem::BandwidthLedger`]).
+///
+/// `High` marks a latency-critical job: it dispatches before any `Normal`
+/// work that has arrived (strict priority tiers, with the configured
+/// policy ordering *within* a tier), and its board-DRAM traffic reserves as
+/// a priority request, reaching into the bandwidth slice
+/// `--priority-headroom` keeps free of normal traffic. Ordering within a
+/// class is unchanged, so an all-`Normal` stream schedules exactly as it
+/// did before priorities existed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Best-effort throughput traffic (the default).
+    #[default]
+    Normal,
+    /// Latency-critical: dispatches first, reserves DRAM with priority.
+    High,
+}
+
+impl Priority {
+    /// Parse a trace-file / CLI priority token.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "normal" | "norm" | "lo" => Some(Priority::Normal),
+            "high" | "hi" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Whether this class reserves board DRAM as a priority request.
+    pub fn is_high(&self) -> bool {
+        matches!(self, Priority::High)
+    }
+}
+
 /// What the capacity policy does with a job whose SPM footprint exceeds
 /// `hero_l1_capacity`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,13 +185,18 @@ pub fn predict_kernel_job(
     predict_cycles(k, &opts)
 }
 
-/// Static DMA-cycle proxy for one job: every mapped array crosses the
-/// DRAM boundary at least once (tiled variants stage inputs in and results
-/// out), so the job's data footprint over the instance's NoC beat rate
-/// approximates its uncontended DRAM service time.
+/// Byte footprint of one named job across the DRAM boundary: every mapped
+/// array crosses it at least once (tiled variants stage inputs in and
+/// results out). The placement engine scores candidate slots on this
+/// footprint; [`predict_job_dma_cycles`] turns it into a cycle proxy.
+pub fn job_bytes(w: &Workload) -> u64 {
+    w.arrays.iter().map(|a| a.elems as u64 * 4).sum()
+}
+
+/// Static DMA-cycle proxy for one job: the job's data footprint over the
+/// instance's NoC beat rate approximates its uncontended DRAM service time.
 pub fn predict_job_dma_cycles(w: &Workload, beat_bytes: u64) -> u64 {
-    let bytes: u64 = w.arrays.iter().map(|a| a.elems as u64 * 4).sum();
-    predict_dma_cycles(bytes, beat_bytes)
+    predict_dma_cycles(job_bytes(w), beat_bytes)
 }
 
 /// DMA-cycle proxy from a raw byte footprint (shared by the named and
@@ -169,6 +216,18 @@ pub fn inflate(predicted: u64, predicted_dma: u64, pressure: f64) -> u64 {
 mod tests {
     use super::*;
     use crate::workloads;
+
+    #[test]
+    fn priority_parses_orders_and_labels() {
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("hi"), Some(Priority::High));
+        assert_eq!(Priority::parse("normal"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::High > Priority::Normal, "tier selection relies on Ord");
+        assert!(Priority::High.is_high() && !Priority::Normal.is_high());
+        assert_eq!(Priority::High.label(), "high");
+    }
 
     #[test]
     fn parse_and_labels() {

@@ -40,6 +40,10 @@ use crate::noc::Port;
 pub struct BoardSpec {
     /// Peak shared DRAM bandwidth in bytes per (accelerator) cycle.
     pub dram_bytes_per_cycle: u64,
+    /// Bytes/cycle of the peak reachable only by priority-class jobs
+    /// ([`crate::sched::Priority::High`]) — the QoS headroom of
+    /// [`crate::mem::BandwidthLedger`]. 0 disables the split.
+    pub priority_headroom: u64,
 }
 
 impl BoardSpec {
@@ -48,17 +52,24 @@ impl BoardSpec {
     /// a single instance's 8 B/cycle NoC drain rate, so small pools do not
     /// contend, matching the paper's single-card system balance).
     pub fn from_config(cfg: &HeroConfig) -> Self {
-        BoardSpec { dram_bytes_per_cycle: cfg.dram.bytes_per_cycle }
+        BoardSpec { dram_bytes_per_cycle: cfg.dram.bytes_per_cycle, priority_headroom: 0 }
     }
 
     /// An explicit bandwidth cap (contention studies, `--board-bw`).
     pub fn with_bandwidth(bytes_per_cycle: u64) -> Self {
-        BoardSpec { dram_bytes_per_cycle: bytes_per_cycle.max(1) }
+        BoardSpec { dram_bytes_per_cycle: bytes_per_cycle.max(1), priority_headroom: 0 }
     }
 
     /// No shared-bandwidth coupling: the pre-refactor pool behavior.
     pub fn uncontended() -> Self {
-        BoardSpec { dram_bytes_per_cycle: u64::MAX }
+        BoardSpec { dram_bytes_per_cycle: u64::MAX, priority_headroom: 0 }
+    }
+
+    /// Keep `bytes_per_cycle` of the peak reachable only by priority jobs
+    /// (`hero serve --priority-headroom`).
+    pub fn with_priority_headroom(mut self, bytes_per_cycle: u64) -> Self {
+        self.priority_headroom = bytes_per_cycle;
+        self
     }
 }
 
@@ -106,6 +117,7 @@ struct Slot {
 pub struct InstancePool {
     slots: Vec<Slot>,
     board: BandwidthLedger,
+    spec: BoardSpec,
 }
 
 impl InstancePool {
@@ -130,13 +142,23 @@ impl InstancePool {
                 cfg,
             })
             .collect();
-        InstancePool { slots, board: BandwidthLedger::new(board.dram_bytes_per_cycle, 0) }
+        InstancePool {
+            slots,
+            board: BandwidthLedger::new(board.dram_bytes_per_cycle, board.priority_headroom),
+            spec: board,
+        }
     }
 
     /// Replace the board DRAM spec. Only meaningful before any assignment.
     pub fn set_board(&mut self, board: BoardSpec) {
         debug_assert_eq!(self.makespan(), 0, "set_board after assignments");
-        self.board = BandwidthLedger::new(board.dram_bytes_per_cycle, 0);
+        self.board = BandwidthLedger::new(board.dram_bytes_per_cycle, board.priority_headroom);
+        self.spec = board;
+    }
+
+    /// The board DRAM spec this pool was built with.
+    pub fn board(&self) -> BoardSpec {
+        self.spec
     }
 
     pub fn len(&self) -> usize {
@@ -168,12 +190,20 @@ impl InstancePool {
     /// through the shared board DRAM. The DRAM demand is reserved on the
     /// board ledger at the instance's NoC drain rate; any service beyond
     /// the uncontended time is contention stall and extends the occupancy.
-    pub fn assign(&mut self, i: usize, ready_at: u64, duration: u64, dma_bytes: u64) -> Assignment {
+    /// `priority` jobs reserve into the ledger's headroom slice (QoS).
+    pub fn assign(
+        &mut self,
+        i: usize,
+        ready_at: u64,
+        duration: u64,
+        dma_bytes: u64,
+        priority: bool,
+    ) -> Assignment {
         // No future reservation can start before the earliest-free slot, so
         // ledger history before that frontier is dead — trim it to keep
         // long serve runs O(outstanding reservations) per assign.
-        let frontier = self.slots.iter().map(|s| s.port.free_at()).min().unwrap_or(0);
-        let InstancePool { slots, board } = self;
+        let frontier = self.earliest_free();
+        let InstancePool { slots, board, .. } = self;
         board.trim(frontier);
         let slot = &mut slots[i];
         let start = ready_at.max(slot.port.free_at());
@@ -191,7 +221,7 @@ impl InstancePool {
             // board-imposed wait from the occupancy window, letting DRAM
             // service run past the job's slot time.
             let rate = slot.drain_bytes_per_cycle;
-            let dram_end = board.reserve(start, dma_bytes, rate, false);
+            let dram_end = board.reserve(start, dma_bytes, rate, priority);
             stall = dram_end.saturating_sub(start + dma_bytes.div_ceil(rate));
             slot.stats.dram_stall_cycles += stall;
             slot.stats.dram_bytes += dma_bytes;
@@ -216,6 +246,34 @@ impl InstancePool {
     /// Cycle at which instance `i` frees up (its dispatch frontier).
     pub fn free_at(&self, i: usize) -> u64 {
         self.slots[i].port.free_at()
+    }
+
+    /// Cycle at which the earliest-free instance frees up — the pool's
+    /// dispatch frontier (what decides which queued jobs have "arrived").
+    pub fn earliest_free(&self) -> u64 {
+        self.slots.iter().map(|s| s.port.free_at()).min().unwrap_or(0)
+    }
+
+    /// Effective solo drain rate of instance `i` toward the board DRAM
+    /// (bytes/cycle): its wide-NoC beat rate capped by its own config's
+    /// DRAM peak — the rate `assign` reserves at.
+    pub fn drain_rate(&self, i: usize) -> u64 {
+        self.slots[i].drain_bytes_per_cycle
+    }
+
+    /// Contention stall a job of `dma_bytes` would pay if its occupancy
+    /// window opened at `start` on instance `i`, given the board ledger's
+    /// current reservations — a read-only what-if of exactly the stall
+    /// [`InstancePool::assign`] would book ([`BandwidthLedger::probe`]).
+    /// The placement engine ([`crate::sched::place`]) scores candidate
+    /// slots with this.
+    pub fn probe_stall(&self, i: usize, start: u64, dma_bytes: u64, priority: bool) -> u64 {
+        if dma_bytes == 0 {
+            return 0;
+        }
+        let rate = self.slots[i].drain_bytes_per_cycle;
+        let dram_end = self.board.probe(start, dma_bytes, rate, priority);
+        dram_end.saturating_sub(start + dma_bytes.div_ceil(rate))
     }
 
     /// Simulated cycle at which the last instance goes idle.
@@ -259,8 +317,7 @@ impl InstancePool {
     /// frontier (the cycle where the earliest-free instance would start).
     /// Contention-aware policies use this to inflate predictions.
     pub fn pressure(&self) -> f64 {
-        let frontier = self.slots.iter().map(|s| s.port.free_at()).min().unwrap_or(0);
-        self.board.pressure_at(frontier)
+        self.board.pressure_at(self.earliest_free())
     }
 
     /// Fraction of the board DRAM's deliverable bytes actually moved over
@@ -288,18 +345,18 @@ mod tests {
     fn pick_prefers_least_loaded() {
         let mut p = pool(3, BoardSpec::uncontended());
         assert_eq!(p.pick(), 0);
-        p.assign(0, 0, 100, 0);
+        p.assign(0, 0, 100, 0, false);
         assert_eq!(p.pick(), 1);
-        p.assign(1, 0, 50, 0);
-        p.assign(2, 0, 60, 0);
+        p.assign(1, 0, 50, 0, false);
+        p.assign(2, 0, 60, 0, false);
         assert_eq!(p.pick(), 1); // frees at 50, earliest
     }
 
     #[test]
     fn assign_serializes_per_instance() {
         let mut p = pool(1, BoardSpec::uncontended());
-        let a1 = p.assign(0, 0, 10, 0);
-        let a2 = p.assign(0, 0, 5, 0);
+        let a1 = p.assign(0, 0, 10, 0, false);
+        let a2 = p.assign(0, 0, 5, 0, false);
         assert_eq!((a1.start, a1.end), (0, 10));
         assert_eq!((a2.start, a2.end), (10, 15));
         assert_eq!(p.makespan(), 15);
@@ -309,7 +366,7 @@ mod tests {
     #[test]
     fn arrival_delays_start() {
         let mut p = pool(1, BoardSpec::uncontended());
-        let a = p.assign(0, 500, 100, 0);
+        let a = p.assign(0, 500, 100, 0, false);
         assert_eq!((a.start, a.end), (500, 600));
         assert_eq!(p.makespan(), 600);
         assert_eq!(p.busy_cycles(0), 100); // idle gap is not busy time
@@ -318,8 +375,8 @@ mod tests {
     #[test]
     fn utilization_uses_port_busy_cycles() {
         let mut p = pool(2, BoardSpec::uncontended());
-        p.assign(0, 0, 100, 0);
-        p.assign(1, 0, 50, 0);
+        p.assign(0, 0, 100, 0, false);
+        p.assign(1, 0, 50, 0, false);
         assert!((p.utilization(0) - 1.0).abs() < 1e-12);
         assert!((p.utilization(1) - 0.5).abs() < 1e-12);
     }
@@ -331,9 +388,9 @@ mod tests {
         let mut p4 = pool(4, BoardSpec::uncontended());
         for _ in 0..4 {
             let i1 = p1.pick();
-            p1.assign(i1, 0, 100, 0);
+            p1.assign(i1, 0, 100, 0, false);
             let i4 = p4.pick();
-            p4.assign(i4, 0, 100, 0);
+            p4.assign(i4, 0, 100, 0, false);
         }
         assert_eq!(p1.makespan(), 400);
         assert_eq!(p4.makespan(), 100);
@@ -344,11 +401,11 @@ mod tests {
         // Board peak equals one instance's 8 B/cycle drain rate: two
         // concurrent DMA-heavy jobs must share it.
         let mut p = pool(2, BoardSpec::with_bandwidth(8));
-        let a0 = p.assign(0, 0, 100, 400);
+        let a0 = p.assign(0, 0, 100, 400, false);
         // Instance 0 serves its 400 B in 50 cycles at full rate: no stall.
         assert_eq!((a0.start, a0.end, a0.dram_stall), (0, 100, 0));
         // Instance 1 overlaps: blocked for 50 cycles, then 50 at full rate.
-        let a1 = p.assign(1, 0, 100, 400);
+        let a1 = p.assign(1, 0, 100, 400, false);
         assert_eq!(a1.dram_stall, 50);
         assert_eq!((a1.start, a1.end), (0, 150));
         assert_eq!(p.stats(1).dram_stall_cycles, 50);
@@ -363,7 +420,7 @@ mod tests {
         // the bottleneck, so even an unshared job stretches (mirroring the
         // engine-level dram_bottleneck_stalls_transfer behavior).
         let mut p = pool(1, BoardSpec::with_bandwidth(4));
-        let a = p.assign(0, 0, 100, 400);
+        let a = p.assign(0, 0, 100, 400, false);
         // Service takes 400/4 = 100 cycles vs the 400/8 = 50-cycle floor.
         assert_eq!(a.dram_stall, 50);
         assert_eq!(a.end, 150);
@@ -377,7 +434,7 @@ mod tests {
         let mut cfg = aurora();
         cfg.dram.bytes_per_cycle = 4;
         let mut p = InstancePool::homogeneous(&cfg, 1, BoardSpec::from_config(&cfg));
-        let a = p.assign(0, 0, 200, 400);
+        let a = p.assign(0, 0, 200, 400, false);
         assert_eq!(a.dram_stall, 0);
         assert_eq!(a.end, 200);
     }
@@ -389,8 +446,8 @@ mod tests {
         let mut capped = pool(1, BoardSpec::with_bandwidth(8));
         let mut open = pool(1, BoardSpec::uncontended());
         for (dur, bytes) in [(300u64, 800u64), (120, 640), (50, 0), (700, 2048)] {
-            let a = capped.assign(0, 0, dur, bytes);
-            let b = open.assign(0, 0, dur, bytes);
+            let a = capped.assign(0, 0, dur, bytes, false);
+            let b = open.assign(0, 0, dur, bytes, false);
             assert_eq!(a.dram_stall, 0);
             assert_eq!((a.start, a.end), (b.start, b.end));
         }
@@ -416,10 +473,45 @@ mod tests {
     }
 
     #[test]
+    fn priority_jobs_reach_the_headroom_normal_jobs_do_not() {
+        // Peak 16 with 8 B/cy headroom: the normal slice is one instance's
+        // 8 B/cy drain rate, the headroom another. A priority job overlaps
+        // a normal one stall-free on the headroom; a second normal job
+        // fights over the 8 B/cy normal slice and stalls.
+        let mut p = pool(3, BoardSpec::with_bandwidth(16).with_priority_headroom(8));
+        assert_eq!(p.board().priority_headroom, 8);
+        let a = p.assign(0, 0, 100, 800, false);
+        assert_eq!(a.dram_stall, 0); // the whole normal slice: full rate
+        let b = p.assign(1, 0, 100, 400, true);
+        assert_eq!(b.dram_stall, 0, "priority rides the 8 B/cy headroom");
+        // A second normal job sees a fully-booked normal slice until the
+        // first one's reservation ends at cycle 100.
+        let c = p.assign(2, 0, 100, 400, false);
+        assert_eq!(c.dram_stall, 100, "normal traffic must not reach the headroom");
+    }
+
+    #[test]
+    fn probe_stall_predicts_assign_exactly() {
+        let mut p = pool(2, BoardSpec::with_bandwidth(8));
+        p.assign(0, 0, 100, 800, false); // saturates [0, 100)
+        let predicted = p.probe_stall(1, 0, 400, false);
+        let a = p.assign(1, 0, 50, 400, false);
+        assert_eq!(predicted, a.dram_stall);
+        assert!(predicted > 0);
+        // Zero-byte jobs never stall, probed or assigned.
+        assert_eq!(p.probe_stall(1, 0, 0, false), 0);
+        // On an uncontended board the probe is exactly zero everywhere.
+        let q = pool(2, BoardSpec::uncontended());
+        assert_eq!(q.probe_stall(0, 12_345, 1 << 20, false), 0);
+        assert_eq!(q.earliest_free(), 0);
+        assert_eq!(q.drain_rate(0), aurora().dma_beat_bytes());
+    }
+
+    #[test]
     fn pressure_tracks_the_dispatch_frontier() {
         let mut p = pool(2, BoardSpec::with_bandwidth(16));
         assert_eq!(p.pressure(), 0.0);
-        p.assign(0, 0, 100, 800); // reserves 8 B/cycle over [0, 100)
+        p.assign(0, 0, 100, 800, false); // reserves 8 B/cycle over [0, 100)
         // Frontier is instance 1's free_at = 0, where half the peak is gone.
         assert!((p.pressure() - 0.5).abs() < 1e-12);
     }

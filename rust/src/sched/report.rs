@@ -1,6 +1,28 @@
-//! Aggregate scheduler reporting: throughput, utilization, cache efficacy.
+//! Aggregate scheduler reporting: throughput, utilization, cache efficacy,
+//! and per-QoS-class turnaround percentiles.
 
+use super::Priority;
 use std::fmt;
+
+/// Nearest-rank percentile of an ascending-sorted sample set (`pct` in
+/// 1..=100). Integer and deterministic — the per-class turnaround numbers
+/// feed the cycle-regression gate, so no float rounding is allowed here.
+pub fn percentile(sorted: &[u64], pct: u32) -> u64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    let n = sorted.len() as u64;
+    let rank = (u64::from(pct) * n).div_ceil(100).clamp(1, n);
+    sorted[(rank - 1) as usize]
+}
+
+/// Turnaround summary of one [`Priority`] class (completion − arrival, over
+/// the completed jobs of that class).
+#[derive(Debug, Clone, Copy)]
+pub struct ClassReport {
+    pub priority: Priority,
+    pub jobs: usize,
+    pub p50_turnaround_cycles: u64,
+    pub p95_turnaround_cycles: u64,
+}
 
 /// Per-instance cycle summary.
 #[derive(Debug, Clone, Copy)]
@@ -28,6 +50,8 @@ pub struct InstanceReport {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub policy: &'static str,
+    /// Placement engine label ([`crate::sched::Placement`]).
+    pub placement: &'static str,
     pub caching: bool,
     pub batching: bool,
     pub submitted: usize,
@@ -47,6 +71,9 @@ pub struct ServeReport {
     /// Shared carrier-board DRAM peak (bytes/cycle; `u64::MAX` when the
     /// board coupling is disabled).
     pub dram_peak_bytes_per_cycle: u64,
+    /// Bytes/cycle of the peak reserved for priority-class jobs (QoS
+    /// headroom; 0 when the split is off).
+    pub dram_priority_headroom: u64,
     /// Aggregate cycles jobs waited on the shared board DRAM.
     pub dram_stall_cycles: u64,
     /// Total bytes moved through the shared board DRAM (ledger accounting;
@@ -56,12 +83,21 @@ pub struct ServeReport {
     pub dram_utilization: f64,
     /// Order-stable digest over every completed job's output arrays:
     /// bit-identical results ⇔ identical digest, regardless of policy,
-    /// pool size, batching, caching or board bandwidth (homogeneous pools).
+    /// placement, pool size, batching, caching or board bandwidth
+    /// (homogeneous pools).
     pub digest: u64,
+    /// Turnaround percentiles per QoS class (classes with completed jobs
+    /// only; `Normal` first, then `High`).
+    pub classes: Vec<ClassReport>,
     pub instances: Vec<InstanceReport>,
 }
 
 impl ServeReport {
+    /// The class summary for `priority`, if any of its jobs completed.
+    pub fn class(&self, priority: Priority) -> Option<&ClassReport> {
+        self.classes.iter().find(|c| c.priority == priority)
+    }
+
     /// Completed jobs per simulated second at the accelerator clock.
     pub fn jobs_per_sec(&self) -> f64 {
         if self.makespan_cycles == 0 {
@@ -83,8 +119,9 @@ impl fmt::Display for ServeReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "policy {} | pool {} | cache {} | batching {}",
+            "policy {} | placement {} | pool {} | cache {} | batching {}",
             self.policy,
+            self.placement,
             self.instances.len(),
             if self.caching { "on" } else { "off" },
             if self.batching { "on" } else { "off" },
@@ -115,13 +152,27 @@ impl fmt::Display for ServeReport {
         if self.dram_peak_bytes_per_cycle == u64::MAX {
             writeln!(f, "board dram    : uncoupled (no shared-bandwidth model)")?;
         } else {
-            writeln!(
+            write!(
                 f,
                 "board dram    : peak {} B/cy, {} B moved, {} stall cy, util {:>5.1}%",
                 self.dram_peak_bytes_per_cycle,
                 self.dram_bytes,
                 self.dram_stall_cycles,
                 100.0 * self.dram_utilization
+            )?;
+            if self.dram_priority_headroom > 0 {
+                write!(f, " ({} B/cy priority headroom)", self.dram_priority_headroom)?;
+            }
+            writeln!(f)?;
+        }
+        for c in &self.classes {
+            writeln!(
+                f,
+                "class {:<8}: {:>4} jobs, turnaround p50 {:>12} cy, p95 {:>12} cy",
+                c.priority.label(),
+                c.jobs,
+                c.p50_turnaround_cycles,
+                c.p95_turnaround_cycles
             )?;
         }
         for (i, inst) in self.instances.iter().enumerate() {
@@ -149,6 +200,7 @@ mod tests {
     fn report() -> ServeReport {
         ServeReport {
             policy: "fifo",
+            placement: "pressure",
             caching: true,
             batching: true,
             submitted: 10,
@@ -163,10 +215,25 @@ mod tests {
             cache_misses: 2,
             freq_mhz: 50,
             dram_peak_bytes_per_cycle: 384,
+            dram_priority_headroom: 32,
             dram_stall_cycles: 12_000,
             dram_bytes: 3_000_000,
             dram_utilization: 0.25,
             digest: 0xdead_beef,
+            classes: vec![
+                ClassReport {
+                    priority: Priority::Normal,
+                    jobs: 6,
+                    p50_turnaround_cycles: 900_000,
+                    p95_turnaround_cycles: 3_800_000,
+                },
+                ClassReport {
+                    priority: Priority::High,
+                    jobs: 2,
+                    p50_turnaround_cycles: 200_000,
+                    p95_turnaround_cycles: 450_000,
+                },
+            ],
             instances: vec![InstanceReport {
                 jobs: 8,
                 busy_cycles: 4_000_000,
@@ -192,8 +259,12 @@ mod tests {
     fn renders_all_sections() {
         let s = report().to_string();
         assert!(s.contains("8 completed"));
+        assert!(s.contains("placement pressure"));
         assert!(s.contains("jobs/s"));
         assert!(s.contains("board dram"));
+        assert!(s.contains("32 B/cy priority headroom"));
+        assert!(s.contains("class normal"));
+        assert!(s.contains("class high"));
         assert!(s.contains("stall"));
         assert!(s.contains("instance   0"));
         assert!(s.contains("result digest"));
@@ -204,5 +275,22 @@ mod tests {
         let mut r = report();
         r.dram_peak_bytes_per_cycle = u64::MAX;
         assert!(r.to_string().contains("uncoupled"));
+    }
+
+    #[test]
+    fn class_lookup_and_percentiles() {
+        let r = report();
+        assert_eq!(r.class(Priority::High).unwrap().jobs, 2);
+        assert_eq!(r.class(Priority::Normal).unwrap().p50_turnaround_cycles, 900_000);
+        // Nearest-rank percentile: exact, integer, no interpolation.
+        let s = [10u64, 20, 30, 40];
+        assert_eq!(percentile(&s, 50), 20);
+        assert_eq!(percentile(&s, 95), 40);
+        assert_eq!(percentile(&s, 100), 40);
+        assert_eq!(percentile(&s, 1), 10);
+        assert_eq!(percentile(&[7], 95), 7);
+        let twenty: Vec<u64> = (1..=20).collect();
+        assert_eq!(percentile(&twenty, 95), 19);
+        assert_eq!(percentile(&twenty, 50), 10);
     }
 }

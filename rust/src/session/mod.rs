@@ -43,7 +43,8 @@ use crate::config::HeroConfig;
 use crate::sched::cache::BinaryCache;
 use crate::sched::job::kernel_content_key;
 use crate::sched::{
-    digest_arrays, JobDesc, JobHandle, JobState, KernelJob, Policy, Scheduler, ServeReport,
+    digest_arrays, JobDesc, JobHandle, JobState, KernelJob, Policy, Priority, Scheduler,
+    ServeReport,
 };
 use crate::trace::PerfCounters;
 use crate::workloads::Workload;
@@ -233,6 +234,7 @@ impl Session {
             fargs: Vec::new(),
             teams: 1,
             threads: None,
+            priority: Priority::Normal,
             max_cycles: LAUNCH_MAX_CYCLES,
             err: None,
             session: self,
@@ -460,6 +462,7 @@ pub struct LaunchBuilder<'s> {
     fargs: Vec<f32>,
     teams: usize,
     threads: Option<u32>,
+    priority: Priority,
     max_cycles: u64,
     err: Option<String>,
 }
@@ -509,6 +512,16 @@ impl LaunchBuilder<'_> {
         self
     }
 
+    /// QoS class of the launch ([`Priority::High`] = latency-critical). On
+    /// a pooled session a high-priority launch dispatches before arrived
+    /// normal work and reserves board DRAM into the priority headroom; a
+    /// single-accelerator session has nothing to contend with, so the
+    /// class is recorded but changes nothing there.
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
     /// Override the simulation budget for this launch.
     pub fn max_cycles(mut self, cycles: u64) -> Self {
         self.max_cycles = cycles;
@@ -547,6 +560,7 @@ impl LaunchBuilder<'_> {
                 let mut job = KernelJob::new(self.kernel, inputs, self.fargs);
                 job.threads = threads;
                 job.teams = self.teams;
+                job.priority = self.priority;
                 job.autodma = self.autodma;
                 job.max_cycles = self.max_cycles;
                 let handle = sched.submit_kernel(job);
@@ -669,6 +683,32 @@ mod tests {
         let report = sess.report().unwrap();
         assert_eq!(report.completed, 4, "kernel launch + 3 named jobs");
         assert!(sess.events().unwrap().contains("submit"));
+    }
+
+    #[test]
+    fn launch_priority_reaches_the_pooled_scheduler() {
+        let mut sess = Session::pool(aurora(), 1);
+        let x = sess.buffer_from_f32(&[1.0; 16]);
+        let l = sess
+            .launch(&scale_kernel(16))
+            .args(&[&x])
+            .priority(Priority::High)
+            .submit()
+            .unwrap();
+        sess.wait(&l).unwrap();
+        // The QoS class rides into the scheduler's submit event.
+        assert!(sess.events().unwrap().contains("[high]"));
+        // On a single session the class is accepted and changes nothing.
+        let mut single = Session::single(aurora());
+        let y = single.buffer_from_f32(&[1.0; 16]);
+        let l2 = single
+            .launch(&scale_kernel(16))
+            .args(&[&y])
+            .priority(Priority::High)
+            .submit()
+            .unwrap();
+        let r = single.wait(&l2).unwrap();
+        assert!(r.device_cycles > 0);
     }
 
     #[test]

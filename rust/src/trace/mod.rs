@@ -208,8 +208,9 @@ impl PerfCounters {
 /// Rendered by `hero serve --trace`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SchedEvent {
-    /// Job entered the queue.
-    Submitted { job: usize },
+    /// Job entered the queue, with its QoS class
+    /// ([`crate::sched::Priority`]).
+    Submitted { job: usize, priority: crate::sched::Priority },
     /// Job was refused (admission control, unknown kernel, compile error).
     Rejected { job: usize, reason: String },
     /// Oversized job decomposed into feasible sub-jobs (capacity policy).
@@ -258,7 +259,13 @@ impl SchedTrace {
         let mut out = String::new();
         for e in &self.events {
             let line = match e {
-                SchedEvent::Submitted { job } => format!("submit    job {job}"),
+                SchedEvent::Submitted { job, priority } => {
+                    if priority.is_high() {
+                        format!("submit    job {job} [high]")
+                    } else {
+                        format!("submit    job {job}")
+                    }
+                }
                 SchedEvent::Rejected { job, reason } => format!("reject    job {job}: {reason}"),
                 SchedEvent::Split { job, children } => {
                     format!("split     job {job} -> {children:?}")
@@ -294,16 +301,20 @@ mod tests {
 
     #[test]
     fn sched_trace_records_and_renders() {
+        use crate::sched::Priority;
         let mut t = SchedTrace::new();
-        t.record(SchedEvent::Submitted { job: 0 });
+        t.record(SchedEvent::Submitted { job: 0, priority: Priority::Normal });
+        t.record(SchedEvent::Submitted { job: 1, priority: Priority::High });
         t.record(SchedEvent::CompileMiss { job: 0, cycles: 1000 });
         t.record(SchedEvent::Dispatched { job: 0, instance: 1, start: 0, batched: 2 });
         t.record(SchedEvent::Completed { job: 0, instance: 1, end: 500, dram_stall: 40 });
         assert_eq!(t.dispatch_order(), vec![0]);
         let s = t.render();
+        assert!(s.contains("submit    job 0\n"), "normal submits carry no marker: {s}");
+        assert!(s.contains("submit    job 1 [high]"), "priority surfaces in the log: {s}");
         assert!(s.contains("dispatch  job 0 -> instance 1"));
         assert!(s.contains("cache") || s.contains("miss"));
-        assert_eq!(s.lines().count(), 4);
+        assert_eq!(s.lines().count(), 5);
     }
 
     #[test]

@@ -17,11 +17,12 @@
 //!
 //! Besides the synthetic generators, [`parse_trace`] replays production
 //! traffic from a newline-delimited trace file
-//! (`arrival-cycle kernel size [variant] [threads] [seed]`), the
+//! (`arrival-cycle kernel size [variant] [threads] [seed] [priority]`), the
 //! `hero serve --trace <file>` ingestion path.
 
 use super::Workload;
 use crate::bench_harness::Variant;
+use crate::sched::Priority;
 use crate::testkit::Rng;
 
 /// One synthetic offload request (scheduler-independent plain data).
@@ -36,6 +37,9 @@ pub struct JobDesc {
     /// Cycle the job becomes available for dispatch (0 = immediately; trace
     /// replay sets real arrival times).
     pub arrival: u64,
+    /// QoS class (latency-critical jobs dispatch first and reserve board
+    /// DRAM into the priority headroom — see [`crate::sched::Priority`]).
+    pub priority: Priority,
 }
 
 impl JobDesc {
@@ -78,6 +82,7 @@ pub fn mixed_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
                 threads: *rng.pick(&[4u32, 8, 8]),
                 seed: rng.next_u64(),
                 arrival: 0,
+                priority: Priority::Normal,
             }
         })
         .collect()
@@ -112,6 +117,36 @@ pub fn dma_heavy_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
                 threads: 8,
                 seed: rng.next_u64(),
                 arrival: 0,
+                priority: Priority::Normal,
+            }
+        })
+        .collect()
+}
+
+/// Generate `n` jobs alternating DMA-heavy and compute-heavy work — the
+/// board-placement study stream (`benches/sched.rs`). DMA-heavy entries are
+/// O(N²)-compute kernels whose tile staging dominates (atax/bicg at the
+/// large menu size, conv2d); compute-heavy entries are gemm at sizes where
+/// the O(N³) inner loops dwarf the O(N²) footprint. On a
+/// bandwidth-constrained board this is exactly the mix where stacking two
+/// DMA-heavy windows stalls a slot while a compute job could have used it —
+/// what pressure-aware placement is for.
+pub fn pressure_mix_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
+    const DMA_HEAVY: [(&str, usize); 3] = [("atax", 40), ("bicg", 40), ("conv2d", 24)];
+    const COMPUTE_HEAVY: [(&str, usize); 2] = [("gemm", 32), ("gemm", 48)];
+    let mut rng = Rng::new(seed ^ 0x9A7_71C5);
+    (0..n)
+        .map(|i| {
+            let (kernel, size) =
+                *rng.pick(if i % 2 == 0 { &DMA_HEAVY[..] } else { &COMPUTE_HEAVY[..] });
+            JobDesc {
+                kernel,
+                size,
+                variant: Variant::Handwritten,
+                threads: 8,
+                seed: rng.next_u64(),
+                arrival: 0,
+                priority: Priority::Normal,
             }
         })
         .collect()
@@ -120,16 +155,17 @@ pub fn dma_heavy_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
 /// Parse a newline-delimited job trace. Line format (whitespace-separated):
 ///
 /// ```text
-/// <arrival-cycle> <kernel> <size> [variant] [threads] [seed]
+/// <arrival-cycle> <kernel> <size> [variant] [threads] [seed] [priority]
 /// ```
 ///
 /// `#` starts a comment; blank lines are skipped. Omitted fields default to
-/// `handwritten`, 8 threads, and a deterministic per-line seed. The parse
-/// is strict about what it does understand — unknown kernels or variants
-/// are errors, not silently dropped jobs. Jobs are returned sorted by
-/// arrival cycle (stable, so same-cycle jobs keep file order): the
-/// scheduler dispatches in submission order, and replaying a later arrival
-/// first would serialize earlier jobs behind it.
+/// `handwritten`, 8 threads, a deterministic per-line seed, and `normal`
+/// priority (the optional trailing `high`/`hi` marks a latency-critical
+/// job). The parse is strict about what it does understand — unknown
+/// kernels, variants or priorities are errors, not silently dropped jobs.
+/// Jobs are returned sorted by arrival cycle (stable, so same-cycle jobs
+/// keep file order): the scheduler dispatches in submission order, and
+/// replaying a later arrival first would serialize earlier jobs behind it.
 pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
     let mut jobs = Vec::new();
     for (idx, raw) in text.lines().enumerate() {
@@ -141,8 +177,8 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
         let f: Vec<&str> = line.split_whitespace().collect();
         if f.len() < 3 {
             return Err(format!(
-                "trace line {ln}: expected `arrival kernel size [variant] [threads] [seed]`, \
-                 got {line:?}"
+                "trace line {ln}: expected \
+                 `arrival kernel size [variant] [threads] [seed] [priority]`, got {line:?}"
             ));
         }
         let arrival: u64 =
@@ -166,7 +202,12 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
             None => (ln as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ arrival,
             Some(s) => s.parse().map_err(|_| format!("trace line {ln}: bad seed {s:?}"))?,
         };
-        jobs.push(JobDesc { kernel, size, variant, threads, seed, arrival });
+        let priority = match f.get(6) {
+            None => Priority::Normal,
+            Some(p) => Priority::parse(p)
+                .ok_or_else(|| format!("trace line {ln}: unknown priority {p:?}"))?,
+        };
+        jobs.push(JobDesc { kernel, size, variant, threads, seed, arrival, priority });
     }
     jobs.sort_by_key(|j| j.arrival);
     Ok(jobs)
@@ -215,6 +256,25 @@ mod tests {
     }
 
     #[test]
+    fn pressure_mix_alternates_dma_and_compute_weight() {
+        let jobs = pressure_mix_jobs(12, 3);
+        assert_eq!(jobs, pressure_mix_jobs(12, 3));
+        for (i, j) in jobs.iter().enumerate() {
+            let w = j.workload().expect("mix kernels must build");
+            if i % 2 == 0 {
+                assert!(
+                    matches!(j.kernel, "atax" | "bicg" | "conv2d"),
+                    "even slots are DMA-heavy, got {}",
+                    j.kernel
+                );
+            } else {
+                assert_eq!(j.kernel, "gemm", "odd slots are compute-heavy");
+            }
+            assert_eq!(w.size, j.size);
+        }
+    }
+
+    #[test]
     fn trace_parses_full_and_defaulted_lines() {
         let text = "\
 # production replay, cycle-stamped
@@ -233,7 +293,8 @@ mod tests {
                 variant: Variant::Handwritten,
                 threads: 8,
                 seed: 7,
-                arrival: 0
+                arrival: 0,
+                priority: Priority::Normal,
             }
         );
         assert_eq!((jobs[1].kernel, jobs[1].arrival, jobs[1].threads), ("atax", 150, 8));
@@ -255,11 +316,31 @@ mod tests {
     }
 
     #[test]
+    fn trace_parses_optional_priority_field() {
+        let jobs = parse_trace(
+            "0 gemm 12 handwritten 8 7 high\n\
+             10 atax 24 handwritten 8 9\n\
+             20 bicg 24 handwritten 8 9 hi\n\
+             30 gemm 12 handwritten 8 9 normal\n",
+        )
+        .unwrap();
+        assert_eq!(
+            jobs.iter().map(|j| j.priority).collect::<Vec<_>>(),
+            vec![Priority::High, Priority::Normal, Priority::High, Priority::Normal]
+        );
+    }
+
+    #[test]
     fn trace_rejects_malformed_lines() {
         assert!(parse_trace("0 gemm").unwrap_err().contains("line 1"));
         assert!(parse_trace("x gemm 12").unwrap_err().contains("arrival"));
         assert!(parse_trace("0 nope 12").unwrap_err().contains("unknown kernel"));
         assert!(parse_trace("0 gemm 12 turbo").unwrap_err().contains("unknown variant"));
         assert!(parse_trace("0 gemm twelve").unwrap_err().contains("bad size"));
+        assert!(
+            parse_trace("0 gemm 12 handwritten 8 7 urgent")
+                .unwrap_err()
+                .contains("unknown priority")
+        );
     }
 }

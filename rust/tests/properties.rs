@@ -312,6 +312,7 @@ fn prop_sched_no_submitted_job_starves() {
                 threads: 8,
                 seed,
                 arrival: 0,
+                priority: herov2::sched::Priority::Normal,
             });
             s.drain().map_err(|e| e.to_string())?;
             for id in 0..s.submitted() {
@@ -429,6 +430,123 @@ fn prop_pool_conserves_dram_beats_and_pool1_matches_uncontended() {
                 if !capped.state(JobHandle(i)).is_some_and(|st| st.settled()) {
                     return Err(format!("job {i} never settled"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pressure_placement_identical_to_earliest_free_on_uncontended_board() {
+    // The placement engine's safety identity: with no board contention the
+    // pressure score is a monotone transform of free_at, so the *entire
+    // assignment sequence* — every dispatch and completion event, every
+    // instance choice, makespan and digest — is bit-identical to
+    // earliest-free, under FIFO and SJF alike.
+    use herov2::sched::{BoardSpec, Placement, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 6), rng.range(1, 1 << 20), rng.usize(2, 3), rng.bool()),
+        |&(n, seed, pool, sjf)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let policy = if sjf { Policy::Sjf } else { Policy::Fifo };
+            let run = |placement: Placement| {
+                let mut s = Scheduler::new(aurora(), pool, policy)
+                    .with_placement(placement)
+                    .with_board(BoardSpec::uncontended())
+                    .with_verify(false);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok::<_, String>(s)
+            };
+            let ef = run(Placement::EarliestFree)?;
+            let pr = run(Placement::Pressure)?;
+            if ef.trace.events != pr.trace.events {
+                return Err("dispatch sequences diverged on an uncontended board".into());
+            }
+            let (re, rp) = (ef.report(), pr.report());
+            if re.makespan_cycles != rp.makespan_cycles {
+                return Err(format!(
+                    "makespan diverged: {} vs {}",
+                    re.makespan_cycles, rp.makespan_cycles
+                ));
+            }
+            if re.digest != rp.digest {
+                return Err("digest diverged (placement must never touch numerics)".into());
+            }
+            for i in 0..pool {
+                if re.instances[i].busy_cycles != rp.instances[i].busy_cycles {
+                    return Err(format!("instance {i} busy cycles diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_priority_job_turnaround_never_worse_under_contention() {
+    // Marking one job latency-critical must never hurt that job: on the
+    // same stream/seed over a bandwidth-constrained board, its turnaround
+    // with `Priority::High` is <= its turnaround as a normal job. The
+    // priority job runs a unique binary (atax 40 — not in the DMA-heavy
+    // menu) so compile charges are attributed identically in both runs.
+    use herov2::bench_harness::Variant;
+    use herov2::sched::{BoardSpec, JobDesc, Placement, Policy, Priority, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| {
+            (
+                rng.usize(3, 5),
+                rng.range(1, 1 << 20),
+                rng.usize(1, 2),
+                rng.bool(),
+                rng.bool(),
+                *rng.pick(&[0u64, 2]),
+            )
+        },
+        |&(n, seed, pool, batching, pressure, headroom)| {
+            let beat = aurora().dma_beat_bytes();
+            let stream = synth::dma_heavy_jobs(n, seed);
+            let probe = JobDesc {
+                kernel: "atax",
+                size: 40,
+                variant: Variant::Handwritten,
+                threads: 8,
+                seed,
+                arrival: 0,
+                priority: Priority::Normal,
+            };
+            let placement =
+                if pressure { Placement::Pressure } else { Placement::EarliestFree };
+            let run = |priority: Priority| {
+                let mut s = Scheduler::new(aurora(), pool, Policy::Fifo)
+                    .with_placement(placement)
+                    .with_board(
+                        BoardSpec::with_bandwidth(beat).with_priority_headroom(headroom),
+                    )
+                    .with_batching(batching)
+                    .with_verify(false);
+                s.submit_all(&stream);
+                let h = s.submit(JobDesc { priority, ..probe });
+                s.drain().map_err(|e| e.to_string())?;
+                let end = s
+                    .poll(h)
+                    .ok_or_else(|| "probe job did not complete".to_string())?
+                    .end;
+                Ok::<_, String>((end, s.report().digest))
+            };
+            let (high_end, high_digest) = run(Priority::High)?;
+            let (normal_end, normal_digest) = run(Priority::Normal)?;
+            if high_digest != normal_digest {
+                return Err("priorities changed numerics".into());
+            }
+            if high_end > normal_end {
+                return Err(format!(
+                    "priority hurt its own job: turnaround {high_end} > {normal_end}"
+                ));
             }
             Ok(())
         },
