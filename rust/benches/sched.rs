@@ -312,6 +312,64 @@ fn main() {
     out.metric("qos.high.p50_turnaround_cycles", high_class.p50_turnaround_cycles);
     println!("priority class improves p95 turnaround: OK");
 
+    // --- cross-launch dataflow: device-resident pipeline ------------------
+    // An 8-stage chained pipeline (each stage doubles a 4 KiB buffer in
+    // place) through a pool=2 session: consumers dispatch only once their
+    // producer settles, payloads flow scheduler-side through the feed
+    // store, and the result is bit-identical to the explicit
+    // read-back/re-upload baseline on the same pool.
+    {
+        use herov2::compiler::ir::{cf, ci, ld, par_for, st, var, KernelBuilder};
+        use herov2::Session;
+        let n = 1024usize;
+        let stages = 8usize;
+        let scale_kernel = || {
+            let mut b = KernelBuilder::new("pipe_scale");
+            let x = b.host_array("X", vec![ci(n as i32)]);
+            let i = b.loop_var("i");
+            b.body(vec![par_for(
+                i,
+                ci(0),
+                ci(n as i32),
+                vec![st(x, vec![var(i)], ld(x, vec![var(i)]).mul(cf(2.0)))],
+            )])
+        };
+        let data: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
+        // Chained: submit every stage up front, resolve once at the tail.
+        let mut chained = Session::pool(aurora(), 2);
+        let xb = chained.buffer_from_f32(&data);
+        let mut tail = None;
+        for _ in 0..stages {
+            tail = Some(chained.launch(&scale_kernel()).writes(&xb).submit().expect("submit"));
+        }
+        let chain_digest = chained.wait(&tail.expect("stages >= 1")).expect("wait").digest;
+        let chain_out = chained.read_f32(&xb).expect("read");
+        let chain_makespan = chained.report().expect("report").makespan_cycles;
+        // Baseline: wait + read_f32 + buffer_from_f32 between every stage.
+        let mut rt = Session::pool(aurora(), 2);
+        let mut cur = data.clone();
+        let mut rt_digest = 0u64;
+        for _ in 0..stages {
+            let b = rt.buffer_from_f32(&cur);
+            let l = rt.launch(&scale_kernel()).writes(&b).submit().expect("submit");
+            rt_digest = rt.wait(&l).expect("wait").digest;
+            cur = rt.read_f32(&b).expect("read");
+            rt.free(&b).expect("free");
+        }
+        assert_eq!(
+            chain_digest, rt_digest,
+            "chained pipeline must be bit-identical to the host-round-trip baseline"
+        );
+        assert_eq!(chain_out, cur);
+        assert_eq!(rt.resident_bytes(), 0, "freed stage buffers must not leak");
+        println!(
+            "\n{stages}-stage device-resident pipeline: digest {chain_digest:#018x}, \
+             makespan {chain_makespan} cy — bit-identical to the host-round-trip baseline"
+        );
+        out.metric("pipeline.chained.makespan_cycles", chain_makespan);
+        out.digest("pipeline.digest", chain_digest);
+    }
+
     let path = out.emit().expect("emit BENCH_sched.json");
     println!("\nwrote {}", path.display());
 }

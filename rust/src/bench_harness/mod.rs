@@ -117,8 +117,9 @@ pub fn run_lowered(
     max_cycles: u64,
 ) -> Result<RunOutcome> {
     let data = w.gen_data(seed);
+    let refs: Vec<&[f32]> = data.iter().map(|a| a.as_slice()).collect();
     let (result, arrays) =
-        crate::session::core::run_arrays(cfg, lowered, &data, &w.fargs, 1, max_cycles)?;
+        crate::session::core::run_arrays(cfg, lowered, &refs, &w.fargs, 1, max_cycles)?;
     Ok(RunOutcome { result, arrays, report: None, text_size: lowered.program.len() })
 }
 

@@ -83,6 +83,9 @@ impl Expr {
     pub fn min(self, o: Expr) -> Expr {
         Expr::Bin(BinOp::Min, Box::new(self), Box::new(o))
     }
+    pub fn max(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Max, Box::new(self), Box::new(o))
+    }
 
     /// Does this expression (transitively) contain a `Min`/`Max`? Loop
     /// bounds derived from tile clamping are `Min`-shaped; the paper's

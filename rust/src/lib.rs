@@ -28,13 +28,21 @@
 //! running a kernel. `Session::single(cfg)` wraps one accelerator,
 //! `Session::pool(cfg, k)` an instance pool behind the offload scheduler —
 //! the client code is identical either way. Buffers
-//! (`session.buffer_from_f32(..)`) replace raw `HostBuf` plumbing, and
+//! (`session.buffer_from_f32(..)`) replace raw `HostBuf` plumbing and have
+//! a **first-class lifecycle**: generation-tagged handles,
+//! `Session::free` with slot reuse (stale handles are rejected), and
+//! `Session::resident_bytes` so long serve loops stay bounded.
 //! `session.launch(&kernel).args(..).fargs(..).teams(n).submit()` is
 //! async-by-default with `session.wait(..)` returning cycles, perf
-//! counters and an output digest. `hero run`, `hero serve`, all examples
-//! and the offload/perf/ablation benches go through it; the lower-level
-//! surfaces below remain as thin layers over the same core
-//! ([`session::core`]), so offload semantics exist exactly once.
+//! counters and an output digest — and launches **chain through buffers**:
+//! `.writes(&buf)` keeps an output device-resident, and a later launch
+//! that `.reads` it before the producer resolved gets a dataflow edge
+//! instead of a snapshot, its payload materializing producer-to-consumer
+//! with zero host round-trips (see `session/README.md`). `hero run`,
+//! `hero serve`, all examples and the offload/perf/ablation benches go
+//! through it; the lower-level surfaces below remain as thin layers over
+//! the same core ([`session::core`]), so offload semantics exist exactly
+//! once.
 //!
 //! ## Offload scheduler
 //!
@@ -50,7 +58,11 @@
 //! Jobs are either *named* synthetic workloads ([`workloads::synth`]) or
 //! *arbitrary compiled kernels* ([`sched::KernelJob`] — what a pooled
 //! [`session::Session`] submits), both flowing through the same policies,
-//! cache, batching and board model.
+//! cache, batching and board model. Kernel jobs carry **cross-job
+//! dataflow** ([`sched::PayloadSrc::Output`] + `KernelJob::after`): a
+//! consumer dispatches only once its producers settle (its effective
+//! arrival is the last producer's finish), and its payload materializes
+//! from the scheduler's feed store, never through the submitting host.
 //! Pool instances share **one carrier-board DRAM** ([`mem::dram`]): each
 //! job's main-memory traffic reserves bandwidth on a cycle-accounted
 //! ledger, so oversubscribed boards stretch occupancy windows (contention

@@ -28,6 +28,15 @@
 //!                                     finish incl. board DRAM stall)
 //!     --priority-headroom B           bytes/cycle of board DRAM reachable
 //!                                     only by priority-class jobs (default 0)
+//!     --pipeline N                    additionally run an N-stage chained
+//!                                     kernel pipeline through the same
+//!                                     session (each stage consumes the
+//!                                     previous stage's device-resident
+//!                                     output by handle — no host copies),
+//!                                     verify it, and check the session
+//!                                     heap returns to its watermark after
+//!                                     the buffers are freed (default 0 =
+//!                                     off; max 32 stages)
 //!     --seed S                        stream seed (default 42)
 //!     --board-bw B                    shared board DRAM bandwidth in
 //!                                     bytes/cycle (default: config
@@ -253,6 +262,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
             "--board-bw",
             "--config",
             "--jobs",
+            "--pipeline",
             "--placement",
             "--policy",
             "--pool",
@@ -278,6 +288,11 @@ fn cmd_serve(raw: &[String]) -> i32 {
         return 2;
     };
     let headroom: u64 = opt_or(&args, "--priority-headroom", 0);
+    let pipeline: usize = opt_or(&args, "--pipeline", 0);
+    if pipeline > 32 {
+        eprintln!("--pipeline supports at most 32 stages");
+        return 2;
+    }
     if pool == 0 {
         eprintln!("--pool must be at least 1");
         return 2;
@@ -351,9 +366,29 @@ fn cmd_serve(raw: &[String]) -> i32 {
             return 1;
         }
     };
+    // The chained pipeline rides the same pooled session as the named
+    // stream: each stage consumes the previous one's device-resident
+    // output by handle, with zero host round-trips between stages.
+    let pipe = if pipeline > 0 {
+        match submit_pipeline(&mut sess, pipeline) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("pipeline error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
     if let Err(e) = sess.drain() {
         eprintln!("scheduler error: {e}");
         return 1;
+    }
+    if let Some(p) = pipe {
+        if let Err(e) = finish_pipeline(&mut sess, p) {
+            eprintln!("pipeline error: {e}");
+            return 1;
+        }
     }
     if args.flag("--events") {
         print!("{}", sess.events().expect("pooled session renders events"));
@@ -374,6 +409,70 @@ fn cmd_serve(raw: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+/// An in-flight `hero serve --pipeline` run: the chained buffer, its tail
+/// launch, the input data and the session watermark to restore after free.
+struct PipelineRun {
+    buf: herov2::session::Buffer,
+    tail: herov2::session::Launch,
+    data: Vec<f32>,
+    watermark: u64,
+    stages: usize,
+}
+
+/// Submit an N-stage device-resident pipeline: every stage doubles the
+/// buffer in place, chained on the previous stage's pending output (the
+/// scheduler's cross-launch dataflow — no host copies between stages).
+fn submit_pipeline(sess: &mut Session, stages: usize) -> herov2::Result<PipelineRun> {
+    use herov2::compiler::ir::{cf, ci, ld, par_for, st, var, KernelBuilder};
+    let n = 256usize;
+    let mut b = KernelBuilder::new("serve_pipeline_scale");
+    let x = b.host_array("X", vec![ci(n as i32)]);
+    let i = b.loop_var("i");
+    let kernel = b.body(vec![par_for(
+        i,
+        ci(0),
+        ci(n as i32),
+        vec![st(x, vec![var(i)], ld(x, vec![var(i)]).mul(cf(2.0)))],
+    )]);
+    let data: Vec<f32> = (0..n).map(|i| (i % 17) as f32 + 1.0).collect();
+    let watermark = sess.resident_bytes();
+    let buf = sess.buffer_from_f32(&data);
+    let mut tail = None;
+    for _ in 0..stages {
+        tail = Some(sess.launch(&kernel).writes(&buf).submit()?);
+    }
+    Ok(PipelineRun { buf, tail: tail.expect("stages >= 1"), data, watermark, stages })
+}
+
+/// Resolve and verify the pipeline (each stage doubles, so the expected
+/// result is exact in f32), then free its buffer and check the session
+/// heap returns to its pre-pipeline watermark — the bounded-serve-loop
+/// guarantee.
+fn finish_pipeline(sess: &mut Session, p: PipelineRun) -> herov2::Result<()> {
+    let res = sess.wait(&p.tail)?;
+    let got = sess.read_f32(&p.buf)?;
+    let scale = (1u64 << p.stages) as f32;
+    for (i, v) in got.iter().enumerate() {
+        anyhow::ensure!(*v == p.data[i] * scale, "pipeline output mismatch at element {i}");
+    }
+    println!(
+        "pipeline: {} chained device-resident stage(s) OK (digest {:#018x}, {} B resident)",
+        p.stages,
+        res.digest,
+        sess.resident_bytes()
+    );
+    sess.free(&p.buf)?;
+    anyhow::ensure!(
+        sess.resident_bytes() == p.watermark,
+        "session heap did not return to its watermark after free"
+    );
+    println!(
+        "pipeline buffers freed: resident bytes back to the watermark ({} B)",
+        p.watermark
+    );
+    Ok(())
 }
 
 fn cmd_disasm(raw: &[String]) -> i32 {

@@ -9,26 +9,75 @@
 //! the same policies, binary cache, batching and shared-DRAM board model
 //! as the named streams. [`crate::session::Session::launch`] on a pooled
 //! session is the front door that builds these.
+//!
+//! Payloads carry *dataflow*: each input is a [`PayloadSrc`] — either an
+//! inline data snapshot or a reference to another kernel job's output
+//! array ([`PayloadSrc::Output`]). An output reference is a dependency
+//! edge: the scheduler dispatches the consumer only once the producer has
+//! settled, and materializes the input directly from the producer's output
+//! at dispatch time — the data never round-trips through the submitting
+//! host. [`KernelJob::after`] adds pure ordering edges with no data
+//! attached.
 
-use super::Priority;
+use super::{JobHandle, Priority};
 use crate::compiler::ir::{Kernel, Sym};
+
+/// Where one input array of a [`KernelJob`] comes from.
+#[derive(Debug, Clone)]
+pub enum PayloadSrc {
+    /// An inline snapshot, captured at submission.
+    Data(Vec<f32>),
+    /// Output array `index` of an earlier kernel job: a dataflow edge. The
+    /// scheduler holds the consumer until `producer` settles and then
+    /// feeds the producer's output in directly (`elems` is the array's
+    /// element count, known up front so shape validation and DMA-cost
+    /// predictions need no data).
+    Output { producer: JobHandle, index: usize, elems: usize },
+}
+
+impl PayloadSrc {
+    /// Element count of the array this source yields.
+    pub fn elems(&self) -> usize {
+        match self {
+            PayloadSrc::Data(v) => v.len(),
+            PayloadSrc::Output { elems, .. } => *elems,
+        }
+    }
+
+    /// The producing job, for dataflow edges.
+    pub fn producer(&self) -> Option<JobHandle> {
+        match self {
+            PayloadSrc::Data(_) => None,
+            PayloadSrc::Output { producer, .. } => Some(*producer),
+        }
+    }
+
+    /// Bytes this source holds *inline* (snapshot retention accounting;
+    /// output references carry no data until dispatch).
+    pub fn inline_bytes(&self) -> u64 {
+        match self {
+            PayloadSrc::Data(v) => v.len() as u64 * 4,
+            PayloadSrc::Output { .. } => 0,
+        }
+    }
+}
 
 /// One arbitrary-kernel offload request.
 ///
-/// `inputs` holds the initial contents of every `map`-clause array in the
-/// kernel's parameter-declaration order (outputs are typically zeroed);
-/// the job's result is the final contents of the same arrays. Two
-/// `KernelJob`s with structurally identical kernels (same
-/// [`kernel_content_key`]) and thread counts share one lowered binary and
-/// may batch onto one instance, exactly like same-named synthetic jobs.
+/// `inputs` holds the source of every `map`-clause array in the kernel's
+/// parameter-declaration order (outputs are typically zeroed); the job's
+/// result is the final contents of the same arrays. Two `KernelJob`s with
+/// structurally identical kernels (same [`kernel_content_key`]) and thread
+/// counts share one lowered binary and may batch onto one instance,
+/// exactly like same-named synthetic jobs.
 #[derive(Debug, Clone)]
 pub struct KernelJob {
     /// Display label for traces and reports (defaults to the kernel name).
     pub name: String,
     /// The kernel IR to compile and run.
     pub kernel: Kernel,
-    /// Initial contents of every host array, in parameter order.
-    pub inputs: Vec<Vec<f32>>,
+    /// Source of every host array's initial contents, in parameter order.
+    pub inputs: Vec<PayloadSrc>,
     /// Float parameters, in parameter order.
     pub fargs: Vec<f32>,
     /// OpenMP thread count the kernel is lowered for (clamped to the
@@ -36,7 +85,10 @@ pub struct KernelJob {
     pub threads: u32,
     /// Clusters participating in the offload (OpenMP `num_teams`).
     pub teams: usize,
-    /// Cycle the job becomes available for dispatch (0 = immediately).
+    /// Cycle the job becomes available for dispatch (0 = immediately). A
+    /// job with dataflow or [`KernelJob::after`] edges additionally waits
+    /// for its producers: its *effective* arrival is the later of this and
+    /// its last producer's finish.
     pub arrival: u64,
     /// QoS class: `High` dispatches before arrived `Normal` work and
     /// reserves board DRAM into the priority headroom
@@ -50,12 +102,22 @@ pub struct KernelJob {
     /// fixed budget; kernel jobs carry their own so a session launch keeps
     /// the same budget on a pooled backend as on a single one.
     pub max_cycles: u64,
+    /// Pure ordering edges: jobs that must settle before this one may
+    /// dispatch, with no data attached (dataflow inputs imply their own
+    /// edges — these are for explicit sequencing on top).
+    pub after: Vec<JobHandle>,
 }
 
 impl KernelJob {
     /// A job over `kernel` with default launch parameters: 8 threads, one
-    /// team, immediate arrival, no AutoDMA.
+    /// team, immediate arrival, no AutoDMA, no dependency edges.
     pub fn new(kernel: Kernel, inputs: Vec<Vec<f32>>, fargs: Vec<f32>) -> Self {
+        Self::from_srcs(kernel, inputs.into_iter().map(PayloadSrc::Data).collect(), fargs)
+    }
+
+    /// A job whose inputs mix inline data and dataflow edges (what a
+    /// pooled [`crate::session::Session`] builds for chained launches).
+    pub fn from_srcs(kernel: Kernel, inputs: Vec<PayloadSrc>, fargs: Vec<f32>) -> Self {
         KernelJob {
             name: kernel.name.clone(),
             kernel,
@@ -67,6 +129,7 @@ impl KernelJob {
             priority: Priority::Normal,
             autodma: false,
             max_cycles: super::JOB_MAX_CYCLES,
+            after: Vec::new(),
         }
     }
 
@@ -76,18 +139,40 @@ impl KernelJob {
     }
 
     /// Check the payload against the kernel's signature (see
-    /// [`validate_payload`]) plus job-level parameters.
+    /// [`validate_shape`]) plus job-level parameters.
     pub fn validate(&self) -> Result<(), String> {
         if self.teams == 0 {
             return Err(format!("kernel {:?}: teams must be at least 1", self.name));
         }
-        validate_payload(&self.kernel, &self.inputs, &self.fargs)
+        let elems: Vec<usize> = self.inputs.iter().map(|s| s.elems()).collect();
+        validate_shape(&self.kernel, &elems, self.fargs.len())
+    }
+
+    /// Every job this one depends on: explicit [`KernelJob::after`] edges
+    /// plus the producers of its dataflow inputs, deduplicated.
+    pub fn producers(&self) -> Vec<JobHandle> {
+        let mut out: Vec<JobHandle> = self.after.clone();
+        for src in &self.inputs {
+            if let Some(p) = src.producer() {
+                out.push(p);
+            }
+        }
+        out.sort_by_key(|h| h.0);
+        out.dedup();
+        out
     }
 
     /// Total bytes of array data the job moves across the DRAM boundary at
-    /// least once (the SJF DMA-cost proxy).
+    /// least once (the SJF DMA-cost proxy; dataflow inputs count too —
+    /// their bytes still cross the board DRAM when the job runs).
     pub fn input_bytes(&self) -> u64 {
-        self.inputs.iter().map(|a| a.len() as u64 * 4).sum()
+        self.inputs.iter().map(|s| s.elems() as u64 * 4).sum()
+    }
+
+    /// Bytes of *inline* input snapshots this job retains until it settles
+    /// (the serve-loop leak guard's unit of account).
+    pub fn inline_input_bytes(&self) -> u64 {
+        self.inputs.iter().map(|s| s.inline_bytes()).sum()
     }
 }
 
@@ -95,13 +180,15 @@ impl KernelJob {
 /// parameter counts must match, and where an array's extents are
 /// compile-time constants, its input must be at least that big — an
 /// undersized buffer would let the device read past it into whatever the
-/// host allocator placed next. This is the one guard shared by
+/// host allocator placed next. Inputs are described by element counts so
+/// dataflow edges (whose data does not exist yet at submission) validate
+/// exactly like inline snapshots. This is the one guard shared by
 /// [`crate::sched::Scheduler::submit_kernel`] and the session's
 /// `LaunchBuilder`, so the two front doors cannot drift.
-pub fn validate_payload(
+pub fn validate_shape(
     kernel: &Kernel,
-    inputs: &[Vec<f32>],
-    fargs: &[f32],
+    input_elems: &[usize],
+    n_fargs: usize,
 ) -> Result<(), String> {
     let n_arrays = (0..kernel.n_params)
         .filter(|&v| matches!(kernel.sym(v), Sym::HostArray { .. }))
@@ -109,25 +196,24 @@ pub fn validate_payload(
     let n_floats = (0..kernel.n_params)
         .filter(|&v| matches!(kernel.sym(v), Sym::FloatParam))
         .count();
-    if inputs.len() != n_arrays {
+    if input_elems.len() != n_arrays {
         return Err(format!(
             "kernel {:?} has {n_arrays} array parameter(s), got {} input array(s)",
             kernel.name,
-            inputs.len()
+            input_elems.len()
         ));
     }
-    if fargs.len() != n_floats {
+    if n_fargs != n_floats {
         return Err(format!(
-            "kernel {:?} has {n_floats} float parameter(s), got {}",
+            "kernel {:?} has {n_floats} float parameter(s), got {n_fargs}",
             kernel.name,
-            fargs.len()
         ));
     }
     let mut ai = 0;
     for v in 0..kernel.n_params {
         if matches!(kernel.sym(v), Sym::HostArray { .. }) {
             if let Some(declared) = kernel.array_elems(v) {
-                let have = inputs[ai].len();
+                let have = input_elems[ai];
                 if declared as usize > have {
                     return Err(format!(
                         "array {:?} declares {declared} element(s) but its input holds \
@@ -140,6 +226,16 @@ pub fn validate_payload(
         }
     }
     Ok(())
+}
+
+/// [`validate_shape`] over concrete input arrays.
+pub fn validate_payload(
+    kernel: &Kernel,
+    inputs: &[Vec<f32>],
+    fargs: &[f32],
+) -> Result<(), String> {
+    let elems: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
+    validate_shape(kernel, &elems, fargs.len())
 }
 
 /// Structural content key of a kernel: FNV-1a over the full IR (symbol
@@ -230,12 +326,48 @@ mod tests {
     }
 
     #[test]
+    fn dataflow_srcs_validate_by_element_count() {
+        // An output reference with enough elements passes the same guard
+        // an inline snapshot would; an undersized one is caught before any
+        // data exists.
+        let k = scale(16, "s");
+        let ok = KernelJob::from_srcs(
+            k.clone(),
+            vec![PayloadSrc::Output { producer: JobHandle(0), index: 0, elems: 16 }],
+            vec![2.0],
+        );
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.input_bytes(), 64);
+        assert_eq!(ok.inline_input_bytes(), 0, "edges hold no inline data");
+        assert_eq!(ok.producers(), vec![JobHandle(0)]);
+        let small = KernelJob::from_srcs(
+            k,
+            vec![PayloadSrc::Output { producer: JobHandle(0), index: 0, elems: 4 }],
+            vec![2.0],
+        );
+        assert!(small.validate().unwrap_err().contains("declares 16"));
+    }
+
+    #[test]
+    fn producers_dedup_after_and_dataflow_edges() {
+        let mut j = KernelJob::from_srcs(
+            scale(8, "s"),
+            vec![PayloadSrc::Output { producer: JobHandle(3), index: 0, elems: 8 }],
+            vec![1.0],
+        );
+        j.after = vec![JobHandle(5), JobHandle(3)];
+        assert_eq!(j.producers(), vec![JobHandle(3), JobHandle(5)]);
+    }
+
+    #[test]
     fn job_defaults_and_footprint() {
         let j = KernelJob::new(scale(16, "s"), vec![vec![0.0; 16]], vec![2.0]);
         assert_eq!(j.name, "s");
         assert_eq!((j.threads, j.teams, j.arrival, j.autodma), (8, 1, 0, false));
         assert_eq!(j.priority, Priority::Normal);
+        assert!(j.after.is_empty());
         assert_eq!(j.input_bytes(), 64);
+        assert_eq!(j.inline_input_bytes(), 64);
         assert_eq!(j.content_key(), KernelJob::new(scale(16, "s"), vec![], vec![]).content_key());
     }
 }

@@ -53,6 +53,16 @@
 //! batching and board model; kernel jobs return their output arrays in
 //! [`JobOutcome::arrays`].
 //!
+//! Kernel jobs carry **cross-job dataflow**: an input may reference an
+//! earlier job's output ([`PayloadSrc::Output`]) instead of snapshotting
+//! data at submission. The scheduler holds such a consumer until its
+//! producers settle (its *effective arrival* is the last producer's
+//! finish — [`SchedEvent::DependencyReady`] marks the moment), retains the
+//! demanded output arrays in an internal feed store, and materializes the
+//! consumer's payload directly from it at dispatch — a chained pipeline
+//! never round-trips data through the submitting host. A failed producer
+//! cascades rejection to its queued consumers.
+//!
 //! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state) through
 //! the shared offload core ([`crate::session::core`]), so results on a
 //! homogeneous pool are bit-identical regardless of policy, pool size,
@@ -71,7 +81,7 @@ pub mod report;
 
 pub use crate::workloads::synth::JobDesc;
 pub use cache::BinaryCache;
-pub use job::KernelJob;
+pub use job::{KernelJob, PayloadSrc};
 pub use place::Placement;
 pub use policy::{OversizeAction, Policy, Priority};
 pub use pool::{BoardSpec, InstancePool};
@@ -84,7 +94,8 @@ use crate::runtime::hero_api::{HeroApi, SpmLevel};
 use crate::runtime::omp::OffloadResult;
 use crate::trace::{Event, PerfCounters, SchedEvent, SchedTrace};
 use crate::workloads::{self, Workload};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Smallest problem size the capacity policy will split down to.
@@ -191,16 +202,33 @@ struct JobRecord {
     spec: JobSpec,
     batch: BatchKey,
     /// Cycle the job becomes available for dispatch (kept here so settled
-    /// jobs can release their [`JobSpec`] payload).
+    /// jobs can release their [`JobSpec`] payload). A job with producers
+    /// additionally waits for them: see [`Scheduler::effective_arrival`].
     arrival: u64,
     /// QoS class: dispatch tier + board-DRAM reservation class.
     priority: Priority,
+    /// Producers this job waits on (dataflow inputs + explicit `after`
+    /// edges), as job ids — always earlier ids, so the graph is acyclic by
+    /// construction.
+    after: Vec<JobId>,
+    /// Whether this job's demand on its producers' outputs has been
+    /// registered in the feed store (set once the job is admitted to the
+    /// queue; rejection before admission must not unbalance the refcounts).
+    registered: bool,
     predicted: u64,
     /// Static DMA-cycle proxy (SJF contention-aware inflation).
     predicted_dma: u64,
     /// Byte footprint across the board DRAM (placement scoring).
     dma_bytes: u64,
     state: JobState,
+}
+
+/// One producer output array retained for queued consumers, with the
+/// number of consumers still to feed (dropped at zero — the feed store
+/// never outlives its demand).
+struct FeedSlot {
+    data: Vec<f32>,
+    consumers: usize,
 }
 
 /// The offload scheduler: job queue + policy + binary cache + instance pool.
@@ -216,6 +244,20 @@ pub struct Scheduler {
     l1_capacity: u32,
     jobs: Vec<JobRecord>,
     queue: Vec<JobId>,
+    /// Producer outputs retained for not-yet-dispatched consumers, keyed
+    /// by (producer job, output array index). Populated when a demanded
+    /// producer completes; drained as consumers dispatch — this is what
+    /// lets [`Scheduler::take_payload`] move a producer's outcome out
+    /// without starving its queued consumers.
+    feeds: HashMap<(JobId, usize), FeedSlot>,
+    /// Demand registered before the producer completed: (producer, index)
+    /// -> number of queued consumers to feed at its completion.
+    feed_demand: HashMap<(JobId, usize), usize>,
+    /// Reverse edge index: producer -> consumer job ids, in submission
+    /// order. Completion/rejection handling looks up exactly the affected
+    /// consumers instead of scanning the whole jobs table (edge-free
+    /// streams never touch it).
+    consumers_of: HashMap<JobId, Vec<JobId>>,
     pub trace: SchedTrace,
 }
 
@@ -258,6 +300,9 @@ impl Scheduler {
             l1_capacity,
             jobs: Vec::new(),
             queue: Vec::new(),
+            feeds: HashMap::new(),
+            feed_demand: HashMap::new(),
+            consumers_of: HashMap::new(),
             trace: SchedTrace::new(),
             cfg,
             policy,
@@ -314,18 +359,22 @@ impl Scheduler {
         matches!(self.policy, Policy::Sjf) || self.placement == Placement::Pressure
     }
 
-    /// Bytes of kernel-job input snapshots the scheduler still retains.
-    /// Settled jobs release their payloads (the internal `Retired` spec),
-    /// so after a drain this is 0 — the leak guard for long `hero serve`
-    /// runs.
+    /// Bytes of kernel-job input snapshots the scheduler still retains,
+    /// plus producer outputs held in the feed store for queued consumers.
+    /// Settled jobs release their payloads (the internal `Retired` spec)
+    /// and dispatched consumers drain their feeds, so after a drain this
+    /// is 0 — the leak guard for long `hero serve` runs.
     pub fn retained_input_bytes(&self) -> u64 {
-        self.jobs
+        let snapshots: u64 = self
+            .jobs
             .iter()
             .map(|r| match &r.spec {
-                JobSpec::Kernel(k) => k.input_bytes(),
+                JobSpec::Kernel(k) => k.inline_input_bytes(),
                 _ => 0,
             })
-            .sum()
+            .sum();
+        let feeds: u64 = self.feeds.values().map(|f| f.data.len() as u64 * 4).sum();
+        snapshots + feeds
     }
 
     /// Release a settled kernel job's payload (input snapshots + IR). The
@@ -334,6 +383,217 @@ impl Scheduler {
     fn release_payload(&mut self, id: JobId) {
         if matches!(self.jobs[id].spec, JobSpec::Kernel(_)) {
             self.jobs[id].spec = JobSpec::Retired;
+        }
+    }
+
+    /// A queued job is *ready* once every producer has settled as `Done`
+    /// (a failed producer cascades rejection instead, so queued jobs only
+    /// ever wait on queued-or-done producers).
+    fn ready(&self, id: JobId) -> bool {
+        self.jobs[id].after.iter().all(|&p| matches!(self.jobs[p].state, JobState::Done(_)))
+    }
+
+    /// Dependency-aware arrival: a job cannot start before its declared
+    /// arrival cycle *or* its last producer's finish — the readiness rule
+    /// the policy tiers, the placement engine and the pool occupancy all
+    /// score with.
+    fn effective_arrival(&self, id: JobId) -> u64 {
+        let deps = self.jobs[id]
+            .after
+            .iter()
+            .map(|&p| match &self.jobs[p].state {
+                JobState::Done(o) => o.end,
+                _ => u64::MAX,
+            })
+            .max()
+            .unwrap_or(0);
+        self.jobs[id].arrival.max(deps)
+    }
+
+    /// Validate a kernel job's dataflow/ordering edges at submission:
+    /// every edge must point at an *earlier* job (acyclic by construction)
+    /// that has not failed, and an output reference must name an existing
+    /// array of a kernel producer with the element count the edge claims.
+    fn check_dataflow(&self, id: JobId, kjob: &KernelJob) -> std::result::Result<(), String> {
+        for h in &kjob.after {
+            if h.0 >= id {
+                return Err(format!("ordering edge to job {} which is not an earlier job", h.0));
+            }
+            match &self.jobs[h.0].state {
+                JobState::Rejected { .. } => {
+                    return Err(format!("producer job {} was rejected", h.0))
+                }
+                JobState::Split { .. } => return Err(format!("producer job {} was split", h.0)),
+                JobState::Queued | JobState::Done(_) => {}
+            }
+        }
+        for src in &kjob.inputs {
+            let PayloadSrc::Output { producer, index, elems } = src else { continue };
+            if producer.0 >= id {
+                return Err(format!(
+                    "dataflow edge to job {} which is not an earlier job",
+                    producer.0
+                ));
+            }
+            let rec = &self.jobs[producer.0];
+            let have = match &rec.state {
+                JobState::Queued => {
+                    let JobSpec::Kernel(p) = &rec.spec else {
+                        return Err(format!(
+                            "producer job {} is not a kernel job (named jobs keep no payload)",
+                            producer.0
+                        ));
+                    };
+                    if *index >= p.inputs.len() {
+                        return Err(format!(
+                            "producer job {} has {} array(s), no output {index}",
+                            producer.0,
+                            p.inputs.len()
+                        ));
+                    }
+                    p.inputs[*index].elems()
+                }
+                JobState::Done(o) => {
+                    let Some(arrays) = &o.arrays else {
+                        // Completed named jobs never retain outputs — say
+                        // so, instead of implying an ordering mistake.
+                        return Err(if matches!(rec.spec, JobSpec::Named(_)) {
+                            format!(
+                                "producer job {} is not a kernel job (named jobs keep \
+                                 no payload)",
+                                producer.0
+                            )
+                        } else {
+                            format!(
+                                "producer job {}'s outputs were already released",
+                                producer.0
+                            )
+                        });
+                    };
+                    if *index >= arrays.len() {
+                        return Err(format!(
+                            "producer job {} has {} array(s), no output {index}",
+                            producer.0,
+                            arrays.len()
+                        ));
+                    }
+                    arrays[*index].len()
+                }
+                JobState::Rejected { .. } => {
+                    return Err(format!("producer job {} was rejected", producer.0))
+                }
+                JobState::Split { .. } => {
+                    return Err(format!("producer job {} was split", producer.0))
+                }
+            };
+            if have != *elems {
+                return Err(format!(
+                    "dataflow edge expects {elems} element(s) but producer job {} \
+                     output {index} holds {have}",
+                    producer.0
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Register an admitted consumer's demand on its producers' outputs:
+    /// already-done producers get their array cloned into the feed store
+    /// right away; queued ones get a demand mark that
+    /// [`Scheduler::retain_demanded_outputs`] converts at completion.
+    fn register_dataflow(&mut self, id: JobId, kjob: &KernelJob) {
+        self.jobs[id].registered = true;
+        for src in &kjob.inputs {
+            let PayloadSrc::Output { producer, index, .. } = src else { continue };
+            let key = (producer.0, *index);
+            if matches!(self.jobs[producer.0].state, JobState::Done(_)) {
+                if let Some(f) = self.feeds.get_mut(&key) {
+                    f.consumers += 1;
+                } else {
+                    let JobState::Done(o) = &self.jobs[producer.0].state else {
+                        unreachable!("matched above")
+                    };
+                    let arrays = o.arrays.as_ref().expect("validated by check_dataflow");
+                    self.feeds
+                        .insert(key, FeedSlot { data: arrays[*index].clone(), consumers: 1 });
+                }
+            } else {
+                *self.feed_demand.entry(key).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Withdraw a job's demand on its producers' outputs — on dispatch
+    /// (the feed was consumed) and on rejection (it never will be). Feed
+    /// slots are dropped when their last consumer withdraws.
+    fn unregister_dataflow(&mut self, id: JobId) {
+        if !self.jobs[id].registered {
+            return;
+        }
+        self.jobs[id].registered = false;
+        let JobSpec::Kernel(kjob) = self.jobs[id].spec.clone() else { return };
+        for src in &kjob.inputs {
+            let PayloadSrc::Output { producer, index, .. } = src else { continue };
+            let key = (producer.0, *index);
+            if let Some(n) = self.feed_demand.get_mut(&key) {
+                *n -= 1;
+                if *n == 0 {
+                    self.feed_demand.remove(&key);
+                }
+            } else if let Some(f) = self.feeds.get_mut(&key) {
+                f.consumers -= 1;
+                if f.consumers == 0 {
+                    self.feeds.remove(&key);
+                }
+            }
+        }
+    }
+
+    /// A demanded producer just completed: clone the demanded output
+    /// arrays into the feed store (before any caller can
+    /// [`Scheduler::take_payload`] them away).
+    fn retain_demanded_outputs(&mut self, id: JobId) {
+        let keys: Vec<(JobId, usize)> =
+            self.feed_demand.keys().copied().filter(|k| k.0 == id).collect();
+        for key in keys {
+            let count = self.feed_demand.remove(&key).expect("collected above");
+            let JobState::Done(o) = &self.jobs[id].state else {
+                unreachable!("retain_demanded_outputs runs right after completion")
+            };
+            let arrays = o.arrays.as_ref().expect("kernel producers keep their outputs");
+            self.feeds.insert(key, FeedSlot { data: arrays[key.1].clone(), consumers: count });
+        }
+    }
+
+    /// Surface consumers whose last producer just settled in the trace.
+    /// The recorded cycle is the consumer's *effective arrival* — not
+    /// necessarily this producer's end: with producers on several
+    /// instances (or a declared future arrival) the constraint that
+    /// actually gates the consumer is the latest of them.
+    fn announce_ready(&mut self, producer: JobId) {
+        let Some(consumers) = self.consumers_of.get(&producer) else { return };
+        for &c in consumers {
+            if matches!(self.jobs[c].state, JobState::Queued) && self.ready(c) {
+                let at = self.effective_arrival(c);
+                self.trace.record(SchedEvent::DependencyReady { job: c, producer, at });
+            }
+        }
+    }
+
+    /// A failed job takes its queued consumers down with it — their input
+    /// will never exist. Recursion handles chains.
+    fn cascade_reject(&mut self, failed: JobId) {
+        let consumers: Vec<JobId> = match self.consumers_of.get(&failed) {
+            Some(v) => v
+                .iter()
+                .copied()
+                .filter(|&c| matches!(self.jobs[c].state, JobState::Queued))
+                .collect(),
+            None => return,
+        };
+        for c in consumers {
+            self.queue.retain(|&q| q != c);
+            self.reject(c, format!("producer job {failed} failed"));
         }
     }
 
@@ -373,7 +633,9 @@ impl Scheduler {
     /// this is how a pooled [`crate::session::Session`] collects results
     /// without the scheduler retaining every launch's data forever. `None`
     /// for unfinished/foreign handles, named jobs, or an already-taken
-    /// payload.
+    /// payload. Always safe with dataflow: outputs demanded by queued
+    /// consumers are cloned into the feed store at completion, so taking
+    /// the payload cannot starve a chained launch.
     pub fn take_payload(
         &mut self,
         h: JobHandle,
@@ -402,6 +664,8 @@ impl Scheduler {
             },
             arrival: desc.arrival,
             priority: desc.priority,
+            after: Vec::new(),
+            registered: false,
             predicted: 0,
             predicted_dma: 0,
             dma_bytes: 0,
@@ -469,22 +733,37 @@ impl Scheduler {
         self.trace.record(SchedEvent::Submitted { job: id, priority: kjob.priority });
         let content = kjob.content_key();
         let eff_threads = kjob.threads.min(self.cfg.accel.cores_per_cluster as u32);
+        let after: Vec<JobId> = kjob.producers().iter().map(|h| h.0).collect();
+        // Reverse edge index: each (deduplicated) producer learns about
+        // this consumer, so completion/rejection handling never scans.
+        for &p in &after {
+            if p < id {
+                self.consumers_of.entry(p).or_default().push(id);
+            }
+        }
         let kjob = Arc::new(kjob);
         self.jobs.push(JobRecord {
             spec: JobSpec::Kernel(kjob.clone()),
             batch: BatchKey::Ir { content, threads: kjob.threads },
             arrival: kjob.arrival,
             priority: kjob.priority,
+            after,
+            registered: false,
             predicted: 0,
             predicted_dma: 0,
             dma_bytes: kjob.input_bytes(),
             state: JobState::Queued,
         });
         // Shape checks up front (shared with the session's LaunchBuilder —
-        // see `job::validate_payload`): a mismatched or undersized payload
+        // see `job::validate_shape`): a mismatched or undersized payload
         // would otherwise fail deep inside the marshalling path of whatever
-        // instance it lands on, or worse, read past its buffers.
+        // instance it lands on, or worse, read past its buffers. Dataflow
+        // edges validate by element count — their data does not exist yet.
         if let Err(reason) = kjob.validate() {
+            self.reject(id, reason);
+            return JobHandle(id);
+        }
+        if let Err(reason) = self.check_dataflow(id, &kjob) {
             self.reject(id, reason);
             return JobHandle(id);
         }
@@ -521,6 +800,9 @@ impl Scheduler {
                 }
             }
         }
+        // Admitted: register demand on producer outputs so they stay
+        // retained until this consumer dispatches.
+        self.register_dataflow(id, &kjob);
         self.queue.push(id);
         JobHandle(id)
     }
@@ -528,7 +810,11 @@ impl Scheduler {
     fn reject(&mut self, id: JobId, reason: String) {
         self.trace.record(SchedEvent::Rejected { job: id, reason: reason.clone() });
         self.jobs[id].state = JobState::Rejected { reason };
+        // Withdraw feed demand before the payload (and with it the src
+        // list) is released, then take queued consumers down too.
+        self.unregister_dataflow(id);
         self.release_payload(id);
+        self.cascade_reject(id);
     }
 
     fn oversize(&mut self, id: JobId, desc: JobDesc, action: OversizeAction, reason: String) {
@@ -581,23 +867,38 @@ impl Scheduler {
         let frontier = self.pool.earliest_free();
         let policy = self.policy;
         let pressure = self.pool.pressure();
-        // Jobs that have arrived by the dispatch frontier compete under the
-        // policy; a job whose arrival is still in the future must not jump
-        // ahead of ready work (it would idle the instance and serialize
-        // everything behind the gap). Only when nothing has arrived yet
-        // does the earliest future arrival dispatch (the instance waits).
-        let arrived: Vec<usize> = (0..self.queue.len())
-            .filter(|&p| self.jobs[self.queue[p]].arrival <= frontier)
+        // Dependency-aware readiness: only jobs whose producers have all
+        // settled compete for dispatch, and a consumer's effective arrival
+        // is its last producer's finish — it can never start before its
+        // input exists. Producers always carry earlier ids and sit in the
+        // same queue, so the ready frontier is never empty.
+        let ready: Vec<usize> =
+            (0..self.queue.len()).filter(|&p| self.ready(self.queue[p])).collect();
+        if ready.is_empty() {
+            bail!("dependency deadlock: {} queued job(s), none ready", self.queue.len());
+        }
+        // Ready jobs that have arrived by the dispatch frontier compete
+        // under the policy; a job whose arrival is still in the future must
+        // not jump ahead of ready work (it would idle the instance and
+        // serialize everything behind the gap). Only when nothing has
+        // arrived yet does the earliest future arrival dispatch (the
+        // instance waits).
+        let arrived: Vec<usize> = ready
+            .iter()
+            .copied()
+            .filter(|&p| self.effective_arrival(self.queue[p]) <= frontier)
             .collect();
         let qi = if arrived.is_empty() {
             // Same-cycle future arrivals still respect the priority tier
             // (Reverse: High sorts first), then submission order.
-            (0..self.queue.len())
+            ready
+                .iter()
+                .copied()
                 .min_by_key(|&p| {
                     let r = &self.jobs[self.queue[p]];
-                    (r.arrival, std::cmp::Reverse(r.priority), p)
+                    (self.effective_arrival(self.queue[p]), std::cmp::Reverse(r.priority), p)
                 })
-                .expect("queue is non-empty")
+                .expect("ready is non-empty")
         } else {
             // Strict priority tiers: latency-critical jobs dispatch before
             // any arrived normal work; the policy orders *within* the top
@@ -621,12 +922,14 @@ impl Scheduler {
         let head = self.queue.remove(qi);
         let spec = self.jobs[head].spec.clone();
         let head_key = self.jobs[head].batch;
+        let head_eff = self.effective_arrival(head);
         // Board-aware placement: score candidate slots for the chosen job
-        // (earliest-free placement ignores the score arguments).
+        // (earliest-free placement ignores the score arguments). The
+        // arrival the engine scores with is the dependency-aware one.
         let inst = place::choose(
             &self.pool,
             self.placement,
-            self.jobs[head].arrival,
+            head_eff,
             self.jobs[head].predicted,
             self.jobs[head].dma_bytes,
             self.jobs[head].priority.is_high(),
@@ -634,13 +937,16 @@ impl Scheduler {
         let icfg = self.pool.cfg(inst).clone();
 
         // Gather same-binary followers from the queue (batching). Only
-        // jobs already arrived by the head's start may chain — batching a
-        // future arrival would park the instance on its gap — and only
-        // jobs of the head's own priority class: a Normal follower riding
-        // a High head would execute ahead of other queued High work, a
-        // priority inversion through the batch mechanism. (All-Normal
-        // streams are unaffected: every job is in the head's class.)
-        let head_start = self.pool.free_at(inst).max(self.jobs[head].arrival);
+        // *ready* jobs already arrived (dependency-aware) by the head's
+        // start may chain — batching a future arrival would park the
+        // instance on its gap, and a consumer of an unfinished producer
+        // has no input yet (a pipeline of identical chained stages thus
+        // never batches with itself) — and only jobs of the head's own
+        // priority class: a Normal follower riding a High head would
+        // execute ahead of other queued High work, a priority inversion
+        // through the batch mechanism. (All-Normal streams are unaffected:
+        // every job is in the head's class.)
+        let head_start = self.pool.free_at(inst).max(head_eff);
         let head_priority = self.jobs[head].priority;
         let mut batch = vec![head];
         if self.batching {
@@ -648,7 +954,8 @@ impl Scheduler {
             while i < self.queue.len() && batch.len() < MAX_BATCH {
                 let cand = self.queue[i];
                 if self.jobs[cand].batch == head_key
-                    && self.jobs[cand].arrival <= head_start
+                    && self.ready(cand)
+                    && self.effective_arrival(cand) <= head_start
                     && self.jobs[cand].priority == head_priority
                 {
                     batch.push(self.queue.remove(i));
@@ -701,10 +1008,13 @@ impl Scheduler {
         let mut charge = compile_cost;
         for id in batch {
             let member = self.jobs[id].spec.clone();
-            let arrival = self.jobs[id].arrival;
+            let arrival = self.effective_arrival(id);
             let priority = self.jobs[id].priority;
             // Every job executes on a fresh accelerator through the shared
             // session core; only the payload source differs per spec kind.
+            // Dataflow inputs materialize here, straight out of the feed
+            // store — the producer's output never round-trips through the
+            // submitting host.
             let ran: Result<(OffloadResult, Vec<Vec<f32>>, bool, bool)> = match &member {
                 JobSpec::Named(desc) => {
                     let w = w.as_ref().expect("named batches carry their workload");
@@ -714,15 +1024,38 @@ impl Scheduler {
                         (out.result, out.arrays, verified, false)
                     })
                 }
-                JobSpec::Kernel(kjob) => crate::session::core::run_arrays(
-                    &icfg,
-                    &lowered,
-                    &kjob.inputs,
-                    &kjob.fargs,
-                    kjob.teams,
-                    kjob.max_cycles,
-                )
-                .map(|(result, arrays)| (result, arrays, true, true)),
+                JobSpec::Kernel(kjob) => {
+                    let resolved: std::result::Result<Vec<&[f32]>, String> = kjob
+                        .inputs
+                        .iter()
+                        .map(|src| match src {
+                            PayloadSrc::Data(v) => Ok(v.as_slice()),
+                            PayloadSrc::Output { producer, index, .. } => self
+                                .feeds
+                                .get(&(producer.0, *index))
+                                .map(|f| f.data.as_slice())
+                                .ok_or_else(|| {
+                                    format!(
+                                        "internal: producer job {} output {index} not \
+                                         retained for this consumer",
+                                        producer.0
+                                    )
+                                }),
+                        })
+                        .collect();
+                    match resolved {
+                        Ok(refs) => crate::session::core::run_arrays(
+                            &icfg,
+                            &lowered,
+                            &refs,
+                            &kjob.fargs,
+                            kjob.teams,
+                            kjob.max_cycles,
+                        )
+                        .map(|(result, arrays)| (result, arrays, true, true)),
+                        Err(msg) => Err(anyhow!(msg)),
+                    }
+                }
                 JobSpec::Retired => unreachable!("retired jobs are never queued"),
             };
             match ran {
@@ -775,6 +1108,13 @@ impl Scheduler {
                         perf: keep_payload.then(|| Box::new(result.perf)),
                         arrays: keep_payload.then_some(arrays),
                     });
+                    // Dataflow bookkeeping, in order: drop the feeds this
+                    // job consumed, retain the outputs queued consumers
+                    // demanded (before anyone can take the payload), and
+                    // surface newly-ready consumers in the trace.
+                    self.unregister_dataflow(id);
+                    self.retain_demanded_outputs(id);
+                    self.announce_ready(id);
                     // The job has settled: its input snapshot (and kernel
                     // IR) will never be read again — release it so long
                     // serve runs stop growing memory.
@@ -1432,6 +1772,146 @@ mod tests {
         let bad = s.submit_kernel(KernelJob::new(saxpy(16), vec![vec![0.0; 16]], vec![]));
         assert!(matches!(s.state(bad), Some(JobState::Rejected { .. })));
         assert_eq!(s.retained_input_bytes(), 0);
+    }
+
+    #[test]
+    fn chained_kernel_job_consumes_producer_output() {
+        let mut s = Scheduler::new(aurora(), 2, Policy::Fifo);
+        let xs = crate::workloads::gen_f32(7, 64);
+        let ys = crate::workloads::gen_f32(8, 64);
+        let a = s.submit_kernel(KernelJob::new(saxpy(64), vec![xs.clone(), ys.clone()], vec![3.0]));
+        // B reads A's output array 1 (the updated Y) as its X input; its
+        // own Y starts zeroed. Same kernel content as A — the readiness
+        // check must keep it out of A's batch.
+        let b = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(64),
+            vec![
+                PayloadSrc::Output { producer: a, index: 1, elems: 64 },
+                PayloadSrc::Data(vec![0.0; 64]),
+            ],
+            vec![2.0],
+        ));
+        assert!(s.retained_input_bytes() > 0);
+        s.drain().unwrap();
+        let (start_b, end_a) = (s.poll(b).unwrap().start, s.poll(a).unwrap().end);
+        assert!(start_b >= end_a, "consumer started at {start_b} before producer ended at {end_a}");
+        let ob = s.poll(b).unwrap();
+        let arrays = ob.arrays.as_ref().expect("kernel jobs carry their outputs");
+        for i in 0..64 {
+            let ya = 3.0f32 * xs[i] + ys[i];
+            assert_eq!(arrays[1][i], 2.0f32 * ya, "chained y[{i}]");
+        }
+        // Readiness surfaced in the trace; nothing retained after drain.
+        assert!(s.trace.events.iter().any(|e| matches!(e,
+            SchedEvent::DependencyReady { job, producer, .. }
+                if *job == b.0 && *producer == a.0)));
+        assert_eq!(s.retained_input_bytes(), 0);
+    }
+
+    #[test]
+    fn consumer_of_rejected_producer_is_rejected() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        // Producer rejected at submission (arity mismatch).
+        let bad = s.submit_kernel(KernelJob::new(saxpy(16), vec![vec![0.0; 16]], vec![1.0]));
+        assert!(matches!(s.state(bad), Some(JobState::Rejected { .. })));
+        let c = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(16),
+            vec![
+                PayloadSrc::Output { producer: bad, index: 1, elems: 16 },
+                PayloadSrc::Data(vec![0.0; 16]),
+            ],
+            vec![1.0],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(c) else {
+            panic!("expected rejection, got {:?}", s.state(c));
+        };
+        assert!(reason.contains("rejected"), "{reason}");
+        // An edge whose element-count claim disagrees with the producer is
+        // caught before any data exists.
+        let a = s.submit_kernel(saxpy_job(64, 1));
+        let c = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(64),
+            vec![
+                PayloadSrc::Output { producer: a, index: 1, elems: 128 },
+                PayloadSrc::Data(vec![0.0; 64]),
+            ],
+            vec![1.0],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(c) else {
+            panic!("expected rejection, got {:?}", s.state(c));
+        };
+        assert!(reason.contains("expects 128"), "{reason}");
+        s.drain().unwrap();
+    }
+
+    #[test]
+    fn failed_producer_cascades_to_queued_consumers() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let mut p = saxpy_job(32, 1);
+        p.max_cycles = 1; // aborts mid-run: an execution failure at dispatch
+        let a = s.submit_kernel(p);
+        let b = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(32),
+            vec![
+                PayloadSrc::Output { producer: a, index: 1, elems: 32 },
+                PayloadSrc::Data(vec![0.0; 32]),
+            ],
+            vec![1.0],
+        ));
+        s.drain().unwrap();
+        assert!(matches!(s.state(a), Some(JobState::Rejected { .. })));
+        let Some(JobState::Rejected { reason }) = s.state(b) else {
+            panic!("expected cascaded rejection, got {:?}", s.state(b));
+        };
+        assert!(reason.contains("producer job"), "{reason}");
+        assert_eq!(s.pending(), 0, "cascaded consumers must leave the queue");
+        assert_eq!(s.retained_input_bytes(), 0);
+    }
+
+    #[test]
+    fn dataflow_survives_take_payload() {
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let a = s.submit_kernel(saxpy_job(32, 5));
+        s.drain().unwrap();
+        // Consumer registered after the producer completed, and the
+        // producer's payload moved out before the consumer runs: the feed
+        // store must have its own copy.
+        let b = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(32),
+            vec![
+                PayloadSrc::Output { producer: a, index: 1, elems: 32 },
+                PayloadSrc::Data(vec![0.0; 32]),
+            ],
+            vec![2.0],
+        ));
+        let (arrays, _) = s.take_payload(a).unwrap();
+        s.drain().unwrap();
+        let ob = s.poll(b).unwrap();
+        let got = ob.arrays.as_ref().unwrap();
+        for i in 0..32 {
+            assert_eq!(got[1][i], 2.0f32 * arrays[1][i], "y[{i}]");
+        }
+        assert_eq!(s.retained_input_bytes(), 0, "feeds drain with their consumers");
+    }
+
+    #[test]
+    fn after_edge_orders_without_dataflow() {
+        // A pure ordering edge serializes two jobs a pool of 2 would
+        // otherwise run concurrently.
+        let mut s = Scheduler::new(aurora(), 2, Policy::Fifo).with_batching(false);
+        let a = s.submit_kernel(saxpy_job(64, 1));
+        let mut ordered = saxpy_job(32, 2);
+        ordered.after = vec![a];
+        let b = s.submit_kernel(ordered);
+        s.drain().unwrap();
+        let (oa_end, ob_start) = (s.poll(a).unwrap().end, s.poll(b).unwrap().start);
+        assert!(ob_start >= oa_end, "ordered job started {ob_start} before {oa_end}");
+        // Without the edge the second job starts immediately on instance 1.
+        let mut s2 = Scheduler::new(aurora(), 2, Policy::Fifo).with_batching(false);
+        s2.submit_kernel(saxpy_job(64, 1));
+        let b2 = s2.submit_kernel(saxpy_job(32, 2));
+        s2.drain().unwrap();
+        assert_eq!(s2.poll(b2).unwrap().start, 0);
     }
 
     #[test]

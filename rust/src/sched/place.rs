@@ -90,6 +90,11 @@ pub struct SlotScore {
 
 /// Score every slot of `pool` for a job of `predicted_cycles` static cycles
 /// and `dma_bytes` of board-DRAM traffic, runnable from `arrival`.
+///
+/// `arrival` is the *effective* arrival the scheduler computes: for a job
+/// with dataflow/ordering producers it is the last producer's finish, so
+/// the engine scores a chained consumer from the first cycle its input can
+/// exist — not from its submission cycle.
 pub fn scores(
     pool: &InstancePool,
     arrival: u64,

@@ -70,6 +70,11 @@ pub fn offload_lowered(
 /// and return the offload result together with the final contents of every
 /// array.
 ///
+/// Inputs are borrowed slices so callers that chain launches (the
+/// scheduler feeding a consumer job from a producer's retained outputs,
+/// the session feeding a dataflow edge) never have to copy a payload just
+/// to run it.
+///
 /// This is the execution model every launch path shares: each launch gets
 /// its own SPM/IOMMU state, so results depend only on the binary and the
 /// input data — never on what ran before (the scheduler's bit-identity
@@ -77,7 +82,7 @@ pub fn offload_lowered(
 pub fn run_arrays(
     cfg: &HeroConfig,
     lowered: &Lowered,
-    arrays: &[Vec<f32>],
+    arrays: &[&[f32]],
     fargs: &[f32],
     n_teams: usize,
     max_cycles: u64,

@@ -12,27 +12,41 @@
 //! * [`Session::single`] owns one accelerator configuration,
 //!   [`Session::pool`] an instance pool behind the offload scheduler — the
 //!   client code is identical either way, and `&mut Accel` never appears.
-//! * [`Session::buffer_from_f32`] / [`Session::buffer_zeroed`] replace raw
-//!   `HostBuf` handling (the 4-GiB-window discipline lives in the shared
-//!   offload core, checked once for everyone).
+//! * **Buffers have a lifecycle** (see `session/README.md`):
+//!   [`Session::buffer_from_f32`] / [`Session::buffer_zeroed`] allocate
+//!   generation-tagged handles, [`Session::free`] releases one (its slot
+//!   is reused by the next allocation, and stale handles are rejected),
+//!   and [`Session::resident_bytes`] reports what the session holds — a
+//!   long-running serve loop that frees what it no longer needs stays
+//!   bounded.
 //! * [`Session::launch`] starts a builder:
 //!   `session.launch(&kernel).args(&[&x, &y]).fargs(&[a]).teams(n).submit()`
 //!   returns a [`Launch`] handle, async by default;
 //!   [`Session::wait`] resolves it to a [`LaunchResult`] (device/total
 //!   cycles, perf counters, output digest) and materializes the outputs in
 //!   the session's buffers.
+//! * **Launches chain through buffers** without host round-trips:
+//!   [`LaunchBuilder::writes`] marks a parameter as a device-resident
+//!   output, and a later launch that [`LaunchBuilder::reads`] (or
+//!   `.writes`, for in-place updates) the same buffer *before* the
+//!   producer resolved gets a dataflow edge instead of a data snapshot —
+//!   the producer's output feeds the consumer directly (on a pooled
+//!   session via [`crate::sched::PayloadSrc::Output`] and the scheduler's
+//!   feed store; on a single session at producer resolution). Waiting the
+//!   tail of a chain resolves its producers first.
 //! * [`Session::submit_workload`] / [`Session::run_workload`] are the
 //!   registry-workload conveniences `hero run`, the examples and the
 //!   benches use; [`Session::submit_jobs`] / [`Session::drain`] /
 //!   [`Session::report`] drive named job streams on a pooled session
 //!   (`hero serve`).
 //!
-//! Launches are snapshot-in / copy-out: argument buffers are captured at
-//! `submit` and written back at `wait`, so a pooled launch behaves exactly
-//! like a single-accelerator one — and every launch runs on a fresh
-//! accelerator through [`core::run_arrays`], which is what makes the two
-//! paths bit-identical (the equivalence tests in `tests/session.rs` pin
-//! this down).
+//! Non-chained launches are snapshot-in / copy-out exactly as before:
+//! argument buffers are captured at `submit` and written back at `wait`,
+//! so a pooled launch behaves exactly like a single-accelerator one — and
+//! every launch runs on a fresh accelerator through [`core::run_arrays`],
+//! which is what makes the paths bit-identical (the equivalence tests in
+//! `tests/session.rs` and the chained-pipeline property in
+//! `tests/properties.rs` pin this down).
 
 pub mod core;
 
@@ -41,10 +55,10 @@ use crate::compiler::ir::Kernel;
 use crate::compiler::AutoDmaReport;
 use crate::config::HeroConfig;
 use crate::sched::cache::BinaryCache;
-use crate::sched::job::kernel_content_key;
+use crate::sched::job::{kernel_content_key, validate_shape};
 use crate::sched::{
-    digest_arrays, JobDesc, JobHandle, JobState, KernelJob, Policy, Priority, Scheduler,
-    ServeReport,
+    digest_arrays, JobDesc, JobHandle, JobState, KernelJob, PayloadSrc, Policy, Priority,
+    Scheduler, ServeReport,
 };
 use crate::trace::PerfCounters;
 use crate::workloads::Workload;
@@ -54,9 +68,13 @@ use anyhow::{anyhow, bail, ensure, Result};
 const LAUNCH_MAX_CYCLES: u64 = 100_000_000_000;
 
 /// A session-owned f32 buffer handle (replaces raw `HostBuf` plumbing).
+/// Handles carry a generation: after [`Session::free`] the slot may be
+/// reused, and the stale handle is rejected instead of aliasing the new
+/// buffer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Buffer {
     id: usize,
+    gen: u32,
 }
 
 /// An in-flight launch handle (the job-level analogue of the HERO API's
@@ -119,12 +137,60 @@ pub struct WorkloadOutcome {
     pub buffers: Vec<Buffer>,
 }
 
+/// How a launch parameter relates to its session buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArgKind {
+    /// Legacy read-write binding ([`LaunchBuilder::arg`]): eager snapshot
+    /// in, written back at resolve, no dataflow marker.
+    Arg,
+    /// Input-only ([`LaunchBuilder::reads`]): snapshot (or dataflow edge),
+    /// the kernel's final view of the array is discarded.
+    Read,
+    /// Device-resident output ([`LaunchBuilder::writes`]): written back at
+    /// resolve, and marked pending so later launches chain on it.
+    Write,
+}
+
+/// Where one launch parameter's initial contents come from.
+#[derive(Debug, Clone)]
+enum LocalSrc {
+    /// Eager snapshot, captured at submit.
+    Data(Vec<f32>),
+    /// Output array `index` of unresolved launch `launch` (dataflow edge):
+    /// materialized when the producer resolves, never through the host.
+    Dep { launch: usize, index: usize, elems: usize },
+}
+
+impl LocalSrc {
+    fn elems(&self) -> usize {
+        match self {
+            LocalSrc::Data(v) => v.len(),
+            LocalSrc::Dep { elems, .. } => *elems,
+        }
+    }
+}
+
+/// One buffer slot of the session heap.
+#[derive(Debug)]
+struct Slot {
+    /// Bumped at [`Session::free`]: stale handles are detected exactly.
+    gen: u32,
+    /// Current resident contents; `None` while the slot sits on the free
+    /// list (unreachable through any live handle).
+    data: Option<Vec<f32>>,
+    /// The unresolved launch (and parameter index) whose output will
+    /// overwrite this buffer — the dataflow marker consumers chain on.
+    pending: Option<(usize, usize)>,
+}
+
 /// Everything a deferred single-backend launch needs to execute.
 struct SingleSpec {
     kernel: Kernel,
     autodma: bool,
-    args: Vec<usize>,
-    inputs: Vec<Vec<f32>>,
+    /// Per-parameter binding: kind + slot + the generation at submit
+    /// (write-back skips slots freed in the meantime).
+    binds: Vec<(ArgKind, usize, u32)>,
+    inputs: Vec<LocalSrc>,
     fargs: Vec<f32>,
     teams: usize,
     threads: u32,
@@ -134,8 +200,10 @@ struct SingleSpec {
 enum LaunchState {
     /// Queued on a single session; executes at wait (async by default).
     PendingSingle(Box<SingleSpec>),
-    /// Submitted to the pooled scheduler.
-    PendingPool { handle: JobHandle, args: Vec<usize> },
+    /// Submitted to the pooled scheduler. `deps` are the session launch
+    /// ids of dataflow producers (resolved first at wait, so buffers
+    /// become visible in submission order on both backends).
+    PendingPool { handle: JobHandle, binds: Vec<(ArgKind, usize, u32)>, deps: Vec<usize> },
     Done(Box<LaunchResult>),
     Failed(String),
 }
@@ -146,10 +214,16 @@ enum Backend {
 }
 
 /// The unified offload session. See the [`session`](crate::session)
-/// module docs for the full tour.
+/// module docs and `session/README.md` for the full tour.
 pub struct Session {
-    buffers: Vec<Vec<f32>>,
+    slots: Vec<Slot>,
+    free_ids: Vec<usize>,
     launches: Vec<LaunchState>,
+    /// Single-backend reverse dataflow index: producer launch id ->
+    /// unresolved consumer launch ids. Feeding at producer resolution
+    /// looks up exactly the affected consumers (entries are consumed with
+    /// the producer; chain-free sessions never touch it).
+    single_consumers: std::collections::HashMap<usize, Vec<usize>>,
     backend: Backend,
 }
 
@@ -157,8 +231,10 @@ impl Session {
     /// A session over one accelerator of configuration `cfg`.
     pub fn single(cfg: HeroConfig) -> Session {
         Session {
-            buffers: Vec::new(),
+            slots: Vec::new(),
+            free_ids: Vec::new(),
             launches: Vec::new(),
+            single_consumers: std::collections::HashMap::new(),
             backend: Backend::Single { cfg, cache: BinaryCache::new(true) },
         }
     }
@@ -174,8 +250,10 @@ impl Session {
     /// A session over an explicitly configured scheduler.
     pub fn with_scheduler(sched: Scheduler) -> Session {
         Session {
-            buffers: Vec::new(),
+            slots: Vec::new(),
+            free_ids: Vec::new(),
             launches: Vec::new(),
+            single_consumers: std::collections::HashMap::new(),
             backend: Backend::Pool { sched },
         }
     }
@@ -190,32 +268,92 @@ impl Session {
 
     // --- buffers ---------------------------------------------------------
 
-    /// Allocate a session buffer initialized from `data`.
+    fn alloc(&mut self, data: Vec<f32>) -> Buffer {
+        if let Some(id) = self.free_ids.pop() {
+            let s = &mut self.slots[id];
+            s.data = Some(data);
+            Buffer { id, gen: s.gen }
+        } else {
+            self.slots.push(Slot { gen: 0, data: Some(data), pending: None });
+            Buffer { id: self.slots.len() - 1, gen: 0 }
+        }
+    }
+
+    /// Bounds- and generation-check a handle.
+    fn slot_index(&self, buf: &Buffer) -> Result<usize> {
+        let s = self
+            .slots
+            .get(buf.id)
+            .ok_or_else(|| anyhow!("buffer does not belong to this session"))?;
+        ensure!(
+            s.gen == buf.gen,
+            "stale buffer handle: the buffer was freed (and its slot possibly reused)"
+        );
+        Ok(buf.id)
+    }
+
+    fn slot_data(&self, buf: &Buffer) -> Result<&Vec<f32>> {
+        let id = self.slot_index(buf)?;
+        self.slots[id].data.as_ref().ok_or_else(|| anyhow!("buffer was freed"))
+    }
+
+    /// Allocate a session buffer initialized from `data`. Freed slots are
+    /// reused before the heap grows.
     pub fn buffer_from_f32(&mut self, data: &[f32]) -> Buffer {
-        self.buffers.push(data.to_vec());
-        Buffer { id: self.buffers.len() - 1 }
+        self.alloc(data.to_vec())
     }
 
     /// Allocate a zero-initialized session buffer of `elems` f32 (outputs).
     pub fn buffer_zeroed(&mut self, elems: usize) -> Buffer {
-        self.buffers.push(vec![0.0; elems]);
-        Buffer { id: self.buffers.len() - 1 }
+        self.alloc(vec![0.0; elems])
     }
 
-    /// Overwrite a buffer's contents (length may change).
-    pub fn write_f32(&mut self, buf: &Buffer, data: &[f32]) -> Result<()> {
-        ensure!(buf.id < self.buffers.len(), "buffer does not belong to this session");
-        self.buffers[buf.id] = data.to_vec();
+    /// Release a buffer: its bytes leave [`Session::resident_bytes`] and
+    /// its slot is reused by the next allocation; the handle (and any copy
+    /// of it) is dead from here on. A buffer that is the pending output of
+    /// an unresolved launch cannot be freed — wait for (or drain) the
+    /// launch first.
+    pub fn free(&mut self, buf: &Buffer) -> Result<()> {
+        let id = self.slot_index(buf)?;
+        if let Some((launch, _)) = self.slots[id].pending {
+            bail!(
+                "buffer is the pending output of unresolved launch {launch}; \
+                 wait for it (or drain) before freeing"
+            );
+        }
+        let s = &mut self.slots[id];
+        s.gen = s.gen.wrapping_add(1);
+        s.data = None;
+        self.free_ids.push(id);
         Ok(())
     }
 
-    /// Read a buffer's current contents (outputs become visible after the
-    /// producing launch's [`Session::wait`]).
+    /// Bytes currently resident in the session's buffer heap. Grows with
+    /// allocations, shrinks with [`Session::free`] — after freeing what a
+    /// pipeline no longer needs, this returns to its watermark (no
+    /// monotonic growth in long serve loops).
+    pub fn resident_bytes(&self) -> u64 {
+        self.slots.iter().map(|s| s.data.as_ref().map_or(0, |d| d.len() as u64 * 4)).sum()
+    }
+
+    /// Overwrite a buffer's contents (length may change). Rejected while
+    /// the buffer is the pending output of an unresolved launch — the
+    /// dataflow chained on it would silently diverge otherwise.
+    pub fn write_f32(&mut self, buf: &Buffer, data: &[f32]) -> Result<()> {
+        let id = self.slot_index(buf)?;
+        if let Some((launch, _)) = self.slots[id].pending {
+            bail!("buffer is the pending output of unresolved launch {launch}");
+        }
+        self.slots[id].data = Some(data.to_vec());
+        Ok(())
+    }
+
+    /// Read a buffer's current contents. While the buffer is the pending
+    /// output of an unresolved launch this is the *pre-launch* snapshot
+    /// view (launches are async); outputs become visible after the
+    /// producing launch's [`Session::wait`].
     pub fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
-        self.buffers
-            .get(buf.id)
-            .cloned()
-            .ok_or_else(|| anyhow!("buffer does not belong to this session"))
+        Ok(self.slot_data(buf)?.clone())
     }
 
     /// Read several buffers at once (e.g. a [`WorkloadRun`]'s).
@@ -230,7 +368,7 @@ impl Session {
         LaunchBuilder {
             kernel: kernel.clone(),
             autodma: false,
-            args: Vec::new(),
+            binds: Vec::new(),
             fargs: Vec::new(),
             teams: 1,
             threads: None,
@@ -244,33 +382,93 @@ impl Session {
     /// Resolve a launch: execute it (single sessions defer to here; pooled
     /// sessions drive the scheduler until the job settles), write the
     /// outputs back into the argument buffers, and return the result.
-    /// Waiting a second time returns the memoized result.
+    /// Dataflow producers resolve first, so waiting the tail of a chain
+    /// resolves the whole chain (and write-backs land in submission
+    /// order). Waiting a second time returns the memoized result.
     pub fn wait(&mut self, launch: &Launch) -> Result<LaunchResult> {
         ensure!(launch.id < self.launches.len(), "launch does not belong to this session");
-        match &self.launches[launch.id] {
+        // Resolve the transitive producer chain first, iteratively —
+        // dataflow edges always point at earlier launches, so ascending id
+        // order is a topological order and an arbitrarily deep chain costs
+        // no recursion.
+        let mut need: Vec<usize> = Vec::new();
+        let mut stack = vec![launch.id];
+        let mut seen = std::collections::HashSet::new();
+        while let Some(id) = stack.pop() {
+            for p in self.producer_launches(id) {
+                if seen.insert(p) {
+                    need.push(p);
+                    stack.push(p);
+                }
+            }
+        }
+        need.sort_unstable();
+        for p in need {
+            // A producer failure is not this wait's error yet: every
+            // launch between it and the requested one settles as failed in
+            // order, and the final resolve reports the chain.
+            let _ = self.resolve_now(p);
+        }
+        self.resolve_now(launch.id)
+    }
+
+    /// Dataflow producers of an unresolved launch (empty once settled).
+    fn producer_launches(&self, id: usize) -> Vec<usize> {
+        match &self.launches[id] {
+            LaunchState::PendingSingle(spec) => spec
+                .inputs
+                .iter()
+                .filter_map(|s| match s {
+                    LocalSrc::Dep { launch, .. } => Some(*launch),
+                    LocalSrc::Data(_) => None,
+                })
+                .collect(),
+            LaunchState::PendingPool { deps, .. } => deps.clone(),
+            LaunchState::Done(_) | LaunchState::Failed(_) => Vec::new(),
+        }
+    }
+
+    /// Settle one launch whose producers have all settled already (the
+    /// iterative engine behind [`Session::wait`]). Memoized results return
+    /// directly; a failed producer fails this launch too.
+    fn resolve_now(&mut self, id: usize) -> Result<LaunchResult> {
+        match &self.launches[id] {
             LaunchState::Done(r) => return Ok((**r).clone()),
             LaunchState::Failed(e) => bail!("launch previously failed: {e}"),
             _ => {}
         }
+        let write_slots = self.write_slots(id);
+        for p in self.producer_launches(id) {
+            if let LaunchState::Failed(e) = &self.launches[p] {
+                let msg = format!("producer launch {p} failed: {e}");
+                self.launches[id] = LaunchState::Failed(msg.clone());
+                self.clear_pending(id, &write_slots);
+                bail!("{msg}");
+            }
+        }
         let state = std::mem::replace(
-            &mut self.launches[launch.id],
+            &mut self.launches[id],
             LaunchState::Failed("launch interrupted mid-wait".into()),
         );
         let run = match state {
-            LaunchState::PendingSingle(spec) => self.run_single(*spec),
-            LaunchState::PendingPool { handle, args } => self.finish_pool(handle, &args),
+            LaunchState::PendingSingle(spec) => self.run_single(id, *spec),
+            LaunchState::PendingPool { handle, binds, .. } => self.finish_pool(handle, &binds),
             LaunchState::Done(_) | LaunchState::Failed(_) => unreachable!("handled above"),
         };
-        match run {
+        let out = match run {
             Ok(r) => {
-                self.launches[launch.id] = LaunchState::Done(Box::new(r.clone()));
+                self.launches[id] = LaunchState::Done(Box::new(r.clone()));
                 Ok(r)
             }
             Err(e) => {
-                self.launches[launch.id] = LaunchState::Failed(e.to_string());
+                self.launches[id] = LaunchState::Failed(e.to_string());
                 Err(e)
             }
-        }
+        };
+        // Settled either way: buffers this launch was going to overwrite
+        // are no longer pending (on failure they keep their old contents).
+        self.clear_pending(id, &write_slots);
+        out
     }
 
     /// The memoized result of an already-waited launch (non-blocking).
@@ -281,25 +479,91 @@ impl Session {
         }
     }
 
-    fn run_single(&mut self, spec: SingleSpec) -> Result<LaunchResult> {
+    /// Drop the pending-output markers a settled launch left on its write
+    /// slots (`slots` is the launch's own recorded Write bindings — no
+    /// heap scan; a marker that moved on to a later chained writer is left
+    /// alone by the ownership check).
+    fn clear_pending(&mut self, launch: usize, slots: &[usize]) {
+        for &sid in slots {
+            if matches!(self.slots[sid].pending, Some((l, _)) if l == launch) {
+                self.slots[sid].pending = None;
+            }
+        }
+    }
+
+    /// Slot ids of an unresolved launch's Write bindings (empty once
+    /// settled) — what `clear_pending` needs.
+    fn write_slots(&self, id: usize) -> Vec<usize> {
+        let binds = match &self.launches[id] {
+            LaunchState::PendingSingle(spec) => &spec.binds,
+            LaunchState::PendingPool { binds, .. } => binds,
+            LaunchState::Done(_) | LaunchState::Failed(_) => return Vec::new(),
+        };
+        binds
+            .iter()
+            .filter(|(k, _, _)| *k == ArgKind::Write)
+            .map(|(_, s, _)| *s)
+            .collect()
+    }
+
+    /// Replace dataflow edges on unresolved single-backend launches with
+    /// the freshly produced arrays (the single-session analogue of the
+    /// scheduler's feed store — consumers are fed at producer resolution,
+    /// never through a host round-trip of the session heap).
+    fn feed_single_consumers(&mut self, producer: usize, arrays: &[Vec<f32>]) {
+        // Direct lookup, and the entry is consumed with the producer: no
+        // new consumer can register on it afterwards (the buffer stops
+        // being pending once the producer resolves).
+        let Some(consumers) = self.single_consumers.remove(&producer) else { return };
+        for c in consumers {
+            if let LaunchState::PendingSingle(spec) = &mut self.launches[c] {
+                for src in &mut spec.inputs {
+                    if let LocalSrc::Dep { launch, index, .. } = src {
+                        if *launch == producer {
+                            *src = LocalSrc::Data(arrays[*index].clone());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write a resolved launch's output arrays back into its buffers.
+    /// `Read` bindings are skipped (input-only), and a slot freed since
+    /// submit (generation mismatch) is left alone.
+    fn write_back(&mut self, binds: &[(ArgKind, usize, u32)], arrays: Vec<Vec<f32>>) {
+        for ((kind, slot, gen), data) in binds.iter().zip(arrays) {
+            if matches!(kind, ArgKind::Read) {
+                continue;
+            }
+            let s = &mut self.slots[*slot];
+            if s.gen == *gen && s.data.is_some() {
+                s.data = Some(data);
+            }
+        }
+    }
+
+    fn run_single(&mut self, id: usize, spec: SingleSpec) -> Result<LaunchResult> {
         let Backend::Single { cfg, cache } = &mut self.backend else {
             unreachable!("single launches only queue on single sessions")
         };
         let content = kernel_content_key(&spec.kernel, spec.autodma);
         let (lowered, compile_cycles, autodma) =
             cache.acquire_ir(cfg, &spec.kernel, spec.autodma, spec.threads, content)?;
-        let (result, arrays) = core::run_arrays(
-            cfg,
-            &lowered,
-            &spec.inputs,
-            &spec.fargs,
-            spec.teams,
-            spec.max_cycles,
-        )?;
-        let digest = digest_arrays(&arrays);
-        for (&bid, data) in spec.args.iter().zip(arrays) {
-            self.buffers[bid] = data;
+        let mut refs: Vec<&[f32]> = Vec::with_capacity(spec.inputs.len());
+        for src in &spec.inputs {
+            match src {
+                LocalSrc::Data(v) => refs.push(v.as_slice()),
+                LocalSrc::Dep { launch, .. } => {
+                    bail!("internal: producer launch {launch} left unresolved")
+                }
+            }
         }
+        let (result, arrays) =
+            core::run_arrays(cfg, &lowered, &refs, &spec.fargs, spec.teams, spec.max_cycles)?;
+        let digest = digest_arrays(&arrays);
+        self.feed_single_consumers(id, &arrays);
+        self.write_back(&spec.binds, arrays);
         Ok(LaunchResult {
             device_cycles: result.device_cycles,
             total_cycles: result.total_cycles,
@@ -311,7 +575,11 @@ impl Session {
         })
     }
 
-    fn finish_pool(&mut self, handle: JobHandle, args: &[usize]) -> Result<LaunchResult> {
+    fn finish_pool(
+        &mut self,
+        handle: JobHandle,
+        binds: &[(ArgKind, usize, u32)],
+    ) -> Result<LaunchResult> {
         let Backend::Pool { sched } = &mut self.backend else {
             unreachable!("pool launches only queue on pooled sessions")
         };
@@ -322,7 +590,9 @@ impl Session {
             JobState::Queued => unreachable!("wait settles the job"),
         }
         // Move the payload out rather than cloning it, so the scheduler
-        // does not retain every launch's data for the session's lifetime.
+        // does not retain every launch's data for the session's lifetime
+        // (outputs demanded by chained consumers were already cloned into
+        // the scheduler's feed store at completion).
         let (arrays, perf) = sched
             .take_payload(handle)
             .ok_or_else(|| anyhow!("scheduler returned no arrays for a kernel job"))?;
@@ -336,9 +606,7 @@ impl Session {
             compile_cycles: o.compile_cycles,
             autodma: None,
         };
-        for (&bid, data) in args.iter().zip(arrays) {
-            self.buffers[bid] = data;
-        }
+        self.write_back(binds, arrays);
         Ok(result)
     }
 
@@ -445,7 +713,10 @@ impl Session {
         Ok(self.sched()?.report())
     }
 
-    /// Rendered scheduler event log (pooled sessions).
+    /// Rendered scheduler event log (pooled sessions) — covers pooled
+    /// kernel launches too: submit/compile/dispatch/complete per launch,
+    /// plus `ready` lines when a chained launch's last producer settles
+    /// ([`crate::trace::SchedEvent::DependencyReady`]).
     pub fn events(&self) -> Result<String> {
         Ok(self.sched()?.trace.render())
     }
@@ -454,11 +725,17 @@ impl Session {
 /// Builder returned by [`Session::launch`]. Defaults: no AutoDMA, one team,
 /// the configuration's full cluster width as the thread count, and a
 /// 100 G-cycle simulation budget.
+///
+/// Bind the kernel's host-array parameters in declaration order, choosing
+/// a mode per parameter: [`LaunchBuilder::arg`] (legacy read-write
+/// snapshot), [`LaunchBuilder::reads`] (input-only) or
+/// [`LaunchBuilder::writes`] (device-resident output that later launches
+/// chain on).
 pub struct LaunchBuilder<'s> {
     session: &'s mut Session,
     kernel: Kernel,
     autodma: bool,
-    args: Vec<usize>,
+    binds: Vec<(ArgKind, Buffer)>,
     fargs: Vec<f32>,
     teams: usize,
     threads: Option<u32>,
@@ -468,7 +745,30 @@ pub struct LaunchBuilder<'s> {
 }
 
 impl LaunchBuilder<'_> {
-    /// Bind the kernel's host-array parameters, in declaration order.
+    fn bind(mut self, buf: &Buffer, kind: ArgKind) -> Self {
+        if self.err.is_some() {
+            return self;
+        }
+        match self.session.slot_index(buf) {
+            Err(e) => self.err = Some(e.to_string()),
+            Ok(id) => {
+                if kind == ArgKind::Arg {
+                    if let Some((l, _)) = self.session.slots[id].pending {
+                        self.err = Some(format!(
+                            "buffer is the pending output of launch {l}; chain it \
+                             explicitly with .reads() or .writes()"
+                        ));
+                        return self;
+                    }
+                }
+                self.binds.push((kind, *buf));
+            }
+        }
+        self
+    }
+
+    /// Bind the kernel's host-array parameters, in declaration order
+    /// (legacy read-write mode, as [`LaunchBuilder::arg`]).
     pub fn args(mut self, bufs: &[&Buffer]) -> Self {
         for b in bufs {
             self = self.arg(b);
@@ -476,14 +776,31 @@ impl LaunchBuilder<'_> {
         self
     }
 
-    /// Bind the next host-array parameter.
-    pub fn arg(mut self, buf: &Buffer) -> Self {
-        if buf.id >= self.session.buffers.len() {
-            self.err = Some("argument buffer does not belong to this session".into());
-        } else {
-            self.args.push(buf.id);
-        }
-        self
+    /// Bind the next host-array parameter (read-write snapshot semantics:
+    /// captured at submit, written back at wait — PR 3 behavior,
+    /// bit-identical). Refuses a buffer that is pending as another
+    /// launch's output; chain those with [`LaunchBuilder::reads`] /
+    /// [`LaunchBuilder::writes`] instead.
+    pub fn arg(self, buf: &Buffer) -> Self {
+        self.bind(buf, ArgKind::Arg)
+    }
+
+    /// Bind the next host-array parameter as an *input*: the kernel's
+    /// final view of it is discarded (no write-back). If the buffer is the
+    /// pending output of an unresolved launch, this records a dataflow
+    /// edge — the producer's output feeds this launch directly, with no
+    /// host round-trip.
+    pub fn reads(self, buf: &Buffer) -> Self {
+        self.bind(buf, ArgKind::Read)
+    }
+
+    /// Bind the next host-array parameter as a device-resident *output*:
+    /// written back at resolve, and marked pending so later launches can
+    /// consume it by handle. On a buffer already pending from an earlier
+    /// launch this chains an in-place update (read-modify-write): the
+    /// earlier output is this launch's initial contents.
+    pub fn writes(self, buf: &Buffer) -> Self {
+        self.bind(buf, ArgKind::Write)
     }
 
     /// Bind the kernel's float parameters, in declaration order.
@@ -528,8 +845,10 @@ impl LaunchBuilder<'_> {
         self
     }
 
-    /// Submit the launch: snapshots the argument buffers and returns an
-    /// async [`Launch`] handle (resolve with [`Session::wait`]).
+    /// Submit the launch and return an async [`Launch`] handle (resolve
+    /// with [`Session::wait`]). Ready buffers are snapshotted here;
+    /// parameters bound to a *pending* buffer become dataflow edges whose
+    /// payload materializes only when the producing launch settles.
     pub fn submit(self) -> Result<Launch> {
         if let Some(e) = self.err {
             bail!("{e}");
@@ -537,38 +856,120 @@ impl LaunchBuilder<'_> {
         let threads = self
             .threads
             .unwrap_or_else(|| self.session.config().accel.cores_per_cluster as u32);
-        let inputs: Vec<Vec<f32>> =
-            self.args.iter().map(|&id| self.session.buffers[id].clone()).collect();
+        // A buffer can be the pending output of at most one launch.
+        let mut writes: Vec<usize> = self
+            .binds
+            .iter()
+            .filter(|(k, _)| *k == ArgKind::Write)
+            .map(|(_, b)| b.id)
+            .collect();
+        writes.sort_unstable();
+        if writes.windows(2).any(|w| w[0] == w[1]) {
+            bail!("a buffer is bound with .writes() twice in one launch");
+        }
+        // Build the payload source per parameter: pending buffers chain,
+        // everything else snapshots (exactly PR 3's submit-time capture).
+        let mut srcs: Vec<LocalSrc> = Vec::with_capacity(self.binds.len());
+        let mut dep_handles: Vec<Option<JobHandle>> = Vec::with_capacity(self.binds.len());
+        let mut binds_rec: Vec<(ArgKind, usize, u32)> = Vec::with_capacity(self.binds.len());
+        for (kind, buf) in &self.binds {
+            let slot = &self.session.slots[buf.id];
+            let data = slot.data.as_ref().expect("bound buffers are live");
+            match slot.pending {
+                Some((p, i)) => {
+                    // `.writes` of an in-place kernel cannot change the
+                    // element count, so the producing output is as long as
+                    // the resident snapshot.
+                    srcs.push(LocalSrc::Dep { launch: p, index: i, elems: data.len() });
+                    dep_handles.push(match &self.session.launches[p] {
+                        LaunchState::PendingPool { handle, .. } => Some(*handle),
+                        _ => None,
+                    });
+                }
+                None => {
+                    srcs.push(LocalSrc::Data(data.clone()));
+                    dep_handles.push(None);
+                }
+            }
+            binds_rec.push((*kind, buf.id, buf.gen));
+        }
         // One shared guard with `Scheduler::submit_kernel`: parameter
-        // counts and declared-constant extents vs the snapshot (an
-        // undersized buffer would let the device read past it).
-        if let Err(e) = crate::sched::job::validate_payload(&self.kernel, &inputs, &self.fargs) {
+        // counts and declared-constant extents vs the payload (an
+        // undersized buffer would let the device read past it). Dataflow
+        // edges validate by element count — their data does not exist yet.
+        let elems: Vec<usize> = srcs.iter().map(|s| s.elems()).collect();
+        if let Err(e) = validate_shape(&self.kernel, &elems, self.fargs.len()) {
             bail!("{e}");
         }
+        // Dataflow producers of this launch, deduplicated — the pool state
+        // stores them for wait-ordering, the single backend indexes
+        // producer -> consumer for feeding at resolution.
+        let mut dep_launches: Vec<usize> = srcs
+            .iter()
+            .filter_map(|s| match s {
+                LocalSrc::Dep { launch, .. } => Some(*launch),
+                LocalSrc::Data(_) => None,
+            })
+            .collect();
+        dep_launches.sort_unstable();
+        dep_launches.dedup();
+        let write_marks: Vec<(usize, usize)> = self
+            .binds
+            .iter()
+            .enumerate()
+            .filter(|(_, (k, _))| *k == ArgKind::Write)
+            .map(|(i, (_, b))| (b.id, i))
+            .collect();
         let state = match &mut self.session.backend {
             Backend::Single { .. } => LaunchState::PendingSingle(Box::new(SingleSpec {
                 kernel: self.kernel,
                 autodma: self.autodma,
-                args: self.args,
-                inputs,
+                binds: binds_rec,
+                inputs: srcs,
                 fargs: self.fargs,
                 teams: self.teams,
                 threads,
                 max_cycles: self.max_cycles,
             })),
             Backend::Pool { sched } => {
-                let mut job = KernelJob::new(self.kernel, inputs, self.fargs);
+                let mut pool_srcs: Vec<PayloadSrc> = Vec::with_capacity(srcs.len());
+                for (s, h) in srcs.into_iter().zip(&dep_handles) {
+                    pool_srcs.push(match s {
+                        LocalSrc::Data(v) => PayloadSrc::Data(v),
+                        LocalSrc::Dep { launch, index, elems } => {
+                            let Some(producer) = h else {
+                                bail!("internal: producer launch {launch} is not pooled")
+                            };
+                            PayloadSrc::Output { producer: *producer, index, elems }
+                        }
+                    });
+                }
+                let mut job = KernelJob::from_srcs(self.kernel, pool_srcs, self.fargs);
                 job.threads = threads;
                 job.teams = self.teams;
                 job.priority = self.priority;
                 job.autodma = self.autodma;
                 job.max_cycles = self.max_cycles;
                 let handle = sched.submit_kernel(job);
-                LaunchState::PendingPool { handle, args: self.args }
+                LaunchState::PendingPool { handle, binds: binds_rec, deps: dep_launches.clone() }
             }
         };
+        let single = matches!(state, LaunchState::PendingSingle(_));
         self.session.launches.push(state);
-        Ok(Launch { id: self.session.launches.len() - 1 })
+        let id = self.session.launches.len() - 1;
+        // Mark this launch's outputs pending: later launches chain on
+        // them by handle, and free/write are blocked until it resolves.
+        for (slot, idx) in write_marks {
+            self.session.slots[slot].pending = Some((id, idx));
+        }
+        // Single backend: each producer learns about this consumer so
+        // feeding at resolution is a direct lookup, never a scan.
+        if single {
+            for &p in &dep_launches {
+                self.session.single_consumers.entry(p).or_default().push(id);
+            }
+        }
+        Ok(Launch { id })
     }
 }
 
@@ -632,9 +1033,10 @@ mod tests {
     #[test]
     fn misuse_is_an_error_not_a_panic() {
         let mut sess = Session::single(aurora());
-        let foreign = Buffer { id: 99 };
+        let foreign = Buffer { id: 99, gen: 0 };
         assert!(sess.read_f32(&foreign).is_err());
         assert!(sess.write_f32(&foreign, &[0.0]).is_err());
+        assert!(sess.free(&foreign).is_err());
         assert!(sess.launch(&scale_kernel(8)).arg(&foreign).submit().is_err());
         // Undersized buffer for a constant-extent array.
         let small = sess.buffer_from_f32(&[0.0; 4]);
@@ -649,6 +1051,103 @@ mod tests {
         // Named streams are a pooled-session feature.
         assert!(sess.submit_jobs(&[]).is_err());
         assert!(sess.report().is_err());
+    }
+
+    #[test]
+    fn buffer_free_and_reuse() {
+        let mut sess = Session::single(aurora());
+        assert_eq!(sess.resident_bytes(), 0);
+        let a = sess.buffer_from_f32(&[1.0; 64]);
+        let watermark = sess.resident_bytes();
+        assert_eq!(watermark, 256);
+        let b = sess.buffer_from_f32(&[2.0; 16]);
+        assert_eq!(sess.resident_bytes(), watermark + 64);
+        sess.free(&b).unwrap();
+        assert_eq!(sess.resident_bytes(), watermark);
+        // The freed slot is reused; the stale handle is rejected everywhere.
+        let c = sess.buffer_zeroed(8);
+        assert_eq!(sess.resident_bytes(), watermark + 32);
+        assert!(sess.read_f32(&b).is_err());
+        assert!(sess.write_f32(&b, &[0.0]).is_err());
+        assert!(sess.free(&b).is_err());
+        assert!(sess.launch(&scale_kernel(8)).arg(&b).submit().is_err());
+        assert_eq!(sess.read_f32(&c).unwrap(), vec![0.0; 8]);
+        assert_eq!(sess.read_f32(&a).unwrap(), vec![1.0; 64]);
+        // Freeing the rest returns the heap to empty.
+        sess.free(&a).unwrap();
+        sess.free(&c).unwrap();
+        assert_eq!(sess.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn chained_launches_stay_device_resident() {
+        let mut sess = Session::single(aurora());
+        let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let x = sess.buffer_from_f32(&data);
+        let l1 = sess.launch(&scale_kernel(32)).writes(&x).submit().unwrap();
+        // Pending: pre-launch contents stay readable, but the buffer can
+        // be neither freed nor overwritten mid-flight.
+        assert_eq!(sess.read_f32(&x).unwrap(), data);
+        assert!(sess.free(&x).is_err());
+        assert!(sess.write_f32(&x, &data).is_err());
+        // Chained in-place update: stage 2's input is stage 1's output.
+        let l2 = sess.launch(&scale_kernel(32)).writes(&x).submit().unwrap();
+        // Waiting the tail resolves the whole chain.
+        let r2 = sess.wait(&l2).unwrap();
+        assert!(r2.device_cycles > 0);
+        assert!(sess.poll(&l1).is_some(), "producers resolve transitively");
+        let got = sess.read_f32(&x).unwrap();
+        for i in 0..32 {
+            assert_eq!(got[i], 4.0 * i as f32, "x[{i}]");
+        }
+        // Resolved: the buffer is free-able again.
+        sess.free(&x).unwrap();
+        assert_eq!(sess.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn reads_is_input_only_and_arg_of_pending_is_rejected() {
+        let mut sess = Session::single(aurora());
+        let x = sess.buffer_from_f32(&[1.0; 16]);
+        let l = sess.launch(&scale_kernel(16)).reads(&x).submit().unwrap();
+        let r = sess.wait(&l).unwrap();
+        assert!(r.device_cycles > 0);
+        // The kernel doubled its own copy, but .reads() never writes back.
+        assert_eq!(sess.read_f32(&x).unwrap(), vec![1.0; 16]);
+        // Legacy .arg() refuses a pending buffer: chaining is explicit.
+        let y = sess.buffer_from_f32(&[1.0; 16]);
+        let _w = sess.launch(&scale_kernel(16)).writes(&y).submit().unwrap();
+        let err = sess.launch(&scale_kernel(16)).arg(&y).submit().unwrap_err();
+        assert!(err.to_string().contains("pending output"), "{err}");
+        // Double .writes() of one buffer in one launch is rejected.
+        let err =
+            sess.launch(&scale_kernel(16)).writes(&x).writes(&x).submit().unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+        sess.drain().unwrap();
+    }
+
+    #[test]
+    fn pooled_chain_matches_single_and_emits_ready_event() {
+        let data: Vec<f32> = (0..64).map(|i| (i % 7) as f32).collect();
+        let run = |sess: &mut Session| {
+            let x = sess.buffer_from_f32(&data);
+            let a = sess.launch(&scale_kernel(64)).writes(&x).submit().unwrap();
+            let b = sess.launch(&scale_kernel(64)).writes(&x).submit().unwrap();
+            // Waiting the consumer resolves the producer first on both
+            // backends.
+            let rb = sess.wait(&b).unwrap();
+            let ra = sess.wait(&a).unwrap();
+            (ra.digest, rb.digest, sess.read_f32(&x).unwrap())
+        };
+        let (sa, sb, sx) = run(&mut Session::single(aurora()));
+        let mut pool = Session::pool(aurora(), 2);
+        let (pa, pb, px) = run(&mut pool);
+        assert_eq!(sa, pa, "producer digests must be bit-identical");
+        assert_eq!(sb, pb, "consumer digests must be bit-identical");
+        assert_eq!(sx, px);
+        assert_eq!(px[1], 4.0 * 1.0);
+        // The dependency-readiness event surfaces through Session::events.
+        assert!(pool.events().unwrap().contains("ready"), "{}", pool.events().unwrap());
     }
 
     #[test]

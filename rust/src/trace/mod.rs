@@ -215,6 +215,12 @@ pub enum SchedEvent {
     Rejected { job: usize, reason: String },
     /// Oversized job decomposed into feasible sub-jobs (capacity policy).
     Split { job: usize, children: Vec<usize> },
+    /// The last unsettled dataflow producer of a queued job settled: the
+    /// job is now ready for dispatch, and `at` is its *effective arrival*
+    /// — the latest of its producers' finish cycles and its own declared
+    /// arrival (cross-launch dependency tracking — see
+    /// [`crate::sched::job::PayloadSrc`]).
+    DependencyReady { job: usize, producer: usize, at: u64 },
     /// Dispatch had to lower the kernel (binary cache miss): `cycles` of
     /// simulated compile time were charged to the job's instance.
     CompileMiss { job: usize, cycles: u64 },
@@ -270,6 +276,10 @@ impl SchedTrace {
                 SchedEvent::Split { job, children } => {
                     format!("split     job {job} -> {children:?}")
                 }
+                SchedEvent::DependencyReady { job, producer, at } => format!(
+                    "ready     job {job} (producer {producer} settled; effective arrival \
+                     cycle {at})"
+                ),
                 SchedEvent::CompileMiss { job, cycles } => {
                     format!("compile   job {job} (miss, {cycles} cy)")
                 }
@@ -308,13 +318,15 @@ mod tests {
         t.record(SchedEvent::CompileMiss { job: 0, cycles: 1000 });
         t.record(SchedEvent::Dispatched { job: 0, instance: 1, start: 0, batched: 2 });
         t.record(SchedEvent::Completed { job: 0, instance: 1, end: 500, dram_stall: 40 });
+        t.record(SchedEvent::DependencyReady { job: 1, producer: 0, at: 500 });
         assert_eq!(t.dispatch_order(), vec![0]);
         let s = t.render();
         assert!(s.contains("submit    job 0\n"), "normal submits carry no marker: {s}");
         assert!(s.contains("submit    job 1 [high]"), "priority surfaces in the log: {s}");
         assert!(s.contains("dispatch  job 0 -> instance 1"));
         assert!(s.contains("cache") || s.contains("miss"));
-        assert_eq!(s.lines().count(), 5);
+        assert!(s.contains("ready     job 1"), "dataflow readiness surfaces in the log: {s}");
+        assert_eq!(s.lines().count(), 6);
     }
 
     #[test]

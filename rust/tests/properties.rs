@@ -554,6 +554,100 @@ fn prop_priority_job_turnaround_never_worse_under_contention() {
 }
 
 #[test]
+fn prop_chained_dataflow_matches_host_roundtrip() {
+    // The dataflow acceptance bar: an A→B pipeline chained through
+    // `.writes`/`.reads` buffer handles produces digests (and arrays)
+    // bit-identical to the host-round-trip baseline — wait + read_f32 +
+    // buffer_from_f32 between the stages — across pool sizes 1/2/4 and
+    // both placement engines, plus the single-accelerator backend.
+    use herov2::compiler::ir::{ci, ld, par_for, st, var, Kernel, KernelBuilder};
+    use herov2::sched::{Placement, Policy, Scheduler};
+    use herov2::Session;
+    fn saxpy(n: i32) -> Kernel {
+        let mut b = KernelBuilder::new("saxpy_chain_prop");
+        let x = b.host_array("X", vec![ci(n)]);
+        let y = b.host_array("Y", vec![ci(n)]);
+        let a = b.float_param("a");
+        let i = b.loop_var("i");
+        b.body(vec![par_for(
+            i,
+            ci(0),
+            ci(n),
+            vec![st(y, vec![var(i)], var(a).mul(ld(x, vec![var(i)])).add(ld(y, vec![var(i)])))],
+        )])
+    }
+    check(
+        2,
+        |rng| (rng.usize(16, 96), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let xs = workloads::gen_f32(seed, n);
+            let ys = workloads::gen_f32(seed ^ 0xABC, n);
+            let kernel = saxpy(n as i32);
+            let e = |e: anyhow::Error| e.to_string();
+            // Baseline: explicit host round-trip between the stages.
+            let mut base = Session::single(aurora());
+            let bx = base.buffer_from_f32(&xs);
+            let by = base.buffer_from_f32(&ys);
+            let la = base
+                .launch(&kernel)
+                .reads(&bx)
+                .writes(&by)
+                .fargs(&[3.0])
+                .submit()
+                .map_err(e)?;
+            base.wait(&la).map_err(e)?;
+            let mid = base.read_f32(&by).map_err(e)?; // read back to the host
+            let bm = base.buffer_from_f32(&mid); // ... and re-upload
+            let bz = base.buffer_zeroed(n);
+            let lb = base
+                .launch(&kernel)
+                .reads(&bm)
+                .writes(&bz)
+                .fargs(&[0.25])
+                .submit()
+                .map_err(e)?;
+            let baseline_digest = base.wait(&lb).map_err(e)?.digest;
+            let baseline_out = base.read_f32(&bz).map_err(e)?;
+            // Chained runs: B consumes A's pending output by handle.
+            let chain = |mut sess: Session| -> Result<(u64, Vec<f32>), String> {
+                let cx = sess.buffer_from_f32(&xs);
+                let cy = sess.buffer_from_f32(&ys);
+                let a =
+                    sess.launch(&kernel).reads(&cx).writes(&cy).fargs(&[3.0]).submit().map_err(e)?;
+                let cz = sess.buffer_zeroed(n);
+                let b =
+                    sess.launch(&kernel).reads(&cy).writes(&cz).fargs(&[0.25]).submit().map_err(e)?;
+                let digest = sess.wait(&b).map_err(e)?.digest;
+                sess.wait(&a).map_err(e)?;
+                Ok((digest, sess.read_f32(&cz).map_err(e)?))
+            };
+            for pool in [1usize, 2, 4] {
+                for placement in [Placement::EarliestFree, Placement::Pressure] {
+                    let sched =
+                        Scheduler::new(aurora(), pool, Policy::Fifo).with_placement(placement);
+                    let (digest, out) = chain(Session::with_scheduler(sched))?;
+                    if digest != baseline_digest {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: chained digest {digest:#x} != \
+                             baseline {baseline_digest:#x}"
+                        ));
+                    }
+                    if out != baseline_out {
+                        return Err(format!("pool={pool} {placement:?}: arrays diverged"));
+                    }
+                }
+            }
+            // The single-accelerator backend chains identically.
+            let (digest, out) = chain(Session::single(aurora()))?;
+            if digest != baseline_digest || out != baseline_out {
+                return Err("single-backend chain diverged from the baseline".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_config_overrides_roundtrip() {
     check(
         40,

@@ -171,6 +171,71 @@ fn pooled_kernel_launches_batch_and_cache() {
 }
 
 #[test]
+fn serve_loop_resident_bytes_return_to_watermark() {
+    // The PR 4 retention fix, extended to session buffers: a long pooled
+    // serve-style loop that frees what it no longer needs must return the
+    // session heap to its watermark after every free + drain — no
+    // monotonic growth, even with chained (dataflow) launches in flight.
+    let mut sess = Session::pool(aurora(), 2);
+    let watermark = sess.resident_bytes();
+    assert_eq!(watermark, 0);
+    for round in 0..6u64 {
+        let xs = gen_f32(round + 1, 128);
+        let x = sess.buffer_from_f32(&xs);
+        let y = sess.buffer_from_f32(&gen_f32(round + 77, 128));
+        let a = sess
+            .launch(&saxpy(128))
+            .reads(&x)
+            .writes(&y)
+            .fargs(&[2.0])
+            .submit()
+            .unwrap();
+        // Chained: stage B consumes A's pending output by handle.
+        let z = sess.buffer_zeroed(128);
+        let b = sess
+            .launch(&saxpy(128))
+            .reads(&y)
+            .writes(&z)
+            .fargs(&[0.5])
+            .submit()
+            .unwrap();
+        sess.drain().unwrap();
+        assert!(sess.poll(&a).is_some() && sess.poll(&b).is_some());
+        let ys = sess.read_f32(&y).unwrap();
+        let got = sess.read_f32(&z).unwrap();
+        for i in 0..128 {
+            assert_eq!(got[i], 0.5 * ys[i], "round {round}: z[{i}]");
+        }
+        sess.free(&x).unwrap();
+        sess.free(&y).unwrap();
+        sess.free(&z).unwrap();
+        assert_eq!(sess.resident_bytes(), watermark, "round {round}: session heap grew");
+    }
+}
+
+#[test]
+fn freeing_chain_inputs_mid_flight_is_safe() {
+    // An eagerly-snapshotted input buffer may be freed right after submit
+    // (the launch owns its snapshot); the pending *output* may not.
+    let mut sess = Session::pool(aurora(), 1);
+    let xs = gen_f32(3, 64);
+    let ys = gen_f32(4, 64);
+    let x = sess.buffer_from_f32(&xs);
+    let y = sess.buffer_from_f32(&ys);
+    let l = sess.launch(&saxpy(64)).reads(&x).writes(&y).fargs(&[3.0]).submit().unwrap();
+    sess.free(&x).unwrap();
+    assert!(sess.free(&y).is_err(), "pending outputs must not be freed");
+    let res = sess.wait(&l).unwrap();
+    assert!(res.device_cycles > 0);
+    let got = sess.read_f32(&y).unwrap();
+    for i in 0..64 {
+        assert_eq!(got[i], 3.0 * xs[i] + ys[i], "y[{i}]");
+    }
+    sess.free(&y).unwrap();
+    assert_eq!(sess.resident_bytes(), 0);
+}
+
+#[test]
 fn scheduler_handles_are_bounds_checked() {
     // Satellite regression: foreign/stale handles return None / error
     // instead of panicking.
