@@ -42,6 +42,9 @@ pub struct Accel {
     pub iommu: Iommu,
     /// Host-managed application page table (read-only for the accelerator).
     pub pt: PageTable,
+    /// Page-table epoch the TLB contents were filled against (see
+    /// [`Accel::flush_tlb_if_stale`]).
+    pt_epoch_seen: u64,
     /// Current cycle.
     pub now: u64,
     /// Clusters participating in the current offload.
@@ -98,10 +101,23 @@ impl Accel {
             narrow_dram_port,
             iommu: Iommu::new(cfg.iommu),
             pt: PageTable::new(cfg.iommu.page_bytes),
+            pt_epoch_seen: 0,
             clusters,
             cfg,
             now: 0,
             active_clusters: 0,
+        }
+    }
+
+    /// Driver-side TLB maintenance at offload time: flush only when the
+    /// page table changed since the TLB was last filled (or always, when
+    /// `iommu.flush_on_offload` pins the old flush-every-offload behavior).
+    /// Repeated offloads over an unchanged mapping keep a warm TLB — the
+    /// precondition for the SVM pin-path studies.
+    pub fn flush_tlb_if_stale(&mut self) {
+        if self.cfg.iommu.flush_on_offload || self.pt.epoch() != self.pt_epoch_seen {
+            self.iommu.flush();
+            self.pt_epoch_seen = self.pt.epoch();
         }
     }
 

@@ -136,6 +136,11 @@ pub struct IommuConfig {
     pub miss_mode: MissMode,
     /// Page size in bytes (4 KiB like the host MMU).
     pub page_bytes: usize,
+    /// Flush the TLB on *every* offload (the pre-epoch driver behavior).
+    /// Off by default: the driver now flushes only when the page table
+    /// changed since the TLB was last filled, which is what makes warm-TLB
+    /// SVM studies possible. Turn on to pin the old behavior.
+    pub flush_on_offload: bool,
 }
 
 /// TLB miss handling policy (§2.3: configurable per offload).

@@ -55,6 +55,7 @@ pub fn apply_override(cfg: &mut HeroConfig, key: &str, value: &str) -> Result<()
         "iommu.tlb_entries" => cfg.iommu.tlb_entries = uint()? as usize,
         "iommu.walk_cycles" => cfg.iommu.walk_cycles = uint()?,
         "iommu.page_bytes" => cfg.iommu.page_bytes = parse_size(v)? as usize,
+        "iommu.flush_on_offload" => cfg.iommu.flush_on_offload = parse_bool(v)?,
         "iommu.miss_mode" => {
             cfg.iommu.miss_mode = match v {
                 "self" => MissMode::SelfService,
@@ -170,5 +171,12 @@ mod tests {
     fn miss_mode_parse() {
         let cfg = parse_str("preset = aurora\niommu.miss_mode = dedicated\n").unwrap();
         assert_eq!(cfg.iommu.miss_mode, crate::config::MissMode::DedicatedCore);
+    }
+
+    #[test]
+    fn flush_on_offload_parse() {
+        assert!(!parse_str("preset = aurora\n").unwrap().iommu.flush_on_offload);
+        let cfg = parse_str("preset = aurora\niommu.flush_on_offload = true\n").unwrap();
+        assert!(cfg.iommu.flush_on_offload);
     }
 }

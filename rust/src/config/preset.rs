@@ -43,6 +43,7 @@ pub fn aurora() -> HeroConfig {
             walk_cycles: 150,
             miss_mode: MissMode::SelfService,
             page_bytes: 4096,
+            flush_on_offload: false,
         },
         dram: DramConfig {
             capacity: 4 << 30,

@@ -112,6 +112,12 @@ pub struct Mailbox {
 }
 
 impl Mailbox {
+    /// Size of one offload descriptor (kernel id, map-clause pointers,
+    /// scalar args) as written through the mailbox. The SVM host port books
+    /// this much DRAM traffic per offload so mailbox writes contend like
+    /// any other host traffic.
+    pub const DESCRIPTOR_BYTES: u64 = 64;
+
     /// Total cycle cost of one offload round-trip (doorbell + interrupt +
     /// manager dispatch + completion signal).
     pub fn round_trip_cycles(cfg: &crate::config::HeroConfig) -> u64 {
@@ -155,5 +161,33 @@ mod tests {
         let mut accel = Accel::new(aurora(), 64 * 1024);
         let mut host = HostContext::new();
         assert!(host.alloc(&mut accel, 100_000).is_err());
+    }
+
+    #[test]
+    fn alloc_is_page_rounded_and_page_aligned() {
+        let mut accel = Accel::new(aurora(), 1 << 20);
+        let page = aurora().iommu.page_bytes as u64;
+        let mut host = HostContext::new();
+        // 1 element still consumes (and advances by) a whole page, and
+        // every buffer starts page-aligned — the map_range precondition.
+        let a = host.alloc(&mut accel, 1).unwrap();
+        let b = host.alloc(&mut accel, 1).unwrap();
+        assert_eq!(a.va % page, 0);
+        assert_eq!(a.pa % page, 0);
+        assert_eq!(b.va - a.va, page);
+        assert_eq!(b.pa - a.pa, page);
+    }
+
+    #[test]
+    fn alloc_advances_the_page_table_epoch() {
+        // Each allocation maps pages, so the driver's epoch-conditional
+        // flush sees a change exactly once per alloc.
+        let mut accel = Accel::new(aurora(), 1 << 20);
+        let mut host = HostContext::new();
+        let e0 = accel.pt.epoch();
+        host.alloc(&mut accel, 64).unwrap();
+        assert_eq!(accel.pt.epoch(), e0 + 1);
+        host.alloc(&mut accel, 64).unwrap();
+        assert_eq!(accel.pt.epoch(), e0 + 2);
     }
 }

@@ -20,32 +20,54 @@ use std::collections::HashMap;
 pub struct PageTable {
     map: HashMap<u64, u64>,
     page_bits: u32,
+    /// Bumped on every mapping change; the driver flushes the TLB only when
+    /// an offload observes a new epoch (see `Accel::flush_tlb_if_stale`).
+    epoch: u64,
 }
 
 impl PageTable {
     pub fn new(page_bytes: usize) -> Self {
         assert!(page_bytes.is_power_of_two());
-        PageTable { map: HashMap::new(), page_bits: page_bytes.trailing_zeros() }
+        PageTable { map: HashMap::new(), page_bits: page_bytes.trailing_zeros(), epoch: 0 }
     }
 
     pub fn page_bytes(&self) -> u64 {
         1 << self.page_bits
     }
 
+    /// Mapping-change generation counter. Any `map_page`/`map_range` call
+    /// advances it, so cached translations can be invalidated exactly when
+    /// the table actually changed.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     /// Map the virtual page containing `va` to the physical page containing
     /// `pa` (both rounded down).
     pub fn map_page(&mut self, va: u64, pa: u64) {
+        self.epoch += 1;
         self.map.insert(va >> self.page_bits, pa >> self.page_bits);
     }
 
     /// Map a contiguous virtual range onto a contiguous physical range.
+    ///
+    /// A page-granular table can only express ranges whose virtual and
+    /// physical starts share the same in-page offset (as the host `mmap`
+    /// path guarantees); anything else would silently translate to the
+    /// wrong physical bytes, so it is rejected loudly.
     pub fn map_range(&mut self, va: u64, pa: u64, bytes: u64) {
         let pb = self.page_bytes();
+        assert_eq!(
+            va % pb,
+            pa % pb,
+            "map_range: va {va:#x} and pa {pa:#x} must share a page offset \
+             (page size {pb} B)"
+        );
+        self.epoch += 1;
         let first = va >> self.page_bits;
         let last = (va + bytes.max(1) - 1) >> self.page_bits;
         for (i, vpn) in (first..=last).enumerate() {
             self.map.insert(vpn, (pa >> self.page_bits) + i as u64);
-            let _ = pb;
         }
     }
 
@@ -75,7 +97,9 @@ struct TlbEntry {
 }
 
 /// The hybrid IOMMU: a fully-associative LRU TLB, software-filled.
-#[derive(Debug)]
+/// `Clone` supports what-if costing: a cloned shadow can be translated
+/// against speculatively without warming the real TLB.
+#[derive(Debug, Clone)]
 pub struct Iommu {
     cfg: IommuConfig,
     entries: Vec<TlbEntry>,
@@ -224,5 +248,74 @@ mod tests {
         io.flush();
         let t = io.translate(0x7f00_0000_0000, &pt, 0).unwrap();
         assert!(!t.hit);
+    }
+
+    #[test]
+    fn map_range_with_equal_page_offsets_crosses_pages() {
+        // Regression: the old code carried a dead `let _ = pb;` and never
+        // checked the offset precondition. An offset-carrying (but equal on
+        // both sides) range must still translate byte-accurately across
+        // every page it touches.
+        let mut pt = PageTable::new(4096);
+        pt.map_range(0x1800, 0x5800, 0x2000); // starts mid-page, spans 3 pages
+        assert_eq!(pt.walk(0x1800).unwrap(), 0x5800);
+        assert_eq!(pt.walk(0x2000).unwrap(), 0x6000); // next page boundary
+        assert_eq!(pt.walk(0x37fc).unwrap(), 0x77fc); // last mapped byte's word
+    }
+
+    #[test]
+    #[should_panic(expected = "share a page offset")]
+    fn map_range_rejects_mismatched_page_offsets() {
+        // Differing in-page offsets are unrepresentable in a page-granular
+        // table; silently accepting them used to corrupt translations.
+        let mut pt = PageTable::new(4096);
+        pt.map_range(0x1800, 0x5000, 0x1000);
+    }
+
+    #[test]
+    fn epoch_advances_only_on_mapping_changes() {
+        let mut pt = PageTable::new(4096);
+        assert_eq!(pt.epoch(), 0);
+        pt.map_page(0x1000, 0x2000);
+        assert_eq!(pt.epoch(), 1);
+        pt.map_range(0x4000, 0x8000, 8192);
+        assert_eq!(pt.epoch(), 2);
+        // Reads never advance it.
+        let _ = pt.walk(0x1000);
+        assert_eq!(pt.epoch(), 2);
+    }
+
+    #[test]
+    fn refill_costs_are_exact_in_both_miss_modes() {
+        // SelfService: every miss pays the full software walk; hits are free
+        // (the constant hit overhead is charged on the access path).
+        let (mut io, pt) = setup();
+        let walk = aurora().iommu.walk_cycles;
+        let miss = io.translate(0x7f00_0000_0000, &pt, 0).unwrap();
+        assert_eq!((miss.hit, miss.cost), (false, walk));
+        let hit = io.translate(0x7f00_0000_0040, &pt, 5).unwrap();
+        assert_eq!((hit.hit, hit.cost), (true, 0));
+        assert_eq!((io.hits, io.misses), (1, 1));
+        // DedicatedCore: walk/2 service time, and a later lone miss (handler
+        // idle again) pays exactly walk/2 — not a stale queue penalty.
+        let mut cfg = aurora().iommu;
+        cfg.miss_mode = MissMode::DedicatedCore;
+        let mut pt2 = PageTable::new(cfg.page_bytes);
+        pt2.map_range(0, 0, 1 << 20);
+        let mut io2 = Iommu::new(cfg);
+        assert_eq!(io2.translate(0, &pt2, 0).unwrap().cost, walk / 2);
+        assert_eq!(io2.translate(4096, &pt2, 1_000).unwrap().cost, walk / 2);
+    }
+
+    #[test]
+    fn clone_makes_an_independent_shadow() {
+        // What-if costing translates against a cloned IOMMU; the shadow's
+        // fills must not warm the real TLB.
+        let (mut io, pt) = setup();
+        let mut shadow = io.clone();
+        assert!(!shadow.translate(0x7f00_0000_0000, &pt, 0).unwrap().hit);
+        assert!(shadow.translate(0x7f00_0000_0000, &pt, 1).unwrap().hit);
+        let t = io.translate(0x7f00_0000_0000, &pt, 2).unwrap();
+        assert!(!t.hit, "shadow fills must not leak into the original");
     }
 }

@@ -74,9 +74,16 @@
 //! finish time including DRAM stall (bit-identical to earliest-free on an
 //! uncontended board), and jobs carry a QoS class ([`sched::Priority`])
 //! that jumps the queue and reserves DRAM into the board's priority
-//! headroom. Front-ends: the `hero serve` CLI subcommand (synthetic
-//! streams or `--trace` replay; `--placement`, `--priority-headroom`), the
-//! job generators in [`workloads::synth`], and `benches/sched.rs`.
+//! headroom. **Shared virtual memory** is a first-class offload path
+//! ([`svm`]): jobs may describe operands by host virtual address
+//! ([`sched::PayloadSrc::Svm`]), resolved through a per-board IOMMU shadow
+//! with deterministic TLB hit/miss/walk accounting, under a configurable
+//! pin / copy / auto offload strategy — and the host itself is a modeled
+//! traffic source whose staging, page-walk and mailbox-descriptor bytes
+//! reserve board DRAM through a dedicated host port. Front-ends: the
+//! `hero serve` CLI subcommand (synthetic streams or `--trace` replay;
+//! `--placement`, `--priority-headroom`, `--svm`, `--host-bw`), the job
+//! generators in [`workloads::synth`], and `benches/sched.rs`.
 
 pub mod accel;
 pub mod bench_harness;
@@ -93,6 +100,7 @@ pub mod noc;
 pub mod runtime;
 pub mod sched;
 pub mod session;
+pub mod svm;
 pub mod testkit;
 pub mod trace;
 pub mod workloads;

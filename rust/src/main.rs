@@ -38,6 +38,16 @@
 //!                                     the buffers are freed (default 0 =
 //!                                     off; max 32 stages)
 //!     --seed S                        stream seed (default 42)
+//!     --svm pin|copy|auto             enable shared-virtual-memory serving
+//!                                     and run an SVM kernel stream (VA-
+//!                                     described operands resolved through
+//!                                     the board IOMMU) alongside the named
+//!                                     stream, under the given offload
+//!                                     strategy (auto picks pin or copy per
+//!                                     launch by exact predicted cost)
+//!     --host-bw B                     host port bandwidth into the board
+//!                                     DRAM in bytes/cycle (default 8;
+//!                                     requires --svm)
 //!     --board-bw B                    shared board DRAM bandwidth in
 //!                                     bytes/cycle (default: config
 //!                                     dram.bytes_per_cycle)
@@ -261,6 +271,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
         opts: &[
             "--board-bw",
             "--config",
+            "--host-bw",
             "--jobs",
             "--pipeline",
             "--placement",
@@ -268,6 +279,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
             "--pool",
             "--priority-headroom",
             "--seed",
+            "--svm",
             "--trace",
         ],
         max_positional: 0,
@@ -287,6 +299,21 @@ fn cmd_serve(raw: &[String]) -> i32 {
         eprintln!("unknown placement {placement_arg:?} (earliest|pressure)");
         return 2;
     };
+    let svm_mode = match args.opt("--svm") {
+        Some(s) => match herov2::svm::SvmMode::parse(s) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let host_bw: u64 = opt_or(&args, "--host-bw", herov2::svm::DEFAULT_HOST_BW);
+    if args.opt("--host-bw").is_some() && svm_mode.is_none() {
+        eprintln!("--host-bw requires --svm (the host port only exists with SVM serving)");
+        return 2;
+    }
     let headroom: u64 = opt_or(&args, "--priority-headroom", 0);
     let pipeline: usize = opt_or(&args, "--pipeline", 0);
     if pipeline > 32 {
@@ -344,7 +371,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
         );
         return 2;
     }
-    let sched = if args.flag("--mixed-widths") {
+    let mut sched = if args.flag("--mixed-widths") {
         let widths = [64u32, 32, 128];
         let cfgs: Vec<_> =
             (0..pool).map(|i| with_dma_width(&cfg, widths[i % widths.len()])).collect();
@@ -357,15 +384,37 @@ fn cmd_serve(raw: &[String]) -> i32 {
     .with_cache(!args.flag("--no-cache"))
     .with_batching(!args.flag("--no-batch"))
     .with_verify(!args.flag("--no-verify"));
+    // SVM serving rides alongside the named stream: a kernel stream whose
+    // operands live in the shared space, VA-described and resolved through
+    // the board IOMMU at dispatch, with host traffic contending on the
+    // board DRAM through the host port.
+    let mut svm_handles = Vec::new();
+    if let Some(mode) = svm_mode {
+        sched =
+            sched.with_svm(herov2::svm::SvmConfig::new(mode).with_host_bw(host_bw));
+        let n = (jobs / 4).max(4);
+        svm_handles = match herov2::svm::submit_svm_stream(&mut sched, n, seed, None) {
+            Ok(h) => h,
+            Err(e) => {
+                eprintln!("svm stream error: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "svm: {n} kernel jobs under the {} strategy (host port {host_bw} B/cycle)",
+            mode.label()
+        );
+    }
     // The pooled session is the serve front door.
     let mut sess = Session::with_scheduler(sched);
-    let handles = match sess.submit_jobs(&stream) {
+    let mut handles = match sess.submit_jobs(&stream) {
         Ok(h) => h,
         Err(e) => {
             eprintln!("submit error: {e}");
             return 1;
         }
     };
+    handles.extend(svm_handles.drain(..));
     // The chained pipeline rides the same pooled session as the named
     // stream: each stage consumes the previous one's device-resident
     // output by handle, with zero host round-trips between stages.

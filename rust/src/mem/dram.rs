@@ -296,8 +296,10 @@ impl BandwidthLedger {
 #[derive(Debug)]
 pub struct SharedDram {
     /// Backing word storage (physical byte addresses from 0). Host-side
-    /// staging (`host::HostContext`) writes it directly — host traffic is
-    /// not on the modeled accelerator path.
+    /// staging (`host::HostContext`) writes it directly; at the *pool*
+    /// level, host traffic (SVM copy staging, page-table walks, mailbox
+    /// descriptors) is cycle-accounted through a dedicated host port on
+    /// the pool's [`BandwidthLedger`] — see `sched::pool`.
     pub mem: WordMem,
     ledger: BandwidthLedger,
     ports: Vec<PortStats>,

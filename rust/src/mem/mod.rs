@@ -19,7 +19,7 @@
 pub mod dram;
 pub mod o1heap;
 
-pub use dram::{BandwidthLedger, DramPort, SharedDram};
+pub use dram::{BandwidthLedger, DramPort, PortStats, SharedDram};
 pub use o1heap::O1Heap;
 
 /// Device (native, 32-bit) address map.

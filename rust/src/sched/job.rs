@@ -33,6 +33,12 @@ pub enum PayloadSrc {
     /// element count, known up front so shape validation and DMA-cost
     /// predictions need no data).
     Output { producer: JobHandle, index: usize, elems: usize },
+    /// A shared-virtual-memory operand: the first `elems` elements of the
+    /// buffer at virtual address `va` in the board's [`crate::svm::SvmSpace`].
+    /// The job carries no bytes — the scheduler resolves the VA at dispatch
+    /// and charges the pin/copy/auto access path (see [`crate::svm`]).
+    /// Requires SVM serving to be enabled (`Scheduler::with_svm`).
+    Svm { va: u64, elems: usize },
 }
 
 impl PayloadSrc {
@@ -40,24 +46,24 @@ impl PayloadSrc {
     pub fn elems(&self) -> usize {
         match self {
             PayloadSrc::Data(v) => v.len(),
-            PayloadSrc::Output { elems, .. } => *elems,
+            PayloadSrc::Output { elems, .. } | PayloadSrc::Svm { elems, .. } => *elems,
         }
     }
 
     /// The producing job, for dataflow edges.
     pub fn producer(&self) -> Option<JobHandle> {
         match self {
-            PayloadSrc::Data(_) => None,
+            PayloadSrc::Data(_) | PayloadSrc::Svm { .. } => None,
             PayloadSrc::Output { producer, .. } => Some(*producer),
         }
     }
 
     /// Bytes this source holds *inline* (snapshot retention accounting;
-    /// output references carry no data until dispatch).
+    /// output references and SVM operands carry no data until dispatch).
     pub fn inline_bytes(&self) -> u64 {
         match self {
             PayloadSrc::Data(v) => v.len() as u64 * 4,
-            PayloadSrc::Output { .. } => 0,
+            PayloadSrc::Output { .. } | PayloadSrc::Svm { .. } => 0,
         }
     }
 }
@@ -106,6 +112,10 @@ pub struct KernelJob {
     /// dispatch, with no data attached (dataflow inputs imply their own
     /// edges — these are for explicit sequencing on top).
     pub after: Vec<JobHandle>,
+    /// Per-launch SVM strategy override for [`PayloadSrc::Svm`] operands:
+    /// `None` uses the board's configured default
+    /// ([`crate::svm::SvmConfig::mode`]).
+    pub svm: Option<crate::svm::SvmMode>,
 }
 
 impl KernelJob {
@@ -130,6 +140,7 @@ impl KernelJob {
             autodma: false,
             max_cycles: super::JOB_MAX_CYCLES,
             after: Vec::new(),
+            svm: None,
         }
     }
 
@@ -346,6 +357,20 @@ mod tests {
             vec![2.0],
         );
         assert!(small.validate().unwrap_err().contains("declares 16"));
+    }
+
+    #[test]
+    fn svm_srcs_are_weightless_until_dispatch() {
+        let j = KernelJob::from_srcs(
+            scale(16, "s"),
+            vec![PayloadSrc::Svm { va: 0x40_0000_0000, elems: 16 }],
+            vec![2.0],
+        );
+        assert!(j.validate().is_ok(), "SVM operands validate by element count");
+        assert!(j.svm.is_none(), "no per-launch strategy override by default");
+        assert_eq!(j.input_bytes(), 64, "SVM bytes still count for DMA predictions");
+        assert_eq!(j.inline_input_bytes(), 0, "but nothing is retained inline");
+        assert!(j.producers().is_empty(), "a VA is not a dataflow edge");
     }
 
     #[test]

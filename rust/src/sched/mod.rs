@@ -63,14 +63,26 @@
 //! never round-trips data through the submitting host. A failed producer
 //! cascades rejection to its queued consumers.
 //!
+//! With **SVM serving** enabled ([`Scheduler::with_svm`] — see
+//! [`crate::svm`]), kernel jobs may name operands by *virtual address*
+//! ([`PayloadSrc::Svm`]) in the board's shared VA space instead of carrying
+//! bytes. Dispatch serves such operands through a per-board persistent
+//! IOMMU shadow and a per-launch strategy — `pin` (zero-copy, TLB-costed
+//! in-place access), `copy` (host DMA staging) or `auto` (exact predicted
+//! cost decides per launch) — and every host-side byte (staging,
+//! page-table-entry reads, mailbox descriptors) reserves board DRAM
+//! through a dedicated host port, so placement and SJF see the host as
+//! one more contender. Launch results write back into the shared space.
+//!
 //! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state) through
 //! the shared offload core ([`crate::session::core`]), so results on a
 //! homogeneous pool are bit-identical regardless of policy, pool size,
-//! batching, caching or board bandwidth — the scheduler and the board model
-//! move *time*, never numerics. (A heterogeneous pool may tile kernels
-//! differently per instance config, which legitimately reorders float
-//! accumulation.) `hero serve` (see `main.rs`) and `benches/sched.rs` are
-//! the front-ends.
+//! batching, caching, board bandwidth or SVM strategy — the scheduler and
+//! the board model move *time*, never numerics (the SVM IOMMU shadow is a
+//! pure cost engine; functional data lives in the host-side space). (A
+//! heterogeneous pool may tile kernels differently per instance config,
+//! which legitimately reorders float accumulation.) `hero serve` (see
+//! `main.rs`) and `benches/sched.rs` are the front-ends.
 
 pub mod cache;
 pub mod job;
@@ -79,6 +91,7 @@ pub mod policy;
 pub mod pool;
 pub mod report;
 
+pub use crate::svm::{SvmConfig, SvmMode};
 pub use crate::workloads::synth::JobDesc;
 pub use cache::BinaryCache;
 pub use job::{KernelJob, PayloadSrc};
@@ -258,6 +271,11 @@ pub struct Scheduler {
     /// consumers instead of scanning the whole jobs table (edge-free
     /// streams never touch it).
     consumers_of: HashMap<JobId, Vec<JobId>>,
+    /// Shared-virtual-memory serving state ([`Scheduler::with_svm`]):
+    /// the board VA space, its persistent IOMMU cost shadow and the
+    /// configured strategy. `None` (the default) leaves every pre-SVM code
+    /// path — and its event sequence — untouched.
+    svm: Option<crate::svm::SvmState>,
     pub trace: SchedTrace,
 }
 
@@ -303,6 +321,7 @@ impl Scheduler {
             feeds: HashMap::new(),
             feed_demand: HashMap::new(),
             consumers_of: HashMap::new(),
+            svm: None,
             trace: SchedTrace::new(),
             cfg,
             policy,
@@ -342,6 +361,72 @@ impl Scheduler {
     pub fn with_verify(mut self, on: bool) -> Self {
         self.verify = on;
         self
+    }
+
+    /// Enable shared-virtual-memory serving (must precede submissions):
+    /// jobs may carry [`PayloadSrc::Svm`] operands, served under
+    /// `cfg.mode` (pin / copy / auto, overridable per job), and the host
+    /// becomes a modeled traffic source — its staging, page-table-entry
+    /// reads and mailbox descriptors reserve board DRAM at `cfg.host_bw`
+    /// bytes/cycle through the pool's host port. See [`crate::svm`].
+    pub fn with_svm(mut self, cfg: crate::svm::SvmConfig) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_svm after submissions");
+        self.pool.enable_host_port(cfg.host_bw);
+        self.svm = Some(crate::svm::SvmState::new(cfg, &self.cfg));
+        self
+    }
+
+    /// Whether SVM serving is enabled.
+    pub fn svm_enabled(&self) -> bool {
+        self.svm.is_some()
+    }
+
+    /// Allocate a shared buffer holding `data` in the board's SVM space
+    /// and return its virtual address (what [`PayloadSrc::Svm`] names).
+    /// Allocation is host-side bookkeeping — no simulated cycles.
+    pub fn svm_alloc_f32(&mut self, data: Vec<f32>) -> Result<u64> {
+        match self.svm.as_mut() {
+            Some(s) => Ok(s.space.alloc_f32(data)),
+            None => bail!("SVM is not enabled on this scheduler (Scheduler::with_svm)"),
+        }
+    }
+
+    /// Read a shared buffer back (the host observing offload results).
+    /// `None` for an unknown VA or when SVM serving is disabled.
+    pub fn svm_read_f32(&self, va: u64) -> Option<Vec<f32>> {
+        self.svm.as_ref()?.space.read(va)
+    }
+
+    /// Validate a job's SVM operands at submission: they require SVM
+    /// serving, and every VA must name an allocated buffer large enough
+    /// for the claimed element count (an undersized view would slice out
+    /// of bounds at dispatch).
+    fn check_svm(&self, kjob: &KernelJob) -> std::result::Result<(), String> {
+        let Some(svm) = self.svm.as_ref() else {
+            if kjob.inputs.iter().any(|s| matches!(s, PayloadSrc::Svm { .. })) {
+                return Err(
+                    "job carries SVM operand(s) but SVM serving is not enabled \
+                     (Scheduler::with_svm)"
+                        .into(),
+                );
+            }
+            return Ok(());
+        };
+        for src in &kjob.inputs {
+            let PayloadSrc::Svm { va, elems } = src else { continue };
+            match svm.space.elems(*va) {
+                None => {
+                    return Err(format!("SVM operand va {va:#x} is not an allocated buffer"))
+                }
+                Some(have) if have < *elems => {
+                    return Err(format!(
+                        "SVM operand va {va:#x} holds {have} element(s), job expects {elems}"
+                    ))
+                }
+                Some(_) => {}
+            }
+        }
+        Ok(())
     }
 
     pub fn policy(&self) -> Policy {
@@ -767,6 +852,10 @@ impl Scheduler {
             self.reject(id, reason);
             return JobHandle(id);
         }
+        if let Err(reason) = self.check_svm(&kjob) {
+            self.reject(id, reason);
+            return JobHandle(id);
+        }
         if self.needs_predictions() {
             self.jobs[id].predicted =
                 policy::predict_kernel_job(&kjob.kernel, kjob.autodma, &self.cfg, eff_threads);
@@ -1030,6 +1119,18 @@ impl Scheduler {
                         .iter()
                         .map(|src| match src {
                             PayloadSrc::Data(v) => Ok(v.as_slice()),
+                            // Both pin and copy see the same functional
+                            // bytes — only the cycle accounting below
+                            // differs — so dispatch reads the host-side
+                            // store directly in every mode.
+                            PayloadSrc::Svm { va, elems } => self
+                                .svm
+                                .as_ref()
+                                .and_then(|svm| svm.space.get(*va))
+                                .map(|buf| &buf[..*elems])
+                                .ok_or_else(|| {
+                                    format!("internal: SVM buffer at va {va:#x} vanished")
+                                }),
                             PayloadSrc::Output { producer, index, .. } => self
                                 .feeds
                                 .get(&(producer.0, *index))
@@ -1072,11 +1173,134 @@ impl Scheduler {
                 Ok((result, arrays, verified, keep_payload)) => {
                     let digest = digest_arrays(&arrays);
                     let dma_busy = result.perf.get(Event::DmaBusyCycles);
-                    let dma_bytes = result.perf.get(Event::DmaBytes);
+                    let mut dma_bytes = result.perf.get(Event::DmaBytes);
+                    // SVM operand service: resolve the offload strategy,
+                    // charge its deterministic cost on the instance, and
+                    // route all host-side traffic (mailbox descriptor,
+                    // page-table-entry reads, copy staging) through the
+                    // pool's host port so it contends with instance DMA.
+                    let mut svm_cycles = 0u64;
+                    if let (JobSpec::Kernel(kjob), Some(svm)) = (&member, self.svm.as_mut()) {
+                        let ops: Vec<(u64, u64)> = kjob
+                            .inputs
+                            .iter()
+                            .filter_map(|s| match s {
+                                PayloadSrc::Svm { va, elems } => Some((*va, *elems as u64 * 4)),
+                                _ => None,
+                            })
+                            .collect();
+                        if !ops.is_empty() {
+                            let host_start = arrival.max(self.pool.free_at(inst));
+                            // The mailbox descriptor rides the host port in
+                            // every mode — VA-described operands still need
+                            // announcing to the device.
+                            svm_cycles += self
+                                .pool
+                                .host_reserve(host_start, crate::host::Mailbox::DESCRIPTOR_BYTES);
+                            let op_bytes: u64 = ops.iter().map(|o| o.1).sum();
+                            let page = svm.space.page_bytes();
+                            let walk = svm.iommu.cfg().walk_cycles;
+                            let setup = icfg.dma.setup_cycles;
+                            let beat = icfg.dma_beat_bytes();
+                            let ext = icfg.timing.ext_addr_overhead;
+                            let mode = match kjob.svm.unwrap_or(svm.cfg.mode) {
+                                SvmMode::Auto => {
+                                    // Exact probes, no reservation: pin pays
+                                    // per-beat external-address overhead plus
+                                    // whatever extra stall the operand bytes
+                                    // add on the instance port; copy pays its
+                                    // fixed setup+walk cost plus the host
+                                    // port's drain of the staged bytes.
+                                    // TLB-refill walks are a one-time
+                                    // investment amortized across reuse, so
+                                    // they are excluded from the pin estimate
+                                    // (but still charged when they occur).
+                                    let pin = crate::svm::pin_access_cycles(op_bytes, beat, ext)
+                                        + self
+                                            .pool
+                                            .probe_stall(
+                                                inst,
+                                                host_start,
+                                                dma_bytes + op_bytes,
+                                                priority.is_high(),
+                                            )
+                                            .saturating_sub(self.pool.probe_stall(
+                                                inst,
+                                                host_start,
+                                                dma_bytes,
+                                                priority.is_high(),
+                                            ));
+                                    let copy = crate::svm::copy_fixed_cycles(
+                                        &ops, page, setup, walk,
+                                    ) + self.pool.host_probe(
+                                        host_start,
+                                        crate::svm::copy_port_bytes(&ops, page),
+                                    );
+                                    if pin <= copy {
+                                        SvmMode::Pin
+                                    } else {
+                                        SvmMode::Copy
+                                    }
+                                }
+                                m => m,
+                            };
+                            let (mut hits, mut misses) = (0u64, 0u64);
+                            match mode {
+                                SvmMode::Pin => {
+                                    let (tc, h, m) = crate::svm::translate_operands(
+                                        &mut svm.iommu,
+                                        svm.space.pt(),
+                                        &ops,
+                                        host_start,
+                                    );
+                                    hits = h;
+                                    misses = m;
+                                    svm_cycles += tc
+                                        + crate::svm::pin_access_cycles(op_bytes, beat, ext);
+                                    // Each miss's page walk reads a PTE from
+                                    // board DRAM on the host's behalf.
+                                    svm_cycles += self.pool.host_reserve(
+                                        host_start,
+                                        misses * crate::svm::PTE_BYTES,
+                                    );
+                                    // Pinned operands stream over the NoC as
+                                    // instance traffic.
+                                    dma_bytes += op_bytes;
+                                }
+                                SvmMode::Copy => {
+                                    svm_cycles += crate::svm::copy_fixed_cycles(
+                                        &ops, page, setup, walk,
+                                    );
+                                    svm_cycles += self.pool.host_reserve(
+                                        host_start,
+                                        crate::svm::copy_port_bytes(&ops, page),
+                                    );
+                                }
+                                SvmMode::Auto => unreachable!("resolved above"),
+                            }
+                            self.trace.record(SchedEvent::SvmResolved {
+                                job: id,
+                                mode: mode.label(),
+                                cycles: svm_cycles,
+                                hits,
+                                misses,
+                            });
+                            // SVM buffers are shared memory: the device's
+                            // result becomes host-visible in place. Jobs
+                            // touching the same buffer see submission-order
+                            // data visibility (a modeling simplification —
+                            // the queue dispatches in submission order).
+                            for (idx, src) in kjob.inputs.iter().enumerate() {
+                                if let PayloadSrc::Svm { va, .. } = src {
+                                    svm.space.write_back(*va, &arrays[idx]);
+                                }
+                            }
+                        }
+                    }
                     let a = self.pool.assign(
                         inst,
                         arrival,
-                        charge + result.total_cycles,
+                        charge + result.total_cycles + svm_cycles,
                         dma_bytes,
                         priority.is_high(),
                     );
@@ -1229,6 +1453,10 @@ impl Scheduler {
             dram_stall_cycles: self.pool.dram_stall_total(),
             dram_bytes: self.pool.dram_total_bytes(),
             dram_utilization: self.pool.dram_utilization(),
+            svm_mode: self.svm.as_ref().map(|s| s.cfg.mode.label()),
+            host_dram_bytes: self.pool.host_stats().map_or(0, |s| s.bytes),
+            host_dram_stall_cycles: self.pool.host_stats().map_or(0, |s| s.stall_cycles),
+            host_requests: self.pool.host_stats().map_or(0, |s| s.requests),
             digest,
             classes,
             instances,
@@ -1935,5 +2163,131 @@ mod tests {
                 "{reason}"
             );
         }
+    }
+
+    // ---- shared-virtual-memory serving ----------------------------------
+
+    fn svm_sched(mode: SvmMode) -> Scheduler {
+        Scheduler::new(aurora(), 1, Policy::Fifo)
+            .with_board(BoardSpec::with_bandwidth(16))
+            .with_svm(SvmConfig::new(mode).with_host_bw(8))
+    }
+
+    /// The offload strategy moves cycles, never numerics: the same stream
+    /// served pinned, copied, or auto-selected yields bit-identical report
+    /// digests — and auto's makespan is no worse than the better fixed
+    /// strategy (the Cheshire pin-vs-copy tradeoff, arXiv:2305.04760).
+    #[test]
+    fn svm_modes_are_digest_identical_and_auto_is_no_worse() {
+        let mut runs = Vec::new();
+        for over in [Some(SvmMode::Pin), Some(SvmMode::Copy), None] {
+            let mut s = svm_sched(SvmMode::Auto);
+            crate::svm::submit_svm_stream(&mut s, 16, 7, over).unwrap();
+            s.drain().unwrap();
+            let r = s.report();
+            assert_eq!(r.completed, 16);
+            assert!(r.host_dram_bytes > 0, "host traffic must be accounted");
+            runs.push((r.digest, r.makespan_cycles, s.trace.render()));
+        }
+        assert_eq!(runs[0].0, runs[1].0, "pin vs copy digests diverge");
+        assert_eq!(runs[1].0, runs[2].0, "copy vs auto digests diverge");
+        let (pin, copy, auto) = (runs[0].1, runs[1].1, runs[2].1);
+        assert!(auto <= pin.min(copy), "auto {auto} worse than pin {pin} / copy {copy}");
+        // Auto genuinely mixes strategies on this stream: small reused
+        // buffers pin (TLB warms), large streaming buffers copy.
+        let auto_trace = &runs[2].2;
+        assert!(auto_trace.contains("(pin:"), "{auto_trace}");
+        assert!(auto_trace.contains("(copy:"), "{auto_trace}");
+    }
+
+    #[test]
+    fn svm_operands_require_enablement_and_valid_buffers() {
+        // No with_svm: VA-described operands cannot be served.
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let k = crate::svm::scale_kernel("svm_scale_s", 64);
+        let h = s.submit_kernel(KernelJob::from_srcs(
+            k,
+            vec![PayloadSrc::Svm { va: 0x40_0000_0000, elems: 64 }],
+            vec![1.5],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("SVM serving is not enabled"), "{reason}");
+
+        // Enabled, but the VA was never allocated / the view is oversized.
+        let mut s = svm_sched(SvmMode::Pin);
+        let k = crate::svm::scale_kernel("svm_scale_s", 64);
+        let h = s.submit_kernel(KernelJob::from_srcs(
+            k,
+            vec![PayloadSrc::Svm { va: 0xdead_0000, elems: 64 }],
+            vec![1.5],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("not an allocated buffer"), "{reason}");
+
+        let va = s.svm_alloc_f32(vec![1.0; 16]).unwrap();
+        let k = crate::svm::scale_kernel("svm_scale_s", 64);
+        let h = s.submit_kernel(KernelJob::from_srcs(
+            k,
+            vec![PayloadSrc::Svm { va, elems: 64 }],
+            vec![1.5],
+        ));
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("holds 16 element(s)"), "{reason}");
+    }
+
+    /// SVM buffers are shared memory: the device result lands in the host's
+    /// space, and a second job on the same buffer consumes it (submission
+    /// order = data visibility).
+    #[test]
+    fn svm_write_back_chains_through_the_shared_buffer() {
+        let mut s = svm_sched(SvmMode::Copy);
+        let va = s.svm_alloc_f32(vec![2.0; 64]).unwrap();
+        for _ in 0..2 {
+            let k = crate::svm::scale_kernel("svm_scale_s", 64);
+            let h = s.submit_kernel(KernelJob::from_srcs(
+                k,
+                vec![PayloadSrc::Svm { va, elems: 64 }],
+                vec![1.5],
+            ));
+            let state = s.wait(h).unwrap();
+            assert!(matches!(state, JobState::Done(_)), "{state:?}");
+        }
+        let out = s.svm_read_f32(va).unwrap();
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&v| v == 4.5), "2.0 * 1.5 * 1.5 = {}", out[0]);
+    }
+
+    /// Enabling SVM must not perturb jobs that carry no SVM operands: the
+    /// host port exists but sees no traffic, and serving is bit-identical
+    /// to a scheduler without the subsystem.
+    #[test]
+    fn svm_enablement_leaves_plain_jobs_untouched() {
+        let run = |svm: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Fifo);
+            if svm {
+                s = s.with_svm(SvmConfig::new(SvmMode::Auto));
+            }
+            for seed in 0..4 {
+                s.submit(job("gemm", 12, seed));
+            }
+            s.submit_kernel(saxpy_job(64, 9));
+            s.drain().unwrap();
+            (s.report(), s.trace.render())
+        };
+        let (plain, plain_trace) = run(false);
+        let (svm, svm_trace) = run(true);
+        assert_eq!(plain.digest, svm.digest);
+        assert_eq!(plain.makespan_cycles, svm.makespan_cycles);
+        assert_eq!(plain_trace, svm_trace);
+        assert_eq!(svm.host_dram_bytes, 0);
+        assert_eq!(svm.host_requests, 0);
+        assert_eq!(svm.svm_mode, Some("auto"));
+        assert_eq!(plain.svm_mode, None);
     }
 }

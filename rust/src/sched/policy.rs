@@ -205,6 +205,15 @@ pub fn predict_dma_cycles(bytes: u64, beat_bytes: u64) -> u64 {
     bytes / beat_bytes.max(1)
 }
 
+/// Host-side copy-staging cycle proxy: fixed per-transfer setup plus the
+/// bytes over the host DRAM-port rate ([`crate::svm::SvmConfig::host_bw`]).
+/// The SVM `auto` strategy prices the staging alternative with this shape
+/// (the exact ledger-aware figure comes from
+/// [`crate::sched::InstancePool::host_probe`]).
+pub fn predict_host_copy_cycles(bytes: u64, host_bw: u64, setup: u64) -> u64 {
+    setup + bytes.div_ceil(host_bw.max(1))
+}
+
 /// Inflate a static cycle prediction by the current DRAM pressure: the
 /// DMA share of the job stretches proportionally to how much of the board
 /// peak is already reserved (fully loaded board ⇒ the DMA share doubles).
@@ -310,6 +319,14 @@ mod tests {
         assert!(
             predict_job_dma_cycles(&small, 4) > predict_job_dma_cycles(&small, 16)
         );
+    }
+
+    #[test]
+    fn host_copy_prediction_is_setup_plus_drain() {
+        assert_eq!(predict_host_copy_cycles(800, 8, 30), 130);
+        assert_eq!(predict_host_copy_cycles(801, 8, 30), 131, "partial beats round up");
+        assert_eq!(predict_host_copy_cycles(0, 8, 30), 30);
+        assert_eq!(predict_host_copy_cycles(64, 0, 0), 64, "rate clamps to 1");
     }
 
     #[test]

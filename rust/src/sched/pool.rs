@@ -32,7 +32,7 @@
 //! contents.
 
 use crate::config::HeroConfig;
-use crate::mem::BandwidthLedger;
+use crate::mem::{BandwidthLedger, PortStats};
 use crate::noc::Port;
 
 /// Shared carrier-board DRAM parameters for a pool.
@@ -111,6 +111,18 @@ struct Slot {
     drain_bytes_per_cycle: u64,
 }
 
+/// The host's port onto the shared board DRAM (SVM serving): copy staging,
+/// page-table-entry reads and mailbox descriptors reserve board bandwidth
+/// here, so instance placement, SJF inflation and `probe_stall` see host
+/// contention exactly like another accelerator's traffic. Host traffic is
+/// never priority-class — QoS headroom stays reserved for priority *jobs*.
+#[derive(Debug)]
+struct HostPort {
+    /// Host link rate in bytes/cycle ([`crate::svm::SvmConfig::host_bw`]).
+    rate: u64,
+    stats: PortStats,
+}
+
 /// A pool of accelerator instances sharing one simulated timeline (starting
 /// at cycle 0) and one board DRAM.
 #[derive(Debug)]
@@ -118,6 +130,8 @@ pub struct InstancePool {
     slots: Vec<Slot>,
     board: BandwidthLedger,
     spec: BoardSpec,
+    /// Present iff SVM serving is enabled (`Scheduler::with_svm`).
+    host: Option<HostPort>,
 }
 
 impl InstancePool {
@@ -146,7 +160,79 @@ impl InstancePool {
             slots,
             board: BandwidthLedger::new(board.dram_bytes_per_cycle, board.priority_headroom),
             spec: board,
+            host: None,
         }
+    }
+
+    /// Attach the host's DRAM port at `rate` bytes/cycle (idempotent; the
+    /// last rate wins). Until this is called, host traffic is free — the
+    /// pre-SVM model.
+    pub fn enable_host_port(&mut self, rate: u64) {
+        let rate = rate.max(1);
+        match &mut self.host {
+            Some(h) => h.rate = rate,
+            None => {
+                self.host = Some(HostPort {
+                    rate,
+                    stats: PortStats {
+                        label: "host".into(),
+                        priority: false,
+                        bytes: 0,
+                        requests: 0,
+                        stall_cycles: 0,
+                    },
+                });
+            }
+        }
+    }
+
+    /// Host link rate, if the host port is attached.
+    pub fn host_rate(&self) -> Option<u64> {
+        self.host.as_ref().map(|h| h.rate)
+    }
+
+    /// Accounting for the host port, if attached.
+    pub fn host_stats(&self) -> Option<&PortStats> {
+        self.host.as_ref().map(|h| &h.stats)
+    }
+
+    /// Reserve `bytes` of host-side traffic on the board ledger starting at
+    /// `start`, and return the reservation's total duration (uncontended
+    /// service plus any contention wait — both are host-visible latency).
+    /// No-op (0 cycles) when the host port is not attached or `bytes` is 0.
+    ///
+    /// `start` must be at or after the pool's dispatch frontier
+    /// ([`InstancePool::earliest_free`]) so the reservation survives the
+    /// ledger trim a later [`InstancePool::assign`] performs — the
+    /// scheduler's dispatch path reserves at the assignee's `free_at`,
+    /// which always satisfies this.
+    pub fn host_reserve(&mut self, start: u64, bytes: u64) -> u64 {
+        if self.host.is_none() || bytes == 0 {
+            return 0;
+        }
+        debug_assert!(
+            start >= self.earliest_free(),
+            "host reservation behind the dispatch frontier would be trimmed"
+        );
+        let InstancePool { board, host, .. } = self;
+        let h = host.as_mut().expect("checked above");
+        let end = board.reserve(start, bytes, h.rate, false);
+        let stall = (end - start).saturating_sub(board.uncontended_cycles(bytes, h.rate, false));
+        h.stats.bytes += bytes;
+        h.stats.requests += 1;
+        h.stats.stall_cycles += stall;
+        end - start
+    }
+
+    /// Read-only what-if of [`InstancePool::host_reserve`]: the duration the
+    /// reservation would take given current ledger state (the SVM `auto`
+    /// strategy prices copy staging with this).
+    pub fn host_probe(&self, start: u64, bytes: u64) -> u64 {
+        let Some(h) = self.host.as_ref() else { return 0 };
+        if bytes == 0 {
+            return 0;
+        }
+        self.board.probe(start, bytes, h.rate, false) - start
     }
 
     /// Replace the board DRAM spec. Only meaningful before any assignment.
@@ -303,7 +389,8 @@ impl InstancePool {
     }
 
     /// Total bytes moved through the board DRAM (ledger accounting; equals
-    /// the sum of per-instance `dram_bytes` — the conservation invariant).
+    /// the sum of per-instance `dram_bytes`, plus the host port's bytes
+    /// when one is enabled — the conservation invariant).
     pub fn dram_total_bytes(&self) -> u64 {
         self.board.total_bytes()
     }
@@ -505,6 +592,53 @@ mod tests {
         assert_eq!(q.probe_stall(0, 12_345, 1 << 20, false), 0);
         assert_eq!(q.earliest_free(), 0);
         assert_eq!(q.drain_rate(0), aurora().dma_beat_bytes());
+    }
+
+    #[test]
+    fn host_port_is_absent_until_enabled() {
+        let mut p = pool(1, BoardSpec::with_bandwidth(8));
+        assert!(p.host_rate().is_none());
+        assert!(p.host_stats().is_none());
+        assert_eq!(p.host_reserve(0, 4096), 0, "no port: host traffic is free");
+        assert_eq!(p.host_probe(0, 4096), 0);
+        assert_eq!(p.dram_total_bytes(), 0);
+        p.enable_host_port(0);
+        assert_eq!(p.host_rate(), Some(1), "rate clamps to at least 1 B/cy");
+        p.enable_host_port(8);
+        assert_eq!(p.host_rate(), Some(8), "re-enable updates the rate");
+    }
+
+    #[test]
+    fn host_reserve_books_bytes_and_uncontended_duration() {
+        let mut p = pool(1, BoardSpec::with_bandwidth(16));
+        p.enable_host_port(8);
+        let d = p.host_reserve(0, 800);
+        assert_eq!(d, 100, "800 B at 8 B/cy on an otherwise idle board");
+        let s = p.host_stats().unwrap();
+        assert_eq!((s.bytes, s.requests, s.stall_cycles), (800, 1, 0));
+        assert_eq!(s.label, "host");
+        assert!(!s.priority, "host traffic never rides the QoS headroom");
+        assert_eq!(p.dram_total_bytes(), 800);
+        assert_eq!(p.host_reserve(0, 0), 0, "zero-byte reservations are free");
+    }
+
+    #[test]
+    fn host_traffic_contends_with_instance_dma() {
+        // Board peak 8 B/cy: instance 0's job saturates [0, 100); host
+        // staging overlapping it must wait, and only the *host* stats book
+        // that stall — the conservation split placement relies on.
+        let mut p = pool(2, BoardSpec::with_bandwidth(8));
+        p.enable_host_port(8);
+        p.assign(0, 0, 100, 800, false);
+        let probed = p.host_probe(0, 400);
+        let d = p.host_reserve(0, 400);
+        assert_eq!(d, probed, "host_probe is the exact what-if of host_reserve");
+        assert_eq!(d, 150, "blocked 100 cycles, then 50 at full rate");
+        assert_eq!(p.host_stats().unwrap().stall_cycles, 100);
+        assert_eq!(p.stats(0).dram_stall_cycles, 0, "instance stats untouched");
+        assert_eq!(p.dram_total_bytes(), 1200);
+        // And the reverse direction: instance placement sees host pressure.
+        assert!(p.probe_stall(1, 0, 400, false) > 0);
     }
 
     #[test]

@@ -77,10 +77,23 @@ pub struct ServeReport {
     /// Aggregate cycles jobs waited on the shared board DRAM.
     pub dram_stall_cycles: u64,
     /// Total bytes moved through the shared board DRAM (ledger accounting;
-    /// equals the per-instance sum — the conservation invariant).
+    /// equals the per-instance sum plus `host_dram_bytes` — the
+    /// conservation invariant).
     pub dram_bytes: u64,
     /// Delivered fraction of the board DRAM's peak over the makespan.
     pub dram_utilization: f64,
+    /// Default SVM offload strategy label (`Some` when [`crate::svm`]
+    /// serving is enabled on the scheduler, `None` otherwise).
+    pub svm_mode: Option<&'static str>,
+    /// Bytes the host moved through the board DRAM on jobs' behalf (copy
+    /// staging, page-table-entry reads, mailbox descriptors). Disjoint
+    /// from `dram_bytes`' per-instance sum — the host is its own port.
+    pub host_dram_bytes: u64,
+    /// Cycles host traffic stretched beyond its uncontended drain time.
+    pub host_dram_stall_cycles: u64,
+    /// Host-port reservations made (one per descriptor / staging / PTE
+    /// burst).
+    pub host_requests: u64,
     /// Order-stable digest over every completed job's output arrays:
     /// bit-identical results ⇔ identical digest, regardless of policy,
     /// placement, pool size, batching, caching or board bandwidth
@@ -165,6 +178,13 @@ impl fmt::Display for ServeReport {
             }
             writeln!(f)?;
         }
+        if let Some(mode) = self.svm_mode {
+            writeln!(
+                f,
+                "host svm      : mode {mode}, {} B host dram, {} stall cy, {} request(s)",
+                self.host_dram_bytes, self.host_dram_stall_cycles, self.host_requests
+            )?;
+        }
         for c in &self.classes {
             writeln!(
                 f,
@@ -219,6 +239,10 @@ mod tests {
             dram_stall_cycles: 12_000,
             dram_bytes: 3_000_000,
             dram_utilization: 0.25,
+            svm_mode: None,
+            host_dram_bytes: 0,
+            host_dram_stall_cycles: 0,
+            host_requests: 0,
             digest: 0xdead_beef,
             classes: vec![
                 ClassReport {
@@ -275,6 +299,20 @@ mod tests {
         let mut r = report();
         r.dram_peak_bytes_per_cycle = u64::MAX;
         assert!(r.to_string().contains("uncoupled"));
+    }
+
+    #[test]
+    fn host_svm_line_renders_only_when_enabled() {
+        let mut r = report();
+        assert!(!r.to_string().contains("host svm"));
+        r.svm_mode = Some("auto");
+        r.host_dram_bytes = 131_264;
+        r.host_dram_stall_cycles = 97;
+        r.host_requests = 17;
+        let s = r.to_string();
+        assert!(s.contains("host svm      : mode auto"), "{s}");
+        assert!(s.contains("131264 B host dram"), "{s}");
+        assert!(s.contains("97 stall cy, 17 request(s)"), "{s}");
     }
 
     #[test]

@@ -48,10 +48,12 @@ pub fn offload_lowered(
             bail!("map-clause buffers span multiple 4 GiB windows");
         }
     }
-    // Driver: load the device ELF (decoded program) + flush the IOMMU TLB
-    // for the new process context.
+    // Driver: load the device ELF (decoded program) + invalidate stale TLB
+    // entries. The flush is epoch-conditional: an unchanged page table
+    // keeps the TLB warm across offloads (`iommu.flush_on_offload = true`
+    // restores the old flush-every-offload driver).
     accel.load_program(Arc::new(lowered.program.clone()), n_teams)?;
-    accel.iommu.flush();
+    accel.flush_tlb_if_stale();
     // Marshal arguments: x10 = VA[63:32], x11.. = VA[31:0] per array.
     let mut args: Vec<u32> = vec![hi];
     args.extend(bufs.iter().map(|b| b.lo()));

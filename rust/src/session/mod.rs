@@ -39,6 +39,14 @@
 //!   benches use; [`Session::submit_jobs`] / [`Session::drain`] /
 //!   [`Session::report`] drive named job streams on a pooled session
 //!   (`hero serve`).
+//! * **Shared virtual memory** ([`crate::svm`], pooled sessions whose
+//!   scheduler was built with [`Scheduler::with_svm`]):
+//!   [`Session::svm_alloc_f32`] returns a virtual address,
+//!   [`LaunchBuilder::svm_arg`] binds a parameter to it with no snapshot
+//!   (the scheduler resolves the VA through the board IOMMU at dispatch,
+//!   under the configured pin/copy/auto strategy or a per-launch
+//!   [`LaunchBuilder::svm`] override), and [`Session::svm_read_f32`]
+//!   observes the device's result in the shared space.
 //!
 //! Non-chained launches are snapshot-in / copy-out exactly as before:
 //! argument buffers are captured at `submit` and written back at `wait`,
@@ -159,15 +167,27 @@ enum LocalSrc {
     /// Output array `index` of unresolved launch `launch` (dataflow edge):
     /// materialized when the producer resolves, never through the host.
     Dep { launch: usize, index: usize, elems: usize },
+    /// Shared-virtual-memory operand ([`LaunchBuilder::svm_arg`]): the
+    /// scheduler resolves the VA through the board IOMMU at dispatch.
+    /// Pooled sessions only.
+    Svm { va: u64, elems: usize },
 }
 
 impl LocalSrc {
     fn elems(&self) -> usize {
         match self {
             LocalSrc::Data(v) => v.len(),
-            LocalSrc::Dep { elems, .. } => *elems,
+            LocalSrc::Dep { elems, .. } | LocalSrc::Svm { elems, .. } => *elems,
         }
     }
+}
+
+/// One ordered launch parameter as the builder records it.
+enum BuilderBind {
+    /// A session buffer, with its access mode.
+    Buf(ArgKind, Buffer),
+    /// A shared-virtual-memory operand (no session buffer involved).
+    Svm { va: u64, elems: usize },
 }
 
 /// One buffer slot of the session heap.
@@ -373,6 +393,7 @@ impl Session {
             teams: 1,
             threads: None,
             priority: Priority::Normal,
+            svm_mode: None,
             max_cycles: LAUNCH_MAX_CYCLES,
             err: None,
             session: self,
@@ -557,6 +578,9 @@ impl Session {
                 LocalSrc::Dep { launch, .. } => {
                     bail!("internal: producer launch {launch} left unresolved")
                 }
+                LocalSrc::Svm { .. } => {
+                    bail!("internal: SVM operands are rejected at submit on single sessions")
+                }
             }
         }
         let (result, arrays) =
@@ -720,6 +744,29 @@ impl Session {
     pub fn events(&self) -> Result<String> {
         Ok(self.sched()?.trace.render())
     }
+
+    // --- shared virtual memory (pooled sessions) --------------------------
+
+    /// Allocate a shared-virtual-memory buffer holding `data` and return
+    /// its virtual address (bind it with [`LaunchBuilder::svm_arg`]).
+    /// Needs a pooled session whose scheduler was built with
+    /// [`Scheduler::with_svm`].
+    pub fn svm_alloc_f32(&mut self, data: Vec<f32>) -> Result<u64> {
+        match &mut self.backend {
+            Backend::Pool { sched } => sched.svm_alloc_f32(data),
+            Backend::Single { .. } => {
+                bail!("SVM buffers need a pooled session with SVM serving enabled")
+            }
+        }
+    }
+
+    /// Read a shared-virtual-memory buffer back (the host observing
+    /// offload results in place — no launch write-back involved).
+    pub fn svm_read_f32(&self, va: u64) -> Result<Vec<f32>> {
+        self.sched()?
+            .svm_read_f32(va)
+            .ok_or_else(|| anyhow!("va {va:#x} is not an allocated SVM buffer"))
+    }
 }
 
 /// Builder returned by [`Session::launch`]. Defaults: no AutoDMA, one team,
@@ -735,11 +782,12 @@ pub struct LaunchBuilder<'s> {
     session: &'s mut Session,
     kernel: Kernel,
     autodma: bool,
-    binds: Vec<(ArgKind, Buffer)>,
+    binds: Vec<BuilderBind>,
     fargs: Vec<f32>,
     teams: usize,
     threads: Option<u32>,
     priority: Priority,
+    svm_mode: Option<crate::svm::SvmMode>,
     max_cycles: u64,
     err: Option<String>,
 }
@@ -761,7 +809,7 @@ impl LaunchBuilder<'_> {
                         return self;
                     }
                 }
-                self.binds.push((kind, *buf));
+                self.binds.push(BuilderBind::Buf(kind, *buf));
             }
         }
         self
@@ -801,6 +849,27 @@ impl LaunchBuilder<'_> {
     /// earlier output is this launch's initial contents.
     pub fn writes(self, buf: &Buffer) -> Self {
         self.bind(buf, ArgKind::Write)
+    }
+
+    /// Bind the next host-array parameter to a *shared-virtual-memory*
+    /// buffer by virtual address ([`Session::svm_alloc_f32`]): no snapshot
+    /// is taken — the scheduler resolves the VA through the board IOMMU at
+    /// dispatch under the session's SVM offload strategy, and the device's
+    /// result lands back in the shared space
+    /// ([`Session::svm_read_f32`]). Pooled sessions with SVM serving
+    /// enabled only.
+    pub fn svm_arg(mut self, va: u64, elems: usize) -> Self {
+        if self.err.is_none() {
+            self.binds.push(BuilderBind::Svm { va, elems });
+        }
+        self
+    }
+
+    /// Override the SVM offload strategy for this launch (defaults to the
+    /// scheduler's configured mode).
+    pub fn svm(mut self, mode: crate::svm::SvmMode) -> Self {
+        self.svm_mode = Some(mode);
+        self
     }
 
     /// Bind the kernel's float parameters, in declaration order.
@@ -860,19 +929,39 @@ impl LaunchBuilder<'_> {
         let mut writes: Vec<usize> = self
             .binds
             .iter()
-            .filter(|(k, _)| *k == ArgKind::Write)
-            .map(|(_, b)| b.id)
+            .filter_map(|b| match b {
+                BuilderBind::Buf(ArgKind::Write, buf) => Some(buf.id),
+                _ => None,
+            })
             .collect();
         writes.sort_unstable();
         if writes.windows(2).any(|w| w[0] == w[1]) {
             bail!("a buffer is bound with .writes() twice in one launch");
         }
+        if matches!(self.session.backend, Backend::Single { .. })
+            && self.binds.iter().any(|b| matches!(b, BuilderBind::Svm { .. }))
+        {
+            bail!("SVM operands need a pooled session with SVM serving enabled");
+        }
         // Build the payload source per parameter: pending buffers chain,
-        // everything else snapshots (exactly PR 3's submit-time capture).
+        // SVM operands stay VA-described, everything else snapshots
+        // (exactly PR 3's submit-time capture).
         let mut srcs: Vec<LocalSrc> = Vec::with_capacity(self.binds.len());
         let mut dep_handles: Vec<Option<JobHandle>> = Vec::with_capacity(self.binds.len());
         let mut binds_rec: Vec<(ArgKind, usize, u32)> = Vec::with_capacity(self.binds.len());
-        for (kind, buf) in &self.binds {
+        for bind in &self.binds {
+            let (kind, buf) = match bind {
+                BuilderBind::Buf(kind, buf) => (kind, buf),
+                BuilderBind::Svm { va, elems } => {
+                    srcs.push(LocalSrc::Svm { va: *va, elems: *elems });
+                    dep_handles.push(None);
+                    // Placeholder keeping the per-parameter zip aligned;
+                    // `Read` is skipped at write-back (the scheduler lands
+                    // SVM results in the shared space, not a session slot).
+                    binds_rec.push((ArgKind::Read, 0, u32::MAX));
+                    continue;
+                }
+            };
             let slot = &self.session.slots[buf.id];
             let data = slot.data.as_ref().expect("bound buffers are live");
             match slot.pending {
@@ -908,7 +997,7 @@ impl LaunchBuilder<'_> {
             .iter()
             .filter_map(|s| match s {
                 LocalSrc::Dep { launch, .. } => Some(*launch),
-                LocalSrc::Data(_) => None,
+                LocalSrc::Data(_) | LocalSrc::Svm { .. } => None,
             })
             .collect();
         dep_launches.sort_unstable();
@@ -917,8 +1006,10 @@ impl LaunchBuilder<'_> {
             .binds
             .iter()
             .enumerate()
-            .filter(|(_, (k, _))| *k == ArgKind::Write)
-            .map(|(i, (_, b))| (b.id, i))
+            .filter_map(|(i, b)| match b {
+                BuilderBind::Buf(ArgKind::Write, buf) => Some((buf.id, i)),
+                _ => None,
+            })
             .collect();
         let state = match &mut self.session.backend {
             Backend::Single { .. } => LaunchState::PendingSingle(Box::new(SingleSpec {
@@ -936,6 +1027,7 @@ impl LaunchBuilder<'_> {
                 for (s, h) in srcs.into_iter().zip(&dep_handles) {
                     pool_srcs.push(match s {
                         LocalSrc::Data(v) => PayloadSrc::Data(v),
+                        LocalSrc::Svm { va, elems } => PayloadSrc::Svm { va, elems },
                         LocalSrc::Dep { launch, index, elems } => {
                             let Some(producer) = h else {
                                 bail!("internal: producer launch {launch} is not pooled")
@@ -949,6 +1041,7 @@ impl LaunchBuilder<'_> {
                 job.teams = self.teams;
                 job.priority = self.priority;
                 job.autodma = self.autodma;
+                job.svm = self.svm_mode;
                 job.max_cycles = self.max_cycles;
                 let handle = sched.submit_kernel(job);
                 LaunchState::PendingPool { handle, binds: binds_rec, deps: dep_launches.clone() }
@@ -1233,5 +1326,37 @@ mod tests {
         let run = sess.submit_workload(&w, Variant::Handwritten, 8, 1).unwrap();
         let err = sess.wait(&run.launch).unwrap_err();
         assert!(err.to_string().contains("rejected"), "{err}");
+    }
+
+    #[test]
+    fn svm_launches_ride_the_pooled_session() {
+        use crate::svm::{SvmConfig, SvmMode};
+        let sched = Scheduler::new(aurora(), 1, Policy::Fifo)
+            .with_svm(SvmConfig::new(SvmMode::Copy));
+        let mut sess = Session::with_scheduler(sched);
+        let va = sess.svm_alloc_f32(vec![3.0; 32]).unwrap();
+        // No snapshot: the parameter is VA-described and the result lands
+        // in the shared space, not a session buffer.
+        let l = sess
+            .launch(&scale_kernel(32))
+            .svm_arg(va, 32)
+            .svm(SvmMode::Pin)
+            .submit()
+            .unwrap();
+        let r = sess.wait(&l).unwrap();
+        assert!(r.device_cycles > 0);
+        assert_eq!(sess.svm_read_f32(va).unwrap(), vec![6.0; 32]);
+        assert!(sess.svm_read_f32(0xdead).is_err());
+        assert!(sess.events().unwrap().contains("svm"), "{}", sess.events().unwrap());
+
+        // Single sessions reject SVM operands and allocations outright.
+        let mut single = Session::single(aurora());
+        assert!(single.svm_alloc_f32(vec![0.0; 4]).is_err());
+        let err = single.launch(&scale_kernel(32)).svm_arg(va, 32).submit().unwrap_err();
+        assert!(err.to_string().contains("pooled session"), "{err}");
+
+        // A pooled session without SVM serving rejects the allocation too.
+        let mut plain = Session::pool(aurora(), 1);
+        assert!(plain.svm_alloc_f32(vec![0.0; 4]).is_err());
     }
 }

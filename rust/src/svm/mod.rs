@@ -1,0 +1,405 @@
+//! Shared-virtual-memory offload: the host as a modeled traffic source.
+//!
+//! Everywhere else in the simulator the host is free — staging writes DRAM
+//! directly and only the configured mailbox constants cost cycles. This
+//! module makes shared virtual memory a first-class *offload path* with the
+//! host on the clock (§2.3 of the paper; pin-vs-copy tradeoff after the
+//! Cheshire SVM study, arXiv:2305.04760):
+//!
+//! - [`SvmSpace`] is a process-wide VA space: page-granular allocations
+//!   mapped through one host [`PageTable`], with the functional f32 contents
+//!   kept host-side. Kernel jobs name operands by VA
+//!   (`PayloadSrc::Svm { va, elems }`) instead of carrying the bytes.
+//! - [`SvmMode`] selects how a launch reaches those operands:
+//!   - **pin**: zero-copy. The accelerator accesses host pages in place;
+//!     every page is translated through the board's persistent [`Iommu`]
+//!     (TLB hits free, misses pay the software walk) and every NoC beat
+//!     pays the ext-address overhead.
+//!   - **copy**: up-front staging. The host pins the operand pages
+//!     (per-operand DMA setup + one page-table walk per page) and streams
+//!     the bytes in and back out through its DRAM port.
+//!   - **auto**: per-launch choice by exact predicted cost (read-only
+//!     ledger probes; TLB-refill walks are treated as an amortized
+//!     investment — see `sched`'s dispatch path).
+//! - All host-side traffic — copy staging, page-table-entry reads, mailbox
+//!   descriptors — reserves cycles on the shared board
+//!   [`crate::mem::BandwidthLedger`] through a dedicated host port
+//!   (`sched::pool`), so placement pressure, SJF inflation and
+//!   `probe_stall` see host contention like any other requester.
+//!
+//! Determinism: every cost here is integer cycles derived from configured
+//! constants and ledger state; with SVM disabled the scheduler takes none
+//! of these paths and its event sequence is bit-identical to before.
+
+use crate::config::HeroConfig;
+use crate::iommu::{Iommu, PageTable};
+use crate::sched::{JobHandle, KernelJob, PayloadSrc, Scheduler};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Default host DRAM-port rate in bytes/cycle (`hero serve --host-bw`).
+/// Half a typical board drain rate: the host reaches the board DRAM through
+/// the narrower system interconnect, not the accelerator NoC.
+pub const DEFAULT_HOST_BW: u64 = 8;
+
+/// Bytes of page-table entry read per software walk (one 64-bit PTE; the
+/// multi-level walk latency is the configured `iommu.walk_cycles`, this is
+/// only the DRAM traffic it generates).
+pub const PTE_BYTES: u64 = 8;
+
+/// Element count of the small operands in [`submit_svm_stream`]: 512 B,
+/// well under the pin/copy crossover (~1.4 KiB at default rates) — pin
+/// should win once the TLB is warm.
+pub const SMALL_ELEMS: usize = 128;
+
+/// Element count of the large operands in [`submit_svm_stream`]: 64 KiB,
+/// well over the crossover — copy staging should win.
+pub const LARGE_ELEMS: usize = 16384;
+
+/// How a launch reaches its SVM operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SvmMode {
+    /// Zero-copy: access host pages in place through the IOMMU.
+    Pin,
+    /// Stage through host DMA up front, copy results back.
+    Copy,
+    /// Choose pin or copy per launch by exact predicted cost.
+    Auto,
+}
+
+impl SvmMode {
+    /// Parse a CLI-style mode name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pin" => Ok(SvmMode::Pin),
+            "copy" => Ok(SvmMode::Copy),
+            "auto" => Ok(SvmMode::Auto),
+            other => anyhow::bail!("unknown SVM mode '{other}' (expected pin, copy or auto)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SvmMode::Pin => "pin",
+            SvmMode::Copy => "copy",
+            SvmMode::Auto => "auto",
+        }
+    }
+}
+
+/// SVM serving configuration (`Scheduler::with_svm`).
+#[derive(Debug, Clone, Copy)]
+pub struct SvmConfig {
+    /// Board-wide default strategy; `KernelJob::svm` overrides per launch.
+    pub mode: SvmMode,
+    /// Host DRAM-port rate in bytes/cycle.
+    pub host_bw: u64,
+}
+
+impl SvmConfig {
+    pub fn new(mode: SvmMode) -> Self {
+        SvmConfig { mode, host_bw: DEFAULT_HOST_BW }
+    }
+
+    pub fn with_host_bw(mut self, bw: u64) -> Self {
+        self.host_bw = bw.max(1);
+        self
+    }
+}
+
+/// The host process's shared VA space: a page-granular bump allocator over
+/// one application [`PageTable`], holding the functional contents of every
+/// shared buffer.
+///
+/// This is the *board-lifetime* counterpart of the per-launch
+/// [`crate::host::HostContext`]: buffers outlive launches, so the
+/// persistent TLB can stay warm across offloads that revisit them.
+#[derive(Debug)]
+pub struct SvmSpace {
+    page_bytes: u64,
+    next_va: u64,
+    next_pa: u64,
+    pt: PageTable,
+    store: HashMap<u64, Vec<f32>>,
+}
+
+impl SvmSpace {
+    pub fn new(page_bytes: usize) -> Self {
+        SvmSpace {
+            page_bytes: page_bytes as u64,
+            next_va: crate::host::VA_BASE,
+            next_pa: 0,
+            pt: PageTable::new(page_bytes),
+            store: HashMap::new(),
+        }
+    }
+
+    /// Allocate a shared buffer holding `data`, map its pages, return its VA.
+    pub fn alloc_f32(&mut self, data: Vec<f32>) -> u64 {
+        let bytes = (data.len().max(1) as u64 * 4).div_ceil(self.page_bytes) * self.page_bytes;
+        let va = self.next_va;
+        self.pt.map_range(va, self.next_pa, bytes);
+        self.next_va += bytes;
+        self.next_pa += bytes;
+        self.store.insert(va, data);
+        va
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn pt(&self) -> &PageTable {
+        &self.pt
+    }
+
+    /// Element count of the buffer at `va` (allocation-start VAs only).
+    pub fn elems(&self, va: u64) -> Option<usize> {
+        self.store.get(&va).map(|b| b.len())
+    }
+
+    /// Borrow the buffer at `va`.
+    pub fn get(&self, va: u64) -> Option<&[f32]> {
+        self.store.get(&va).map(|b| b.as_slice())
+    }
+
+    /// Copy the buffer at `va` out (host reading results back).
+    pub fn read(&self, va: u64) -> Option<Vec<f32>> {
+        self.store.get(&va).cloned()
+    }
+
+    /// Write a launch's output view back into the buffer at `va`. A view
+    /// shorter than the buffer updates only the prefix it covered.
+    pub fn write_back(&mut self, va: u64, data: &[f32]) {
+        if let Some(buf) = self.store.get_mut(&va) {
+            let n = data.len().min(buf.len());
+            buf[..n].copy_from_slice(&data[..n]);
+        }
+    }
+}
+
+/// Per-board SVM serving state owned by the scheduler: the shared space
+/// plus the board's persistent IOMMU shadow (a pure cost engine — launch
+/// numerics never flow through it, preserving the bit-identity invariant).
+#[derive(Debug)]
+pub struct SvmState {
+    pub cfg: SvmConfig,
+    pub space: SvmSpace,
+    pub iommu: Iommu,
+}
+
+impl SvmState {
+    pub fn new(cfg: SvmConfig, hw: &HeroConfig) -> Self {
+        SvmState {
+            cfg,
+            space: SvmSpace::new(hw.iommu.page_bytes),
+            iommu: Iommu::new(hw.iommu),
+        }
+    }
+}
+
+/// Number of distinct pages the byte range `[va, va + bytes)` touches.
+pub fn pages_of(va: u64, bytes: u64, page_bytes: u64) -> u64 {
+    (va + bytes.max(1) - 1) / page_bytes - va / page_bytes + 1
+}
+
+/// Translate every page a set of `(va, bytes)` operands touches through
+/// `iommu` at cycle `now`, filling the TLB as a real pinned access stream
+/// would. Returns `(cycles, hits, misses)` for this call alone.
+pub fn translate_operands(
+    iommu: &mut Iommu,
+    pt: &PageTable,
+    ops: &[(u64, u64)],
+    now: u64,
+) -> (u64, u64, u64) {
+    let page = pt.page_bytes();
+    let (h0, m0) = (iommu.hits, iommu.misses);
+    let mut cycles = 0u64;
+    for &(va, bytes) in ops {
+        let first = va / page;
+        let last = (va + bytes.max(1) - 1) / page;
+        for p in first..=last {
+            let t = iommu
+                .translate(p * page, pt, now)
+                .expect("SVM operand pages are always mapped by the space allocator");
+            cycles += t.cost;
+        }
+    }
+    (cycles, iommu.hits - h0, iommu.misses - m0)
+}
+
+/// Data-movement cycles of a pinned access stream: every NoC beat crosses
+/// the 64-bit ext-address path and pays its constant overhead
+/// (`timing.ext_addr_overhead`). This is the §2.1 "≈3 cycles per remote
+/// access" cost, charged per beat — the tradeoff against copy staging is
+/// per *byte*, not per element.
+pub fn pin_access_cycles(bytes: u64, beat_bytes: u64, ext_addr_overhead: u64) -> u64 {
+    bytes.div_ceil(beat_bytes.max(1)) * ext_addr_overhead
+}
+
+/// Fixed (non-ledger) cycles of copy staging: per-operand DMA setup plus
+/// one software page-table walk per page pinned.
+pub fn copy_fixed_cycles(ops: &[(u64, u64)], page_bytes: u64, setup: u64, walk: u64) -> u64 {
+    ops.iter().map(|&(va, b)| setup + pages_of(va, b, page_bytes) * walk).sum()
+}
+
+/// Bytes copy staging moves through the host DRAM port: the operands in and
+/// back out, plus one PTE read per pinned page.
+pub fn copy_port_bytes(ops: &[(u64, u64)], page_bytes: u64) -> u64 {
+    ops.iter().map(|&(va, b)| 2 * b + pages_of(va, b, page_bytes) * PTE_BYTES).sum()
+}
+
+/// Build an in-place scaling kernel `X[i] *= a` over `n` elements — the
+/// canonical SVM workload: one operand, read and written through the
+/// shared space.
+pub fn scale_kernel(name: &str, n: usize) -> crate::compiler::ir::Kernel {
+    use crate::compiler::ir::*;
+    let mut b = KernelBuilder::new(name);
+    let x = b.host_array("X", vec![ci(n as i32)]);
+    let a = b.float_param("a");
+    let i = b.loop_var("i");
+    b.body(vec![par_for(
+        i,
+        ci(0),
+        ci(n as i32),
+        vec![st(x, vec![var(i)], var(a).mul(ld(x, vec![var(i)])))],
+    )])
+}
+
+/// How many distinct small/large buffers [`submit_svm_stream`] cycles over.
+/// Few small buffers → plenty of TLB reuse (where pin pays off); more large
+/// buffers → a realistic working set for the staging path.
+pub const SMALL_BUFFERS: usize = 2;
+pub const LARGE_BUFFERS: usize = 4;
+
+/// Submit the canonical SVM serving stream: `n_jobs` scale launches
+/// alternating small (TLB-warm, pin-friendly) and large (copy-friendly)
+/// operands drawn from a fixed set of shared buffers, so the same buffer
+/// is revisited across launches exactly as an iterative host application
+/// would. `mode` forces a per-job strategy override (`None` uses the
+/// board default).
+///
+/// Requires SVM serving (`Scheduler::with_svm`); fully deterministic in
+/// `seed`.
+pub fn submit_svm_stream(
+    s: &mut Scheduler,
+    n_jobs: usize,
+    seed: u64,
+    mode: Option<SvmMode>,
+) -> Result<Vec<JobHandle>> {
+    let small: Vec<u64> = (0..SMALL_BUFFERS)
+        .map(|i| s.svm_alloc_f32(crate::workloads::gen_f32(seed ^ (0x51 + i as u64), SMALL_ELEMS)))
+        .collect::<Result<_>>()?;
+    let large: Vec<u64> = (0..LARGE_BUFFERS)
+        .map(|i| s.svm_alloc_f32(crate::workloads::gen_f32(seed ^ (0x1a + i as u64), LARGE_ELEMS)))
+        .collect::<Result<_>>()?;
+    let mut handles = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        let (va, elems, name) = if i % 2 == 0 {
+            (small[(i / 2) % small.len()], SMALL_ELEMS, "svm_scale_s")
+        } else {
+            (large[(i / 2) % large.len()], LARGE_ELEMS, "svm_scale_l")
+        };
+        let mut j = KernelJob::from_srcs(
+            scale_kernel(name, elems),
+            vec![PayloadSrc::Svm { va, elems }],
+            vec![1.5],
+        );
+        j.svm = mode;
+        handles.push(s.submit_kernel(j));
+    }
+    Ok(handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+
+    #[test]
+    fn mode_parses_and_labels() {
+        for (s, m) in [("pin", SvmMode::Pin), ("copy", SvmMode::Copy), ("auto", SvmMode::Auto)] {
+            assert_eq!(SvmMode::parse(s).unwrap(), m);
+            assert_eq!(m.label(), s);
+        }
+        assert!(SvmMode::parse("dma").is_err());
+    }
+
+    #[test]
+    fn config_clamps_host_bw() {
+        let c = SvmConfig::new(SvmMode::Auto).with_host_bw(0);
+        assert_eq!(c.host_bw, 1);
+        assert_eq!(SvmConfig::new(SvmMode::Pin).host_bw, DEFAULT_HOST_BW);
+    }
+
+    #[test]
+    fn space_allocates_page_aligned_mapped_buffers() {
+        let mut sp = SvmSpace::new(4096);
+        let a = sp.alloc_f32(vec![1.0; 100]);
+        let b = sp.alloc_f32(vec![2.0; 2000]);
+        assert_eq!(a % 4096, 0);
+        assert_eq!(b - a, 4096, "100 f32 rounds to one page");
+        assert_eq!(sp.elems(a), Some(100));
+        assert_eq!(sp.elems(b), Some(2000));
+        assert_eq!(sp.elems(a + 4), None, "only allocation-start VAs resolve");
+        // Every byte of both buffers translates through the page table.
+        for off in [0u64, 399, 4096 + 7999] {
+            assert!(sp.pt().walk(a + off).is_some());
+        }
+        assert_eq!(sp.get(a).unwrap()[0], 1.0);
+        assert_eq!(sp.read(b).unwrap().len(), 2000);
+    }
+
+    #[test]
+    fn write_back_updates_the_covered_prefix() {
+        let mut sp = SvmSpace::new(4096);
+        let va = sp.alloc_f32(vec![0.0; 8]);
+        sp.write_back(va, &[9.0, 9.0, 9.0]);
+        assert_eq!(sp.read(va).unwrap(), vec![9.0, 9.0, 9.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        sp.write_back(0xdead, &[1.0]); // unknown VA is a no-op
+    }
+
+    #[test]
+    fn pages_of_counts_touched_pages() {
+        assert_eq!(pages_of(0, 1, 4096), 1);
+        assert_eq!(pages_of(0, 4096, 4096), 1);
+        assert_eq!(pages_of(0, 4097, 4096), 2);
+        assert_eq!(pages_of(4000, 200, 4096), 2, "straddles a boundary");
+        assert_eq!(pages_of(8192, 0, 4096), 1, "empty range still touches its page");
+    }
+
+    #[test]
+    fn translate_operands_warms_the_tlb() {
+        let mut sp = SvmSpace::new(4096);
+        let va = sp.alloc_f32(vec![0.0; 3000]); // 12000 B → 3 pages
+        let mut io = Iommu::new(aurora().iommu);
+        let walk = aurora().iommu.walk_cycles;
+        let (c1, h1, m1) = translate_operands(&mut io, sp.pt(), &[(va, 12000)], 0);
+        assert_eq!((c1, h1, m1), (3 * walk, 0, 3));
+        let (c2, h2, m2) = translate_operands(&mut io, sp.pt(), &[(va, 12000)], 10);
+        assert_eq!((c2, h2, m2), (0, 3, 0), "revisit hits and costs nothing");
+    }
+
+    #[test]
+    fn cost_helpers_reproduce_the_pin_copy_tradeoff() {
+        // Aurora-like constants: 8 B beats, 3-cycle ext overhead, 30-cycle
+        // DMA setup, 150-cycle walks, 8 B/cy host port.
+        let (beat, ext, setup, walk, hbw) = (8, 3, 30, 150, 8u64);
+        let steady_pin = |bytes: u64| pin_access_cycles(bytes, beat, ext);
+        let copy = |va: u64, bytes: u64| {
+            copy_fixed_cycles(&[(va, bytes)], 4096, setup, walk)
+                + copy_port_bytes(&[(va, bytes)], 4096).div_ceil(hbw)
+        };
+        let (s, l) = (SMALL_ELEMS as u64 * 4, LARGE_ELEMS as u64 * 4);
+        assert!(steady_pin(s) < copy(0, s), "small operands favor warm pin");
+        assert!(steady_pin(l) > copy(0, l), "large operands favor copy staging");
+        assert_eq!(steady_pin(512), 64 * 3);
+        assert_eq!(copy_port_bytes(&[(0, 512)], 4096), 2 * 512 + PTE_BYTES);
+    }
+
+    #[test]
+    fn scale_kernel_builds() {
+        let k = scale_kernel("svm_scale_t", 64);
+        crate::sched::job::validate_shape(&k, &[64], 1).unwrap();
+    }
+}

@@ -232,6 +232,12 @@ pub enum SchedEvent {
     /// cycles of its occupancy were contention waits on the shared
     /// carrier-board DRAM.
     Completed { job: usize, instance: usize, end: u64, dram_stall: u64 },
+    /// A job's shared-virtual-memory operands were served: `mode` is the
+    /// strategy actually taken (`auto` resolves to `pin` or `copy` before
+    /// this is recorded), `cycles` the full SVM charge added to the job's
+    /// occupancy, and `hits`/`misses` the board TLB traffic (both 0 for a
+    /// copy, which bypasses the TLB — see [`crate::svm`]).
+    SvmResolved { job: usize, mode: &'static str, cycles: u64, hits: u64, misses: u64 },
 }
 
 /// An append-only scheduler event log.
@@ -297,6 +303,9 @@ impl SchedTrace {
                         format!("complete  job {job} on instance {instance} at cycle {end}")
                     }
                 }
+                SchedEvent::SvmResolved { job, mode, cycles, hits, misses } => format!(
+                    "svm       job {job} ({mode}: {cycles} cy, {hits} hit(s), {misses} miss(es))"
+                ),
             };
             out.push_str(&line);
             out.push('\n');
@@ -327,6 +336,17 @@ mod tests {
         assert!(s.contains("cache") || s.contains("miss"));
         assert!(s.contains("ready     job 1"), "dataflow readiness surfaces in the log: {s}");
         assert_eq!(s.lines().count(), 6);
+    }
+
+    #[test]
+    fn svm_events_render_mode_and_tlb_traffic() {
+        let mut t = SchedTrace::new();
+        t.record(SchedEvent::SvmResolved { job: 7, mode: "pin", cycles: 342, hits: 0, misses: 1 });
+        t.record(SchedEvent::SvmResolved { job: 8, mode: "copy", cycles: 308, hits: 0, misses: 0 });
+        let s = t.render();
+        assert!(s.contains("svm       job 7 (pin: 342 cy, 0 hit(s), 1 miss(es))"), "{s}");
+        assert!(s.contains("svm       job 8 (copy: 308 cy"), "{s}");
+        assert!(t.dispatch_order().is_empty(), "svm events are not dispatches");
     }
 
     #[test]

@@ -648,6 +648,91 @@ fn prop_chained_dataflow_matches_host_roundtrip() {
 }
 
 #[test]
+fn prop_svm_offload_strategy_never_touches_numerics() {
+    // The SVM offload strategy moves *cycles*, never data: the same
+    // VA-described kernel stream served pinned, copied, or auto-selected
+    // must produce bit-identical per-job results (hence an identical
+    // report digest) — the pin/copy tradeoff is purely a timing question.
+    use herov2::sched::{BoardSpec, Policy, Scheduler};
+    use herov2::svm::{self, SvmConfig, SvmMode};
+    check(
+        2,
+        |rng| (rng.usize(6, 14), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let mut digests = Vec::new();
+            for over in [Some(SvmMode::Pin), Some(SvmMode::Copy), None] {
+                let mut s = Scheduler::new(aurora(), 1, Policy::Fifo)
+                    .with_board(BoardSpec::with_bandwidth(16))
+                    .with_svm(SvmConfig::new(SvmMode::Auto).with_host_bw(8))
+                    .with_verify(false);
+                let handles =
+                    svm::submit_svm_stream(&mut s, n, seed, over).map_err(|e| e.to_string())?;
+                s.drain().map_err(|e| e.to_string())?;
+                let r = s.report();
+                if r.completed != n {
+                    return Err(format!(
+                        "{over:?}: only {} of {n} SVM jobs completed",
+                        r.completed
+                    ));
+                }
+                if handles.iter().any(|h| !s.state(*h).is_some_and(|st| st.settled())) {
+                    return Err(format!("{over:?}: unsettled SVM handle"));
+                }
+                digests.push(r.digest);
+            }
+            if digests.windows(2).any(|w| w[0] != w[1]) {
+                return Err(format!("digests diverge across SVM strategies: {digests:#x?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tlb_flush_policy_never_touches_numerics() {
+    // `iommu.flush_on_offload` pins the old flush-every-offload driver
+    // behavior; the default flushes only when the page table's epoch
+    // advanced. Either way the TLB is a pure cost structure — job results
+    // (and the golden-model checks) must be bit-identical.
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(3, 6), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let mut digests = Vec::new();
+            for flush in [false, true] {
+                let mut cfg = aurora();
+                cfg.iommu.flush_on_offload = flush;
+                let mut s = Scheduler::new(cfg, 2, Policy::Fifo);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                let r = s.report();
+                if r.completed != jobs.len() {
+                    return Err(format!(
+                        "flush={flush}: only {} of {} jobs completed",
+                        r.completed,
+                        jobs.len()
+                    ));
+                }
+                if r.verify_failures != 0 {
+                    return Err(format!("flush={flush}: golden-model mismatch"));
+                }
+                digests.push(r.digest);
+            }
+            if digests[0] != digests[1] {
+                return Err(format!(
+                    "TLB flush policy changed numerics: {:#x} vs {:#x}",
+                    digests[0], digests[1]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_config_overrides_roundtrip() {
     check(
         40,
