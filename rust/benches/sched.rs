@@ -1,6 +1,7 @@
 //! Scheduler scaling study: pool/cache scaling on an uncontended board,
-//! shared carrier-board DRAM contention, board-aware placement, and QoS
-//! priority classes.
+//! shared carrier-board DRAM contention, board-aware placement, QoS
+//! priority classes, self-tuning prediction refinement with lookahead
+//! placement, and priority preemption.
 //!
 //! ```sh
 //! cargo bench --bench sched
@@ -26,6 +27,13 @@
 //! * Marking a slice of the stream latency-critical (`Priority::High` +
 //!   priority headroom) improves that slice's p95 turnaround vs the same
 //!   jobs in the same stream unprioritized.
+//! * On a stream whose trip counts are opaque to the static cycle model,
+//!   online EWMA refinement (`--learn`) plus joint lookahead placement
+//!   (`--lookahead`) strictly beats static-SJF makespan — with
+//!   bit-identical digests (learning moves time, never numerics).
+//! * Priority preemption (`--preempt`) displaces queued-but-assigned
+//!   batch followers so a High arrival jumps the batch: its p95
+//!   turnaround strictly improves, again with bit-identical digests.
 //!
 //! Every headline number is emitted to `BENCH_sched.json`
 //! (`bench_harness::emit`) for the `bench-gate` CI job: the sim is
@@ -459,6 +467,150 @@ fn main() {
         );
         out.metric("svm.contended.host_dram_stall_cycles", r.host_dram_stall_cycles);
         out.metric("svm.contended.makespan_cycles", r.makespan_cycles);
+    }
+
+    // --- self-tuning: online refinement + lookahead vs the static model ---
+    // Three kernels identical in *shape* but with a `let`-bound trip count
+    // (600 / 900 / 1200) the static predictor cannot fold: it sees the same
+    // 16-trip default for all three, so static SJF degenerates to
+    // submission order. A warmup phase teaches the EWMA store each class's
+    // true cost; the tuned run then dispatches an adversarially ordered
+    // burst in true shortest-first order. Same jobs, same numerics — the
+    // makespan gap is pure prediction quality.
+    {
+        use herov2::compiler::ir::{ci, cf, for_, ld, st, var, Kernel, KernelBuilder, Stmt};
+        use herov2::sched::policy::predict_kernel_job;
+        use herov2::sched::KernelJob;
+
+        fn opaque(name: &str, trips: i32) -> Kernel {
+            let mut b = KernelBuilder::new(name);
+            let x = b.host_array("X", vec![ci(64)]);
+            let n = b.let_i32("n");
+            let i = b.loop_var("i");
+            b.body(vec![
+                Stmt::Let { var: n, value: ci(trips) },
+                for_(i, ci(0), var(n), vec![st(x, vec![ci(0)], ld(x, vec![ci(0)]).add(cf(1.0)))]),
+            ])
+        }
+        fn job(k: &Kernel, arrival: u64) -> KernelJob {
+            let mut j = KernelJob::new(k.clone(), vec![vec![0.0f32; 64]], Vec::new());
+            j.arrival = arrival;
+            j
+        }
+        let short = opaque("tune_short", 600);
+        let mid = opaque("tune_mid", 900);
+        let long = opaque("tune_long", 1200);
+        let cfg = aurora();
+        let p = |k: &Kernel| predict_kernel_job(k, false, &cfg, 8);
+        assert_eq!(p(&short), p(&mid), "let-bound trips must be opaque to the static model");
+        assert_eq!(p(&mid), p(&long), "let-bound trips must be opaque to the static model");
+
+        // The burst lands long after the warmup drains, ordered so that a
+        // position-tie-broken static SJF interleaves classes adversarially.
+        const BURST_AT: u64 = 50_000_000;
+        let serve = |tuned: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Sjf)
+                .with_cache(true)
+                .with_batching(false)
+                .with_verify(false);
+            if tuned {
+                s = s.with_learning(true).with_lookahead(4);
+            }
+            for _ in 0..3 {
+                for k in [&short, &mid, &long] {
+                    s.submit_kernel(job(k, 0));
+                }
+            }
+            for k in [&short, &mid, &short, &mid, &short, &long] {
+                s.submit_kernel(job(k, BURST_AT));
+            }
+            s.drain().expect("drain");
+            s.report()
+        };
+        let stat = serve(false);
+        let tuned = serve(true);
+        assert_eq!(stat.completed, 15);
+        assert_eq!(tuned.completed, 15);
+        assert_eq!(stat.digest, tuned.digest, "learning moves time, never numerics");
+        println!(
+            "\nself-tuning study: makespan {} cy static-SJF vs {} cy learned-SJF+lookahead",
+            stat.makespan_cycles, tuned.makespan_cycles
+        );
+        assert!(
+            tuned.makespan_cycles < stat.makespan_cycles,
+            "learned SJF + lookahead must strictly beat the static model ({} vs {})",
+            tuned.makespan_cycles,
+            stat.makespan_cycles
+        );
+        println!(
+            "prediction error over {} samples: {}% static -> {}% learned",
+            tuned.predict_samples, tuned.predict_err_static_pct, tuned.predict_err_learned_pct
+        );
+        assert!(
+            tuned.predict_err_learned_pct < tuned.predict_err_static_pct,
+            "refinement must shrink the mean prediction error ({}% vs {}%)",
+            tuned.predict_err_learned_pct,
+            tuned.predict_err_static_pct
+        );
+        out.metric("selftune.static.makespan_cycles", stat.makespan_cycles);
+        out.metric("selftune.learned.makespan_cycles", tuned.makespan_cycles);
+        out.metric("selftune.predict_err_static_pct", tuned.predict_err_static_pct);
+        out.metric("selftune.predict_err_learned_pct", tuned.predict_err_learned_pct);
+        out.digest("selftune.digest", tuned.digest);
+        println!("learned schedule strictly faster, digests bit-identical: OK");
+
+        // --- preemption: a High arrival jumps a planned Normal batch ------
+        // One instance, batching on: eight identical Normal jobs gather
+        // into a single batch at cycle 0, then a High job arrives at cycle
+        // 1. With preemption the seven queued-but-assigned followers are
+        // displaced back into the queue (the in-flight head is never
+        // touched), the High job dispatches next, and the followers
+        // re-batch behind it against the already-cached binary.
+        let worker = opaque("preempt_worker", 800);
+        let urgent = opaque("preempt_urgent", 400);
+        let serve_pre = |preempt: bool| {
+            let mut s = Scheduler::new(aurora(), 1, Policy::Fifo)
+                .with_cache(true)
+                .with_batching(true)
+                .with_verify(false);
+            if preempt {
+                s = s.with_preemption(true);
+            }
+            for _ in 0..8 {
+                s.submit_kernel(job(&worker, 0));
+            }
+            let mut h = job(&urgent, 1);
+            h.priority = Priority::High;
+            s.submit_kernel(h);
+            s.drain().expect("drain");
+            s.report()
+        };
+        let off = serve_pre(false);
+        let on = serve_pre(true);
+        assert_eq!(off.completed, 9);
+        assert_eq!(on.completed, 9);
+        assert_eq!(off.digest, on.digest, "preemption moves time, never numerics");
+        assert_eq!(off.preemptions, 0);
+        assert_eq!(on.preemptions, 7, "all seven batch followers must be displaced");
+        let normal = on.class(Priority::Normal).expect("normal class completed jobs");
+        assert_eq!(normal.preempted, 7);
+        let hp95 = |r: &ServeReport| {
+            r.class(Priority::High).expect("high class completed jobs").p95_turnaround_cycles
+        };
+        let (p95_on, p95_off) = (hp95(&on), hp95(&off));
+        println!(
+            "\npreemption study: High p95 turnaround {p95_on} cy preempting vs \
+             {p95_off} cy waiting out the batch"
+        );
+        assert!(
+            p95_on < p95_off,
+            "displacing batch followers must improve High turnaround ({p95_on} vs {p95_off})"
+        );
+        out.metric("preempt.on.high_p95_turnaround_cycles", p95_on);
+        out.metric("preempt.off.high_p95_turnaround_cycles", p95_off);
+        out.metric("preempt.displacements", on.preemptions);
+        out.digest("preempt.digest", on.digest);
+        println!("High jumps the batch with bit-identical numerics: OK");
     }
 
     let path = out.emit().expect("emit BENCH_sched.json");

@@ -7,6 +7,14 @@
 //! rendering: every statement is a line (loops add their header line), and
 //! decision points are `for` loops plus `MIN`/`MAX` (which expand to C
 //! ternaries, which CCCC counts).
+//!
+//! This module also hosts the static cycle predictor ([`predict_cycles`]):
+//! a walk over the same IR with per-access remote/local/DMA costs. Loop
+//! bounds it cannot fold to a constant (anything but literals, `const`
+//! params and arithmetic over them — e.g. a `let`-bound scalar) fall back
+//! to [`PredictOpts::default_trips`], which is exactly the blind spot the
+//! scheduler's online refinement ([`crate::sched::learn`]) closes by
+//! blending measured device cycles into the prediction per kernel key.
 
 use super::ir::{Expr, Kernel, Stmt};
 

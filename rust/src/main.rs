@@ -28,6 +28,22 @@
 //!                                     finish incl. board DRAM stall)
 //!     --priority-headroom B           bytes/cycle of board DRAM reachable
 //!                                     only by priority-class jobs (default 0)
+//!     --learn                         online cycle-prediction refinement:
+//!                                     blend each settled job's measured
+//!                                     device cycles into a deterministic
+//!                                     fixed-point EWMA that SJF, pressure
+//!                                     placement and inflation consult; the
+//!                                     report shows mean-abs-% prediction
+//!                                     error before/after learning
+//!     --lookahead K                   score the next K policy-ranked jobs
+//!                                     jointly against the pool's slots
+//!                                     instead of greedily placing the head
+//!                                     (default 1 = greedy, bit-identical
+//!                                     to the classic dispatch; max 16)
+//!     --preempt                       let arrived High jobs displace
+//!                                     queued-but-assigned Normal batch
+//!                                     followers back into the queue (never
+//!                                     mid-kernel — numerics untouched)
 //!     --pipeline N                    additionally run an N-stage chained
 //!                                     kernel pipeline through the same
 //!                                     session (each stage consumes the
@@ -262,17 +278,20 @@ fn cmd_serve(raw: &[String]) -> i32 {
     const SPEC: cli::Spec = cli::Spec {
         flags: &[
             "--events",
+            "--learn",
             "--mixed-widths",
             "--no-batch",
             "--no-cache",
             "--no-verify",
             "--no-xpulp",
+            "--preempt",
         ],
         opts: &[
             "--board-bw",
             "--config",
             "--host-bw",
             "--jobs",
+            "--lookahead",
             "--pipeline",
             "--placement",
             "--policy",
@@ -315,6 +334,11 @@ fn cmd_serve(raw: &[String]) -> i32 {
         return 2;
     }
     let headroom: u64 = opt_or(&args, "--priority-headroom", 0);
+    let lookahead: usize = opt_or(&args, "--lookahead", 1);
+    if lookahead == 0 || lookahead > 16 {
+        eprintln!("--lookahead must be between 1 (greedy dispatch) and 16");
+        return 2;
+    }
     let pipeline: usize = opt_or(&args, "--pipeline", 0);
     if pipeline > 32 {
         eprintln!("--pipeline supports at most 32 stages");
@@ -383,7 +407,17 @@ fn cmd_serve(raw: &[String]) -> i32 {
     .with_board(board)
     .with_cache(!args.flag("--no-cache"))
     .with_batching(!args.flag("--no-batch"))
-    .with_verify(!args.flag("--no-verify"));
+    .with_verify(!args.flag("--no-verify"))
+    .with_learning(args.flag("--learn"))
+    .with_lookahead(lookahead)
+    .with_preemption(args.flag("--preempt"));
+    if args.flag("--learn") || lookahead > 1 || args.flag("--preempt") {
+        println!(
+            "self-tuning: learn {}, lookahead {lookahead}, preempt {}",
+            if args.flag("--learn") { "on" } else { "off" },
+            if args.flag("--preempt") { "on" } else { "off" },
+        );
+    }
     // SVM serving rides alongside the named stream: a kernel stream whose
     // operands live in the shared space, VA-described and resolved through
     // the board IOMMU at dispatch, with host traffic contending on the

@@ -18,6 +18,13 @@
 //! at dispatch time — the data never round-trips through the submitting
 //! host. [`KernelJob::after`] adds pure ordering edges with no data
 //! attached.
+//!
+//! Kernel jobs ride every scheduler feature the named streams do,
+//! including the self-tuning loop: with learning enabled the scheduler
+//! memoizes a refinement key from the kernel's content hash, input
+//! element count, effective thread count and teams, so repeat
+//! submissions of a kernel dispatch on *measured* — not just modeled —
+//! cycle predictions ([`crate::sched::learn`]).
 
 use super::{JobHandle, Priority};
 use crate::compiler::ir::{Kernel, Sym};

@@ -1,0 +1,249 @@
+//! Online cycle-prediction refinement (the measure → refine loop).
+//!
+//! Every completed job carries *exact* measured device cycles, yet the
+//! scheduler's ordering (SJF), placement (pressure scoring) and
+//! contention-aware inflation all run on the static predictor
+//! ([`crate::compiler::metrics::predict_cycles`]) — an intentionally cheap
+//! IR walk that can be off by large factors (the AutoDMA variant is even
+//! costed by a handwritten *proxy* kernel, see
+//! [`crate::sched::policy::predict_job`]). This module closes the loop:
+//! a [`LearnStore`] keyed by the same identity space as the binary cache
+//! (structural content hash × input elements × effective parallel width ×
+//! platform config) blends measurements into a per-key **integer
+//! fixed-point EWMA**, and the scheduler consults the refined figure
+//! everywhere it used to read the static one.
+//!
+//! The EWMA is Q·{2^[`FP_SHIFT`]} fixed point, seeded from the static
+//! prediction on a key's first observation and updated as
+//!
+//! ```text
+//! r₀ = static_prediction
+//! rₖ = (rₖ₋₁ + measuredₖ) / 2        (α = 1/2, integer arithmetic)
+//! ```
+//!
+//! so after k observations the static model's weight is 2^-k — a few
+//! repeats of a hot binary and the store speaks from measurement. All
+//! arithmetic is u64; no floats, no wall clock, no platform-dependent
+//! rounding: refined predictions are exactly replayable, which keeps the
+//! cycle-regression bench gate byte-stable and the digest-invariance
+//! property tests meaningful.
+//!
+//! The store also books per-job prediction error, in integer
+//! mean-abs-percent form: for every completed job it records how far the
+//! *static* prediction and the *refined-at-dispatch* prediction each landed
+//! from the measured device cycles. [`crate::sched::ServeReport`] surfaces
+//! both, so a serve run shows the before/after value of learning at a
+//! glance.
+
+use std::collections::HashMap;
+
+/// Fixed-point fractional bits of an EWMA cell (Q56.8 — job budgets are
+/// capped at 1e10 cycles, far below 2^56).
+pub const FP_SHIFT: u32 = 8;
+
+/// Identity of "the same work" for prediction refinement: measurements
+/// under one key describe one (kernel, problem, parallel width, platform)
+/// combination, mirroring the binary cache's key spaces
+/// ([`crate::sched::cache::IrKey`] / [`crate::sched::cache::BinKey`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LearnKey {
+    /// Structural identity: the IR content hash for kernel jobs
+    /// ([`crate::sched::job::kernel_content_key`]), or
+    /// [`named_content`] for registry workloads.
+    pub content: u64,
+    /// Input footprint in f32 elements.
+    pub elems: u64,
+    /// Effective thread count (clamped to the cluster width, like the
+    /// cache keys — an inflated request executes clamped, so it must share
+    /// the clamped key's measurements).
+    pub threads: u32,
+    /// Teams the launch fans out over (1 for named jobs).
+    pub teams: u32,
+    /// Platform configuration name (predictions are made against the
+    /// pool's base config).
+    pub config: String,
+}
+
+/// Content hash for a *named* registry job: FNV-1a over the kernel name,
+/// variant label and problem size (the triple that picks the executed
+/// binary — the named-job analogue of the IR content hash).
+pub fn named_content(kernel: &str, variant: &str, size: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h = (h ^ 0xff).wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(kernel.as_bytes());
+    eat(variant.as_bytes());
+    eat(&(size as u64).to_le_bytes());
+    h
+}
+
+/// One key's EWMA state.
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    /// Refined cycle estimate in Q56.8 fixed point.
+    fp: u64,
+    /// Measurements blended in so far.
+    samples: u64,
+}
+
+/// The refinement store: per-key EWMA cells plus aggregate prediction-error
+/// accounting. Owned by the scheduler when `--learn` is on; absent
+/// otherwise, so the learning-off path never touches it.
+#[derive(Debug, Default)]
+pub struct LearnStore {
+    cells: HashMap<LearnKey, Cell>,
+    /// Completed jobs whose predictions were scored.
+    samples: u64,
+    /// Σ per-job abs(static − measured) · 100 / measured.
+    static_err_pct_sum: u64,
+    /// Σ per-job abs(refined-at-dispatch − measured) · 100 / measured.
+    refined_err_pct_sum: u64,
+}
+
+impl LearnStore {
+    pub fn new() -> Self {
+        LearnStore::default()
+    }
+
+    /// The refined cycle prediction for `key`: the EWMA estimate
+    /// (round-to-nearest out of fixed point) when measurements exist, the
+    /// static prediction otherwise. Read-only — safe to call from scoring
+    /// paths without perturbing the store.
+    pub fn refine(&self, key: &LearnKey, static_prediction: u64) -> u64 {
+        match self.cells.get(key) {
+            Some(c) => (c.fp + (1 << (FP_SHIFT - 1))) >> FP_SHIFT,
+            None => static_prediction,
+        }
+    }
+
+    /// Blend one measurement into `key`'s cell, seeding the cell from the
+    /// static prediction on first observation: `r ← (r + measured) / 2`.
+    pub fn observe(&mut self, key: LearnKey, static_prediction: u64, measured: u64) {
+        let cell = self
+            .cells
+            .entry(key)
+            .or_insert(Cell { fp: static_prediction << FP_SHIFT, samples: 0 });
+        cell.fp = (cell.fp + (measured << FP_SHIFT)) / 2;
+        cell.samples += 1;
+    }
+
+    /// Book one completed job's prediction error: how far the static and
+    /// the refined-at-dispatch predictions each landed from the measured
+    /// device cycles, in integer percent of the measurement.
+    pub fn score(&mut self, static_prediction: u64, dispatched_prediction: u64, measured: u64) {
+        let m = measured.max(1);
+        self.samples += 1;
+        self.static_err_pct_sum += static_prediction.abs_diff(measured) * 100 / m;
+        self.refined_err_pct_sum += dispatched_prediction.abs_diff(measured) * 100 / m;
+    }
+
+    /// Completed jobs scored so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Distinct (kernel, size, width, config) keys with measurements.
+    pub fn tracked(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Mean abs prediction error of the *static* model, in percent.
+    pub fn mean_static_err_pct(&self) -> u64 {
+        if self.samples == 0 {
+            0
+        } else {
+            self.static_err_pct_sum / self.samples
+        }
+    }
+
+    /// Mean abs prediction error of the predictions *actually dispatched
+    /// with* (refined where measurements existed), in percent.
+    pub fn mean_refined_err_pct(&self) -> u64 {
+        if self.samples == 0 {
+            0
+        } else {
+            self.refined_err_pct_sum / self.samples
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(content: u64) -> LearnKey {
+        LearnKey { content, elems: 1024, threads: 8, teams: 1, config: "aurora".into() }
+    }
+
+    #[test]
+    fn refine_falls_back_to_static_without_measurements() {
+        let s = LearnStore::new();
+        assert_eq!(s.refine(&key(1), 5000), 5000);
+        assert_eq!(s.tracked(), 0);
+    }
+
+    #[test]
+    fn ewma_converges_toward_measurements() {
+        let mut s = LearnStore::new();
+        // Static model says 10_000; the job really takes 2_000.
+        s.observe(key(1), 10_000, 2_000);
+        let r1 = s.refine(&key(1), 10_000);
+        assert_eq!(r1, 6_000, "first blend is the midpoint");
+        s.observe(key(1), 10_000, 2_000);
+        s.observe(key(1), 10_000, 2_000);
+        s.observe(key(1), 10_000, 2_000);
+        let r4 = s.refine(&key(1), 10_000);
+        assert!(r4 < 2_600, "static weight decays 2^-k: {r4}");
+        assert!(r4 >= 2_000, "never overshoots a stable measurement: {r4}");
+        // Stability: identical measurements converge monotonically.
+        for _ in 0..60 {
+            s.observe(key(1), 10_000, 2_000);
+        }
+        assert_eq!(s.refine(&key(1), 10_000), 2_000);
+    }
+
+    #[test]
+    fn keys_do_not_cross_contaminate() {
+        let mut s = LearnStore::new();
+        s.observe(key(1), 1_000, 9_000);
+        assert_eq!(s.refine(&key(2), 1_000), 1_000, "other keys stay static");
+        let mut k_threads = key(1);
+        k_threads.threads = 4;
+        assert_eq!(s.refine(&k_threads, 1_000), 1_000, "width is part of the key");
+        assert_eq!(s.tracked(), 1);
+    }
+
+    #[test]
+    fn error_scoring_is_integer_percent() {
+        let mut s = LearnStore::new();
+        // Static off by 150%, refined off by 10%.
+        s.score(2_500, 1_100, 1_000);
+        // Static off by 50% (under), refined exact.
+        s.score(500, 1_000, 1_000);
+        assert_eq!(s.samples(), 2);
+        assert_eq!(s.mean_static_err_pct(), 100, "(150 + 50) / 2");
+        assert_eq!(s.mean_refined_err_pct(), 5, "(10 + 0) / 2");
+    }
+
+    #[test]
+    fn zero_measurement_is_safe() {
+        let mut s = LearnStore::new();
+        s.score(100, 100, 0);
+        assert_eq!(s.mean_static_err_pct(), 100 * 100);
+        s.observe(key(3), 100, 0);
+        assert_eq!(s.refine(&key(3), 100), 50);
+    }
+
+    #[test]
+    fn named_content_separates_kernel_variant_and_size() {
+        let a = named_content("gemm", "handwritten", 12);
+        assert_eq!(a, named_content("gemm", "handwritten", 12));
+        assert_ne!(a, named_content("gemm", "handwritten", 24));
+        assert_ne!(a, named_content("gemm", "autodma", 12));
+        assert_ne!(a, named_content("atax", "handwritten", 12));
+    }
+}

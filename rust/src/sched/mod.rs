@@ -74,6 +74,20 @@
 //! through a dedicated host port, so placement and SJF see the host as
 //! one more contender. Launch results write back into the shared space.
 //!
+//! The scheduler can **self-tune** (all three pieces off by default and
+//! individually gated, so the default event sequence is untouched):
+//! [`Scheduler::with_learning`] closes the measure→refine loop, blending
+//! each settled job's measured device cycles into a deterministic
+//! fixed-point EWMA ([`learn`]) that SJF ordering, pressure placement and
+//! contention inflation then consult instead of the raw static predictor;
+//! [`Scheduler::with_lookahead`] scores the next K policy-ranked jobs
+//! *jointly* against the pool's slots (the [`place::choose_joint`] search
+//! over the `SlotScore` matrix) instead of greedily placing the head; and
+//! [`Scheduler::with_preemption`] lets an arrived High job displace
+//! queued-but-assigned Normal batch followers back into the queue
+//! ([`SchedEvent::Preempted`]) — never a kernel mid-flight, so numerics
+//! and digests are untouched by construction.
+//!
 //! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state) through
 //! the shared offload core ([`crate::session::core`]), so results on a
 //! homogeneous pool are bit-identical regardless of policy, pool size,
@@ -86,6 +100,7 @@
 
 pub mod cache;
 pub mod job;
+pub mod learn;
 pub mod place;
 pub mod policy;
 pub mod pool;
@@ -228,7 +243,18 @@ struct JobRecord {
     /// registered in the feed store (set once the job is admitted to the
     /// queue; rejection before admission must not unbalance the refcounts).
     registered: bool,
+    /// Memoized cycle prediction — computed once at submit, *refreshed in
+    /// place* when online learning refines the job's key, and read
+    /// everywhere a scheduling decision needs it ([`Policy::pick`],
+    /// [`place::scores`], capacity inflation). Never recomputed per
+    /// decision.
     predicted: u64,
+    /// The static model's original figure, frozen at submit — the
+    /// refinement baseline and the "before learning" term of the
+    /// prediction-error report.
+    predicted_static: u64,
+    /// Refinement identity, memoized at submit (learning runs only).
+    learn_key: Option<learn::LearnKey>,
     /// Static DMA-cycle proxy (SJF contention-aware inflation).
     predicted_dma: u64,
     /// Byte footprint across the board DRAM (placement scoring).
@@ -276,6 +302,20 @@ pub struct Scheduler {
     /// configured strategy. `None` (the default) leaves every pre-SVM code
     /// path — and its event sequence — untouched.
     svm: Option<crate::svm::SvmState>,
+    /// Online prediction refinement ([`Scheduler::with_learning`]). `None`
+    /// (the default) leaves every static-prediction code path untouched.
+    learn: Option<learn::LearnStore>,
+    /// Joint dispatch window ([`Scheduler::with_lookahead`]): how many
+    /// policy-ranked head candidates are scored jointly against the pool.
+    /// 1 (the default) is the classic greedy head dispatch, bit-identical
+    /// to the pre-lookahead scheduler.
+    lookahead: usize,
+    /// Whether arrived High jobs may displace queued-but-assigned Normal
+    /// batch followers ([`Scheduler::with_preemption`]; off by default).
+    preempt: bool,
+    /// Displacement counts by the *displaced* job's class
+    /// (`[Normal, High]`).
+    preempted: [u64; 2],
     pub trace: SchedTrace,
 }
 
@@ -322,6 +362,10 @@ impl Scheduler {
             feed_demand: HashMap::new(),
             consumers_of: HashMap::new(),
             svm: None,
+            learn: None,
+            lookahead: 1,
+            preempt: false,
+            preempted: [0, 0],
             trace: SchedTrace::new(),
             cfg,
             policy,
@@ -361,6 +405,54 @@ impl Scheduler {
     pub fn with_verify(mut self, on: bool) -> Self {
         self.verify = on;
         self
+    }
+
+    /// Enable online cycle-prediction refinement (off by default; must
+    /// precede submissions — learning changes what submit memoizes). Every
+    /// settled job's measured device cycles feed a deterministic integer
+    /// fixed-point EWMA keyed by (content × elems × width × config), and
+    /// SJF ordering, pressure placement and contention inflation read the
+    /// refined figure. See [`learn`].
+    pub fn with_learning(mut self, on: bool) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_learning after submissions");
+        self.learn = on.then(learn::LearnStore::new);
+        self
+    }
+
+    /// Set the joint dispatch window (must precede submissions): score the
+    /// next `k` policy-ranked head candidates *jointly* against the pool's
+    /// slots instead of greedily placing the single head. `k <= 1` (the
+    /// default) keeps the classic greedy dispatch bit-identical.
+    pub fn with_lookahead(mut self, k: usize) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_lookahead after submissions");
+        self.lookahead = k.max(1);
+        self
+    }
+
+    /// Allow arrived High jobs to displace queued-but-assigned Normal
+    /// batch followers back into the queue (off by default). Displacement
+    /// happens strictly *between* member executions — never mid-kernel —
+    /// so results and digests are untouched; the displaced job keeps its
+    /// arrival stamp and owes no compile charge (the binary stays cached),
+    /// the "credit for cycles not yet burned".
+    pub fn with_preemption(mut self, on: bool) -> Self {
+        self.preempt = on;
+        self
+    }
+
+    /// Whether online prediction refinement is enabled.
+    pub fn learning_enabled(&self) -> bool {
+        self.learn.is_some()
+    }
+
+    /// The joint dispatch window (1 = greedy head dispatch).
+    pub fn lookahead_window(&self) -> usize {
+        self.lookahead
+    }
+
+    /// Whether priority preemption is enabled.
+    pub fn preemption_enabled(&self) -> bool {
+        self.preempt
     }
 
     /// Enable shared-virtual-memory serving (must precede submissions):
@@ -438,10 +530,15 @@ impl Scheduler {
     }
 
     /// Whether submissions must compute static predictions: SJF orders on
-    /// them, and pressure placement scores slots with them. Earliest-free
-    /// FIFO streams skip the workload build entirely.
+    /// them, pressure placement scores slots with them, lookahead ranks
+    /// candidates with them, and online learning refines (and error-scores)
+    /// them. Plain earliest-free FIFO streams skip the workload build
+    /// entirely.
     fn needs_predictions(&self) -> bool {
-        matches!(self.policy, Policy::Sjf) || self.placement == Placement::Pressure
+        matches!(self.policy, Policy::Sjf)
+            || self.placement == Placement::Pressure
+            || self.learn.is_some()
+            || self.lookahead > 1
     }
 
     /// Bytes of kernel-job input snapshots the scheduler still retains,
@@ -752,6 +849,8 @@ impl Scheduler {
             after: Vec::new(),
             registered: false,
             predicted: 0,
+            predicted_static: 0,
+            learn_key: None,
             predicted_dma: 0,
             dma_bytes: 0,
             state: JobState::Queued,
@@ -773,10 +872,26 @@ impl Scheduler {
         if self.needs_predictions() {
             let w = w.as_ref().expect("built above");
             let bytes = policy::job_bytes(w);
-            self.jobs[id].predicted = policy::predict_job(w, desc.variant, eff_threads);
+            let stat = policy::predict_job(w, desc.variant, eff_threads);
+            self.jobs[id].predicted = stat;
+            self.jobs[id].predicted_static = stat;
             self.jobs[id].predicted_dma =
                 policy::predict_dma_cycles(bytes, self.cfg.dma_beat_bytes());
             self.jobs[id].dma_bytes = bytes;
+            // Learning: memoize the refinement key and start from the
+            // refined figure right away — a job submitted after its key has
+            // measurements never dispatches on the stale static estimate.
+            if let Some(learn) = self.learn.as_ref() {
+                let key = learn::LearnKey {
+                    content: learn::named_content(desc.kernel, desc.variant.label(), desc.size),
+                    elems: bytes / 4,
+                    threads: eff_threads,
+                    teams: 1,
+                    config: self.cfg.name.clone(),
+                };
+                self.jobs[id].predicted = learn.refine(&key, stat);
+                self.jobs[id].learn_key = Some(key);
+            }
         }
         if let Some(action) = admission {
             let w = w.as_ref().expect("built above");
@@ -835,6 +950,8 @@ impl Scheduler {
             after,
             registered: false,
             predicted: 0,
+            predicted_static: 0,
+            learn_key: None,
             predicted_dma: 0,
             dma_bytes: kjob.input_bytes(),
             state: JobState::Queued,
@@ -857,10 +974,23 @@ impl Scheduler {
             return JobHandle(id);
         }
         if self.needs_predictions() {
-            self.jobs[id].predicted =
+            let stat =
                 policy::predict_kernel_job(&kjob.kernel, kjob.autodma, &self.cfg, eff_threads);
+            self.jobs[id].predicted = stat;
+            self.jobs[id].predicted_static = stat;
             self.jobs[id].predicted_dma =
                 policy::predict_dma_cycles(kjob.input_bytes(), self.cfg.dma_beat_bytes());
+            if let Some(learn) = self.learn.as_ref() {
+                let key = learn::LearnKey {
+                    content,
+                    elems: kjob.input_bytes() / 4,
+                    threads: eff_threads,
+                    teams: kjob.teams as u32,
+                    config: self.cfg.name.clone(),
+                };
+                self.jobs[id].predicted = learn.refine(&key, stat);
+                self.jobs[id].learn_key = Some(key);
+            }
         }
         if let Some(action) = self.policy.admission() {
             // An arbitrary kernel has no registry problem-size semantics to
@@ -977,17 +1107,18 @@ impl Scheduler {
             .copied()
             .filter(|&p| self.effective_arrival(self.queue[p]) <= frontier)
             .collect();
-        let qi = if arrived.is_empty() {
+        let (qi, joint_inst) = if arrived.is_empty() {
             // Same-cycle future arrivals still respect the priority tier
             // (Reverse: High sorts first), then submission order.
-            ready
+            let p = ready
                 .iter()
                 .copied()
                 .min_by_key(|&p| {
                     let r = &self.jobs[self.queue[p]];
                     (self.effective_arrival(self.queue[p]), std::cmp::Reverse(r.priority), p)
                 })
-                .expect("ready is non-empty")
+                .expect("ready is non-empty");
+            (p, None)
         } else {
             // Strict priority tiers: latency-critical jobs dispatch before
             // any arrived normal work; the policy orders *within* the top
@@ -1003,26 +1134,56 @@ impl Scheduler {
                 .filter(|&p| self.jobs[self.queue[p]].priority == top)
                 .collect();
             let sub: Vec<JobId> = tier.iter().map(|&p| self.queue[p]).collect();
-            let k = policy.pick(&sub, |id| {
-                policy::inflate(self.jobs[id].predicted, self.jobs[id].predicted_dma, pressure)
-            });
-            tier[k]
+            if self.lookahead > 1 && sub.len() > 1 {
+                // Joint lookahead dispatch: rank the tier under the policy,
+                // then score the first K candidates *jointly* against the
+                // pool's slots — the head choice and its slot fall out of
+                // one all-integer search instead of greedy pick-then-place.
+                let order = policy.rank(&sub, |id| {
+                    policy::inflate(self.jobs[id].predicted, self.jobs[id].predicted_dma, pressure)
+                });
+                let cands: Vec<place::Candidate> = order
+                    .iter()
+                    .take(self.lookahead)
+                    .map(|&t| {
+                        let id = sub[t];
+                        place::Candidate {
+                            arrival: self.effective_arrival(id),
+                            predicted: self.jobs[id].predicted,
+                            dma_bytes: self.jobs[id].dma_bytes,
+                            priority: self.jobs[id].priority.is_high(),
+                        }
+                    })
+                    .collect();
+                let (c, inst) = place::choose_joint(&self.pool, &cands);
+                (tier[order[c]], Some(inst))
+            } else {
+                let k = policy.pick(&sub, |id| {
+                    policy::inflate(self.jobs[id].predicted, self.jobs[id].predicted_dma, pressure)
+                });
+                (tier[k], None)
+            }
         };
         let head = self.queue.remove(qi);
         let spec = self.jobs[head].spec.clone();
         let head_key = self.jobs[head].batch;
         let head_eff = self.effective_arrival(head);
         // Board-aware placement: score candidate slots for the chosen job
-        // (earliest-free placement ignores the score arguments). The
-        // arrival the engine scores with is the dependency-aware one.
-        let inst = place::choose(
-            &self.pool,
-            self.placement,
-            head_eff,
-            self.jobs[head].predicted,
-            self.jobs[head].dma_bytes,
-            self.jobs[head].priority.is_high(),
-        );
+        // (earliest-free placement ignores the score arguments; a joint
+        // lookahead search already settled the slot together with the
+        // head). The arrival the engine scores with is the
+        // dependency-aware one.
+        let inst = match joint_inst {
+            Some(i) => i,
+            None => place::choose(
+                &self.pool,
+                self.placement,
+                head_eff,
+                self.jobs[head].predicted,
+                self.jobs[head].dma_bytes,
+                self.jobs[head].priority.is_high(),
+            ),
+        };
         let icfg = self.pool.cfg(inst).clone();
 
         // Gather same-binary followers from the queue (batching). Only
@@ -1095,7 +1256,34 @@ impl Scheduler {
 
         let followers = batch.len() - 1;
         let mut charge = compile_cost;
-        for id in batch {
+        let mut displaced: Vec<JobId> = Vec::new();
+        for (bi, id) in batch.iter().copied().enumerate() {
+            // Priority preemption: a batch follower is *queued-but-assigned*
+            // — gathered onto this instance but not yet executing. Before it
+            // commits, an arrived-and-ready High job may displace it (and
+            // everything gathered behind it) back into the queue; the next
+            // step's strict tiers then dispatch the High job first. The
+            // in-flight member is never touched, so numerics and digests
+            // cannot drift; the displaced job keeps its arrival stamp and
+            // will re-dispatch against the already-cached binary — its
+            // unburned cycles cost it nothing.
+            if self.preempt && bi > 0 && !self.jobs[id].priority.is_high() {
+                let planned = self.pool.free_at(inst).max(self.effective_arrival(id));
+                let high = self.queue.iter().copied().find(|&q| {
+                    self.jobs[q].priority.is_high()
+                        && self.ready(q)
+                        && self.effective_arrival(q) <= planned
+                });
+                if let Some(by) = high {
+                    for &d in &batch[bi..] {
+                        self.trace.record(SchedEvent::Preempted { job: d, by, at: planned });
+                        let class = if self.jobs[d].priority.is_high() { 1 } else { 0 };
+                        self.preempted[class] += 1;
+                    }
+                    displaced = batch[bi..].to_vec();
+                    break;
+                }
+            }
             let member = self.jobs[id].spec.clone();
             let arrival = self.effective_arrival(id);
             let priority = self.jobs[id].priority;
@@ -1343,11 +1531,48 @@ impl Scheduler {
                     // IR) will never be read again — release it so long
                     // serve runs stop growing memory.
                     self.release_payload(id);
+                    // Measure → refine: blend the measured device cycles
+                    // into the EWMA store and refresh the memoized
+                    // predictions of queued jobs sharing the key.
+                    if self.learn.is_some() {
+                        self.learn_from(id, result.device_cycles);
+                    }
                     charge = 0; // the batch head pays the compile once
                 }
             }
         }
+        // Displaced followers return to the *front* of the queue in their
+        // original order: they were next in line, and the strict priority
+        // tiers — not queue position — are what hands the next dispatch to
+        // the preempting High job.
+        for (k, d) in displaced.iter().enumerate() {
+            self.queue.insert(k, *d);
+        }
         Ok(true)
+    }
+
+    /// Feed one settled job's measured device cycles back into the
+    /// refinement store: score the static and dispatched predictions
+    /// against the measurement, blend the measurement into the job's EWMA
+    /// cell, and refresh the memoized prediction of every queued job
+    /// awaiting the same key (the single place predictions are ever
+    /// rewritten after submit).
+    fn learn_from(&mut self, id: JobId, measured: u64) {
+        let Some(key) = self.jobs[id].learn_key.clone() else { return };
+        let stat = self.jobs[id].predicted_static;
+        let used = self.jobs[id].predicted;
+        let learn = self.learn.as_mut().expect("caller checked learning is on");
+        learn.score(stat, used, measured);
+        learn.observe(key.clone(), stat, measured);
+        // Equal keys mean equal static predictions (both are pure functions
+        // of the key's identity), so one refined figure serves every queued
+        // job awaiting this key.
+        let refined = learn.refine(&key, stat);
+        for &q in &self.queue {
+            if self.jobs[q].learn_key.as_ref() == Some(&key) {
+                self.jobs[q].predicted = refined;
+            }
+        }
     }
 
     /// Run the queue dry.
@@ -1409,6 +1634,7 @@ impl Scheduler {
                 ClassReport {
                     priority,
                     jobs: samples.len(),
+                    preempted: self.preempted[if priority.is_high() { 1 } else { 0 }],
                     p50_turnaround_cycles: report::percentile(&samples, 50),
                     p95_turnaround_cycles: report::percentile(&samples, 95),
                 }
@@ -1457,6 +1683,13 @@ impl Scheduler {
             host_dram_bytes: self.pool.host_stats().map_or(0, |s| s.bytes),
             host_dram_stall_cycles: self.pool.host_stats().map_or(0, |s| s.stall_cycles),
             host_requests: self.pool.host_stats().map_or(0, |s| s.requests),
+            learning: self.learn.is_some(),
+            lookahead: self.lookahead,
+            preemption: self.preempt,
+            preemptions: self.preempted.iter().sum(),
+            predict_samples: self.learn.as_ref().map_or(0, |l| l.samples()),
+            predict_err_static_pct: self.learn.as_ref().map_or(0, |l| l.mean_static_err_pct()),
+            predict_err_learned_pct: self.learn.as_ref().map_or(0, |l| l.mean_refined_err_pct()),
             digest,
             classes,
             instances,
@@ -2289,5 +2522,162 @@ mod tests {
         assert_eq!(svm.host_requests, 0);
         assert_eq!(svm.svm_mode, Some("auto"));
         assert_eq!(plain.svm_mode, None);
+    }
+
+    #[test]
+    fn learning_scores_every_settled_job_without_touching_numerics() {
+        // Wiring test for the measure -> refine loop: with learning on,
+        // every completed job contributes one sample to the error report,
+        // and both error figures are populated — while the digest stays
+        // bit-identical to the learning-off run (refinement moves
+        // predictions, never payloads).
+        let jobs: Vec<JobDesc> =
+            (0..6).map(|i| job(["gemm", "atax", "conv2d"][i % 3], 24, i as u64)).collect();
+        let run = |learn: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Sjf)
+                .with_batching(false)
+                .with_learning(learn);
+            s.submit_all(&jobs);
+            s.drain().unwrap();
+            s.report()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(on.completed, jobs.len());
+        assert_eq!(off.digest, on.digest);
+        assert!(on.learning);
+        assert!(!off.learning);
+        assert_eq!(on.predict_samples, jobs.len() as u64);
+        assert_eq!(off.predict_samples, 0);
+        // Refined error can never exceed static error under the EWMA: the
+        // first observation of a key scores refined == static, and every
+        // later one scores a figure pulled toward the measurement.
+        assert!(on.predict_err_learned_pct <= on.predict_err_static_pct);
+    }
+
+    #[test]
+    fn learning_refresh_reorders_queued_jobs_behind_a_repeat_offender() {
+        // Two copies of the same kernel job whose `let`-bound trip count
+        // the static model cannot see (it assumes 16 trips; the loop runs
+        // 2000). A short job submitted *after* them statically looks the
+        // same size. Once the first long copy completes, `learn_from`
+        // rewrites the queued copy's memoized prediction, and SJF promotes
+        // the short job ahead of it — with learning off, submission order
+        // holds throughout.
+        fn opaque(name: &str, trips: i32) -> crate::compiler::ir::Kernel {
+            use crate::compiler::ir::*;
+            let mut b = KernelBuilder::new(name);
+            let x = b.host_array("X", vec![ci(64)]);
+            let n = b.let_i32("n");
+            let i = b.loop_var("i");
+            b.body(vec![
+                Stmt::Let { var: n, value: ci(trips) },
+                for_(i, ci(0), var(n), vec![st(x, vec![ci(0)], ld(x, vec![ci(0)]).add(cf(1.0)))]),
+            ])
+        }
+        let long = opaque("refresh_long", 2000);
+        let short = opaque("refresh_short", 50);
+        let run = |learn: bool| {
+            let mut s = Scheduler::new(aurora(), 1, Policy::Sjf)
+                .with_batching(false)
+                .with_verify(false)
+                .with_learning(learn);
+            for k in [&long, &long, &short] {
+                s.submit_kernel(KernelJob::new(k.clone(), vec![vec![0.0; 64]], Vec::new()));
+            }
+            s.drain().unwrap();
+            (s.trace.dispatch_order(), s.report().digest)
+        };
+        let (static_order, static_digest) = run(false);
+        let (learned_order, learned_digest) = run(true);
+        assert_eq!(static_order, vec![0, 1, 2], "equal static predictions keep queue order");
+        assert_eq!(learned_order, vec![0, 2, 1], "refresh promotes the short job");
+        assert_eq!(static_digest, learned_digest, "reordering must never change numerics");
+    }
+
+    #[test]
+    fn preemption_displaces_batch_followers_for_a_high_arrival() {
+        // Three same-binary Normal jobs gather into one batch at cycle 0;
+        // a High job lands at cycle 1 — long before the followers' planned
+        // starts. With preemption the two followers are displaced back
+        // into the queue, the High job dispatches next, and the followers
+        // re-batch behind it on the cached binary. Numerics are untouched.
+        let run = |preempt: bool| {
+            let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_preemption(preempt);
+            for seed in 0..3 {
+                s.submit(job("gemm", 12, seed));
+            }
+            s.submit(JobDesc { arrival: 1, priority: Priority::High, ..job("atax", 24, 7) });
+            s.drain().unwrap();
+            s
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.trace.dispatch_order(), vec![0, 1, 2, 3]);
+        assert_eq!(on.trace.dispatch_order(), vec![0, 3, 1, 2]);
+        let (roff, ron) = (off.report(), on.report());
+        assert_eq!(ron.completed, 4);
+        assert_eq!(roff.digest, ron.digest, "displacement must never change numerics");
+        assert_eq!((roff.preemptions, ron.preemptions), (0, 2));
+        assert_eq!(ron.class(Priority::Normal).unwrap().preempted, 2);
+        assert_eq!(ron.class(Priority::High).unwrap().preempted, 0);
+        assert!(ron.preemption && !roff.preemption);
+        // Both displaced followers carry Preempted events naming the High
+        // job, and the binary compiled for the original batch head is a
+        // cache hit when they re-dispatch.
+        let preempted: Vec<usize> = on
+            .trace
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                SchedEvent::Preempted { job, by, .. } if *by == 3 => Some(*job),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(preempted, vec![1, 2]);
+        assert_eq!(ron.cache_misses, roff.cache_misses);
+        // The High job's turnaround strictly improves by skipping the
+        // followers it displaced.
+        let hi = |r: &ServeReport| r.class(Priority::High).unwrap().p95_turnaround_cycles;
+        assert!(hi(&ron) < hi(&roff), "{} vs {}", hi(&ron), hi(&roff));
+    }
+
+    #[test]
+    fn preemption_never_displaces_high_followers() {
+        // A High batch head with High followers: a later High arrival has
+        // no displacement claim — preemption acts across classes, never
+        // within one.
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_preemption(true);
+        for seed in 0..2 {
+            s.submit(JobDesc { priority: Priority::High, ..job("gemm", 12, seed) });
+        }
+        s.submit(JobDesc { arrival: 1, priority: Priority::High, ..job("atax", 24, 5) });
+        s.drain().unwrap();
+        assert_eq!(s.trace.dispatch_order(), vec![0, 1, 2]);
+        assert_eq!(s.report().preemptions, 0);
+    }
+
+    #[test]
+    fn lookahead_window_keeps_digest_and_completes_everything() {
+        // The joint search reorders only within the policy-ranked window:
+        // every job still completes, numerics never move, and K=1 is the
+        // greedy dispatch bit for bit (trace included).
+        let jobs: Vec<JobDesc> =
+            (0..8).map(|i| job(["gemm", "atax", "conv2d"][i % 3], 24, i as u64)).collect();
+        let run = |k: usize| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Sjf)
+                .with_batching(false)
+                .with_lookahead(k);
+            s.submit_all(&jobs);
+            s.drain().unwrap();
+            s
+        };
+        let greedy = run(1);
+        let joint = run(4);
+        assert_eq!(greedy.trace.events, run(1).trace.events, "K=1 is deterministic");
+        let (rg, rj) = (greedy.report(), joint.report());
+        assert_eq!(rj.completed, jobs.len());
+        assert_eq!(rg.digest, rj.digest, "lookahead must never change numerics");
+        assert_eq!((rg.lookahead, rj.lookahead), (1, 4));
     }
 }

@@ -117,6 +117,83 @@ pub fn scores(
         .collect()
 }
 
+/// One job in a lookahead window: the per-job inputs [`scores`] needs,
+/// detached from the scheduler's internals so the joint search stays a
+/// pure function of the pool.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Effective (dependency-aware) arrival.
+    pub arrival: u64,
+    /// Memoized (possibly learning-refined) cycle prediction.
+    pub predicted: u64,
+    /// Board-DRAM byte footprint.
+    pub dma_bytes: u64,
+    /// Reserves board bandwidth as a priority request.
+    pub priority: bool,
+}
+
+/// Joint lookahead dispatch: pick `(candidate index, instance)` for the
+/// *head* of a K-candidate window, scoring the whole window instead of
+/// greedily placing `cands[0]`.
+///
+/// The search builds the K×slots [`SlotScore`] matrix, then evaluates each
+/// candidate as the head with a pairwise-interaction cost: the head's own
+/// best finish (minimal `(finish, stall, free_at, index)` — exactly the
+/// [`choose`] tie-breaks, so a singleton window reduces to today's greedy
+/// placement bit-for-bit) plus, for every *other* candidate, its cheapest
+/// finish given the head's slot is now busy until the head's finish (same
+/// window and stall terms, start pushed to the head's finish; other slots
+/// keep their matrix scores). Minimal total wins; ties break toward the
+/// earlier candidate in policy order, i.e. toward the job the greedy
+/// scheduler would have dispatched. All-integer, read-only on the pool —
+/// deterministic and replayable like everything else in this module.
+pub fn choose_joint(pool: &InstancePool, cands: &[Candidate]) -> (usize, usize) {
+    assert!(!cands.is_empty(), "lookahead window is non-empty");
+    let matrix: Vec<Vec<SlotScore>> = cands
+        .iter()
+        .map(|c| scores(pool, c.arrival, c.predicted, c.dma_bytes, c.priority))
+        .collect();
+    let best_slot = |row: &[SlotScore]| -> SlotScore {
+        row.iter()
+            .copied()
+            .min_by_key(|s| (s.finish, s.stall, pool.free_at(s.instance), s.instance))
+            .expect("pool is non-empty")
+    };
+    let mut best = (u64::MAX, 0usize);
+    for (c, row) in matrix.iter().enumerate() {
+        let head = best_slot(row);
+        let mut total = head.finish;
+        for (d, drow) in matrix.iter().enumerate() {
+            if d == c {
+                continue;
+            }
+            let follow = drow
+                .iter()
+                .map(|s| {
+                    if s.instance == head.instance {
+                        // Queue behind the head on its slot: same window
+                        // and stall terms, start pushed to the head's
+                        // predicted finish.
+                        let window = s.finish - s.start - s.stall;
+                        cands[d].arrival.max(head.finish) + window + s.stall
+                    } else {
+                        s.finish
+                    }
+                })
+                .min()
+                .expect("pool is non-empty");
+            total += follow;
+        }
+        // Strict `<`: ties break toward the earlier candidate in policy
+        // order — the job the greedy scheduler would have dispatched.
+        if total < best.0 {
+            best = (total, c);
+        }
+    }
+    let c = best.1;
+    (c, best_slot(&matrix[c]).instance)
+}
+
 /// Pick the instance for a job under `placement`. For
 /// [`Placement::Pressure`] the winner is the minimal
 /// `(finish, stall, free_at, index)` — see the module docs for why each
@@ -202,6 +279,35 @@ mod tests {
         let mut p = InstancePool::homogeneous(&aurora(), 2, BoardSpec::with_bandwidth(16));
         p.assign(0, 0, 1000, 0, false);
         assert_eq!(choose(&p, Placement::Pressure, 0, 200, 800, false), 1);
+    }
+
+    #[test]
+    fn joint_singleton_reduces_to_greedy_pressure_choice() {
+        // The safety identity for `--lookahead 1`: a one-candidate window
+        // must land on exactly the slot the greedy engine picks — same
+        // (finish, stall, free_at, index) tie-breaks, bit for bit.
+        let mut p = InstancePool::homogeneous(&aurora(), 2, BoardSpec::with_bandwidth(8));
+        p.assign(0, 0, 100, 800, false);
+        p.assign(1, 0, 30, 0, false);
+        for (arrival, predicted, bytes) in [(30u64, 100u64, 800u64), (30, 100, 0), (0, 200, 800)] {
+            let c = Candidate { arrival, predicted, dma_bytes: bytes, priority: false };
+            let (idx, inst) = choose_joint(&p, &[c]);
+            assert_eq!(idx, 0);
+            assert_eq!(inst, choose(&p, Placement::Pressure, arrival, predicted, bytes, false));
+        }
+    }
+
+    #[test]
+    fn joint_window_promotes_the_pair_wise_cheaper_head() {
+        // One slot, a long job ahead of a short one in policy order. Greedy
+        // dispatches the long head; the joint score sees that short-first
+        // finishes the *pair* earlier (10 + 110 < 100 + 110) and
+        // promotes the short job to head. Equal predictions tie back to
+        // policy order.
+        let p = InstancePool::homogeneous(&aurora(), 1, BoardSpec::uncontended());
+        let cand = |predicted| Candidate { arrival: 0, predicted, dma_bytes: 0, priority: false };
+        assert_eq!(choose_joint(&p, &[cand(100), cand(10)]), (1, 0));
+        assert_eq!(choose_joint(&p, &[cand(100), cand(100)]), (0, 0));
     }
 
     #[test]

@@ -134,6 +134,19 @@ impl Policy {
             }
         }
     }
+
+    /// Indices into `queue` in dispatch-preference order — the lookahead
+    /// window's candidate ranking. `rank(..)[0]` always equals
+    /// [`Policy::pick`]: FIFO/capacity keep submission order, SJF sorts by
+    /// prediction with ties breaking toward the older job (the same stable
+    /// argmin `pick` computes).
+    pub fn rank(&self, queue: &[usize], predicted: impl Fn(usize) -> u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..queue.len()).collect();
+        if matches!(self, Policy::Sjf) {
+            order.sort_by_key(|&i| (predicted(queue[i]), i));
+        }
+        order
+    }
 }
 
 /// Static cycle prediction for one job: the kernel form the job will

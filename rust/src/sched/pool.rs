@@ -30,6 +30,13 @@
 //! fresh `Accel` (its own SPMs and IOMMU), which keeps results independent
 //! of placement and policy. The board couples *time*, never memory
 //! contents.
+//!
+//! Everything a placement decision needs is exposed read-only —
+//! [`InstancePool::free_at`], [`InstancePool::probe_stall`],
+//! [`InstancePool::pressure`] — so both the greedy engine
+//! ([`crate::sched::place::choose`]) and the K-wide lookahead matrix
+//! ([`crate::sched::place::choose_joint`]) are pure what-if functions of
+//! the pool: scoring never mutates the ledger, only `assign` does.
 
 use crate::config::HeroConfig;
 use crate::mem::{BandwidthLedger, PortStats};

@@ -20,6 +20,9 @@ pub fn percentile(sorted: &[u64], pct: u32) -> u64 {
 pub struct ClassReport {
     pub priority: Priority,
     pub jobs: usize,
+    /// Times jobs of this class were displaced from an assigned batch slot
+    /// by a higher-priority arrival (0 unless preemption is enabled).
+    pub preempted: u64,
     pub p50_turnaround_cycles: u64,
     pub p95_turnaround_cycles: u64,
 }
@@ -94,6 +97,26 @@ pub struct ServeReport {
     /// Host-port reservations made (one per descriptor / staging / PTE
     /// burst).
     pub host_requests: u64,
+    /// Whether online cycle-prediction refinement was enabled
+    /// ([`crate::sched::Scheduler::with_learning`]).
+    pub learning: bool,
+    /// Joint dispatch window size (1 = classic greedy head dispatch —
+    /// [`crate::sched::Scheduler::with_lookahead`]).
+    pub lookahead: usize,
+    /// Whether priority preemption was enabled
+    /// ([`crate::sched::Scheduler::with_preemption`]).
+    pub preemption: bool,
+    /// Batch-slot displacements across all classes (0 with preemption off).
+    pub preemptions: u64,
+    /// Completed jobs whose predictions were scored against measured device
+    /// cycles (learning runs only).
+    pub predict_samples: u64,
+    /// Mean abs prediction error of the *static* model over those jobs, in
+    /// integer percent of the measurement — the "before learning" figure.
+    pub predict_err_static_pct: u64,
+    /// Mean abs error of the predictions jobs actually dispatched with
+    /// (EWMA-refined where measurements existed) — the "after" figure.
+    pub predict_err_learned_pct: u64,
     /// Order-stable digest over every completed job's output arrays:
     /// bit-identical results ⇔ identical digest, regardless of policy,
     /// placement, pool size, batching, caching or board bandwidth
@@ -162,6 +185,25 @@ impl fmt::Display for ServeReport {
             "compile       : {} lowerings, {} cache hits, {} cycles charged",
             self.cache_misses, self.cache_hits, self.compile_cycles
         )?;
+        // Self-tuning lines render only when a feature is on, so default
+        // serve output stays byte-identical to the pre-self-tuning report.
+        if self.learning || self.lookahead > 1 || self.preemption {
+            writeln!(
+                f,
+                "self-tuning   : learn {}, lookahead {}, preempt {} ({} displaced)",
+                if self.learning { "on" } else { "off" },
+                self.lookahead,
+                if self.preemption { "on" } else { "off" },
+                self.preemptions
+            )?;
+        }
+        if self.learning && self.predict_samples > 0 {
+            writeln!(
+                f,
+                "prediction    : {} sample(s), mean abs err {}% static -> {}% learned",
+                self.predict_samples, self.predict_err_static_pct, self.predict_err_learned_pct
+            )?;
+        }
         if self.dram_peak_bytes_per_cycle == u64::MAX {
             writeln!(f, "board dram    : uncoupled (no shared-bandwidth model)")?;
         } else {
@@ -243,17 +285,26 @@ mod tests {
             host_dram_bytes: 0,
             host_dram_stall_cycles: 0,
             host_requests: 0,
+            learning: false,
+            lookahead: 1,
+            preemption: false,
+            preemptions: 0,
+            predict_samples: 0,
+            predict_err_static_pct: 0,
+            predict_err_learned_pct: 0,
             digest: 0xdead_beef,
             classes: vec![
                 ClassReport {
                     priority: Priority::Normal,
                     jobs: 6,
+                    preempted: 0,
                     p50_turnaround_cycles: 900_000,
                     p95_turnaround_cycles: 3_800_000,
                 },
                 ClassReport {
                     priority: Priority::High,
                     jobs: 2,
+                    preempted: 0,
                     p50_turnaround_cycles: 200_000,
                     p95_turnaround_cycles: 450_000,
                 },
@@ -313,6 +364,31 @@ mod tests {
         assert!(s.contains("host svm      : mode auto"), "{s}");
         assert!(s.contains("131264 B host dram"), "{s}");
         assert!(s.contains("97 stall cy, 17 request(s)"), "{s}");
+    }
+
+    #[test]
+    fn self_tuning_lines_render_only_when_enabled() {
+        let mut r = report();
+        let s = r.to_string();
+        assert!(!s.contains("self-tuning"), "default report must be unchanged: {s}");
+        assert!(!s.contains("prediction"), "default report must be unchanged: {s}");
+        r.learning = true;
+        r.lookahead = 4;
+        r.preemption = true;
+        r.preemptions = 3;
+        r.predict_samples = 8;
+        r.predict_err_static_pct = 140;
+        r.predict_err_learned_pct = 12;
+        let s = r.to_string();
+        assert!(s.contains("learn on, lookahead 4, preempt on (3 displaced)"), "{s}");
+        assert!(s.contains("prediction    : 8 sample(s)"), "{s}");
+        assert!(s.contains("mean abs err 140% static -> 12% learned"), "{s}");
+        // Lookahead alone still surfaces, without a prediction line.
+        let mut r = report();
+        r.lookahead = 2;
+        let s = r.to_string();
+        assert!(s.contains("learn off, lookahead 2, preempt off"), "{s}");
+        assert!(!s.contains("prediction"), "{s}");
     }
 
     #[test]

@@ -47,6 +47,15 @@
 //!   under the configured pin/copy/auto strategy or a per-launch
 //!   [`LaunchBuilder::svm`] override), and [`Session::svm_read_f32`]
 //!   observes the device's result in the shared space.
+//! * **Self-tuning scheduling** rides along transparently on pooled
+//!   sessions: build the scheduler with
+//!   [`Scheduler::with_learning`] / [`Scheduler::with_lookahead`] /
+//!   [`Scheduler::with_preemption`] (CLI: `hero serve --learn
+//!   --lookahead K --preempt`) and launches dispatch on
+//!   measurement-refined cycle predictions, jointly-placed lookahead
+//!   windows and High-over-Normal batch displacement — all of which move
+//!   *time*, never the numerics a launch returns
+//!   ([`crate::sched::learn`], `sched/README.md`).
 //!
 //! Non-chained launches are snapshot-in / copy-out exactly as before:
 //! argument buffers are captured at `submit` and written back at `wait`,

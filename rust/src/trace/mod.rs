@@ -238,6 +238,13 @@ pub enum SchedEvent {
     /// occupancy, and `hits`/`misses` the board TLB traffic (both 0 for a
     /// copy, which bypasses the TLB — see [`crate::svm`]).
     SvmResolved { job: usize, mode: &'static str, cycles: u64, hits: u64, misses: u64 },
+    /// A queued-but-assigned batch follower was displaced back into the
+    /// queue by an arrived High-priority job (`by`), at the cycle the
+    /// follower would otherwise have started (`at`). Displacement happens
+    /// strictly between member executions — never mid-kernel — so it moves
+    /// time, not numerics (preemption — see
+    /// `crate::sched::Scheduler::with_preemption`).
+    Preempted { job: usize, by: usize, at: u64 },
 }
 
 /// An append-only scheduler event log.
@@ -306,6 +313,9 @@ impl SchedTrace {
                 SchedEvent::SvmResolved { job, mode, cycles, hits, misses } => format!(
                     "svm       job {job} ({mode}: {cycles} cy, {hits} hit(s), {misses} miss(es))"
                 ),
+                SchedEvent::Preempted { job, by, at } => {
+                    format!("preempt   job {job} displaced by job {by} at cycle {at}")
+                }
             };
             out.push_str(&line);
             out.push('\n');
@@ -347,6 +357,15 @@ mod tests {
         assert!(s.contains("svm       job 7 (pin: 342 cy, 0 hit(s), 1 miss(es))"), "{s}");
         assert!(s.contains("svm       job 8 (copy: 308 cy"), "{s}");
         assert!(t.dispatch_order().is_empty(), "svm events are not dispatches");
+    }
+
+    #[test]
+    fn preempt_events_render_displacer_and_cycle() {
+        let mut t = SchedTrace::new();
+        t.record(SchedEvent::Preempted { job: 3, by: 9, at: 4200 });
+        let s = t.render();
+        assert!(s.contains("preempt   job 3 displaced by job 9 at cycle 4200"), "{s}");
+        assert!(t.dispatch_order().is_empty(), "preemptions are not dispatches");
     }
 
     #[test]

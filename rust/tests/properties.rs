@@ -762,3 +762,111 @@ fn prop_config_overrides_roundtrip() {
         },
     );
 }
+
+#[test]
+fn prop_sched_selftuning_flags_off_is_bit_identical() {
+    // The self-tuning machinery must be invisible until asked for:
+    // `--lookahead 1` is the classic greedy dispatch by definition, and
+    // `--preempt` on a stream with no High jobs never finds a displacer.
+    // Both must reproduce the default scheduler's *full event sequence* —
+    // not just the digest — on fuzzed streams.
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 7), rng.range(1, 1 << 20), rng.bool()),
+        |&(n, seed, batch)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let run = |s: Scheduler| -> Result<Scheduler, String> {
+                let mut s = s.with_batching(batch).with_verify(false);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok(s)
+            };
+            for pool in [1usize, 2] {
+                let mk = || Scheduler::new(aurora(), pool, Policy::Sjf);
+                let base = run(mk())?;
+                let greedy = run(mk().with_lookahead(1))?;
+                if base.trace.events != greedy.trace.events {
+                    return Err(format!("pool={pool}: lookahead=1 diverged from greedy"));
+                }
+                let pre = run(mk().with_preemption(true))?;
+                if base.trace.events != pre.trace.events {
+                    return Err(format!(
+                        "pool={pool}: preemption displaced something in an all-Normal stream"
+                    ));
+                }
+                let r = base.report();
+                if r.completed != jobs.len() {
+                    return Err(format!("pool={pool}: only {} completed", r.completed));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sched_selftuning_never_touches_numerics() {
+    // Learning, lookahead and preemption all move *time*, never numerics:
+    // a fuzzed stream with staggered arrivals and a High slice must
+    // produce a bit-identical digest with every self-tuning feature on,
+    // across pool sizes and both placement engines — and every job must
+    // still complete.
+    use herov2::sched::{Placement, Policy, Priority, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(5, 8), rng.range(1, 1 << 20), rng.usize(2, 4)),
+        |&(n, seed, hi_every)| {
+            let jobs: Vec<synth::JobDesc> = synth::tiny_jobs(n, seed)
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let mut j = *j;
+                    j.arrival = i as u64 * 40;
+                    if i % hi_every == 1 {
+                        j.priority = Priority::High;
+                    }
+                    j
+                })
+                .collect();
+            let baseline = {
+                let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_verify(false);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                s.report().digest
+            };
+            for pool in [1usize, 2, 4] {
+                for placement in [Placement::EarliestFree, Placement::Pressure] {
+                    let mut s = Scheduler::new(aurora(), pool, Policy::Sjf)
+                        .with_placement(placement)
+                        .with_learning(true)
+                        .with_lookahead(4)
+                        .with_preemption(true)
+                        .with_verify(false);
+                    s.submit_all(&jobs);
+                    s.drain().map_err(|e| e.to_string())?;
+                    let r = s.report();
+                    if r.completed != jobs.len() {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: only {} of {} completed \
+                             ({} preempted)",
+                            r.completed,
+                            jobs.len(),
+                            r.preemptions
+                        ));
+                    }
+                    if r.digest != baseline {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: self-tuning changed numerics \
+                             ({:#x} vs {baseline:#x})",
+                            r.digest
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
