@@ -34,6 +34,12 @@
 //! * Priority preemption (`--preempt`) displaces queued-but-assigned
 //!   batch followers so a High arrival jumps the batch: its p95
 //!   turnaround strictly improves, again with bit-identical digests.
+//! * Fleet affinity routing (`--fleet N --route finish`) strictly beats
+//!   round-robin makespan on a cache-heavy repeated-kernel stream over a
+//!   2-board fleet — fewer cold compiles, bit-identical digests (routing
+//!   moves time, never numerics).
+//! * Per-tenant in-flight quotas stop a noisy tenant's burst from
+//!   degrading a victim tenant's p95 turnaround on a shared fleet.
 //!
 //! Every headline number is emitted to `BENCH_sched.json`
 //! (`bench_harness::emit`) for the `bench-gate` CI job: the sim is
@@ -611,6 +617,158 @@ fn main() {
         out.metric("preempt.displacements", on.preemptions);
         out.digest("preempt.digest", on.digest);
         println!("High jumps the batch with bit-identical numerics: OK");
+    }
+
+    // --- fleet serving: affinity routing + tenant quotas ------------------
+    // Two studies over the front-tier router. (a) A cache-heavy stream of
+    // repeated kernels over 2 boards x pool 2: predicted-finish routing
+    // with the binary-cache affinity bonus concentrates each kernel's
+    // repeats on the board that already compiled it, while round-robin
+    // splits every kernel across both boards and pays the compile twice.
+    // Routing moves time, never numerics — fleet digests are bit-identical.
+    // (b) A noisy tenant bursting 60 jobs against a 12-job victim on a
+    // shared single-board fleet: capping the noisy tenant's in-flight
+    // quota at the front tier strictly improves the victim's p95
+    // turnaround, without touching the victim's admission.
+    {
+        use herov2::bench_harness::Variant;
+        use herov2::fleet::{FleetReport, RoutePolicy, Router, TenantSpec};
+
+        let job = |kernel: &'static str, size: usize, seed: u64| synth::JobDesc {
+            kernel,
+            size,
+            variant: Variant::Handwritten,
+            threads: 8,
+            seed,
+            arrival: 0,
+            priority: Priority::Normal,
+        };
+
+        // Four distinct binaries, each submitted twice per repetition: the
+        // second copy of each pair is where affinity routing cashes in.
+        let mut stream = Vec::new();
+        for _rep in 0..4 {
+            for (k, size) in [
+                ("darknet", 14usize),
+                ("darknet", 14),
+                ("covar", 12),
+                ("covar", 12),
+                ("3mm", 10),
+                ("3mm", 10),
+                ("2mm", 12),
+                ("2mm", 12),
+            ] {
+                stream.push(job(k, size, 100 + stream.len() as u64));
+            }
+        }
+        println!(
+            "\nfleet study: {} repeated-kernel jobs on a 2-board fleet (pool 2 per board)\n",
+            stream.len()
+        );
+        println!("{:<26} {:>14} {:>12} {:>12}", "route", "makespan (cy)", "compiles", "affinity");
+        let serve_fleet = |route: RoutePolicy| {
+            let mut r = Router::homogeneous(&aurora(), 2, 2).with_route(route);
+            for j in &stream {
+                r.submit(*j);
+            }
+            r.drain().expect("fleet drain");
+            r.report()
+        };
+        let misses = |r: &FleetReport| r.boards.iter().map(|b| b.cache_misses).sum::<u64>();
+        let aff = serve_fleet(RoutePolicy::Finish);
+        let rr = serve_fleet(RoutePolicy::RoundRobin);
+        for r in [&aff, &rr] {
+            assert_eq!(r.completed, stream.len(), "all fleet jobs must complete");
+            println!(
+                "{:<26} {:>14} {:>12} {:>11.0}%",
+                r.route,
+                r.makespan_cycles,
+                misses(r),
+                100.0 * r.affinity_hit_rate()
+            );
+        }
+        assert_eq!(aff.digest, rr.digest, "routing must never touch numerics");
+        assert_eq!(rr.affinity_decisions, 0, "round-robin takes no finish-routing decisions");
+        assert_eq!(aff.affinity_decisions, stream.len() as u64);
+        assert!(aff.affinity_hits > 0, "the repeated stream must land warm routes");
+        assert!(
+            misses(&aff) < misses(&rr),
+            "affinity routing must compile on fewer boards ({} vs {} misses)",
+            misses(&aff),
+            misses(&rr)
+        );
+        assert!(
+            aff.makespan_cycles < rr.makespan_cycles,
+            "affinity routing must strictly beat round-robin makespan ({} vs {})",
+            aff.makespan_cycles,
+            rr.makespan_cycles
+        );
+        out.metric("fleet.affinity.makespan_cycles", aff.makespan_cycles);
+        out.metric("fleet.affinity.cache_misses", misses(&aff));
+        out.metric("fleet.affinity.hits", aff.affinity_hits);
+        out.metric("fleet.rr.makespan_cycles", rr.makespan_cycles);
+        out.metric("fleet.rr.cache_misses", misses(&rr));
+        out.digest("fleet.digest", aff.digest);
+        println!("affinity routing strictly beats round-robin, digests bit-identical: OK");
+
+        // (b) Noisy-neighbor isolation. The noisy tenant fronts every
+        // victim job with a 5-job burst; all 72 jobs land at cycle 0, so
+        // an in-flight cap of 10 admits exactly the first 10 noisy jobs
+        // and refuses the rest at the front tier — no board ever sees
+        // them. The victim's admission is untouched in both runs.
+        let serve_quota = |noisy_cap: usize| {
+            let mut r = Router::homogeneous(&aurora(), 1, 2);
+            let noisy = r.tenant(TenantSpec {
+                name: "noisy".to_string(),
+                max_in_flight: noisy_cap,
+                max_resident_bytes: 0,
+                priority: None,
+            });
+            let victim = r.tenant(TenantSpec::unlimited("victim"));
+            let mut n = 0u64;
+            for i in 0..12u64 {
+                for _ in 0..5 {
+                    r.submit_for(noisy, job("gemm", 12, 500 + n));
+                    n += 1;
+                }
+                r.submit_for(victim, job("atax", 24, 900 + i));
+            }
+            r.drain().expect("fleet drain");
+            r.report()
+        };
+        let open = serve_quota(0);
+        let capped = serve_quota(10);
+        let victim_p95 = |r: &FleetReport| {
+            r.tenant("victim")
+                .expect("victim tenant reported")
+                .class(Priority::Normal)
+                .expect("victim jobs completed")
+                .p95_turnaround_cycles
+        };
+        for (label, r, noisy_admitted) in [("open", &open, 60usize), ("capped", &capped, 10)] {
+            let noisy = r.tenant("noisy").expect("noisy tenant reported");
+            assert_eq!(noisy.submitted, 60);
+            assert_eq!(noisy.admitted, noisy_admitted, "{label}: noisy admission");
+            assert_eq!(r.tenant("victim").expect("victim").admitted, 12, "{label}: victim");
+            assert_eq!(r.completed, noisy_admitted + 12, "{label}: admitted jobs complete");
+        }
+        assert_eq!(capped.quota_rejected, 50, "the cap must refuse the burst's tail");
+        let (p95_open, p95_capped) = (victim_p95(&open), victim_p95(&capped));
+        println!(
+            "\nquota study: victim p95 turnaround {p95_capped} cy with the noisy tenant \
+             capped at 10 in-flight vs {p95_open} cy uncapped"
+        );
+        assert!(
+            p95_capped < p95_open,
+            "capping the noisy tenant must improve the victim's p95 ({p95_capped} vs {p95_open})"
+        );
+        out.metric("fleet.quota.capped.victim_p95_turnaround_cycles", p95_capped);
+        out.metric("fleet.quota.open.victim_p95_turnaround_cycles", p95_open);
+        out.metric(
+            "fleet.quota.noisy_admitted",
+            capped.tenant("noisy").expect("noisy").admitted as u64,
+        );
+        println!("tenant quota isolates the noisy neighbor: OK");
     }
 
     let path = out.emit().expect("emit BENCH_sched.json");

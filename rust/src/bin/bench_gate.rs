@@ -174,9 +174,13 @@ fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
         ));
     }
     let mut failed = false;
+    let mut bootstraps: Vec<String> = Vec::new();
     for bpath in &baselines {
         let name = bpath.file_name().unwrap().to_string_lossy().into_owned();
         let baseline = load(bpath)?;
+        if baseline.bootstrap {
+            bootstraps.push(name.clone());
+        }
         let epath = emitted_dir.join(&name);
         if !epath.exists() {
             println!("FAIL {name}: bench was not run (no {})", epath.display());
@@ -190,9 +194,10 @@ fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
         }
         if c.failures.is_empty() {
             println!(
-                "ok   {name}: {} metrics, {} digests",
+                "ok   {name}: {} metrics, {} digests{}",
                 baseline.metrics.len(),
-                baseline.digests.len()
+                baseline.digests.len(),
+                if baseline.bootstrap { " (bootstrap baseline — not yet strict)" } else { "" }
             );
         } else if baseline.bootstrap {
             // Hand-seeded baseline: report, demand a bless, but do not
@@ -221,7 +226,32 @@ fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
             failed = true;
         }
     }
+    // One explicit, grep-able line for every baseline the gate is not yet
+    // enforcing — a bootstrap pass must never read like a strict pass.
+    if let Some(summary) = bootstrap_summary(&bootstraps, emitted_dir, baseline_dir) {
+        println!("{summary}");
+    }
     Ok(if failed { 1 } else { 0 })
+}
+
+/// The end-of-check summary naming every baseline still on hand-seeded
+/// `"bootstrap": true` values (`None` when the gate is fully strict).
+fn bootstrap_summary(
+    bootstraps: &[String],
+    emitted_dir: &Path,
+    baseline_dir: &Path,
+) -> Option<String> {
+    if bootstraps.is_empty() {
+        return None;
+    }
+    Some(format!(
+        "note {} baseline file(s) still bootstrap-seeded ({}) — their numbers gate \
+         nothing until `bench_gate bless {} {}` is run and committed",
+        bootstraps.len(),
+        bootstraps.join(", "),
+        emitted_dir.display(),
+        baseline_dir.display()
+    ))
 }
 
 fn bless(emitted_dir: &Path, baseline_dir: &Path) -> Result<(), String> {
@@ -311,6 +341,21 @@ mod tests {
         assert!(parse("{\n  \"metrics\": {\n  }\n}\n").is_err(), "missing bench name");
         assert!(parse("{\n  \"bench\": \"x\",\n  \"metrics\": {\n    \"k\": oops\n  }\n}\n").is_err());
         assert!(parse("{\n  \"bench\": \"x\",\n  \"surprise\": 1\n}\n").is_err());
+    }
+
+    #[test]
+    fn bootstrap_summary_names_every_seeded_baseline() {
+        let (e, b) = (PathBuf::from("target/bench-json"), PathBuf::from("baselines"));
+        assert_eq!(bootstrap_summary(&[], &e, &b), None, "a strict gate stays silent");
+        let s = bootstrap_summary(
+            &["BENCH_sched.json".to_string(), "BENCH_offload.json".to_string()],
+            &e,
+            &b,
+        )
+        .unwrap();
+        assert!(s.contains("2 baseline file(s) still bootstrap-seeded"), "{s}");
+        assert!(s.contains("BENCH_sched.json, BENCH_offload.json"), "{s}");
+        assert!(s.contains("bench_gate bless target/bench-json baselines"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,954 @@
+//! Multi-board fleet serving: a front-tier router over N independent
+//! carrier boards.
+//!
+//! One [`crate::sched::Scheduler`] models one carrier board — its own
+//! instance pool, shared-DRAM [`crate::mem::BandwidthLedger`], binary
+//! cache and (optionally) learning/SVM state. This module scales `hero
+//! serve` past a single board: a [`Router`] owns N schedulers and fronts
+//! them with one submission API, which is the platform's
+//! millions-of-users story (the original HERO platform already networked
+//! multiple FPGA boards behind one host; we compose the simulated boards
+//! behind one front tier).
+//!
+//! ## Routing
+//!
+//! Every submission is scored against every board with exactly the
+//! placement engine a single board uses ([`place::scores_from`] — the
+//! same `(finish, stall, free_at, index)` ordering as
+//! [`place::choose`]), plus two fleet-level terms:
+//!
+//! * **Projected occupancy.** All submissions typically precede the
+//!   drain, when every pool port still reads free-at-0. The router keeps
+//!   a per-slot *projected* free cycle — the predicted finish of every
+//!   job it has already routed there — and floors each slot's score with
+//!   it, so a burst spreads across boards instead of piling onto board 0.
+//! * **Binary-cache affinity.** A board that has not compiled the job's
+//!   kernel pays its predicted compile cost
+//!   ([`cache::compile_cost_cycles`]) in the score; warm boards
+//!   (read-only probe via [`cache::BinaryCache::contains`], unioned with
+//!   the router's own projection of keys it already routed) do not. Hot
+//!   kernels therefore stick to boards that already lowered them, and
+//!   the router reports the hit rate ([`FleetReport::affinity_hits`]).
+//!
+//! [`RoutePolicy::RoundRobin`] bypasses all scoring (strict alternation)
+//! — the baseline the affinity bench beats.
+//!
+//! ## Tenancy and quotas
+//!
+//! Jobs are tagged with a [`TenantId`]. Each tenant carries fair-share
+//! admission quotas ([`TenantSpec`]): a cap on *in-flight* jobs
+//! (admitted and not yet settled at submission time — under the
+//! submit-then-drain usage this caps a tenant's burst size) and a cap on
+//! *resident bytes* (the summed DRAM footprint of its in-flight jobs),
+//! plus an optional default [`Priority`] applied to submissions that did
+//! not ask for a class themselves. A submission over quota is refused at
+//! the front tier — it never reaches any board, so a noisy tenant cannot
+//! degrade other tenants beyond its share ([`FleetReport`] carries
+//! per-tenant per-class p50/p95 turnaround to verify exactly that).
+//!
+//! ## Degenerate identity
+//!
+//! A fleet of one board with the single default tenant is a *zero-cost
+//! wrapper*: `submit` routes to board 0 without scoring and the board
+//! sees byte-identical submissions, so the event sequence, report and
+//! digest are bit-identical to driving the `Scheduler` directly
+//! (property-tested in `tests/properties.rs`).
+
+use crate::config::HeroConfig;
+use crate::sched::report::percentile;
+use crate::sched::{cache, place, policy, ClassReport, ServeReport};
+use crate::sched::{JobDesc, JobHandle, JobOutcome, JobState, Policy, Priority, Scheduler};
+use crate::trace::SchedEvent;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+/// Index into the router's tenant table.
+pub type TenantId = usize;
+
+/// The tenant every untagged submission bills to (unlimited quotas, no
+/// priority override — registered by [`Router::new`]).
+pub const DEFAULT_TENANT: TenantId = 0;
+
+/// Fleet-level async completion handle ([`Router::submit`]): an index in
+/// global submission order, resolvable to the routed board's own
+/// [`JobHandle`] state via [`Router::state`] / [`Router::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetHandle(pub usize);
+
+/// Cross-board routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Minimize predicted finish across all boards' slots, including
+    /// projected backlog and the compile cost a cache-cold board would
+    /// pay (the default).
+    #[default]
+    Finish,
+    /// Strict alternation over boards, blind to load and cache state —
+    /// the baseline for the affinity studies.
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    /// Parse a `--route` argument.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "finish" | "predicted-finish" => Some(RoutePolicy::Finish),
+            "round-robin" | "roundrobin" | "rr" => Some(RoutePolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::Finish => "finish",
+            RoutePolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// One tenant's admission contract. A quota of 0 means unlimited.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Most jobs this tenant may have admitted-and-unsettled at once
+    /// (submission-time check; 0 = unlimited).
+    pub max_in_flight: usize,
+    /// Cap on the summed DRAM byte footprint of the tenant's in-flight
+    /// jobs (0 = unlimited).
+    pub max_resident_bytes: u64,
+    /// Default QoS class for submissions that carry [`Priority::Normal`]
+    /// (i.e. did not ask for a class themselves); `None` leaves
+    /// submissions untouched.
+    pub priority: Option<Priority>,
+}
+
+impl TenantSpec {
+    /// An unlimited tenant with no priority override.
+    pub fn unlimited(name: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            max_in_flight: 0,
+            max_resident_bytes: 0,
+            priority: None,
+        }
+    }
+}
+
+/// Parse a `--tenants` specification: comma-separated
+/// `name[:jobs[:bytes[:priority]]]` entries, where `jobs` caps in-flight
+/// jobs, `bytes` caps resident bytes (both 0 or empty = unlimited) and
+/// `priority` is a [`Priority::parse`] token. Example:
+/// `batch:16:0:normal,interactive:0:0:high`.
+pub fn parse_tenants(spec: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut out: Vec<TenantSpec> = Vec::new();
+    for raw in spec.split(',') {
+        let raw = raw.trim();
+        let parts: Vec<&str> = raw.split(':').collect();
+        if raw.is_empty() || parts[0].is_empty() || parts.len() > 4 {
+            return Err(format!(
+                "tenant entry {raw:?}: expected `name[:jobs[:bytes[:priority]]]`"
+            ));
+        }
+        let name = parts[0].to_string();
+        if out.iter().any(|t| t.name == name) {
+            return Err(format!("duplicate tenant {name:?}"));
+        }
+        let number = |field: &str, what: &str| -> Result<u64, String> {
+            field.parse().map_err(|_| format!("tenant {name:?}: bad {what} quota {field:?}"))
+        };
+        let max_in_flight = match parts.get(1) {
+            None | Some(&"") => 0,
+            Some(s) => number(s, "in-flight")? as usize,
+        };
+        let max_resident_bytes = match parts.get(2) {
+            None | Some(&"") => 0,
+            Some(s) => number(s, "resident-bytes")?,
+        };
+        let priority = match parts.get(3) {
+            None | Some(&"") => None,
+            Some(p) => Some(
+                Priority::parse(p)
+                    .ok_or_else(|| format!("tenant {name:?}: unknown priority {p:?}"))?,
+            ),
+        };
+        out.push(TenantSpec { name, max_in_flight, max_resident_bytes, priority });
+    }
+    Ok(out)
+}
+
+/// Where a fleet submission went.
+#[derive(Debug, Clone)]
+enum Routed {
+    /// Admitted and routed: the board index and that board's own handle.
+    Board { board: usize, handle: JobHandle },
+    /// Refused at the front tier by the tenant's quota — no board ever
+    /// saw it.
+    Quota { reason: String },
+}
+
+/// One fleet submission's record, in global submission order.
+#[derive(Debug, Clone)]
+struct FleetJob {
+    tenant: TenantId,
+    /// The class the job was submitted to its board with (tenant default
+    /// already applied).
+    priority: Priority,
+    arrival: u64,
+    routed: Routed,
+}
+
+/// Per-tenant admission accounting.
+#[derive(Debug, Default)]
+struct TenantStats {
+    submitted: usize,
+    admitted: usize,
+    quota_rejected: usize,
+    /// Admitted jobs not yet observed settled: `(board, handle, bytes)`.
+    /// Swept lazily at each submission, so in-flight/resident figures are
+    /// exact as of submission time.
+    open: Vec<(usize, JobHandle, u64)>,
+}
+
+/// The front-tier router: N independent boards behind one submission API.
+pub struct Router {
+    boards: Vec<Scheduler>,
+    route: RoutePolicy,
+    tenants: Vec<TenantSpec>,
+    stats: Vec<TenantStats>,
+    jobs: Vec<FleetJob>,
+    /// Per board, per slot: projected free cycle from jobs routed there
+    /// but possibly not yet drained (floors the real port state).
+    proj_free: Vec<Vec<u64>>,
+    /// Per board: binary-cache keys of jobs routed there — the projection
+    /// of what the board's cache will hold once it dispatches them.
+    warm: Vec<HashSet<cache::BinKey>>,
+    affinity_decisions: u64,
+    affinity_hits: u64,
+    rr_next: usize,
+}
+
+impl Router {
+    /// Front N pre-built boards. Registers the unlimited default tenant
+    /// (id [`DEFAULT_TENANT`]); routing defaults to
+    /// [`RoutePolicy::Finish`].
+    pub fn new(boards: Vec<Scheduler>) -> Router {
+        assert!(!boards.is_empty(), "a fleet needs at least one board");
+        let proj_free = boards.iter().map(|b| vec![0; b.pool().len()]).collect();
+        let warm = boards.iter().map(|_| HashSet::new()).collect();
+        Router {
+            boards,
+            route: RoutePolicy::Finish,
+            tenants: vec![TenantSpec::unlimited("default")],
+            stats: vec![TenantStats::default()],
+            jobs: Vec::new(),
+            proj_free,
+            warm,
+            affinity_decisions: 0,
+            affinity_hits: 0,
+            rr_next: 0,
+        }
+    }
+
+    /// `boards` identical boards of `pool_per_board` instances each, FIFO
+    /// dispatch — the [`crate::session::Session::fleet`] shape.
+    pub fn homogeneous(cfg: &HeroConfig, boards: usize, pool_per_board: usize) -> Router {
+        assert!(boards >= 1, "a fleet needs at least one board");
+        Router::new(
+            (0..boards)
+                .map(|_| Scheduler::new(cfg.clone(), pool_per_board, Policy::Fifo))
+                .collect(),
+        )
+    }
+
+    /// Choose the routing policy (builder style).
+    pub fn with_route(mut self, route: RoutePolicy) -> Router {
+        self.route = route;
+        self
+    }
+
+    pub fn route(&self) -> RoutePolicy {
+        self.route
+    }
+
+    /// The boards, in index order (read-only; the router owns dispatch).
+    pub fn boards(&self) -> &[Scheduler] {
+        &self.boards
+    }
+
+    /// Board `i`'s scheduler, read-only.
+    pub fn board(&self, i: usize) -> &Scheduler {
+        &self.boards[i]
+    }
+
+    /// Register a tenant; its id tags submissions
+    /// ([`Router::submit_for`]). Names must be unique across the fleet.
+    pub fn tenant(&mut self, spec: TenantSpec) -> TenantId {
+        assert!(
+            self.tenants.iter().all(|t| t.name != spec.name),
+            "duplicate tenant {:?}",
+            spec.name
+        );
+        self.tenants.push(spec);
+        self.stats.push(TenantStats::default());
+        self.tenants.len() - 1
+    }
+
+    /// Find a tenant by name, or register it with unlimited quotas — the
+    /// trace-replay path, where a `tenant` column names tenants on the
+    /// fly.
+    pub fn tenant_named(&mut self, name: &str) -> TenantId {
+        match self.tenants.iter().position(|t| t.name == name) {
+            Some(id) => id,
+            None => self.tenant(TenantSpec::unlimited(name)),
+        }
+    }
+
+    /// The registered tenant id for `name`, if any.
+    pub fn tenant_id(&self, name: &str) -> Option<TenantId> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    /// Submit on the default tenant's account.
+    pub fn submit(&mut self, desc: JobDesc) -> FleetHandle {
+        self.submit_for(DEFAULT_TENANT, desc)
+    }
+
+    /// Submit a whole stream on the default tenant's account.
+    pub fn submit_all(&mut self, descs: &[JobDesc]) -> Vec<FleetHandle> {
+        descs.iter().map(|d| self.submit(*d)).collect()
+    }
+
+    /// Submit one job on `tenant`'s account: apply the tenant's default
+    /// priority, check its quotas, and route across the fleet. Over-quota
+    /// submissions settle immediately as rejected without touching any
+    /// board.
+    pub fn submit_for(&mut self, tenant: TenantId, mut desc: JobDesc) -> FleetHandle {
+        assert!(tenant < self.tenants.len(), "unknown tenant id {tenant}");
+        let id = self.jobs.len();
+        // The tenant default applies only to submissions that did not ask
+        // for a class themselves (Normal is the JobDesc default).
+        if let (Priority::Normal, Some(p)) = (desc.priority, self.tenants[tenant].priority) {
+            desc.priority = p;
+        }
+        self.sweep_settled(tenant);
+        self.stats[tenant].submitted += 1;
+        let bytes = desc.workload().map(|w| policy::job_bytes(&w)).unwrap_or(0);
+        if let Some(reason) = self.quota_violation(tenant, bytes) {
+            self.stats[tenant].quota_rejected += 1;
+            self.jobs.push(FleetJob {
+                tenant,
+                priority: desc.priority,
+                arrival: desc.arrival,
+                routed: Routed::Quota { reason },
+            });
+            return FleetHandle(id);
+        }
+        let board = self.route_board(&desc);
+        let handle = self.boards[board].submit(desc);
+        self.stats[tenant].admitted += 1;
+        self.stats[tenant].open.push((board, handle, bytes));
+        self.jobs.push(FleetJob {
+            tenant,
+            priority: desc.priority,
+            arrival: desc.arrival,
+            routed: Routed::Board { board, handle },
+        });
+        FleetHandle(id)
+    }
+
+    /// Drop settled jobs from the tenant's in-flight set, so quotas see
+    /// exactly the jobs still admitted-and-unsettled at this submission.
+    fn sweep_settled(&mut self, tenant: TenantId) {
+        let boards = &self.boards;
+        self.stats[tenant]
+            .open
+            .retain(|(b, h, _)| boards[*b].state(*h).map(|s| !s.settled()).unwrap_or(false));
+    }
+
+    fn quota_violation(&self, tenant: TenantId, bytes: u64) -> Option<String> {
+        let spec = &self.tenants[tenant];
+        let st = &self.stats[tenant];
+        if spec.max_in_flight > 0 && st.open.len() >= spec.max_in_flight {
+            return Some(format!(
+                "tenant {:?} over in-flight quota ({} of {} jobs in flight)",
+                spec.name,
+                st.open.len(),
+                spec.max_in_flight
+            ));
+        }
+        if spec.max_resident_bytes > 0 {
+            let resident: u64 = st.open.iter().map(|(_, _, b)| b).sum();
+            if resident + bytes > spec.max_resident_bytes {
+                return Some(format!(
+                    "tenant {:?} over resident-bytes quota ({resident} + {bytes} B exceeds {} B)",
+                    spec.name, spec.max_resident_bytes
+                ));
+            }
+        }
+        None
+    }
+
+    /// Pick the board for an admitted job. Single-board fleets
+    /// short-circuit to board 0 — the degenerate-identity guarantee costs
+    /// nothing and books no affinity decisions.
+    fn route_board(&mut self, desc: &JobDesc) -> usize {
+        if self.boards.len() == 1 {
+            return 0;
+        }
+        match self.route {
+            RoutePolicy::RoundRobin => {
+                let b = self.rr_next % self.boards.len();
+                self.rr_next += 1;
+                b
+            }
+            RoutePolicy::Finish => self.route_by_finish(desc),
+        }
+    }
+
+    /// Cross-board predicted-finish routing. Per board, the score is the
+    /// board's best slot under [`place::scores_from`] — the single-board
+    /// placement engine, with slot starts floored by the router's
+    /// projected occupancy — plus the predicted compile cost when the
+    /// board is cold for the job's binary key. Minimal
+    /// `(finish, stall, free, board, slot)` wins, the fleet-level
+    /// extension of [`place::choose`]'s tie-breaks.
+    fn route_by_finish(&mut self, desc: &JobDesc) -> usize {
+        let Some(w) = desc.workload() else {
+            // Unknown kernel: it will be rejected at the board; route to
+            // the least-backlogged board so the rejection is deterministic.
+            return self.least_loaded();
+        };
+        let dma_bytes = policy::job_bytes(&w);
+        // (finish, stall, free, board, slot) of the best candidate.
+        let mut best: Option<(u64, u64, u64, usize, usize)> = None;
+        let mut best_warm = false;
+        for (b, board) in self.boards.iter().enumerate() {
+            let cfg = board.config();
+            let eff_threads = desc.threads.min(cfg.accel.cores_per_cluster as u32);
+            let predicted = policy::predict_job(&w, desc.variant, eff_threads);
+            let key = cache::key_for(cfg, &w, desc.variant, desc.threads);
+            let warm = board.cache().contains(&key) || self.warm[b].contains(&key);
+            let compile =
+                if warm { 0 } else { cache::compile_cost_cycles(&w, desc.variant) };
+            let pool = board.pool();
+            for s in place::scores_from(
+                pool,
+                &self.proj_free[b],
+                desc.arrival,
+                predicted,
+                dma_bytes,
+                desc.priority.is_high(),
+            ) {
+                let free = pool.free_at(s.instance).max(self.proj_free[b][s.instance]);
+                let cand = (s.finish + compile, s.stall, free, b, s.instance);
+                let better = match best {
+                    None => true,
+                    Some(cur) => cand < cur,
+                };
+                if better {
+                    best = Some(cand);
+                    best_warm = warm;
+                }
+            }
+        }
+        let (finish, _, _, b, slot) = best.expect("fleet has at least one board slot");
+        self.affinity_decisions += 1;
+        if best_warm {
+            self.affinity_hits += 1;
+        }
+        // Project the routed job's occupancy (compile included — it runs
+        // on the slot) and the binary its dispatch will warm.
+        self.proj_free[b][slot] = self.proj_free[b][slot].max(finish);
+        let w = desc.workload().expect("checked above");
+        let key = cache::key_for(self.boards[b].config(), &w, desc.variant, desc.threads);
+        self.warm[b].insert(key);
+        b
+    }
+
+    /// The board whose earliest slot (projected) frees first; ties break
+    /// toward the lowest index.
+    fn least_loaded(&self) -> usize {
+        (0..self.boards.len())
+            .min_by_key(|&b| {
+                let pool = self.boards[b].pool();
+                (0..pool.len())
+                    .map(|i| pool.free_at(i).max(self.proj_free[b][i]))
+                    .min()
+                    .unwrap_or(0)
+            })
+            .unwrap_or(0)
+    }
+
+    /// Drain every board to completion, in board order (boards are
+    /// independent simulations — order does not change any board's
+    /// events).
+    pub fn drain(&mut self) -> Result<()> {
+        for b in &mut self.boards {
+            b.drain()?;
+        }
+        Ok(())
+    }
+
+    /// Jobs submitted to the fleet (including quota-rejected ones).
+    pub fn submitted(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Current state of a fleet handle (owned — quota rejections are
+    /// synthesized at the front tier, board states are cloned). `None`
+    /// for a handle this router never issued.
+    pub fn state(&self, h: FleetHandle) -> Option<JobState> {
+        match &self.jobs.get(h.0)?.routed {
+            Routed::Quota { reason } => Some(JobState::Rejected { reason: reason.clone() }),
+            Routed::Board { board, handle } => self.boards[*board].state(*handle).cloned(),
+        }
+    }
+
+    /// Completion record of a fleet handle, if its job finished.
+    pub fn poll(&self, h: FleetHandle) -> Option<&JobOutcome> {
+        match &self.jobs.get(h.0)?.routed {
+            Routed::Board { board, handle } => self.boards[*board].poll(*handle),
+            Routed::Quota { .. } => None,
+        }
+    }
+
+    /// Render all boards' event logs interleaved on one timeline, each
+    /// line prefixed with its board id. Events inherit the cycle of the
+    /// last timed event on their board (clamped non-decreasing), so
+    /// untimed submit/compile lines stay next to the dispatch they belong
+    /// to; ties order by board index, then per-board log order.
+    pub fn events(&self) -> String {
+        let mut entries: Vec<(u64, usize, usize, String)> = Vec::new();
+        for (b, board) in self.boards.iter().enumerate() {
+            let mut clock = 0u64;
+            for (seq, e) in board.trace.events.iter().enumerate() {
+                if let Some(c) = e.cycle() {
+                    clock = clock.max(c);
+                }
+                entries.push((clock, b, seq, format!("[b{b}] {}", e.render_line())));
+            }
+        }
+        entries.sort_by(|x, y| (x.0, x.1, x.2).cmp(&(y.0, y.1, y.2)));
+        let mut out = String::new();
+        for (_, _, _, line) in entries {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Merged fleet report: per-board [`ServeReport`]s, per-tenant
+    /// per-class turnaround percentiles, affinity hit rate, and a digest
+    /// chained over completed jobs in *global submission order* — so two
+    /// runs of one stream under different routing policies digest
+    /// identically iff their numerics match job for job.
+    pub fn report(&self) -> FleetReport {
+        let boards: Vec<ServeReport> = self.boards.iter().map(|b| b.report()).collect();
+        let mut digest = 0xcbf2_9ce4_8422_2325u64;
+        let mut completed = 0usize;
+        let mut quota_rejected = 0usize;
+        // Per tenant, per class (Normal = 0, High = 1): turnaround
+        // samples and preemption counts.
+        let mut samples: Vec<[Vec<u64>; 2]> =
+            (0..self.tenants.len()).map(|_| [Vec::new(), Vec::new()]).collect();
+        let mut preempted: Vec<[u64; 2]> = vec![[0, 0]; self.tenants.len()];
+        let mut owner: HashMap<(usize, usize), (TenantId, usize)> = HashMap::new();
+        for j in &self.jobs {
+            let class = j.priority.is_high() as usize;
+            match &j.routed {
+                Routed::Quota { .. } => quota_rejected += 1,
+                Routed::Board { board, handle } => {
+                    owner.insert((*board, handle.0), (j.tenant, class));
+                    if let Some(o) = self.boards[*board].poll(*handle) {
+                        completed += 1;
+                        digest = (digest ^ o.digest).wrapping_mul(0x0000_0100_0000_01b3);
+                        samples[j.tenant][class].push(o.end.saturating_sub(j.arrival));
+                    }
+                }
+            }
+        }
+        for (b, board) in self.boards.iter().enumerate() {
+            for e in &board.trace.events {
+                if let SchedEvent::Preempted { job, .. } = e {
+                    if let Some(&(t, class)) = owner.get(&(b, *job)) {
+                        preempted[t][class] += 1;
+                    }
+                }
+            }
+        }
+        let mut tenants = Vec::with_capacity(self.tenants.len());
+        for (t, spec) in self.tenants.iter().enumerate() {
+            let mut classes = Vec::new();
+            for (c, p) in [Priority::Normal, Priority::High].into_iter().enumerate() {
+                let v = &mut samples[t][c];
+                if v.is_empty() {
+                    continue;
+                }
+                v.sort_unstable();
+                classes.push(ClassReport {
+                    priority: p,
+                    jobs: v.len(),
+                    preempted: preempted[t][c],
+                    p50_turnaround_cycles: percentile(v, 50),
+                    p95_turnaround_cycles: percentile(v, 95),
+                });
+            }
+            tenants.push(TenantReport {
+                name: spec.name.clone(),
+                submitted: self.stats[t].submitted,
+                admitted: self.stats[t].admitted,
+                quota_rejected: self.stats[t].quota_rejected,
+                classes,
+            });
+        }
+        FleetReport {
+            route: self.route.label(),
+            submitted: self.jobs.len(),
+            admitted: self.jobs.len() - quota_rejected,
+            quota_rejected,
+            completed,
+            rejected: boards.iter().map(|r| r.rejected).sum(),
+            makespan_cycles: boards.iter().map(|r| r.makespan_cycles).max().unwrap_or(0),
+            affinity_decisions: self.affinity_decisions,
+            affinity_hits: self.affinity_hits,
+            digest,
+            tenants,
+            boards,
+        }
+    }
+}
+
+/// One tenant's slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub submitted: usize,
+    pub admitted: usize,
+    /// Submissions refused at the front tier by this tenant's quotas.
+    pub quota_rejected: usize,
+    /// Turnaround percentiles per QoS class (classes with completed jobs
+    /// only; `Normal` first, then `High`) — same shape as
+    /// [`ServeReport::classes`].
+    pub classes: Vec<ClassReport>,
+}
+
+impl TenantReport {
+    /// The class summary for `priority`, if any of its jobs completed.
+    pub fn class(&self, priority: Priority) -> Option<&ClassReport> {
+        self.classes.iter().find(|c| c.priority == priority)
+    }
+}
+
+/// A whole fleet run's merged outcome ([`Router::report`]).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Routing policy label ([`RoutePolicy::label`]).
+    pub route: &'static str,
+    /// Fleet-level submissions (including quota-rejected ones).
+    pub submitted: usize,
+    /// Submissions that passed tenant admission and reached a board.
+    pub admitted: usize,
+    /// Submissions refused at the front tier by tenant quotas.
+    pub quota_rejected: usize,
+    /// Completed across all boards (fleet-routed jobs; a capacity-split
+    /// child counts on its board, not here).
+    pub completed: usize,
+    /// Board-level rejections across the fleet (admission control,
+    /// unknown kernels, compile errors).
+    pub rejected: usize,
+    /// Max over the boards' makespans — the fleet drains when its
+    /// slowest board does.
+    pub makespan_cycles: u64,
+    /// Finish-routing decisions taken (0 under round-robin or a
+    /// single-board fleet).
+    pub affinity_decisions: u64,
+    /// Of those, routes that landed on a board already warm for the
+    /// job's binary.
+    pub affinity_hits: u64,
+    /// Digest over completed jobs' output digests in global submission
+    /// order — routing-invariant on homogeneous boards.
+    pub digest: u64,
+    pub tenants: Vec<TenantReport>,
+    pub boards: Vec<ServeReport>,
+}
+
+impl FleetReport {
+    /// Warm-board fraction of finish-routing decisions (0.0 when none
+    /// were taken).
+    pub fn affinity_hit_rate(&self) -> f64 {
+        if self.affinity_decisions == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / self.affinity_decisions as f64
+        }
+    }
+
+    /// The report slice for a tenant by name.
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
+impl fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "fleet         : {} board(s), route {}", self.boards.len(), self.route)?;
+        writeln!(
+            f,
+            "jobs          : {} submitted, {} admitted, {} quota-rejected, {} completed, \
+             {} rejected",
+            self.submitted, self.admitted, self.quota_rejected, self.completed, self.rejected
+        )?;
+        writeln!(f, "makespan      : {} cycles (slowest board)", self.makespan_cycles)?;
+        if self.affinity_decisions > 0 {
+            writeln!(
+                f,
+                "affinity      : {}/{} routes to a warm board ({:.1}%)",
+                self.affinity_hits,
+                self.affinity_decisions,
+                100.0 * self.affinity_hit_rate()
+            )?;
+        }
+        for t in &self.tenants {
+            writeln!(
+                f,
+                "tenant {:<8}: {:>4} submitted, {:>4} admitted, {:>4} quota-rejected",
+                t.name, t.submitted, t.admitted, t.quota_rejected
+            )?;
+            for c in &t.classes {
+                writeln!(
+                    f,
+                    "  class {:<6}: {:>4} jobs, turnaround p50 {:>12} cy, p95 {:>12} cy",
+                    c.priority.label(),
+                    c.jobs,
+                    c.p50_turnaround_cycles,
+                    c.p95_turnaround_cycles
+                )?;
+            }
+        }
+        for (i, r) in self.boards.iter().enumerate() {
+            let busy: u64 = r.instances.iter().map(|inst| inst.busy_cycles).sum();
+            let slots = r.makespan_cycles * r.instances.len() as u64;
+            let util = if slots == 0 { 0.0 } else { busy as f64 / slots as f64 };
+            writeln!(
+                f,
+                "board {:>3}     : {:>4} completed, makespan {:>12} cy, util {:>5.1}%, \
+                 dram stall {:>10} cy",
+                i,
+                r.completed,
+                r.makespan_cycles,
+                100.0 * util,
+                r.dram_stall_cycles
+            )?;
+        }
+        write!(f, "fleet digest  : {:#018x}", self.digest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::workloads::synth;
+
+    fn job(kernel: &'static str, size: usize, seed: u64) -> JobDesc {
+        JobDesc {
+            kernel,
+            size,
+            variant: crate::bench_harness::Variant::Handwritten,
+            threads: 8,
+            seed,
+            arrival: 0,
+            priority: Priority::Normal,
+        }
+    }
+
+    #[test]
+    fn route_policy_parses_and_labels() {
+        assert_eq!(RoutePolicy::parse("finish"), Some(RoutePolicy::Finish));
+        assert_eq!(RoutePolicy::parse("predicted-finish"), Some(RoutePolicy::Finish));
+        assert_eq!(RoutePolicy::parse("round-robin"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("random"), None);
+        assert_eq!(RoutePolicy::default(), RoutePolicy::Finish);
+        assert_eq!(RoutePolicy::RoundRobin.label(), "round-robin");
+    }
+
+    #[test]
+    fn tenant_spec_parses_quotas_and_rejects_garbage() {
+        let ts = parse_tenants("batch:16:4096:normal,interactive:::hi,free").unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(
+            ts[0],
+            TenantSpec {
+                name: "batch".into(),
+                max_in_flight: 16,
+                max_resident_bytes: 4096,
+                priority: Some(Priority::Normal),
+            }
+        );
+        assert_eq!(ts[1].max_in_flight, 0, "empty fields mean unlimited");
+        assert_eq!(ts[1].priority, Some(Priority::High));
+        assert_eq!(ts[2], TenantSpec::unlimited("free"));
+        assert!(parse_tenants("").unwrap_err().contains("tenant entry"));
+        assert!(parse_tenants("a,,b").unwrap_err().contains("tenant entry"));
+        assert!(parse_tenants("a:x").unwrap_err().contains("bad in-flight"));
+        assert!(parse_tenants("a:1:y").unwrap_err().contains("bad resident-bytes"));
+        assert!(parse_tenants("a:1:2:urgent").unwrap_err().contains("unknown priority"));
+        assert!(parse_tenants("a:1:2:hi:extra").unwrap_err().contains("tenant entry"));
+        assert!(parse_tenants("a,a").unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn fleet_of_one_matches_plain_scheduler_events() {
+        let jobs = synth::tiny_jobs(12, 41);
+        let mut solo = Scheduler::new(aurora(), 2, Policy::Sjf);
+        let mut fleet = Router::new(vec![Scheduler::new(aurora(), 2, Policy::Sjf)]);
+        for d in &jobs {
+            solo.submit(*d);
+            fleet.submit(*d);
+        }
+        solo.drain().unwrap();
+        fleet.drain().unwrap();
+        assert_eq!(solo.trace.events, fleet.board(0).trace.events);
+        let (rs, rf) = (solo.report(), fleet.report());
+        assert_eq!(rs.digest, rf.digest, "fleet digest chain matches a single board's");
+        assert_eq!(rs.makespan_cycles, rf.makespan_cycles);
+        assert_eq!(rf.affinity_decisions, 0, "degenerate fleets never score");
+    }
+
+    #[test]
+    fn in_flight_quota_caps_a_burst_and_frees_after_drain() {
+        let mut r = Router::new(vec![Scheduler::new(aurora(), 1, Policy::Fifo)]);
+        let t = r.tenant(TenantSpec {
+            name: "capped".into(),
+            max_in_flight: 2,
+            max_resident_bytes: 0,
+            priority: None,
+        });
+        let h: Vec<FleetHandle> =
+            (0..3).map(|i| r.submit_for(t, job("gemm", 8, i as u64))).collect();
+        assert!(matches!(r.state(h[1]), Some(JobState::Queued)));
+        match r.state(h[2]) {
+            Some(JobState::Rejected { reason }) => {
+                assert!(reason.contains("in-flight quota"), "{reason}")
+            }
+            s => panic!("third submission must be quota-rejected, got {s:?}"),
+        }
+        assert_eq!(r.board(0).submitted(), 2, "rejected job never reached the board");
+        r.drain().unwrap();
+        // Settled jobs leave the in-flight set: the tenant can burst again.
+        let h4 = r.submit_for(t, job("gemm", 8, 9));
+        assert!(matches!(r.state(h4), Some(JobState::Queued)));
+        let rep = r.report();
+        let t = rep.tenant("capped").unwrap();
+        assert_eq!((t.submitted, t.admitted, t.quota_rejected), (4, 3, 1));
+        assert_eq!(rep.quota_rejected, 1);
+    }
+
+    #[test]
+    fn resident_bytes_quota_counts_in_flight_footprints() {
+        let w = job("gemm", 8, 0).workload().unwrap();
+        let bytes = policy::job_bytes(&w);
+        let mut r = Router::new(vec![Scheduler::new(aurora(), 1, Policy::Fifo)]);
+        let t = r.tenant(TenantSpec {
+            name: "lean".into(),
+            max_in_flight: 0,
+            max_resident_bytes: bytes, // exactly one job fits
+            priority: None,
+        });
+        let first = r.submit_for(t, job("gemm", 8, 1));
+        assert!(matches!(r.state(first), Some(JobState::Queued)));
+        let second = r.submit_for(t, job("gemm", 8, 2));
+        match r.state(second) {
+            Some(JobState::Rejected { reason }) => {
+                assert!(reason.contains("resident-bytes"), "{reason}")
+            }
+            s => panic!("second job exceeds the byte quota, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn tenant_default_priority_applies_to_unmarked_jobs_only() {
+        let mut r = Router::new(vec![Scheduler::new(aurora(), 1, Policy::Fifo)]);
+        let t = r.tenant(TenantSpec {
+            name: "interactive".into(),
+            max_in_flight: 0,
+            max_resident_bytes: 0,
+            priority: Some(Priority::High),
+        });
+        r.submit_for(t, job("gemm", 8, 1));
+        let mut high = job("atax", 12, 2);
+        high.priority = Priority::High;
+        r.submit(high); // default tenant: no override, stays as marked
+        r.submit(job("bicg", 12, 3)); // default tenant: stays Normal
+        let events = &r.board(0).trace.events;
+        assert_eq!(
+            events[0],
+            SchedEvent::Submitted { job: 0, priority: Priority::High },
+            "tenant default upgraded the unmarked job"
+        );
+        assert_eq!(events[1], SchedEvent::Submitted { job: 1, priority: Priority::High });
+        assert_eq!(events[2], SchedEvent::Submitted { job: 2, priority: Priority::Normal });
+    }
+
+    #[test]
+    fn finish_routing_concentrates_repeated_kernels_on_warm_boards() {
+        // Two kernels, two jobs each, two boards of two slots: the first
+        // job of each kernel warms a board, and the repeat lands on that
+        // board's idle second slot instead of paying a compile elsewhere.
+        let mut r = Router::homogeneous(&aurora(), 2, 2);
+        for d in
+            [job("gemm", 8, 1), job("gemm", 8, 2), job("atax", 12, 3), job("atax", 12, 4)]
+        {
+            r.submit(d);
+        }
+        r.drain().unwrap();
+        let rep = r.report();
+        assert_eq!(rep.completed, 4);
+        assert_eq!(rep.affinity_decisions, 4);
+        assert_eq!(rep.affinity_hits, 2, "each kernel's repeat hit its warm board");
+        let misses: u64 = rep.boards.iter().map(|b| b.cache_misses).sum();
+        assert_eq!(misses, 2, "one lowering per kernel across the whole fleet");
+        // Each kernel's pair landed on a single board (2 jobs per board).
+        assert!(rep.boards.iter().all(|b| b.completed == 2), "load stayed balanced");
+    }
+
+    #[test]
+    fn merged_events_carry_board_ids_on_one_timeline() {
+        let mut r = Router::homogeneous(&aurora(), 2, 1);
+        r.submit_all(&[job("gemm", 8, 1), job("gemm", 8, 2), job("atax", 12, 3)]);
+        r.drain().unwrap();
+        let merged = r.events();
+        let per_board: usize = r.boards().iter().map(|b| b.trace.events.len()).sum();
+        assert_eq!(merged.lines().count(), per_board, "every event renders exactly once");
+        assert!(merged.lines().any(|l| l.starts_with("[b0] ")), "{merged}");
+        assert!(merged.lines().any(|l| l.starts_with("[b1] ")), "{merged}");
+        // The per-board monotone clocks interleave: once both boards have
+        // dispatched, completion lines sort by cycle, not by board.
+        let report = r.report();
+        assert!(report.to_string().contains("fleet digest"), "report renders");
+    }
+
+    #[test]
+    fn round_robin_alternates_and_digests_match_finish_routing() {
+        let jobs: Vec<JobDesc> = (0..6).map(|i| job("gemm", 8, i as u64)).collect();
+        let mut rr = Router::homogeneous(&aurora(), 2, 1).with_route(RoutePolicy::RoundRobin);
+        let mut fin = Router::homogeneous(&aurora(), 2, 1);
+        for d in &jobs {
+            rr.submit(*d);
+            fin.submit(*d);
+        }
+        rr.drain().unwrap();
+        fin.drain().unwrap();
+        let (rep_rr, rep_fin) = (rr.report(), fin.report());
+        assert_eq!(rep_rr.route, "round-robin");
+        assert_eq!(rep_rr.affinity_decisions, 0, "round-robin never scores");
+        assert_eq!(rep_rr.boards[0].completed, 3, "strict alternation");
+        assert_eq!(rep_rr.boards[1].completed, 3);
+        assert_eq!(
+            rep_rr.digest, rep_fin.digest,
+            "routing moves time, never numerics: digests are routing-invariant"
+        );
+    }
+}

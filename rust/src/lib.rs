@@ -84,6 +84,27 @@
 //! `hero serve` CLI subcommand (synthetic streams or `--trace` replay;
 //! `--placement`, `--priority-headroom`, `--svm`, `--host-bw`), the job
 //! generators in [`workloads::synth`], and `benches/sched.rs`.
+//!
+//! ## Multi-board fleet serving
+//!
+//! The [`fleet`] module scales serving past a single carrier board: a
+//! front-tier [`fleet::Router`] owns N independent schedulers (each its
+//! own pool, DRAM ledger, binary cache and learning state) behind one
+//! submission API. Jobs are tagged with a tenant ([`fleet::TenantId`])
+//! whose fair-share quotas (in-flight jobs, resident bytes) and default
+//! [`sched::Priority`] are enforced at admission — an over-quota
+//! submission never reaches a board. Cross-board placement reuses the
+//! single-board scoring ([`sched::place::scores_from`]) against the
+//! router's projected per-slot backlog, plus a binary-cache **affinity**
+//! term: cache-cold boards pay the predicted compile cost in their score,
+//! so repeated kernels concentrate on warm boards
+//! ([`fleet::RoutePolicy::Finish`]; `RoundRobin` is the blind baseline).
+//! A fleet of one board with the default tenant is event-sequence
+//! bit-identical to driving the scheduler directly (property-tested).
+//! Front-ends: `Session::fleet(cfg, boards, pool_per_board)`,
+//! `hero serve --fleet N [--tenants spec] [--route finish|round-robin]`
+//! (traces may tag jobs with a `tenant` column), and the `fleet.*`
+//! studies in `benches/sched.rs`.
 
 pub mod accel;
 pub mod bench_harness;
@@ -92,6 +113,7 @@ pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod dma;
+pub mod fleet;
 pub mod host;
 pub mod iommu;
 pub mod isa;

@@ -16,12 +16,31 @@
 //! hero serve [options]                drain a job stream through a pooled
 //!                                     `Session` (multi-accelerator
 //!                                     scheduler, one shared carrier-board
-//!                                     DRAM)
+//!                                     DRAM) — or a whole board fleet
 //!     --jobs N                        synthetic jobs in the stream (default 100)
 //!     --trace FILE                    replay a job trace instead of the
 //!                                     synthetic stream (lines:
-//!                                     `arrival kernel size [variant] [threads] [seed] [priority]`)
+//!                                     `arrival kernel size [variant] [threads] [seed] [priority] [tenant]`;
+//!                                     the tenant column needs --fleet)
 //!     --pool K                        accelerator instances (default 4)
+//!     --fleet N                       serve across N independent carrier
+//!                                     boards (each with its own --pool
+//!                                     instances, DRAM ledger and binary
+//!                                     cache) behind the front-tier fleet
+//!                                     router: per-tenant admission QoS and
+//!                                     affinity-aware cross-board placement
+//!                                     (see rust/src/fleet/README.md)
+//!     --route finish|round-robin      fleet routing policy (default finish:
+//!                                     best predicted finish across all
+//!                                     boards' slots, cache-cold boards pay
+//!                                     the compile cost in their score;
+//!                                     round-robin is the blind baseline)
+//!     --tenants SPEC                  register fleet tenants, comma-
+//!                                     separated `name[:jobs[:bytes[:prio]]]`
+//!                                     (in-flight / resident-byte quotas,
+//!                                     0 = unlimited; prio = default class);
+//!                                     trace lines bill jobs to tenants via
+//!                                     the trailing tenant column
 //!     --policy fifo|sjf|capacity|cap-reject    dispatch policy (default fifo)
 //!     --placement earliest|pressure   placement engine (default earliest;
 //!                                     pressure scores slots by predicted
@@ -289,6 +308,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
         opts: &[
             "--board-bw",
             "--config",
+            "--fleet",
             "--host-bw",
             "--jobs",
             "--lookahead",
@@ -297,8 +317,10 @@ fn cmd_serve(raw: &[String]) -> i32 {
             "--policy",
             "--pool",
             "--priority-headroom",
+            "--route",
             "--seed",
             "--svm",
+            "--tenants",
             "--trace",
         ],
         max_positional: 0,
@@ -348,7 +370,48 @@ fn cmd_serve(raw: &[String]) -> i32 {
         eprintln!("--pool must be at least 1");
         return 2;
     }
-    let stream = match args.opt("--trace") {
+    // Fleet serving: N independent boards behind the front-tier router.
+    let fleet_boards: usize = opt_or(&args, "--fleet", 0);
+    if args.opt("--fleet").is_some() && fleet_boards == 0 {
+        eprintln!("--fleet must be at least 1 board");
+        return 2;
+    }
+    let route_arg = args.opt("--route").unwrap_or("finish");
+    let Some(route) = herov2::fleet::RoutePolicy::parse(route_arg) else {
+        eprintln!("unknown route {route_arg:?} (finish|round-robin)");
+        return 2;
+    };
+    let tenants = match args.opt("--tenants") {
+        None => Vec::new(),
+        Some(spec) => match herov2::fleet::parse_tenants(spec) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("--tenants error: {e}");
+                return 2;
+            }
+        },
+    };
+    if fleet_boards == 0 && (args.opt("--route").is_some() || args.opt("--tenants").is_some()) {
+        eprintln!("--route and --tenants only apply to fleet serving (--fleet N)");
+        return 2;
+    }
+    if fleet_boards > 0 {
+        for (flag, why) in [
+            ("--svm", "shared virtual memory is a per-board IOMMU feature"),
+            ("--pipeline", "chained kernel launches run on a single board"),
+            ("--mixed-widths", "fleet boards are homogeneous; configure per-board pools instead"),
+        ] {
+            let given = match flag {
+                "--mixed-widths" => args.flag(flag),
+                _ => args.opt(flag).is_some(),
+            };
+            if given {
+                eprintln!("{flag} is incompatible with --fleet: {why}");
+                return 2;
+            }
+        }
+    }
+    let stream: Vec<synth::TraceJob> = match args.opt("--trace") {
         Some(path) => {
             let text = match std::fs::read_to_string(path) {
                 Ok(t) => t,
@@ -368,16 +431,11 @@ fn cmd_serve(raw: &[String]) -> i32 {
                 }
             }
         }
-        None => synth::mixed_jobs(jobs, seed),
+        None => synth::mixed_jobs(jobs, seed)
+            .into_iter()
+            .map(|desc| synth::TraceJob { desc, tenant: None })
+            .collect(),
     };
-    println!(
-        "serving {} jobs on {} (pool {}, policy {}, placement {}, seed {seed})",
-        stream.len(),
-        cfg.name,
-        pool,
-        policy.label(),
-        placement.label()
-    );
     let board = match args.parsed::<u64>("--board-bw") {
         Ok(Some(bw)) => BoardSpec::with_bandwidth(bw),
         Ok(None) => BoardSpec::from_config(&cfg),
@@ -395,6 +453,75 @@ fn cmd_serve(raw: &[String]) -> i32 {
         );
         return 2;
     }
+    if fleet_boards > 0 {
+        println!(
+            "serving {} jobs on a {fleet_boards}-board {} fleet \
+             (pool {pool} per board, policy {}, placement {}, route {}, seed {seed})",
+            stream.len(),
+            cfg.name,
+            policy.label(),
+            placement.label(),
+            route.label()
+        );
+        let boards: Vec<Scheduler> = (0..fleet_boards)
+            .map(|_| {
+                Scheduler::new(cfg.clone(), pool, policy)
+                    .with_placement(placement)
+                    .with_board(board)
+                    .with_cache(!args.flag("--no-cache"))
+                    .with_batching(!args.flag("--no-batch"))
+                    .with_verify(!args.flag("--no-verify"))
+                    .with_learning(args.flag("--learn"))
+                    .with_lookahead(lookahead)
+                    .with_preemption(args.flag("--preempt"))
+            })
+            .collect();
+        let mut router = herov2::fleet::Router::new(boards).with_route(route);
+        for spec in tenants {
+            router.tenant(spec);
+        }
+        for tj in &stream {
+            let tenant = match &tj.tenant {
+                Some(name) => router.tenant_named(name),
+                None => herov2::fleet::DEFAULT_TENANT,
+            };
+            router.submit_for(tenant, tj.desc);
+        }
+        let mut sess = Session::with_router(router);
+        if let Err(e) = sess.drain() {
+            eprintln!("fleet error: {e}");
+            return 1;
+        }
+        if args.flag("--events") {
+            print!("{}", sess.events().expect("fleet session renders events"));
+        }
+        let report = sess.fleet_report().expect("fleet session reports");
+        println!("{report}");
+        let verify_failures: usize = report.boards.iter().map(|b| b.verify_failures).sum();
+        if verify_failures > 0 {
+            eprintln!("VERIFICATION FAILED for {verify_failures} job(s)");
+            return 1;
+        }
+        return 0;
+    }
+    // Single-board serving: a tenant-tagged trace has no tenants to bill.
+    if let Some(tj) = stream.iter().find(|tj| tj.tenant.is_some()) {
+        eprintln!(
+            "trace bills jobs to tenant {:?}, but tenancy is a fleet feature — \
+             replay it with --fleet N",
+            tj.tenant.as_deref().unwrap_or_default()
+        );
+        return 2;
+    }
+    let stream: Vec<synth::JobDesc> = stream.into_iter().map(|tj| tj.desc).collect();
+    println!(
+        "serving {} jobs on {} (pool {}, policy {}, placement {}, seed {seed})",
+        stream.len(),
+        cfg.name,
+        pool,
+        policy.label(),
+        placement.label()
+    );
     let mut sched = if args.flag("--mixed-widths") {
         let widths = [64u32, 32, 128];
         let cfgs: Vec<_> =

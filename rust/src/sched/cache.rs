@@ -293,6 +293,21 @@ impl BinaryCache {
         fill(&mut self.ir_map, &mut self.stats, &key, compile, false)?;
         Ok(self.ir_map.get(&key).unwrap().lowered.clone())
     }
+
+    /// Read-only warmth check: is a binary for `key` already cached? Unlike
+    /// [`BinaryCache::probe`] this never compiles or fills — it exists for
+    /// cross-board affinity scoring (`fleet`), where a router asks many
+    /// boards the same question and must not mutate any of them. Always
+    /// `false` with caching disabled (nothing is ever retained).
+    pub fn contains(&self, key: &BinKey) -> bool {
+        self.enabled && self.map.contains_key(key)
+    }
+
+    /// Read-only warmth check for the [`IrKey`] space (see
+    /// [`BinaryCache::contains`]).
+    pub fn contains_ir(&self, key: &IrKey) -> bool {
+        self.enabled && self.ir_map.contains_key(key)
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +418,38 @@ mod tests {
         let (_, c3) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
         assert!(c3 > 0);
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn contains_is_read_only_and_false_when_disabled() {
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let key = key_for(&cfg, &w, Variant::Handwritten, 8);
+        let mut c = BinaryCache::new(true);
+        assert!(!c.contains(&key), "cold cache has nothing");
+        assert_eq!(c.stats.misses, 0, "contains never compiles");
+        c.probe(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(c.contains(&key), "probe fills the entry contains sees");
+        // Disabled cache: probe cannot retain, contains stays false.
+        let mut off = BinaryCache::new(false);
+        off.probe(&cfg, &w, Variant::Handwritten, 8).unwrap();
+        assert!(!off.contains(&key));
+    }
+
+    #[test]
+    fn contains_ir_tracks_the_ir_key_space() {
+        use crate::sched::job::kernel_content_key;
+        let cfg = aurora();
+        let w = workloads::gemm::build(12);
+        let content = kernel_content_key(&w.handwritten, false);
+        let key = ir_key_for(&cfg, content, 8);
+        let mut c = BinaryCache::new(true);
+        assert!(!c.contains_ir(&key));
+        c.probe_ir(&cfg, &w.handwritten, false, 8, content).unwrap();
+        assert!(c.contains_ir(&key));
+        // The BinKey space is disjoint: warming an IR entry does not warm
+        // the registry entry for the same kernel.
+        assert!(!c.contains(&key_for(&cfg, &w, Variant::Handwritten, 8)));
     }
 
     #[test]

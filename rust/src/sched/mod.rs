@@ -784,6 +784,19 @@ impl Scheduler {
         &self.cfg
     }
 
+    /// The instance pool, read-only — the fleet router scores candidate
+    /// boards against each pool's occupancy without disturbing it.
+    pub fn pool(&self) -> &InstancePool {
+        &self.pool
+    }
+
+    /// The binary cache, read-only — the fleet router's affinity scoring
+    /// asks which boards already hold a kernel's lowered binary
+    /// ([`cache::BinaryCache::contains`]/[`cache::BinaryCache::contains_ir`]).
+    pub fn cache(&self) -> &BinaryCache {
+        &self.cache
+    }
+
     /// Jobs submitted so far (including rejected/split ones).
     pub fn submitted(&self) -> usize {
         self.jobs.len()

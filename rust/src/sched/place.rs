@@ -102,9 +102,28 @@ pub fn scores(
     dma_bytes: u64,
     priority: bool,
 ) -> Vec<SlotScore> {
+    scores_from(pool, &[], arrival, predicted_cycles, dma_bytes, priority)
+}
+
+/// [`scores`] with an explicit per-slot availability floor: slot `i` cannot
+/// open a window before `floor[i]` even if its port frees earlier (missing
+/// entries floor at 0, so `&[]` reduces to plain [`scores`]). This is what
+/// lets the fleet router ([`crate::fleet`]) score a board through exactly
+/// this engine while layering its own *projected* occupancy — jobs already
+/// routed to the board but not yet drained — on top of the pool's real
+/// port state.
+pub fn scores_from(
+    pool: &InstancePool,
+    floor: &[u64],
+    arrival: u64,
+    predicted_cycles: u64,
+    dma_bytes: u64,
+    priority: bool,
+) -> Vec<SlotScore> {
     (0..pool.len())
         .map(|i| {
-            let start = arrival.max(pool.free_at(i));
+            let free = pool.free_at(i).max(floor.get(i).copied().unwrap_or(0));
+            let start = arrival.max(free);
             // The occupancy proxy: the job's static prediction, floored by
             // its uncontended DRAM service time at this slot's drain rate
             // (a narrow heterogeneous slot can be DMA-bound even when the
@@ -308,6 +327,24 @@ mod tests {
         let cand = |predicted| Candidate { arrival: 0, predicted, dma_bytes: 0, priority: false };
         assert_eq!(choose_joint(&p, &[cand(100), cand(10)]), (1, 0));
         assert_eq!(choose_joint(&p, &[cand(100), cand(100)]), (0, 0));
+    }
+
+    #[test]
+    fn floored_scores_delay_starts_without_touching_the_ledger() {
+        let p = InstancePool::homogeneous(&aurora(), 2, BoardSpec::uncontended());
+        // No floor: both slots open at arrival.
+        let base = scores_from(&p, &[], 10, 100, 0, false);
+        assert_eq!((base[0].start, base[1].start), (10, 10));
+        // A projected backlog on slot 0 pushes only that slot's window; a
+        // short floor list leaves the uncovered slot at its port state.
+        let floored = scores_from(&p, &[500], 10, 100, 0, false);
+        assert_eq!((floored[0].start, floored[0].finish), (500, 600));
+        assert_eq!((floored[1].start, floored[1].finish), (10, 110));
+        // Floors below the port's own free_at are inert.
+        let mut q = InstancePool::homogeneous(&aurora(), 1, BoardSpec::uncontended());
+        q.assign(0, 0, 300, 0, false);
+        let s = scores_from(&q, &[100], 0, 50, 0, false);
+        assert_eq!(s[0].start, 300);
     }
 
     #[test]

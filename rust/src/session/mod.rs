@@ -57,6 +57,14 @@
 //!   *time*, never the numerics a launch returns
 //!   ([`crate::sched::learn`], `sched/README.md`).
 //!
+//! * **Fleet serving** scales past one carrier board:
+//!   [`Session::fleet`] (or [`Session::with_router`]) fronts N
+//!   independent boards with the [`crate::fleet`] router — tenant-tagged
+//!   named job streams with per-tenant quotas, affinity-aware
+//!   cross-board placement, a merged [`crate::fleet::FleetReport`]
+//!   ([`Session::fleet_report`]) and interleaved per-board event logs.
+//!   Kernel launches and SVM stay single-board features.
+//!
 //! Non-chained launches are snapshot-in / copy-out exactly as before:
 //! argument buffers are captured at `submit` and written back at `wait`,
 //! so a pooled launch behaves exactly like a single-accelerator one — and
@@ -240,6 +248,10 @@ enum LaunchState {
 enum Backend {
     Single { cfg: HeroConfig, cache: BinaryCache },
     Pool { sched: Scheduler },
+    /// N independent boards behind the fleet router ([`crate::fleet`]).
+    /// Serves named job streams through [`Session::router_mut`]; kernel
+    /// launches and SVM need a single board and are rejected.
+    Fleet { router: crate::fleet::Router },
 }
 
 /// The unified offload session. See the [`session`](crate::session)
@@ -287,11 +299,57 @@ impl Session {
         }
     }
 
+    /// A session over a *fleet*: `boards` identical carrier boards of
+    /// `pool_per_board` instances each behind the front-tier router
+    /// ([`crate::fleet::Router`], predicted-finish routing, the unlimited
+    /// default tenant). Named job streams flow through
+    /// [`Session::router_mut`]; [`Session::drain`],
+    /// [`Session::fleet_report`] and [`Session::events`] cover the whole
+    /// fleet. For custom routing, tenants or per-board configuration,
+    /// build the router yourself and use [`Session::with_router`].
+    pub fn fleet(cfg: HeroConfig, boards: usize, pool_per_board: usize) -> Session {
+        Session::with_router(crate::fleet::Router::homogeneous(&cfg, boards, pool_per_board))
+    }
+
+    /// A session over an explicitly configured fleet router.
+    pub fn with_router(router: crate::fleet::Router) -> Session {
+        Session {
+            slots: Vec::new(),
+            free_ids: Vec::new(),
+            launches: Vec::new(),
+            single_consumers: std::collections::HashMap::new(),
+            backend: Backend::Fleet { router },
+        }
+    }
+
+    /// The fleet router, read-only (fleet sessions).
+    pub fn router(&self) -> Result<&crate::fleet::Router> {
+        match &self.backend {
+            Backend::Fleet { router } => Ok(router),
+            _ => bail!("this session does not front a fleet (build one with Session::fleet)"),
+        }
+    }
+
+    /// The fleet router (fleet sessions) — the submission surface for
+    /// tenant-tagged job streams ([`crate::fleet::Router::submit_for`]).
+    pub fn router_mut(&mut self) -> Result<&mut crate::fleet::Router> {
+        match &mut self.backend {
+            Backend::Fleet { router } => Ok(router),
+            _ => bail!("this session does not front a fleet (build one with Session::fleet)"),
+        }
+    }
+
+    /// Merged fleet report (fleet sessions).
+    pub fn fleet_report(&self) -> Result<crate::fleet::FleetReport> {
+        Ok(self.router()?.report())
+    }
+
     /// The session's base platform configuration.
     pub fn config(&self) -> &HeroConfig {
         match &self.backend {
             Backend::Single { cfg, .. } => cfg,
             Backend::Pool { sched } => sched.config(),
+            Backend::Fleet { router } => router.board(0).config(),
         }
     }
 
@@ -690,6 +748,9 @@ impl Session {
         match &self.backend {
             Backend::Pool { sched } => Ok(sched),
             Backend::Single { .. } => bail!("named job streams need a pooled session"),
+            Backend::Fleet { .. } => {
+                bail!("fleet sessions serve job streams through Session::router_mut")
+            }
         }
     }
 
@@ -697,6 +758,9 @@ impl Session {
         match &mut self.backend {
             Backend::Pool { sched } => Ok(sched),
             Backend::Single { .. } => bail!("named job streams need a pooled session"),
+            Backend::Fleet { .. } => {
+                bail!("fleet sessions serve job streams through Session::router_mut")
+            }
         }
     }
 
@@ -720,10 +784,18 @@ impl Session {
     /// and the first failure is returned at the end.
     pub fn drain(&mut self) -> Result<()> {
         let mut first_err = None;
-        if let Backend::Pool { sched } = &mut self.backend {
-            if let Err(e) = sched.drain() {
-                first_err = Some(e);
+        match &mut self.backend {
+            Backend::Pool { sched } => {
+                if let Err(e) = sched.drain() {
+                    first_err = Some(e);
+                }
             }
+            Backend::Fleet { router } => {
+                if let Err(e) = router.drain() {
+                    first_err = Some(e);
+                }
+            }
+            Backend::Single { .. } => {}
         }
         for id in 0..self.launches.len() {
             if matches!(
@@ -749,9 +821,14 @@ impl Session {
     /// Rendered scheduler event log (pooled sessions) — covers pooled
     /// kernel launches too: submit/compile/dispatch/complete per launch,
     /// plus `ready` lines when a chained launch's last producer settles
-    /// ([`crate::trace::SchedEvent::DependencyReady`]).
+    /// ([`crate::trace::SchedEvent::DependencyReady`]). Fleet sessions
+    /// return all boards' logs interleaved on one timeline, each line
+    /// prefixed with its board id ([`crate::fleet::Router::events`]).
     pub fn events(&self) -> Result<String> {
-        Ok(self.sched()?.trace.render())
+        match &self.backend {
+            Backend::Fleet { router } => Ok(router.events()),
+            _ => Ok(self.sched()?.trace.render()),
+        }
     }
 
     // --- shared virtual memory (pooled sessions) --------------------------
@@ -763,7 +840,7 @@ impl Session {
     pub fn svm_alloc_f32(&mut self, data: Vec<f32>) -> Result<u64> {
         match &mut self.backend {
             Backend::Pool { sched } => sched.svm_alloc_f32(data),
-            Backend::Single { .. } => {
+            Backend::Single { .. } | Backend::Fleet { .. } => {
                 bail!("SVM buffers need a pooled session with SVM serving enabled")
             }
         }
@@ -1021,6 +1098,10 @@ impl LaunchBuilder<'_> {
             })
             .collect();
         let state = match &mut self.session.backend {
+            Backend::Fleet { .. } => bail!(
+                "kernel launches are not routed across a fleet; use a single or pooled \
+                 session (fleet sessions serve named job streams via Session::router_mut)"
+            ),
             Backend::Single { .. } => LaunchState::PendingSingle(Box::new(SingleSpec {
                 kernel: self.kernel,
                 autodma: self.autodma,
@@ -1335,6 +1416,33 @@ mod tests {
         let run = sess.submit_workload(&w, Variant::Handwritten, 8, 1).unwrap();
         let err = sess.wait(&run.launch).unwrap_err();
         assert!(err.to_string().contains("rejected"), "{err}");
+    }
+
+    #[test]
+    fn fleet_session_serves_named_streams() {
+        let mut sess = Session::fleet(aurora(), 2, 1);
+        let jobs = crate::workloads::synth::tiny_jobs(6, 11);
+        let handles: Vec<_> = {
+            let router = sess.router_mut().unwrap();
+            jobs.iter().map(|j| router.submit(*j)).collect()
+        };
+        sess.drain().unwrap();
+        for h in &handles {
+            assert!(sess.router().unwrap().poll(*h).is_some());
+        }
+        let report = sess.fleet_report().unwrap();
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.boards.len(), 2);
+        assert!(sess.events().unwrap().contains("[b0] "));
+        // Fleet sessions reject single-board surfaces instead of panicking.
+        assert!(sess.report().is_err());
+        assert!(sess.submit_jobs(&[]).is_err());
+        assert!(sess.svm_alloc_f32(vec![0.0; 4]).is_err());
+        let x = sess.buffer_from_f32(&[1.0; 16]);
+        let err = sess.launch(&scale_kernel(16)).args(&[&x]).submit().unwrap_err();
+        assert!(err.to_string().contains("fleet"), "{err}");
+        // A pooled session is not a fleet.
+        assert!(Session::pool(aurora(), 1).router().is_err());
     }
 
     #[test]

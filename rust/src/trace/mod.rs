@@ -247,6 +247,68 @@ pub enum SchedEvent {
     Preempted { job: usize, by: usize, at: u64 },
 }
 
+impl SchedEvent {
+    /// The simulated cycle this event is stamped with, when it carries one.
+    /// Submission/rejection/compile events are untimed (they happen in host
+    /// order, not board time). Used by the fleet renderer to interleave
+    /// per-board traces on a merged timeline ([`crate::fleet`]).
+    pub fn cycle(&self) -> Option<u64> {
+        match self {
+            SchedEvent::Dispatched { start, .. } => Some(*start),
+            SchedEvent::Completed { end, .. } => Some(*end),
+            SchedEvent::DependencyReady { at, .. } => Some(*at),
+            SchedEvent::Preempted { at, .. } => Some(*at),
+            _ => None,
+        }
+    }
+
+    /// Render this event as the one-line form `hero serve --trace` prints.
+    /// Shared by [`SchedTrace::render`] (single board) and the fleet's
+    /// board-prefixed merged rendering, so the two never drift.
+    pub fn render_line(&self) -> String {
+        match self {
+            SchedEvent::Submitted { job, priority } => {
+                if priority.is_high() {
+                    format!("submit    job {job} [high]")
+                } else {
+                    format!("submit    job {job}")
+                }
+            }
+            SchedEvent::Rejected { job, reason } => format!("reject    job {job}: {reason}"),
+            SchedEvent::Split { job, children } => {
+                format!("split     job {job} -> {children:?}")
+            }
+            SchedEvent::DependencyReady { job, producer, at } => format!(
+                "ready     job {job} (producer {producer} settled; effective arrival \
+                 cycle {at})"
+            ),
+            SchedEvent::CompileMiss { job, cycles } => {
+                format!("compile   job {job} (miss, {cycles} cy)")
+            }
+            SchedEvent::CompileHit { job } => format!("compile   job {job} (cache hit)"),
+            SchedEvent::Dispatched { job, instance, start, batched } => format!(
+                "dispatch  job {job} -> instance {instance} at cycle {start} (+{batched} batched)"
+            ),
+            SchedEvent::Completed { job, instance, end, dram_stall } => {
+                if *dram_stall > 0 {
+                    format!(
+                        "complete  job {job} on instance {instance} at cycle {end} \
+                         ({dram_stall} cy DRAM stall)"
+                    )
+                } else {
+                    format!("complete  job {job} on instance {instance} at cycle {end}")
+                }
+            }
+            SchedEvent::SvmResolved { job, mode, cycles, hits, misses } => format!(
+                "svm       job {job} ({mode}: {cycles} cy, {hits} hit(s), {misses} miss(es))"
+            ),
+            SchedEvent::Preempted { job, by, at } => {
+                format!("preempt   job {job} displaced by job {by} at cycle {at}")
+            }
+        }
+    }
+}
+
 /// An append-only scheduler event log.
 #[derive(Debug, Default)]
 pub struct SchedTrace {
@@ -277,47 +339,7 @@ impl SchedTrace {
     pub fn render(&self) -> String {
         let mut out = String::new();
         for e in &self.events {
-            let line = match e {
-                SchedEvent::Submitted { job, priority } => {
-                    if priority.is_high() {
-                        format!("submit    job {job} [high]")
-                    } else {
-                        format!("submit    job {job}")
-                    }
-                }
-                SchedEvent::Rejected { job, reason } => format!("reject    job {job}: {reason}"),
-                SchedEvent::Split { job, children } => {
-                    format!("split     job {job} -> {children:?}")
-                }
-                SchedEvent::DependencyReady { job, producer, at } => format!(
-                    "ready     job {job} (producer {producer} settled; effective arrival \
-                     cycle {at})"
-                ),
-                SchedEvent::CompileMiss { job, cycles } => {
-                    format!("compile   job {job} (miss, {cycles} cy)")
-                }
-                SchedEvent::CompileHit { job } => format!("compile   job {job} (cache hit)"),
-                SchedEvent::Dispatched { job, instance, start, batched } => format!(
-                    "dispatch  job {job} -> instance {instance} at cycle {start} (+{batched} batched)"
-                ),
-                SchedEvent::Completed { job, instance, end, dram_stall } => {
-                    if *dram_stall > 0 {
-                        format!(
-                            "complete  job {job} on instance {instance} at cycle {end} \
-                             ({dram_stall} cy DRAM stall)"
-                        )
-                    } else {
-                        format!("complete  job {job} on instance {instance} at cycle {end}")
-                    }
-                }
-                SchedEvent::SvmResolved { job, mode, cycles, hits, misses } => format!(
-                    "svm       job {job} ({mode}: {cycles} cy, {hits} hit(s), {misses} miss(es))"
-                ),
-                SchedEvent::Preempted { job, by, at } => {
-                    format!("preempt   job {job} displaced by job {by} at cycle {at}")
-                }
-            };
-            out.push_str(&line);
+            out.push_str(&e.render_line());
             out.push('\n');
         }
         out

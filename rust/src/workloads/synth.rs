@@ -17,8 +17,11 @@
 //!
 //! Besides the synthetic generators, [`parse_trace`] replays production
 //! traffic from a newline-delimited trace file
-//! (`arrival-cycle kernel size [variant] [threads] [seed] [priority]`), the
-//! `hero serve --trace <file>` ingestion path.
+//! (`arrival-cycle kernel size [variant] [threads] [seed] [priority]
+//! [tenant]`), the `hero serve --trace <file>` ingestion path. The
+//! optional trailing tenant column bills a job to a named fleet tenant
+//! ([`crate::fleet`]); anything after it is a hard parse error, never a
+//! silently ignored field.
 
 use super::Workload;
 use crate::bench_harness::Variant;
@@ -152,22 +155,35 @@ pub fn pressure_mix_jobs(n: usize, seed: u64) -> Vec<JobDesc> {
         .collect()
 }
 
+/// One parsed trace line: the job plus the fleet tenant it bills to, if
+/// the line named one (`None` jobs go to the default tenant / a plain
+/// scheduler).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceJob {
+    pub desc: JobDesc,
+    pub tenant: Option<String>,
+}
+
 /// Parse a newline-delimited job trace. Line format (whitespace-separated):
 ///
 /// ```text
-/// <arrival-cycle> <kernel> <size> [variant] [threads] [seed] [priority]
+/// <arrival-cycle> <kernel> <size> [variant] [threads] [seed] [priority] [tenant]
 /// ```
 ///
 /// `#` starts a comment; blank lines are skipped. Omitted fields default to
-/// `handwritten`, 8 threads, a deterministic per-line seed, and `normal`
-/// priority (the optional trailing `high`/`hi` marks a latency-critical
-/// job). The parse is strict about what it does understand — unknown
-/// kernels, variants or priorities are errors, not silently dropped jobs.
+/// `handwritten`, 8 threads, a deterministic per-line seed, `normal`
+/// priority (the optional `high`/`hi` marks a latency-critical job) and no
+/// tenant (the trailing tenant column bills the job to a named fleet
+/// tenant — `hero serve --fleet N --trace <file>`). The parse is strict
+/// about what it does understand — unknown kernels, variants or
+/// priorities are errors, not silently dropped jobs, and so is anything
+/// *after* the tenant column: a malformed or misremembered extra field
+/// fails the replay loudly instead of silently changing which jobs run.
 /// Jobs are returned sorted by arrival cycle (stable, so same-cycle jobs
 /// keep file order): the scheduler dispatches in submission order, and
 /// replaying a later arrival first would serialize earlier jobs behind it.
-pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
-    let mut jobs = Vec::new();
+pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>, String> {
+    let mut jobs: Vec<TraceJob> = Vec::new();
     for (idx, raw) in text.lines().enumerate() {
         let ln = idx + 1;
         let line = raw.split('#').next().unwrap_or("").trim();
@@ -178,7 +194,15 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
         if f.len() < 3 {
             return Err(format!(
                 "trace line {ln}: expected \
-                 `arrival kernel size [variant] [threads] [seed] [priority]`, got {line:?}"
+                 `arrival kernel size [variant] [threads] [seed] [priority] [tenant]`, \
+                 got {line:?}"
+            ));
+        }
+        if f.len() > 8 {
+            return Err(format!(
+                "trace line {ln}: unexpected trailing field(s) {:?} — the format is \
+                 `arrival kernel size [variant] [threads] [seed] [priority] [tenant]`",
+                &f[8..]
             ));
         }
         let arrival: u64 =
@@ -207,9 +231,13 @@ pub fn parse_trace(text: &str) -> Result<Vec<JobDesc>, String> {
             Some(p) => Priority::parse(p)
                 .ok_or_else(|| format!("trace line {ln}: unknown priority {p:?}"))?,
         };
-        jobs.push(JobDesc { kernel, size, variant, threads, seed, arrival, priority });
+        let tenant = f.get(7).map(|t| t.to_string());
+        jobs.push(TraceJob {
+            desc: JobDesc { kernel, size, variant, threads, seed, arrival, priority },
+            tenant,
+        });
     }
-    jobs.sort_by_key(|j| j.arrival);
+    jobs.sort_by_key(|j| j.desc.arrival);
     Ok(jobs)
 }
 
@@ -287,20 +315,26 @@ mod tests {
         assert_eq!(jobs.len(), 3);
         assert_eq!(
             jobs[0],
-            JobDesc {
-                kernel: "gemm",
-                size: 12,
-                variant: Variant::Handwritten,
-                threads: 8,
-                seed: 7,
-                arrival: 0,
-                priority: Priority::Normal,
+            TraceJob {
+                desc: JobDesc {
+                    kernel: "gemm",
+                    size: 12,
+                    variant: Variant::Handwritten,
+                    threads: 8,
+                    seed: 7,
+                    arrival: 0,
+                    priority: Priority::Normal,
+                },
+                tenant: None,
             }
         );
-        assert_eq!((jobs[1].kernel, jobs[1].arrival, jobs[1].threads), ("atax", 150, 8));
-        assert_eq!(jobs[2].variant, Variant::AutoDma);
-        assert_eq!(jobs[2].threads, 4);
-        assert_eq!(jobs[2].arrival, 40_000);
+        assert_eq!(
+            (jobs[1].desc.kernel, jobs[1].desc.arrival, jobs[1].desc.threads),
+            ("atax", 150, 8)
+        );
+        assert_eq!(jobs[2].desc.variant, Variant::AutoDma);
+        assert_eq!(jobs[2].desc.threads, 4);
+        assert_eq!(jobs[2].desc.arrival, 40_000);
         // Determinism of derived seeds.
         assert_eq!(parse_trace(text).unwrap(), jobs);
     }
@@ -309,7 +343,7 @@ mod tests {
     fn trace_sorts_by_arrival() {
         let jobs = parse_trace("900 gemm 12\n0 atax 24\n900 bicg 24\n").unwrap();
         assert_eq!(
-            jobs.iter().map(|j| (j.arrival, j.kernel)).collect::<Vec<_>>(),
+            jobs.iter().map(|j| (j.desc.arrival, j.desc.kernel)).collect::<Vec<_>>(),
             // Stable: the two cycle-900 jobs keep their file order.
             vec![(0, "atax"), (900, "gemm"), (900, "bicg")]
         );
@@ -325,9 +359,24 @@ mod tests {
         )
         .unwrap();
         assert_eq!(
-            jobs.iter().map(|j| j.priority).collect::<Vec<_>>(),
+            jobs.iter().map(|j| j.desc.priority).collect::<Vec<_>>(),
             vec![Priority::High, Priority::Normal, Priority::High, Priority::Normal]
         );
+    }
+
+    #[test]
+    fn trace_parses_optional_tenant_column() {
+        let jobs = parse_trace(
+            "0 gemm 12 handwritten 8 7 high interactive\n\
+             10 atax 24 handwritten 8 9 normal batch\n\
+             20 bicg 24\n",
+        )
+        .unwrap();
+        assert_eq!(
+            jobs.iter().map(|j| j.tenant.as_deref()).collect::<Vec<_>>(),
+            vec![Some("interactive"), Some("batch"), None]
+        );
+        assert_eq!(jobs[0].desc.priority, Priority::High, "priority still parses before it");
     }
 
     #[test]
@@ -339,6 +388,31 @@ mod tests {
         assert!(parse_trace("0 gemm twelve").unwrap_err().contains("bad size"));
         assert!(
             parse_trace("0 gemm 12 handwritten 8 7 urgent")
+                .unwrap_err()
+                .contains("unknown priority")
+        );
+    }
+
+    #[test]
+    fn trace_rejects_trailing_fields_after_tenant() {
+        // A 9th field is never valid — erroring beats silently ignoring a
+        // field the author believed did something.
+        let err =
+            parse_trace("0 gemm 12 handwritten 8 7 high interactive extra").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("unexpected trailing field"), "{err}");
+        assert!(err.contains("extra"), "{err}");
+        let err = parse_trace(
+            "0 gemm 12\n5 atax 24 handwritten 8 7 normal batch oops why",
+        )
+        .unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("[\"oops\", \"why\"]"), "{err}");
+        // A bad field *in* the tenant position still errors where it is
+        // recognizable as something else gone wrong (priority typo shifts
+        // everything right): the priority slot rejects it first.
+        assert!(
+            parse_trace("0 gemm 12 handwritten 8 7 urgent batch")
                 .unwrap_err()
                 .contains("unknown priority")
         );

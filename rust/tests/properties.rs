@@ -870,3 +870,73 @@ fn prop_sched_selftuning_never_touches_numerics() {
         },
     );
 }
+
+#[test]
+fn prop_fleet_of_one_is_bit_identical_to_plain_scheduler() {
+    // The fleet router's degenerate-identity guarantee: a fleet of one
+    // board with the single default tenant is a zero-cost wrapper. The
+    // board must see byte-identical submissions, so its *full event
+    // sequence* — not just the digest — matches driving the scheduler
+    // directly, on fuzzed streams, under both placement engines, with the
+    // self-tuning features on and off, and under both routing policies
+    // (with one board there is nothing to route between).
+    use herov2::fleet::{RoutePolicy, Router};
+    use herov2::sched::{Placement, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 7), rng.range(1, 1 << 20), rng.bool(), rng.bool()),
+        |&(n, seed, learn, ahead)| {
+            let jobs: Vec<synth::JobDesc> = synth::tiny_jobs(n, seed)
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let mut j = *j;
+                    j.arrival = i as u64 * 25;
+                    j
+                })
+                .collect();
+            for placement in [Placement::EarliestFree, Placement::Pressure] {
+                let mk = || {
+                    Scheduler::new(aurora(), 2, Policy::Sjf)
+                        .with_placement(placement)
+                        .with_verify(false)
+                        .with_learning(learn)
+                        .with_lookahead(if ahead { 4 } else { 1 })
+                };
+                let mut solo = mk();
+                solo.submit_all(&jobs);
+                solo.drain().map_err(|e| e.to_string())?;
+                let solo_report = solo.report();
+                for route in [RoutePolicy::Finish, RoutePolicy::RoundRobin] {
+                    let mut fleet = Router::new(vec![mk()]).with_route(route);
+                    for j in &jobs {
+                        fleet.submit(*j);
+                    }
+                    fleet.drain().map_err(|e| e.to_string())?;
+                    if solo.trace.events != fleet.boards()[0].trace.events {
+                        return Err(format!(
+                            "{placement:?} learn={learn} ahead={ahead} {route:?}: \
+                             fleet-of-1 event sequence diverged from the plain scheduler"
+                        ));
+                    }
+                    let fr = fleet.report();
+                    if fr.digest != solo_report.digest
+                        || fr.makespan_cycles != solo_report.makespan_cycles
+                        || fr.completed != solo_report.completed
+                    {
+                        return Err(format!(
+                            "{placement:?} {route:?}: fleet-of-1 report diverged \
+                             (digest {:#x} vs {:#x})",
+                            fr.digest, solo_report.digest
+                        ));
+                    }
+                    if fr.affinity_decisions != 0 {
+                        return Err("a single-board fleet must never score routes".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
