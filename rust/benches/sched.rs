@@ -40,6 +40,10 @@
 //!   moves time, never numerics).
 //! * Per-tenant in-flight quotas stop a noisy tenant's burst from
 //!   degrading a victim tenant's p95 turnaround on a shared fleet.
+//! * Schedule-time AutoDMA tuning (`--autotune`) strictly beats the
+//!   single default recipe's makespan on a mixed-size GEMM/stencil
+//!   stream — one memoized knob search per kernel, and bit-identical
+//!   digests (tuning moves time, never numerics).
 //!
 //! Every headline number is emitted to `BENCH_sched.json`
 //! (`bench_harness::emit`) for the `bench-gate` CI job: the sim is
@@ -769,6 +773,69 @@ fn main() {
             capped.tenant("noisy").expect("noisy").admitted as u64,
         );
         println!("tenant quota isolates the noisy neighbor: OK");
+    }
+
+    // --- autotune: schedule-time AutoDMA recipe search --------------------
+    // A mixed-size GEMM/stencil stream on the sizes where the default
+    // recipe's halving descent overshoots: gemm N=112 halves its tile side
+    // 97 -> 48 (a 3x3 tile grid) where the power-of-two side 64 fits
+    // outright (2x2), and conv2d N=182 halves 119 -> 59 (4x4) where 64
+    // fits (3x3). `--autotune` searches the knob space once per kernel,
+    // memoizes the winner, and dispatches its binary; every candidate
+    // computes the same values, so only the makespan moves.
+    {
+        use herov2::bench_harness::Variant;
+
+        let stream: Vec<synth::JobDesc> = [("gemm", 112usize), ("conv2d", 182), ("gemm", 112), ("conv2d", 182)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(kernel, size))| synth::JobDesc {
+                kernel,
+                size,
+                variant: Variant::AutoDma,
+                threads: 8,
+                seed: 300 + i as u64,
+                arrival: 0,
+                priority: Priority::Normal,
+            })
+            .collect();
+        println!(
+            "\nautotune study: {} mixed-size autodma jobs (gemm 112 / conv2d 182) on pool 2\n",
+            stream.len()
+        );
+        let serve_tuned = |autotune: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Fifo)
+                .with_batching(false)
+                .with_autotune(autotune);
+            s.submit_all(&stream);
+            s.drain().expect("drain");
+            s.report()
+        };
+        let plain = serve_tuned(false);
+        let tuned = serve_tuned(true);
+        for r in [&plain, &tuned] {
+            assert_eq!(r.completed, stream.len());
+            assert_eq!(r.verify_failures, 0);
+        }
+        assert_eq!(plain.digest, tuned.digest, "tuning must never change numerics");
+        assert_eq!((plain.tune_searches, plain.tune_hits), (0, 0));
+        assert_eq!(tuned.tune_searches, 2, "one search per distinct kernel");
+        assert_eq!(tuned.tune_hits, 2, "repeats must hit the memo table");
+        println!(
+            "single-recipe {} cy vs tuned {} cy ({} search(es), {} memo hit(s))",
+            plain.makespan_cycles, tuned.makespan_cycles, tuned.tune_searches, tuned.tune_hits
+        );
+        assert!(
+            tuned.makespan_cycles < plain.makespan_cycles,
+            "the tuned schedule must strictly beat the single recipe ({} vs {})",
+            tuned.makespan_cycles,
+            plain.makespan_cycles
+        );
+        out.metric("autotune.off.makespan_cycles", plain.makespan_cycles);
+        out.metric("autotune.on.makespan_cycles", tuned.makespan_cycles);
+        out.metric("autotune.searches", tuned.tune_searches);
+        out.digest("autotune.digest", tuned.digest);
+        println!("tuned recipes strictly faster, digests bit-identical: OK");
     }
 
     let path = out.emit().expect("emit BENCH_sched.json");

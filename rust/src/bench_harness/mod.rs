@@ -94,6 +94,22 @@ pub fn compile_kernel(
     compiler::compile(k, &opts, ad.as_ref())
 }
 
+/// Lower a kernel under a tuned AutoDMA recipe ([`crate::compiler::autotune`]).
+/// Same thread clamping as [`compile_kernel`]; the variant supplies (or
+/// suppresses) the AutoDMA options. `TunedVariant::default_recipe()` compiles
+/// bit-identically to `compile_kernel(cfg, k, true, threads)`.
+pub fn compile_kernel_tuned(
+    cfg: &HeroConfig,
+    k: &compiler::Kernel,
+    variant: &compiler::TunedVariant,
+    threads: u32,
+) -> Result<(compiler::Lowered, Option<AutoDmaReport>)> {
+    let mut opts = LowerOpts::for_config(cfg);
+    opts.n_cores = threads.min(cfg.accel.cores_per_cluster as u32);
+    let ad = variant.autodma_opts(cfg);
+    compiler::compile(k, &opts, ad.as_ref())
+}
+
 /// Compile one workload variant for `threads` OpenMP threads, without
 /// running it. The scheduler's binary cache is built on this entry point.
 pub fn compile_workload(

@@ -174,20 +174,26 @@ fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
         ));
     }
     let mut failed = false;
-    let mut bootstraps: Vec<String> = Vec::new();
+    let mut bootstraps: Vec<Bootstrap> = Vec::new();
     for bpath in &baselines {
         let name = bpath.file_name().unwrap().to_string_lossy().into_owned();
         let baseline = load(bpath)?;
-        if baseline.bootstrap {
-            bootstraps.push(name.clone());
-        }
         let epath = emitted_dir.join(&name);
         if !epath.exists() {
+            if baseline.bootstrap {
+                bootstraps.push(Bootstrap { name: name.clone(), baseline_only: Vec::new() });
+            }
             println!("FAIL {name}: bench was not run (no {})", epath.display());
             failed = true;
             continue;
         }
         let emitted = load(&epath)?;
+        if baseline.bootstrap {
+            bootstraps.push(Bootstrap {
+                name: name.clone(),
+                baseline_only: baseline_only_keys(&emitted, &baseline),
+            });
+        }
         let c = compare(&emitted, &baseline);
         for n in &c.notices {
             println!("note {name}: {n}");
@@ -234,24 +240,66 @@ fn check(emitted_dir: &Path, baseline_dir: &Path) -> Result<i32, String> {
     Ok(if failed { 1 } else { 0 })
 }
 
+/// One bootstrap-seeded baseline the gate is not yet enforcing, plus the
+/// keys it carries that the fresh emission does not.
+struct Bootstrap {
+    name: String,
+    baseline_only: Vec<String>,
+}
+
+/// Keys (metrics and digests) present in `baseline` but absent from
+/// `emitted` — hand-seeded expectations the bench does not emit yet, which
+/// a `bless` would silently drop because it copies the emitted file over
+/// the baseline wholesale.
+fn baseline_only_keys(emitted: &BenchFile, baseline: &BenchFile) -> Vec<String> {
+    baseline
+        .metrics
+        .keys()
+        .filter(|k| !emitted.metrics.contains_key(*k))
+        .map(|k| format!("metric {k}"))
+        .chain(
+            baseline
+                .digests
+                .keys()
+                .filter(|k| !emitted.digests.contains_key(*k))
+                .map(|k| format!("digest {k}")),
+        )
+        .collect()
+}
+
 /// The end-of-check summary naming every baseline still on hand-seeded
 /// `"bootstrap": true` values (`None` when the gate is fully strict).
+/// Baseline-only keys are listed per file: before this, only the
+/// emitted-but-unblessed direction was ever named, and a `bless` could
+/// silently drop a hand-seeded expectation the bench never learned to emit.
 fn bootstrap_summary(
-    bootstraps: &[String],
+    bootstraps: &[Bootstrap],
     emitted_dir: &Path,
     baseline_dir: &Path,
 ) -> Option<String> {
     if bootstraps.is_empty() {
         return None;
     }
-    Some(format!(
+    let names: Vec<&str> = bootstraps.iter().map(|b| b.name.as_str()).collect();
+    let mut s = format!(
         "note {} baseline file(s) still bootstrap-seeded ({}) — their numbers gate \
          nothing until `bench_gate bless {} {}` is run and committed",
         bootstraps.len(),
-        bootstraps.join(", "),
+        names.join(", "),
         emitted_dir.display(),
         baseline_dir.display()
-    ))
+    );
+    for b in bootstraps {
+        if !b.baseline_only.is_empty() {
+            s.push_str(&format!(
+                "\nnote {}: baseline-only key(s) with no emitted counterpart ({}) — \
+                 blessing now would drop them",
+                b.name,
+                b.baseline_only.join(", ")
+            ));
+        }
+    }
+    Some(s)
 }
 
 fn bless(emitted_dir: &Path, baseline_dir: &Path) -> Result<(), String> {
@@ -343,12 +391,19 @@ mod tests {
         assert!(parse("{\n  \"bench\": \"x\",\n  \"surprise\": 1\n}\n").is_err());
     }
 
+    fn seeded(name: &str, baseline_only: &[&str]) -> Bootstrap {
+        Bootstrap {
+            name: name.to_string(),
+            baseline_only: baseline_only.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     #[test]
     fn bootstrap_summary_names_every_seeded_baseline() {
         let (e, b) = (PathBuf::from("target/bench-json"), PathBuf::from("baselines"));
         assert_eq!(bootstrap_summary(&[], &e, &b), None, "a strict gate stays silent");
         let s = bootstrap_summary(
-            &["BENCH_sched.json".to_string(), "BENCH_offload.json".to_string()],
+            &[seeded("BENCH_sched.json", &[]), seeded("BENCH_offload.json", &[])],
             &e,
             &b,
         )
@@ -356,6 +411,43 @@ mod tests {
         assert!(s.contains("2 baseline file(s) still bootstrap-seeded"), "{s}");
         assert!(s.contains("BENCH_sched.json, BENCH_offload.json"), "{s}");
         assert!(s.contains("bench_gate bless target/bench-json baselines"), "{s}");
+        assert!(!s.contains("baseline-only"), "no phantom key warnings: {s}");
+    }
+
+    #[test]
+    fn bootstrap_summary_lists_baseline_only_keys() {
+        // Regression: keys hand-seeded into a bootstrap baseline but not
+        // yet emitted by the bench were never named anywhere (only the
+        // emitted-but-unblessed direction was), so a `bless` dropped them
+        // silently. The summary must call them out per file.
+        let base = parse(concat!(
+            "{\n  \"bench\": \"sched\",\n  \"bootstrap\": true,\n  \"metrics\": {\n",
+            "    \"autotune.mixed.makespan_cycles\": 900,\n",
+            "    \"mixed.pool1.makespan_cycles\": 1000\n  },\n",
+            "  \"digests\": {\n    \"autotune.mixed.digest\": \"0x0000000000000001\"\n  }\n}\n"
+        ))
+        .unwrap();
+        let emitted = parse(concat!(
+            "{\n  \"bench\": \"sched\",\n  \"metrics\": {\n",
+            "    \"mixed.pool1.makespan_cycles\": 1000\n  },\n  \"digests\": {\n  }\n}\n"
+        ))
+        .unwrap();
+        let only = baseline_only_keys(&emitted, &base);
+        assert_eq!(
+            only,
+            vec![
+                "metric autotune.mixed.makespan_cycles".to_string(),
+                "digest autotune.mixed.digest".to_string()
+            ]
+        );
+        let (e, b) = (PathBuf::from("em"), PathBuf::from("bl"));
+        let s = bootstrap_summary(&[seeded("BENCH_sched.json", &["metric autotune.x"])], &e, &b)
+            .unwrap();
+        assert!(s.contains("baseline-only key(s) with no emitted counterpart"), "{s}");
+        assert!(s.contains("metric autotune.x"), "{s}");
+        assert!(s.contains("blessing now would drop them"), "{s}");
+        // A fully-emitted bootstrap file adds no extra line.
+        assert_eq!(baseline_only_keys(&base, &base), Vec::<String>::new());
     }
 
     #[test]

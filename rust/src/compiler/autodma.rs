@@ -35,11 +35,28 @@ use anyhow::{bail, Result};
 pub struct AutoDmaOpts {
     /// L1 words available for user data (`hero_l1_capacity`), e.g. 28 Ki.
     pub l1_words: i64,
+    /// Starting tile side for the halve-until-fit descent (`None` = the
+    /// paper's `S = floor((L/N)^(1/D))` default). An infeasible override is
+    /// halved until the footprint fits, so any requested side degrades
+    /// deterministically. Only consulted when the nest needs tiling at all.
+    pub tile_side: Option<i64>,
+    /// Double-buffer the innermost tiled loop: ping-pong staging halves so
+    /// the next tile's loads overlap the current tile's compute (§2.2.2).
+    /// Doubles the staged footprint (the fit check uses half the budget)
+    /// and is skipped — reported as `false` — when no loop ends up tiled or
+    /// when a written group's tile regions could overlap across pipeline
+    /// steps (the transform is applied only when it provably preserves the
+    /// default recipe's values bit-for-bit).
+    pub double_buffer: bool,
 }
 
 impl AutoDmaOpts {
     pub fn for_config(cfg: &crate::config::HeroConfig) -> Self {
-        AutoDmaOpts { l1_words: cfg.l1_user_words() as i64 }
+        AutoDmaOpts {
+            l1_words: cfg.l1_user_words() as i64,
+            tile_side: None,
+            double_buffer: false,
+        }
     }
 }
 
@@ -59,6 +76,8 @@ pub struct AutoDmaReport {
     /// Column-wise access groups the pass declined to stage (their accesses
     /// stay in the host address space) — the covar/atax pathology of §3.2.
     pub remote: Vec<String>,
+    /// Whether each nest was double-buffered (parallel to `tile_sides`).
+    pub double_buffered: Vec<bool>,
     /// Nests left untouched (non-affine or otherwise unanalyzable).
     pub declined: usize,
 }
@@ -240,15 +259,20 @@ fn transform_nest(
         }
         let staged: Vec<&Group> = groups.iter().filter(|g| !g.remote).collect();
         if footprint_of(&staged, &loops) > budget {
-            let mut s =
-                ((budget as f64 / n_arrays as f64).powf(1.0 / dims as f64)).floor() as i64;
+            // Ping-pong halves double every staged buffer, so a
+            // double-buffered nest must fit its tiles in half the budget.
+            let eff = if opts.double_buffer { (budget / 2).max(1) } else { budget };
+            let mut s = match opts.tile_side {
+                Some(side) => side,
+                None => ((eff as f64 / n_arrays as f64).powf(1.0 / dims as f64)).floor() as i64,
+            };
             s = s.max(4);
             loop {
                 for l in loops.iter_mut().take(prefix_len) {
                     l.tile = s.min(l.extent);
                 }
                 let staged: Vec<&Group> = groups.iter().filter(|g| !g.remote).collect();
-                if footprint_of(&staged, &loops) <= budget {
+                if footprint_of(&staged, &loops) <= eff {
                     tile_side = Some(s);
                     break;
                 }
@@ -269,8 +293,14 @@ fn transform_nest(
             }
         }
     }
+    // Double-buffering pipelines the innermost tiled loop; it engages only
+    // when that loop exists and the store pattern is provably step-disjoint.
+    let pipe = loops[..prefix_len].iter().rposition(|l| l.tiled());
+    let db = opts.double_buffer
+        && pipe.map(|p| db_safe(&groups, p)).unwrap_or(false);
     report.nests += 1;
     report.tile_sides.push(tile_side);
+    report.double_buffered.push(db);
 
     // 4. Local buffers + transfer shapes.
     let mut allocs: Vec<Stmt> = Vec::new();
@@ -280,38 +310,54 @@ fn transform_nest(
         }
         decide_shape(k, g, &loops, report)?;
         let name = format!("l_{}{}", k.sym_name(g.array), k.syms.len());
-        let dims: Vec<Expr> = g.local_dims.iter().map(|d| ci(*d as i32)).collect();
+        let mut dims: Vec<Expr> = g.local_dims.iter().map(|d| ci(*d as i32)).collect();
+        if db {
+            // Leading ping-pong dimension: half 0 / half 1.
+            dims.insert(0, ci(2));
+        }
         k.syms.push((name, Sym::LocalBuf { dims }));
         g.local = k.syms.len() - 1;
         let elems: i64 = g.local_dims.iter().product();
         if elems <= 0 {
             bail!("empty staging buffer");
         }
-        allocs.push(Stmt::LocalAlloc { var: g.local, elems: ci(elems as i32) });
+        let alloc_elems = if db { 2 * elems } else { elems };
+        allocs.push(Stmt::LocalAlloc { var: g.local, elems: ci(alloc_elems as i32) });
     }
 
     // 5. Rewrite the execute phase.
     let rewritten = rewrite_block(k, &inner_body, &groups, &loops)?;
 
     // 6. Assemble load / execute / store phases.
-    let mut phase: Vec<Stmt> = Vec::new();
+    let mut loads: Vec<Stmt> = Vec::new();
     for g in &groups {
         if g.read && !g.remote {
-            phase.extend(emit_transfers(k, g, &loops, Dir::HostToLocal));
+            loads.extend(emit_transfers(k, g, &loops, Dir::HostToLocal));
         }
     }
-    phase.push(Stmt::DmaWaitAll);
-    phase.extend(build_point_nest(&loops, 0, prefix_len, rewritten));
+    let compute = build_point_nest(&loops, 0, prefix_len, rewritten);
+    let mut stores: Vec<Stmt> = Vec::new();
     for g in &groups {
         if g.written && !g.remote {
-            phase.extend(emit_transfers(k, g, &loops, Dir::LocalToHost));
+            stores.extend(emit_transfers(k, g, &loops, Dir::LocalToHost));
         }
     }
-    phase.push(Stmt::DmaWaitAll);
 
     // 7. Wrap in tile loops (innermost tiled loop closest to the phases).
-    let mut body = phase;
-    for l in loops[..prefix_len].iter().rev() {
+    let mut body = if db {
+        pipeline_innermost(k, &loops[pipe.unwrap()], &groups, loads, compute, stores)
+    } else {
+        let mut phase = loads;
+        phase.push(Stmt::DmaWaitAll);
+        phase.extend(compute);
+        phase.extend(stores);
+        phase.push(Stmt::DmaWaitAll);
+        phase
+    };
+    for (li, l) in loops[..prefix_len].iter().enumerate().rev() {
+        if db && Some(li) == pipe {
+            continue; // replaced by the software-pipeline loop
+        }
         if let Some(tv) = l.tvar {
             let n_tiles = (l.extent + l.tile - 1) / l.tile;
             body = vec![Stmt::For {
@@ -326,6 +372,259 @@ fn transform_nest(
     let mut out = allocs;
     out.extend(body);
     Ok(out)
+}
+
+/// Is double-buffering along pipeline loop `pipe` value-preserving?
+///
+/// The pipeline reorders `loads(t)` before `stores(t-1)` (that is the whole
+/// point: the next tile's loads fly while the current tile computes), and
+/// partial tiles store from alternating halves. Both are only safe when
+/// every written staged group advances with the pipeline loop, covers
+/// exactly its tile box (no tap spread), and shares its array with no other
+/// staged group — then consecutive pipeline steps touch provably disjoint
+/// host regions and the enqueue-order data movement matches the default
+/// recipe bit-for-bit.
+fn db_safe(groups: &[Group], pipe: usize) -> bool {
+    let staged: Vec<&Group> = groups.iter().filter(|g| !g.remote).collect();
+    for (i, g) in staged.iter().enumerate() {
+        if !g.written {
+            continue;
+        }
+        if g.coeffs[pipe] == 0 || spread_of(g) != 0 {
+            return false;
+        }
+        if staged.iter().enumerate().any(|(j, h)| j != i && h.array == g.array) {
+            return false;
+        }
+    }
+    true
+}
+
+/// A 0/1-trip guard loop (the IR has no `if`; `hi` folds to 0 or 1).
+fn guard(var: VarId, hi: Expr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For { var, lo: ci(0), hi, par: Par::None, body }
+}
+
+/// Software-pipeline the phases along the innermost tiled loop `l`:
+///
+/// ```text
+/// int half = 0;
+/// for (t = 0; t < n_tiles + 1; t++) {
+///   if (t > 0)       dma_wait_all();          // loads(t-1) + stores(t-2)
+///   if (t < n_tiles) loads(t)  -> buf[half];  // fly during compute(t-1)
+///   if (t > 0)       compute(t-1), stores(t-1) from buf[1-half];
+///   half = 1 - half;
+/// }
+/// dma_wait_all();                             // stores(n_tiles-1)
+/// ```
+///
+/// The wait *precedes* the loads within a step, so a step's loads stay in
+/// flight while the previous tile computes — waiting after issuing them
+/// would serialize everything again (the engine retires in order).
+fn pipeline_innermost(
+    k: &mut Kernel,
+    l: &LoopInfo,
+    groups: &[Group],
+    loads: Vec<Stmt>,
+    compute: Vec<Stmt>,
+    stores: Vec<Stmt>,
+) -> Vec<Stmt> {
+    let staged: std::collections::HashMap<VarId, i64> = groups
+        .iter()
+        .filter(|g| !g.remote)
+        .map(|g| (g.local, g.local_dims.iter().product()))
+        .collect();
+    let tv = l.tvar.unwrap();
+    let n_tiles = (l.extent + l.tile - 1) / l.tile;
+    let t = fresh_loop_var(k, "db");
+    let half = {
+        let name = format!("half{}", k.syms.len());
+        k.syms.push((name, Sym::LetI32));
+        k.syms.len() - 1
+    };
+    let other = {
+        let name = format!("ohalf{}", k.syms.len());
+        k.syms.push((name, Sym::LetI32));
+        k.syms.len() - 1
+    };
+    let gw = fresh_loop_var(k, "g");
+    let gl = fresh_loop_var(k, "g");
+    let gc = fresh_loop_var(k, "g");
+
+    let loads_t: Vec<Stmt> = loads
+        .iter()
+        .map(|s| parity_stmt(&subst_stmt(s, tv, &var(t)), &var(half), &staged))
+        .collect();
+    let tm1 = var(t).sub(ci(1));
+    let mut comp: Vec<Stmt> = vec![Stmt::Let { var: other, value: ci(1).sub(var(half)) }];
+    for s in compute.iter().chain(stores.iter()) {
+        comp.push(parity_stmt(&subst_stmt(s, tv, &tm1), &var(other), &staged));
+    }
+
+    let pipe_body = vec![
+        guard(gw, var(t).min(ci(1)), vec![Stmt::DmaWaitAll]),
+        guard(gl, ci(n_tiles as i32).sub(var(t)).min(ci(1)), loads_t),
+        guard(gc, var(t).min(ci(1)), comp),
+        Stmt::Assign { var: half, value: ci(1).sub(var(half)) },
+    ];
+    vec![
+        Stmt::Let { var: half, value: ci(0) },
+        Stmt::For {
+            var: t,
+            lo: ci(0),
+            hi: ci((n_tiles + 1) as i32),
+            par: Par::None,
+            body: pipe_body,
+        },
+        Stmt::DmaWaitAll,
+    ]
+}
+
+/// Substitute `Var(from)` with `to` throughout a statement.
+fn subst_stmt(s: &Stmt, from: VarId, to: &Expr) -> Stmt {
+    match s {
+        Stmt::For { var, lo, hi, par, body } => Stmt::For {
+            var: *var,
+            lo: subst_expr(lo, from, to),
+            hi: subst_expr(hi, from, to),
+            par: *par,
+            body: body.iter().map(|s| subst_stmt(s, from, to)).collect(),
+        },
+        Stmt::Store { dst, idx, value } => Stmt::Store {
+            dst: *dst,
+            idx: idx.iter().map(|e| subst_expr(e, from, to)).collect(),
+            value: subst_expr(value, from, to),
+        },
+        Stmt::Let { var, value } => Stmt::Let { var: *var, value: subst_expr(value, from, to) },
+        Stmt::Assign { var, value } => {
+            Stmt::Assign { var: *var, value: subst_expr(value, from, to) }
+        }
+        Stmt::Dma {
+            dir,
+            kind,
+            host,
+            host_off,
+            local,
+            local_off,
+            rows,
+            row_elems,
+            host_stride,
+            local_stride,
+        } => Stmt::Dma {
+            dir: *dir,
+            kind: *kind,
+            host: *host,
+            host_off: subst_expr(host_off, from, to),
+            local: *local,
+            local_off: subst_expr(local_off, from, to),
+            rows: subst_expr(rows, from, to),
+            row_elems: subst_expr(row_elems, from, to),
+            host_stride: subst_expr(host_stride, from, to),
+            local_stride: subst_expr(local_stride, from, to),
+        },
+        other => other.clone(),
+    }
+}
+
+fn subst_expr(e: &Expr, from: VarId, to: &Expr) -> Expr {
+    match e {
+        Expr::Var(v) if *v == from => to.clone(),
+        Expr::Load(a, idx) => {
+            Expr::Load(*a, idx.iter().map(|i| subst_expr(i, from, to)).collect())
+        }
+        Expr::Bin(op, a, b) => Expr::Bin(
+            *op,
+            Box::new(subst_expr(a, from, to)),
+            Box::new(subst_expr(b, from, to)),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Retarget every staged-buffer access in a phase to ping-pong half
+/// `parity`: compute-side accesses gain a leading index, DMA local offsets
+/// gain `parity * elems` (DMA offsets are flat).
+fn parity_stmt(
+    s: &Stmt,
+    parity: &Expr,
+    staged: &std::collections::HashMap<VarId, i64>,
+) -> Stmt {
+    match s {
+        Stmt::For { var, lo, hi, par, body } => Stmt::For {
+            var: *var,
+            lo: parity_expr(lo, parity, staged),
+            hi: parity_expr(hi, parity, staged),
+            par: *par,
+            body: body.iter().map(|s| parity_stmt(s, parity, staged)).collect(),
+        },
+        Stmt::Store { dst, idx, value } => {
+            let mut idx: Vec<Expr> =
+                idx.iter().map(|e| parity_expr(e, parity, staged)).collect();
+            if staged.contains_key(dst) {
+                idx.insert(0, parity.clone());
+            }
+            Stmt::Store { dst: *dst, idx, value: parity_expr(value, parity, staged) }
+        }
+        Stmt::Let { var, value } => {
+            Stmt::Let { var: *var, value: parity_expr(value, parity, staged) }
+        }
+        Stmt::Assign { var, value } => {
+            Stmt::Assign { var: *var, value: parity_expr(value, parity, staged) }
+        }
+        Stmt::Dma {
+            dir,
+            kind,
+            host,
+            host_off,
+            local,
+            local_off,
+            rows,
+            row_elems,
+            host_stride,
+            local_stride,
+        } => {
+            let local_off = match staged.get(local) {
+                Some(elems) => parity.clone().mul(ci(*elems as i32)).add(local_off.clone()),
+                None => local_off.clone(),
+            };
+            Stmt::Dma {
+                dir: *dir,
+                kind: *kind,
+                host: *host,
+                host_off: host_off.clone(),
+                local: *local,
+                local_off,
+                rows: rows.clone(),
+                row_elems: row_elems.clone(),
+                host_stride: host_stride.clone(),
+                local_stride: local_stride.clone(),
+            }
+        }
+        other => other.clone(),
+    }
+}
+
+fn parity_expr(
+    e: &Expr,
+    parity: &Expr,
+    staged: &std::collections::HashMap<VarId, i64>,
+) -> Expr {
+    match e {
+        Expr::Load(a, idx) => {
+            let mut idx: Vec<Expr> =
+                idx.iter().map(|i| parity_expr(i, parity, staged)).collect();
+            if staged.contains_key(a) {
+                idx.insert(0, parity.clone());
+            }
+            Expr::Load(*a, idx)
+        }
+        Expr::Bin(op, a, b) => Expr::Bin(
+            *op,
+            Box::new(parity_expr(a, parity, staged)),
+            Box::new(parity_expr(b, parity, staged)),
+        ),
+        other => other.clone(),
+    }
 }
 
 fn collect_deep_loops(k: &Kernel, body: &[Stmt], out: &mut Vec<LoopInfo>) -> Result<()> {

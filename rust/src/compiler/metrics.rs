@@ -154,6 +154,84 @@ pub fn predict_cycles(k: &Kernel, opts: &PredictOpts) -> u64 {
     100 + k.body.iter().map(|s| stmt_predict(k, s, opts)).sum::<u64>()
 }
 
+/// Tighter trip-count bound for the overlap-aware predictor: a `Min`-shaped
+/// bound takes whichever side folds to a constant (tile-clamped extents and
+/// the 0/1 pipeline guards of `autodma` are `Min`-shaped by construction).
+fn const_upper(k: &Kernel, e: &Expr) -> Option<i64> {
+    if let Some(c) = k.eval_const(e) {
+        return Some(c);
+    }
+    if let Expr::Bin(super::ir::BinOp::Min, a, b) = e {
+        return match (const_upper(k, a), const_upper(k, b)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (x, None) => x,
+            (None, y) => y,
+        };
+    }
+    None
+}
+
+fn stmt_predict_overlap(k: &Kernel, s: &Stmt, opts: &PredictOpts, outstanding: &mut u64) -> u64 {
+    match s {
+        Stmt::For { lo, hi, par, body, .. } => {
+            let mut trips = match (k.eval_const(lo), const_upper(k, hi)) {
+                (Some(l), Some(h)) => (h - l).max(0) as u64,
+                _ => opts.default_trips,
+            };
+            if !matches!(par, super::ir::Par::None) {
+                trips = trips.div_ceil(opts.par_ways.max(1));
+            }
+            if trips == 0 {
+                return 2;
+            }
+            // First trip against the current in-flight state, then one
+            // steady-state trip whose cost the remaining trips repeat.
+            let first: u64 =
+                body.iter().map(|s| stmt_predict_overlap(k, s, opts, outstanding)).sum();
+            if trips == 1 {
+                return 3 + first;
+            }
+            let steady: u64 =
+                body.iter().map(|s| stmt_predict_overlap(k, s, opts, outstanding)).sum();
+            2 + (1 + first) + (trips - 1) * (1 + steady)
+        }
+        Stmt::Dma { rows, row_elems, .. } => {
+            let elems = match (k.eval_const(rows), k.eval_const(row_elems)) {
+                (Some(r), Some(e)) => (r.max(0) as u64) * (e.max(0) as u64),
+                _ => opts.default_trips * opts.default_trips,
+            };
+            *outstanding += elems / 2;
+            DMA_SETUP_COST
+        }
+        Stmt::DmaWaitAll => {
+            let c = DMA_WAIT_COST + *outstanding;
+            *outstanding = 0;
+            c
+        }
+        other => {
+            let c = stmt_predict(k, other, opts);
+            *outstanding = outstanding.saturating_sub(c);
+            c
+        }
+    }
+}
+
+/// Overlap-aware variant of [`predict_cycles`], the scoring model of the
+/// AutoDMA autotuner ([`crate::compiler::autotune`]): issuing a DMA charges
+/// only its descriptor setup, the transfer's bandwidth term rides along as
+/// in-flight work that subsequent compute drains cycle-for-cycle, and
+/// `DmaWaitAll` pays whatever is left — so a software-pipelined kernel that
+/// hides its transfers scores below the stop-and-go recipe. Loop bounds
+/// additionally fold through `Min` (tile clamps and the pipeline's 0/1
+/// guards), so candidates with different tile sides are scored by their
+/// actual descriptor counts. Deliberately a *separate* entry point:
+/// [`predict_cycles`] feeds the scheduler's SJF ordering, whose event
+/// sequences must not move when tuning is off.
+pub fn predict_cycles_overlap(k: &Kernel, opts: &PredictOpts) -> u64 {
+    let mut outstanding = 0u64;
+    100 + k.body.iter().map(|s| stmt_predict_overlap(k, s, opts, &mut outstanding)).sum::<u64>()
+}
+
 /// Compute Fig 6 metrics for a kernel.
 pub fn complexity(k: &Kernel) -> Complexity {
     let mut loc = 1; // function signature line

@@ -7,20 +7,24 @@
 //! | Kernel source (OpenMP target region after outlining) | [`ir`] |
 //! | Clang address-space inference + host-pointer legalizer (§2.2.1) | [`addrspace`] + `*.ext` emission in [`lower`] |
 //! | AutoDMA tiling + DMA inference plugin (§2.2.2) | [`autodma`] |
+//! | AutoDMA knob search (tile side, double-buffering, variant) | [`autotune`] |
 //! | Xpulpv2 codegen: hwloops, post-increment, MAC (§2.2.3) | [`lower`] |
 //! | CCCC code metrics used in Fig 6 | [`metrics`] |
 //!
 //! [`compile`] is the full pipeline: address-space validation → (optional)
-//! AutoDMA → lowering to a device [`Program`].
+//! AutoDMA → lowering to a device [`Program`]. See `rust/src/compiler/README.md`
+//! for the pipeline walk-through.
 
 pub mod addrspace;
 pub mod analyze;
 pub mod autodma;
+pub mod autotune;
 pub mod ir;
 pub mod lower;
 pub mod metrics;
 
 pub use autodma::{AutoDmaOpts, AutoDmaReport};
+pub use autotune::{tune, TuneResult, TunedVariant};
 pub use ir::Kernel;
 pub use lower::{Lowered, LowerOpts};
 

@@ -21,6 +21,11 @@
 //! `pjrt-xla` feature; without it those checks skip with a warning). Python
 //! never runs on the request path.
 //!
+//! `ARCHITECTURE.md` at the repo root is the subsystem map — every module
+//! below with its role, its layer, and where its prose documentation lives
+//! (`compiler/README.md`, `sched/README.md`, `session/README.md`,
+//! `svm/README.md`, `fleet/README.md`).
+//!
 //! ## The `session` front door (start here)
 //!
 //! The [`session`] module is the **recommended entry point** for client

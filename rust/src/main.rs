@@ -5,6 +5,11 @@
 //! hero run <kernel> [options]         compile + offload a workload through
 //!                                     the unified `Session` API
 //!     --variant unmodified|handwritten|promoted|autodma   (default handwritten)
+//!     --autotune                      search the AutoDMA knob space (tile
+//!                                     side, double-buffering, lowering
+//!                                     variant) and run the winner too,
+//!                                     reporting tuned vs default cycles
+//!                                     (implies --variant autodma)
 //!     --threads N                     OpenMP threads (default 8)
 //!     --size N                        problem size (default: paper size)
 //!     --config FILE                   platform config file (see config::parse)
@@ -47,6 +52,14 @@
 //!                                     finish incl. board DRAM stall)
 //!     --priority-headroom B           bytes/cycle of board DRAM reachable
 //!                                     only by priority-class jobs (default 0)
+//!     --autotune                      schedule-time AutoDMA tuning: every
+//!                                     autodma job's tiling recipe (tile
+//!                                     side, double-buffering, lowering
+//!                                     variant) is searched once per
+//!                                     (kernel, size, width, config) key,
+//!                                     memoized, and the winner's binary is
+//!                                     dispatched; with --learn, measured
+//!                                     cycles re-rank the candidates
 //!     --learn                         online cycle-prediction refinement:
 //!                                     blend each settled job's measured
 //!                                     device cycles into a deterministic
@@ -221,14 +234,25 @@ fn cmd_info(raw: &[String]) -> i32 {
 
 fn cmd_run(raw: &[String]) -> i32 {
     const SPEC: cli::Spec = cli::Spec {
-        flags: &["--no-xpulp", "--verify-pjrt"],
+        flags: &["--autotune", "--no-xpulp", "--verify-pjrt"],
         opts: &["--variant", "--threads", "--size", "--config"],
         max_positional: 1,
     };
     let args = parse_args(&SPEC, raw);
     let cfg = load_cfg(&args);
     let w = pick_workload(&args);
-    let variant = pick_variant(&args);
+    let autotune = args.flag("--autotune");
+    let variant = if autotune {
+        match args.opt("--variant") {
+            None | Some("autodma") => Variant::AutoDma,
+            Some(v) => {
+                eprintln!("--autotune tunes the autodma variant; drop `--variant {v}`");
+                return 2;
+            }
+        }
+    } else {
+        pick_variant(&args)
+    };
     let threads: u32 = opt_or(&args, "--threads", 8);
     let seed = 42;
     println!(
@@ -268,6 +292,41 @@ fn cmd_run(raw: &[String]) -> i32 {
     if let Some(r) = &res.autodma {
         println!("AutoDMA: tiles {:?}, remote {:?}", r.tile_sides, r.remote);
     }
+    // The tuned run rides the same session: the winning recipe compiles
+    // under its own cache key, and its numerics must match the default
+    // recipe's bit for bit.
+    if autotune {
+        let tuned = match sess.run_workload_tuned(&w, threads, seed) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("tuned offload failed: {e}");
+                return 1;
+            }
+        };
+        if let Err(e) = verify_arrays(&w, &tuned.arrays, seed) {
+            eprintln!("TUNED VERIFICATION FAILED: {e}");
+            return 1;
+        }
+        let t = &tuned.result;
+        if t.digest != res.digest {
+            eprintln!("BUG: tuned digest {:#x} != default {:#x}", t.digest, res.digest);
+            return 1;
+        }
+        if let Some(r) = &t.autodma {
+            println!(
+                "tuned AutoDMA : tiles {:?}, double-buffered {:?}",
+                r.tile_sides, r.double_buffered
+            );
+        } else {
+            println!("tuned AutoDMA : direct lowering (no staging) won the search");
+        }
+        println!(
+            "autotune      : default {} cy -> tuned {} cy ({:.2}x), digests identical",
+            res.device_cycles,
+            t.device_cycles,
+            res.device_cycles as f64 / t.device_cycles as f64
+        );
+    }
     if args.flag("--verify-pjrt") {
         let mut rt = match PjrtRuntime::new(PjrtRuntime::default_dir()) {
             Ok(rt) => rt,
@@ -296,6 +355,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
 
     const SPEC: cli::Spec = cli::Spec {
         flags: &[
+            "--autotune",
             "--events",
             "--learn",
             "--mixed-widths",
@@ -474,6 +534,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
                     .with_learning(args.flag("--learn"))
                     .with_lookahead(lookahead)
                     .with_preemption(args.flag("--preempt"))
+                    .with_autotune(args.flag("--autotune"))
             })
             .collect();
         let mut router = herov2::fleet::Router::new(boards).with_route(route);
@@ -537,12 +598,14 @@ fn cmd_serve(raw: &[String]) -> i32 {
     .with_verify(!args.flag("--no-verify"))
     .with_learning(args.flag("--learn"))
     .with_lookahead(lookahead)
-    .with_preemption(args.flag("--preempt"));
-    if args.flag("--learn") || lookahead > 1 || args.flag("--preempt") {
+    .with_preemption(args.flag("--preempt"))
+    .with_autotune(args.flag("--autotune"));
+    if args.flag("--learn") || lookahead > 1 || args.flag("--preempt") || args.flag("--autotune") {
         println!(
-            "self-tuning: learn {}, lookahead {lookahead}, preempt {}",
+            "self-tuning: learn {}, lookahead {lookahead}, preempt {}, autotune {}",
             if args.flag("--learn") { "on" } else { "off" },
             if args.flag("--preempt") { "on" } else { "off" },
+            if args.flag("--autotune") { "on" } else { "off" },
         );
     }
     // SVM serving rides alongside the named stream: a kernel stream whose

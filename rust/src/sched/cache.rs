@@ -248,6 +248,34 @@ impl BinaryCache {
         fill_and_charge(&mut self.ir_map, &mut self.stats, &key, compile)
     }
 
+    /// Fetch the binary for a *tuned* kernel job: like
+    /// [`BinaryCache::acquire_ir`], but lowering under a chosen AutoDMA
+    /// recipe ([`crate::compiler::TunedVariant`]) on a miss. `content` must
+    /// be the variant's binary-content key
+    /// ([`super::job::tuned_variant_content`]) so distinct recipes of one
+    /// kernel occupy distinct rows; the compile charge is the same
+    /// LoC-proportional cost as the untuned path (the tuning *search* is
+    /// host-side work, surfaced as an untimed `Tuned` trace event, never a
+    /// device-cycle charge).
+    pub fn acquire_ir_tuned(
+        &mut self,
+        cfg: &HeroConfig,
+        k: &Kernel,
+        variant: &crate::compiler::TunedVariant,
+        threads: u32,
+        content: u64,
+    ) -> Result<(Arc<Lowered>, u64, Option<AutoDmaReport>)> {
+        let compile = || {
+            crate::bench_harness::compile_kernel_tuned(cfg, k, variant, threads)
+                .map(|(l, r)| (l, r, compile_kernel_cost_cycles(k)))
+        };
+        if !self.enabled {
+            return compile_uncached(&mut self.stats, compile, true);
+        }
+        let key = ir_key_for(cfg, content, threads);
+        fill_and_charge(&mut self.ir_map, &mut self.stats, &key, compile)
+    }
+
     /// Admission probe: lower (and cache) without consuming the compile
     /// charge — the first real dispatch still pays it. With caching
     /// disabled the probe cannot be stored, so capacity admission on an
@@ -417,6 +445,30 @@ mod tests {
         // kernel does not collide with the content-hash entry.
         let (_, c3) = c.acquire(&cfg, &w, Variant::Handwritten, 8).unwrap();
         assert!(c3 > 0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn tuned_path_charges_once_and_keeps_variants_apart() {
+        use crate::compiler::TunedVariant;
+        use crate::sched::job::{kernel_content_key, tuned_variant_content};
+        let cfg = aurora();
+        let w = workloads::gemm::build(112);
+        let base = kernel_content_key(&w.unmodified, true);
+        let default = TunedVariant::default_recipe();
+        let tiled = TunedVariant { staging: true, tile_side: Some(64), double_buffer: false };
+        let mut c = BinaryCache::new(true);
+        let dc = tuned_variant_content(base, &default);
+        let (_, c1, r1) = c.acquire_ir_tuned(&cfg, &w.unmodified, &default, 8, dc).unwrap();
+        assert!(c1 > 0);
+        assert!(r1.is_some(), "staged variants carry an AutoDMA report");
+        let (_, c2, _) = c.acquire_ir_tuned(&cfg, &w.unmodified, &default, 8, dc).unwrap();
+        assert_eq!(c2, 0, "same variant hits its entry");
+        // A different recipe is a different binary: separate row, own charge.
+        let tc = tuned_variant_content(base, &tiled);
+        let (_, c3, _) = c.acquire_ir_tuned(&cfg, &w.unmodified, &tiled, 8, tc).unwrap();
+        assert!(c3 > 0);
+        assert_eq!((c.stats.misses, c.stats.hits), (2, 1));
         assert_eq!(c.len(), 2);
     }
 

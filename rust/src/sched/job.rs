@@ -110,6 +110,12 @@ pub struct KernelJob {
     /// Run the AutoDMA tiling pass before lowering (for kernels written in
     /// plain OpenMP form; handwritten-tiled kernels leave this off).
     pub autodma: bool,
+    /// Let the scheduler search the AutoDMA knob space for this job
+    /// ([`crate::sched::tune::TuneStore`]) instead of compiling the single
+    /// default recipe. Only meaningful with `autodma` set; a tuned job
+    /// hashes to a different [`KernelJob::content_key`] so tuned and
+    /// untuned submissions never share a binary or a batch.
+    pub autotune: bool,
     /// Per-job simulation budget (abort bound — it never changes the timing
     /// of a job that completes). Named synthetic jobs use the scheduler's
     /// fixed budget; kernel jobs carry their own so a session launch keeps
@@ -145,6 +151,7 @@ impl KernelJob {
             arrival: 0,
             priority: Priority::Normal,
             autodma: false,
+            autotune: false,
             max_cycles: super::JOB_MAX_CYCLES,
             after: Vec::new(),
             svm: None,
@@ -152,8 +159,15 @@ impl KernelJob {
     }
 
     /// Content key of the binary this job needs (see [`kernel_content_key`]).
+    /// Tuned jobs mix the flag in *only when set*, so every pre-existing
+    /// untuned key is bit-unchanged.
     pub fn content_key(&self) -> u64 {
-        kernel_content_key(&self.kernel, self.autodma)
+        let base = kernel_content_key(&self.kernel, self.autodma);
+        if self.autotune {
+            tuned_request_key(base)
+        } else {
+            base
+        }
     }
 
     /// Check the payload against the kernel's signature (see
@@ -273,6 +287,28 @@ pub fn kernel_content_key(k: &Kernel, autodma: bool) -> u64 {
     h.0
 }
 
+/// Content key of a *tuning-enabled* submission: `base` with the autotune
+/// marker mixed in. Keeps tuned and untuned jobs in disjoint key spaces
+/// (no shared batches or cache rows) while leaving untuned keys untouched.
+pub fn tuned_request_key(base: u64) -> u64 {
+    use std::fmt::Write as _;
+    let mut h = Fnv1a(base);
+    write!(h, "|autotune").expect("hashing writer never fails");
+    h.0
+}
+
+/// Content key of one *tuned variant's* binary: the kernel's base content
+/// mixed with the chosen AutoDMA recipe. This is the key the binary cache
+/// and the learn/tune stores file a tuned compilation under — distinct
+/// variants of one kernel get distinct rows, and the measured cycles of a
+/// variant refine only that variant.
+pub fn tuned_variant_content(base: u64, v: &crate::compiler::TunedVariant) -> u64 {
+    use std::fmt::Write as _;
+    let mut h = Fnv1a(base);
+    write!(h, "|variant={v:?}").expect("hashing writer never fails");
+    h.0
+}
+
 struct Fnv1a(u64);
 
 impl std::fmt::Write for Fnv1a {
@@ -322,6 +358,29 @@ mod tests {
             kernel_content_key(&scale(32, "s"), false),
             kernel_content_key(&scale(32, "s"), true)
         );
+    }
+
+    #[test]
+    fn tuned_keys_are_disjoint_and_stable() {
+        let base = kernel_content_key(&scale(32, "s"), true);
+        // The tuning flag forks the key space without touching untuned keys.
+        let mut j = KernelJob::new(scale(32, "s"), vec![], vec![]);
+        j.autodma = true;
+        assert_eq!(j.content_key(), base);
+        j.autotune = true;
+        assert_eq!(j.content_key(), tuned_request_key(base));
+        assert_ne!(j.content_key(), base);
+        // Distinct variants file under distinct binary-content keys; the
+        // same variant always maps to the same key.
+        let d = crate::compiler::TunedVariant::default_recipe();
+        let t = crate::compiler::TunedVariant {
+            staging: true,
+            tile_side: Some(64),
+            double_buffer: true,
+        };
+        assert_eq!(tuned_variant_content(base, &d), tuned_variant_content(base, &d));
+        assert_ne!(tuned_variant_content(base, &d), tuned_variant_content(base, &t));
+        assert_ne!(tuned_variant_content(base, &d), base);
     }
 
     #[test]

@@ -86,7 +86,14 @@
 //! [`Scheduler::with_preemption`] lets an arrived High job displace
 //! queued-but-assigned Normal batch followers back into the queue
 //! ([`SchedEvent::Preempted`]) — never a kernel mid-flight, so numerics
-//! and digests are untouched by construction.
+//! and digests are untouched by construction. On top of those,
+//! [`Scheduler::with_autotune`] closes the compiler↔scheduler loop:
+//! AutoDMA dispatches search the tiling/double-buffering knob space
+//! ([`crate::compiler::autotune`]) once per (kernel, footprint, width,
+//! instance config) — memoized in a [`tune::TuneStore`] living next to the
+//! binary cache — and compile the winning recipe's binary instead of the
+//! single default, per instance config on a heterogeneous pool; with
+//! learning also on, measured cycles re-rank the candidates.
 //!
 //! Every job executes on a *fresh* `Accel` (own SPM/IOMMU state) through
 //! the shared offload core ([`crate::session::core`]), so results on a
@@ -105,6 +112,7 @@ pub mod place;
 pub mod policy;
 pub mod pool;
 pub mod report;
+pub mod tune;
 
 pub use crate::svm::{SvmConfig, SvmMode};
 pub use crate::workloads::synth::JobDesc;
@@ -316,7 +324,24 @@ pub struct Scheduler {
     /// Displacement counts by the *displaced* job's class
     /// (`[Normal, High]`).
     preempted: [u64; 2],
+    /// Whether AutoDMA dispatches pick a tuned variant
+    /// ([`Scheduler::with_autotune`]; off by default, leaving every
+    /// pre-autotune code path — and its event sequence — untouched).
+    autotune: bool,
+    /// Memoized tuning searches (cheap and empty while autotuning is off).
+    tune: tune::TuneStore,
     pub trace: SchedTrace,
+}
+
+/// What a tuned dispatch remembers until its batch members complete:
+/// enough to file each measured run under the chosen variant's own
+/// refinement key ([`tune::variant_learn_key`]).
+struct TunedRun {
+    key: tune::TuneKey,
+    variant: crate::compiler::TunedVariant,
+    /// The variant's static prediction (the observation seed).
+    static_predicted: u64,
+    teams: u32,
 }
 
 impl Scheduler {
@@ -366,6 +391,8 @@ impl Scheduler {
             lookahead: 1,
             preempt: false,
             preempted: [0, 0],
+            autotune: false,
+            tune: tune::TuneStore::new(),
             trace: SchedTrace::new(),
             cfg,
             policy,
@@ -440,6 +467,20 @@ impl Scheduler {
         self
     }
 
+    /// Enable schedule-time AutoDMA tuning (must precede submissions):
+    /// every AutoDMA dispatch consults the [`tune::TuneStore`] — searching
+    /// the tiling/double-buffering/variant space on first sight of a
+    /// `(kernel, size, width, config)` key ([`crate::compiler::autotune`])
+    /// — and compiles the winning recipe instead of the default one. The
+    /// tuned request hashes to its own content key, so tuned and untuned
+    /// submissions never share a cache row or a batch; with tuning off, no
+    /// key, event or decision changes.
+    pub fn with_autotune(mut self, on: bool) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_autotune after submissions");
+        self.autotune = on;
+        self
+    }
+
     /// Whether online prediction refinement is enabled.
     pub fn learning_enabled(&self) -> bool {
         self.learn.is_some()
@@ -453,6 +494,11 @@ impl Scheduler {
     /// Whether priority preemption is enabled.
     pub fn preemption_enabled(&self) -> bool {
         self.preempt
+    }
+
+    /// Whether schedule-time AutoDMA tuning is enabled.
+    pub fn autotune_enabled(&self) -> bool {
+        self.autotune
     }
 
     /// Enable shared-virtual-memory serving (must precede submissions):
@@ -944,6 +990,17 @@ impl Scheduler {
     pub fn submit_kernel(&mut self, kjob: KernelJob) -> JobHandle {
         let id = self.jobs.len();
         self.trace.record(SchedEvent::Submitted { job: id, priority: kjob.priority });
+        // A scheduler-wide `--autotune` promotes every AutoDMA submission to
+        // a tuned request, exactly as if the job had asked itself: the
+        // request key (and so the batch identity) diverges from the untuned
+        // stream's before any batching or admission decision is made.
+        let kjob = if self.autotune && kjob.autodma && !kjob.autotune {
+            let mut kjob = kjob;
+            kjob.autotune = true;
+            kjob
+        } else {
+            kjob
+        };
         let content = kjob.content_key();
         let eff_threads = kjob.threads.min(self.cfg.accel.cores_per_cluster as u32);
         let after: Vec<JobId> = kjob.producers().iter().map(|h| h.0).collect();
@@ -1232,21 +1289,47 @@ impl Scheduler {
         // the config name, so heterogeneous pools keep per-width binaries).
         // Named jobs also materialize their workload here (shared by the
         // whole batch); kernel jobs carry their IR along.
+        let mut tuned_run: Option<TunedRun> = None;
         let acquired = match &spec {
             JobSpec::Named(desc) => {
                 let w = workloads::build(desc.kernel, desc.size)
                     .expect("queued jobs have known kernels");
-                self.cache
-                    .acquire(&icfg, &w, desc.variant, desc.threads)
-                    .map(|(lowered, cost)| (lowered, cost, Some(w)))
+                if self.autotune && desc.variant == Variant::AutoDma {
+                    let bytes = policy::job_bytes(&w);
+                    self.acquire_tuned(&icfg, &w.unmodified, bytes, desc.threads, 1, head).map(
+                        |(lowered, cost, run)| {
+                            tuned_run = Some(run);
+                            (lowered, cost, Some(w))
+                        },
+                    )
+                } else {
+                    self.cache
+                        .acquire(&icfg, &w, desc.variant, desc.threads)
+                        .map(|(lowered, cost)| (lowered, cost, Some(w)))
+                }
             }
             JobSpec::Kernel(kjob) => {
                 let BatchKey::Ir { content, .. } = head_key else {
                     unreachable!("kernel jobs carry IR batch keys")
                 };
-                self.cache
-                    .acquire_ir(&icfg, &kjob.kernel, kjob.autodma, kjob.threads, content)
-                    .map(|(lowered, cost, _)| (lowered, cost, None))
+                if kjob.autodma && kjob.autotune {
+                    self.acquire_tuned(
+                        &icfg,
+                        &kjob.kernel,
+                        kjob.input_bytes(),
+                        kjob.threads,
+                        kjob.teams as u32,
+                        head,
+                    )
+                    .map(|(lowered, cost, run)| {
+                        tuned_run = Some(run);
+                        (lowered, cost, None)
+                    })
+                } else {
+                    self.cache
+                        .acquire_ir(&icfg, &kjob.kernel, kjob.autodma, kjob.threads, content)
+                        .map(|(lowered, cost, _)| (lowered, cost, None))
+                }
             }
             JobSpec::Retired => unreachable!("retired jobs are never queued"),
         };
@@ -1550,6 +1633,17 @@ impl Scheduler {
                     if self.learn.is_some() {
                         self.learn_from(id, result.device_cycles);
                     }
+                    // Tuned dispatches additionally file the measurement
+                    // under the chosen *variant's* key, so the next choose()
+                    // for this kernel re-ranks against real cycles (the
+                    // measure → re-rank loop of the tuning store).
+                    if let (Some(run), Some(learn)) = (tuned_run.as_ref(), self.learn.as_mut()) {
+                        learn.observe(
+                            tune::variant_learn_key(&run.key, &run.variant, run.teams),
+                            run.static_predicted,
+                            result.device_cycles,
+                        );
+                    }
                     charge = 0; // the batch head pays the compile once
                 }
             }
@@ -1586,6 +1680,47 @@ impl Scheduler {
                 self.jobs[q].predicted = refined;
             }
         }
+    }
+
+    /// Pick (or recall) the tuned variant for an AutoDMA dispatch and
+    /// compile it for the instance's configuration. The tuning key carries
+    /// the *instance's* config name, so a heterogeneous pool searches — and
+    /// may choose — per instance kind; the compiled binary is cached under
+    /// the variant's own content hash ([`job::tuned_variant_content`]),
+    /// keeping tuned rows apart from default-recipe rows.
+    fn acquire_tuned(
+        &mut self,
+        icfg: &HeroConfig,
+        k: &crate::compiler::ir::Kernel,
+        input_bytes: u64,
+        threads: u32,
+        teams: u32,
+        job: JobId,
+    ) -> Result<(Arc<Lowered>, u64, TunedRun)> {
+        let base = job::kernel_content_key(k, true);
+        let key = tune::TuneKey {
+            content: base,
+            elems: input_bytes / 4,
+            threads: threads.min(icfg.accel.cores_per_cluster as u32),
+            config: icfg.name.clone(),
+        };
+        let choice = self.tune.choose(&key, k, icfg, teams, self.learn.as_ref());
+        if choice.fresh {
+            // Memo hits are silent: a same-kernel stream tunes once, loudly.
+            self.trace.record(SchedEvent::Tuned {
+                job,
+                variant: choice.variant.label(),
+                candidates: choice.candidates,
+                predicted: choice.predicted,
+                default_predicted: choice.default_predicted,
+            });
+        }
+        let static_predicted =
+            self.tune.static_predicted(&key, &choice.variant).expect("chosen from the memo");
+        let content = job::tuned_variant_content(base, &choice.variant);
+        let (lowered, cost, _) =
+            self.cache.acquire_ir_tuned(icfg, k, &choice.variant, threads, content)?;
+        Ok((lowered, cost, TunedRun { key, variant: choice.variant, static_predicted, teams }))
     }
 
     /// Run the queue dry.
@@ -1700,6 +1835,11 @@ impl Scheduler {
             lookahead: self.lookahead,
             preemption: self.preempt,
             preemptions: self.preempted.iter().sum(),
+            // Per-job opt-in (LaunchBuilder::autotune) surfaces the line too.
+            autotune: self.autotune || self.tune.searches() > 0,
+            tune_searches: self.tune.searches(),
+            tune_hits: self.tune.hits(),
+            tune_reranks: self.tune.reranks(),
             predict_samples: self.learn.as_ref().map_or(0, |l| l.samples()),
             predict_err_static_pct: self.learn.as_ref().map_or(0, |l| l.mean_static_err_pct()),
             predict_err_learned_pct: self.learn.as_ref().map_or(0, |l| l.mean_refined_err_pct()),
@@ -2692,5 +2832,80 @@ mod tests {
         assert_eq!(rj.completed, jobs.len());
         assert_eq!(rg.digest, rj.digest, "lookahead must never change numerics");
         assert_eq!((rg.lookahead, rj.lookahead), (1, 4));
+    }
+
+    #[test]
+    fn autotune_beats_the_default_recipe_without_changing_numerics() {
+        // conv2d N=182 is an overshoot case: the default AutoDMA descent
+        // halves its tile side to 59 (a 4×4 tile grid) where side 64 fits
+        // outright (3×3) — the tuner finds the win, the default recipe
+        // never does. Two same-kernel jobs with batching off additionally
+        // exercise the memo table (one search, one hit).
+        let stream = || [job("conv2d", 182, 21), job("conv2d", 182, 22)];
+        let run = |tune: bool| {
+            let mut s = Scheduler::new(aurora(), 1, Policy::Fifo)
+                .with_batching(false)
+                .with_autotune(tune);
+            for mut d in stream() {
+                d.variant = Variant::AutoDma;
+                s.submit(d);
+            }
+            s.drain().unwrap();
+            s
+        };
+        let off = run(false);
+        let on = run(true);
+        let (roff, ron) = (off.report(), on.report());
+        assert_eq!((roff.completed, ron.completed), (2, 2));
+        assert_eq!((roff.verify_failures, ron.verify_failures), (0, 0));
+        assert_eq!(roff.digest, ron.digest, "tuned recipes must preserve every bit");
+        assert!(ron.autotune && !roff.autotune);
+        assert_eq!((roff.tune_searches, roff.tune_hits), (0, 0));
+        assert_eq!((ron.tune_searches, ron.tune_hits), (1, 1));
+        assert!(
+            ron.makespan_cycles < roff.makespan_cycles,
+            "tuned {} must beat default {}",
+            ron.makespan_cycles,
+            roff.makespan_cycles
+        );
+        // The fresh search announces itself (once), memo hits stay silent.
+        let tuned: Vec<&SchedEvent> = on
+            .trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, SchedEvent::Tuned { .. }))
+            .collect();
+        assert_eq!(tuned.len(), 1, "{tuned:?}");
+        let SchedEvent::Tuned { variant, candidates, predicted, default_predicted, .. } =
+            tuned[0]
+        else {
+            unreachable!()
+        };
+        assert_ne!(variant.as_str(), "default");
+        assert!(*candidates > 1);
+        assert!(*predicted < *default_predicted);
+    }
+
+    #[test]
+    fn heterogeneous_pool_tunes_per_instance_config() {
+        use crate::config::preset::with_dma_width;
+        let base = aurora();
+        let cfgs = vec![with_dma_width(&base, 64), with_dma_width(&base, 128)];
+        let mut s = Scheduler::new_heterogeneous(cfgs, Policy::Fifo)
+            .with_batching(false)
+            .with_autotune(true);
+        for seed in 0..4 {
+            s.submit(JobDesc { variant: Variant::AutoDma, ..job("gemm", 24, seed) });
+        }
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.verify_failures, 0);
+        assert!(r.instances.iter().all(|i| i.jobs > 0), "{r}");
+        // The tuning key carries the instance's config name: each width ran
+        // its own search (and kept its own binary).
+        assert_eq!(r.tune_searches, 2, "{r}");
+        assert_eq!(r.tune_hits, 2);
+        assert!(r.cache_misses >= 2);
     }
 }

@@ -108,6 +108,18 @@ pub struct ServeReport {
     pub preemption: bool,
     /// Batch-slot displacements across all classes (0 with preemption off).
     pub preemptions: u64,
+    /// Whether schedule-time AutoDMA autotuning was enabled
+    /// ([`crate::sched::Scheduler::with_autotune`]).
+    pub autotune: bool,
+    /// Fresh tuning searches run (one per distinct
+    /// [`crate::sched::tune::TuneKey`] — kernel × footprint × width ×
+    /// instance config).
+    pub tune_searches: u64,
+    /// Variant choices served from the memoized search results.
+    pub tune_hits: u64,
+    /// Choices where measured cycles displaced the statically-best variant
+    /// (non-zero only with learning on — the measure → re-rank loop).
+    pub tune_reranks: u64,
     /// Completed jobs whose predictions were scored against measured device
     /// cycles (learning runs only).
     pub predict_samples: u64,
@@ -195,6 +207,15 @@ impl fmt::Display for ServeReport {
                 self.lookahead,
                 if self.preemption { "on" } else { "off" },
                 self.preemptions
+            )?;
+        }
+        // The autotune line renders only when tuning is on, so default serve
+        // output stays byte-identical to the pre-autotune report.
+        if self.autotune {
+            writeln!(
+                f,
+                "autotune      : {} search(es), {} memo hit(s), {} rerank(s)",
+                self.tune_searches, self.tune_hits, self.tune_reranks
             )?;
         }
         if self.learning && self.predict_samples > 0 {
@@ -289,6 +310,10 @@ mod tests {
             lookahead: 1,
             preemption: false,
             preemptions: 0,
+            autotune: false,
+            tune_searches: 0,
+            tune_hits: 0,
+            tune_reranks: 0,
             predict_samples: 0,
             predict_err_static_pct: 0,
             predict_err_learned_pct: 0,
@@ -389,6 +414,18 @@ mod tests {
         let s = r.to_string();
         assert!(s.contains("learn off, lookahead 2, preempt off"), "{s}");
         assert!(!s.contains("prediction"), "{s}");
+    }
+
+    #[test]
+    fn autotune_line_renders_only_when_enabled() {
+        let mut r = report();
+        assert!(!r.to_string().contains("autotune"), "default report must be unchanged");
+        r.autotune = true;
+        r.tune_searches = 3;
+        r.tune_hits = 17;
+        r.tune_reranks = 1;
+        let s = r.to_string();
+        assert!(s.contains("autotune      : 3 search(es), 17 memo hit(s), 1 rerank(s)"), "{s}");
     }
 
     #[test]

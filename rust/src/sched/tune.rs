@@ -1,0 +1,266 @@
+//! Schedule-time tuned-variant selection (the tuning cache next to
+//! [`super::cache::BinaryCache`]).
+//!
+//! [`crate::compiler::autotune::tune`] is a deterministic search, but it is
+//! not free: it transforms, lowers and scores every candidate recipe. The
+//! [`TuneStore`] memoizes one search result per
+//! `(kernel content, input elems, threads, config)` key — the same identity
+//! space the binary cache and [`super::learn::LearnStore`] use — so a
+//! stream of same-kernel jobs searches once and every later dispatch is a
+//! table lookup. Because the key carries the *instance's* config name, a
+//! heterogeneous pool tunes per instance kind: the same job can pick a
+//! different variant (and therefore a different binary) on a wide-NoC
+//! instance than on a narrow one.
+//!
+//! Selection is [`choose`](TuneStore::choose): rank the memoized candidates
+//! by predicted cycles — refined through the [`super::learn::LearnStore`]
+//! when learning is on, under each *variant's own* content key
+//! ([`super::job::tuned_variant_content`]) — and take the strict argmin,
+//! first-wins. With learning off the choice is the static winner, the same
+//! on every run; with learning on, measured cycles of a variant re-rank
+//! only that variant, so a mispredicted recipe loses its slot after real
+//! runs (the measure → re-rank loop). Either way the decision is a pure
+//! function of store state, so identical streams make identical choices.
+
+use super::job::tuned_variant_content;
+use super::learn::{LearnKey, LearnStore};
+use crate::compiler::autotune::{tune, TuneResult, TunedVariant};
+use crate::compiler::ir::Kernel;
+use crate::config::HeroConfig;
+use std::collections::HashMap;
+
+/// Identity of one tuning search: which kernel, at which input footprint,
+/// lowered how wide, for which platform. Mirrors
+/// [`super::cache::IrKey`]/[`super::learn::LearnKey`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    /// Base structural content hash of the kernel with AutoDMA on
+    /// ([`super::job::kernel_content_key`]) — *not* the tuned request key;
+    /// variants derive their per-binary keys from this.
+    pub content: u64,
+    /// Input footprint in f32 elements.
+    pub elems: u64,
+    /// Effective thread count (clamped to the instance's cluster width).
+    pub threads: u32,
+    /// Instance configuration name (per-slot tuning on heterogeneous pools).
+    pub config: String,
+}
+
+/// The outcome of one schedule-time variant selection.
+#[derive(Debug, Clone)]
+pub struct Choice {
+    pub variant: TunedVariant,
+    /// The score the variant won with (learn-refined when learning is on).
+    pub predicted: u64,
+    /// The default recipe's *static* prediction — the "untuned" yardstick
+    /// surfaced in traces and reports.
+    pub default_predicted: u64,
+    /// Surviving candidates in the memoized search result.
+    pub candidates: usize,
+    /// Whether this choice ran the search (first sight of the key) rather
+    /// than hitting the memo table.
+    pub fresh: bool,
+}
+
+/// The refinement identity of one tuned variant under `key`: measurements
+/// filed here describe exactly this recipe of this kernel on this config.
+/// Used by [`TuneStore::choose`] for ranking and by the scheduler when it
+/// books a tuned job's measured cycles.
+pub fn variant_learn_key(key: &TuneKey, variant: &TunedVariant, teams: u32) -> LearnKey {
+    LearnKey {
+        content: tuned_variant_content(key.content, variant),
+        elems: key.elems,
+        threads: key.threads,
+        teams,
+        config: key.config.clone(),
+    }
+}
+
+/// Memoized tuning searches plus selection statistics. Owned by the
+/// scheduler when `--autotune` is on; absent choices cost nothing.
+#[derive(Debug, Default)]
+pub struct TuneStore {
+    entries: HashMap<TuneKey, TuneResult>,
+    /// Fresh searches run (memo misses).
+    searches: u64,
+    /// Choices served from the memo table.
+    hits: u64,
+    /// Choices where learn-refined ranking displaced the static winner.
+    reranks: u64,
+}
+
+impl TuneStore {
+    pub fn new() -> Self {
+        TuneStore::default()
+    }
+
+    /// Pick the variant to compile for `key`, searching on first sight and
+    /// ranking the memoized candidates by (optionally learn-refined)
+    /// predicted cycles — strict argmin, first-wins, so the default recipe
+    /// (always candidate 0) is only displaced by a strictly better score.
+    pub fn choose(
+        &mut self,
+        key: &TuneKey,
+        k: &Kernel,
+        cfg: &HeroConfig,
+        teams: u32,
+        meas: Option<&LearnStore>,
+    ) -> Choice {
+        let fresh = !self.entries.contains_key(key);
+        if fresh {
+            self.searches += 1;
+            self.entries.insert(key.clone(), tune(k, cfg, key.threads));
+        } else {
+            self.hits += 1;
+        }
+        let result = self.entries.get(key).expect("inserted above");
+        let (mut best, mut best_score) = (0, u64::MAX);
+        for (i, c) in result.candidates.iter().enumerate() {
+            let score = match meas {
+                Some(m) => m.refine(&variant_learn_key(key, &c.variant, teams), c.predicted),
+                None => c.predicted,
+            };
+            if score < best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        if result.candidates[best].variant != result.best().variant {
+            self.reranks += 1;
+        }
+        Choice {
+            variant: result.candidates[best].variant,
+            predicted: best_score,
+            default_predicted: result.default_predicted(),
+            candidates: result.candidates.len(),
+            fresh,
+        }
+    }
+
+    /// The memoized static prediction of `variant` under `key` (the seed a
+    /// measurement observation blends against), if the search has run and
+    /// kept the variant.
+    pub fn static_predicted(&self, key: &TuneKey, variant: &TunedVariant) -> Option<u64> {
+        self.entries
+            .get(key)?
+            .candidates
+            .iter()
+            .find(|c| c.variant == *variant)
+            .map(|c| c.predicted)
+    }
+
+    /// Distinct keys searched so far.
+    pub fn tracked(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Fresh searches run (memo misses).
+    pub fn searches(&self) -> u64 {
+        self.searches
+    }
+
+    /// Choices served from the memo table.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Choices where measurements displaced the static winner.
+    pub fn reranks(&self) -> u64 {
+        self.reranks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::aurora;
+    use crate::sched::job::kernel_content_key;
+
+    fn key_for(k: &Kernel, cfg: &HeroConfig, elems: u64) -> TuneKey {
+        TuneKey {
+            content: kernel_content_key(k, true),
+            elems,
+            threads: 8,
+            config: cfg.name.clone(),
+        }
+    }
+
+    #[test]
+    fn choices_are_deterministic_and_memoized() {
+        let cfg = aurora();
+        let w = crate::workloads::gemm::build(112);
+        let key = key_for(&w.unmodified, &cfg, 3 * 112 * 112);
+        let mut store = TuneStore::new();
+        let a = store.choose(&key, &w.unmodified, &cfg, 1, None);
+        assert!(a.fresh, "first sight of a key runs the search");
+        let b = store.choose(&key, &w.unmodified, &cfg, 1, None);
+        assert!(!b.fresh, "second choice hits the memo table");
+        assert_eq!(a.variant, b.variant);
+        assert_eq!(a.predicted, b.predicted);
+        assert_eq!((store.searches(), store.hits(), store.tracked()), (1, 1, 1));
+        // Same inputs in a fresh store: same chosen variant (the
+        // TuneStore-decisions-are-deterministic acceptance criterion).
+        let mut other = TuneStore::new();
+        let c = other.choose(&key, &w.unmodified, &cfg, 1, None);
+        assert_eq!(a.variant, c.variant);
+        assert_eq!(a.predicted, c.predicted);
+    }
+
+    #[test]
+    fn static_choice_beats_default_where_the_search_found_a_win() {
+        let cfg = aurora();
+        let w = crate::workloads::gemm::build(112);
+        let key = key_for(&w.unmodified, &cfg, 3 * 112 * 112);
+        let mut store = TuneStore::new();
+        let c = store.choose(&key, &w.unmodified, &cfg, 1, None);
+        assert!(c.predicted < c.default_predicted, "{c:?}");
+        assert!(c.candidates > 1);
+        assert!(!c.variant.is_default());
+        assert_eq!(store.reranks(), 0, "no measurements, no re-ranking");
+        assert_eq!(store.static_predicted(&key, &c.variant), Some(c.predicted));
+    }
+
+    #[test]
+    fn measurements_rerank_the_choice() {
+        let cfg = aurora();
+        let w = crate::workloads::gemm::build(112);
+        let key = key_for(&w.unmodified, &cfg, 3 * 112 * 112);
+        let mut store = TuneStore::new();
+        let mut learn = LearnStore::new();
+        let first = store.choose(&key, &w.unmodified, &cfg, 1, Some(&learn));
+        assert!(!first.variant.is_default());
+        // The statically-favored variant measures far slower than predicted;
+        // the default recipe measures exactly as predicted.
+        let stat = store.static_predicted(&key, &first.variant).unwrap();
+        let def = first.default_predicted;
+        for _ in 0..8 {
+            learn.observe(variant_learn_key(&key, &first.variant, 1), stat, def * 10);
+            learn.observe(
+                variant_learn_key(&key, &TunedVariant::default_recipe(), 1),
+                def,
+                def,
+            );
+        }
+        let second = store.choose(&key, &w.unmodified, &cfg, 1, Some(&learn));
+        assert_ne!(second.variant, first.variant, "measured cycles must re-rank");
+        assert_eq!(store.reranks(), 1);
+        // Measurements refine per-variant: a third store with no
+        // measurements still makes the static choice.
+        let no_meas = store.choose(&key, &w.unmodified, &cfg, 1, None);
+        assert_eq!(no_meas.variant, first.variant);
+    }
+
+    #[test]
+    fn keys_separate_configs_and_sizes() {
+        let cfg = aurora();
+        let w = crate::workloads::gemm::build(112);
+        let mut store = TuneStore::new();
+        let k1 = key_for(&w.unmodified, &cfg, 3 * 112 * 112);
+        let mut k2 = k1.clone();
+        k2.config = "other".into();
+        store.choose(&k1, &w.unmodified, &cfg, 1, None);
+        store.choose(&k2, &w.unmodified, &cfg, 1, None);
+        assert_eq!(store.searches(), 2, "per-config keys search separately");
+        assert_eq!(store.tracked(), 2);
+    }
+}

@@ -80,7 +80,7 @@ use crate::compiler::ir::Kernel;
 use crate::compiler::AutoDmaReport;
 use crate::config::HeroConfig;
 use crate::sched::cache::BinaryCache;
-use crate::sched::job::{kernel_content_key, validate_shape};
+use crate::sched::job::{kernel_content_key, tuned_variant_content, validate_shape};
 use crate::sched::{
     digest_arrays, JobDesc, JobHandle, JobState, KernelJob, PayloadSrc, Policy, Priority,
     Scheduler, ServeReport,
@@ -224,6 +224,7 @@ struct Slot {
 struct SingleSpec {
     kernel: Kernel,
     autodma: bool,
+    autotune: bool,
     /// Per-parameter binding: kind + slot + the generation at submit
     /// (write-back skips slots freed in the meantime).
     binds: Vec<(ArgKind, usize, u32)>,
@@ -455,6 +456,7 @@ impl Session {
         LaunchBuilder {
             kernel: kernel.clone(),
             autodma: false,
+            autotune: false,
             binds: Vec::new(),
             fargs: Vec::new(),
             teams: 1,
@@ -635,9 +637,19 @@ impl Session {
         let Backend::Single { cfg, cache } = &mut self.backend else {
             unreachable!("single launches only queue on single sessions")
         };
-        let content = kernel_content_key(&spec.kernel, spec.autodma);
-        let (lowered, compile_cycles, autodma) =
-            cache.acquire_ir(cfg, &spec.kernel, spec.autodma, spec.threads, content)?;
+        // A tuned launch searches the AutoDMA knob space (deterministic —
+        // same kernel, config and width always pick the same winner) and
+        // compiles the winning recipe under its own cache key; untuned
+        // launches keep their pre-existing keys bit-unchanged.
+        let (lowered, compile_cycles, autodma) = if spec.autodma && spec.autotune {
+            let result = crate::compiler::autotune::tune(&spec.kernel, cfg, spec.threads);
+            let variant = result.best().variant;
+            let content = tuned_variant_content(kernel_content_key(&spec.kernel, true), &variant);
+            cache.acquire_ir_tuned(cfg, &spec.kernel, &variant, spec.threads, content)?
+        } else {
+            let content = kernel_content_key(&spec.kernel, spec.autodma);
+            cache.acquire_ir(cfg, &spec.kernel, spec.autodma, spec.threads, content)?
+        };
         let mut refs: Vec<&[f32]> = Vec::with_capacity(spec.inputs.len());
         for src in &spec.inputs {
             match src {
@@ -725,6 +737,34 @@ impl Session {
             .threads(threads)
             .submit()?;
         Ok(WorkloadRun { launch, buffers })
+    }
+
+    /// Submit, wait and read back one registry workload compiled under the
+    /// *tuned* AutoDMA recipe ([`LaunchBuilder::autotune`]): the `hero run
+    /// --autotune` path and the bench harness's tuned arm. Numerics are
+    /// bit-identical to the untuned AutoDMA variant — only the tiling
+    /// schedule may differ.
+    pub fn run_workload_tuned(
+        &mut self,
+        w: &Workload,
+        threads: u32,
+        seed: u64,
+    ) -> Result<WorkloadOutcome> {
+        let data = w.gen_data(seed);
+        let buffers: Vec<Buffer> = data.iter().map(|d| self.buffer_from_f32(d)).collect();
+        let kernel = variant_kernel(w, Variant::AutoDma).clone();
+        let refs: Vec<&Buffer> = buffers.iter().collect();
+        let launch = self
+            .launch(&kernel)
+            .autodma(true)
+            .autotune(true)
+            .args(&refs)
+            .fargs(&w.fargs)
+            .threads(threads)
+            .submit()?;
+        let result = self.wait(&launch)?;
+        let arrays = self.arrays(&buffers)?;
+        Ok(WorkloadOutcome { result, arrays, buffers })
     }
 
     /// Submit, wait and read back one registry workload (the synchronous
@@ -868,6 +908,7 @@ pub struct LaunchBuilder<'s> {
     session: &'s mut Session,
     kernel: Kernel,
     autodma: bool,
+    autotune: bool,
     binds: Vec<BuilderBind>,
     fargs: Vec<f32>,
     teams: usize,
@@ -981,6 +1022,19 @@ impl LaunchBuilder<'_> {
     /// plain OpenMP form).
     pub fn autodma(mut self, on: bool) -> Self {
         self.autodma = on;
+        self
+    }
+
+    /// Search the AutoDMA knob space for this launch
+    /// ([`crate::compiler::autotune`]) instead of compiling the single
+    /// default recipe: tile side, double-buffering and lowering variant are
+    /// ranked by the cycle model and the winner's binary is compiled under
+    /// its own cache key. Implies nothing unless [`LaunchBuilder::autodma`]
+    /// is also on; on a pooled session the scheduler's
+    /// [`Scheduler::with_autotune`](crate::sched::Scheduler::with_autotune)
+    /// store memoizes the search across launches.
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.autotune = on;
         self
     }
 
@@ -1105,6 +1159,7 @@ impl LaunchBuilder<'_> {
             Backend::Single { .. } => LaunchState::PendingSingle(Box::new(SingleSpec {
                 kernel: self.kernel,
                 autodma: self.autodma,
+                autotune: self.autotune,
                 binds: binds_rec,
                 inputs: srcs,
                 fargs: self.fargs,
@@ -1131,6 +1186,7 @@ impl LaunchBuilder<'_> {
                 job.teams = self.teams;
                 job.priority = self.priority;
                 job.autodma = self.autodma;
+                job.autotune = self.autotune;
                 job.svm = self.svm_mode;
                 job.max_cycles = self.max_cycles;
                 let handle = sched.submit_kernel(job);
@@ -1211,6 +1267,31 @@ mod tests {
         assert_eq!(r2.compile_cycles, 0, "structurally identical kernel must hit");
         // The second launch consumed the first one's output (4.0 = 1*2*2).
         assert_eq!(sess.read_f32(&x).unwrap()[0], 4.0);
+    }
+
+    #[test]
+    fn tuned_launches_match_untuned_numerics_on_both_backends() {
+        // `.autotune(true)` may pick a different tiling recipe, but every
+        // surviving candidate computes the same values — the digest is the
+        // contract, on the single backend and through the pooled scheduler.
+        let w = crate::workloads::gemm::build(24);
+        let run = |mut sess: Session, tune: bool| {
+            let data = w.gen_data(7);
+            let bufs: Vec<Buffer> = data.iter().map(|d| sess.buffer_from_f32(d)).collect();
+            let refs: Vec<&Buffer> = bufs.iter().collect();
+            let l = sess
+                .launch(&w.unmodified)
+                .autodma(true)
+                .autotune(tune)
+                .args(&refs)
+                .fargs(&w.fargs)
+                .submit()
+                .unwrap();
+            sess.wait(&l).unwrap().digest
+        };
+        let base = run(Session::single(aurora()), false);
+        assert_eq!(run(Session::single(aurora()), true), base);
+        assert_eq!(run(Session::pool(aurora(), 2), true), base);
     }
 
     #[test]

@@ -245,6 +245,19 @@ pub enum SchedEvent {
     /// time, not numerics (preemption — see
     /// `crate::sched::Scheduler::with_preemption`).
     Preempted { job: usize, by: usize, at: u64 },
+    /// An autotuned dispatch ran the AutoDMA knob search for a key it had
+    /// not seen (memo hits are silent): `variant` is the chosen recipe's
+    /// label, `candidates` the surviving search-space size, and
+    /// `predicted`/`default_predicted` the chosen and default-recipe cycle
+    /// scores (see [`crate::sched::tune`]). Untimed — tuning is host-side
+    /// work, like compilation.
+    Tuned {
+        job: usize,
+        variant: String,
+        candidates: usize,
+        predicted: u64,
+        default_predicted: u64,
+    },
 }
 
 impl SchedEvent {
@@ -304,6 +317,12 @@ impl SchedEvent {
             ),
             SchedEvent::Preempted { job, by, at } => {
                 format!("preempt   job {job} displaced by job {by} at cycle {at}")
+            }
+            SchedEvent::Tuned { job, variant, candidates, predicted, default_predicted } => {
+                format!(
+                    "tune      job {job} -> {variant} ({candidates} candidate(s), \
+                     predicted {predicted} cy vs default {default_predicted})"
+                )
             }
         }
     }
@@ -388,6 +407,26 @@ mod tests {
         let s = t.render();
         assert!(s.contains("preempt   job 3 displaced by job 9 at cycle 4200"), "{s}");
         assert!(t.dispatch_order().is_empty(), "preemptions are not dispatches");
+    }
+
+    #[test]
+    fn tune_events_render_variant_and_scores() {
+        let mut t = SchedTrace::new();
+        t.record(SchedEvent::Tuned {
+            job: 4,
+            variant: "tile=64+db".into(),
+            candidates: 7,
+            predicted: 90_000,
+            default_predicted: 120_000,
+        });
+        let s = t.render();
+        assert!(
+            s.contains("tune      job 4 -> tile=64+db (7 candidate(s)"),
+            "{s}"
+        );
+        assert!(s.contains("predicted 90000 cy vs default 120000"), "{s}");
+        assert!(t.dispatch_order().is_empty(), "tuning is not a dispatch");
+        assert_eq!(t.events[0].cycle(), None, "tuning is host-side, untimed");
     }
 
     #[test]

@@ -872,6 +872,143 @@ fn prop_sched_selftuning_never_touches_numerics() {
 }
 
 #[test]
+fn prop_sched_autotune_off_is_bit_identical() {
+    // The autotune machinery must be invisible until asked for, at event
+    // granularity: an explicit `with_autotune(false)` is the default
+    // construction, and `with_autotune(true)` on a stream with no AutoDMA
+    // jobs never engages (the search only arms on autodma-compiled jobs).
+    // Both must reproduce the untuned scheduler's *full event sequence* —
+    // not just the digest — on fuzzed streams.
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 7), rng.range(1, 1 << 20), rng.bool()),
+        |&(n, seed, batch)| {
+            // Strip AutoDMA variants: this property is about the machinery
+            // staying dormant, so the stream must give it nothing to arm on.
+            let jobs: Vec<synth::JobDesc> = synth::tiny_jobs(n, seed)
+                .iter()
+                .map(|j| {
+                    let mut j = *j;
+                    if j.variant == Variant::AutoDma {
+                        j.variant = Variant::Handwritten;
+                    }
+                    j
+                })
+                .collect();
+            let run = |s: Scheduler| -> Result<Scheduler, String> {
+                let mut s = s.with_batching(batch).with_verify(false);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok(s)
+            };
+            for pool in [1usize, 2] {
+                let mk = || Scheduler::new(aurora(), pool, Policy::Sjf);
+                let base = run(mk())?;
+                let off = run(mk().with_autotune(false))?;
+                if base.trace.events != off.trace.events {
+                    return Err(format!("pool={pool}: with_autotune(false) is not the default"));
+                }
+                let armed = run(mk().with_autotune(true))?;
+                if base.trace.events != armed.trace.events {
+                    return Err(format!(
+                        "pool={pool}: autotune engaged on a stream with no AutoDMA jobs"
+                    ));
+                }
+                let r = armed.report();
+                if r.tune_searches != 0 || r.tune_hits != 0 {
+                    return Err(format!(
+                        "pool={pool}: {} search(es)/{} hit(s) without an autodma job",
+                        r.tune_searches, r.tune_hits
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sched_autotune_never_touches_numerics() {
+    // Tuning moves *time*, never numerics: a fuzzed AutoDMA job stream
+    // must produce a bit-identical digest with schedule-time tuning on,
+    // across pool sizes and both placement engines — every job completing
+    // and the tuner actually searching (memoized: one search per distinct
+    // (kernel, size) key, memo hits for the rest).
+    use herov2::sched::{Placement, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 6), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let jobs: Vec<synth::JobDesc> = (0..n)
+                .map(|i| synth::JobDesc {
+                    kernel: *rng.pick(&["gemm", "conv2d"]),
+                    size: *rng.pick(&[24usize, 32]),
+                    variant: Variant::AutoDma,
+                    threads: 8,
+                    seed: rng.next_u64(),
+                    arrival: i as u64 * 30,
+                    priority: herov2::sched::Priority::Normal,
+                })
+                .collect();
+            let keys: std::collections::BTreeSet<(&str, usize)> =
+                jobs.iter().map(|j| (j.kernel, j.size)).collect();
+            let baseline = {
+                let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_verify(false);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                s.report().digest
+            };
+            for pool in [1usize, 2, 4] {
+                for placement in [Placement::EarliestFree, Placement::Pressure] {
+                    // Batching off so the search/hit count is exact: every
+                    // job consults the TuneStore itself (a batch would share
+                    // its head's lookup).
+                    let mut s = Scheduler::new(aurora(), pool, Policy::Sjf)
+                        .with_placement(placement)
+                        .with_autotune(true)
+                        .with_batching(false)
+                        .with_verify(false);
+                    s.submit_all(&jobs);
+                    s.drain().map_err(|e| e.to_string())?;
+                    let r = s.report();
+                    if r.completed != jobs.len() {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: only {} of {} completed",
+                            r.completed,
+                            jobs.len()
+                        ));
+                    }
+                    if r.digest != baseline {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: tuning changed numerics \
+                             ({:#x} vs {baseline:#x})",
+                            r.digest
+                        ));
+                    }
+                    if r.tune_searches as usize != keys.len()
+                        || (r.tune_searches + r.tune_hits) as usize != jobs.len()
+                    {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: {} search(es) + {} hit(s) for \
+                             {} jobs over {} keys",
+                            r.tune_searches,
+                            r.tune_hits,
+                            jobs.len(),
+                            keys.len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_fleet_of_one_is_bit_identical_to_plain_scheduler() {
     // The fleet router's degenerate-identity guarantee: a fleet of one
     // board with the single default tenant is a zero-cost wrapper. The
