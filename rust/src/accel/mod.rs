@@ -25,6 +25,19 @@ const FETCH_GROUP_BYTES: u64 = 8;
 /// Wake-up latency of a sleeping core on `Fork` (event-unit trigger).
 const FORK_WAKE_CYCLES: u64 = 5;
 
+/// Marker prefix of the error raised when an offload exhausts its
+/// simulation budget ([`Accel::run`]'s `max_cycles`). The scheduler's
+/// watchdog ([`crate::sched::Scheduler::with_watchdog`]) keys on this
+/// exact string to turn a budget overrun into a deadline fault — change
+/// both together.
+pub const BUDGET_EXHAUSTED_MARKER: &str = "offload did not complete";
+
+/// Whether an error (anywhere in its chain) is an offload-budget
+/// exhaustion, as opposed to a genuine execution error.
+pub fn is_budget_exhausted(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.to_string().contains(BUDGET_EXHAUSTED_MARKER))
+}
+
 /// The accelerator: everything on the device side of the mailbox.
 pub struct Accel {
     pub cfg: HeroConfig,
@@ -164,12 +177,16 @@ impl Accel {
 
     /// Run until the offload completes or `max_cycles` elapse. Returns the
     /// number of cycles executed.
+    ///
+    /// Budget exhaustion bails with [`BUDGET_EXHAUSTED_MARKER`] so the
+    /// scheduler's watchdog can tell it apart from genuine execution
+    /// errors ([`is_budget_exhausted`]).
     pub fn run(&mut self, max_cycles: u64) -> Result<u64> {
         let start = self.now;
         while !self.offload_done() {
             if self.now - start >= max_cycles {
                 bail!(
-                    "offload did not complete within {max_cycles} cycles \
+                    "{BUDGET_EXHAUSTED_MARKER} within {max_cycles} cycles \
                      (pc of cluster 0 core 0: {})",
                     self.clusters[0].cores[0].pc
                 );

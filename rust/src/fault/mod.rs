@@ -1,0 +1,306 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a *seeded, reproducible* failure schedule: given the
+//! same plan, a serve run injects exactly the same faults at exactly the
+//! same points, so faulty runs are as bit-reproducible as healthy ones —
+//! every fault is expressed in simulated cycles or drawn from a counter-based
+//! hash, never from wall-clock or ambient randomness. Three fault classes
+//! model the failure modes a carrier-board fleet sees:
+//!
+//! * **Transient kernel faults** ([`FaultKind::Transient`]): the offload
+//!   runs to completion but delivers a fault instead of a result (a soft
+//!   error in the datapath). The instance was occupied for the full run;
+//!   the result is discarded and never touches digests, feeds or learning.
+//! * **DMA/NoC timeouts** ([`FaultKind::Timeout`]): the offload hangs on
+//!   its transfer path and the watchdog reclaims the instance after the
+//!   job's deadline elapses (deadline = watchdog multiplier × predicted
+//!   cycles; see `sched/README.md`).
+//! * **Board failures** ([`BoardFault`]): in a fleet, a whole board goes
+//!   unhealthy at cycle `down_at` (optionally recovering at `up_at`). The
+//!   router drains dispatches that started before the failure, evacuates
+//!   the queued remainder to surviving boards, and records the health
+//!   timeline (see `fleet/README.md`).
+//!
+//! A fourth kind, [`FaultKind::DeadlineExceeded`], is *detected*, not
+//! injected: with a watchdog armed, a job whose measured cycles exceed its
+//! deadline — or whose simulation budget ([`crate::sched::KernelJob`]'s
+//! `max_cycles`) runs out — faults instead of completing. Detected
+//! deadline faults are deterministic (the same job overruns every time),
+//! so they fail permanently rather than burning retries.
+//!
+//! ## Determinism contract
+//!
+//! Instance-level faults are drawn per `(job, attempt)` from a splitmix64
+//! hash of the plan seed ([`FaultPlan::draw`]) — no RNG state advances, so
+//! whether job 17's second attempt faults is a pure function of the plan,
+//! independent of pool size, placement, policy or what other jobs did.
+//! Retried attempts re-draw with a fresh counter, which is what lets a
+//! transiently-faulted job eventually succeed.
+//!
+//! ## Backoff math
+//!
+//! Retry `n` (1-based) of a faulted job becomes eligible
+//! [`RETRY_BACKOFF_CYCLES`]` × 2^(n-1)` cycles after the faulted attempt's
+//! occupancy window closed ([`backoff_cycles`]; the shift saturates at 20
+//! so the delay stays finite). The job re-enters the queue as ready work
+//! with its priority, arrival stamp and dataflow edges intact — only its
+//! *effective arrival* is floored by the backoff.
+
+/// Cycles of backoff before a faulted job's first retry; doubles per
+/// attempt ([`backoff_cycles`]).
+pub const RETRY_BACKOFF_CYCLES: u64 = 1_000;
+
+/// Watchdog deadline multiplier assumed when a plan injects timeout
+/// faults but no explicit multiplier was configured
+/// (`Scheduler::with_watchdog`).
+pub const DEFAULT_WATCHDOG_MULT: u64 = 4;
+
+/// Exponential backoff: the delay between a faulted attempt settling and
+/// its retry (attempt `n`, 1-based) becoming eligible for dispatch.
+pub fn backoff_cycles(attempt: u32) -> u64 {
+    RETRY_BACKOFF_CYCLES << attempt.saturating_sub(1).min(20)
+}
+
+/// What kind of fault a job suffered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The offload completed but produced a fault instead of a result.
+    Transient,
+    /// The offload's DMA/NoC path hung; the watchdog reclaimed the
+    /// instance at the job's deadline.
+    Timeout,
+    /// The job overran its measured deadline or simulation budget
+    /// (detected, deterministic, never retried).
+    DeadlineExceeded,
+}
+
+impl FaultKind {
+    /// Stable label (trace events and report lines).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Timeout => "timeout",
+            FaultKind::DeadlineExceeded => "deadline",
+        }
+    }
+
+    /// Index into per-kind counters (`[transient, timeout, deadline]`).
+    pub fn index(&self) -> usize {
+        match self {
+            FaultKind::Transient => 0,
+            FaultKind::Timeout => 1,
+            FaultKind::DeadlineExceeded => 2,
+        }
+    }
+
+    /// Whether the retry policy applies: injected faults are worth
+    /// retrying (the next attempt draws fresh), detected deadline
+    /// overruns are deterministic and are not.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, FaultKind::DeadlineExceeded)
+    }
+}
+
+/// A board-level failure in a fleet: the board is unhealthy from
+/// `down_at`, optionally recovering at `up_at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoardFault {
+    pub board: usize,
+    /// Cycle the board goes unhealthy (dispatches that started earlier
+    /// complete; the queued remainder is evacuated).
+    pub down_at: u64,
+    /// Cycle the board rejoins the healthy set, if it recovers.
+    pub up_at: Option<u64>,
+}
+
+/// A seeded, reproducible fault schedule (see the module docs for the
+/// taxonomy and determinism contract). The default plan injects nothing.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// Hash seed for the per-(job, attempt) instance-fault draws.
+    pub seed: u64,
+    /// Percent (0–100) of attempts that suffer a transient kernel fault.
+    pub transient_pct: u32,
+    /// Percent (0–100) of attempts that suffer a DMA/NoC timeout.
+    pub timeout_pct: u32,
+    /// Board-level failures (fleet runs only; single boards ignore them).
+    pub boards: Vec<BoardFault>,
+}
+
+/// splitmix64 finalizer — the counter-based hash behind [`FaultPlan::draw`].
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Whether the plan injects instance-level (per-attempt) faults at
+    /// all — what obliges the scheduler to compute predictions (timeout
+    /// occupancy is deadline-priced).
+    pub fn has_instance_faults(&self) -> bool {
+        self.transient_pct > 0 || self.timeout_pct > 0
+    }
+
+    /// Deterministically decide whether attempt `attempt` of job `job`
+    /// faults, and how. Pure function of `(seed, job, attempt)`.
+    pub fn draw(&self, job: u64, attempt: u32) -> Option<FaultKind> {
+        if !self.has_instance_faults() {
+            return None;
+        }
+        let h = mix(self.seed ^ mix(job ^ (u64::from(attempt) << 40)));
+        let roll = (h % 100) as u32;
+        if roll < self.transient_pct {
+            Some(FaultKind::Transient)
+        } else if roll < self.transient_pct + self.timeout_pct {
+            Some(FaultKind::Timeout)
+        } else {
+            None
+        }
+    }
+
+    /// The plan's board failures that apply to a fleet of `boards`
+    /// boards, in `down_at` order (ties by board index — the order the
+    /// router processes them in).
+    pub fn kills_for(&self, boards: usize) -> Vec<BoardFault> {
+        let mut kills: Vec<BoardFault> =
+            self.boards.iter().copied().filter(|k| k.board < boards).collect();
+        kills.sort_by_key(|k| (k.down_at, k.board));
+        kills
+    }
+}
+
+/// Parse a `--faults` plan: comma-separated clauses
+/// `seed=N`, `transient=PCT`, `timeout=PCT`, `kill=BOARD@CYCLE`,
+/// `recover=BOARD@CYCLE` — or the literal `demo` preset (seed 7, 10%
+/// transient faults, board 1 killed mid-stream), the CI smoke plan.
+/// Percentages must sum to at most 100; `recover` needs a matching
+/// earlier `kill` with a smaller cycle.
+pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+    if spec == "demo" {
+        return Ok(FaultPlan {
+            seed: 7,
+            transient_pct: 10,
+            timeout_pct: 0,
+            boards: vec![BoardFault { board: 1, down_at: 1_000_000, up_at: None }],
+        });
+    }
+    let mut plan = FaultPlan::default();
+    for raw in spec.split(',') {
+        let raw = raw.trim();
+        let Some((key, val)) = raw.split_once('=') else {
+            return Err(format!(
+                "fault clause {raw:?}: expected `key=value` \
+                 (seed=N, transient=PCT, timeout=PCT, kill=B@C, recover=B@C)"
+            ));
+        };
+        let number = |field: &str, what: &str| -> Result<u64, String> {
+            field.parse().map_err(|_| format!("fault clause {raw:?}: bad {what} {field:?}"))
+        };
+        let board_at = |what: &str| -> Result<(usize, u64), String> {
+            let Some((b, c)) = val.split_once('@') else {
+                return Err(format!("fault clause {raw:?}: expected `{what}=BOARD@CYCLE`"));
+            };
+            Ok((number(b, "board")? as usize, number(c, "cycle")?))
+        };
+        match key {
+            "seed" => plan.seed = number(val, "seed")?,
+            "transient" => plan.transient_pct = number(val, "percentage")? as u32,
+            "timeout" => plan.timeout_pct = number(val, "percentage")? as u32,
+            "kill" => {
+                let (board, down_at) = board_at("kill")?;
+                if plan.boards.iter().any(|k| k.board == board) {
+                    return Err(format!("duplicate kill for board {board}"));
+                }
+                plan.boards.push(BoardFault { board, down_at, up_at: None });
+            }
+            "recover" => {
+                let (board, up_at) = board_at("recover")?;
+                let Some(k) = plan.boards.iter_mut().find(|k| k.board == board) else {
+                    return Err(format!("recover for board {board} without a matching kill"));
+                };
+                if up_at <= k.down_at {
+                    return Err(format!(
+                        "board {board} recovers at cycle {up_at}, not after its kill at \
+                         cycle {}",
+                        k.down_at
+                    ));
+                }
+                k.up_at = Some(up_at);
+            }
+            _ => return Err(format!("unknown fault clause {raw:?}")),
+        }
+    }
+    if plan.transient_pct + plan.timeout_pct > 100 {
+        return Err(format!(
+            "transient ({}) + timeout ({}) percentages exceed 100",
+            plan.transient_pct, plan.timeout_pct
+        ));
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_grammar_and_rejects_garbage() {
+        let p = parse("seed=42,transient=5,timeout=3,kill=1@5000,recover=1@9000").unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!((p.transient_pct, p.timeout_pct), (5, 3));
+        assert_eq!(
+            p.boards,
+            vec![BoardFault { board: 1, down_at: 5000, up_at: Some(9000) }]
+        );
+        let demo = parse("demo").unwrap();
+        assert!(demo.has_instance_faults());
+        assert_eq!(demo.kills_for(2).len(), 1);
+        assert_eq!(demo.kills_for(1).len(), 0, "kills outside the fleet are dropped");
+        assert!(parse("").unwrap_err().contains("key=value"));
+        assert!(parse("chaos=1").unwrap_err().contains("unknown fault clause"));
+        assert!(parse("seed=x").unwrap_err().contains("bad seed"));
+        assert!(parse("kill=1").unwrap_err().contains("BOARD@CYCLE"));
+        assert!(parse("kill=1@5,kill=1@9").unwrap_err().contains("duplicate kill"));
+        assert!(parse("recover=0@5").unwrap_err().contains("without a matching kill"));
+        assert!(parse("kill=0@9,recover=0@9").unwrap_err().contains("not after its kill"));
+        assert!(parse("transient=80,timeout=30").unwrap_err().contains("exceed 100"));
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_attempt_sensitive() {
+        let p = parse("seed=7,transient=10,timeout=10").unwrap();
+        for job in 0..64u64 {
+            for attempt in 0..4u32 {
+                assert_eq!(p.draw(job, attempt), p.draw(job, attempt), "pure function");
+            }
+        }
+        // Roughly the configured rate, and not all draws agree across
+        // attempts (what makes retries worth anything).
+        let faults = (0..1000u64).filter(|&j| p.draw(j, 0).is_some()).count();
+        assert!((100..350).contains(&faults), "~20% of 1000 draws, got {faults}");
+        let changed = (0..1000u64).filter(|&j| p.draw(j, 0) != p.draw(j, 1)).count();
+        assert!(changed > 0, "fresh attempts must re-draw");
+        assert_eq!(FaultPlan::default().draw(3, 0), None, "empty plans never fault");
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_cycles(1), RETRY_BACKOFF_CYCLES);
+        assert_eq!(backoff_cycles(2), 2 * RETRY_BACKOFF_CYCLES);
+        assert_eq!(backoff_cycles(3), 4 * RETRY_BACKOFF_CYCLES);
+        assert_eq!(backoff_cycles(21), backoff_cycles(40), "shift saturates");
+    }
+
+    #[test]
+    fn kind_labels_and_retryability() {
+        assert_eq!(FaultKind::Transient.label(), "transient");
+        assert_eq!(FaultKind::Timeout.label(), "timeout");
+        assert_eq!(FaultKind::DeadlineExceeded.label(), "deadline");
+        assert!(FaultKind::Transient.retryable());
+        assert!(FaultKind::Timeout.retryable());
+        assert!(!FaultKind::DeadlineExceeded.retryable());
+        assert_eq!(FaultKind::Timeout.index(), 1);
+    }
+}

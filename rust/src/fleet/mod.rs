@@ -46,15 +46,43 @@
 //! degrade other tenants beyond its share ([`FleetReport`] carries
 //! per-tenant per-class p50/p95 turnaround to verify exactly that).
 //!
+//! ## Resilience
+//!
+//! A [`crate::fault::FaultPlan`] may schedule *board failures*
+//! ([`Router::with_faults`]): at its kill cycle a board stops accepting
+//! dispatches — work already dispatched completes (the front-end dies,
+//! the compute fabric finishes its assigned windows), queued named jobs
+//! are **evacuated** and re-routed to surviving boards through exactly
+//! the admission-time scoring (health-aware: unhealthy boards are
+//! skipped by every policy), their fleet handles following them to the
+//! new board ([`JobState::Migrated`] on the source,
+//! [`SchedEvent::Migrated`] in the timeline). Queued *kernel* jobs carry
+//! board-local dataflow and payloads, so they fail in place. A fault
+//! plan may also schedule recovery (`recover=B@C`): the board rejoins
+//! the healthy set at that cycle and later routing sees it again. The
+//! per-board health timelines, migration counts and board-level
+//! fault/retry totals surface in [`FleetReport`].
+//!
+//! With a retry-after queue armed ([`Router::with_queue`]), an
+//! over-quota submission is *deferred* at the front tier instead of
+//! refused — it waits in a bounded queue (overflow still refuses) and is
+//! re-quoted against its tenant's live quota once earlier jobs settle,
+//! then routed with the same scoring as a fresh submission
+//! ([`FleetReport::queued_then_admitted`]).
+//!
 //! ## Degenerate identity
 //!
 //! A fleet of one board with the single default tenant is a *zero-cost
 //! wrapper*: `submit` routes to board 0 without scoring and the board
 //! sees byte-identical submissions, so the event sequence, report and
 //! digest are bit-identical to driving the `Scheduler` directly
-//! (property-tested in `tests/properties.rs`).
+//! (property-tested in `tests/properties.rs`). Likewise with no board
+//! faults and no retry-after queue, `drain` degenerates to one pass of
+//! per-board drains — the fault-free fleet is bit-identical to the
+//! pre-resilience router (property-tested).
 
 use crate::config::HeroConfig;
+use crate::fault::{BoardFault, FaultPlan};
 use crate::sched::report::percentile;
 use crate::sched::{cache, place, policy, ClassReport, ServeReport};
 use crate::sched::{JobDesc, JobHandle, JobOutcome, JobState, Policy, Priority, Scheduler};
@@ -185,6 +213,10 @@ enum Routed {
     /// Refused at the front tier by the tenant's quota — no board ever
     /// saw it.
     Quota { reason: String },
+    /// Deferred in the front-tier retry-after queue ([`Router::with_queue`]):
+    /// over quota at submission, waiting to be re-quoted once earlier jobs
+    /// settle. The descriptor and its byte footprint ride along.
+    Deferred { desc: JobDesc, bytes: u64 },
 }
 
 /// One fleet submission's record, in global submission order.
@@ -226,6 +258,23 @@ pub struct Router {
     affinity_decisions: u64,
     affinity_hits: u64,
     rr_next: usize,
+    /// Scheduled board failures ([`Router::with_faults`]), sorted by
+    /// `(down_at, board)`; consumed by `drain`.
+    kills: Vec<BoardFault>,
+    /// Current health per board — routing skips unhealthy boards.
+    healthy: Vec<bool>,
+    /// Per board: health transitions `(cycle, healthy)` in drain order
+    /// (empty = never failed). Surfaces in [`FleetReport::board_health`].
+    health: Vec<Vec<(u64, bool)>>,
+    /// Jobs evacuated off failed boards and resubmitted elsewhere.
+    migrations: u64,
+    /// Retry-after queue bound (0 = queue off: over-quota submissions are
+    /// refused outright, the pre-resilience behavior).
+    queue_depth: usize,
+    /// Jobs currently deferred ([`Routed::Deferred`] entries in `jobs`).
+    deferred: usize,
+    /// Deferred submissions later admitted by a re-quote.
+    queued_then_admitted: u64,
 }
 
 impl Router {
@@ -236,6 +285,7 @@ impl Router {
         assert!(!boards.is_empty(), "a fleet needs at least one board");
         let proj_free = boards.iter().map(|b| vec![0; b.pool().len()]).collect();
         let warm = boards.iter().map(|_| HashSet::new()).collect();
+        let n = boards.len();
         Router {
             boards,
             route: RoutePolicy::Finish,
@@ -247,6 +297,13 @@ impl Router {
             affinity_decisions: 0,
             affinity_hits: 0,
             rr_next: 0,
+            kills: Vec::new(),
+            healthy: vec![true; n],
+            health: vec![Vec::new(); n],
+            migrations: 0,
+            queue_depth: 0,
+            deferred: 0,
+            queued_then_admitted: 0,
         }
     }
 
@@ -264,6 +321,26 @@ impl Router {
     /// Choose the routing policy (builder style).
     pub fn with_route(mut self, route: RoutePolicy) -> Router {
         self.route = route;
+        self
+    }
+
+    /// Arm the plan's *board-level* failures on this fleet (builder
+    /// style): each in-range `kill=B@C` takes board B down at cycle C
+    /// during [`Router::drain`], with optional recovery. Instance-level
+    /// fault rates apply per board via
+    /// [`Scheduler::with_faults`](crate::sched::Scheduler::with_faults),
+    /// not here. An empty plan changes nothing.
+    pub fn with_faults(mut self, plan: &FaultPlan) -> Router {
+        self.kills = plan.kills_for(self.boards.len());
+        self
+    }
+
+    /// Arm the front-tier retry-after queue (builder style): up to
+    /// `depth` over-quota submissions wait at the router instead of
+    /// being refused, re-quoted as earlier jobs settle. Depth 0 keeps
+    /// the queue off (refuse outright — the default).
+    pub fn with_queue(mut self, depth: usize) -> Router {
+        self.queue_depth = depth;
         self
     }
 
@@ -335,6 +412,18 @@ impl Router {
         self.stats[tenant].submitted += 1;
         let bytes = desc.workload().map(|w| policy::job_bytes(&w)).unwrap_or(0);
         if let Some(reason) = self.quota_violation(tenant, bytes) {
+            // Retry-after: defer instead of refusing, while the bounded
+            // queue has room. Refusal becomes the overflow behavior.
+            if self.deferred < self.queue_depth {
+                self.deferred += 1;
+                self.jobs.push(FleetJob {
+                    tenant,
+                    priority: desc.priority,
+                    arrival: desc.arrival,
+                    routed: Routed::Deferred { desc, bytes },
+                });
+                return FleetHandle(id);
+            }
             self.stats[tenant].quota_rejected += 1;
             self.jobs.push(FleetJob {
                 tenant,
@@ -391,16 +480,26 @@ impl Router {
 
     /// Pick the board for an admitted job. Single-board fleets
     /// short-circuit to board 0 — the degenerate-identity guarantee costs
-    /// nothing and books no affinity decisions.
+    /// nothing and books no affinity decisions. Unhealthy boards are
+    /// skipped by every policy (with all boards healthy — the only state
+    /// possible before a fault plan is armed — the decisions are
+    /// byte-identical to health-blind routing).
     fn route_board(&mut self, desc: &JobDesc) -> usize {
         if self.boards.len() == 1 {
             return 0;
         }
         match self.route {
             RoutePolicy::RoundRobin => {
-                let b = self.rr_next % self.boards.len();
-                self.rr_next += 1;
-                b
+                // Alternate as before, stepping over unhealthy boards
+                // (bounded: some board is healthy or no routing happens).
+                for _ in 0..self.boards.len() {
+                    let b = self.rr_next % self.boards.len();
+                    self.rr_next += 1;
+                    if self.healthy[b] {
+                        return b;
+                    }
+                }
+                0
             }
             RoutePolicy::Finish => self.route_by_finish(desc),
         }
@@ -424,6 +523,9 @@ impl Router {
         let mut best: Option<(u64, u64, u64, usize, usize)> = None;
         let mut best_warm = false;
         for (b, board) in self.boards.iter().enumerate() {
+            if !self.healthy[b] {
+                continue;
+            }
             let cfg = board.config();
             let eff_threads = desc.threads.min(cfg.accel.cores_per_cluster as u32);
             let predicted = policy::predict_job(&w, desc.variant, eff_threads);
@@ -452,7 +554,7 @@ impl Router {
                 }
             }
         }
-        let (finish, _, _, b, slot) = best.expect("fleet has at least one board slot");
+        let (finish, _, _, b, slot) = best.expect("some board is healthy (caller-checked)");
         self.affinity_decisions += 1;
         if best_warm {
             self.affinity_hits += 1;
@@ -466,10 +568,11 @@ impl Router {
         b
     }
 
-    /// The board whose earliest slot (projected) frees first; ties break
-    /// toward the lowest index.
+    /// The healthy board whose earliest slot (projected) frees first;
+    /// ties break toward the lowest index.
     fn least_loaded(&self) -> usize {
         (0..self.boards.len())
+            .filter(|&b| self.healthy[b])
             .min_by_key(|&b| {
                 let pool = self.boards[b].pool();
                 (0..pool.len())
@@ -480,14 +583,147 @@ impl Router {
             .unwrap_or(0)
     }
 
-    /// Drain every board to completion, in board order (boards are
-    /// independent simulations — order does not change any board's
-    /// events).
+    /// Drain every board to completion. With no board faults and no
+    /// retry-after queue this is one pass of per-board drains in board
+    /// order (boards are independent simulations — order does not change
+    /// any board's events), bit-identical to the pre-resilience router.
+    /// Scheduled board failures are processed first, at their kill
+    /// cycles (evacuation + re-routing, then recovery); deferred
+    /// submissions are re-quoted between passes until no progress
+    /// remains, and whatever stays blocked settles as quota-refused.
     pub fn drain(&mut self) -> Result<()> {
-        for b in &mut self.boards {
-            b.drain()?;
+        self.process_kills()?;
+        loop {
+            for b in &mut self.boards {
+                b.drain()?;
+            }
+            if self.pump_deferred() == 0 {
+                break;
+            }
+        }
+        self.finalize_deferred();
+        Ok(())
+    }
+
+    /// Take each scheduled board failure in `(down_at, board)` order:
+    /// advance the dying board to its failure cycle (work whose slot
+    /// freed before the failure dispatches and completes — the board's
+    /// front-end dies, its fabric finishes assigned windows), mark it
+    /// unhealthy, evacuate its queued named jobs onto surviving boards
+    /// (health-aware re-route through the normal scoring, fleet handles
+    /// remapped so they keep resolving), then process recoveries.
+    fn process_kills(&mut self) -> Result<()> {
+        let kills = std::mem::take(&mut self.kills);
+        for k in &kills {
+            self.boards[k.board].step_until(k.down_at)?;
+            self.healthy[k.board] = false;
+            self.health[k.board].push((k.down_at, false));
+            self.boards[k.board]
+                .trace
+                .record(SchedEvent::BoardDown { board: k.board, at: k.down_at });
+            for (handle, mut desc) in self.boards[k.board].evacuate() {
+                // The job re-enters the fleet at the failure point: it
+                // cannot start elsewhere before the failure displaced it.
+                desc.arrival = desc.arrival.max(k.down_at);
+                if !self.healthy.iter().any(|&h| h) {
+                    self.boards[k.board].fail_evacuated(
+                        handle,
+                        "board failed and no healthy board remains".to_string(),
+                    );
+                    continue;
+                }
+                let to = self.route_board(&desc);
+                let new_handle = self.boards[to].submit(desc);
+                self.boards[k.board].trace.record(SchedEvent::Migrated {
+                    job: handle.0,
+                    from: k.board,
+                    to,
+                    at: k.down_at,
+                });
+                self.boards[k.board].mark_migrated(handle);
+                self.migrations += 1;
+                self.remap(k.board, handle, to, new_handle);
+            }
+        }
+        // Recoveries, in cycle order: the board rejoins the healthy set,
+        // so later routing (deferred re-quotes, future submissions) sees
+        // it again.
+        let mut ups: Vec<(u64, usize)> =
+            kills.iter().filter_map(|k| k.up_at.map(|c| (c, k.board))).collect();
+        ups.sort_unstable();
+        for (at, board) in ups {
+            self.healthy[board] = true;
+            self.health[board].push((at, true));
+            self.boards[board].trace.record(SchedEvent::BoardUp { board, at });
         }
         Ok(())
+    }
+
+    /// Point the fleet-level record of an evacuated job at its new
+    /// board, so `state`/`poll` and the digest chain follow the job; the
+    /// tenant's in-flight entry moves with it (same bytes, new board).
+    fn remap(&mut self, from: usize, old: JobHandle, to: usize, new: JobHandle) {
+        let fj = self
+            .jobs
+            .iter_mut()
+            .find(|j| {
+                matches!(j.routed, Routed::Board { board, handle }
+                    if board == from && handle == old)
+            })
+            .expect("evacuated jobs were fleet-routed");
+        let tenant = fj.tenant;
+        fj.routed = Routed::Board { board: to, handle: new };
+        for entry in &mut self.stats[tenant].open {
+            if entry.0 == from && entry.1 == old {
+                *entry = (to, new, entry.2);
+            }
+        }
+    }
+
+    /// Re-quote deferred submissions in submission order against their
+    /// tenants' live quotas; admit those that now fit, with the same
+    /// routing as a fresh submission. A still-blocked tenant's job keeps
+    /// waiting without blocking other tenants behind it. Returns the
+    /// number admitted.
+    fn pump_deferred(&mut self) -> usize {
+        let mut admitted = 0;
+        for id in 0..self.jobs.len() {
+            let Routed::Deferred { desc, bytes } = self.jobs[id].routed.clone() else {
+                continue;
+            };
+            let tenant = self.jobs[id].tenant;
+            self.sweep_settled(tenant);
+            if self.quota_violation(tenant, bytes).is_some() {
+                continue;
+            }
+            let board = self.route_board(&desc);
+            let handle = self.boards[board].submit(desc);
+            self.stats[tenant].admitted += 1;
+            self.stats[tenant].open.push((board, handle, bytes));
+            self.jobs[id].routed = Routed::Board { board, handle };
+            self.deferred -= 1;
+            self.queued_then_admitted += 1;
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// End of drain: whatever is still deferred cannot be admitted by
+    /// any further progress — settle it as quota-refused.
+    fn finalize_deferred(&mut self) {
+        for j in &mut self.jobs {
+            if matches!(j.routed, Routed::Deferred { .. }) {
+                let name = &self.tenants[j.tenant].name;
+                self.stats[j.tenant].quota_rejected += 1;
+                j.routed = Routed::Quota {
+                    reason: format!(
+                        "tenant {name:?} still over quota when the fleet drained \
+                         (retry-after queue)"
+                    ),
+                };
+                self.deferred -= 1;
+            }
+        }
     }
 
     /// Jobs submitted to the fleet (including quota-rejected ones).
@@ -502,6 +738,8 @@ impl Router {
         match &self.jobs.get(h.0)?.routed {
             Routed::Quota { reason } => Some(JobState::Rejected { reason: reason.clone() }),
             Routed::Board { board, handle } => self.boards[*board].state(*handle).cloned(),
+            // Waiting at the front tier: queued, just not on a board yet.
+            Routed::Deferred { .. } => Some(JobState::Queued),
         }
     }
 
@@ -509,7 +747,7 @@ impl Router {
     pub fn poll(&self, h: FleetHandle) -> Option<&JobOutcome> {
         match &self.jobs.get(h.0)?.routed {
             Routed::Board { board, handle } => self.boards[*board].poll(*handle),
-            Routed::Quota { .. } => None,
+            Routed::Quota { .. } | Routed::Deferred { .. } => None,
         }
     }
 
@@ -548,6 +786,7 @@ impl Router {
         let mut digest = 0xcbf2_9ce4_8422_2325u64;
         let mut completed = 0usize;
         let mut quota_rejected = 0usize;
+        let mut queued = 0usize;
         // Per tenant, per class (Normal = 0, High = 1): turnaround
         // samples and preemption counts.
         let mut samples: Vec<[Vec<u64>; 2]> =
@@ -558,6 +797,7 @@ impl Router {
             let class = j.priority.is_high() as usize;
             match &j.routed {
                 Routed::Quota { .. } => quota_rejected += 1,
+                Routed::Deferred { .. } => queued += 1,
                 Routed::Board { board, handle } => {
                     owner.insert((*board, handle.0), (j.tenant, class));
                     if let Some(o) = self.boards[*board].poll(*handle) {
@@ -605,13 +845,22 @@ impl Router {
         FleetReport {
             route: self.route.label(),
             submitted: self.jobs.len(),
-            admitted: self.jobs.len() - quota_rejected,
+            admitted: self.jobs.len() - quota_rejected - queued,
             quota_rejected,
+            queued,
+            queued_then_admitted: self.queued_then_admitted,
             completed,
             rejected: boards.iter().map(|r| r.rejected).sum(),
             makespan_cycles: boards.iter().map(|r| r.makespan_cycles).max().unwrap_or(0),
             affinity_decisions: self.affinity_decisions,
             affinity_hits: self.affinity_hits,
+            faults: boards
+                .iter()
+                .map(|r| r.faults_transient + r.faults_timeout + r.faults_deadline)
+                .sum(),
+            retries: boards.iter().map(|r| r.retries).sum(),
+            migrations: self.migrations,
+            board_health: self.health.clone(),
             digest,
             tenants,
             boards,
@@ -651,6 +900,12 @@ pub struct FleetReport {
     pub admitted: usize,
     /// Submissions refused at the front tier by tenant quotas.
     pub quota_rejected: usize,
+    /// Submissions still waiting in the retry-after queue (0 after a
+    /// drain — leftovers settle as quota-refused).
+    pub queued: usize,
+    /// Deferred submissions later admitted by a re-quote
+    /// ([`Router::with_queue`]).
+    pub queued_then_admitted: u64,
     /// Completed across all boards (fleet-routed jobs; a capacity-split
     /// child counts on its board, not here).
     pub completed: usize,
@@ -666,6 +921,16 @@ pub struct FleetReport {
     /// Of those, routes that landed on a board already warm for the
     /// job's binary.
     pub affinity_hits: u64,
+    /// Detected faults summed over the boards (transient + timeout +
+    /// deadline — see [`ServeReport`]'s per-kind counters).
+    pub faults: u64,
+    /// Retry attempts summed over the boards.
+    pub retries: u64,
+    /// Jobs evacuated off failed boards and completed elsewhere.
+    pub migrations: u64,
+    /// Per board: health transitions `(cycle, healthy)` in drain order
+    /// (empty = the board never failed).
+    pub board_health: Vec<Vec<(u64, bool)>>,
     /// Digest over completed jobs' output digests in global submission
     /// order — routing-invariant on homogeneous boards.
     pub digest: u64,
@@ -708,6 +973,32 @@ impl fmt::Display for FleetReport {
                 self.affinity_decisions,
                 100.0 * self.affinity_hit_rate()
             )?;
+        }
+        // Resilience lines render only when something happened, so the
+        // fault-free report stays byte-identical to the pre-resilience one.
+        if self.faults > 0 || self.retries > 0 || self.migrations > 0 {
+            writeln!(
+                f,
+                "resilience    : {} fault(s), {} retry(ies), {} migration(s)",
+                self.faults, self.retries, self.migrations
+            )?;
+        }
+        if self.queued_then_admitted > 0 || self.queued > 0 {
+            writeln!(
+                f,
+                "retry-after   : {} deferred admission(s), {} still queued",
+                self.queued_then_admitted, self.queued
+            )?;
+        }
+        for (b, timeline) in self.board_health.iter().enumerate() {
+            if timeline.is_empty() {
+                continue;
+            }
+            let spans: Vec<String> = timeline
+                .iter()
+                .map(|(c, up)| format!("{}@{c}", if *up { "up" } else { "down" }))
+                .collect();
+            writeln!(f, "health b{b:<5}: {}", spans.join(", "))?;
         }
         for t in &self.tenants {
             writeln!(
@@ -928,6 +1219,135 @@ mod tests {
         // dispatched, completion lines sort by cycle, not by board.
         let report = r.report();
         assert!(report.to_string().contains("fleet digest"), "report renders");
+    }
+
+    #[test]
+    fn board_kill_evacuates_queued_jobs_and_loses_nothing() {
+        let jobs: Vec<JobDesc> = (0..8)
+            .map(|i| job(if i % 2 == 0 { "gemm" } else { "atax" }, 8 + 4 * (i % 2), i as u64))
+            .collect();
+        // Batching off so same-kernel jobs dispatch one at a time and the
+        // dying board still holds a queue at its kill cycle.
+        let board = || Scheduler::new(aurora(), 1, Policy::Fifo).with_batching(false);
+        // Fault-free reference: same stream, same fleet shape.
+        let mut healthy = Router::new(vec![board(), board()]);
+        for d in &jobs {
+            healthy.submit(*d);
+        }
+        healthy.drain().unwrap();
+        // Board 1 dies at cycle 1: whatever its slot started by then
+        // completes, the queued remainder evacuates to board 0.
+        let plan = crate::fault::parse("kill=1@1").unwrap();
+        let mut r = Router::new(vec![board(), board()]).with_faults(&plan);
+        let h: Vec<FleetHandle> = jobs.iter().map(|d| r.submit(*d)).collect();
+        r.drain().unwrap();
+        for (i, hi) in h.iter().enumerate() {
+            assert!(
+                matches!(r.state(*hi), Some(JobState::Done(_))),
+                "job {i} must survive the board failure: {:?}",
+                r.state(*hi)
+            );
+        }
+        let (rep, rep_ref) = (r.report(), healthy.report());
+        assert_eq!(rep.completed, jobs.len(), "no job may be lost to the failure");
+        assert_eq!(
+            rep.digest, rep_ref.digest,
+            "failure moves jobs and time, never numerics"
+        );
+        assert!(rep.migrations > 0, "board 1 had queued jobs to evacuate");
+        assert_eq!(
+            rep.migrations,
+            rep.boards[1].migrated,
+            "fleet and board accounting agree"
+        );
+        assert_eq!(rep.board_health[1], vec![(1, false)]);
+        assert!(rep.board_health[0].is_empty(), "board 0 never failed");
+        let events = r.events();
+        assert!(events.contains("down      board 1 unhealthy at cycle 1"), "{events}");
+        assert!(events.contains("board 1 -> board 0"), "{events}");
+        let shown = rep.to_string();
+        assert!(shown.contains("migration(s)"), "{shown}");
+        assert!(shown.contains("health b1    : down@1"), "{shown}");
+    }
+
+    #[test]
+    fn board_recovery_rejoins_the_healthy_set() {
+        let plan = crate::fault::parse("kill=1@1,recover=1@50000000").unwrap();
+        let mut r = Router::homogeneous(&aurora(), 2, 1).with_faults(&plan);
+        for i in 0..4 {
+            r.submit(job("gemm", 8, i));
+        }
+        r.drain().unwrap();
+        let rep = r.report();
+        assert_eq!(rep.completed, 4);
+        assert_eq!(rep.board_health[1], vec![(1, false), (50_000_000, true)]);
+        assert!(r.events().contains("up        board 1 recovered at cycle 50000000"));
+    }
+
+    #[test]
+    fn retry_after_queue_defers_then_admits_instead_of_refusing() {
+        let mut r =
+            Router::new(vec![Scheduler::new(aurora(), 1, Policy::Fifo)]).with_queue(8);
+        let t = r.tenant(TenantSpec {
+            name: "capped".into(),
+            max_in_flight: 2,
+            max_resident_bytes: 0,
+            priority: None,
+        });
+        let h: Vec<FleetHandle> =
+            (0..5).map(|i| r.submit_for(t, job("gemm", 8, i as u64))).collect();
+        // Beyond the quota the submissions wait at the front tier.
+        assert!(matches!(r.state(h[2]), Some(JobState::Queued)));
+        assert!(matches!(r.state(h[4]), Some(JobState::Queued)));
+        assert_eq!(r.board(0).submitted(), 2, "deferred jobs reached no board yet");
+        r.drain().unwrap();
+        for hi in &h {
+            assert!(matches!(r.state(*hi), Some(JobState::Done(_))), "{:?}", r.state(*hi));
+        }
+        let rep = r.report();
+        assert_eq!(rep.queued_then_admitted, 3, "all three deferred jobs were admitted");
+        assert_eq!(rep.queued, 0, "nothing left waiting after a drain");
+        let tr = rep.tenant("capped").unwrap();
+        assert_eq!((tr.submitted, tr.admitted, tr.quota_rejected), (5, 5, 0));
+        assert!(rep.to_string().contains("retry-after   : 3 deferred admission(s)"));
+    }
+
+    #[test]
+    fn retry_after_queue_overflow_still_refuses() {
+        let mut r =
+            Router::new(vec![Scheduler::new(aurora(), 1, Policy::Fifo)]).with_queue(1);
+        let t = r.tenant(TenantSpec {
+            name: "capped".into(),
+            max_in_flight: 1,
+            max_resident_bytes: 0,
+            priority: None,
+        });
+        let h: Vec<FleetHandle> =
+            (0..3).map(|i| r.submit_for(t, job("gemm", 8, i as u64))).collect();
+        assert!(matches!(r.state(h[1]), Some(JobState::Queued)), "deferred");
+        match r.state(h[2]) {
+            Some(JobState::Rejected { reason }) => {
+                assert!(reason.contains("in-flight quota"), "{reason}")
+            }
+            s => panic!("queue overflow must refuse, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_fault_plan_and_queue_off_change_nothing() {
+        let jobs = synth::tiny_jobs(10, 97);
+        let mut plain = Router::homogeneous(&aurora(), 2, 1);
+        let mut armed = Router::homogeneous(&aurora(), 2, 1)
+            .with_faults(&crate::fault::FaultPlan::default())
+            .with_queue(0);
+        for d in &jobs {
+            plain.submit(*d);
+            armed.submit(*d);
+        }
+        plain.drain().unwrap();
+        armed.drain().unwrap();
+        assert_eq!(plain.events(), armed.events(), "defaults must be bit-identical");
+        assert_eq!(plain.report().digest, armed.report().digest);
     }
 
     #[test]

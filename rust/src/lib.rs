@@ -110,6 +110,26 @@
 //! `hero serve --fleet N [--tenants spec] [--route finish|round-robin]`
 //! (traces may tag jobs with a `tenant` column), and the `fleet.*`
 //! studies in `benches/sched.rs`.
+//!
+//! ## Fault injection & resilient serving
+//!
+//! The [`fault`] module makes failure a first-class, *deterministic*
+//! platform scenario: a seeded [`fault::FaultPlan`] schedules transient
+//! kernel faults and DMA/NoC timeouts per `(job, attempt)` and board
+//! failures per cycle, all reproducible run-to-run. The scheduler detects
+//! faults (including a watchdog deadline of predicted cycles × a
+//! configurable multiplier, honoring each kernel job's own `max_cycles`
+//! budget) and retries them with bounded attempts and exponential
+//! backoff in cycles — priority, arrival and dataflow edges preserved;
+//! permanent failures still cascade to consumers. The fleet router
+//! tracks per-board health, evacuates queued jobs off a failed board to
+//! surviving boards (re-quoted through the same placement scoring,
+//! affinity included) and can queue quota-refused submissions for
+//! re-admission (retry-after). With no plan and no watchdog, every code
+//! path — and its event sequence — is bit-identical to the fault-free
+//! scheduler (property-tested). Front-ends: `hero serve --faults PLAN
+//! --retry N --watchdog MULT [--queue N]` and the `fault.*` study in
+//! `benches/sched.rs`; prose: `fault/README.md`.
 
 pub mod accel;
 pub mod bench_harness;
@@ -118,6 +138,7 @@ pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod dma;
+pub mod fault;
 pub mod fleet;
 pub mod host;
 pub mod iommu;

@@ -76,6 +76,27 @@
 //!                                     queued-but-assigned Normal batch
 //!                                     followers back into the queue (never
 //!                                     mid-kernel — numerics untouched)
+//!     --faults PLAN                   arm a deterministic fault plan
+//!                                     (comma-separated `seed=N`,
+//!                                     `transient=PCT`, `timeout=PCT`,
+//!                                     `kill=BOARD@CYCLE`,
+//!                                     `recover=BOARD@CYCLE`, or the `demo`
+//!                                     preset; board kills need --fleet —
+//!                                     see rust/src/fault/README.md)
+//!     --retry N                       retry faulted jobs up to N times with
+//!                                     exponential backoff in cycles
+//!                                     (default 0 = fail on first fault;
+//!                                     priority/arrival/dataflow preserved)
+//!     --watchdog MULT                 arm the dispatch watchdog: a job
+//!                                     whose measured cycles exceed MULT ×
+//!                                     its predicted cycles (or its own
+//!                                     max_cycles budget) faults with a
+//!                                     deadline fault instead of completing
+//!     --queue N                       front-tier retry-after queue: defer
+//!                                     up to N over-quota fleet submissions
+//!                                     and re-admit them as earlier jobs
+//!                                     settle, instead of refusing outright
+//!                                     (requires --fleet; default 0 = off)
 //!     --pipeline N                    additionally run an N-stage chained
 //!                                     kernel pipeline through the same
 //!                                     session (each stage consumes the
@@ -368,6 +389,7 @@ fn cmd_serve(raw: &[String]) -> i32 {
         opts: &[
             "--board-bw",
             "--config",
+            "--faults",
             "--fleet",
             "--host-bw",
             "--jobs",
@@ -377,11 +399,14 @@ fn cmd_serve(raw: &[String]) -> i32 {
             "--policy",
             "--pool",
             "--priority-headroom",
+            "--queue",
+            "--retry",
             "--route",
             "--seed",
             "--svm",
             "--tenants",
             "--trace",
+            "--watchdog",
         ],
         max_positional: 0,
     };
@@ -430,6 +455,30 @@ fn cmd_serve(raw: &[String]) -> i32 {
         eprintln!("--pool must be at least 1");
         return 2;
     }
+    // Resilience: deterministic fault plan, bounded retries, watchdog.
+    let faults = match args.opt("--faults") {
+        Some(spec) => match herov2::fault::parse(spec) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("--faults error: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let retry: u32 = opt_or(&args, "--retry", 0);
+    let watchdog = match args.parsed::<u64>("--watchdog") {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if watchdog == Some(0) {
+        eprintln!("--watchdog must be at least 1 (deadline = MULT x predicted cycles)");
+        return 2;
+    }
+    let queue: usize = opt_or(&args, "--queue", 0);
     // Fleet serving: N independent boards behind the front-tier router.
     let fleet_boards: usize = opt_or(&args, "--fleet", 0);
     if args.opt("--fleet").is_some() && fleet_boards == 0 {
@@ -454,6 +503,19 @@ fn cmd_serve(raw: &[String]) -> i32 {
     if fleet_boards == 0 && (args.opt("--route").is_some() || args.opt("--tenants").is_some()) {
         eprintln!("--route and --tenants only apply to fleet serving (--fleet N)");
         return 2;
+    }
+    if fleet_boards == 0 {
+        if args.opt("--queue").is_some() {
+            eprintln!(
+                "--queue only applies to fleet serving (--fleet N): the retry-after \
+                 queue lives at the front-tier router"
+            );
+            return 2;
+        }
+        if faults.as_ref().is_some_and(|p| !p.boards.is_empty()) {
+            eprintln!("--faults board kills (kill=B@C) require --fleet");
+            return 2;
+        }
     }
     if fleet_boards > 0 {
         for (flag, why) in [
@@ -523,9 +585,16 @@ fn cmd_serve(raw: &[String]) -> i32 {
             placement.label(),
             route.label()
         );
+        if faults.is_some() || retry > 0 || watchdog.is_some() || queue > 0 {
+            println!(
+                "resilience: faults {}, retry {retry}, watchdog {}, queue {queue}",
+                if faults.is_some() { "armed" } else { "off" },
+                watchdog.map_or("off".to_string(), |m| format!("{m}x")),
+            );
+        }
         let boards: Vec<Scheduler> = (0..fleet_boards)
             .map(|_| {
-                Scheduler::new(cfg.clone(), pool, policy)
+                let mut s = Scheduler::new(cfg.clone(), pool, policy)
                     .with_placement(placement)
                     .with_board(board)
                     .with_cache(!args.flag("--no-cache"))
@@ -535,9 +604,21 @@ fn cmd_serve(raw: &[String]) -> i32 {
                     .with_lookahead(lookahead)
                     .with_preemption(args.flag("--preempt"))
                     .with_autotune(args.flag("--autotune"))
+                    .with_retry(retry);
+                if let Some(plan) = faults.clone() {
+                    s = s.with_faults(plan);
+                }
+                if let Some(mult) = watchdog {
+                    s = s.with_watchdog(mult);
+                }
+                s
             })
             .collect();
-        let mut router = herov2::fleet::Router::new(boards).with_route(route);
+        let mut router =
+            herov2::fleet::Router::new(boards).with_route(route).with_queue(queue);
+        if let Some(plan) = &faults {
+            router = router.with_faults(plan);
+        }
         for spec in tenants {
             router.tenant(spec);
         }
@@ -599,13 +680,27 @@ fn cmd_serve(raw: &[String]) -> i32 {
     .with_learning(args.flag("--learn"))
     .with_lookahead(lookahead)
     .with_preemption(args.flag("--preempt"))
-    .with_autotune(args.flag("--autotune"));
+    .with_autotune(args.flag("--autotune"))
+    .with_retry(retry);
+    if let Some(plan) = faults.clone() {
+        sched = sched.with_faults(plan);
+    }
+    if let Some(mult) = watchdog {
+        sched = sched.with_watchdog(mult);
+    }
     if args.flag("--learn") || lookahead > 1 || args.flag("--preempt") || args.flag("--autotune") {
         println!(
             "self-tuning: learn {}, lookahead {lookahead}, preempt {}, autotune {}",
             if args.flag("--learn") { "on" } else { "off" },
             if args.flag("--preempt") { "on" } else { "off" },
             if args.flag("--autotune") { "on" } else { "off" },
+        );
+    }
+    if faults.is_some() || retry > 0 || watchdog.is_some() {
+        println!(
+            "resilience: faults {}, retry {retry}, watchdog {}",
+            if faults.is_some() { "armed" } else { "off" },
+            watchdog.map_or("off".to_string(), |m| format!("{m}x")),
         );
     }
     // SVM serving rides alongside the named stream: a kernel stream whose

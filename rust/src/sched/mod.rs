@@ -102,7 +102,23 @@
 //! the board model move *time*, never numerics (the SVM IOMMU shadow is a
 //! pure cost engine; functional data lives in the host-side space). (A
 //! heterogeneous pool may tile kernels differently per instance config,
-//! which legitimately reorders float accumulation.) `hero serve` (see
+//! which legitimately reorders float accumulation.)
+//!
+//! **Resilience** (all off by default; see [`crate::fault`] and
+//! `fault/README.md`): [`Scheduler::with_faults`] arms a seeded
+//! [`fault::FaultPlan`] that deterministically faults attempts (transient
+//! kernel faults, DMA/NoC timeouts); [`Scheduler::with_watchdog`] arms a
+//! per-job deadline (predicted cycles × multiplier, floored by each
+//! kernel job's own `max_cycles` budget) that turns overruns into
+//! deadline faults; [`Scheduler::with_retry`] bounds how many times a
+//! faulted job re-enters the queue (exponential backoff in cycles,
+//! priority/arrival/dataflow preserved). A faulted attempt occupies its
+//! instance but never touches numerics: its result is discarded before
+//! any digest, feed, SVM write-back or learning observation, so a stream
+//! whose faults are all eventually retried successfully digests
+//! bit-identically to the fault-free run (property-tested). With no plan
+//! and no watchdog, every code path — and its event sequence — is
+//! bit-identical to the pre-fault scheduler. `hero serve` (see
 //! `main.rs`) and `benches/sched.rs` are the front-ends.
 
 pub mod cache;
@@ -114,6 +130,7 @@ pub mod pool;
 pub mod report;
 pub mod tune;
 
+pub use crate::fault::{FaultKind, FaultPlan};
 pub use crate::svm::{SvmConfig, SvmMode};
 pub use crate::workloads::synth::JobDesc;
 pub use cache::BinaryCache;
@@ -125,6 +142,7 @@ pub use report::{ClassReport, InstanceReport, ServeReport};
 
 use crate::accel::Accel;
 use crate::bench_harness::{self, run_lowered, Variant};
+use crate::fault;
 use crate::config::HeroConfig;
 use crate::runtime::hero_api::{HeroApi, SpmLevel};
 use crate::runtime::omp::OffloadResult;
@@ -197,6 +215,10 @@ pub enum JobState {
     Rejected { reason: String },
     /// Oversized job decomposed into the given sub-jobs (capacity policy).
     Split { children: Vec<JobHandle> },
+    /// Evacuated off this board by the fleet router after a board failure
+    /// and resubmitted on a surviving board — the router's fleet handle
+    /// follows the job to its new board ([`crate::fleet::Router`]).
+    Migrated,
     /// Ran to completion.
     Done(JobOutcome),
 }
@@ -251,6 +273,12 @@ struct JobRecord {
     /// registered in the feed store (set once the job is admitted to the
     /// queue; rejection before admission must not unbalance the refcounts).
     registered: bool,
+    /// Faulted dispatch attempts so far (0 until the job first faults —
+    /// the retry counter bounded by [`Scheduler::with_retry`]).
+    attempts: u32,
+    /// Earliest cycle a retried job may dispatch (exponential backoff;
+    /// 0 for never-faulted jobs — floors [`Scheduler::effective_arrival`]).
+    not_before: u64,
     /// Memoized cycle prediction — computed once at submit, *refreshed in
     /// place* when online learning refines the job's key, and read
     /// everywhere a scheduling decision needs it ([`Policy::pick`],
@@ -330,6 +358,27 @@ pub struct Scheduler {
     autotune: bool,
     /// Memoized tuning searches (cheap and empty while autotuning is off).
     tune: tune::TuneStore,
+    /// Injected fault schedule ([`Scheduler::with_faults`]). `None` (the
+    /// default) leaves every pre-fault code path — and its event
+    /// sequence — untouched.
+    faults: Option<fault::FaultPlan>,
+    /// Most retries a faulted job gets before failing permanently
+    /// ([`Scheduler::with_retry`]; 0 = first fault is final).
+    retry_limit: u32,
+    /// Watchdog deadline multiplier over a job's predicted cycles
+    /// ([`Scheduler::with_watchdog`]; `None` = watchdog off).
+    watchdog: Option<u64>,
+    /// Faults seen, by [`fault::FaultKind::index`]:
+    /// `[transient, timeout, deadline]`.
+    fault_counts: [u64; 3],
+    /// Retry dispatch attempts issued.
+    retries: u64,
+    /// Jobs that failed permanently to a fault (retries exhausted or a
+    /// non-retryable deadline overrun).
+    fault_failures: u64,
+    /// Jobs the fleet router evacuated off this board after a board
+    /// failure ([`Scheduler::mark_migrated`]).
+    migrated: u64,
     pub trace: SchedTrace,
 }
 
@@ -393,6 +442,13 @@ impl Scheduler {
             preempted: [0, 0],
             autotune: false,
             tune: tune::TuneStore::new(),
+            faults: None,
+            retry_limit: 0,
+            watchdog: None,
+            fault_counts: [0; 3],
+            retries: 0,
+            fault_failures: 0,
+            migrated: 0,
             trace: SchedTrace::new(),
             cfg,
             policy,
@@ -479,6 +535,49 @@ impl Scheduler {
         debug_assert!(self.jobs.is_empty(), "with_autotune after submissions");
         self.autotune = on;
         self
+    }
+
+    /// Arm a deterministic fault-injection plan (must precede submissions
+    /// — instance faults price timeout occupancy off predictions, which
+    /// changes what submit memoizes). Faulted attempts occupy their
+    /// instance but discard their result; pair with
+    /// [`Scheduler::with_retry`] to make them survivable. See
+    /// [`crate::fault`].
+    pub fn with_faults(mut self, plan: fault::FaultPlan) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_faults after submissions");
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Bound how many retries a faulted job gets before it fails
+    /// permanently (0, the default, makes the first fault final). Retries
+    /// re-enter the queue as ready jobs — priority, arrival stamp and
+    /// dataflow edges intact — after an exponential backoff in cycles
+    /// ([`fault::backoff_cycles`]).
+    pub fn with_retry(mut self, attempts: u32) -> Self {
+        self.retry_limit = attempts;
+        self
+    }
+
+    /// Arm the watchdog (must precede submissions — deadlines are priced
+    /// off predictions): a job whose measured cycles exceed `mult` × its
+    /// predicted cycles — or whose simulation budget
+    /// ([`KernelJob::max_cycles`]) runs out — faults with a deterministic,
+    /// non-retryable deadline overrun instead of completing.
+    pub fn with_watchdog(mut self, mult: u64) -> Self {
+        debug_assert!(self.jobs.is_empty(), "with_watchdog after submissions");
+        self.watchdog = Some(mult.max(1));
+        self
+    }
+
+    /// Whether fault injection or the watchdog is armed.
+    pub fn resilience_enabled(&self) -> bool {
+        self.faults.is_some() || self.watchdog.is_some()
+    }
+
+    /// The configured retry bound.
+    pub fn retry_limit(&self) -> u32 {
+        self.retry_limit
     }
 
     /// Whether online prediction refinement is enabled.
@@ -585,6 +684,10 @@ impl Scheduler {
             || self.placement == Placement::Pressure
             || self.learn.is_some()
             || self.lookahead > 1
+            // Resilience prices timeout occupancy and watchdog deadlines
+            // off the predicted cycles.
+            || self.watchdog.is_some()
+            || self.faults.as_ref().is_some_and(|p| p.has_instance_faults())
     }
 
     /// Bytes of kernel-job input snapshots the scheduler still retains,
@@ -624,7 +727,8 @@ impl Scheduler {
     /// Dependency-aware arrival: a job cannot start before its declared
     /// arrival cycle *or* its last producer's finish — the readiness rule
     /// the policy tiers, the placement engine and the pool occupancy all
-    /// score with.
+    /// score with. A retried job is additionally floored by its backoff
+    /// (`not_before`, 0 for never-faulted jobs).
     fn effective_arrival(&self, id: JobId) -> u64 {
         let deps = self.jobs[id]
             .after
@@ -635,7 +739,7 @@ impl Scheduler {
             })
             .max()
             .unwrap_or(0);
-        self.jobs[id].arrival.max(deps)
+        self.jobs[id].arrival.max(deps).max(self.jobs[id].not_before)
     }
 
     /// Validate a kernel job's dataflow/ordering edges at submission:
@@ -652,6 +756,9 @@ impl Scheduler {
                     return Err(format!("producer job {} was rejected", h.0))
                 }
                 JobState::Split { .. } => return Err(format!("producer job {} was split", h.0)),
+                JobState::Migrated => {
+                    return Err(format!("producer job {} was migrated off this board", h.0))
+                }
                 JobState::Queued | JobState::Done(_) => {}
             }
         }
@@ -712,6 +819,9 @@ impl Scheduler {
                 }
                 JobState::Split { .. } => {
                     return Err(format!("producer job {} was split", producer.0))
+                }
+                JobState::Migrated => {
+                    return Err(format!("producer job {} was migrated off this board", producer.0))
                 }
             };
             if have != *elems {
@@ -907,6 +1017,8 @@ impl Scheduler {
             priority: desc.priority,
             after: Vec::new(),
             registered: false,
+            attempts: 0,
+            not_before: 0,
             predicted: 0,
             predicted_static: 0,
             learn_key: None,
@@ -1019,6 +1131,8 @@ impl Scheduler {
             priority: kjob.priority,
             after,
             registered: false,
+            attempts: 0,
+            not_before: 0,
             predicted: 0,
             predicted_static: 0,
             learn_key: None,
@@ -1353,6 +1467,7 @@ impl Scheduler {
         let followers = batch.len() - 1;
         let mut charge = compile_cost;
         let mut displaced: Vec<JobId> = Vec::new();
+        let mut requeue: Vec<JobId> = Vec::new();
         for (bi, id) in batch.iter().copied().enumerate() {
             // Priority preemption: a batch follower is *queued-but-assigned*
             // — gathered onto this instance but not yet executing. Before it
@@ -1452,9 +1567,55 @@ impl Scheduler {
                         self.pool.assign(inst, arrival, charge, 0, false);
                         charge = 0;
                     }
-                    self.reject(id, format!("execution failed: {e}"));
+                    // With the watchdog armed, an exhausted simulation
+                    // budget ([`KernelJob::max_cycles`]) is a detected
+                    // deadline fault — the instance burned the whole
+                    // budget — not an execution error.
+                    if self.watchdog.is_some() && crate::accel::is_budget_exhausted(&e) {
+                        let budget = match &member {
+                            JobSpec::Kernel(kjob) => kjob.max_cycles,
+                            _ => JOB_MAX_CYCLES,
+                        };
+                        self.settle_fault(
+                            id,
+                            inst,
+                            arrival,
+                            priority,
+                            budget,
+                            fault::FaultKind::DeadlineExceeded,
+                            &mut requeue,
+                        );
+                    } else {
+                        self.reject(id, format!("execution failed: {e}"));
+                    }
                 }
                 Ok((result, arrays, verified, keep_payload)) => {
+                    // Fault gate: injected draws first, then the watchdog's
+                    // measured deadline. A faulted attempt books its
+                    // occupancy window and nothing else — no digest, feed,
+                    // SVM write-back or learning observation — so a stream
+                    // whose faults are all retried successfully stays
+                    // numerically identical to the fault-free run.
+                    if let Some(kind) = self.fault_for(id, &member, result.total_cycles) {
+                        let occupancy = match kind {
+                            // A transient fault ran to completion before
+                            // spoiling its result; deadline-class faults
+                            // hold the instance until the watchdog fires.
+                            fault::FaultKind::Transient => result.total_cycles,
+                            _ => self.deadline_for(id, &member),
+                        };
+                        self.settle_fault(
+                            id,
+                            inst,
+                            arrival,
+                            priority,
+                            charge + occupancy,
+                            kind,
+                            &mut requeue,
+                        );
+                        charge = 0; // the faulted head still paid the compile
+                        continue;
+                    }
                     let digest = digest_arrays(&arrays);
                     let dma_busy = result.perf.get(Event::DmaBusyCycles);
                     let mut dma_bytes = result.perf.get(Event::DmaBytes);
@@ -1648,6 +1809,10 @@ impl Scheduler {
                 }
             }
         }
+        // Faulted members re-enter at the *back* of the queue: their
+        // backoff (`not_before` flooring the effective arrival) — not
+        // queue position — is what delays the next attempt.
+        self.queue.extend(requeue);
         // Displaced followers return to the *front* of the queue in their
         // original order: they were next in line, and the strict priority
         // tiers — not queue position — are what hands the next dispatch to
@@ -1656,6 +1821,69 @@ impl Scheduler {
             self.queue.insert(k, *d);
         }
         Ok(true)
+    }
+
+    /// What fault (if any) this attempt suffers: injected plan draws
+    /// first, then the watchdog's measured-deadline check.
+    fn fault_for(&self, id: JobId, member: &JobSpec, total_cycles: u64) -> Option<fault::FaultKind> {
+        if let Some(kind) =
+            self.faults.as_ref().and_then(|p| p.draw(id as u64, self.jobs[id].attempts))
+        {
+            return Some(kind);
+        }
+        (self.watchdog.is_some() && total_cycles > self.deadline_for(id, member))
+            .then_some(fault::FaultKind::DeadlineExceeded)
+    }
+
+    /// A job's deadline: watchdog multiplier × its predicted cycles
+    /// ([`fault::DEFAULT_WATCHDOG_MULT`] when only a fault plan is armed),
+    /// capped by a kernel job's own simulation budget
+    /// ([`KernelJob::max_cycles`]).
+    fn deadline_for(&self, id: JobId, member: &JobSpec) -> u64 {
+        let mult = self.watchdog.unwrap_or(fault::DEFAULT_WATCHDOG_MULT);
+        let mut deadline = self.jobs[id].predicted.max(1).saturating_mul(mult);
+        if let JobSpec::Kernel(kjob) = member {
+            deadline = deadline.min(kjob.max_cycles);
+        }
+        deadline
+    }
+
+    /// Book a faulted attempt's occupancy window (plus any pending compile
+    /// charge; no useful DRAM traffic), record it, and either requeue the
+    /// job for a backed-off retry or fail it permanently — permanent
+    /// failures cascade to dataflow consumers exactly like rejections.
+    #[allow(clippy::too_many_arguments)]
+    fn settle_fault(
+        &mut self,
+        id: JobId,
+        inst: usize,
+        arrival: u64,
+        priority: Priority,
+        occupancy: u64,
+        kind: fault::FaultKind,
+        requeue: &mut Vec<JobId>,
+    ) {
+        let a = self.pool.assign(inst, arrival, occupancy, 0, priority.is_high());
+        self.trace.record(SchedEvent::Faulted {
+            job: id,
+            instance: inst,
+            kind: kind.label(),
+            at: a.end,
+        });
+        self.fault_counts[kind.index()] += 1;
+        if kind.retryable() && self.jobs[id].attempts < self.retry_limit {
+            self.jobs[id].attempts += 1;
+            let attempt = self.jobs[id].attempts;
+            let at = a.end.saturating_add(fault::backoff_cycles(attempt));
+            self.jobs[id].not_before = at;
+            self.retries += 1;
+            self.trace.record(SchedEvent::Retried { job: id, attempt, at });
+            requeue.push(id);
+        } else {
+            self.fault_failures += 1;
+            let attempts = self.jobs[id].attempts + 1;
+            self.reject(id, format!("{} fault after {attempts} attempt(s)", kind.label()));
+        }
     }
 
     /// Feed one settled job's measured device cycles back into the
@@ -1729,6 +1957,58 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Dispatch until the pool's earliest-free cycle reaches `cycle` or
+    /// the queue runs dry — how the fleet router advances a board to its
+    /// failure point: every dispatch whose slot freed before the failure
+    /// completes (jobs are never killed mid-run), the queued remainder is
+    /// left for [`Scheduler::evacuate`].
+    pub fn step_until(&mut self, cycle: u64) -> Result<()> {
+        while !self.queue.is_empty() && self.pool.earliest_free() < cycle {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Pull every queued job off this board (a board failure): named jobs
+    /// come back as `(handle, descriptor)` pairs for the router to
+    /// resubmit elsewhere — still `Queued` until the router settles each
+    /// via [`Scheduler::mark_migrated`] / [`Scheduler::fail_evacuated`].
+    /// Kernel jobs carry board-local dataflow and payloads, so they
+    /// cannot move: they fail in place (cascading to their consumers).
+    pub fn evacuate(&mut self) -> Vec<(JobHandle, JobDesc)> {
+        let ids = std::mem::take(&mut self.queue);
+        let mut out = Vec::new();
+        for id in ids {
+            // A cascade from an earlier kernel-job failure may have
+            // already settled this entry.
+            if !matches!(self.jobs[id].state, JobState::Queued) {
+                continue;
+            }
+            match &self.jobs[id].spec {
+                JobSpec::Named(desc) => out.push((JobHandle(id), *desc)),
+                _ => self.reject(id, "board failed before dispatch".to_string()),
+            }
+        }
+        out
+    }
+
+    /// Settle an evacuated job as migrated: the router resubmitted it on
+    /// a surviving board and its fleet handle now points there.
+    pub fn mark_migrated(&mut self, h: JobHandle) {
+        debug_assert!(
+            matches!(self.jobs[h.0].state, JobState::Queued),
+            "only evacuated (still-queued) jobs migrate"
+        );
+        self.jobs[h.0].state = JobState::Migrated;
+        self.migrated += 1;
+    }
+
+    /// Fail an evacuated job the router could not re-route (no healthy
+    /// board left).
+    pub fn fail_evacuated(&mut self, h: JobHandle, reason: String) {
+        self.reject(h.0, reason);
+    }
+
     /// Drive the scheduler until `h` settles (the `hero_memcpy_wait`
     /// analogue). Note a `Split` parent settles at submission; wait on its
     /// children to wait for the decomposed work. A foreign or stale handle
@@ -1771,6 +2051,8 @@ impl Scheduler {
                 }
                 JobState::Rejected { .. } => rejected += 1,
                 JobState::Split { .. } => split += 1,
+                // Counted via self.migrated; the job completes elsewhere.
+                JobState::Migrated => {}
                 JobState::Queued => {}
             }
         }
@@ -1843,6 +2125,13 @@ impl Scheduler {
             predict_samples: self.learn.as_ref().map_or(0, |l| l.samples()),
             predict_err_static_pct: self.learn.as_ref().map_or(0, |l| l.mean_static_err_pct()),
             predict_err_learned_pct: self.learn.as_ref().map_or(0, |l| l.mean_refined_err_pct()),
+            resilience: self.resilience_enabled(),
+            faults_transient: self.fault_counts[fault::FaultKind::Transient.index()],
+            faults_timeout: self.fault_counts[fault::FaultKind::Timeout.index()],
+            faults_deadline: self.fault_counts[fault::FaultKind::DeadlineExceeded.index()],
+            retries: self.retries,
+            fault_failures: self.fault_failures,
+            migrated: self.migrated,
             digest,
             classes,
             instances,
@@ -2907,5 +3196,153 @@ mod tests {
         assert_eq!(r.tune_searches, 2, "{r}");
         assert_eq!(r.tune_hits, 2);
         assert!(r.cache_misses >= 2);
+    }
+
+    #[test]
+    fn transient_faults_retry_and_preserve_numerics() {
+        let plan = crate::fault::parse("seed=3,transient=30").unwrap();
+        // Premises, checked against the same pure draw the scheduler uses:
+        // at least one first attempt faults, and every job clears within
+        // the retry budget below (so nothing fails permanently).
+        assert!((0..12u64).any(|j| plan.draw(j, 0).is_some()), "seed must fault someone");
+        for j in 0..12u64 {
+            assert!((0..=8).any(|a| plan.draw(j, a).is_none()), "job {j} must clear");
+        }
+        let run = |faulted: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Fifo).with_retry(8);
+            if faulted {
+                s = s.with_faults(plan.clone());
+            }
+            for seed in 0..12 {
+                s.submit(job("gemm", if seed % 2 == 0 { 12 } else { 24 }, seed));
+            }
+            s.drain().unwrap();
+            s
+        };
+        let clean = run(false);
+        let injected = run(true);
+        let (rc, rf) = (clean.report(), injected.report());
+        assert_eq!((rc.completed, rf.completed), (12, 12));
+        assert_eq!(rf.fault_failures, 0, "{rf}");
+        assert!(rf.faults_transient > 0, "{rf}");
+        assert_eq!(rf.retries, rf.faults_transient, "every fault must be retried");
+        assert!(rf.resilience && !rc.resilience);
+        // Faulted attempts discard their results before digesting: a stream
+        // whose faults are all retried is numerically untouched.
+        assert_eq!(rc.digest, rf.digest, "retried faults must not touch numerics");
+        assert!(injected.trace.events.iter().any(|e| matches!(e, SchedEvent::Faulted { .. })));
+        assert!(injected.trace.events.iter().any(|e| matches!(e, SchedEvent::Retried { .. })));
+    }
+
+    #[test]
+    fn same_plan_same_seed_is_deterministic() {
+        let run = || {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Fifo)
+                .with_faults(crate::fault::parse("seed=3,transient=30").unwrap())
+                .with_retry(8);
+            for seed in 0..10 {
+                s.submit(job("gemm", 12, seed));
+            }
+            s.drain().unwrap();
+            s
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.trace.events, b.trace.events, "fault schedule must be reproducible");
+        assert_eq!(a.report().digest, b.report().digest);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_permanently() {
+        // transient=100 faults every attempt: 1 initial + 2 retries, then
+        // the job fails for good.
+        let plan = crate::fault::parse("seed=1,transient=100").unwrap();
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_faults(plan).with_retry(2);
+        let h = s.submit(job("gemm", 12, 0));
+        s.drain().unwrap();
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected permanent fault, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("transient fault after 3 attempt(s)"), "{reason}");
+        let r = s.report();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.faults_transient, 3, "{r}");
+        assert_eq!(r.retries, 2);
+        assert_eq!(r.fault_failures, 1);
+    }
+
+    #[test]
+    fn permanent_fault_cascades_to_dataflow_consumers() {
+        let plan = crate::fault::parse("seed=1,transient=100").unwrap();
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_faults(plan).with_retry(1);
+        let a = s.submit_kernel(saxpy_job(32, 1));
+        let b = s.submit_kernel(KernelJob::from_srcs(
+            saxpy(32),
+            vec![
+                PayloadSrc::Output { producer: a, index: 1, elems: 32 },
+                PayloadSrc::Data(vec![0.0; 32]),
+            ],
+            vec![1.0],
+        ));
+        s.drain().unwrap();
+        let Some(JobState::Rejected { reason }) = s.state(a) else {
+            panic!("expected permanent fault, got {:?}", s.state(a));
+        };
+        assert!(reason.contains("transient fault after 2 attempt(s)"), "{reason}");
+        let Some(JobState::Rejected { reason }) = s.state(b) else {
+            panic!("expected cascaded rejection, got {:?}", s.state(b));
+        };
+        assert!(reason.contains("producer job"), "{reason}");
+        assert_eq!(s.pending(), 0, "cascaded consumers must leave the queue");
+    }
+
+    #[test]
+    fn watchdog_turns_budget_exhaustion_into_deadline_fault() {
+        // Without the watchdog an exhausted simulation budget stays a plain
+        // execution failure (the pre-fault contract)...
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo);
+        let mut p = saxpy_job(32, 1);
+        p.max_cycles = 1;
+        let h = s.submit_kernel(p);
+        s.drain().unwrap();
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected rejection, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("execution failed"), "{reason}");
+        // ...with it armed, the same overrun is a detected deadline fault:
+        // non-retryable even with a retry budget.
+        let mut s = Scheduler::new(aurora(), 1, Policy::Fifo).with_watchdog(4).with_retry(3);
+        let mut p = saxpy_job(32, 1);
+        p.max_cycles = 1;
+        let h = s.submit_kernel(p);
+        s.drain().unwrap();
+        let Some(JobState::Rejected { reason }) = s.state(h) else {
+            panic!("expected deadline fault, got {:?}", s.state(h));
+        };
+        assert!(reason.contains("deadline fault after 1 attempt(s)"), "{reason}");
+        let r = s.report();
+        assert_eq!(r.faults_deadline, 1, "{r}");
+        assert_eq!(r.retries, 0, "deadline faults are never retried");
+        assert_eq!(r.fault_failures, 1);
+    }
+
+    #[test]
+    fn resilience_off_is_bit_identical_to_default() {
+        let run = |armed: bool| {
+            let mut s = Scheduler::new(aurora(), 2, Policy::Fifo);
+            if armed {
+                // An empty plan and a retry budget arm nothing: no draws,
+                // no watchdog, so every event must match the default run.
+                s = s.with_faults(fault::FaultPlan::default()).with_retry(5);
+            }
+            for seed in 0..8 {
+                s.submit(job("gemm", 12, seed));
+            }
+            s.drain().unwrap();
+            s
+        };
+        let (plain, armed) = (run(false), run(true));
+        assert_eq!(plain.trace.events, armed.trace.events);
+        assert_eq!(plain.report().digest, armed.report().digest);
+        assert!(!armed.report().resilience || armed.report().faults_transient == 0);
     }
 }

@@ -129,6 +129,25 @@ pub struct ServeReport {
     /// Mean abs error of the predictions jobs actually dispatched with
     /// (EWMA-refined where measurements existed) — the "after" figure.
     pub predict_err_learned_pct: u64,
+    /// Whether fault injection or the watchdog was armed
+    /// ([`crate::sched::Scheduler::with_faults`] /
+    /// [`crate::sched::Scheduler::with_watchdog`]).
+    pub resilience: bool,
+    /// Injected transient kernel faults detected (per attempt).
+    pub faults_transient: u64,
+    /// Injected DMA/NoC timeout faults detected (per attempt).
+    pub faults_timeout: u64,
+    /// Watchdog deadline overruns (measured or budget-exhausted; never
+    /// injected, never retried — deterministic overruns repeat).
+    pub faults_deadline: u64,
+    /// Retry attempts scheduled after retryable faults.
+    pub retries: u64,
+    /// Jobs rejected because a fault exhausted the retry budget (or was
+    /// non-retryable).
+    pub fault_failures: u64,
+    /// Jobs evacuated off this board by the fleet router after a board
+    /// failure (they complete elsewhere; 0 outside a fleet).
+    pub migrated: u64,
     /// Order-stable digest over every completed job's output arrays:
     /// bit-identical results ⇔ identical digest, regardless of policy,
     /// placement, pool size, batching, caching or board bandwidth
@@ -217,6 +236,23 @@ impl fmt::Display for ServeReport {
                 "autotune      : {} search(es), {} memo hit(s), {} rerank(s)",
                 self.tune_searches, self.tune_hits, self.tune_reranks
             )?;
+        }
+        // Resilience lines render only when faults/watchdog are armed, so
+        // default serve output stays byte-identical to the fault-free report.
+        if self.resilience {
+            writeln!(
+                f,
+                "resilience    : {} transient, {} timeout, {} deadline fault(s); \
+                 {} retry(ies), {} failure(s)",
+                self.faults_transient,
+                self.faults_timeout,
+                self.faults_deadline,
+                self.retries,
+                self.fault_failures
+            )?;
+        }
+        if self.migrated > 0 {
+            writeln!(f, "migrated      : {} job(s) evacuated to surviving boards", self.migrated)?;
         }
         if self.learning && self.predict_samples > 0 {
             writeln!(
@@ -317,6 +353,13 @@ mod tests {
             predict_samples: 0,
             predict_err_static_pct: 0,
             predict_err_learned_pct: 0,
+            resilience: false,
+            faults_transient: 0,
+            faults_timeout: 0,
+            faults_deadline: 0,
+            retries: 0,
+            fault_failures: 0,
+            migrated: 0,
             digest: 0xdead_beef,
             classes: vec![
                 ClassReport {
@@ -426,6 +469,34 @@ mod tests {
         r.tune_reranks = 1;
         let s = r.to_string();
         assert!(s.contains("autotune      : 3 search(es), 17 memo hit(s), 1 rerank(s)"), "{s}");
+    }
+
+    #[test]
+    fn resilience_lines_render_only_when_enabled() {
+        let mut r = report();
+        let s = r.to_string();
+        assert!(!s.contains("resilience"), "default report must be unchanged: {s}");
+        assert!(!s.contains("migrated"), "default report must be unchanged: {s}");
+        r.resilience = true;
+        r.faults_transient = 5;
+        r.faults_timeout = 1;
+        r.faults_deadline = 2;
+        r.retries = 6;
+        r.fault_failures = 2;
+        let s = r.to_string();
+        assert!(
+            s.contains("resilience    : 5 transient, 1 timeout, 2 deadline fault(s)"),
+            "{s}"
+        );
+        assert!(s.contains("6 retry(ies), 2 failure(s)"), "{s}");
+        assert!(!s.contains("migrated"), "{s}");
+        // Migration surfaces even without local faults armed (the board the
+        // jobs left may itself have been fault-free).
+        let mut r = report();
+        r.migrated = 3;
+        let s = r.to_string();
+        assert!(s.contains("migrated      : 3 job(s) evacuated"), "{s}");
+        assert!(!s.contains("resilience"), "{s}");
     }
 
     #[test]

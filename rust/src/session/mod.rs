@@ -690,6 +690,7 @@ impl Session {
             JobState::Done(_) => {}
             JobState::Rejected { reason } => bail!("launch rejected by the scheduler: {reason}"),
             JobState::Split { .. } => bail!("kernel launches never split"),
+            JobState::Migrated => unreachable!("only the fleet router migrates jobs"),
             JobState::Queued => unreachable!("wait settles the job"),
         }
         // Move the payload out rather than cloning it, so the scheduler

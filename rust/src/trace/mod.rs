@@ -258,6 +258,24 @@ pub enum SchedEvent {
         predicted: u64,
         default_predicted: u64,
     },
+    /// The job's offload faulted on its instance at cycle `at` (the end of
+    /// the occupancy window the attempt still consumed): `kind` is the
+    /// [`crate::fault::FaultKind::label`] — injected `transient`/`timeout`
+    /// faults or a detected watchdog `deadline` overrun.
+    Faulted { job: usize, instance: usize, kind: &'static str, at: u64 },
+    /// A faulted job re-entered the queue for retry `attempt` (1-based),
+    /// eligible for dispatch no earlier than cycle `at` (exponential
+    /// backoff — see [`crate::fault::backoff_cycles`]).
+    Retried { job: usize, attempt: u32, at: u64 },
+    /// A fleet board went unhealthy at cycle `at` ([`crate::fault::BoardFault`]):
+    /// its queued jobs are evacuated to surviving boards.
+    BoardDown { board: usize, at: u64 },
+    /// A failed fleet board recovered at cycle `at` and rejoined routing.
+    BoardUp { board: usize, at: u64 },
+    /// A queued job was evacuated off unhealthy board `from` and
+    /// resubmitted on board `to` at cycle `at` (recorded on the source
+    /// board's trace; `job` is the source board's job id).
+    Migrated { job: usize, from: usize, to: usize, at: u64 },
 }
 
 impl SchedEvent {
@@ -271,6 +289,11 @@ impl SchedEvent {
             SchedEvent::Completed { end, .. } => Some(*end),
             SchedEvent::DependencyReady { at, .. } => Some(*at),
             SchedEvent::Preempted { at, .. } => Some(*at),
+            SchedEvent::Faulted { at, .. } => Some(*at),
+            SchedEvent::Retried { at, .. } => Some(*at),
+            SchedEvent::BoardDown { at, .. } => Some(*at),
+            SchedEvent::BoardUp { at, .. } => Some(*at),
+            SchedEvent::Migrated { at, .. } => Some(*at),
             _ => None,
         }
     }
@@ -323,6 +346,21 @@ impl SchedEvent {
                     "tune      job {job} -> {variant} ({candidates} candidate(s), \
                      predicted {predicted} cy vs default {default_predicted})"
                 )
+            }
+            SchedEvent::Faulted { job, instance, kind, at } => {
+                format!("fault     job {job} on instance {instance} at cycle {at} ({kind})")
+            }
+            SchedEvent::Retried { job, attempt, at } => {
+                format!("retry     job {job} (attempt {attempt}, not before cycle {at})")
+            }
+            SchedEvent::BoardDown { board, at } => {
+                format!("down      board {board} unhealthy at cycle {at}")
+            }
+            SchedEvent::BoardUp { board, at } => {
+                format!("up        board {board} recovered at cycle {at}")
+            }
+            SchedEvent::Migrated { job, from, to, at } => {
+                format!("migrate   job {job} board {from} -> board {to} at cycle {at}")
             }
         }
     }

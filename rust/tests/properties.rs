@@ -1077,3 +1077,174 @@ fn prop_fleet_of_one_is_bit_identical_to_plain_scheduler() {
         },
     );
 }
+
+#[test]
+fn prop_sched_faults_off_is_bit_identical() {
+    // The resilience machinery must be invisible until armed: an empty
+    // fault plan, a retry budget with nothing to retry, and a zero-depth
+    // retry-after queue reproduce the default *full event sequence* — not
+    // just the digest — across pool sizes, placement engines and fleet
+    // shapes.
+    use herov2::fault::FaultPlan;
+    use herov2::fleet::Router;
+    use herov2::sched::{Placement, Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(4, 7), rng.range(1, 1 << 20)),
+        |&(n, seed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            for placement in [Placement::EarliestFree, Placement::Pressure] {
+                for pool in [1usize, 2, 4] {
+                    let mk = || {
+                        Scheduler::new(aurora(), pool, Policy::Sjf)
+                            .with_placement(placement)
+                            .with_verify(false)
+                    };
+                    let run = |mut s: Scheduler| -> Result<Scheduler, String> {
+                        s.submit_all(&jobs);
+                        s.drain().map_err(|e| e.to_string())?;
+                        Ok(s)
+                    };
+                    let base = run(mk())?;
+                    let armed = run(mk().with_faults(FaultPlan::default()).with_retry(3))?;
+                    if base.trace.events != armed.trace.events {
+                        return Err(format!(
+                            "pool={pool} {placement:?}: an empty fault plan changed events"
+                        ));
+                    }
+                    if base.report().digest != armed.report().digest {
+                        return Err(format!("pool={pool} {placement:?}: digest diverged"));
+                    }
+                }
+                // Fleet shapes: a resilience-armed router with no board
+                // kills and a zero-depth retry-after queue must match the
+                // plain router board-for-board.
+                for boards in [1usize, 2] {
+                    let mk_fleet = |armed: bool| -> Result<Router, String> {
+                        let mk_board = || {
+                            Scheduler::new(aurora(), 1, Policy::Sjf)
+                                .with_placement(placement)
+                                .with_verify(false)
+                        };
+                        let mut r = Router::new((0..boards).map(|_| mk_board()).collect());
+                        if armed {
+                            r = r.with_faults(&FaultPlan::default()).with_queue(0);
+                        }
+                        for j in &jobs {
+                            r.submit(*j);
+                        }
+                        r.drain().map_err(|e| e.to_string())?;
+                        Ok(r)
+                    };
+                    let plain = mk_fleet(false)?;
+                    let armed = mk_fleet(true)?;
+                    for b in 0..boards {
+                        if plain.boards()[b].trace.events != armed.boards()[b].trace.events {
+                            return Err(format!(
+                                "{placement:?} fleet={boards}: board {b} events diverged"
+                            ));
+                        }
+                    }
+                    if plain.report().digest != armed.report().digest {
+                        return Err(format!("{placement:?} fleet={boards}: digest diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fault_retry_is_deterministic() {
+    // Same plan, same stream ⇒ same fault schedule: the full event
+    // sequence (faults, retries and all) and the digest are reproducible
+    // run-to-run — the whole point of a seeded, counter-based fault model.
+    use herov2::fault;
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(5, 8), rng.range(1, 1 << 20), rng.range(1, 1 << 16)),
+        |&(n, seed, fseed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let plan = fault::parse(&format!("seed={fseed},transient=25,timeout=10"))?;
+            let run = || -> Result<Scheduler, String> {
+                let mut s = Scheduler::new(aurora(), 2, Policy::Sjf)
+                    .with_verify(false)
+                    .with_faults(plan.clone())
+                    .with_retry(10);
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok(s)
+            };
+            let (a, b) = (run()?, run()?);
+            if a.trace.events != b.trace.events {
+                return Err("fault schedule not reproducible".into());
+            }
+            let (ra, rb) = (a.report(), b.report());
+            if ra.digest != rb.digest || ra.retries != rb.retries {
+                return Err(format!(
+                    "report diverged: {:#x}/{} vs {:#x}/{}",
+                    ra.digest, ra.retries, rb.digest, rb.retries
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_retried_faults_never_touch_numerics() {
+    // A stream whose faults are all retried successfully must be
+    // bit-identical to the fault-free run: a faulted attempt discards its
+    // result before the digest, feed store, SVM write-back or learning
+    // ever see it.
+    use herov2::fault;
+    use herov2::sched::{Policy, Scheduler};
+    use herov2::workloads::synth;
+    check(
+        2,
+        |rng| (rng.usize(5, 8), rng.range(1, 1 << 20), rng.range(1, 1 << 16)),
+        |&(n, seed, fseed)| {
+            let jobs = synth::tiny_jobs(n, seed);
+            let plan = fault::parse(&format!("seed={fseed},transient=30"))?;
+            // Premise: under the retry budget below every job must clear —
+            // the draw is a pure function, so check it up front.
+            for j in 0..jobs.len() as u64 {
+                if !(0..=12).any(|a| plan.draw(j, a).is_none()) {
+                    return Err(format!("premise: job {j} never clears under seed {fseed}"));
+                }
+            }
+            let run = |plan: Option<fault::FaultPlan>| -> Result<Scheduler, String> {
+                let mut s =
+                    Scheduler::new(aurora(), 2, Policy::Sjf).with_verify(false).with_retry(12);
+                if let Some(p) = plan {
+                    s = s.with_faults(p);
+                }
+                s.submit_all(&jobs);
+                s.drain().map_err(|e| e.to_string())?;
+                Ok(s)
+            };
+            let clean = run(None)?.report();
+            let faulted = run(Some(plan))?.report();
+            if faulted.fault_failures != 0 {
+                return Err(format!("{} permanent failure(s)", faulted.fault_failures));
+            }
+            if (clean.completed, faulted.completed) != (jobs.len(), jobs.len()) {
+                return Err(format!(
+                    "completed {} vs {} of {}",
+                    clean.completed, faulted.completed, jobs.len()
+                ));
+            }
+            if clean.digest != faulted.digest {
+                return Err(format!(
+                    "faults touched numerics: {:#x} vs {:#x}",
+                    clean.digest, faulted.digest
+                ));
+            }
+            Ok(())
+        },
+    );
+}
